@@ -1,0 +1,62 @@
+//! The unlearning service under concurrent load: a burst of
+//! deletion/addition requests; the coordinator's group-commit batcher
+//! coalesces them into shared DeltaGrad passes.
+//!
+//! Run: `cargo run --release --example online_service`
+
+use std::time::Duration;
+
+use deltagrad::config::HyperParams;
+use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
+use deltagrad::data::synth;
+use deltagrad::deltagrad::online::Request;
+
+fn main() -> anyhow::Result<()> {
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 60;
+    hp.j0 = 8;
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        model: "small".into(),
+        seed: 123,
+        n_train: Some(1024),
+        n_test: Some(256),
+        hp,
+        policy: BatchPolicy { max_group: 8, max_wait: Duration::from_millis(50) },
+    })?;
+    let snap = svc.snapshot()?;
+    println!(
+        "service up: v{} n_train={} test acc {:.4}",
+        snap.version, snap.n_train, snap.test_accuracy
+    );
+
+    // burst of 12 deletions + 4 additions from the client side
+    println!("\n-- burst: 12 deletes + 4 adds (async) --");
+    let mut rxs = Vec::new();
+    for i in 0..12 {
+        rxs.push(svc.update_async(Request::Delete(i * 13))?);
+    }
+    // fabricate additions from the generator's spec
+    let eng = deltagrad::runtime::Engine::open_default()?;
+    let spec = eng.spec("small")?.clone();
+    let adds = synth::addition_rows(&spec, 99, 4);
+    for i in 0..4 {
+        rxs.push(svc.update_async(Request::Add(adds.row(i).to_vec(), adds.y[i]))?);
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let rep = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "  req {i:2}: committed v{} in group of {} (pass {:.2}s)",
+            rep.version, rep.group_size, rep.pass_seconds
+        );
+    }
+
+    let snap = svc.snapshot()?;
+    println!(
+        "\nfinal: v{} n_train={} test acc {:.4}",
+        snap.version, snap.n_train, snap.test_accuracy
+    );
+    println!("metrics: {}", svc.metrics()?.render());
+    svc.shutdown()?;
+    println!("online_service OK");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+"""Dataset/model configurations shared by aot.py and the Rust side.
+
+Each entry becomes one family of fixed-shape AOT artifacts. Synthetic
+stand-ins for the paper's datasets (see DESIGN.md §3 for the
+substitution rationale); n_train/n_test here are *defaults* — the Rust
+data generator owns the actual sizes, but chunk shapes are fixed here.
+
+``chunk`` is the row count per grad executable call (last chunk padded,
+masked); ``chunk_small`` serves the removed-set / per-request gradient
+terms, keeping the r-term cost ~chunk_small/n of a full pass.
+"""
+
+CONFIGS = {
+    # paper: MNIST 60k x 784, 10-class, lam=0.005, lr 0.1, B=10200
+    # block_rows: §Perf-tuned row-tile (on XLA-CPU the optimum is one
+    # grid step per chunk — no scratchpad bound; on TPU cap by VMEM)
+    "mnist": dict(model="lr", d=784, k=10, chunk=2048, chunk_small=256,
+                  lam=5e-3, m=2, hidden=0, n_train=8192, n_test=2048,
+                  block_rows=2048),
+    # paper: covtype 581k x 54, 7-class
+    "covtype": dict(model="lr", d=54, k=7, chunk=8192, chunk_small=256,
+                    lam=5e-3, m=2, hidden=0, n_train=20480, n_test=4096,
+                    block_rows=8192),
+    # paper: HIGGS 11M x 21, binary, near-chance accuracy
+    "higgs": dict(model="lr", d=21, k=2, chunk=8192, chunk_small=256,
+                  lam=5e-3, m=2, hidden=0, n_train=32768, n_test=8192,
+                  block_rows=8192),
+    # paper: RCV1 20,242 x 47,236 sparse, binary; d >> others preserved
+    "rcv1": dict(model="lr", d=2000, k=2, chunk=1024, chunk_small=256,
+                 lam=5e-3, m=2, hidden=0, n_train=8192, n_test=2048,
+                 block_rows=1024),
+    # paper: 2-layer 300-hidden ReLU MLP on MNIST, lam=0.001
+    "mnistnn": dict(model="mlp", d=784, k=10, hidden=64, chunk=1024,
+                    chunk_small=256, lam=1e-3, m=2, n_train=8192,
+                    n_test=2048),
+    # tiny configs for tests and CI
+    "small": dict(model="lr", d=20, k=3, chunk=256, chunk_small=128,
+                  lam=5e-3, m=2, hidden=0, n_train=1024, n_test=256,
+                  block_rows=256),
+    "smallnn": dict(model="mlp", d=20, k=3, hidden=16, chunk=256,
+                    chunk_small=128, lam=1e-3, m=2, n_train=1024,
+                    n_test=256),
+}
+
+ENTRIES = ("grad", "grad_small", "hvp", "lbfgs")

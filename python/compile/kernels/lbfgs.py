@@ -1,0 +1,160 @@
+"""L1 Pallas kernels: compact-form L-BFGS quasi-Hessian--vector product.
+
+DeltaGrad's per-iteration approximation B_jm (w^I_t - w_t) (paper
+Algorithm 1, line 13 / Algorithm 2) costs O(m^2 p) in the history
+contractions plus an O(m^3) solve. For p up to a few hundred thousand the
+contractions dominate, so they are expressed as two Pallas kernels tiled
+over the parameter dimension:
+
+  1. ``_dots_kernel``  — accumulates S S^T, S Y^T, S v, Y v over p-tiles
+                         (S, Y are the [m, p] histories).
+  2. ``_combine_kernel`` — fused B v = sigma*v - sigma*S^T c1 - Y^T c2
+                         over p-tiles, given the 2m solve coefficients.
+
+The tiny 2m x 2m solve sits between the two in plain jnp — exactly the
+"keep small-matrix algebra off the accelerator" fix the paper's
+Discussion section asks for (on the Rust hot path the whole product is
+done natively; this artifact exists for the abl-lbfgs-host ablation and
+for cross-validation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_P = 4096
+
+
+def solve_small(mat, rhs):
+    """Solve the (static, tiny) 2m x 2m system with unrolled Gauss–Jordan
+    elimination and row-max partial pivoting in pure jnp.
+
+    ``jnp.linalg.solve`` lowers to a LAPACK custom-call
+    (lapack_sgetrf_ffi) that the xla crate's bundled XLA 0.5.1 cannot
+    execute ("Unknown custom-call API version ... TYPED_FFI"), so the AOT
+    path needs this plain-HLO solver. Unrolled over the static dimension
+    (2m <= 16), so the lowered module is a fixed dag of selects/gathers.
+    """
+    n = mat.shape[0]
+    a = jnp.concatenate([mat, rhs[:, None]], axis=1)  # [n, n+1] augmented
+    for col in range(n):
+        # partial pivot: pick the row (>= col) with max |a[row, col]|
+        piv_col = jnp.abs(a[:, col])
+        masked = jnp.where(jnp.arange(n) >= col, piv_col, -jnp.inf)
+        piv = jnp.argmax(masked)
+        # swap rows col <-> piv
+        idx = jnp.arange(n)
+        idx = idx.at[col].set(piv).at[piv].set(col)
+        a = a[idx]
+        # eliminate every other row
+        pivrow = a[col] / a[col, col]
+        factors = a[:, col]
+        a = a - jnp.outer(factors, pivrow)
+        a = a.at[col].set(pivrow)
+    return a[:, n]
+
+
+def _dots_kernel(s_ref, y_ref, v_ref, ss_ref, sy_ref, sv_ref, yv_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+        sy_ref[...] = jnp.zeros_like(sy_ref)
+        sv_ref[...] = jnp.zeros_like(sv_ref)
+        yv_ref[...] = jnp.zeros_like(yv_ref)
+
+    s = s_ref[...]   # [m, BP]
+    y = y_ref[...]   # [m, BP]
+    v = v_ref[...]   # [BP]
+    ss_ref[...] += jnp.dot(s, s.T, preferred_element_type=jnp.float32)
+    sy_ref[...] += jnp.dot(s, y.T, preferred_element_type=jnp.float32)
+    sv_ref[...] += jnp.dot(s, v, preferred_element_type=jnp.float32)
+    yv_ref[...] += jnp.dot(y, v, preferred_element_type=jnp.float32)
+
+
+def _combine_kernel(s_ref, y_ref, v_ref, c1_ref, c2_ref, sig_ref, o_ref):
+    s = s_ref[...]
+    y = y_ref[...]
+    v = v_ref[...]
+    sig = sig_ref[0]
+    o_ref[...] = sig * v - sig * jnp.dot(s.T, c1_ref[...]) - jnp.dot(y.T, c2_ref[...])
+
+
+def _pad_p(arr, block_p, axis):
+    p = arr.shape[axis]
+    pp = ((p + block_p - 1) // block_p) * block_p
+    if pp == p:
+        return arr, p
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, pp - p)
+    return jnp.pad(arr, pad), p
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def lbfgs_hvp(dws, dgs, v, *, block_p=DEFAULT_BLOCK_P):
+    """Compact-form B v (same contract as ``ref.lbfgs_hvp_ref``).
+
+    dws, dgs: [m, p] histories, oldest first. v: [p]. Returns [p].
+    """
+    m, p = dws.shape
+    s_pad, _ = _pad_p(dws, block_p, 1)
+    y_pad, _ = _pad_p(dgs, block_p, 1)
+    v_pad, _ = _pad_p(v, block_p, 0)
+    pp = s_pad.shape[1]
+    grid = (pp // block_p,)
+
+    ss, sy, sv, yv = pl.pallas_call(
+        _dots_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_p), lambda i: (0, i)),
+            pl.BlockSpec((m, block_p), lambda i: (0, i)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=True,
+    )(s_pad, y_pad, v_pad)
+
+    # 2m x 2m solve in plain jnp (tiny).
+    sigma = sy[m - 1, m - 1] / ss[m - 1, m - 1]
+    L = jnp.tril(sy, k=-1)
+    D = jnp.diag(jnp.diag(sy))
+    M = jnp.concatenate(
+        [jnp.concatenate([sigma * ss, L], axis=1),
+         jnp.concatenate([L.T, -D], axis=1)], axis=0)
+    q = jnp.concatenate([sigma * sv, yv])
+    coef = solve_small(M, q)
+    c1, c2 = coef[:m], coef[m:]
+
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_p), lambda i: (0, i)),
+            pl.BlockSpec((m, block_p), lambda i: (0, i)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=True,
+    )(s_pad, y_pad, v_pad, c1, c2, sigma[None])
+    return out[:p]

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: fused multinomial-logistic gradient over one chunk.
+
+This is DeltaGrad's compute hot-spot: at every *exact* iteration the full
+(or leave-r-out) gradient is a masked sum over the chunk of
+
+    x_i (softmax(x_i W) - y_i)
+
+plus cross-entropy loss and accuracy counters. The kernel fuses the
+forward matmul, the softmax, and the backward contraction X^T(p - y) in a
+single pass over row tiles so the [C, k] probability matrix never leaves
+VMEM (on TPU; on CPU-PJRT we lower with interpret=True and XLA fuses the
+same schedule).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's GPU
+implementation materializes logits in HBM between the PyTorch forward and
+backward; here BlockSpec expresses the HBM->VMEM row-tile schedule, W
+stays resident across the grid, and the gradient accumulates in the
+output block (same block for every grid step).
+
+Outputs are *raw* sums; the L2-regularization epilogue (needs the global
+mask count) is added by the L2 model wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size. 128 keeps the X tile (128 x da) around 1 MB for the
+# widest config (rcv1, da=2001) and is MXU-aligned on real hardware.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _kernel(x_ref, w_ref, y_ref, mask_ref, g_ref, stats_ref):
+    """One row-tile: logits -> softmax -> masked residual -> X^T resid.
+
+    stats_ref accumulates [loss_sum, correct, cnt] as a (3,) block.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    x = x_ref[...]                       # [BR, da]
+    w = w_ref[...]                       # [da, k]
+    y = y_ref[...]                       # [BR, k]
+    mask = mask_ref[...]                 # [BR]
+
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)   # [BR, k]
+    zmax = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - zmax
+    ez = jnp.exp(z)
+    sez = jnp.sum(ez, axis=-1, keepdims=True)
+    p = ez / sez                                                  # softmax
+    lsm = z - jnp.log(sez)                                        # log-softmax
+
+    resid = (p - y) * mask[:, None]                               # [BR, k]
+    # Backward contraction on the same tile: g += X^T resid.
+    g_ref[...] += jnp.dot(x.T, resid, preferred_element_type=jnp.float32)
+
+    ce = -jnp.sum(y * lsm, axis=-1)                               # [BR]
+    loss = jnp.sum(ce * mask)
+    pred = jnp.argmax(logits, axis=-1)
+    lab = jnp.argmax(y, axis=-1)
+    correct = jnp.sum(jnp.where(pred == lab, 1.0, 0.0) * mask)
+    cnt = jnp.sum(mask)
+    stats_ref[...] += jnp.stack([loss, correct, cnt])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def lr_grad_chunk_raw(w, x, y, mask, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """Raw fused kernel call: returns (g_raw [da,k], stats [3]).
+
+    ``stats = [loss_sum, correct, cnt]``; no regularization applied.
+    Chunk length must be a multiple of ``block_rows`` (the AOT configs
+    guarantee this; tests exercise ragged sizes through the model wrapper
+    which pads).
+    """
+    c, da = x.shape
+    k = y.shape[1]
+    assert c % block_rows == 0, (c, block_rows)
+    grid = (c // block_rows,)
+    g, stats = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, da), lambda i: (i, 0)),
+            pl.BlockSpec((da, k), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((da, k), lambda i: (0, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((da, k), jnp.float32),
+            jax.ShapeDtypeStruct((3,), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(x, w, y, mask)
+    return g, stats
+
+
+def lr_grad_chunk(w, x, y, mask, lam, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """Fused gradient with the L2 epilogue — same contract as
+    ``ref.lr_grad_chunk_ref``: returns (g_sum, loss_sum, correct)."""
+    g, stats = lr_grad_chunk_raw(w, x, y, mask, block_rows=block_rows)
+    loss, correct, cnt = stats[0], stats[1], stats[2]
+    g = g + cnt * lam * w
+    loss = loss + cnt * (lam / 2.0) * jnp.sum(w * w)
+    return g, loss, correct

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: row-tiled matmul used by the MLP forward/backward.
+
+The 2-layer MLP's cost is four GEMMs per chunk (x@W1, a1@W2, a1^T dz2,
+x^T dz1). Each is expressed through this kernel: the left operand is
+tiled along rows (HBM->VMEM streaming), the right operand stays resident
+across the grid — the same schedule the paper's GPU threadblocks used,
+re-expressed with BlockSpec (DESIGN.md §Hardware-Adaptation).
+
+Lowered with interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def matmul(a, b, *, block_rows=None):
+    """Tiled ``a @ b`` with rows of ``a`` streamed in blocks.
+
+    ``block_rows=None`` (default) uses one grid step over all rows — the
+    §Perf-tuned schedule on XLA-CPU, where grid iteration costs a
+    dynamic-update-slice loop and there is no scratchpad bound. On real
+    TPU hardware pass an explicit VMEM-sized tile instead.
+
+    Pads the row dimension up to a multiple of ``block_rows`` when needed
+    (zero rows produce zero outputs which are sliced away).
+    """
+    m, kdim = a.shape
+    if block_rows is None:
+        block_rows = m
+    k2, n = b.shape
+    assert kdim == k2, (a.shape, b.shape)
+    mp = ((m + block_rows - 1) // block_rows) * block_rows
+    if mp != m:
+        a = jnp.pad(a, ((0, mp - m), (0, 0)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, kdim), lambda i: (i, 0)),
+            pl.BlockSpec((kdim, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:m] if mp != m else out

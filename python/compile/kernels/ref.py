@@ -1,0 +1,150 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops only. ``python/tests`` asserts allclose
+between kernel and reference across shape/dtype sweeps (hypothesis), and
+the L2 model is free to call either implementation (``use_pallas`` flag)
+so the AOT artifacts can be produced from both paths and diffed.
+
+Conventions (shared with the Rust side):
+  * ``x``     -- [C, da] chunk of the design matrix, da = d + 1 (bias
+                 column of ones appended by the data generator).
+  * ``w``     -- [da, k] multinomial-logistic weights (bias = last row).
+  * ``y``     -- [C, k] one-hot labels (all-zero rows allowed when masked).
+  * ``mask``  -- [C] f32 {0,1}; masked-out rows contribute nothing.
+  * gradients are SUMS over the masked rows (not means) so the caller can
+    combine chunks / leave-r-out / minibatch terms exactly.
+  * the L2 term (lam/2)||w||^2 is part of every per-sample loss F_i, so a
+    masked sum over ``cnt`` rows contributes ``cnt*lam*w`` to the gradient
+    and ``cnt*(lam/2)*||w||^2`` to the loss.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def softmax_logits(logits):
+    """Row-wise softmax with the usual max-subtraction stabilization."""
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def log_softmax(logits):
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    return z - jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+
+
+def lr_grad_chunk_ref(w, x, y, mask, lam):
+    """Reference fused gradient/loss/accuracy for multinomial logistic
+    regression over one chunk.
+
+    Returns ``(g_sum [da,k], loss_sum [], correct [])`` where
+      g_sum   = sum_i mask_i * x_i (p_i - y_i)  +  cnt * lam * w
+      loss    = sum_i mask_i * CE_i             +  cnt * (lam/2)||w||^2
+      correct = sum_i mask_i * 1[argmax p_i == argmax y_i]
+    """
+    logits = x @ w                                   # [C, k]
+    p = softmax_logits(logits)
+    lsm = log_softmax(logits)
+    cnt = jnp.sum(mask)
+    resid = (p - y) * mask[:, None]                  # [C, k]
+    g = x.T @ resid + cnt * lam * w                  # [da, k]
+    ce = -jnp.sum(y * lsm, axis=-1)                  # [C]
+    loss = jnp.sum(ce * mask) + cnt * (lam / 2.0) * jnp.sum(w * w)
+    pred = jnp.argmax(logits, axis=-1)
+    lab = jnp.argmax(y, axis=-1)
+    correct = jnp.sum(jnp.where(pred == lab, 1.0, 0.0) * mask)
+    return g, loss, correct
+
+
+def matmul_ref(a, b):
+    """Reference for the tiled Pallas matmul kernel."""
+    return a @ b
+
+
+def mlp_forward_ref(w1, w2, x):
+    """2-layer ReLU MLP forward.  w1 [da,h], w2 [h+1,k]; the hidden layer
+    is re-augmented with a ones column so w2's last row is its bias."""
+    z1 = x @ w1                                      # [C, h]
+    a1 = jnp.maximum(z1, 0.0)
+    a1a = jnp.concatenate([a1, jnp.ones((x.shape[0], 1), x.dtype)], axis=1)
+    logits = a1a @ w2                                # [C, k]
+    return z1, a1a, logits
+
+
+def mlp_grad_chunk_ref(w1, w2, x, y, mask, lam):
+    """Reference fused gradient/loss/accuracy for the 2-layer MLP.
+
+    Same contract as :func:`lr_grad_chunk_ref` but returns
+    ``(g1 [da,h], g2 [h+1,k], loss, correct)``.
+    """
+    z1, a1a, logits = mlp_forward_ref(w1, w2, x)
+    p = softmax_logits(logits)
+    lsm = log_softmax(logits)
+    cnt = jnp.sum(mask)
+    dz2 = (p - y) * mask[:, None]                    # [C, k]
+    g2 = a1a.T @ dz2 + cnt * lam * w2                # [h+1, k]
+    da1 = dz2 @ w2[:-1, :].T                         # [C, h] (drop bias row)
+    dz1 = da1 * (z1 > 0.0).astype(x.dtype)
+    g1 = x.T @ dz1 + cnt * lam * w1                  # [da, h]
+    ce = -jnp.sum(y * lsm, axis=-1)
+    reg = (lam / 2.0) * (jnp.sum(w1 * w1) + jnp.sum(w2 * w2))
+    loss = jnp.sum(ce * mask) + cnt * reg
+    pred = jnp.argmax(logits, axis=-1)
+    lab = jnp.argmax(y, axis=-1)
+    correct = jnp.sum(jnp.where(pred == lab, 1.0, 0.0) * mask)
+    return g1, g2, loss, correct
+
+
+def lbfgs_hvp_ref(dws, dgs, v):
+    """Reference compact-form L-BFGS quasi-Hessian--vector product.
+
+    Implements B from Byrd, Nocedal & Schnabel (1994), eq. 3.5 / Thm 2.3
+    (the form Algorithm 2 of the paper computes via Cholesky):
+
+        sigma = (y_last . s_last) / (s_last . s_last)
+        B = sigma*I - [sigma*S  Y] M^{-1} [sigma*S^T; Y^T]
+        M = [[sigma*S^T S, L], [L^T, -D]]
+
+    where S = [s_0..s_{m-1}] (p x m), Y likewise, S^T Y = L + D + U with L
+    strictly lower and D diagonal.
+
+    Args: dws, dgs -- [m, p] history (oldest first); v -- [p].
+    Returns B v -- [p].
+    """
+    S = dws.T                                        # [p, m]
+    Y = dgs.T                                        # [p, m]
+    m = S.shape[1]
+    sl = S[:, -1]
+    yl = Y[:, -1]
+    sigma = jnp.dot(yl, sl) / jnp.dot(sl, sl)
+    SY = S.T @ Y                                     # [m, m]
+    L = jnp.tril(SY, k=-1)
+    D = jnp.diag(jnp.diag(SY))
+    upper = jnp.concatenate([sigma * (S.T @ S), L], axis=1)
+    lower = jnp.concatenate([L.T, -D], axis=1)
+    M = jnp.concatenate([upper, lower], axis=0)      # [2m, 2m]
+    q = jnp.concatenate([sigma * (S.T @ v), Y.T @ v])  # [2m]
+    coef = jnp.linalg.solve(M, q)                    # [2m]
+    return sigma * v - sigma * (S @ coef[:m]) - Y @ coef[m:]
+
+
+def bfgs_dense_ref(dws, dgs, p):
+    """Dense rank-2 BFGS recursion (paper eq. S11/S12), used only in tests
+    to cross-validate the compact form. O(p^2) -- small p only.
+
+        B_{k+1} = B_k - (B_k s s^T B_k)/(s^T B_k s) + (y y^T)/(y^T s)
+    with B_0 = sigma * I, sigma from the LAST pair (matching compact form).
+    """
+    sl = dws[-1]
+    yl = dgs[-1]
+    sigma = jnp.dot(yl, sl) / jnp.dot(sl, sl)
+    B = sigma * jnp.eye(p, dtype=dws.dtype)
+    for i in range(dws.shape[0]):
+        s = dws[i]
+        y = dgs[i]
+        Bs = B @ s
+        B = B - jnp.outer(Bs, Bs) / jnp.dot(s, Bs) + jnp.outer(y, y) / jnp.dot(y, s)
+    return B

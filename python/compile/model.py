@@ -1,0 +1,223 @@
+"""L2: JAX compute-graph entry points for the DeltaGrad artifacts.
+
+Each dataset configuration (``configs.py``) gets a family of fixed-shape
+entry points which ``aot.py`` lowers to HLO text for the Rust runtime:
+
+  grad        (w, x[C,da], y[C,k], mask[C]) -> (g[p], stats[4])
+  grad_small  same at the small chunk size (removed-set / online terms)
+  hvp         (w, v, x[Cs,da], mask)        -> hv[p]     (exact Hessian.v)
+  lbfgs       (dws[m,p], dgs[m,p], v[p])    -> bv[p]     (quasi-Hessian.v)
+
+``stats = [loss_sum, correct, cnt, gnorm2]``. All gradients are masked
+SUMS (not means) including the per-sample L2 term, i.e. the artifact
+returns  sum_{i in mask} grad F_i(w)  with  F_i = CE_i + (lam/2)||w||^2,
+so the Rust side can form full / leave-r-out / minibatch averages
+exactly by combining chunk sums.
+
+Parameters are a single flat f32 vector ``w[p]``:
+  * LR:  w = vec(W[da,k])           (row-major, bias row last)
+  * MLP: w = vec(W1[da,h]) ++ vec(W2[h+1,k])
+
+The hot-path entries (``grad*``) go through the Pallas kernels; ``hvp``
+differentiates the pure-jnp reference (jvp-of-grad) since it is off the
+hot path and must be AD-transparent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lr_grad, matmul, lbfgs as lbfgs_k, ref
+
+
+# ---------------------------------------------------------------------------
+# parameter (un)flattening
+
+
+def lr_unflatten(w, da, k):
+    return w.reshape(da, k)
+
+
+def mlp_unflatten(w, da, h, k):
+    n1 = da * h
+    w1 = w[:n1].reshape(da, h)
+    w2 = w[n1:].reshape(h + 1, k)
+    return w1, w2
+
+
+def lr_nparams(da, k):
+    return da * k
+
+
+def mlp_nparams(da, h, k):
+    return da * h + (h + 1) * k
+
+
+# ---------------------------------------------------------------------------
+# LR entry points
+
+
+def lr_grad_entry(w, x, y, mask, *, da, k, lam, use_pallas=True,
+                  block_rows=lr_grad.DEFAULT_BLOCK_ROWS):
+    """Masked-sum gradient + stats for multinomial logistic regression."""
+    W = lr_unflatten(w, da, k)
+    if use_pallas:
+        g, loss, correct = lr_grad.lr_grad_chunk(W, x, y, mask, lam,
+                                                 block_rows=block_rows)
+    else:
+        g, loss, correct = ref.lr_grad_chunk_ref(W, x, y, mask, lam)
+    cnt = jnp.sum(mask)
+    gf = g.reshape(-1)
+    stats = jnp.stack([loss, correct, cnt, jnp.dot(gf, gf)])
+    return gf, stats
+
+
+def lr_hvp_entry(w, v, x, mask, *, da, k, lam):
+    """Exact (integrated over the chunk) Hessian-vector product: jvp of the
+    reference gradient in direction v; the masked SUM.
+
+    Takes no labels: the softmax-CE Hessian is label-independent (y enters
+    the gradient linearly), so a y argument would be dead and XLA would
+    prune it from the compiled parameter list, breaking the Rust calling
+    convention."""
+    y = jnp.zeros((x.shape[0], k), x.dtype)
+
+    def grad_only(wf):
+        g, _, _ = ref.lr_grad_chunk_ref(lr_unflatten(wf, da, k), x, y, mask, lam)
+        return g.reshape(-1)
+
+    _, hv = jax.jvp(grad_only, (w,), (v,))
+    return hv
+
+
+# ---------------------------------------------------------------------------
+# MLP entry points
+
+
+def mlp_grad_entry(w, x, y, mask, *, da, h, k, lam, use_pallas=True):
+    """Masked-sum gradient + stats for the 2-layer ReLU MLP.
+
+    The four GEMMs run through the Pallas matmul kernel; softmax/ReLU glue
+    is plain jnp (fused by XLA around the kernel calls).
+    """
+    w1, w2 = mlp_unflatten(w, da, h, k)
+    if not use_pallas:
+        g1, g2, loss, correct = ref.mlp_grad_chunk_ref(w1, w2, x, y, mask, lam)
+    else:
+        mm = matmul.matmul
+        z1 = mm(x, w1)                                    # [C, h]
+        a1 = jnp.maximum(z1, 0.0)
+        ones = jnp.ones((x.shape[0], 1), x.dtype)
+        a1a = jnp.concatenate([a1, ones], axis=1)         # [C, h+1]
+        logits = mm(a1a, w2)                              # [C, k]
+        p = ref.softmax_logits(logits)
+        lsm = ref.log_softmax(logits)
+        cnt = jnp.sum(mask)
+        dz2 = (p - y) * mask[:, None]
+        g2 = mm(a1a.T, dz2) + cnt * lam * w2
+        da1 = mm(dz2, w2[:-1, :].T)
+        dz1 = da1 * (z1 > 0.0).astype(x.dtype)
+        g1 = mm(x.T, dz1) + cnt * lam * w1
+        ce = -jnp.sum(y * lsm, axis=-1)
+        reg = (lam / 2.0) * (jnp.sum(w1 * w1) + jnp.sum(w2 * w2))
+        loss = jnp.sum(ce * mask) + cnt * reg
+        pred = jnp.argmax(logits, axis=-1)
+        lab = jnp.argmax(y, axis=-1)
+        correct = jnp.sum(jnp.where(pred == lab, 1.0, 0.0) * mask)
+    cnt = jnp.sum(mask)
+    gf = jnp.concatenate([g1.reshape(-1), g2.reshape(-1)])
+    stats = jnp.stack([loss, correct, cnt, jnp.dot(gf, gf)])
+    return gf, stats
+
+
+def mlp_hvp_entry(w, v, x, mask, *, da, h, k, lam):
+    """Label-free for the same reason as lr_hvp_entry."""
+    y = jnp.zeros((x.shape[0], k), x.dtype)
+
+    def grad_only(wf):
+        w1, w2 = mlp_unflatten(wf, da, h, k)
+        g1, g2, _, _ = ref.mlp_grad_chunk_ref(w1, w2, x, y, mask, lam)
+        return jnp.concatenate([g1.reshape(-1), g2.reshape(-1)])
+
+    _, hv = jax.jvp(grad_only, (w,), (v,))
+    return hv
+
+
+# ---------------------------------------------------------------------------
+# shared entry points
+
+
+def lbfgs_entry(dws, dgs, v, *, use_pallas=True):
+    """Compact L-BFGS quasi-Hessian--vector product B v."""
+    if use_pallas:
+        return lbfgs_k.lbfgs_hvp(dws, dgs, v)
+    return ref.lbfgs_hvp_ref(dws, dgs, v)
+
+
+# ---------------------------------------------------------------------------
+# entry-point table used by aot.py
+
+
+def build_entries(cfg, use_pallas=True):
+    """Return {entry_name: (fn, arg_shapes)} for one config dict.
+
+    cfg keys: name, model ('lr'|'mlp'), d, k, chunk, chunk_small, lam, m,
+    hidden (mlp only).
+    """
+    da = cfg["d"] + 1
+    k = cfg["k"]
+    lam = cfg["lam"]
+    m = cfg["m"]
+    c = cfg["chunk"]
+    cs = cfg["chunk_small"]
+    f32 = jnp.float32
+
+    def shapes(c_):
+        return (
+            jax.ShapeDtypeStruct((c_, da), f32),    # x
+            jax.ShapeDtypeStruct((c_, k), f32),     # y
+            jax.ShapeDtypeStruct((c_,), f32),       # mask
+        )
+
+    def shapes_no_y(c_):
+        return (
+            jax.ShapeDtypeStruct((c_, da), f32),    # x
+            jax.ShapeDtypeStruct((c_,), f32),       # mask
+        )
+
+    block_rows = cfg.get("block_rows", lr_grad.DEFAULT_BLOCK_ROWS)
+    if cfg["model"] == "lr":
+        p = lr_nparams(da, k)
+
+        def grad_fn(w, x, y, mask):
+            # the small-chunk entry may be narrower than the tuned block
+            return lr_grad_entry(w, x, y, mask, da=da, k=k, lam=lam,
+                                 use_pallas=use_pallas,
+                                 block_rows=min(block_rows, x.shape[0]))
+
+        def hvp_fn(w, v, x, mask):
+            return lr_hvp_entry(w, v, x, mask, da=da, k=k, lam=lam)
+    else:
+        h = cfg["hidden"]
+        p = mlp_nparams(da, h, k)
+
+        def grad_fn(w, x, y, mask):
+            return mlp_grad_entry(w, x, y, mask, da=da, h=h, k=k, lam=lam,
+                                  use_pallas=use_pallas)
+
+        def hvp_fn(w, v, x, mask):
+            return mlp_hvp_entry(w, v, x, mask, da=da, h=h, k=k, lam=lam)
+
+    wspec = jax.ShapeDtypeStruct((p,), f32)
+    hist = jax.ShapeDtypeStruct((m, p), f32)
+
+    def lbfgs_fn(dws, dgs, v):
+        return lbfgs_entry(dws, dgs, v, use_pallas=use_pallas)
+
+    return {
+        "grad": (grad_fn, (wspec, *shapes(c))),
+        "grad_small": (grad_fn, (wspec, *shapes(cs))),
+        "hvp": (hvp_fn, (wspec, wspec, *shapes_no_y(cs))),
+        "lbfgs": (lbfgs_fn, (hist, hist, wspec)),
+    }, p

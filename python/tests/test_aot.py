@@ -1,0 +1,82 @@
+"""AOT pipeline tests: lowering determinism, manifest integrity, and the
+no-custom-call invariant the Rust runtime depends on."""
+
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS, ENTRIES
+from compile.model import build_entries
+
+
+class TestLowering:
+    def test_hlo_text_deterministic(self):
+        cfg = CONFIGS["small"]
+        entries, _ = build_entries(cfg)
+        fn, shapes = entries["grad"]
+        t1 = aot.to_hlo_text(jax.jit(fn).lower(*shapes))
+        t2 = aot.to_hlo_text(jax.jit(fn).lower(*shapes))
+        assert t1 == t2
+
+    @pytest.mark.parametrize("name", ["small", "smallnn"])
+    def test_no_custom_calls(self, name):
+        # custom-calls (LAPACK typed-FFI etc.) cannot execute on the
+        # xla-crate's bundled XLA 0.5.1 — every entry must lower to plain
+        # HLO ops (see kernels/lbfgs.py::solve_small)
+        cfg = CONFIGS[name]
+        entries, _ = build_entries(cfg)
+        for entry, (fn, shapes) in entries.items():
+            text = aot.to_hlo_text(jax.jit(fn).lower(*shapes))
+            assert "custom-call" not in text, f"{name}_{entry} has a custom-call"
+
+    def test_entry_names_match_contract(self):
+        assert set(ENTRIES) == {"grad", "grad_small", "hvp", "lbfgs"}
+        for name, cfg in CONFIGS.items():
+            entries, p = build_entries(cfg)
+            assert set(entries) == set(ENTRIES), name
+            assert p > 0
+
+    def test_param_counts_consistent_with_manifest_formula(self):
+        for name, cfg in CONFIGS.items():
+            _, p = build_entries(cfg)
+            da = cfg["d"] + 1
+            if cfg["model"] == "lr":
+                assert p == da * cfg["k"], name
+            else:
+                h = cfg["hidden"]
+                assert p == da * h + (h + 1) * cfg["k"], name
+
+
+class TestManifestOnDisk:
+    """Validates the artifacts directory if it exists (make artifacts)."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    def _manifest(self):
+        path = os.path.join(self.ART, "manifest.txt")
+        if not os.path.exists(path):
+            pytest.skip("run `make artifacts` first")
+        return open(path).read()
+
+    def test_manifest_covers_all_configs(self):
+        text = self._manifest()
+        for name in CONFIGS:
+            assert f"config {name} " in text, f"{name} missing from manifest"
+
+    def test_artifact_files_exist_and_nonempty(self):
+        self._manifest()
+        for name in CONFIGS:
+            for entry in ENTRIES:
+                path = os.path.join(self.ART, f"{name}_{entry}.hlo.txt")
+                assert os.path.exists(path), path
+                assert os.path.getsize(path) > 100, path
+
+    def test_no_custom_calls_on_disk(self):
+        self._manifest()
+        for name in CONFIGS:
+            for entry in ENTRIES:
+                path = os.path.join(self.ART, f"{name}_{entry}.hlo.txt")
+                text = open(path).read()
+                assert "custom-call" not in text, path

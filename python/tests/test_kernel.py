@@ -1,0 +1,156 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes (and the mask distribution) and asserts
+allclose between each Pallas kernel and its pure-jnp oracle in ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lr_grad import lr_grad_chunk, lr_grad_chunk_raw
+from compile.kernels.matmul import matmul
+from compile.kernels.lbfgs import lbfgs_hvp
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def make_lr_case(seed, c, d, k, mask_frac):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(c, d)).astype(np.float32)
+    x[:, -1] = 1.0  # bias column convention
+    w = (rng.normal(size=(d, k)) * 0.2).astype(np.float32)
+    lab = rng.integers(0, k, c)
+    y = np.eye(k, dtype=np.float32)[lab]
+    mask = (rng.random(c) < mask_frac).astype(np.float32)
+    return jnp.array(w), jnp.array(x), jnp.array(y), jnp.array(mask)
+
+
+class TestLrGradKernel:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        blocks=st.integers(1, 4),
+        d=st.integers(2, 96),
+        k=st.integers(2, 12),
+        mask_frac=st.floats(0.0, 1.0),
+    )
+    def test_matches_ref(self, seed, blocks, d, k, mask_frac):
+        c = 128 * blocks
+        w, x, y, mask = make_lr_case(seed, c, d, k, mask_frac)
+        lam = 0.005
+        g1, l1, c1 = lr_grad_chunk(w, x, y, mask, lam)
+        g2, l2, c2 = ref.lr_grad_chunk_ref(w, x, y, mask, lam)
+        scale = max(1.0, float(jnp.abs(g2).max()))
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   atol=2e-4 * scale, rtol=2e-4)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=2e-4, atol=1e-3)
+        assert float(c1) == pytest.approx(float(c2))
+
+    def test_all_masked_out(self):
+        w, x, y, mask = make_lr_case(0, 128, 10, 4, 1.0)
+        mask = jnp.zeros_like(mask)
+        g, loss, correct = lr_grad_chunk(w, x, y, mask, 0.01)
+        assert float(jnp.abs(g).max()) == 0.0
+        assert float(loss) == 0.0 and float(correct) == 0.0
+
+    def test_sum_decomposes_over_masks(self):
+        # sum over disjoint masks == sum over union (the chunking identity
+        # the Rust engine relies on)
+        w, x, y, mask = make_lr_case(3, 256, 16, 5, 1.0)
+        rng = np.random.default_rng(7)
+        part = rng.random(256) < 0.5
+        m1 = jnp.array(part.astype(np.float32))
+        m2 = jnp.array((~part).astype(np.float32))
+        lam = 0.005
+        g1, l1, _ = lr_grad_chunk(w, x, y, m1, lam)
+        g2, l2, _ = lr_grad_chunk(w, x, y, m2, lam)
+        ga, la, _ = lr_grad_chunk(w, x, y, m1 + m2, lam)
+        np.testing.assert_allclose(np.asarray(g1 + g2), np.asarray(ga),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(l1 + l2), float(la), rtol=1e-4)
+
+    def test_raw_stats_order(self):
+        w, x, y, mask = make_lr_case(5, 128, 8, 3, 0.7)
+        _, stats = lr_grad_chunk_raw(w, x, y, mask)
+        assert stats.shape == (3,)
+        assert float(stats[2]) == pytest.approx(float(mask.sum()))
+
+
+class TestMatmulKernel:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        m=st.integers(1, 300),
+        k=st.integers(1, 64),
+        n=st.integers(1, 32),
+    )
+    def test_matches_ref(self, seed, m, k, n):
+        rng = np.random.default_rng(seed)
+        a = jnp.array(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.array(rng.normal(size=(k, n)), jnp.float32)
+        got = matmul(a, b)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def make_curvature_pairs(seed, m, p, scale=1.0):
+    """History pairs consistent with a fixed SPD Hessian (dg = H dw)."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(p, p))
+    hess = a @ a.T / p + np.eye(p)
+    dws = (rng.normal(size=(m, p)) * scale).astype(np.float32)
+    dgs = (dws @ hess.T).astype(np.float32)
+    return jnp.array(dws), jnp.array(dgs)
+
+
+class TestLbfgsKernel:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        m=st.integers(1, 6),
+        p=st.integers(8, 600),
+    )
+    def test_matches_ref(self, seed, m, p):
+        dws, dgs = make_curvature_pairs(seed, m, p)
+        rng = np.random.default_rng(seed + 1)
+        v = jnp.array(rng.normal(size=p), jnp.float32)
+        got = np.asarray(lbfgs_hvp(dws, dgs, v, block_p=128))
+        want = np.asarray(ref.lbfgs_hvp_ref(dws, dgs, v))
+        denom = max(1.0, np.abs(want).max())
+        np.testing.assert_allclose(got / denom, want / denom,
+                                   rtol=2e-3, atol=2e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 4))
+    def test_compact_equals_dense_bfgs(self, seed, m):
+        # compact representation == iterated rank-2 BFGS updates (S11/S12)
+        p = 40
+        dws, dgs = make_curvature_pairs(seed, m, p)
+        rng = np.random.default_rng(seed + 2)
+        v = jnp.array(rng.normal(size=p), jnp.float32)
+        B = np.asarray(ref.bfgs_dense_ref(dws, dgs, p))
+        want = B @ np.asarray(v)
+        got = np.asarray(ref.lbfgs_hvp_ref(dws, dgs, v))
+        denom = max(1.0, np.abs(want).max())
+        np.testing.assert_allclose(got / denom, want / denom,
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_secant_equation(self):
+        # B s_last == y_last exactly (defining property)
+        dws, dgs = make_curvature_pairs(11, 3, 200)
+        got = np.asarray(ref.lbfgs_hvp_ref(dws, dgs, dws[-1]))
+        want = np.asarray(dgs[-1])
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_positive_definite_on_curvature_pairs(self):
+        # v^T B v > 0 for many random v (paper Lemma 6: B well-conditioned)
+        dws, dgs = make_curvature_pairs(13, 2, 100)
+        rng = np.random.default_rng(17)
+        for _ in range(20):
+            v = jnp.array(rng.normal(size=100), jnp.float32)
+            bv = np.asarray(ref.lbfgs_hvp_ref(dws, dgs, v))
+            assert float(np.dot(np.asarray(v), bv)) > 0.0

@@ -1,0 +1,145 @@
+"""L2 model tests: entry points, flattening, HVP exactness, AOT shapes."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS
+from compile.kernels import ref
+
+
+def lr_case(seed, c=128, d=12, k=4):
+    rng = np.random.default_rng(seed)
+    da = d + 1
+    x = rng.normal(size=(c, da)).astype(np.float32)
+    x[:, -1] = 1.0
+    w = (rng.normal(size=(da * k,)) * 0.2).astype(np.float32)
+    lab = rng.integers(0, k, c)
+    y = np.eye(k, dtype=np.float32)[lab]
+    mask = np.ones(c, np.float32)
+    return (jnp.array(w), jnp.array(x), jnp.array(y), jnp.array(mask)), da, k
+
+
+class TestLrEntry:
+    def test_pallas_vs_ref_path(self):
+        (w, x, y, mask), da, k = lr_case(0)
+        g1, s1 = model.lr_grad_entry(w, x, y, mask, da=da, k=k, lam=5e-3,
+                                     use_pallas=True)
+        g2, s2 = model.lr_grad_entry(w, x, y, mask, da=da, k=k, lam=5e-3,
+                                     use_pallas=False)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_stats_layout(self):
+        (w, x, y, mask), da, k = lr_case(1)
+        g, stats = model.lr_grad_entry(w, x, y, mask, da=da, k=k, lam=0.0)
+        assert stats.shape == (4,)
+        # stats = [loss, correct, cnt, gnorm2]
+        assert float(stats[2]) == mask.sum()
+        np.testing.assert_allclose(float(stats[3]),
+                                   float(jnp.dot(g, g)), rtol=1e-4)
+
+    def test_hvp_matches_finite_difference(self):
+        (w, x, y, mask), da, k = lr_case(2, c=64, d=6, k=3)
+        rng = np.random.default_rng(3)
+        v = jnp.array(rng.normal(size=w.shape), jnp.float32)
+        hv = model.lr_hvp_entry(w, v, x, mask, da=da, k=k, lam=5e-3)
+        eps = 1e-3
+
+        def g(wv):
+            gg, _ = model.lr_grad_entry(jnp.array(wv, jnp.float32), x, y,
+                                        mask, da=da, k=k, lam=5e-3,
+                                        use_pallas=False)
+            return np.asarray(gg, np.float64)
+
+        fd = (g(np.asarray(w) + eps * np.asarray(v))
+              - g(np.asarray(w) - eps * np.asarray(v))) / (2 * eps)
+        denom = max(1.0, np.abs(fd).max())
+        np.testing.assert_allclose(np.asarray(hv) / denom, fd / denom,
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_hvp_includes_reg(self):
+        # with x masked out entirely, H v = cnt * lam * v = 0 when cnt=0
+        (w, x, _y, mask), da, k = lr_case(4, c=64, d=6, k=3)
+        hv = model.lr_hvp_entry(w, jnp.ones_like(w), x,
+                                jnp.zeros_like(mask), da=da, k=k, lam=0.1)
+        np.testing.assert_allclose(np.asarray(hv), 0.0, atol=1e-6)
+
+
+class TestMlpEntry:
+    def mlp_case(self, seed, c=128, d=10, h=8, k=3):
+        rng = np.random.default_rng(seed)
+        da = d + 1
+        p = model.mlp_nparams(da, h, k)
+        x = rng.normal(size=(c, da)).astype(np.float32)
+        x[:, -1] = 1.0
+        w = (rng.normal(size=(p,)) * 0.2).astype(np.float32)
+        lab = rng.integers(0, k, c)
+        y = np.eye(k, dtype=np.float32)[lab]
+        mask = np.ones(c, np.float32)
+        return (jnp.array(w), jnp.array(x), jnp.array(y), jnp.array(mask)), da, h, k
+
+    def test_pallas_vs_ref_path(self):
+        (w, x, y, mask), da, h, k = self.mlp_case(0)
+        g1, s1 = model.mlp_grad_entry(w, x, y, mask, da=da, h=h, k=k,
+                                      lam=1e-3, use_pallas=True)
+        g2, s2 = model.mlp_grad_entry(w, x, y, mask, da=da, h=h, k=k,
+                                      lam=1e-3, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_grad_matches_autodiff(self):
+        # manual backprop == jax.grad of the scalar loss
+        (w, x, y, mask), da, h, k = self.mlp_case(1, c=64)
+        lam = 1e-3
+
+        def loss_fn(wf):
+            w1, w2 = model.mlp_unflatten(wf, da, h, k)
+            _, _, logits = ref.mlp_forward_ref(w1, w2, x)
+            lsm = ref.log_softmax(logits)
+            ce = -jnp.sum(y * lsm, axis=-1)
+            cnt = jnp.sum(mask)
+            reg = (lam / 2.0) * (jnp.sum(w1 * w1) + jnp.sum(w2 * w2))
+            return jnp.sum(ce * mask) + cnt * reg
+
+        g_auto = jax.grad(loss_fn)(w)
+        g_man, _ = model.mlp_grad_entry(w, x, y, mask, da=da, h=h, k=k,
+                                        lam=lam, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(g_man), np.asarray(g_auto),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_unflatten_roundtrip(self):
+        da, h, k = 11, 8, 3
+        p = model.mlp_nparams(da, h, k)
+        w = jnp.arange(p, dtype=jnp.float32)
+        w1, w2 = model.mlp_unflatten(w, da, h, k)
+        assert w1.shape == (da, h) and w2.shape == (h + 1, k)
+        back = jnp.concatenate([w1.reshape(-1), w2.reshape(-1)])
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+class TestBuildEntries:
+    @pytest.mark.parametrize("name", ["small", "smallnn"])
+    def test_entries_trace(self, name):
+        cfg = CONFIGS[name]
+        entries, p = model.build_entries(cfg)
+        assert set(entries) == {"grad", "grad_small", "hvp", "lbfgs"}
+        fn, shapes = entries["grad"]
+        lowered = jax.jit(fn).lower(*shapes)
+        assert lowered is not None
+        assert p > 0
+
+    def test_param_counts(self):
+        cfg = CONFIGS["small"]
+        _, p = model.build_entries(cfg)
+        assert p == (cfg["d"] + 1) * cfg["k"]
+        cfgn = CONFIGS["smallnn"]
+        _, pn = model.build_entries(cfgn)
+        da, h, k = cfgn["d"] + 1, cfgn["hidden"], cfgn["k"]
+        assert pn == da * h + (h + 1) * k

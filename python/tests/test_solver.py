@@ -1,0 +1,56 @@
+"""The pure-HLO small-system solver (kernels/lbfgs.py::solve_small):
+hypothesis sweep + adversarial pivoting cases."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lbfgs import solve_small
+
+
+class TestSolveSmall:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 16))
+    def test_roundtrip_well_conditioned(self, seed, n):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(n, n)).astype(np.float32)
+        # condition: A A^T + I is SPD and decently conditioned
+        spd = a @ a.T / n + np.eye(n, dtype=np.float32)
+        x = rng.normal(size=n).astype(np.float32)
+        b = spd @ x
+        got = np.asarray(solve_small(jnp.array(spd), jnp.array(b)))
+        np.testing.assert_allclose(got, x, rtol=2e-2, atol=2e-2)
+
+    def test_needs_pivoting(self):
+        # leading zero pivot: naive elimination without pivoting fails
+        a = jnp.array([[0.0, 1.0], [1.0, 0.0]], jnp.float32)
+        b = jnp.array([2.0, 3.0], jnp.float32)
+        got = np.asarray(solve_small(a, b))
+        np.testing.assert_allclose(got, [3.0, 2.0], rtol=1e-5)
+
+    def test_indefinite_system(self):
+        # the L-BFGS middle matrix is indefinite by construction
+        # ([[sigma S^T S, L],[L^T, -D]]); solver must not assume SPD
+        a = jnp.array([[2.0, 1.0], [1.0, -3.0]], jnp.float32)
+        x = np.array([0.5, -1.25], np.float32)
+        b = jnp.array(np.asarray(a) @ x)
+        got = np.asarray(solve_small(a, b))
+        np.testing.assert_allclose(got, x, rtol=1e-4, atol=1e-5)
+
+    def test_identity(self):
+        n = 7
+        b = jnp.arange(n, dtype=jnp.float32)
+        got = np.asarray(solve_small(jnp.eye(n, dtype=jnp.float32), b))
+        np.testing.assert_allclose(got, np.arange(n), atol=1e-6)
+
+    def test_permutation_matrix(self):
+        # permutation matrices exercise every pivot swap
+        n = 5
+        rng = np.random.default_rng(3)
+        perm = rng.permutation(n)
+        a = np.zeros((n, n), np.float32)
+        a[np.arange(n), perm] = 1.0
+        x = rng.normal(size=n).astype(np.float32)
+        b = a @ x
+        got = np.asarray(solve_small(jnp.array(a), jnp.array(b)))
+        np.testing.assert_allclose(got, x, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,118 @@
+//! `cargo bench --bench micro` — hot-path microbenchmarks (plain harness;
+//! criterion unavailable offline).
+//!
+//! Covers the per-iteration costs DeltaGrad's complexity analysis (§2.4)
+//! is made of: full-gradient chunk execution, removed-set (small-chunk)
+//! gradient, host vs artifact L-BFGS B·v, parameter upload, and the pure
+//! vector step arithmetic. Reports mean ± std over repetitions.
+
+use deltagrad::config::HyperParams;
+use deltagrad::data::{sample_removal, synth, IndexSet};
+use deltagrad::lbfgs::History;
+use deltagrad::runtime::Engine;
+use deltagrad::train::{self, TrainOpts};
+use deltagrad::util::vecmath::axpy;
+use deltagrad::util::Rng;
+
+fn bench<F: FnMut() -> anyhow::Result<()>>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    mut f: F,
+) -> anyhow::Result<()> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f()?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / n;
+    println!(
+        "  {name:<42} {:>10.3} ms ± {:>7.3} ms  (n={reps})",
+        mean * 1e3,
+        var.sqrt() * 1e3
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let want = |name: &str| filter.is_empty() || name.contains(&filter);
+    let mut eng = Engine::open_default()?;
+
+    for model in ["mnist", "rcv1"] {
+        if !want(model) {
+            continue;
+        }
+        println!("== {model} ==");
+        let exes = eng.model(model)?;
+        let spec = exes.spec.clone();
+        let (ds, _test) = synth::train_test_for_spec(&spec, 7, Some(spec.chunk * 2), Some(128));
+        let staged = exes.stage(&eng.rt, &ds, &IndexSet::empty())?;
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.05).collect();
+
+        bench("grad_sum_staged (full pass, 2 chunks)", 2, 20, || {
+            exes.grad_sum_staged(&eng.rt, &staged, &w).map(|_| ())
+        })?;
+
+        let removed = sample_removal(&mut rng, ds.n, 64);
+        bench("grad_sum_rows (r=64 removed-set term)", 2, 20, || {
+            exes.grad_sum_rows(&eng.rt, &ds, removed.as_slice(), &w).map(|_| ())
+        })?;
+
+        bench("upload w (param literal)", 2, 50, || {
+            eng.rt.upload(&w, &[spec.p]).map(|_| ())
+        })?;
+
+        // L-BFGS: host vs artifact
+        let mut hist = History::new(spec.m);
+        let mut dws = Vec::new();
+        let mut dgs = Vec::new();
+        for _ in 0..spec.m {
+            let dw: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32()).collect();
+            let dg: Vec<f32> = dw.iter().map(|x| 2.0 * x + 0.01 * rng.gaussian_f32()).collect();
+            hist.push(dw.clone(), dg.clone());
+            dws.push(dw);
+            dgs.push(dg);
+        }
+        let v: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32()).collect();
+        bench("lbfgs B·v (host compact form)", 2, 50, || {
+            let _ = hist.bv(&v);
+            Ok(())
+        })?;
+        bench("lbfgs B·v (AOT artifact)", 2, 20, || {
+            exes.lbfgs_bv_artifact(&eng.rt, &dws, &dgs, &v).map(|_| ())
+        })?;
+
+        // pure step arithmetic
+        let g = v.clone();
+        let mut wc = w.clone();
+        bench("gd step axpy (p floats)", 2, 200, || {
+            axpy(-0.1, &g, &mut wc);
+            Ok(())
+        })?;
+    }
+
+    if want("iter") {
+        println!("== per-iteration end-to-end (small) ==");
+        let exes = eng.model("small")?;
+        let spec = exes.spec.clone();
+        let (ds, _test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 20;
+        bench("train 20 iters (small, n=1024)", 1, 5, || {
+            train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+                .map(|_| ())
+        })?;
+    }
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! `cargo bench` — end-to-end benchmarks, one per paper table/figure.
+//!
+//! Criterion is unavailable offline, so this is a plain harness
+//! (`harness = false`): each bench runs the corresponding experiment
+//! driver at bench scale (n_scale = 0.25, quick iteration counts) and
+//! reports wall-clock. The FULL-scale regeneration is
+//! `deltagrad experiment <id>`; numbers recorded in EXPERIMENTS.md come
+//! from that path — these benches exist to (a) keep every driver
+//! exercised under `make bench` and (b) track regressions in the
+//! end-to-end stack.
+
+use deltagrad::expers::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let mut ctx = Ctx::new(true, 7)?;
+    ctx.n_scale = 0.25;
+    println!("paper_benches (bench scale: n_scale=0.25, quick T)\n");
+    let mut total = 0.0;
+    for id in expers::ALL {
+        if !filter.is_empty() && !id.contains(&filter) {
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        let md = expers::run(&mut ctx, id)?;
+        let secs = t0.elapsed().as_secs_f64();
+        total += secs;
+        // first table heading as a sanity marker
+        let marker = md.lines().find(|l| l.starts_with("###")).unwrap_or("");
+        println!("bench {id:>5}: {secs:8.2}s   {marker}");
+    }
+    println!("\ntotal: {total:.1}s");
+    Ok(())
+}

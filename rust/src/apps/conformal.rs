@@ -1,0 +1,135 @@
+//! §5.6: cross-conformal predictive inference.
+//!
+//! Split the training data into K folds; train f̂_{−S_k} excluding each
+//! fold (with DeltaGrad: one batch-deletion per fold against the cached
+//! full-data trajectory); compute cross-validation residuals
+//! R_i = nonconformity(x_i, y_i) under the fold model that excluded i.
+//! A test point's prediction set contains every candidate label whose
+//! nonconformity is ≤ the ⌈(1−α)(n+1)⌉-th smallest residual
+//! (cross-conformal p-value construction, Vovk 2015).
+
+use anyhow::Result;
+
+use crate::config::{HyperParams, ModelKind};
+use crate::data::{Dataset, IndexSet};
+use crate::deltagrad::batch;
+use crate::runtime::engine::ModelExes;
+use crate::runtime::Runtime;
+use crate::train::Trajectory;
+
+/// Nonconformity score: 1 − softmax probability of the true class under
+/// model `w` (computed host-side; LR only — logits are x·W).
+pub fn nonconformity_lr(spec_da: usize, k: usize, w: &[f32], x: &[f32], y: u32) -> f64 {
+    debug_assert_eq!(w.len(), spec_da * k);
+    let mut logits = vec![0.0f64; k];
+    for (c, l) in logits.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for j in 0..spec_da {
+            acc += x[j] as f64 * w[j * k + c] as f64;
+        }
+        *l = acc;
+    }
+    let mx = logits.iter().cloned().fold(f64::MIN, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    1.0 - exps[y as usize] / z
+}
+
+/// K fold index sets (round-robin, deterministic).
+pub fn folds(n: usize, k_folds: usize) -> Vec<IndexSet> {
+    let mut sets = vec![Vec::new(); k_folds];
+    for i in 0..n {
+        sets[i % k_folds].push(i);
+    }
+    sets.into_iter().map(IndexSet::from_vec).collect()
+}
+
+/// Cross-conformal calibration: residuals of every training point under
+/// the fold model that excluded it. Fold models come from DeltaGrad
+/// batch deletion of the fold (vs BaseL: K full retrains).
+pub fn cross_conformal_residuals(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    k_folds: usize,
+) -> Result<Vec<f64>> {
+    assert_eq!(exes.spec.model, ModelKind::Lr, "conformal app is LR-only");
+    let da = exes.spec.da;
+    let k = exes.spec.k;
+    let staged = exes.stage(rt, ds, &crate::data::IndexSet::empty())?;
+    let mut residuals = vec![0.0f64; ds.n];
+    for fold in folds(ds.n, k_folds) {
+        let dg = batch::delete_gd_staged(exes, rt, ds, &staged, traj, hp, &fold)?;
+        for i in fold.iter() {
+            residuals[i] = nonconformity_lr(da, k, &dg.w, ds.row(i), ds.y[i]);
+        }
+    }
+    Ok(residuals)
+}
+
+/// Prediction set for a test point: candidate labels whose nonconformity
+/// under `w` is ≤ the (1−α) residual quantile.
+pub fn prediction_set(
+    residuals: &[f64],
+    alpha: f64,
+    da: usize,
+    k: usize,
+    w: &[f32],
+    x: &[f32],
+) -> Vec<u32> {
+    let mut sorted = residuals.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let rank = (((1.0 - alpha) * (n as f64 + 1.0)).ceil() as usize).min(n);
+    let thresh = sorted[rank - 1];
+    (0..k as u32)
+        .filter(|&c| nonconformity_lr(da, k, w, x, c) <= thresh)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_partition() {
+        let f = folds(10, 3);
+        assert_eq!(f.len(), 3);
+        let total: usize = f.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 10);
+        for i in 0..10 {
+            assert_eq!(f.iter().filter(|s| s.contains(i)).count(), 1);
+        }
+    }
+
+    #[test]
+    fn nonconformity_in_unit_interval() {
+        let da = 4;
+        let k = 3;
+        let w = vec![0.1f32; da * k];
+        let x = vec![1.0f32; da];
+        for c in 0..k as u32 {
+            let s = nonconformity_lr(da, k, &w, &x, c);
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn prediction_set_grows_with_coverage() {
+        // higher coverage (smaller alpha) => larger-or-equal sets
+        let da = 3;
+        let k = 4;
+        let mut rng = crate::util::Rng::new(3);
+        let w: Vec<f32> = (0..da * k).map(|_| rng.gaussian_f32()).collect();
+        let residuals: Vec<f64> = (0..100).map(|_| rng.next_f64()).collect();
+        let x = vec![0.5f32, -0.2, 1.0];
+        let s_10 = prediction_set(&residuals, 0.10, da, k, &w, &x);
+        let s_01 = prediction_set(&residuals, 0.01, da, k, &w, &x);
+        assert!(s_01.len() >= s_10.len());
+        for c in &s_10 {
+            assert!(s_01.contains(c));
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! §5.5: jackknife bias reduction.
+//!
+//! For an estimator f̂_n computed from n samples, the jackknife bias
+//! estimate is  b̂ = (n−1)(mean_i f̂_{−i} − f̂_n)  and the corrected
+//! estimator  f̂_jack = f̂_n − b̂.  Every f̂_{−i} needs the model retrained
+//! without sample i — exactly DeltaGrad's leave-one-out fast path.
+
+use anyhow::Result;
+
+use crate::config::HyperParams;
+use crate::data::{Dataset, IndexSet};
+use crate::deltagrad::batch;
+use crate::runtime::engine::ModelExes;
+use crate::runtime::Runtime;
+use crate::train::Trajectory;
+
+/// Jackknife over a scalar functional of the model parameters.
+pub struct JackknifeResult {
+    /// f̂_n on the full data
+    pub full: f64,
+    /// jackknife bias estimate b̂
+    pub bias: f64,
+    /// bias-corrected estimate f̂_n − b̂
+    pub corrected: f64,
+    /// number of leave-one-out refits used
+    pub n_loo: usize,
+}
+
+/// Estimate the bias of `functional(w)` with leave-one-out DeltaGrad over
+/// a subsample of `loo_count` points (the full jackknife uses n).
+#[allow(clippy::too_many_arguments)]
+pub fn jackknife_bias(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    w_full: &[f32],
+    functional: impl Fn(&[f32]) -> f64,
+    loo_count: usize,
+    seed: u64,
+) -> Result<JackknifeResult> {
+    let n = ds.n;
+    let mut rng = crate::util::Rng::new(seed);
+    let picks = rng.sample_distinct(n, loo_count.min(n));
+    let full = functional(w_full);
+    let staged = exes.stage(rt, ds, &IndexSet::empty())?;
+    let mut acc = 0.0f64;
+    for &i in &picks {
+        let removed = IndexSet::from_vec(vec![i]);
+        let dg = batch::delete_gd_staged(exes, rt, ds, &staged, traj, hp, &removed)?;
+        acc += functional(&dg.w);
+    }
+    let mean_loo = acc / picks.len() as f64;
+    let bias = (n as f64 - 1.0) * (mean_loo - full);
+    Ok(JackknifeResult { full, bias, corrected: full - bias, n_loo: picks.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jackknife_formula_on_synthetic_functional() {
+        // direct check of the arithmetic with a fabricated mean_loo
+        let n = 100.0f64;
+        let full = 2.0;
+        let mean_loo = 2.01;
+        let bias = (n - 1.0) * (mean_loo - full);
+        assert!((bias - 0.99).abs() < 1e-12);
+        let corrected = full - bias;
+        assert!((corrected - 1.01).abs() < 1e-12);
+    }
+}

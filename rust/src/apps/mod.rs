@@ -1,0 +1,19 @@
+//! Applications of DeltaGrad (paper §5 and appendix D):
+//!
+//! * [`privacy`]   — ε-approximate deletion via the Laplace mechanism
+//!   (§5.1, appendix B.1).
+//! * [`valuation`] — leave-one-out data valuation (§5.4).
+//! * [`robust`]    — robust learning by outlier prune-and-refit
+//!   (§5.3, appendix D.5).
+//! * [`jackknife`] — jackknife bias estimation over leave-one-out
+//!   retrains (§5.5).
+//! * [`conformal`] — cross-conformal prediction intervals (§5.6).
+//! * [`influence`] — influence-function one-shot comparator
+//!   (Koh & Liang style, the appendix D.3 state-of-the-art baseline).
+
+pub mod conformal;
+pub mod influence;
+pub mod jackknife;
+pub mod privacy;
+pub mod robust;
+pub mod valuation;

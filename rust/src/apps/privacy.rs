@@ -1,0 +1,96 @@
+//! §5.1 / appendix B.1: privacy-related data deletion.
+//!
+//! DeltaGrad's output w^I differs from the true retrained w^U by at most
+//! δ₀ = O((r/n)²); adding i.i.d. Laplace(δ/ε) noise to every coordinate
+//! (δ ≥ √p·δ₀) makes the released model an ε-approximate deletion in the
+//! sense of Definition 3: the output distribution is within e^ε of what
+//! releasing the noised TRUE retrain would give.
+
+use crate::util::Rng;
+
+/// Parameters of the release mechanism.
+#[derive(Clone, Copy, Debug)]
+pub struct LaplaceMechanism {
+    /// per-coordinate Laplace scale b = δ/ε
+    pub scale: f64,
+}
+
+impl LaplaceMechanism {
+    /// Build from the paper's bound: δ = √p · δ₀ with δ₀ an upper bound
+    /// on ‖w^U − w^I‖ (measured or theoretical), and privacy budget ε.
+    pub fn from_deletion_error(p: usize, delta0: f64, epsilon: f64) -> Self {
+        assert!(epsilon > 0.0);
+        LaplaceMechanism { scale: (p as f64).sqrt() * delta0 / epsilon }
+    }
+
+    /// Release a noised copy of `w`.
+    pub fn release(&self, w: &[f32], rng: &mut Rng) -> Vec<f32> {
+        w.iter()
+            .map(|&x| (x as f64 + rng.laplace(self.scale)) as f32)
+            .collect()
+    }
+
+    /// Log density of the mechanism output `z` given center `w`.
+    pub fn log_density(&self, center: &[f32], z: &[f32]) -> f64 {
+        let b = self.scale;
+        let mut acc = 0.0f64;
+        for (c, v) in center.iter().zip(z) {
+            acc += -((*v as f64 - *c as f64).abs()) / b - (2.0 * b).ln();
+        }
+        acc
+    }
+
+    /// Empirical ε̂: the log-density ratio of releasing from w^I vs w^U at
+    /// a point z — bounded by ε when ‖w^I − w^U‖₁ ≤ δ = scale·ε.
+    pub fn privacy_loss(&self, w_i: &[f32], w_u: &[f32], z: &[f32]) -> f64 {
+        (self.log_density(w_i, z) - self.log_density(w_u, z)).abs()
+    }
+}
+
+/// Worst-case ε for two centers: ‖w^I − w^U‖₁ / b (triangle inequality on
+/// the Laplace log-density).
+pub fn epsilon_bound(w_i: &[f32], w_u: &[f32], scale: f64) -> f64 {
+    let l1: f64 = w_i
+        .iter()
+        .zip(w_u)
+        .map(|(a, b)| (*a as f64 - *b as f64).abs())
+        .sum();
+    l1 / scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn privacy_loss_below_bound() {
+        let mut rng = Rng::new(5);
+        let p = 50;
+        let w_u: Vec<f32> = (0..p).map(|_| rng.gaussian_f32()).collect();
+        // w_i close to w_u (the DeltaGrad guarantee)
+        let w_i: Vec<f32> = w_u.iter().map(|x| x + 1e-3 * rng.gaussian_f32()).collect();
+        let mech = LaplaceMechanism { scale: 0.05 };
+        let bound = epsilon_bound(&w_i, &w_u, mech.scale);
+        for _ in 0..20 {
+            let z = mech.release(&w_i, &mut rng);
+            let loss = mech.privacy_loss(&w_i, &w_u, &z);
+            assert!(loss <= bound + 1e-9, "loss {loss} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn scale_from_error() {
+        let m = LaplaceMechanism::from_deletion_error(100, 1e-4, 0.5);
+        assert!((m.scale - 10.0 * 1e-4 / 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_scale_matches() {
+        let mut rng = Rng::new(9);
+        let mech = LaplaceMechanism { scale: 2.0 };
+        let w = vec![0.0f32; 20_000];
+        let z = mech.release(&w, &mut rng);
+        let mean_abs: f64 = z.iter().map(|x| x.abs() as f64).sum::<f64>() / z.len() as f64;
+        assert!((mean_abs - 2.0).abs() < 0.1, "E|Laplace(2)| = 2, got {mean_abs}");
+    }
+}

@@ -1,0 +1,275 @@
+//! Configuration substrate: artifact manifest parsing + hyperparameters.
+//!
+//! The AOT step (`make artifacts`) writes `artifacts/manifest.txt` with one
+//! `config <name> key=val ...` line per dataset family; this module parses
+//! it (hand-rolled — serde/toml are not available offline) and carries the
+//! paper's hyperparameter table (§4.1) as defaults.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Which model family an artifact set implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// multinomial logistic regression (strongly convex with L2)
+    Lr,
+    /// 2-layer ReLU MLP (non-convex: Algorithm 4 fallback applies)
+    Mlp,
+}
+
+/// Static shape/compile info for one dataset family, parsed from the
+/// manifest. Field names mirror python/compile/configs.py.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub model: ModelKind,
+    pub d: usize,
+    /// d + 1 (bias column appended by the data generator)
+    pub da: usize,
+    pub k: usize,
+    /// flat parameter count
+    pub p: usize,
+    pub hidden: usize,
+    /// rows per `grad` executable call
+    pub chunk: usize,
+    /// rows per `grad_small` / `hvp` executable call
+    pub chunk_small: usize,
+    /// L2 regularization coefficient (baked into the artifacts)
+    pub lam: f32,
+    /// L-BFGS history size baked into the `lbfgs` artifact
+    pub m: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+impl ModelSpec {
+    pub fn artifact_path(&self, dir: &Path, entry: &str) -> PathBuf {
+        dir.join(format!("{}_{}.hlo.txt", self.name, entry))
+    }
+}
+
+/// DeltaGrad + training hyperparameters (paper §4.1 and Alg. 1 inputs).
+#[derive(Clone, Debug)]
+pub struct HyperParams {
+    /// total iterations T
+    pub t: usize,
+    /// period of exact gradient evaluations T0
+    pub t0: usize,
+    /// burn-in exact iterations j0
+    pub j0: usize,
+    /// L-BFGS history size m
+    pub m: usize,
+    /// constant learning rate eta (a schedule hook exists in the trainer)
+    pub lr: f32,
+    /// second-phase learning rate (paper's MLP: 0.2 for 10 iters, then 0.1)
+    pub lr2: Option<(usize, f32)>,
+    /// minibatch size for SGD mode; 0 = full-batch deterministic GD
+    pub batch: usize,
+    /// Algorithm-4 curvature gate (non-convex models): minimum
+    /// Δg·Δw / ||Δw||² to trust the quasi-Hessian at an iteration
+    pub curvature_min: f32,
+}
+
+impl HyperParams {
+    /// Paper defaults per dataset (§4.1 Hyperparameter setup), with T
+    /// scaled to this testbed.
+    pub fn for_dataset(name: &str) -> Self {
+        let base = HyperParams {
+            t: 200,
+            t0: 5,
+            j0: 10,
+            m: 2,
+            lr: 0.1,
+            lr2: None,
+            batch: 0,
+            curvature_min: 1e-4,
+        };
+        match name {
+            // paper: T0=10, j0=10 for RCV1
+            "rcv1" => HyperParams { t0: 10, ..base },
+            // paper: T0=5, j0=10 for MNIST and covtype
+            "mnist" | "covtype" | "small" => base,
+            // paper: T0=3, j0=300 for HIGGS (j0 scaled with T)
+            "higgs" => HyperParams { t0: 3, j0: 40, ..base },
+            // paper: MLP T0=2, first quarter burn-in, lr 0.2 then 0.1
+            "mnistnn" | "smallnn" => HyperParams {
+                t: 120,
+                t0: 2,
+                j0: 30,
+                lr: 0.2,
+                lr2: Some((10, 0.1)),
+                ..base
+            },
+            _ => base,
+        }
+    }
+
+    /// Learning rate at iteration t.
+    pub fn lr_at(&self, t: usize) -> f32 {
+        match self.lr2 {
+            Some((switch, lr2)) if t >= switch => lr2,
+            _ => self.lr,
+        }
+    }
+
+    /// Is iteration `t` an exact (full gradient) iteration per Alg. 1 l.5?
+    pub fn is_exact_iter(&self, t: usize) -> bool {
+        t <= self.j0 || (t - self.j0) % self.t0 == 0
+    }
+}
+
+/// Parse `artifacts/manifest.txt` into specs keyed by config name.
+pub fn parse_manifest(path: &Path) -> Result<BTreeMap<String, ModelSpec>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+    parse_manifest_str(&text)
+}
+
+pub fn parse_manifest_str(text: &str) -> Result<BTreeMap<String, ModelSpec>> {
+    let mut out = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        match toks.next() {
+            Some("config") => {}
+            Some(other) => bail!("manifest line {}: unknown directive {other:?}", lineno + 1),
+            None => continue,
+        }
+        let name = toks
+            .next()
+            .with_context(|| format!("manifest line {}: missing name", lineno + 1))?
+            .to_string();
+        let mut kv = BTreeMap::new();
+        for tok in toks {
+            let (k, v) = tok
+                .split_once('=')
+                .with_context(|| format!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+            kv.insert(k.to_string(), v.to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k)
+                .with_context(|| format!("manifest config {name}: missing key {k}"))
+        };
+        let usize_of = |k: &str| -> Result<usize> {
+            Ok(get(k)?.parse::<usize>().with_context(|| format!("key {k}"))?)
+        };
+        let model = match get("model")?.as_str() {
+            "lr" => ModelKind::Lr,
+            "mlp" => ModelKind::Mlp,
+            other => bail!("config {name}: unknown model {other:?}"),
+        };
+        let spec = ModelSpec {
+            name: name.clone(),
+            model,
+            d: usize_of("d")?,
+            da: usize_of("da")?,
+            k: usize_of("k")?,
+            p: usize_of("p")?,
+            hidden: usize_of("hidden")?,
+            chunk: usize_of("chunk")?,
+            chunk_small: usize_of("chunk_small")?,
+            lam: get("lam")?.parse::<f32>().context("lam")?,
+            m: usize_of("m")?,
+            n_train: usize_of("n_train")?,
+            n_test: usize_of("n_test")?,
+        };
+        if spec.da != spec.d + 1 {
+            bail!("config {name}: da != d+1");
+        }
+        out.insert(name, spec);
+    }
+    if out.is_empty() {
+        bail!("manifest contained no configs");
+    }
+    Ok(out)
+}
+
+/// Locate the artifacts directory: $DELTAGRAD_ARTIFACTS or ./artifacts
+/// relative to the workspace root (walking up from cwd).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("DELTAGRAD_ARTIFACTS") {
+        return Ok(PathBuf::from(dir));
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!("could not find artifacts/manifest.txt; run `make artifacts`");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+config small model=lr d=20 da=21 k=3 p=63 hidden=0 chunk=256 chunk_small=128 lam=0.005 m=2 n_train=1024 n_test=256
+config smallnn model=mlp d=20 da=21 k=3 p=387 hidden=16 chunk=256 chunk_small=128 lam=0.001 m=2 n_train=1024 n_test=256
+";
+
+    #[test]
+    fn parses_sample() {
+        let specs = parse_manifest_str(SAMPLE).unwrap();
+        assert_eq!(specs.len(), 2);
+        let s = &specs["small"];
+        assert_eq!(s.model, ModelKind::Lr);
+        assert_eq!((s.d, s.da, s.k, s.p), (20, 21, 3, 63));
+        assert_eq!(s.chunk, 256);
+        assert!((s.lam - 0.005).abs() < 1e-9);
+        let n = &specs["smallnn"];
+        assert_eq!(n.model, ModelKind::Mlp);
+        assert_eq!(n.hidden, 16);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_manifest_str("nonsense line\n").is_err());
+        assert!(parse_manifest_str("config broken d=1\n").is_err());
+        assert!(parse_manifest_str("").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_da() {
+        let bad = SAMPLE.replace("da=21", "da=22");
+        assert!(parse_manifest_str(&bad).is_err());
+    }
+
+    #[test]
+    fn hyperparams_exact_iter_schedule() {
+        let hp = HyperParams { t: 100, t0: 5, j0: 10, m: 2, lr: 0.1, lr2: None, batch: 0, curvature_min: 0.0 };
+        // burn-in: all exact
+        for t in 0..=10 {
+            assert!(hp.is_exact_iter(t), "t={t}");
+        }
+        assert!(!hp.is_exact_iter(11));
+        assert!(hp.is_exact_iter(15));
+        assert!(hp.is_exact_iter(20));
+        assert!(!hp.is_exact_iter(21));
+    }
+
+    #[test]
+    fn lr_schedule() {
+        let hp = HyperParams::for_dataset("mnistnn");
+        assert_eq!(hp.lr_at(0), 0.2);
+        assert_eq!(hp.lr_at(9), 0.2);
+        assert_eq!(hp.lr_at(10), 0.1);
+    }
+
+    #[test]
+    fn per_dataset_defaults_match_paper() {
+        assert_eq!(HyperParams::for_dataset("rcv1").t0, 10);
+        assert_eq!(HyperParams::for_dataset("mnist").t0, 5);
+        assert_eq!(HyperParams::for_dataset("higgs").t0, 3);
+        assert_eq!(HyperParams::for_dataset("mnistnn").t0, 2);
+    }
+}

@@ -1,0 +1,142 @@
+//! Service metrics: request latency histogram + throughput counters.
+//!
+//! std-only (no prometheus offline); snapshots are plain structs the CLI
+//! and benches can print.
+
+use std::time::Duration;
+
+/// Fixed log-scale latency buckets (seconds).
+const BUCKETS: [f64; 12] = [
+    0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0, 100.0, f64::INFINITY,
+];
+
+/// Online accumulation of request/batch counters and latencies.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub groups: u64,
+    pub deletes: u64,
+    pub adds: u64,
+    pub exact_iters: u64,
+    pub approx_iters: u64,
+    pub fallback_iters: u64,
+    latency_sum: f64,
+    latency_max: f64,
+    hist: [u64; 12],
+    group_size_sum: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served group of `size` requests with end-to-end latency
+    /// `lat` (enqueue -> reply) per request.
+    pub fn record_group(&mut self, size: usize, latencies: &[Duration]) {
+        self.groups += 1;
+        self.group_size_sum += size as u64;
+        for lat in latencies {
+            let s = lat.as_secs_f64();
+            self.requests += 1;
+            self.latency_sum += s;
+            if s > self.latency_max {
+                self.latency_max = s;
+            }
+            let idx = BUCKETS.iter().position(|&b| s <= b).unwrap_or(11);
+            self.hist[idx] += 1;
+        }
+    }
+
+    pub fn record_outcome(&mut self, n_exact: usize, n_approx: usize, n_fallback: usize) {
+        self.exact_iters += n_exact as u64;
+        self.approx_iters += n_approx as u64;
+        self.fallback_iters += n_fallback as u64;
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.latency_sum / self.requests as f64
+        }
+    }
+
+    pub fn max_latency(&self) -> f64 {
+        self.latency_max
+    }
+
+    pub fn mean_group_size(&self) -> f64 {
+        if self.groups == 0 {
+            0.0
+        } else {
+            self.group_size_sum as f64 / self.groups as f64
+        }
+    }
+
+    /// p-quantile from the histogram (upper bucket edge; conservative).
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        let target = (q * self.requests as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.hist.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return BUCKETS[i];
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} groups={} mean_group={:.2} mean_lat={:.4}s p95<={:.3}s max={:.4}s \
+             iters(exact/approx/fallback)={}/{}/{}",
+            self.requests,
+            self.groups,
+            self.mean_group_size(),
+            self.mean_latency(),
+            self.latency_quantile(0.95),
+            self.max_latency(),
+            self.exact_iters,
+            self.approx_iters,
+            self.fallback_iters,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_quantiles() {
+        let mut m = Metrics::new();
+        let lats: Vec<Duration> = (1..=100).map(|i| Duration::from_millis(i)).collect();
+        m.record_group(100, &lats);
+        assert_eq!(m.requests, 100);
+        assert_eq!(m.groups, 1);
+        assert!(m.mean_latency() > 0.04 && m.mean_latency() < 0.06);
+        assert!(m.latency_quantile(0.5) <= 0.1);
+        assert!(m.latency_quantile(1.0) <= 0.1 + 1e-9);
+        assert!((m.max_latency() - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_latency(), 0.0);
+        assert_eq!(m.latency_quantile(0.99), 0.0);
+        assert_eq!(m.mean_group_size(), 0.0);
+    }
+
+    #[test]
+    fn group_size_mean() {
+        let mut m = Metrics::new();
+        m.record_group(2, &[Duration::from_millis(1); 2]);
+        m.record_group(4, &[Duration::from_millis(1); 4]);
+        assert!((m.mean_group_size() - 3.0).abs() < 1e-9);
+    }
+}

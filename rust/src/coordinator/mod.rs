@@ -1,0 +1,17 @@
+//! L3 coordination: the unlearning service.
+//!
+//! A leader thread owns the model, its cached trajectory, and the PJRT
+//! state; callers enqueue deletion/addition requests over channels. The
+//! group-commit batcher coalesces concurrent requests into single
+//! DeltaGrad passes (one pass over k changed samples costs ~one pass over
+//! 1), and metrics track latency/throughput — the serving-system shape
+//! (request router / dynamic batcher) the brief's vLLM reference
+//! architecture describes, applied to unlearning.
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+
+pub use batcher::{BatchPolicy, Pending};
+pub use metrics::Metrics;
+pub use service::{ModelSnapshot, ServiceConfig, ServiceHandle, UpdateReply};

@@ -1,0 +1,240 @@
+//! The unlearning service: a leader thread owning the model + trajectory,
+//! serving deletion/addition requests through a group-commit batcher.
+//!
+//! PJRT state (client, executables, staged buffers) lives entirely on the
+//! worker thread — callers talk over std mpsc channels, so any number of
+//! producer threads can enqueue requests (the Fig. 4 online workload, the
+//! `online_service` example, and the coordinator benches all drive this).
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::batcher::{group_to_commit, time_until_commit, BatchPolicy, Pending};
+use super::metrics::Metrics;
+use crate::config::HyperParams;
+use crate::data::IndexSet;
+use crate::deltagrad::online::{OnlineState, Request};
+use crate::train::{self, TrainOpts};
+
+/// What the service sends back for one served request.
+#[derive(Clone, Debug)]
+pub struct UpdateReply {
+    /// model version after this request was applied
+    pub version: u64,
+    /// size of the group it was committed with
+    pub group_size: usize,
+    /// wall-clock seconds of the DeltaGrad pass (shared by the group)
+    pub pass_seconds: f64,
+    pub n_exact: usize,
+    pub n_approx: usize,
+}
+
+/// Read-only model snapshot.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    pub version: u64,
+    pub w: Vec<f32>,
+    pub n_train: usize,
+    pub test_accuracy: f64,
+}
+
+enum Command {
+    Update(Request, Sender<Result<UpdateReply, String>>),
+    Snapshot(Sender<ModelSnapshot>),
+    Metrics(Sender<Metrics>),
+    Shutdown,
+}
+
+/// Configuration for spawning a service.
+pub struct ServiceConfig {
+    /// manifest config name (e.g. "small", "mnist")
+    pub model: String,
+    pub seed: u64,
+    pub n_train: Option<usize>,
+    pub n_test: Option<usize>,
+    pub hp: HyperParams,
+    pub policy: BatchPolicy,
+}
+
+/// Client handle to a running service.
+pub struct ServiceHandle {
+    tx: Sender<Command>,
+    join: Option<JoinHandle<Result<()>>>,
+}
+
+impl ServiceHandle {
+    /// Spawn the leader thread: loads artifacts, synthesizes data, trains
+    /// the initial model (caching the trajectory), then serves requests.
+    pub fn spawn(cfg: ServiceConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let join = std::thread::Builder::new()
+            .name(format!("deltagrad-{}", cfg.model))
+            .spawn(move || worker(cfg, rx))?;
+        Ok(ServiceHandle { tx, join: Some(join) })
+    }
+
+    /// Enqueue one update request; blocks until it is committed.
+    pub fn update(&self, req: Request) -> Result<UpdateReply> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Command::Update(req, rtx))
+            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        match rrx.recv() {
+            Ok(Ok(rep)) => Ok(rep),
+            Ok(Err(e)) => bail!("update rejected: {e}"),
+            Err(_) => bail!("service died while serving"),
+        }
+    }
+
+    /// Enqueue an update without waiting (reply receiver returned).
+    pub fn update_async(&self, req: Request) -> Result<Receiver<Result<UpdateReply, String>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Command::Update(req, rtx))
+            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        Ok(rrx)
+    }
+
+    pub fn snapshot(&self) -> Result<ModelSnapshot> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Command::Snapshot(rtx))
+            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        Ok(rrx.recv()?)
+    }
+
+    pub fn metrics(&self) -> Result<Metrics> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Command::Metrics(rtx))
+            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        Ok(rrx.recv()?)
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct PendingUpdate {
+    req: Request,
+    reply: Sender<Result<UpdateReply, String>>,
+}
+
+fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
+    // --- initialization: engine, data, initial training
+    let mut eng = crate::runtime::Engine::open_default()?;
+    let exes = eng.model(&cfg.model)?;
+    let spec = exes.spec.clone();
+    let (train_ds, test_ds) =
+        crate::data::synth::train_test_for_spec(&spec, cfg.seed, cfg.n_train, cfg.n_test);
+    let test_staged = exes.stage(&eng.rt, &test_ds, &IndexSet::empty())?;
+    let out = train::train(
+        &exes,
+        &eng.rt,
+        &train_ds,
+        &TrainOpts::full(&cfg.hp, &IndexSet::empty()),
+    )?;
+    let traj = out.traj.expect("trajectory recorded");
+    let mut state = OnlineState::new(&exes, &eng.rt, train_ds, traj, cfg.hp.clone())?;
+    let mut w_current = out.w;
+    let mut version: u64 = 0;
+    let mut metrics = Metrics::new();
+
+    // --- serve
+    let mut queue: Vec<Pending<PendingUpdate>> = Vec::new();
+    loop {
+        // wait for work (bounded by the batcher's commit deadline)
+        let cmd = match time_until_commit(&queue, &cfg.policy, Instant::now()) {
+            None => match rx.recv() {
+                Ok(c) => Some(c),
+                Err(_) => break, // all handles dropped
+            },
+            Some(timeout) => match rx.recv_timeout(timeout) {
+                Ok(c) => Some(c),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            },
+        };
+        match cmd {
+            Some(Command::Update(req, reply)) => {
+                queue.push(Pending {
+                    arrived: Instant::now(),
+                    payload: PendingUpdate { req, reply },
+                });
+            }
+            Some(Command::Snapshot(reply)) => {
+                let stats = exes.eval_staged(&eng.rt, &test_staged, &w_current)?;
+                let _ = reply.send(ModelSnapshot {
+                    version,
+                    w: w_current.clone(),
+                    n_train: state.n_current(),
+                    test_accuracy: stats.accuracy(),
+                });
+            }
+            Some(Command::Metrics(reply)) => {
+                let _ = reply.send(metrics.clone());
+            }
+            Some(Command::Shutdown) => break,
+            None => {}
+        }
+        // commit a group if the policy says so
+        let n = group_to_commit(&queue, &cfg.policy, Instant::now());
+        if n > 0 {
+            let group: Vec<Pending<PendingUpdate>> = queue.drain(..n).collect();
+            let reqs: Vec<Request> = group.iter().map(|p| p.payload.req.clone()).collect();
+            match state.apply_group(&exes, &eng.rt, &reqs) {
+                Ok(out) => {
+                    version += 1;
+                    w_current = out.w.clone();
+                    let now = Instant::now();
+                    let lats: Vec<_> = group.iter().map(|p| now - p.arrived).collect();
+                    metrics.record_group(n, &lats);
+                    metrics.record_outcome(out.n_exact, out.n_approx, out.n_fallback);
+                    for p in &group {
+                        let _ = p.payload.reply.send(Ok(UpdateReply {
+                            version,
+                            group_size: n,
+                            pass_seconds: out.seconds,
+                            n_exact: out.n_exact,
+                            n_approx: out.n_approx,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    for p in &group {
+                        let _ = p.payload.reply.send(Err(e.to_string()));
+                    }
+                }
+            }
+        }
+    }
+    // drain: reject anything left
+    for p in queue {
+        let _ = p.payload.reply.send(Err("service shut down".into()));
+    }
+    Ok(())
+}
+
+/// Convenience: count deletes/adds in a request slice (used by callers
+/// building workloads).
+pub fn count_kinds(reqs: &[Request]) -> (usize, usize) {
+    let dels = reqs.iter().filter(|r| matches!(r, Request::Delete(_))).count();
+    (dels, reqs.len() - dels)
+}

@@ -1,0 +1,245 @@
+//! Data substrate: in-memory datasets + deterministic synthetic generators.
+//!
+//! The paper evaluates on MNIST / covtype / HIGGS / RCV1; those downloads
+//! are unavailable here, so each family is replaced by a seeded synthetic
+//! generator that preserves the properties DeltaGrad's behaviour depends
+//! on (n, d, k, class separability, sparsity) — see DESIGN.md §3.
+
+pub mod synth;
+
+use crate::util::Rng;
+
+/// Dense row-major dataset with the bias column already appended
+/// (`da = d + 1`, last column all ones) and integer class labels.
+#[derive(Clone)]
+pub struct Dataset {
+    /// n * da row-major features
+    pub x: Vec<f32>,
+    /// n class labels in [0, k)
+    pub y: Vec<u32>,
+    pub n: usize,
+    pub da: usize,
+    pub k: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<u32>, da: usize, k: usize) -> Self {
+        assert_eq!(x.len() % da, 0);
+        let n = x.len() / da;
+        assert_eq!(y.len(), n);
+        debug_assert!(y.iter().all(|&c| (c as usize) < k));
+        Dataset { x, y, n, da, k }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.da..(i + 1) * self.da]
+    }
+
+    /// Number of `chunk`-row chunks covering this dataset (last padded).
+    pub fn n_chunks(&self, chunk: usize) -> usize {
+        self.n.div_ceil(chunk)
+    }
+
+    /// Materialize chunk `c` as padded (x, y_onehot, mask) buffers of
+    /// exactly `chunk` rows. `removed` marks rows whose mask is zeroed.
+    pub fn chunk_padded(
+        &self,
+        c: usize,
+        chunk: usize,
+        removed: &IndexSet,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(self.n);
+        assert!(lo < self.n, "chunk {c} out of range");
+        let rows = hi - lo;
+        let mut x = vec![0.0f32; chunk * self.da];
+        let mut y = vec![0.0f32; chunk * self.k];
+        let mut mask = vec![0.0f32; chunk];
+        x[..rows * self.da].copy_from_slice(&self.x[lo * self.da..hi * self.da]);
+        for r in 0..rows {
+            let i = lo + r;
+            y[r * self.k + self.y[i] as usize] = 1.0;
+            mask[r] = if removed.contains(i) { 0.0 } else { 1.0 };
+        }
+        (x, y, mask)
+    }
+
+    /// Gather `idxs` rows into padded (x, y_onehot, mask) buffers covering
+    /// ceil(len/chunk) chunks of `chunk` rows each.
+    pub fn gather_padded(&self, idxs: &[usize], chunk: usize) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut out = Vec::new();
+        for group in idxs.chunks(chunk.max(1)) {
+            let mut x = vec![0.0f32; chunk * self.da];
+            let mut y = vec![0.0f32; chunk * self.k];
+            let mut mask = vec![0.0f32; chunk];
+            for (r, &i) in group.iter().enumerate() {
+                assert!(i < self.n, "gather index {i} >= n {}", self.n);
+                x[r * self.da..(r + 1) * self.da].copy_from_slice(self.row(i));
+                y[r * self.k + self.y[i] as usize] = 1.0;
+                mask[r] = 1.0;
+            }
+            out.push((x, y, mask));
+        }
+        out
+    }
+
+    /// Append rows from another dataset (the "addition" scenario).
+    pub fn append(&mut self, other: &Dataset) {
+        assert_eq!(self.da, other.da);
+        assert_eq!(self.k, other.k);
+        self.x.extend_from_slice(&other.x);
+        self.y.extend_from_slice(&other.y);
+        self.n += other.n;
+    }
+
+    /// Copy of the subset at `idxs`.
+    pub fn subset(&self, idxs: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idxs.len() * self.da);
+        let mut y = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset::new(x, y, self.da, self.k)
+    }
+}
+
+/// Sorted set of removed/selected row indices with O(log n) membership.
+/// (Bit-set semantics; kept sorted for deterministic iteration.)
+#[derive(Clone, Debug, Default)]
+pub struct IndexSet {
+    sorted: Vec<usize>,
+}
+
+impl IndexSet {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn from_vec(mut v: Vec<usize>) -> Self {
+        v.sort_unstable();
+        v.dedup();
+        IndexSet { sorted: v }
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        self.sorted.binary_search(&i).is_ok()
+    }
+
+    pub fn insert(&mut self, i: usize) -> bool {
+        match self.sorted.binary_search(&i) {
+            Ok(_) => false,
+            Err(pos) => {
+                self.sorted.insert(pos, i);
+                true
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.sorted.iter().copied()
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.sorted
+    }
+
+    /// Indices in [0, n) NOT in this set.
+    pub fn complement(&self, n: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(n - self.sorted.len());
+        let mut it = self.sorted.iter().peekable();
+        for i in 0..n {
+            if it.peek() == Some(&&i) {
+                it.next();
+            } else {
+                out.push(i);
+            }
+        }
+        out
+    }
+}
+
+/// Sample a removal set of `r` distinct rows.
+pub fn sample_removal(rng: &mut Rng, n: usize, r: usize) -> IndexSet {
+    IndexSet::from_vec(rng.sample_distinct(n, r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        // 5 rows, d=2 (da=3 with bias), k=2
+        let x = vec![
+            1.0, 2.0, 1.0, //
+            3.0, 4.0, 1.0, //
+            5.0, 6.0, 1.0, //
+            7.0, 8.0, 1.0, //
+            9.0, 0.0, 1.0,
+        ];
+        Dataset::new(x, vec![0, 1, 0, 1, 0], 3, 2)
+    }
+
+    #[test]
+    fn chunk_padding_and_mask() {
+        let ds = tiny();
+        assert_eq!(ds.n_chunks(4), 2);
+        let removed = IndexSet::from_vec(vec![1]);
+        let (x, y, m) = ds.chunk_padded(0, 4, &removed);
+        assert_eq!(x.len(), 12);
+        assert_eq!(m, vec![1.0, 0.0, 1.0, 1.0]);
+        assert_eq!(&y[0..2], &[1.0, 0.0]);
+        assert_eq!(&y[2..4], &[0.0, 1.0]);
+        let (x2, _y2, m2) = ds.chunk_padded(1, 4, &removed);
+        assert_eq!(m2, vec![1.0, 0.0, 0.0, 0.0]); // 1 real row + 3 pad
+        assert_eq!(&x2[0..3], ds.row(4));
+        assert!(x2[3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gather_groups() {
+        let ds = tiny();
+        let groups = ds.gather_padded(&[0, 2, 4], 2);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].2, vec![1.0, 1.0]);
+        assert_eq!(groups[1].2, vec![1.0, 0.0]);
+        assert_eq!(&groups[1].0[0..3], ds.row(4));
+    }
+
+    #[test]
+    fn index_set_ops() {
+        let mut s = IndexSet::from_vec(vec![3, 1, 3]);
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(1) && s.contains(3) && !s.contains(2));
+        assert!(s.insert(2));
+        assert!(!s.insert(2));
+        assert_eq!(s.as_slice(), &[1, 2, 3]);
+        assert_eq!(s.complement(5), vec![0, 4]);
+    }
+
+    #[test]
+    fn append_and_subset() {
+        let mut ds = tiny();
+        let extra = ds.subset(&[0, 1]);
+        ds.append(&extra);
+        assert_eq!(ds.n, 7);
+        assert_eq!(ds.row(5), extra.row(0));
+    }
+
+    #[test]
+    fn sample_removal_distinct() {
+        let mut rng = Rng::new(1);
+        let s = sample_removal(&mut rng, 100, 10);
+        assert_eq!(s.len(), 10);
+        assert!(s.iter().all(|i| i < 100));
+    }
+}

@@ -1,0 +1,320 @@
+//! Algorithm 1: batch deletion/addition DeltaGrad (GD), plus the SGD
+//! extension of §3 (eq. S7).
+//!
+//! Deletion, GD (paper eq. (2) + Alg. 1):
+//!   exact iters:  w ← w − η/(n−r) (Σ_all ∇F_i(w) − Σ_R ∇F_i(w))
+//!   approx iters: w ← w − η/(n−r) (n[B v + ∇F(w_t)] − Σ_R ∇F_i(w))
+//!                 with v = w − w_t, B from L-BFGS history
+//!
+//! Addition mirrors the signs: divide by n+r and ADD the new samples'
+//! gradient sum.
+//!
+//! History pairs (Δw_t, Δg_t) = (w^I_t − w_t, ∇F(w^I_t) − ∇F(w_t)) are
+//! harvested at exact iterations only (Alg. 1 l.8–10); ∇F is the
+//! *full-data* average in GD mode and the *minibatch* average in SGD mode
+//! (§A.1.2), both of which the exact iteration computes anyway.
+
+use anyhow::{bail, Result};
+
+use crate::config::{HyperParams, ModelKind};
+use crate::data::{Dataset, IndexSet};
+use crate::lbfgs::History;
+use crate::runtime::engine::{ModelExes, Stats};
+use crate::runtime::Runtime;
+use crate::util::vecmath::{axpy, dot, sub};
+
+use super::RetrainOutput;
+use crate::train::Trajectory;
+
+/// Is this (Δw, Δg) pair usable for L-BFGS? Rejects zero/degenerate
+/// steps (burn-in iterations where w^I still equals w_t) and, for
+/// non-convex models, negative curvature (Algorithm 4's local-convexity
+/// check).
+fn pair_ok(dw: &[f32], dg: &[f32], kind: ModelKind, curvature_min: f32) -> bool {
+    let sw = dot(dw, dw);
+    if sw < 1e-20 {
+        return false;
+    }
+    let curv = dot(dg, dw) / sw;
+    match kind {
+        ModelKind::Lr => curv > 0.0,
+        ModelKind::Mlp => curv > curvature_min as f64,
+    }
+}
+
+/// Shared core for batch deletion and addition.
+///
+/// `delta` carries the changed rows: for deletion they are indices into
+/// `ds`; for addition they live in `added`.
+enum Change<'a> {
+    Delete(&'a IndexSet),
+    Add(&'a Dataset),
+}
+
+fn run_gd(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    change: Change<'_>,
+    staged_reuse: Option<&crate::runtime::engine::Staged>,
+) -> Result<RetrainOutput> {
+    let spec = &exes.spec;
+    let n = ds.n as f64;
+    if traj.ws.len() != hp.t + 1 || traj.gs.len() != hp.t {
+        bail!(
+            "trajectory length mismatch: ws={} gs={} hp.t={}",
+            traj.ws.len(),
+            traj.gs.len(),
+            hp.t
+        );
+    }
+    let n_new = match &change {
+        Change::Delete(r) => n - r.len() as f64,
+        Change::Add(a) => n + a.n as f64,
+    };
+    if n_new <= 0.0 {
+        bail!("deleting every sample leaves nothing to train on");
+    }
+    let t0 = std::time::Instant::now();
+    // full original dataset staged once: exact iterations evaluate the
+    // full-data gradient (needed for Δg anyway) and subtract/add the
+    // delta-row term. Callers that issue many passes over the same data
+    // (valuation, conformal, jackknife) pass a pre-staged handle.
+    let staged_local;
+    let staged_full = match staged_reuse {
+        Some(s) => s,
+        None => {
+            staged_local = exes.stage(rt, ds, &IndexSet::empty())?;
+            &staged_local
+        }
+    };
+    let mut hist = History::new(hp.m);
+    let mut w = traj.ws[0].clone();
+    let mut dw = vec![0.0f32; spec.p];
+    let (mut n_exact, mut n_approx, mut n_fallback) = (0usize, 0usize, 0usize);
+    let mut last_stats = Stats::default();
+
+    for t in 0..hp.t {
+        let eta = hp.lr_at(t) as f64;
+        let wt = &traj.ws[t];
+        let gt = &traj.gs[t];
+
+        // decide exact vs approx
+        let mut exact = hp.is_exact_iter(t);
+        let mut bv: Option<Vec<f32>> = None;
+        if !exact {
+            sub(&w, wt, &mut dw); // v = w^I_t − w_t
+            if hist.is_empty() {
+                exact = true;
+                n_fallback += 1;
+            } else if spec.model == ModelKind::Mlp
+                && hist.min_curvature().unwrap_or(0.0) < hp.curvature_min as f64
+            {
+                // Algorithm 4: the region is not locally convex enough —
+                // evaluate the gradient explicitly.
+                exact = true;
+                n_fallback += 1;
+            } else {
+                bv = hist.bv(&dw);
+                if bv.is_none() {
+                    exact = true;
+                    n_fallback += 1;
+                }
+            }
+        }
+
+        // delta-row gradient sum at the current iterate (always exact,
+        // always cheap: r ≪ n rows through the small-chunk executable)
+        let (g_delta_sum, _) = match &change {
+            Change::Delete(r) => exes.grad_sum_rows(rt, ds, r.as_slice(), &w)?,
+            Change::Add(a) => {
+                let all: Vec<usize> = (0..a.n).collect();
+                exes.grad_sum_rows(rt, a, &all, &w)?
+            }
+        };
+
+        let step_scale = -(eta / n_new) as f32;
+        if exact {
+            n_exact += 1;
+            let (g_full_sum, stats) = exes.grad_sum_staged(rt, staged_full, &w)?;
+            last_stats = stats;
+            // harvest history pair: Δw = w^I − w_t, Δg = ∇F(w^I) − ∇F(w_t)
+            sub(&w, wt, &mut dw);
+            let mut dg = g_full_sum.clone();
+            crate::util::vecmath::scale(&mut dg, (1.0 / n) as f32);
+            axpy(-1.0, gt, &mut dg);
+            if pair_ok(&dw, &dg, spec.model, hp.curvature_min) {
+                hist.push(dw.clone(), dg);
+            }
+            // exact leave-r-out (or add-r) step
+            match &change {
+                Change::Delete(_) => {
+                    axpy(step_scale, &g_full_sum, &mut w);
+                    axpy(-step_scale, &g_delta_sum, &mut w);
+                }
+                Change::Add(_) => {
+                    axpy(step_scale, &g_full_sum, &mut w);
+                    axpy(step_scale, &g_delta_sum, &mut w);
+                }
+            }
+        } else {
+            n_approx += 1;
+            // ∇F(w^I) ≈ ∇F(w_t) + B v   (full-data average)
+            let mut g_full_avg = bv.unwrap();
+            axpy(1.0, gt, &mut g_full_avg);
+            match &change {
+                Change::Delete(_) => {
+                    axpy(step_scale * n as f32, &g_full_avg, &mut w);
+                    axpy(-step_scale, &g_delta_sum, &mut w);
+                }
+                Change::Add(_) => {
+                    axpy(step_scale * n as f32, &g_full_avg, &mut w);
+                    axpy(step_scale, &g_delta_sum, &mut w);
+                }
+            }
+        }
+    }
+    Ok(RetrainOutput {
+        w,
+        seconds: t0.elapsed().as_secs_f64(),
+        n_exact,
+        n_approx,
+        n_fallback,
+        last_stats,
+    })
+}
+
+/// Batch deletion (GD mode, `hp.batch == 0`).
+pub fn delete_gd(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    removed: &IndexSet,
+) -> Result<RetrainOutput> {
+    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), None)
+}
+
+/// `delete_gd` reusing a pre-staged dataset (many-pass callers:
+/// valuation, conformal, jackknife — saves the per-call upload).
+pub fn delete_gd_staged(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    staged_full: &crate::runtime::engine::Staged,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    removed: &IndexSet,
+) -> Result<RetrainOutput> {
+    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), Some(staged_full))
+}
+
+/// Batch addition (GD mode): `added` rows join the training set.
+pub fn add_gd(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    added: &Dataset,
+) -> Result<RetrainOutput> {
+    run_gd(exes, rt, ds, traj, hp, Change::Add(added), None)
+}
+
+/// SGD batch deletion (§3, eq. S7). Requires the trajectory to carry the
+/// original minibatch schedule (`hp.batch > 0` when training).
+pub fn delete_sgd(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    removed: &IndexSet,
+) -> Result<RetrainOutput> {
+    let spec = &exes.spec;
+    if traj.batches.iter().any(|b| b.is_empty()) {
+        bail!("delete_sgd needs a minibatch schedule; trajectory was GD");
+    }
+    let t0 = std::time::Instant::now();
+    let mut hist = History::new(hp.m);
+    let mut w = traj.ws[0].clone();
+    let mut dw = vec![0.0f32; spec.p];
+    let (mut n_exact, mut n_approx, mut n_fallback) = (0usize, 0usize, 0usize);
+    let mut last_stats = Stats::default();
+
+    for t in 0..hp.t {
+        let eta = hp.lr_at(t) as f64;
+        let wt = &traj.ws[t];
+        let gt = &traj.gs[t];
+        let batch = &traj.batches[t];
+        let b = batch.len() as f64;
+        let in_r: Vec<usize> = batch.iter().copied().filter(|i| removed.contains(*i)).collect();
+        let kept: Vec<usize> = batch.iter().copied().filter(|i| !removed.contains(*i)).collect();
+        if kept.is_empty() {
+            continue; // B − ΔB_t == 0: no update this iteration (§3)
+        }
+        let b_new = kept.len() as f64;
+
+        let mut exact = hp.is_exact_iter(t);
+        let mut bv: Option<Vec<f32>> = None;
+        if !exact {
+            sub(&w, wt, &mut dw);
+            if hist.is_empty() {
+                exact = true;
+                n_fallback += 1;
+            } else if spec.model == ModelKind::Mlp
+                && hist.min_curvature().unwrap_or(0.0) < hp.curvature_min as f64
+            {
+                exact = true;
+                n_fallback += 1;
+            } else {
+                bv = hist.bv(&dw);
+                if bv.is_none() {
+                    exact = true;
+                    n_fallback += 1;
+                }
+            }
+        }
+
+        // gradient sum over the removed members of this minibatch (cheap)
+        let (g_rem_sum, _) = if in_r.is_empty() {
+            (vec![0.0f32; spec.p], Stats::default())
+        } else {
+            exes.grad_sum_rows(rt, ds, &in_r, &w)?
+        };
+
+        let step_scale = -(eta / b_new) as f32;
+        if exact {
+            n_exact += 1;
+            // full-minibatch gradient at w^I (needed for Δg anyway)
+            let (g_bt_sum, stats) = exes.grad_sum_rows(rt, ds, batch, &w)?;
+            last_stats = stats;
+            sub(&w, wt, &mut dw);
+            let mut dg = g_bt_sum.clone();
+            crate::util::vecmath::scale(&mut dg, (1.0 / b) as f32);
+            axpy(-1.0, gt, &mut dg);
+            if pair_ok(&dw, &dg, spec.model, hp.curvature_min) {
+                hist.push(dw.clone(), dg);
+            }
+            axpy(step_scale, &g_bt_sum, &mut w);
+            axpy(-step_scale, &g_rem_sum, &mut w);
+        } else {
+            n_approx += 1;
+            let mut g_bt_avg = bv.unwrap();
+            axpy(1.0, gt, &mut g_bt_avg);
+            axpy(step_scale * b as f32, &g_bt_avg, &mut w);
+            axpy(-step_scale, &g_rem_sum, &mut w);
+        }
+    }
+    Ok(RetrainOutput {
+        w,
+        seconds: t0.elapsed().as_secs_f64(),
+        n_exact,
+        n_approx,
+        n_fallback,
+        last_stats,
+    })
+}

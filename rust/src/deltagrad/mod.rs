@@ -1,0 +1,45 @@
+//! The paper's contribution: DeltaGrad rapid-retraining algorithms.
+//!
+//! * [`batch`]  — Algorithm 1 (batch deletion/addition, GD) and its SGD
+//!   extension (§3 / eq. S7).
+//! * [`online`] — Algorithm 3 (online deletion/addition with cache
+//!   rewriting, appendix C.2).
+//! * BaseL (retraining from scratch) is `train::train` with a removal set.
+//!
+//! All variants share the iteration skeleton: exact full-gradient steps
+//! during burn-in (t ≤ j0) and every T0 iterations — which also harvest
+//! (Δw, Δg) pairs for the L-BFGS history — and quasi-Newton-corrected
+//! cheap steps in between, where only the r removed/added samples'
+//! gradients are computed exactly.
+
+pub mod batch;
+pub mod online;
+
+use crate::runtime::engine::Stats;
+
+/// Outcome of one incremental retraining run.
+pub struct RetrainOutput {
+    /// updated parameters w^I
+    pub w: Vec<f32>,
+    pub seconds: f64,
+    /// iterations that computed a full (or full-minibatch) gradient
+    pub n_exact: usize,
+    /// iterations served by the quasi-Hessian approximation
+    pub n_approx: usize,
+    /// approx-eligible iterations forced exact by the Algorithm-4
+    /// curvature gate or a degenerate L-BFGS system
+    pub n_fallback: usize,
+    /// stats of the last gradient evaluation (training loss view)
+    pub last_stats: Stats,
+}
+
+/// Why an approx-eligible iteration fell back to an exact step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fallback {
+    /// not enough history pairs yet
+    NoHistory,
+    /// middle system singular / zero Δw
+    Degenerate,
+    /// curvature gate (non-convex model, Algorithm 4)
+    Curvature,
+}

@@ -1,0 +1,143 @@
+//! Shared experiment-driver plumbing: context, trained-model cache,
+//! table rendering, CSV output.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::HyperParams;
+use crate::data::{synth, Dataset, IndexSet};
+use crate::runtime::{Engine, ModelExes};
+use crate::train::{self, TrainOpts, Trajectory};
+
+/// Experiment context: engine + per-dataset trained-state cache so the
+/// expensive full training runs once per dataset per process.
+pub struct Ctx {
+    pub eng: Engine,
+    /// reduced iteration counts / repeats for the 1-core budget
+    pub quick: bool,
+    /// scale factor applied to manifest n_train when no override is given
+    /// (benches use < 1.0 to keep `cargo bench` minutes-scale)
+    pub n_scale: f64,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+    trained: BTreeMap<String, Rc<TrainedModel>>,
+}
+
+/// A fully trained model + its cached trajectory and datasets.
+pub struct TrainedModel {
+    pub exes: Rc<ModelExes>,
+    pub train_ds: Dataset,
+    pub test_ds: Dataset,
+    pub hp: HyperParams,
+    pub w_full: Vec<f32>,
+    pub traj: Trajectory,
+    /// seconds the original full training took (reported context)
+    pub train_seconds: f64,
+}
+
+impl Ctx {
+    pub fn new(quick: bool, seed: u64) -> Result<Self> {
+        let out_dir = PathBuf::from("results");
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Ctx {
+            eng: Engine::open_default()?,
+            quick,
+            n_scale: 1.0,
+            out_dir,
+            seed,
+            trained: BTreeMap::new(),
+        })
+    }
+
+    /// Per-dataset hyperparameters at this context's scale.
+    pub fn hp_for(&self, name: &str) -> HyperParams {
+        let mut hp = HyperParams::for_dataset(name);
+        if self.quick {
+            hp.t = match name {
+                "mnistnn" | "smallnn" => 100,
+                _ => 150,
+            };
+            hp.j0 = hp.j0.min(hp.t / 5).max(5);
+        }
+        hp
+    }
+
+    /// Train (once) and cache the full model for `name`; `n_override`
+    /// keys separate cache entries.
+    pub fn trained(&mut self, name: &str, n_override: Option<usize>) -> Result<Rc<TrainedModel>> {
+        let key = format!("{name}:{}", n_override.unwrap_or(0));
+        if let Some(tm) = self.trained.get(&key) {
+            return Ok(tm.clone());
+        }
+        let exes = self.eng.model(name)?;
+        let spec = exes.spec.clone();
+        let n_eff = n_override.or_else(|| {
+            (self.n_scale < 1.0)
+                .then(|| ((spec.n_train as f64 * self.n_scale) as usize).max(spec.chunk_small))
+        });
+        let (train_ds, test_ds) = synth::train_test_for_spec(&spec, self.seed, n_eff, None);
+        let hp = self.hp_for(name);
+        let out = train::train(
+            &exes,
+            &self.eng.rt,
+            &train_ds,
+            &TrainOpts::full(&hp, &IndexSet::empty()),
+        )?;
+        let tm = Rc::new(TrainedModel {
+            exes,
+            train_ds,
+            test_ds,
+            hp,
+            w_full: out.w,
+            traj: out.traj.expect("recorded"),
+            train_seconds: out.seconds,
+        });
+        self.trained.insert(key, tm.clone());
+        Ok(tm)
+    }
+
+    /// Write a CSV under results/.
+    pub fn write_csv(&self, id: &str, header: &str, rows: &[Vec<String>]) -> Result<PathBuf> {
+        let path = self.out_dir.join(format!("{id}.csv"));
+        let mut text = String::from(header);
+        text.push('\n');
+        for row in rows {
+            text.push_str(&row.join(","));
+            text.push('\n');
+        }
+        std::fs::write(&path, text)?;
+        Ok(path)
+    }
+}
+
+/// Render a markdown table.
+pub fn markdown_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = format!("\n### {title}\n\n");
+    s.push_str(&format!("| {} |\n", header.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(header.len())));
+    for row in rows {
+        s.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    s
+}
+
+/// mean ± std of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let m = xs.iter().sum::<f64>() / n;
+    let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / n.max(1.0);
+    (m, v.sqrt())
+}
+
+/// Format seconds compactly.
+pub fn fsec(s: f64) -> String {
+    format!("{s:.2}s")
+}
+
+/// Format a distance in scientific notation.
+pub fn fsci(x: f64) -> String {
+    format!("{x:.2e}")
+}

@@ -1,0 +1,98 @@
+//! Appendix D.3: comparison against the state of the art.
+//!
+//! Comparators for batch deletion:
+//!  * BaseL            — retrain from scratch (exact, slow);
+//!  * DeltaGrad        — this paper;
+//!  * Influence        — one-shot influence-function update (Koh & Liang
+//!    2017 style; cheap, but error does NOT vanish with r/n);
+//!  * WarmStart        — retrain from w* for a REDUCED number of
+//!    iterations (the common pragmatic baseline).
+
+use anyhow::Result;
+
+use crate::apps::influence::{influence_delete, InfluenceOpts};
+use crate::data::sample_removal;
+use crate::deltagrad::batch;
+use crate::train::{self, TrainOpts};
+use crate::util::vecmath::dist2;
+use crate::util::Rng;
+
+use super::common::{fsci, fsec, markdown_table, Ctx};
+
+pub fn d3(ctx: &mut Ctx) -> Result<String> {
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for name in ["covtype", "mnist"] {
+        for rate in [0.002f64, 0.01] {
+            let tm = ctx.trained(name, None)?;
+            let ds = tm.train_ds.clone();
+            let r = ((ds.n as f64) * rate).round() as usize;
+            let mut rng = Rng::new(ctx.seed ^ 0xD3);
+            let removed = sample_removal(&mut rng, ds.n, r);
+
+            let basel =
+                train::train(&tm.exes, &ctx.eng.rt, &ds, &TrainOpts::full(&tm.hp, &removed))?;
+            let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, &ds, &tm.traj, &tm.hp, &removed)?;
+            let (w_inf, inf_secs) = influence_delete(
+                &tm.exes,
+                &ctx.eng.rt,
+                &ds,
+                &tm.w_full,
+                &removed,
+                &InfluenceOpts::default(),
+            )?;
+            // warm-start: T/5 iterations from w*
+            let mut hp_ws = tm.hp.clone();
+            hp_ws.t /= 5;
+            let ws = train::train(
+                &tm.exes,
+                &ctx.eng.rt,
+                &ds,
+                &TrainOpts {
+                    hp: &hp_ws,
+                    removed: &removed,
+                    record: false,
+                    reuse_batches: None,
+                    seed: 0,
+                    init: Some(&tm.w_full),
+                },
+            )?;
+
+            for (method, secs, w) in [
+                ("BaseL", basel.seconds, &basel.w),
+                ("DeltaGrad", dg.seconds, &dg.w),
+                ("Influence", inf_secs, &w_inf),
+                ("WarmStart(T/5)", ws.seconds, &ws.w),
+            ] {
+                let dist = dist2(w, &basel.w);
+                let stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, w)?;
+                eprintln!(
+                    "  [d3] {name} r={rate}: {method} {secs:.2}s dist {dist:.2e} acc {:.4}",
+                    stats.accuracy()
+                );
+                rows.push(vec![
+                    name.to_string(),
+                    format!("{:.1}%", rate * 100.0),
+                    method.to_string(),
+                    fsec(secs),
+                    fsci(dist),
+                    format!("{:.3}", stats.accuracy() * 100.0),
+                ]);
+                csv.push(vec![
+                    name.to_string(),
+                    rate.to_string(),
+                    method.to_string(),
+                    secs.to_string(),
+                    dist.to_string(),
+                    stats.accuracy().to_string(),
+                ]);
+            }
+        }
+    }
+    ctx.write_csv("d3", "dataset,rate,method,secs,dist_to_exact,test_acc", &csv)?;
+    Ok(markdown_table(
+        "App'x D.3 (comparison vs state of the art, batch deletion)",
+        &["dataset", "rate", "method", "time", "‖w−w^U‖", "test acc (%)"],
+        &rows,
+    ))
+}

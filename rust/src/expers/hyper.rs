@@ -1,0 +1,98 @@
+//! Appendix D.2: influence of the hyperparameters T0 (exact-gradient
+//! period), j0 (burn-in) and m (history size) on DeltaGrad's
+//! speed/accuracy trade-off.
+//!
+//! Larger T0 → fewer exact iterations → faster but less anchored; the
+//! paper reports the theoretical T0× speedup eroding with L-BFGS
+//! overhead — this sweep regenerates that trade-off curve.
+
+use anyhow::Result;
+
+use crate::data::sample_removal;
+use crate::deltagrad::batch;
+use crate::train::{self, TrainOpts};
+use crate::util::vecmath::dist2;
+use crate::util::Rng;
+
+use super::common::{fsci, fsec, markdown_table, Ctx};
+
+pub fn d2(ctx: &mut Ctx) -> Result<String> {
+    let name = "mnist";
+    let rate = 0.005;
+    let tm = ctx.trained(name, None)?;
+    let ds = tm.train_ds.clone();
+    let r = ((ds.n as f64) * rate).round() as usize;
+    let mut rng = Rng::new(ctx.seed ^ 0xD2);
+    let removed = sample_removal(&mut rng, ds.n, r);
+    // one BaseL reference for the distance metric
+    let basel = train::train(&tm.exes, &ctx.eng.rt, &ds, &TrainOpts::full(&tm.hp, &removed))?;
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    // T0 sweep at fixed j0, m
+    for t0 in [2usize, 5, 10, 20] {
+        let mut hp = tm.hp.clone();
+        hp.t0 = t0;
+        let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, &ds, &tm.traj, &hp, &removed)?;
+        push_row(&mut rows, &mut csv, &format!("T0={t0}"), &hp, &dg, &basel.w, basel.seconds);
+    }
+    // j0 sweep
+    for j0 in [5usize, 10, 30, 60] {
+        let mut hp = tm.hp.clone();
+        hp.j0 = j0;
+        let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, &ds, &tm.traj, &hp, &removed)?;
+        push_row(&mut rows, &mut csv, &format!("j0={j0}"), &hp, &dg, &basel.w, basel.seconds);
+    }
+    // m sweep (the host L-BFGS handles any m <= cap; the AOT artifact is
+    // fixed at the manifest's m, so this sweep uses the host path)
+    for m in [1usize, 2, 4, 8] {
+        let mut hp = tm.hp.clone();
+        hp.m = m;
+        let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, &ds, &tm.traj, &hp, &removed)?;
+        push_row(&mut rows, &mut csv, &format!("m={m}"), &hp, &dg, &basel.w, basel.seconds);
+    }
+    ctx.write_csv("d2", "setting,t0,j0,m,dg_secs,basel_secs,dist_i_u,n_exact,n_approx", &csv)?;
+    Ok(markdown_table(
+        "App'x D.2 (hyperparameter sweep, mnist, delete 0.5%)",
+        &["setting", "DG time", "BaseL time", "speedup", "‖w^I−w^U‖", "exact/approx"],
+        &rows,
+    ))
+}
+
+fn push_row(
+    rows: &mut Vec<Vec<String>>,
+    csv: &mut Vec<Vec<String>>,
+    label: &str,
+    hp: &crate::config::HyperParams,
+    dg: &crate::deltagrad::RetrainOutput,
+    w_u: &[f32],
+    basel_secs: f64,
+) {
+    let dist = dist2(&dg.w, w_u);
+    eprintln!(
+        "  [d2] {label}: DG {:.2}s (x{:.1}) dIU={dist:.2e} exact/approx {}/{}",
+        dg.seconds,
+        basel_secs / dg.seconds.max(1e-9),
+        dg.n_exact,
+        dg.n_approx
+    );
+    rows.push(vec![
+        label.to_string(),
+        fsec(dg.seconds),
+        fsec(basel_secs),
+        format!("{:.2}x", basel_secs / dg.seconds.max(1e-9)),
+        fsci(dist),
+        format!("{}/{}", dg.n_exact, dg.n_approx),
+    ]);
+    csv.push(vec![
+        label.to_string(),
+        hp.t0.to_string(),
+        hp.j0.to_string(),
+        hp.m.to_string(),
+        dg.seconds.to_string(),
+        basel_secs.to_string(),
+        dist.to_string(),
+        dg.n_exact.to_string(),
+        dg.n_approx.to_string(),
+    ]);
+}

@@ -1,0 +1,42 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §5 index).
+//!
+//! Every driver both prints a markdown table (the paper's rows) and
+//! writes a CSV under `results/` so the run is diffable. `quick` mode
+//! (default) scales iteration counts and repeats to a single-core CPU
+//! budget; `--scale paper` restores the full sweep shapes.
+
+pub mod accuracy;
+pub mod common;
+pub mod comparison;
+pub mod convergence;
+pub mod hyper;
+pub mod online;
+pub mod rate_sweep;
+
+pub use common::Ctx;
+
+use anyhow::Result;
+
+/// Run one experiment by id; returns the rendered markdown.
+pub fn run(ctx: &mut Ctx, id: &str) -> Result<String> {
+    match id {
+        "fig1" => rate_sweep::fig1(ctx),
+        "fig2" => rate_sweep::fig2(ctx),
+        "fig3" => rate_sweep::fig3(ctx),
+        "d1" => rate_sweep::d1(ctx),
+        "tab1" => accuracy::tab1(ctx),
+        "fig4" => online::fig4(ctx),
+        "tab2" => online::tab2(ctx),
+        "d2" => hyper::d2(ctx),
+        "d3" => comparison::d3(ctx),
+        "thm1" => convergence::thm1(ctx),
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; have fig1 fig2 fig3 fig4 tab1 tab2 d1 d2 d3 thm1 all"
+        ),
+    }
+}
+
+/// All experiments in a sensible order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "tab1", "fig4", "tab2", "d1", "d2", "d3", "thm1",
+];

@@ -1,0 +1,226 @@
+//! Fig. 4 + Table 2: online deletion/addition — a stream of single-sample
+//! requests, each triggering a model update by BaseL (full retrain) or
+//! DeltaGrad (Algorithm 3 with trajectory rewriting).
+
+use anyhow::Result;
+
+use crate::data::{synth, IndexSet};
+use crate::deltagrad::online::{OnlineState, Request};
+use crate::train::{self, TrainOpts};
+use crate::util::vecmath::dist2;
+use crate::util::Rng;
+
+use super::common::{fsci, markdown_table, mean_std, Ctx};
+use super::rate_sweep::Direction;
+
+pub struct OnlineResult {
+    pub dataset: String,
+    pub direction: Direction,
+    pub requests: usize,
+    pub basel_total_secs: f64,
+    pub dg_total_secs: f64,
+    /// final-state distances (paper Table 2)
+    pub dist_star_u: f64,
+    pub dist_i_u: f64,
+    pub basel_acc: f64,
+    pub dg_acc: f64,
+}
+
+/// Run one online stream on a dataset.
+pub fn run_stream(
+    ctx: &mut Ctx,
+    name: &str,
+    dir: Direction,
+    n_requests: usize,
+    n_override: Option<usize>,
+) -> Result<OnlineResult> {
+    let tm = ctx.trained(name, n_override)?;
+    let spec = tm.exes.spec.clone();
+    let mut rng = Rng::new(ctx.seed ^ 0x0911);
+    // build the request stream
+    let victims = rng.sample_distinct(tm.train_ds.n, n_requests);
+    let additions = synth::addition_rows(&spec, ctx.seed ^ 0xADD, n_requests);
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|i| match dir {
+            Direction::Delete => Request::Delete(victims[i]),
+            Direction::Add => {
+                let x = additions.row(i).to_vec();
+                Request::Add(x, additions.y[i])
+            }
+        })
+        .collect();
+
+    // --- DeltaGrad: one OnlineState, sequential requests
+    let mut state = OnlineState::new(
+        &tm.exes,
+        &ctx.eng.rt,
+        tm.train_ds.clone(),
+        tm.traj.clone(),
+        tm.hp.clone(),
+    )?;
+    let mut dg_total = 0.0;
+    let mut w_i = tm.w_full.clone();
+    for req in &reqs {
+        let out = state.apply(&tm.exes, &ctx.eng.rt, req.clone())?;
+        dg_total += out.seconds;
+        w_i = out.w;
+    }
+
+    // --- BaseL: retrain from scratch after EVERY request
+    let mut removed = IndexSet::empty();
+    let mut added_rows = crate::data::Dataset::new(Vec::new(), Vec::new(), spec.da, spec.k);
+    let mut basel_total = 0.0;
+    let mut w_u = tm.w_full.clone();
+    for req in &reqs {
+        match req {
+            Request::Delete(i) => {
+                removed.insert(*i);
+            }
+            Request::Add(x, y) => {
+                let one = crate::data::Dataset::new(x.clone(), vec![*y], spec.da, spec.k);
+                added_rows.append(&one);
+            }
+        }
+        let mut ds = tm.train_ds.clone();
+        if added_rows.n > 0 {
+            ds.append(&added_rows);
+        }
+        let out = train::train(&tm.exes, &ctx.eng.rt, &ds, &TrainOpts::full(&tm.hp, &removed))?;
+        basel_total += out.seconds;
+        w_u = out.w;
+    }
+
+    let b_stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, &w_u)?;
+    let d_stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, &w_i)?;
+    Ok(OnlineResult {
+        dataset: name.to_string(),
+        direction: dir,
+        requests: n_requests,
+        basel_total_secs: basel_total,
+        dg_total_secs: dg_total,
+        dist_star_u: dist2(&tm.w_full, &w_u),
+        dist_i_u: dist2(&w_i, &w_u),
+        basel_acc: b_stats.accuracy(),
+        dg_acc: d_stats.accuracy(),
+    })
+}
+
+fn online_datasets(ctx: &Ctx) -> (Vec<(&'static str, Option<usize>)>, usize) {
+    if ctx.quick {
+        // smaller n keeps the 2×n_requests full retrains affordable
+        (
+            vec![
+                ("mnist", Some(4096)),
+                ("covtype", Some(8192)),
+                ("higgs", Some(16384)),
+                ("rcv1", Some(4096)),
+            ],
+            8,
+        )
+    } else {
+        (
+            vec![("mnist", None), ("covtype", None), ("higgs", None), ("rcv1", None)],
+            100,
+        )
+    }
+}
+
+thread_local! {
+    /// fig4 and tab2 report different views of the SAME stream run;
+    /// memoize so `experiment all` pays for it once.
+    static CACHE: std::cell::RefCell<Option<std::rc::Rc<Vec<OnlineResult>>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn run_all(ctx: &mut Ctx) -> Result<std::rc::Rc<Vec<OnlineResult>>> {
+    if let Some(c) = CACHE.with(|c| c.borrow().clone()) {
+        return Ok(c);
+    }
+    let (datasets, n_req) = online_datasets(ctx);
+    let mut out = Vec::new();
+    for (name, n_over) in datasets {
+        for dir in [Direction::Add, Direction::Delete] {
+            let res = run_stream(ctx, name, dir, n_req, n_over)?;
+            eprintln!(
+                "  [online] {name} {:?}: BaseL {:.1}s DG {:.1}s (x{:.1}) dIU={:.2e}",
+                dir,
+                res.basel_total_secs,
+                res.dg_total_secs,
+                res.basel_total_secs / res.dg_total_secs.max(1e-9),
+                res.dist_i_u
+            );
+            out.push(res);
+        }
+    }
+    let rc = std::rc::Rc::new(out);
+    CACHE.with(|c| *c.borrow_mut() = Some(rc.clone()));
+    Ok(rc)
+}
+
+/// Fig. 4: total running time of the online stream.
+pub fn fig4(ctx: &mut Ctx) -> Result<String> {
+    let results = run_all(ctx)?;
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for r in results.iter() {
+        rows.push(vec![
+            r.dataset.clone(),
+            format!("{:?}", r.direction),
+            r.requests.to_string(),
+            format!("{:.2}s", r.basel_total_secs),
+            format!("{:.2}s", r.dg_total_secs),
+            format!("{:.2}x", r.basel_total_secs / r.dg_total_secs.max(1e-9)),
+        ]);
+        csv.push(vec![
+            r.dataset.clone(),
+            format!("{:?}", r.direction),
+            r.requests.to_string(),
+            r.basel_total_secs.to_string(),
+            r.dg_total_secs.to_string(),
+        ]);
+    }
+    ctx.write_csv("fig4", "dataset,direction,requests,basel_secs,dg_secs", &csv)?;
+    let speedups: Vec<f64> = results
+        .iter()
+        .map(|r| r.basel_total_secs / r.dg_total_secs.max(1e-9))
+        .collect();
+    let (sm, _) = mean_std(&speedups);
+    Ok(format!(
+        "{}\nmean online speedup: {sm:.2}x\n",
+        markdown_table(
+            "Fig. 4 (online deletion/addition, total running time)",
+            &["dataset", "direction", "requests", "BaseL", "DeltaGrad", "speedup"],
+            &rows,
+        )
+    ))
+}
+
+/// Table 2: final distances + accuracies of the online stream.
+pub fn tab2(ctx: &mut Ctx) -> Result<String> {
+    let results = run_all(ctx)?;
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for r in results.iter() {
+        rows.push(vec![
+            format!("{} ({:?})", r.dataset, r.direction),
+            fsci(r.dist_star_u),
+            fsci(r.dist_i_u),
+            format!("{:.3}", r.basel_acc * 100.0),
+            format!("{:.3}", r.dg_acc * 100.0),
+        ]);
+        csv.push(vec![
+            r.dataset.clone(),
+            format!("{:?}", r.direction),
+            r.dist_star_u.to_string(),
+            r.dist_i_u.to_string(),
+            r.basel_acc.to_string(),
+            r.dg_acc.to_string(),
+        ]);
+    }
+    ctx.write_csv("tab2", "dataset,direction,dist_star_u,dist_i_u,basel_acc,dg_acc", &csv)?;
+    Ok(markdown_table(
+        "Table 2 (online: distances + prediction accuracy)",
+        &["dataset", "‖w^U−w*‖", "‖w^I−w^U‖", "BaseL acc (%)", "DeltaGrad acc (%)"],
+        &rows,
+    ))
+}

@@ -1,0 +1,181 @@
+//! Figures 1–3 + appendix D.1: running time and parameter distance as a
+//! function of the delete/add rate.
+//!
+//! For each (dataset, rate): BaseL retrains from scratch on the changed
+//! data; DeltaGrad updates incrementally from the cached trajectory. We
+//! report both running times and the two distances the figures plot:
+//! ‖w^U − w*‖ (how far the optimum moved — Θ(r/n)) and ‖w^I − w^U‖
+//! (DeltaGrad's error — o(r/n), at least an order smaller).
+
+use anyhow::Result;
+
+use crate::data::{sample_removal, synth, IndexSet};
+use crate::deltagrad::batch;
+use crate::train::{self, TrainOpts};
+use crate::util::vecmath::dist2;
+use crate::util::Rng;
+
+use super::common::{fsci, fsec, markdown_table, Ctx};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Delete,
+    Add,
+}
+
+/// One sweep point result.
+pub struct RatePoint {
+    pub dataset: String,
+    pub rate: f64,
+    pub basel_secs: f64,
+    pub dg_secs: f64,
+    pub dist_star_u: f64,
+    pub dist_i_u: f64,
+    pub basel_acc: f64,
+    pub dg_acc: f64,
+    pub n_exact: usize,
+    pub n_approx: usize,
+}
+
+/// Run one dataset × rate point.
+pub fn run_point(
+    ctx: &mut Ctx,
+    name: &str,
+    rate: f64,
+    dir: Direction,
+    removal_seed: u64,
+) -> Result<RatePoint> {
+    let tm = ctx.trained(name, None)?;
+    let ds = &tm.train_ds;
+    let r = ((ds.n as f64) * rate).round().max(0.0) as usize;
+    let mut rng = Rng::new(removal_seed);
+    let (basel, dg) = match dir {
+        Direction::Delete => {
+            let removed = if r == 0 { IndexSet::empty() } else { sample_removal(&mut rng, ds.n, r) };
+            let basel = train::train(&tm.exes, &ctx.eng.rt, ds, &TrainOpts::full(&tm.hp, &removed))?;
+            let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, ds, &tm.traj, &tm.hp, &removed)?;
+            (basel, dg)
+        }
+        Direction::Add => {
+            let added = synth::addition_rows(&tm.exes.spec, ctx.seed ^ removal_seed, r.max(1));
+            let mut plus = ds.clone();
+            plus.append(&added);
+            let basel =
+                train::train(&tm.exes, &ctx.eng.rt, &plus, &TrainOpts::full(&tm.hp, &IndexSet::empty()))?;
+            let dg = batch::add_gd(&tm.exes, &ctx.eng.rt, ds, &tm.traj, &tm.hp, &added)?;
+            (basel, dg)
+        }
+    };
+    let b_stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, &basel.w)?;
+    let d_stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, &dg.w)?;
+    Ok(RatePoint {
+        dataset: name.to_string(),
+        rate,
+        basel_secs: basel.seconds,
+        dg_secs: dg.seconds,
+        dist_star_u: dist2(&tm.w_full, &basel.w),
+        dist_i_u: dist2(&dg.w, &basel.w),
+        basel_acc: b_stats.accuracy(),
+        dg_acc: d_stats.accuracy(),
+        n_exact: dg.n_exact,
+        n_approx: dg.n_approx,
+    })
+}
+
+/// Shared sweep driver.
+pub fn sweep(
+    ctx: &mut Ctx,
+    id: &str,
+    title: &str,
+    datasets: &[&str],
+    rates: &[f64],
+    dir: Direction,
+) -> Result<String> {
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for name in datasets {
+        for (i, &rate) in rates.iter().enumerate() {
+            let pt = run_point(ctx, name, rate, dir, ctx.seed ^ (i as u64 + 1))?;
+            eprintln!(
+                "  [{id}] {name} rate={rate:.4}: BaseL {:.2}s DG {:.2}s (x{:.1}) d*U={:.2e} dIU={:.2e}",
+                pt.basel_secs,
+                pt.dg_secs,
+                pt.basel_secs / pt.dg_secs.max(1e-9),
+                pt.dist_star_u,
+                pt.dist_i_u
+            );
+            rows.push(vec![
+                pt.dataset.clone(),
+                format!("{:.4}", pt.rate),
+                fsec(pt.basel_secs),
+                fsec(pt.dg_secs),
+                format!("{:.2}x", pt.basel_secs / pt.dg_secs.max(1e-9)),
+                fsci(pt.dist_star_u),
+                fsci(pt.dist_i_u),
+                format!("{:.4}", pt.basel_acc),
+                format!("{:.4}", pt.dg_acc),
+            ]);
+            csv.push(vec![
+                pt.dataset.clone(),
+                pt.rate.to_string(),
+                pt.basel_secs.to_string(),
+                pt.dg_secs.to_string(),
+                pt.dist_star_u.to_string(),
+                pt.dist_i_u.to_string(),
+                pt.basel_acc.to_string(),
+                pt.dg_acc.to_string(),
+                pt.n_exact.to_string(),
+                pt.n_approx.to_string(),
+            ]);
+        }
+    }
+    ctx.write_csv(
+        id,
+        "dataset,rate,basel_secs,dg_secs,dist_star_u,dist_i_u,basel_acc,dg_acc,n_exact,n_approx",
+        &csv,
+    )?;
+    Ok(markdown_table(
+        title,
+        &[
+            "dataset", "rate", "BaseL time", "DeltaGrad time", "speedup", "‖w*−w^U‖",
+            "‖w^I−w^U‖", "BaseL acc", "DG acc",
+        ],
+        &rows,
+    ))
+}
+
+fn default_rates(ctx: &Ctx) -> Vec<f64> {
+    if ctx.quick {
+        vec![0.0005, 0.002, 0.005, 0.01]
+    } else {
+        vec![0.00005, 0.0002, 0.0005, 0.001, 0.002, 0.005, 0.01]
+    }
+}
+
+/// Fig. 1: RCV1 running time + distance vs delete AND add rate.
+pub fn fig1(ctx: &mut Ctx) -> Result<String> {
+    let rates = default_rates(ctx);
+    let del = sweep(ctx, "fig1_delete", "Fig. 1 (RCV1, delete)", &["rcv1"], &rates, Direction::Delete)?;
+    let add = sweep(ctx, "fig1_add", "Fig. 1 (RCV1, add)", &["rcv1"], &rates, Direction::Add)?;
+    Ok(format!("{del}{add}"))
+}
+
+const FIG23_DATASETS: &[&str] = &["mnist", "covtype", "higgs", "rcv1", "mnistnn"];
+
+/// Fig. 2: add-rate sweep over all five dataset panels.
+pub fn fig2(ctx: &mut Ctx) -> Result<String> {
+    let rates = default_rates(ctx);
+    sweep(ctx, "fig2", "Fig. 2 (running time & distance vs add rate)", FIG23_DATASETS, &rates, Direction::Add)
+}
+
+/// Fig. 3: delete-rate sweep over all five dataset panels.
+pub fn fig3(ctx: &mut Ctx) -> Result<String> {
+    let rates = default_rates(ctx);
+    sweep(ctx, "fig3", "Fig. 3 (running time & distance vs delete rate)", FIG23_DATASETS, &rates, Direction::Delete)
+}
+
+/// Appendix D.1: large deletion rates (r ≪ n no longer holds).
+pub fn d1(ctx: &mut Ctx) -> Result<String> {
+    let rates = [0.02, 0.05, 0.1, 0.2];
+    sweep(ctx, "d1", "App'x D.1 (large delete rates, covtype)", &["covtype"], &rates, Direction::Delete)
+}

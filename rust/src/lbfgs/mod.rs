@@ -1,0 +1,310 @@
+//! L-BFGS substrate: (Δw, Δg) history ring buffer + compact-form
+//! quasi-Hessian–vector product on the host.
+//!
+//! DeltaGrad approximates the full-data gradient at the corrected iterate
+//! via `∇F(w^I_t) ≈ ∇F(w_t) + B (w^I_t − w_t)` where B is the L-BFGS
+//! quasi-Hessian built from history pairs collected at *exact* iterations
+//! (paper Algorithm 1 l.8–10, Algorithm 2, §A.2.1).
+//!
+//! Per the paper's Discussion (small-matrix ops don't pay for GPU
+//! shipping), the O(m²p) contractions + O(m³) solve run natively here;
+//! `ModelExes::lbfgs_bv_artifact` provides the accelerator variant for
+//! the `abl-lbfgs-host` ablation.
+
+use crate::util::vecmath::{dot, solve_dense};
+
+/// Ring buffer of the last `m` (Δw, Δg) pairs, oldest first.
+#[derive(Clone, Debug)]
+pub struct History {
+    m: usize,
+    dws: Vec<Vec<f32>>,
+    dgs: Vec<Vec<f32>>,
+}
+
+impl History {
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1);
+        History { m, dws: Vec::new(), dgs: Vec::new() }
+    }
+
+    /// Push a pair; evicts the oldest beyond capacity (Alg. 1: "removing
+    /// the oldest entry ... at every period").
+    pub fn push(&mut self, dw: Vec<f32>, dg: Vec<f32>) {
+        assert_eq!(dw.len(), dg.len());
+        self.dws.push(dw);
+        self.dgs.push(dg);
+        if self.dws.len() > self.m {
+            self.dws.remove(0);
+            self.dgs.remove(0);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dws.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dws.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.m
+    }
+
+    pub fn pairs(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.dws, &self.dgs)
+    }
+
+    pub fn clear(&mut self) {
+        self.dws.clear();
+        self.dgs.clear();
+    }
+
+    /// Minimum curvature ratio Δg·Δw / ‖Δw‖² across stored pairs — the
+    /// Algorithm-4 convexity gate for non-convex models. Returns None when
+    /// empty.
+    pub fn min_curvature(&self) -> Option<f64> {
+        if self.is_empty() {
+            return None;
+        }
+        let mut min = f64::MAX;
+        for (dw, dg) in self.dws.iter().zip(&self.dgs) {
+            let sw = dot(dw, dw);
+            if sw == 0.0 {
+                return Some(0.0);
+            }
+            min = min.min(dot(dg, dw) / sw);
+        }
+        Some(min)
+    }
+
+    /// Compact-form B·v (Byrd, Nocedal & Schnabel 1994 Thm 2.3; oracle:
+    /// python ref.lbfgs_hvp_ref). Falls back to `None` when the middle
+    /// system is singular (caller then evaluates the gradient exactly).
+    pub fn bv(&self, v: &[f32]) -> Option<Vec<f32>> {
+        let m = self.dws.len();
+        if m == 0 {
+            return None;
+        }
+        let p = v.len();
+        let s = &self.dws;
+        let y = &self.dgs;
+        // sigma from the last pair
+        let sl = &s[m - 1];
+        let yl = &y[m - 1];
+        let ss_last = dot(sl, sl);
+        if ss_last == 0.0 {
+            return None;
+        }
+        let sigma = dot(yl, sl) / ss_last;
+        // middle matrix blocks
+        let mut sts = vec![0.0f64; m * m]; // S^T S
+        let mut sty = vec![0.0f64; m * m]; // S^T Y
+        for i in 0..m {
+            for j in 0..m {
+                sts[i * m + j] = dot(&s[i], &s[j]);
+                sty[i * m + j] = dot(&s[i], &y[j]);
+            }
+        }
+        let n2 = 2 * m;
+        let mut mmat = vec![0.0f64; n2 * n2];
+        for i in 0..m {
+            for j in 0..m {
+                mmat[i * n2 + j] = sigma * sts[i * m + j];
+                // L: strictly lower part of S^T Y
+                mmat[i * n2 + (m + j)] = if i > j { sty[i * m + j] } else { 0.0 };
+                // L^T
+                mmat[(m + i) * n2 + j] = if j > i { sty[j * m + i] } else { 0.0 };
+                // -D
+                mmat[(m + i) * n2 + (m + j)] = if i == j { -sty[i * m + i] } else { 0.0 };
+            }
+        }
+        let mut q = vec![0.0f64; n2];
+        for i in 0..m {
+            q[i] = sigma * dot(&s[i], v);
+            q[m + i] = dot(&y[i], v);
+        }
+        solve_dense(&mut mmat, &mut q).ok()?;
+        // Bv = sigma*v - sigma*S c1 - Y c2
+        let mut out = vec![0.0f32; p];
+        for (o, vi) in out.iter_mut().zip(v) {
+            *o = sigma as f32 * vi;
+        }
+        for i in 0..m {
+            let c1 = (sigma * q[i]) as f32;
+            let c2 = q[m + i] as f32;
+            for (j, o) in out.iter_mut().enumerate() {
+                *o -= c1 * s[i][j] + c2 * y[i][j];
+            }
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// History pairs consistent with an SPD Hessian H: dg = H dw.
+    fn curvature_pairs(seed: u64, m: usize, p: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f64>>) {
+        let mut rng = Rng::new(seed);
+        // H = A A^T / p + I
+        let a: Vec<f64> = (0..p * p).map(|_| rng.gaussian()).collect();
+        let mut h = vec![vec![0.0f64; p]; p];
+        for i in 0..p {
+            for j in 0..p {
+                let mut acc = if i == j { 1.0 } else { 0.0 };
+                for k in 0..p {
+                    acc += a[i * p + k] * a[j * p + k] / p as f64;
+                }
+                h[i][j] = acc;
+            }
+        }
+        let mut dws = Vec::new();
+        let mut dgs = Vec::new();
+        for _ in 0..m {
+            let dw: Vec<f32> = (0..p).map(|_| rng.gaussian_f32()).collect();
+            let mut dg = vec![0.0f32; p];
+            for i in 0..p {
+                let mut acc = 0.0f64;
+                for j in 0..p {
+                    acc += h[i][j] * dw[j] as f64;
+                }
+                dg[i] = acc as f32;
+            }
+            dws.push(dw);
+            dgs.push(dg);
+        }
+        (dws, dgs, h)
+    }
+
+    fn filled(seed: u64, m: usize, p: usize) -> History {
+        let (dws, dgs, _) = curvature_pairs(seed, m, p);
+        let mut h = History::new(m);
+        for (dw, dg) in dws.into_iter().zip(dgs) {
+            h.push(dw, dg);
+        }
+        h
+    }
+
+    #[test]
+    fn ring_buffer_evicts_oldest() {
+        let mut h = History::new(2);
+        h.push(vec![1.0], vec![1.0]);
+        h.push(vec![2.0], vec![2.0]);
+        h.push(vec![3.0], vec![3.0]);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.pairs().0[0], vec![2.0]);
+        assert_eq!(h.pairs().0[1], vec![3.0]);
+    }
+
+    #[test]
+    fn secant_equation_holds() {
+        // B s_last == y_last (defining quasi-Newton property)
+        for m in 1..=4 {
+            let h = filled(42 + m as u64, m, 30);
+            let (dws, dgs) = h.pairs();
+            let bs = h.bv(&dws[m - 1]).unwrap();
+            let want = &dgs[m - 1];
+            for i in 0..30 {
+                let denom = want.iter().map(|x| x.abs()).fold(1.0f32, f32::max);
+                assert!(
+                    (bs[i] - want[i]).abs() / denom < 1e-3,
+                    "m={m} i={i}: {} vs {}",
+                    bs[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dense_bfgs_recursion() {
+        // iterated rank-2 BFGS updates (paper eq. S11) == compact form
+        let m = 3;
+        let p = 16;
+        let (dws, dgs, _) = curvature_pairs(7, m, p);
+        // dense recursion with B0 = sigma I
+        let sl = &dws[m - 1];
+        let yl = &dgs[m - 1];
+        let sigma = dot(yl, sl) / dot(sl, sl);
+        let mut b = vec![vec![0.0f64; p]; p];
+        for (i, row) in b.iter_mut().enumerate() {
+            row[i] = sigma;
+        }
+        for (s, y) in dws.iter().zip(&dgs) {
+            let bs: Vec<f64> = (0..p)
+                .map(|i| (0..p).map(|j| b[i][j] * s[j] as f64).sum())
+                .collect();
+            let sbs: f64 = (0..p).map(|i| s[i] as f64 * bs[i]).sum();
+            let ys = dot(y, s);
+            for i in 0..p {
+                for j in 0..p {
+                    b[i][j] += -bs[i] * bs[j] / sbs + (y[i] as f64) * (y[j] as f64) / ys;
+                }
+            }
+        }
+        let mut h = History::new(m);
+        for (dw, dg) in dws.iter().zip(&dgs) {
+            h.push(dw.clone(), dg.clone());
+        }
+        let mut rng = Rng::new(99);
+        let v: Vec<f32> = (0..p).map(|_| rng.gaussian_f32()).collect();
+        let got = h.bv(&v).unwrap();
+        let want: Vec<f64> = (0..p)
+            .map(|i| (0..p).map(|j| b[i][j] * v[j] as f64).sum())
+            .collect();
+        let denom = want.iter().map(|x| x.abs()).fold(1.0f64, f64::max);
+        for i in 0..p {
+            assert!(
+                ((got[i] as f64) - want[i]).abs() / denom < 1e-3,
+                "i={i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn positive_definite_on_curvature_pairs() {
+        // v^T B v > 0 (paper Lemma 6: quasi-Hessians well-conditioned)
+        let h = filled(3, 2, 25);
+        let mut rng = Rng::new(17);
+        for _ in 0..25 {
+            let v: Vec<f32> = (0..25).map(|_| rng.gaussian_f32()).collect();
+            let bv = h.bv(&v).unwrap();
+            assert!(dot(&v, &bv) > 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_history_returns_none() {
+        let h = History::new(2);
+        assert!(h.bv(&[1.0, 2.0]).is_none());
+        assert!(h.min_curvature().is_none());
+    }
+
+    #[test]
+    fn curvature_gate_detects_nonconvex_pairs() {
+        let mut h = History::new(2);
+        h.push(vec![1.0, 0.0], vec![1.0, 0.0]); // curvature 1
+        h.push(vec![0.0, 1.0], vec![0.0, -0.5]); // curvature -0.5
+        let c = h.min_curvature().unwrap();
+        assert!((c + 0.5).abs() < 1e-9, "{c}");
+    }
+
+    #[test]
+    fn singular_system_returns_none() {
+        let mut h = History::new(2);
+        // duplicate pairs -> singular middle matrix
+        h.push(vec![1.0, 1.0], vec![1.0, 1.0]);
+        h.push(vec![1.0, 1.0], vec![1.0, 1.0]);
+        // may be singular; must not panic
+        let _ = h.bv(&[1.0, 2.0]);
+        // zero dw -> definitely None
+        let mut h2 = History::new(1);
+        h2.push(vec![0.0, 0.0], vec![1.0, 1.0]);
+        assert!(h2.bv(&[1.0, 0.0]).is_none());
+    }
+}

@@ -1,0 +1,32 @@
+//! # DeltaGrad — rapid retraining of machine learning models
+//!
+//! From-scratch reproduction of *DeltaGrad: Rapid retraining of machine
+//! learning models* (Wu, Dobriban, Davidson — ICML 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)**: Pallas kernels + JAX entry points, AOT-lowered
+//!   to HLO text (`python/compile`, `make artifacts`).
+//! * **L3 (this crate)**: PJRT runtime, data substrate, GD/SGD trainer with
+//!   trajectory cache, L-BFGS, the DeltaGrad algorithms (batch / online /
+//!   SGD / non-convex fallback), BaseL, an unlearning service, the paper's
+//!   applications, and the experiment drivers that regenerate every table
+//!   and figure.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod apps;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod deltagrad;
+pub mod expers;
+pub mod lbfgs;
+pub mod runtime;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+pub use config::{HyperParams, ModelSpec};
+pub use data::{Dataset, IndexSet};
+pub use runtime::{Engine, ModelExes};

@@ -1,0 +1,204 @@
+//! `deltagrad` CLI: the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser — clap is unavailable offline):
+//!   list                         show dataset configs from the manifest
+//!   train --model M [--t N]      train + evaluate one model
+//!   delete --model M --rate R    one batch deletion: BaseL vs DeltaGrad
+//!   serve --model M --requests N run the unlearning service demo
+//!   experiment <id>|all [--scale quick|paper] [--seed S]
+//!                                regenerate a paper table/figure
+
+use anyhow::{Context, Result};
+
+use deltagrad::config::HyperParams;
+use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
+use deltagrad::data::{sample_removal, synth, IndexSet};
+use deltagrad::deltagrad::batch;
+use deltagrad::deltagrad::online::Request;
+use deltagrad::expers::{self, Ctx};
+use deltagrad::runtime::Engine;
+use deltagrad::train::{self, TrainOpts};
+use deltagrad::util::vecmath::dist2;
+use deltagrad::util::Rng;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+    fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => cmd_list(),
+        Some("train") => cmd_train(&args),
+        Some("delete") => cmd_delete(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        _ => {
+            eprintln!(
+                "usage: deltagrad <list|train|delete|serve|experiment> [flags]\n\
+                 experiments: {} all",
+                expers::ALL.join(" ")
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    let eng = Engine::open_default()?;
+    println!("available configs (artifacts/manifest.txt):");
+    for name in eng.spec_names() {
+        let s = eng.spec(&name)?;
+        println!(
+            "  {name:10} model={:?} d={} k={} p={} chunk={} n_train={}",
+            s.model, s.d, s.k, s.p, s.chunk, s.n_train
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.flag("model").unwrap_or("small").to_string();
+    let mut eng = Engine::open_default()?;
+    let exes = eng.model(&model)?;
+    let spec = exes.spec.clone();
+    let (tr, te) = synth::train_test_for_spec(&spec, args.usize_flag("seed", 7)? as u64, None, None);
+    let mut hp = HyperParams::for_dataset(&model);
+    hp.t = args.usize_flag("t", hp.t)?;
+    let out = train::train(&exes, &eng.rt, &tr, &TrainOpts::full(&hp, &IndexSet::empty()))?;
+    let s_tr = train::evaluate(&exes, &eng.rt, &tr, &out.w)?;
+    let s_te = train::evaluate(&exes, &eng.rt, &te, &out.w)?;
+    println!(
+        "{model}: T={} train {:.2}s | train loss {:.4} acc {:.4} | test acc {:.4} | cached {} MB",
+        hp.t,
+        out.seconds,
+        s_tr.mean_loss(),
+        s_tr.accuracy(),
+        s_te.accuracy(),
+        out.traj.map(|t| t.approx_bytes() / (1 << 20)).unwrap_or(0)
+    );
+    Ok(())
+}
+
+fn cmd_delete(args: &Args) -> Result<()> {
+    let model = args.flag("model").unwrap_or("small").to_string();
+    let rate: f64 = args.flag("rate").unwrap_or("0.005").parse()?;
+    let seed = args.usize_flag("seed", 7)? as u64;
+    let mut eng = Engine::open_default()?;
+    let exes = eng.model(&model)?;
+    let spec = exes.spec.clone();
+    let (tr, te) = synth::train_test_for_spec(&spec, seed, None, None);
+    let hp = HyperParams::for_dataset(&model);
+    println!("training {model} (T={}) ...", hp.t);
+    let full = train::train(&exes, &eng.rt, &tr, &TrainOpts::full(&hp, &IndexSet::empty()))?;
+    let traj = full.traj.unwrap();
+    let r = ((tr.n as f64) * rate).round().max(1.0) as usize;
+    let removed = sample_removal(&mut Rng::new(seed ^ 1), tr.n, r);
+    println!("deleting {r} rows ({:.3}%)", rate * 100.0);
+    let basel = train::train(&exes, &eng.rt, &tr, &TrainOpts::full(&hp, &removed))?;
+    let dg = batch::delete_gd(&exes, &eng.rt, &tr, &traj, &hp, &removed)?;
+    let b = train::evaluate(&exes, &eng.rt, &te, &basel.w)?;
+    let d = train::evaluate(&exes, &eng.rt, &te, &dg.w)?;
+    println!(
+        "BaseL     {:.2}s  test acc {:.4}\n\
+         DeltaGrad {:.2}s  test acc {:.4}  ({:.2}x speedup, {} exact / {} approx iters)\n\
+         ‖w*−w^U‖ = {:.3e}   ‖w^I−w^U‖ = {:.3e}",
+        basel.seconds,
+        b.accuracy(),
+        dg.seconds,
+        d.accuracy(),
+        basel.seconds / dg.seconds.max(1e-9),
+        dg.n_exact,
+        dg.n_approx,
+        dist2(&full.w, &basel.w),
+        dist2(&dg.w, &basel.w),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.flag("model").unwrap_or("small").to_string();
+    let n_req = args.usize_flag("requests", 10)?;
+    let mut hp = HyperParams::for_dataset(&model);
+    hp.t = args.usize_flag("t", hp.t.min(100))?;
+    println!("spawning unlearning service for {model} ...");
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        model: model.clone(),
+        seed: 7,
+        n_train: None,
+        n_test: None,
+        hp,
+        policy: BatchPolicy::default(),
+    })?;
+    let snap = svc.snapshot()?;
+    println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
+    // fire a burst of async deletions to exercise group-commit
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| svc.update_async(Request::Delete(i)))
+        .collect::<Result<_>>()?;
+    for rx in rxs {
+        let rep = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "  committed v{} (group of {}, pass {:.2}s, {} exact / {} approx)",
+            rep.version, rep.group_size, rep.pass_seconds, rep.n_exact, rep.n_approx
+        );
+    }
+    let snap = svc.snapshot()?;
+    println!("final v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
+    println!("metrics: {}", svc.metrics()?.render());
+    svc.shutdown()
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let quick = args.flag("scale").unwrap_or("quick") != "paper";
+    let seed = args.usize_flag("seed", 7)? as u64;
+    let mut ctx = Ctx::new(quick, seed)?;
+    let ids: Vec<&str> = if id == "all" { expers::ALL.to_vec() } else { vec![id] };
+    for id in ids {
+        eprintln!("=== experiment {id} (scale={}) ===", if quick { "quick" } else { "paper" });
+        let t0 = std::time::Instant::now();
+        let md = expers::run(&mut ctx, id)?;
+        println!("{md}");
+        let path = ctx.out_dir.join(format!("{id}.md"));
+        std::fs::write(&path, &md)?;
+        eprintln!("=== {id} done in {:.1}s -> {path:?} ===", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

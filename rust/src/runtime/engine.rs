@@ -1,0 +1,310 @@
+//! Engine: compiled-artifact registry + chunked gradient/HVP execution.
+//!
+//! This is the bridge between the L3 coordinator and the L1/L2 compute:
+//! every gradient DeltaGrad ever takes flows through `ModelExes` calls to
+//! AOT-compiled executables. Datasets are *staged* once as device buffers
+//! (X / one-hot Y per chunk); per-iteration work uploads only the current
+//! parameter vector (and, for removals, refreshed masks) — the same
+//! "don't re-ship the dataset" discipline the paper's Discussion section
+//! identifies as the GPU bottleneck.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::{exec_tuple, literal_f32, Runtime};
+use crate::config::{self, ModelSpec};
+use crate::data::{Dataset, IndexSet};
+
+/// Masked-sum statistics returned by the grad artifacts:
+/// `[loss_sum, correct, cnt, gnorm2]`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Stats {
+    pub loss_sum: f64,
+    pub correct: f64,
+    pub cnt: f64,
+    pub gnorm2: f64,
+}
+
+impl Stats {
+    fn from_vec(v: &[f32]) -> Self {
+        Stats {
+            loss_sum: v[0] as f64,
+            correct: v[1] as f64,
+            cnt: v[2] as f64,
+            gnorm2: v[3] as f64,
+        }
+    }
+
+    pub fn accumulate(&mut self, o: &Stats) {
+        self.loss_sum += o.loss_sum;
+        self.correct += o.correct;
+        self.cnt += o.cnt;
+        self.gnorm2 += o.gnorm2; // per-chunk ||g_chunk||²; diagnostic only
+    }
+
+    /// Mean loss over the counted rows.
+    pub fn mean_loss(&self) -> f64 {
+        if self.cnt > 0.0 {
+            self.loss_sum / self.cnt
+        } else {
+            0.0
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.cnt > 0.0 {
+            self.correct / self.cnt
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The compiled executables for one dataset family.
+pub struct ModelExes {
+    pub spec: ModelSpec,
+    grad: xla::PjRtLoadedExecutable,
+    grad_small: xla::PjRtLoadedExecutable,
+    hvp: xla::PjRtLoadedExecutable,
+    lbfgs: xla::PjRtLoadedExecutable,
+}
+
+/// One staged (device-resident) chunk of a dataset.
+struct StagedChunk {
+    x: xla::PjRtBuffer,
+    y: xla::PjRtBuffer,
+    mask: xla::PjRtBuffer,
+    mask_host: Vec<f32>,
+}
+
+/// A dataset staged on device for repeated full-gradient passes.
+pub struct Staged {
+    chunks: Vec<StagedChunk>,
+    pub n: usize,
+    chunk: usize,
+}
+
+impl ModelExes {
+    /// Compile all four artifacts for `spec` from `dir`.
+    pub fn load(rt: &Runtime, dir: &std::path::Path, spec: &ModelSpec) -> Result<Self> {
+        let load = |entry: &str| rt.load(&spec.artifact_path(dir, entry));
+        Ok(ModelExes {
+            spec: spec.clone(),
+            grad: load("grad")?,
+            grad_small: load("grad_small")?,
+            hvp: load("hvp")?,
+            lbfgs: load("lbfgs")?,
+        })
+    }
+
+    /// Stage a dataset (with `removed` rows masked out) as device buffers.
+    pub fn stage(&self, rt: &Runtime, ds: &Dataset, removed: &IndexSet) -> Result<Staged> {
+        let spec = &self.spec;
+        if ds.da != spec.da || ds.k != spec.k {
+            bail!(
+                "dataset shape ({}, {}) does not match spec {} ({}, {})",
+                ds.da, ds.k, spec.name, spec.da, spec.k
+            );
+        }
+        let c = spec.chunk;
+        let mut chunks = Vec::with_capacity(ds.n_chunks(c));
+        for ci in 0..ds.n_chunks(c) {
+            let (x, y, mask) = ds.chunk_padded(ci, c, removed);
+            chunks.push(StagedChunk {
+                x: rt.upload(&x, &[c, spec.da])?,
+                y: rt.upload(&y, &[c, spec.k])?,
+                mask: rt.upload(&mask, &[c])?,
+                mask_host: mask,
+            });
+        }
+        Ok(Staged { chunks, n: ds.n, chunk: c })
+    }
+
+    /// Update the removal masks of a staged dataset in place; only chunks
+    /// whose mask changed are re-uploaded.
+    pub fn update_removed(
+        &self,
+        rt: &Runtime,
+        staged: &mut Staged,
+        ds: &Dataset,
+        removed: &IndexSet,
+    ) -> Result<usize> {
+        let c = staged.chunk;
+        let mut reuploaded = 0;
+        for (ci, sc) in staged.chunks.iter_mut().enumerate() {
+            let lo = ci * c;
+            let hi = ((ci + 1) * c).min(ds.n);
+            let mut mask = vec![0.0f32; c];
+            for (r, slot) in mask.iter_mut().enumerate().take(hi - lo) {
+                *slot = if removed.contains(lo + r) { 0.0 } else { 1.0 };
+            }
+            if mask != sc.mask_host {
+                sc.mask = rt.upload(&mask, &[c])?;
+                sc.mask_host = mask;
+                reuploaded += 1;
+            }
+        }
+        Ok(reuploaded)
+    }
+
+    /// Masked-SUM gradient over all staged chunks.
+    /// Returns (sum of per-sample gradients incl. per-sample L2, stats).
+    pub fn grad_sum_staged(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Stats)> {
+        let spec = &self.spec;
+        debug_assert_eq!(w.len(), spec.p);
+        let wbuf = rt.upload(w, &[spec.p])?;
+        let mut g = vec![0.0f32; spec.p];
+        let mut stats = Stats::default();
+        for sc in &staged.chunks {
+            let outs = exec_tuple(&self.grad, &[&wbuf, &sc.x, &sc.y, &sc.mask])?;
+            let gc = literal_f32(&outs[0])?;
+            let sv = literal_f32(&outs[1])?;
+            crate::util::vecmath::axpy(1.0, &gc, &mut g);
+            stats.accumulate(&Stats::from_vec(&sv));
+        }
+        Ok((g, stats))
+    }
+
+    /// Masked-SUM gradient over an explicit row subset (gathers rows into
+    /// `chunk_small`-padded calls of the `grad_small` executable).
+    pub fn grad_sum_rows(
+        &self,
+        rt: &Runtime,
+        ds: &Dataset,
+        idxs: &[usize],
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Stats)> {
+        let spec = &self.spec;
+        let cs = spec.chunk_small;
+        let wbuf = rt.upload(w, &[spec.p])?;
+        let mut g = vec![0.0f32; spec.p];
+        let mut stats = Stats::default();
+        for (x, y, mask) in ds.gather_padded(idxs, cs) {
+            let xb = rt.upload(&x, &[cs, spec.da])?;
+            let yb = rt.upload(&y, &[cs, spec.k])?;
+            let mb = rt.upload(&mask, &[cs])?;
+            let outs = exec_tuple(&self.grad_small, &[&wbuf, &xb, &yb, &mb])?;
+            let gc = literal_f32(&outs[0])?;
+            let sv = literal_f32(&outs[1])?;
+            crate::util::vecmath::axpy(1.0, &gc, &mut g);
+            stats.accumulate(&Stats::from_vec(&sv));
+        }
+        Ok((g, stats))
+    }
+
+    /// Exact masked-SUM Hessian-vector product over a row subset.
+    /// (The hvp artifact takes no labels: the softmax-CE Hessian is
+    /// label-independent, so a y parameter would be pruned by XLA.)
+    pub fn hvp_sum_rows(
+        &self,
+        rt: &Runtime,
+        ds: &Dataset,
+        idxs: &[usize],
+        w: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        let spec = &self.spec;
+        let cs = spec.chunk_small;
+        let wbuf = rt.upload(w, &[spec.p])?;
+        let vbuf = rt.upload(v, &[spec.p])?;
+        let mut hv = vec![0.0f32; spec.p];
+        for (x, _y, mask) in ds.gather_padded(idxs, cs) {
+            let xb = rt.upload(&x, &[cs, spec.da])?;
+            let mb = rt.upload(&mask, &[cs])?;
+            let outs = exec_tuple(&self.hvp, &[&wbuf, &vbuf, &xb, &mb])?;
+            let hc = literal_f32(&outs[0])?;
+            crate::util::vecmath::axpy(1.0, &hc, &mut hv);
+        }
+        Ok(hv)
+    }
+
+    /// Quasi-Hessian product B·v via the AOT L-BFGS artifact
+    /// (abl-lbfgs-host ablation; the hot path uses lbfgs::compact).
+    pub fn lbfgs_bv_artifact(
+        &self,
+        rt: &Runtime,
+        dws: &[Vec<f32>],
+        dgs: &[Vec<f32>],
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        let spec = &self.spec;
+        if dws.len() != spec.m || dgs.len() != spec.m {
+            bail!(
+                "lbfgs artifact expects exactly m={} history pairs, got {}",
+                spec.m,
+                dws.len()
+            );
+        }
+        let flat = |rows: &[Vec<f32>]| -> Vec<f32> {
+            let mut out = Vec::with_capacity(spec.m * spec.p);
+            for r in rows {
+                out.extend_from_slice(r);
+            }
+            out
+        };
+        let dwb = rt.upload(&flat(dws), &[spec.m, spec.p])?;
+        let dgb = rt.upload(&flat(dgs), &[spec.m, spec.p])?;
+        let vb = rt.upload(v, &[spec.p])?;
+        let outs = exec_tuple(&self.lbfgs, &[&dwb, &dgb, &vb])?;
+        literal_f32(&outs[0])
+    }
+
+    /// Evaluate mean loss / accuracy of `w` on a staged dataset.
+    pub fn eval_staged(&self, rt: &Runtime, staged: &Staged, w: &[f32]) -> Result<Stats> {
+        let (_, stats) = self.grad_sum_staged(rt, staged, w)?;
+        Ok(stats)
+    }
+}
+
+/// Top-level handle: runtime + manifest + lazily compiled model families.
+pub struct Engine {
+    pub rt: Runtime,
+    dir: std::path::PathBuf,
+    specs: BTreeMap<String, ModelSpec>,
+    loaded: BTreeMap<String, std::rc::Rc<ModelExes>>,
+}
+
+impl Engine {
+    /// Open the default artifacts directory (see config::artifacts_dir).
+    pub fn open_default() -> Result<Self> {
+        let dir = config::artifacts_dir()?;
+        Self::open(&dir)
+    }
+
+    pub fn open(dir: &std::path::Path) -> Result<Self> {
+        let specs = config::parse_manifest(&dir.join("manifest.txt"))?;
+        Ok(Engine {
+            rt: Runtime::cpu()?,
+            dir: dir.to_path_buf(),
+            specs,
+            loaded: BTreeMap::new(),
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ModelSpec> {
+        self.specs
+            .get(name)
+            .with_context(|| format!("unknown config {name:?}; have {:?}", self.spec_names()))
+    }
+
+    pub fn spec_names(&self) -> Vec<String> {
+        self.specs.keys().cloned().collect()
+    }
+
+    /// Compile (once) and return the executables for a config.
+    pub fn model(&mut self, name: &str) -> Result<std::rc::Rc<ModelExes>> {
+        if let Some(m) = self.loaded.get(name) {
+            return Ok(m.clone());
+        }
+        let spec = self.spec(name)?.clone();
+        let exes = std::rc::Rc::new(ModelExes::load(&self.rt, &self.dir, &spec)?);
+        self.loaded.insert(name.to_string(), exes.clone());
+        Ok(exes)
+    }
+}

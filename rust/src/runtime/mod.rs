@@ -1,0 +1,59 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the Rust hot path. Python never runs here.
+//!
+//! Layout mirrors /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
+//! Entry points were lowered with return_tuple=True, so every result is a
+//! root tuple whose elements are the jax outputs in order.
+
+pub mod engine;
+
+pub use engine::{Engine, ModelExes};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+
+    /// Upload a host f32 slice as a device buffer with the given dims.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading host buffer")
+    }
+}
+
+/// Execute with buffer args and decompose the root tuple into the list of
+/// output literals.
+pub fn exec_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<Vec<xla::Literal>> {
+    let out = exe.execute_b(args).context("executing artifact")?;
+    let lit = out[0][0].to_literal_sync().context("fetching result")?;
+    lit.to_tuple().context("decomposing root tuple")
+}
+
+/// Read a rank-N f32 literal into a Vec.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("reading f32 literal")
+}

@@ -1,0 +1,2 @@
+//! Hand-rolled property-testing helper (proptest is unavailable offline).
+pub mod prop;

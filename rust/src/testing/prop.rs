@@ -1,0 +1,123 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `Cases::new(seed).run(n, |g| ...)` runs `n` cases with a deterministic
+//! per-case generator. On failure the panic message is re-raised with the
+//! case index and the reproduction seed, which is all the shrinking we
+//! need at this scale: re-run the closure with `Cases::only(seed, index)`
+//! to debug a single case.
+
+use crate::util::Rng;
+
+/// Per-case random input generator.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        if n == 0 {
+            0
+        } else {
+            self.rng.below(n)
+        }
+    }
+
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.below(hi - lo)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.rng.next_f32()
+    }
+
+    #[inline]
+    pub fn gaussian(&mut self) -> f32 {
+        self.rng.gaussian_f32()
+    }
+
+    #[inline]
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.next_f64() < p_true
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.gaussian() * scale).collect()
+    }
+
+    pub fn distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.sample_distinct(n, k)
+    }
+}
+
+/// Seeded case runner.
+pub struct Cases {
+    seed: u64,
+}
+
+impl Cases {
+    pub fn new(seed: u64) -> Self {
+        Cases { seed }
+    }
+
+    /// Run `n` cases; panics with case index + seed on the first failure.
+    pub fn run(&self, n: usize, mut f: impl FnMut(&mut Gen)) {
+        for i in 0..n {
+            let case_seed = self.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut g = Gen { rng: Rng::new(case_seed) };
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+            if let Err(e) = res {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!("property failed at case {i} (seed {:#x}): {msg}", self.seed);
+            }
+        }
+    }
+
+    /// Re-run a single case for debugging.
+    pub fn only(&self, index: usize, mut f: impl FnMut(&mut Gen)) {
+        let case_seed = self.seed ^ (index as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(case_seed) };
+        f(&mut g);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen = Vec::new();
+        Cases::new(7).run(5, |g| seen.push(g.below(1000)));
+        let mut again = Vec::new();
+        Cases::new(7).run(5, |g| again.push(g.below(1000)));
+        assert_eq!(seen, again);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failure_reports_case() {
+        Cases::new(1).run(10, |g| {
+            let v = g.below(10);
+            assert!(v != 3, "hit the bad value");
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        Cases::new(3).run(50, |g| {
+            assert!(g.range(5, 10) >= 5 && g.range(5, 10) < 10);
+            let v = g.vec_f32(8, 2.0);
+            assert_eq!(v.len(), 8);
+            let d = g.distinct(20, 5);
+            assert_eq!(d.len(), 5);
+        });
+    }
+}

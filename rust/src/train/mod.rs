@@ -1,0 +1,193 @@
+//! Training substrate: GD / minibatch-SGD with the trajectory cache that
+//! DeltaGrad consumes.
+//!
+//! The paper's setup (§2.1–2.2): train T iterations of (S)GD over the
+//! full data, caching the parameters `w_t` and the (minibatch-)average
+//! gradients `∇F(w_t)` at every step. This module is also reused as
+//! **BaseL** — retraining from scratch over the remaining data — by
+//! passing a non-empty removal set (and, for SGD, the original minibatch
+//! schedule so the randomness matches, §A.1.2).
+
+use anyhow::Result;
+
+use crate::config::HyperParams;
+use crate::data::{Dataset, IndexSet};
+use crate::runtime::engine::{ModelExes, Stats};
+use crate::runtime::Runtime;
+use crate::util::vecmath::axpy;
+use crate::util::Rng;
+
+/// Cached optimization trajectory from one training run.
+#[derive(Clone, Default)]
+pub struct Trajectory {
+    /// parameters w_0 .. w_T (T+1 vectors of length p)
+    pub ws: Vec<Vec<f32>>,
+    /// average gradient over the iteration's batch at w_t (T vectors)
+    pub gs: Vec<Vec<f32>>,
+    /// minibatch indices per iteration; empty vec = full batch (GD)
+    pub batches: Vec<Vec<usize>>,
+    /// number of training rows the run saw (n - |removed|)
+    pub n_effective: usize,
+}
+
+impl Trajectory {
+    pub fn t(&self) -> usize {
+        self.gs.len()
+    }
+
+    /// Bytes held by the cache (the paper's "information cached during
+    /// the training phase"; used by the memory accounting in benches).
+    pub fn approx_bytes(&self) -> usize {
+        let f = |v: &Vec<Vec<f32>>| v.iter().map(|x| x.len() * 4).sum::<usize>();
+        f(&self.ws) + f(&self.gs) + self.batches.iter().map(|b| b.len() * 8).sum::<usize>()
+    }
+}
+
+/// Options for one training run.
+pub struct TrainOpts<'a> {
+    pub hp: &'a HyperParams,
+    /// rows excluded from training (BaseL deletion scenario)
+    pub removed: &'a IndexSet,
+    /// record the (w_t, g_t) trajectory
+    pub record: bool,
+    /// reuse this minibatch schedule (same-randomness retraining)
+    pub reuse_batches: Option<&'a [Vec<usize>]>,
+    /// seed for fresh minibatch sampling (ignored when reusing)
+    pub seed: u64,
+    /// initial parameters; default = deterministic init (zeros for LR,
+    /// seeded He-style gaussians for MLP)
+    pub init: Option<&'a [f32]>,
+}
+
+impl<'a> TrainOpts<'a> {
+    pub fn full(hp: &'a HyperParams, removed: &'a IndexSet) -> Self {
+        TrainOpts { hp, removed, record: true, reuse_batches: None, seed: 0x5EED, init: None }
+    }
+}
+
+pub struct TrainOutput {
+    pub w: Vec<f32>,
+    pub traj: Option<Trajectory>,
+    pub seconds: f64,
+    pub final_stats: Stats,
+}
+
+/// Deterministic initial parameter vector for a model spec.
+pub fn init_params(exes: &ModelExes) -> Vec<f32> {
+    let spec = &exes.spec;
+    match spec.model {
+        crate::config::ModelKind::Lr => vec![0.0; spec.p],
+        crate::config::ModelKind::Mlp => {
+            // He-style init, fixed seed: identical across every run so the
+            // cached trajectory and retraining share w_0.
+            let mut rng = Rng::new(0xC0FFEE);
+            let (da, h, k) = (spec.da, spec.hidden, spec.k);
+            let mut w = Vec::with_capacity(spec.p);
+            let s1 = (2.0 / da as f64).sqrt() as f32;
+            for _ in 0..da * h {
+                w.push(rng.gaussian_f32() * s1);
+            }
+            let s2 = (2.0 / (h + 1) as f64).sqrt() as f32;
+            for _ in 0..(h + 1) * k {
+                w.push(rng.gaussian_f32() * s2);
+            }
+            w
+        }
+    }
+}
+
+/// Train for `hp.t` iterations on `ds` minus `opts.removed`.
+///
+/// GD mode (`hp.batch == 0`): one masked full pass per iteration over the
+/// staged dataset. SGD mode: per-iteration minibatch of `hp.batch` rows
+/// sampled from the ORIGINAL index space (removed members dropped at use
+/// time, so the schedule transfers between runs — paper §3's B − ΔB_t).
+pub fn train(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    opts: &TrainOpts,
+) -> Result<TrainOutput> {
+    let hp = opts.hp;
+    let spec = &exes.spec;
+    let t0 = std::time::Instant::now();
+    let staged = if hp.batch == 0 {
+        Some(exes.stage(rt, ds, opts.removed)?)
+    } else {
+        None
+    };
+    let n_eff = ds.n - opts.removed.len();
+    assert!(n_eff > 0, "all rows removed");
+    let mut w = match opts.init {
+        Some(init) => init.to_vec(),
+        None => init_params(exes),
+    };
+    let mut rng = Rng::new(opts.seed);
+    let mut traj = Trajectory {
+        ws: Vec::new(),
+        gs: Vec::new(),
+        batches: Vec::new(),
+        n_effective: n_eff,
+    };
+    let mut last_stats = Stats::default();
+
+    for t in 0..hp.t {
+        if opts.record {
+            traj.ws.push(w.clone());
+        }
+        let (g_sum, stats, batch, cnt) = if hp.batch == 0 {
+            let (g, s) = exes.grad_sum_staged(rt, staged.as_ref().unwrap(), &w)?;
+            let cnt = s.cnt;
+            (g, s, Vec::new(), cnt)
+        } else {
+            // sample from the original index space, then drop removed rows
+            let batch: Vec<usize> = match opts.reuse_batches {
+                Some(b) => b[t].clone(),
+                None => (0..hp.batch).map(|_| rng.below(ds.n)).collect(),
+            };
+            let kept: Vec<usize> = batch
+                .iter()
+                .copied()
+                .filter(|i| !opts.removed.contains(*i))
+                .collect();
+            if kept.is_empty() {
+                // B - ΔB_t == 0: skip the update (paper §3)
+                if opts.record {
+                    traj.gs.push(vec![0.0; spec.p]);
+                    traj.batches.push(batch);
+                    traj.ws.pop();
+                    traj.ws.push(w.clone());
+                }
+                continue;
+            }
+            let (g, s) = exes.grad_sum_rows(rt, ds, &kept, &w)?;
+            let cnt = kept.len() as f64;
+            (g, s, batch, cnt)
+        };
+        let lr = hp.lr_at(t);
+        let scale = -(lr as f64 / cnt) as f32;
+        if opts.record {
+            let mut g_avg = g_sum.clone();
+            crate::util::vecmath::scale(&mut g_avg, (1.0 / cnt) as f32);
+            traj.gs.push(g_avg);
+            traj.batches.push(batch);
+        }
+        axpy(scale, &g_sum, &mut w);
+        last_stats = stats;
+    }
+    if opts.record {
+        traj.ws.push(w.clone());
+    }
+    Ok(TrainOutput {
+        w,
+        traj: if opts.record { Some(traj) } else { None },
+        seconds: t0.elapsed().as_secs_f64(),
+        final_stats: last_stats,
+    })
+}
+
+/// Evaluate mean loss + accuracy of `w` over an entire dataset.
+pub fn evaluate(exes: &ModelExes, rt: &Runtime, ds: &Dataset, w: &[f32]) -> Result<Stats> {
+    let staged = exes.stage(rt, ds, &IndexSet::empty())?;
+    exes.eval_staged(rt, &staged, w)
+}

@@ -1,0 +1,11 @@
+//! Small shared substrates: deterministic RNG, dense vector math, timing.
+//!
+//! crates.io is unreachable in this environment, so the RNG (xorshift64*
+//! + Box–Muller) and the vector kernels are hand-rolled on std only.
+
+pub mod rng;
+pub mod vecmath;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,70 @@
+//! Wall-clock timing helpers for the experiment drivers and benches.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch accumulating named spans.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    start: Option<Instant>,
+    total: Duration,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        self.start = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.start.take() {
+            self.total += s.elapsed();
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.start = None;
+        self.total = Duration::ZERO;
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let first = sw.secs();
+        assert!(first >= 0.004, "{first}");
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.secs() > first);
+        sw.reset();
+        assert_eq!(sw.secs(), 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

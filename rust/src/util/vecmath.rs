@@ -1,0 +1,184 @@
+//! Dense f32/f64-accumulating vector kernels for the coordinator hot loop.
+//!
+//! The parameter updates (GD step, leave-r-out combination, L-BFGS
+//! history algebra) are O(p) vector ops executed once per iteration —
+//! they live on the Rust side per DESIGN.md §Hardware-Adaptation. Dot
+//! products accumulate in f64 to keep the o(r/n) distances measurable.
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = x
+#[inline]
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// out = x - y
+pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for ((o, a), b) in out.iter_mut().zip(x).zip(y) {
+        *o = a - b;
+    }
+}
+
+/// x . y with f64 accumulation
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        acc += *a as f64 * *b as f64;
+    }
+    acc
+}
+
+/// ||x||_2
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ||x - y||_2
+pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        let d = *a as f64 - *b as f64;
+        acc += d * d;
+    }
+    acc.sqrt()
+}
+
+/// x *= a
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Solve the dense n x n system `a x = b` in-place via Gaussian
+/// elimination with partial pivoting. `a` is row-major, consumed.
+/// Used for the 2m x 2m L-BFGS middle system (m <= 8) — no LAPACK dep.
+pub fn solve_dense(a: &mut [f64], b: &mut [f64]) -> Result<(), &'static str> {
+    let n = b.len();
+    debug_assert_eq!(a.len(), n * n);
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = a[col * n + col].abs();
+        for row in (col + 1)..n {
+            let v = a[row * n + col].abs();
+            if v > best {
+                best = v;
+                piv = row;
+            }
+        }
+        if best < 1e-300 {
+            return Err("singular matrix in solve_dense");
+        }
+        if piv != col {
+            for j in 0..n {
+                a.swap(col * n + j, piv * n + j);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        for row in (col + 1)..n {
+            let f = a[row * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                a[row * n + j] -= f * a[col * n + j];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for j in (col + 1)..n {
+            acc -= a[col * n + j] * b[j];
+        }
+        b[col] = acc / a[col * n + col];
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_dot_norm() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![1.0f32, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert!((norm2(&x) - 14.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sub_dist() {
+        let x = vec![3.0f32, 4.0];
+        let y = vec![0.0f32, 0.0];
+        let mut o = vec![0.0f32; 2];
+        sub(&x, &y, &mut o);
+        assert_eq!(o, x);
+        assert!((dist2(&x, &y) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut b = vec![3.0, 4.0];
+        solve_dense(&mut a, &mut b).unwrap();
+        assert_eq!(b, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_random_roundtrip() {
+        let mut rng = crate::util::Rng::new(123);
+        for n in 1..=8usize {
+            let a: Vec<f64> = (0..n * n).map(|_| rng.gaussian()).collect();
+            // make well-conditioned: A = M^T M + I
+            let mut spd = vec![0.0f64; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = if i == j { 1.0 } else { 0.0 };
+                    for k in 0..n {
+                        acc += a[k * n + i] * a[k * n + j];
+                    }
+                    spd[i * n + j] = acc;
+                }
+            }
+            let xtrue: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let mut b = vec![0.0f64; n];
+            for i in 0..n {
+                for j in 0..n {
+                    b[i] += spd[i * n + j] * xtrue[j];
+                }
+            }
+            let mut acopy = spd.clone();
+            solve_dense(&mut acopy, &mut b).unwrap();
+            for i in 0..n {
+                assert!((b[i] - xtrue[i]).abs() < 1e-8, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_singular_errors() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve_dense(&mut a, &mut b).is_err());
+    }
+}

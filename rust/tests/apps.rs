@@ -1,0 +1,169 @@
+//! Application-layer integration tests (§5 apps over real artifacts).
+//! Requires `make artifacts`.
+
+use deltagrad::apps::{conformal, influence, jackknife, privacy, robust, valuation};
+use deltagrad::config::HyperParams;
+use deltagrad::data::{sample_removal, synth, IndexSet};
+use deltagrad::deltagrad::batch;
+use deltagrad::runtime::Engine;
+use deltagrad::train::{self, TrainOpts};
+use deltagrad::util::vecmath::dist2;
+use deltagrad::util::Rng;
+
+struct Fixture {
+    eng: Engine,
+    exes: std::rc::Rc<deltagrad::ModelExes>,
+    train_ds: deltagrad::Dataset,
+    test_ds: deltagrad::Dataset,
+    hp: HyperParams,
+    w: Vec<f32>,
+    traj: deltagrad::train::Trajectory,
+}
+
+fn fixture() -> Fixture {
+    let mut eng = Engine::open_default().expect("make artifacts");
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (train_ds, test_ds) = synth::train_test_for_spec(&spec, 21, Some(768), Some(384));
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 60;
+    hp.j0 = 8;
+    let out = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    Fixture {
+        eng,
+        exes,
+        train_ds,
+        test_ds,
+        hp,
+        w: out.w,
+        traj: out.traj.unwrap(),
+    }
+}
+
+#[test]
+fn valuation_identifies_self_influence() {
+    let f = fixture();
+    let candidates: Vec<usize> = (0..6).collect();
+    let values = valuation::leave_one_out_values(
+        &f.exes, &f.eng.rt, &f.train_ds, &f.test_ds, &f.traj, &f.hp, &f.w, &candidates,
+    )
+    .unwrap();
+    assert_eq!(values.len(), 6);
+    for v in &values {
+        assert!(v.param_dist > 0.0, "removal must move the params");
+        assert!(v.param_dist < 1.0, "single-sample influence must be small");
+    }
+}
+
+#[test]
+fn jackknife_runs_and_bias_is_finite() {
+    let f = fixture();
+    // functional: ||w||^2 (a biased plug-in statistic)
+    let res = jackknife::jackknife_bias(
+        &f.exes,
+        &f.eng.rt,
+        &f.train_ds,
+        &f.traj,
+        &f.hp,
+        &f.w,
+        |w| deltagrad::util::vecmath::dot(w, w),
+        5,
+        3,
+    )
+    .unwrap();
+    assert_eq!(res.n_loo, 5);
+    assert!(res.full > 0.0);
+    assert!(res.bias.is_finite());
+    assert!((res.corrected - (res.full - res.bias)).abs() < 1e-9);
+}
+
+#[test]
+fn conformal_residuals_and_coverage() {
+    let f = fixture();
+    let residuals = conformal::cross_conformal_residuals(
+        &f.exes, &f.eng.rt, &f.train_ds, &f.traj, &f.hp, 4,
+    )
+    .unwrap();
+    assert_eq!(residuals.len(), f.train_ds.n);
+    assert!(residuals.iter().all(|r| (0.0..=1.0).contains(r)));
+    // empirical coverage on the test set at alpha = 0.1 should be ~0.9
+    let spec = &f.exes.spec;
+    let alpha = 0.1;
+    let mut covered = 0usize;
+    let mut total_size = 0usize;
+    for i in 0..f.test_ds.n {
+        let set = conformal::prediction_set(
+            &residuals, alpha, spec.da, spec.k, &f.w, f.test_ds.row(i),
+        );
+        if set.contains(&f.test_ds.y[i]) {
+            covered += 1;
+        }
+        total_size += set.len();
+    }
+    let cov = covered as f64 / f.test_ds.n as f64;
+    assert!(cov >= 1.0 - alpha - 0.07, "coverage {cov} too low");
+    // sets must be informative (not always all k classes)
+    assert!(
+        (total_size as f64 / f.test_ds.n as f64) < spec.k as f64,
+        "prediction sets are trivial"
+    );
+}
+
+#[test]
+fn influence_comparator_is_worse_than_deltagrad() {
+    // d3's claim: the one-shot influence update is cheap but its error
+    // does not track the exact retrain as closely as DeltaGrad's
+    let f = fixture();
+    let removed = sample_removal(&mut Rng::new(5), f.train_ds.n, 8);
+    let basel = train::train(&f.exes, &f.eng.rt, &f.train_ds, &TrainOpts::full(&f.hp, &removed))
+        .unwrap();
+    let dg = batch::delete_gd(&f.exes, &f.eng.rt, &f.train_ds, &f.traj, &f.hp, &removed).unwrap();
+    let (w_inf, _) = influence::influence_delete(
+        &f.exes,
+        &f.eng.rt,
+        &f.train_ds,
+        &f.w,
+        &removed,
+        &influence::InfluenceOpts { hessian_sample: 512, ..Default::default() },
+    )
+    .unwrap();
+    let d_dg = dist2(&dg.w, &basel.w);
+    let d_inf = dist2(&w_inf, &basel.w);
+    let d_noop = dist2(&f.w, &basel.w);
+    assert!(d_inf < d_noop, "influence should improve on doing nothing");
+    assert!(d_dg < d_inf, "DeltaGrad ({d_dg:.2e}) should beat influence ({d_inf:.2e})");
+}
+
+#[test]
+fn privacy_release_hides_the_deletion_error() {
+    let f = fixture();
+    let removed = sample_removal(&mut Rng::new(9), f.train_ds.n, 5);
+    let basel = train::train(&f.exes, &f.eng.rt, &f.train_ds, &TrainOpts::full(&f.hp, &removed))
+        .unwrap();
+    let dg = batch::delete_gd(&f.exes, &f.eng.rt, &f.train_ds, &f.traj, &f.hp, &removed).unwrap();
+    let delta0 = dist2(&dg.w, &basel.w);
+    let mech = privacy::LaplaceMechanism::from_deletion_error(f.exes.spec.p, delta0, 1.0);
+    let bound = privacy::epsilon_bound(&dg.w, &basel.w, mech.scale);
+    // the √p factor makes the ℓ1-based worst case ≤ ε=1
+    assert!(bound <= 1.0 + 1e-6, "ε bound {bound} exceeds the budget");
+    let mut rng = Rng::new(1);
+    let z = mech.release(&dg.w, &mut rng);
+    assert!(mech.privacy_loss(&dg.w, &basel.w, &z) <= bound + 1e-9);
+}
+
+#[test]
+fn robust_prune_refit_matches_basel() {
+    let f = fixture();
+    let (poisoned, _victims) = robust::inject_label_flips(&f.train_ds, 30, 17);
+    let out = train::train(&f.exes, &f.eng.rt, &poisoned, &TrainOpts::full(&f.hp, &IndexSet::empty()))
+        .unwrap();
+    let traj = out.traj.unwrap();
+    let fit = robust::prune_and_refit(&f.exes, &f.eng.rt, &poisoned, &traj, &f.hp, &out.w, 0.04)
+        .unwrap();
+    let basel = train::train(&f.exes, &f.eng.rt, &poisoned, &TrainOpts::full(&f.hp, &fit.pruned))
+        .unwrap();
+    let gap = dist2(&fit.w, &basel.w);
+    let moved = dist2(&out.w, &basel.w);
+    assert!(gap < 0.3 * moved.max(1e-12), "refit {gap:.2e} should track BaseL ({moved:.2e})");
+}

@@ -1,0 +1,261 @@
+//! End-to-end integration: artifacts -> PJRT -> train -> delete/add ->
+//! DeltaGrad vs BaseL. Requires `make artifacts` (small configs suffice).
+//!
+//! These tests verify the paper's headline correctness claims at small
+//! scale: ‖w^I − w^U‖ is (a) small and (b) at least an order of magnitude
+//! below ‖w^U − w*‖ (Theorem 1's o(r/n) vs O(r/n) separation).
+
+use deltagrad::config::HyperParams;
+use deltagrad::data::{sample_removal, synth, IndexSet};
+use deltagrad::deltagrad::batch;
+use deltagrad::runtime::Engine;
+use deltagrad::train::{self, TrainOpts};
+use deltagrad::util::vecmath::dist2;
+use deltagrad::util::Rng;
+
+fn engine() -> Engine {
+    Engine::open_default().expect("run `make artifacts` first")
+}
+
+fn small_hp() -> HyperParams {
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 60;
+    hp.j0 = 8;
+    hp.t0 = 5;
+    hp
+}
+
+#[test]
+fn grad_engine_matches_between_staged_and_rows() {
+    // sum over staged chunks == sum over explicit row gather
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (train_ds, _) = synth::train_test_for_spec(&spec, 42, Some(500), Some(10));
+    let mut rng = Rng::new(9);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+    let staged = exes.stage(&eng.rt, &train_ds, &IndexSet::empty()).unwrap();
+    let (g1, s1) = exes.grad_sum_staged(&eng.rt, &staged, &w).unwrap();
+    let all: Vec<usize> = (0..train_ds.n).collect();
+    let (g2, s2) = exes.grad_sum_rows(&eng.rt, &train_ds, &all, &w).unwrap();
+    assert_eq!(s1.cnt, s2.cnt);
+    assert!((s1.loss_sum - s2.loss_sum).abs() / s1.loss_sum.abs().max(1.0) < 1e-4);
+    let denom = g1.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+    assert!(dist2(&g1, &g2) / denom < 1e-3, "staged vs rows gradient mismatch");
+}
+
+#[test]
+fn removed_mask_equals_leave_r_out() {
+    // grad(staged with removals) == grad(full) - grad(removed rows)
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 1, Some(400), Some(10));
+    let mut rng = Rng::new(2);
+    let removed = sample_removal(&mut rng, ds.n, 13);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+    let staged_masked = exes.stage(&eng.rt, &ds, &removed).unwrap();
+    let (g_masked, sm) = exes.grad_sum_staged(&eng.rt, &staged_masked, &w).unwrap();
+    let staged_full = exes.stage(&eng.rt, &ds, &IndexSet::empty()).unwrap();
+    let (g_full, _) = exes.grad_sum_staged(&eng.rt, &staged_full, &w).unwrap();
+    let (g_rem, _) = exes
+        .grad_sum_rows(&eng.rt, &ds, removed.as_slice(), &w)
+        .unwrap();
+    assert_eq!(sm.cnt as usize, ds.n - removed.len());
+    let want: Vec<f32> = g_full.iter().zip(&g_rem).map(|(a, b)| a - b).collect();
+    let denom = want.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+    assert!(dist2(&g_masked, &want) / denom < 1e-3);
+}
+
+#[test]
+fn training_converges_on_small() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (train_ds, test_ds) = synth::train_test_for_spec(&spec, 7, None, None);
+    let hp = small_hp();
+    let out = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    let stats = train::evaluate(&exes, &eng.rt, &test_ds, &out.w).unwrap();
+    assert!(
+        stats.accuracy() > 0.7,
+        "test accuracy {} too low — training broken",
+        stats.accuracy()
+    );
+    let traj = out.traj.unwrap();
+    assert_eq!(traj.ws.len(), hp.t + 1);
+    assert_eq!(traj.gs.len(), hp.t);
+}
+
+#[test]
+fn deltagrad_delete_tracks_basel() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 3, None, None);
+    let hp = small_hp();
+    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    let traj = full.traj.unwrap();
+
+    let mut rng = Rng::new(5);
+    let removed = sample_removal(&mut rng, ds.n, 10); // ~1%
+    // BaseL: retrain from scratch on remaining
+    let basel = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &removed)).unwrap();
+    // DeltaGrad
+    let dg = batch::delete_gd(&exes, &eng.rt, &ds, &traj, &hp, &removed).unwrap();
+
+    let d_star_u = dist2(&full.w, &basel.w); // ‖w* − w^U‖  = O(r/n)
+    let d_i_u = dist2(&dg.w, &basel.w); //      ‖w^I − w^U‖ = o(r/n)
+    assert!(d_star_u > 0.0, "removal should move the optimum");
+    assert!(
+        d_i_u < 0.2 * d_star_u,
+        "DeltaGrad error {d_i_u:.3e} not well below baseline gap {d_star_u:.3e}"
+    );
+    assert!(dg.n_approx > 0, "no approximated iterations ran");
+    assert!(dg.n_exact >= hp.j0, "burn-in not exact");
+}
+
+#[test]
+fn deltagrad_add_tracks_basel() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 11, None, None);
+    let hp = small_hp();
+    let added = synth::addition_rows(&spec, 11, 10);
+    // trajectory over the base data
+    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    let traj = full.traj.unwrap();
+    // BaseL: retrain on base + added
+    let mut ds_plus = ds.clone();
+    ds_plus.append(&added);
+    let basel = train::train(&exes, &eng.rt, &ds_plus, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    let dg = batch::add_gd(&exes, &eng.rt, &ds, &traj, &hp, &added).unwrap();
+    let d_star_u = dist2(&full.w, &basel.w);
+    let d_i_u = dist2(&dg.w, &basel.w);
+    assert!(
+        d_i_u < 0.2 * d_star_u,
+        "DeltaGrad-add error {d_i_u:.3e} vs baseline gap {d_star_u:.3e}"
+    );
+}
+
+#[test]
+fn deltagrad_sgd_delete_tracks_basel() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 13, None, None);
+    let mut hp = small_hp();
+    hp.batch = 512; // half the 1024 rows per minibatch
+    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    let traj = full.traj.unwrap();
+    let mut rng = Rng::new(21);
+    let removed = sample_removal(&mut rng, ds.n, 10);
+    // BaseL with the SAME minibatch schedule (paper §A.1.2)
+    let basel = train::train(
+        &exes,
+        &eng.rt,
+        &ds,
+        &TrainOpts {
+            hp: &hp,
+            removed: &removed,
+            record: false,
+            reuse_batches: Some(&traj.batches),
+            seed: 0,
+            init: None,
+        },
+    )
+    .unwrap();
+    let dg = batch::delete_sgd(&exes, &eng.rt, &ds, &traj, &hp, &removed).unwrap();
+    let d_star_u = dist2(&full.w, &basel.w);
+    let d_i_u = dist2(&dg.w, &basel.w);
+    assert!(d_star_u > 0.0);
+    assert!(
+        d_i_u < 0.5 * d_star_u,
+        "SGD DeltaGrad error {d_i_u:.3e} vs baseline gap {d_star_u:.3e}"
+    );
+}
+
+#[test]
+fn lbfgs_artifact_matches_host_implementation() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let mut rng = Rng::new(31);
+    let p = spec.p;
+    let m = spec.m;
+    // curvature-consistent pairs: dg = c * dw + noise
+    let mut dws = Vec::new();
+    let mut dgs = Vec::new();
+    let mut hist = deltagrad::lbfgs::History::new(m);
+    for _ in 0..m {
+        let dw: Vec<f32> = (0..p).map(|_| rng.gaussian_f32()).collect();
+        let dg: Vec<f32> = dw
+            .iter()
+            .map(|x| 2.0 * x + 0.05 * rng.gaussian_f32())
+            .collect();
+        hist.push(dw.clone(), dg.clone());
+        dws.push(dw);
+        dgs.push(dg);
+    }
+    let v: Vec<f32> = (0..p).map(|_| rng.gaussian_f32()).collect();
+    let host = hist.bv(&v).unwrap();
+    let art = exes.lbfgs_bv_artifact(&eng.rt, &dws, &dgs, &v).unwrap();
+    let denom = host.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+    assert!(
+        dist2(&host, &art) / denom < 1e-3,
+        "host vs artifact L-BFGS mismatch: {:.3e}",
+        dist2(&host, &art) / denom
+    );
+}
+
+#[test]
+fn hvp_artifact_consistent_with_grad_difference() {
+    // H(w)v ≈ (g(w + eps v) − g(w − eps v)) / (2 eps)
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 17, Some(200), Some(10));
+    let idxs: Vec<usize> = (0..50).collect();
+    let mut rng = Rng::new(23);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+    let v: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32()).collect();
+    let hv = exes.hvp_sum_rows(&eng.rt, &ds, &idxs, &w, &v).unwrap();
+    let eps = 1e-3f32;
+    let wp: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a + eps * b).collect();
+    let wm: Vec<f32> = w.iter().zip(&v).map(|(a, b)| a - eps * b).collect();
+    let (gp, _) = exes.grad_sum_rows(&eng.rt, &ds, &idxs, &wp).unwrap();
+    let (gm, _) = exes.grad_sum_rows(&eng.rt, &ds, &idxs, &wm).unwrap();
+    let fd: Vec<f32> = gp.iter().zip(&gm).map(|(a, b)| (a - b) / (2.0 * eps)).collect();
+    let denom = fd.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+    assert!(dist2(&hv, &fd) / denom < 5e-2, "{:.3e}", dist2(&hv, &fd) / denom);
+}
+
+#[test]
+fn mlp_deltagrad_with_curvature_gate() {
+    let mut eng = engine();
+    let exes = eng.model("smallnn").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 19, None, None);
+    let mut hp = HyperParams::for_dataset("smallnn");
+    hp.t = 50;
+    hp.j0 = 12;
+    hp.t0 = 2;
+    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    let traj = full.traj.unwrap();
+    let mut rng = Rng::new(29);
+    let removed = sample_removal(&mut rng, ds.n, 10);
+    let basel = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &removed)).unwrap();
+    let dg = batch::delete_gd(&exes, &eng.rt, &ds, &traj, &hp, &removed).unwrap();
+    let d_star_u = dist2(&full.w, &basel.w);
+    let d_i_u = dist2(&dg.w, &basel.w);
+    assert!(
+        d_i_u < d_star_u,
+        "MLP DeltaGrad error {d_i_u:.3e} should beat baseline gap {d_star_u:.3e}"
+    );
+}

@@ -1,0 +1,189 @@
+//! Cross-module property tests (hand-rolled harness; see testing::prop).
+//! These cover coordinator/data/algorithm invariants that hold for ALL
+//! inputs, not just the fixtures in the unit tests. No artifacts needed.
+
+use deltagrad::data::{sample_removal, synth, Dataset, IndexSet};
+use deltagrad::lbfgs::History;
+use deltagrad::testing::prop::Cases;
+use deltagrad::util::vecmath::{dist2, dot};
+use deltagrad::util::Rng;
+
+#[test]
+fn prop_indexset_complement_partitions() {
+    Cases::new(0x1D5E7).run(200, |g| {
+        let n = 1 + g.below(300);
+        let r = g.below(n + 1);
+        let set = IndexSet::from_vec(g.distinct(n, r));
+        let comp = set.complement(n);
+        assert_eq!(set.len() + comp.len(), n);
+        for &i in &comp {
+            assert!(!set.contains(i));
+        }
+        for i in set.iter() {
+            assert!(!comp.contains(&i));
+        }
+    });
+}
+
+#[test]
+fn prop_chunk_padding_covers_every_row_once() {
+    Cases::new(0xC4A9).run(100, |g| {
+        let d = 1 + g.below(8);
+        let k = 2 + g.below(4);
+        let n = 1 + g.below(200);
+        let chunk = 1 + g.below(64);
+        let params = synth::SynthParams { d, k, sep: 1.0, sparsity: 0.0, label_noise: 0.0 };
+        let ds = synth::generate(&params, 5, n);
+        let r = g.below(n.min(10) + 1);
+            let removed = IndexSet::from_vec(g.distinct(n, r));
+        let mut mask_total = 0.0f64;
+        let mut x_checksum = 0.0f64;
+        for c in 0..ds.n_chunks(chunk) {
+            let (x, _y, m) = ds.chunk_padded(c, chunk, &removed);
+            assert_eq!(x.len(), chunk * ds.da);
+            assert_eq!(m.len(), chunk);
+            mask_total += m.iter().map(|&v| v as f64).sum::<f64>();
+            x_checksum += x.iter().map(|&v| v as f64).sum::<f64>();
+        }
+        assert_eq!(mask_total as usize, n - removed.len());
+        let direct: f64 = ds.x.iter().map(|&v| v as f64).sum();
+        assert!((x_checksum - direct).abs() < 1e-3 * direct.abs().max(1.0));
+    });
+}
+
+#[test]
+fn prop_gather_roundtrip() {
+    Cases::new(0x6A7A).run(100, |g| {
+        let d = 1 + g.below(6);
+        let params = synth::SynthParams { d, k: 3, sep: 1.0, sparsity: 0.0, label_noise: 0.0 };
+        let n = 5 + g.below(100);
+        let ds = synth::generate(&params, 9, n);
+        let count = 1 + g.below(n);
+        let idxs = g.distinct(n, count);
+        let chunk = 1 + g.below(32);
+        let groups = ds.gather_padded(&idxs, chunk);
+        let mut flat_rows = 0usize;
+        for (gi, (x, y, m)) in groups.iter().enumerate() {
+            for r in 0..chunk {
+                let global = gi * chunk + r;
+                if global < idxs.len() {
+                    assert_eq!(m[r], 1.0);
+                    let src = ds.row(idxs[global]);
+                    assert_eq!(&x[r * ds.da..(r + 1) * ds.da], src);
+                    let label = ds.y[idxs[global]] as usize;
+                    assert_eq!(y[r * ds.k + label], 1.0);
+                    flat_rows += 1;
+                } else {
+                    assert_eq!(m[r], 0.0);
+                }
+            }
+        }
+        assert_eq!(flat_rows, idxs.len());
+    });
+}
+
+#[test]
+fn prop_lbfgs_secant_and_spd_on_random_spd_hessians() {
+    Cases::new(0x1BF65).run(60, |g| {
+        let p = 4 + g.below(24);
+        let m = 1 + g.below(4.min(p));
+        // random SPD Hessian H = A A^T/p + I
+        let a: Vec<f64> = (0..p * p).map(|_| g.gaussian() as f64).collect();
+        let hmat = |i: usize, j: usize| -> f64 {
+            let mut acc = if i == j { 1.0 } else { 0.0 };
+            for k in 0..p {
+                acc += a[i * p + k] * a[j * p + k] / p as f64;
+            }
+            acc
+        };
+        let mut hist = History::new(m);
+        let mut last = (vec![], vec![]);
+        for _ in 0..m {
+            let dw = g.vec_f32(p, 1.0);
+            let dg: Vec<f32> = (0..p)
+                .map(|i| (0..p).map(|j| hmat(i, j) * dw[j] as f64).sum::<f64>() as f32)
+                .collect();
+            hist.push(dw.clone(), dg.clone());
+            last = (dw, dg);
+        }
+        // secant: B s_last = y_last
+        let bs = hist.bv(&last.0).expect("solvable");
+        let denom = last.1.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+        assert!(
+            dist2(&bs, &last.1) / denom < 5e-2,
+            "secant violation {:.3e}",
+            dist2(&bs, &last.1) / denom
+        );
+        // positive definiteness along random directions (Lemma 6)
+        for _ in 0..5 {
+            let v = g.vec_f32(p, 1.0);
+            let bv = hist.bv(&v).unwrap();
+            assert!(dot(&v, &bv) > 0.0, "B not PD");
+        }
+    });
+}
+
+#[test]
+fn prop_removal_sets_within_range_and_exact_size() {
+    Cases::new(0xDE1E7E).run(200, |g| {
+        let n = 2 + g.below(1000);
+        let r = g.below(n);
+        let mut rng = Rng::new(g.below(1 << 30) as u64);
+        let set = sample_removal(&mut rng, n, r);
+        assert_eq!(set.len(), r);
+        assert!(set.iter().all(|i| i < n));
+    });
+}
+
+#[test]
+fn prop_dataset_append_preserves_rows() {
+    Cases::new(0xAB3D).run(100, |g| {
+        let d = 1 + g.below(5);
+        let params = synth::SynthParams { d, k: 2, sep: 1.0, sparsity: 0.0, label_noise: 0.0 };
+        let n1 = 1 + g.below(50);
+        let n2 = 1 + g.below(50);
+        let a = synth::generate(&params, 1, n1);
+        let b = synth::generate_stream(&params, 1, 7, n2);
+        let mut joined = a.clone();
+        joined.append(&b);
+        assert_eq!(joined.n, n1 + n2);
+        let i = g.below(n1);
+        assert_eq!(joined.row(i), a.row(i));
+        let j = g.below(n2);
+        assert_eq!(joined.row(n1 + j), b.row(j));
+        assert_eq!(joined.y[n1 + j], b.y[j]);
+    });
+}
+
+#[test]
+fn prop_train_test_streams_share_distribution_marker() {
+    // prototypes are seed-keyed: two streams of the same family/seed must
+    // produce datasets whose class-conditional means are close, while two
+    // different seeds must not (guards the train/test mismatch bug).
+    let params = synth::SynthParams { d: 12, k: 2, sep: 3.0, sparsity: 0.0, label_noise: 0.0 };
+    let class_mean = |ds: &Dataset, c: u32| -> Vec<f64> {
+        let mut acc = vec![0.0f64; ds.da - 1];
+        let mut cnt = 0.0f64;
+        for i in 0..ds.n {
+            if ds.y[i] == c {
+                for (j, slot) in acc.iter_mut().enumerate() {
+                    *slot += ds.row(i)[j] as f64;
+                }
+                cnt += 1.0;
+            }
+        }
+        acc.iter().map(|v| v / cnt.max(1.0)).collect()
+    };
+    let l2 = |a: &[f64], b: &[f64]| -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt()
+    };
+    let tr = synth::generate_stream(&params, 11, 0, 2000);
+    let te = synth::generate_stream(&params, 11, 1, 2000);
+    let other = synth::generate_stream(&params, 12, 0, 2000);
+    for c in 0..2u32 {
+        let same = l2(&class_mean(&tr, c), &class_mean(&te, c));
+        let diff = l2(&class_mean(&tr, c), &class_mean(&other, c));
+        assert!(same < 0.5, "train/test prototype drift {same}");
+        assert!(diff > 1.0, "distinct seeds should have distinct prototypes");
+    }
+}

@@ -1,0 +1,118 @@
+//! Coordinator integration: the unlearning service end to end.
+//! Requires `make artifacts`.
+
+use std::time::Duration;
+
+use deltagrad::config::HyperParams;
+use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
+use deltagrad::deltagrad::online::Request;
+
+fn small_cfg(policy: BatchPolicy) -> ServiceConfig {
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 40;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    ServiceConfig {
+        model: "small".into(),
+        seed: 77,
+        n_train: Some(512),
+        n_test: Some(256),
+        hp,
+        policy,
+    }
+}
+
+#[test]
+fn serves_sequential_deletions() {
+    let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
+        max_group: 1,
+        max_wait: Duration::from_millis(1),
+    }))
+    .unwrap();
+    let snap0 = svc.snapshot().unwrap();
+    assert_eq!(snap0.version, 0);
+    assert_eq!(snap0.n_train, 512);
+    assert!(snap0.test_accuracy > 0.5, "initial acc {}", snap0.test_accuracy);
+
+    for i in 0..3 {
+        let rep = svc.update(Request::Delete(i)).unwrap();
+        assert_eq!(rep.version, (i + 1) as u64);
+        assert_eq!(rep.group_size, 1);
+        assert!(rep.n_exact > 0);
+    }
+    let snap = svc.snapshot().unwrap();
+    assert_eq!(snap.version, 3);
+    assert_eq!(snap.n_train, 509);
+    assert!(snap.test_accuracy > 0.5);
+
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.requests, 3);
+    assert_eq!(m.groups, 3);
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn group_commit_coalesces_concurrent_requests() {
+    let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
+        max_group: 8,
+        max_wait: Duration::from_millis(150),
+    }))
+    .unwrap();
+    // enqueue 5 requests quickly without waiting
+    let rxs: Vec<_> = (10..15)
+        .map(|i| svc.update_async(Request::Delete(i)).unwrap())
+        .collect();
+    let mut versions = Vec::new();
+    let mut group_sizes = Vec::new();
+    for rx in rxs {
+        let rep = rx.recv().unwrap().unwrap();
+        versions.push(rep.version);
+        group_sizes.push(rep.group_size);
+    }
+    // all five should have been committed together (single version bump)
+    assert!(
+        group_sizes.iter().all(|&g| g == 5),
+        "expected one group of 5, got {group_sizes:?}"
+    );
+    assert!(versions.iter().all(|&v| v == versions[0]));
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.requests, 5);
+    assert_eq!(m.groups, 1);
+    assert!((m.mean_group_size() - 5.0).abs() < 1e-9);
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn rejects_double_delete_but_keeps_serving() {
+    let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
+        max_group: 1,
+        max_wait: Duration::from_millis(1),
+    }))
+    .unwrap();
+    svc.update(Request::Delete(0)).unwrap();
+    let err = svc.update(Request::Delete(0));
+    assert!(err.is_err(), "double delete must be rejected");
+    // the service must still be healthy
+    let rep = svc.update(Request::Delete(1)).unwrap();
+    assert!(rep.version >= 2);
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn addition_requests_grow_the_dataset() {
+    let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
+        max_group: 1,
+        max_wait: Duration::from_millis(1),
+    }))
+    .unwrap();
+    let snap0 = svc.snapshot().unwrap();
+    // fabricate a plausible sample: zeros with bias column
+    let da = snap0.w.len() / 3; // small: k=3
+    let mut x = vec![0.0f32; da];
+    x[da - 1] = 1.0;
+    let rep = svc.update(Request::Add(x, 1)).unwrap();
+    assert_eq!(rep.version, 1);
+    let snap = svc.snapshot().unwrap();
+    assert_eq!(snap.n_train, 513);
+    svc.shutdown().unwrap();
+}
