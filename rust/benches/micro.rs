@@ -2,19 +2,41 @@
 //! criterion unavailable offline).
 //!
 //! Covers the per-iteration costs DeltaGrad's complexity analysis (§2.4)
-//! is made of: full-gradient chunk execution, removed-set (small-chunk)
-//! gradient, host vs artifact L-BFGS B·v, parameter upload, and the pure
-//! vector step arithmetic. Reports mean ± std over repetitions.
+//! is made of: full-gradient chunk execution, removed-set gradient in
+//! both the seed per-iteration-re-upload shape and the staged-context
+//! shape, host vs artifact L-BFGS B·v, parameter upload, the pure vector
+//! step arithmetic, and end-to-end batch-delete / online passes. Every
+//! bench reports mean ± std AND per-repetition device traffic (uploads /
+//! executions), so the staging discipline of docs/PERFORMANCE.md is
+//! visible in numbers.
+//!
+//! `--json <path>` additionally writes the results as JSON
+//! (default path BENCH_micro.json) so the perf trajectory is
+//! machine-trackable across PRs.
 
 use deltagrad::config::HyperParams;
 use deltagrad::data::{sample_removal, synth, IndexSet};
+use deltagrad::deltagrad::batch;
+use deltagrad::deltagrad::online::{OnlineState, Request};
 use deltagrad::lbfgs::History;
-use deltagrad::runtime::Engine;
+use deltagrad::runtime::{Engine, Runtime};
 use deltagrad::train::{self, TrainOpts};
 use deltagrad::util::vecmath::axpy;
 use deltagrad::util::Rng;
 
+struct BenchResult {
+    name: String,
+    mean_ms: f64,
+    std_ms: f64,
+    reps: usize,
+    uploads_per_rep: f64,
+    upload_floats_per_rep: f64,
+    execs_per_rep: f64,
+}
+
 fn bench<F: FnMut() -> anyhow::Result<()>>(
+    out: &mut Vec<BenchResult>,
+    rt: &Runtime,
     name: &str,
     warmup: usize,
     reps: usize,
@@ -23,30 +45,75 @@ fn bench<F: FnMut() -> anyhow::Result<()>>(
     for _ in 0..warmup {
         f()?;
     }
+    let c0 = rt.counters.snapshot();
     let mut times = Vec::with_capacity(reps);
     for _ in 0..reps {
         let t0 = std::time::Instant::now();
         f()?;
         times.push(t0.elapsed().as_secs_f64());
     }
+    let tr = rt.counters.snapshot().since(c0);
     let n = times.len() as f64;
     let mean = times.iter().sum::<f64>() / n;
     let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / n;
+    let res = BenchResult {
+        name: name.to_string(),
+        mean_ms: mean * 1e3,
+        std_ms: var.sqrt() * 1e3,
+        reps,
+        uploads_per_rep: tr.uploads as f64 / n,
+        upload_floats_per_rep: tr.upload_floats as f64 / n,
+        execs_per_rep: tr.execs as f64 / n,
+    };
     println!(
-        "  {name:<42} {:>10.3} ms ± {:>7.3} ms  (n={reps})",
-        mean * 1e3,
-        var.sqrt() * 1e3
+        "  {name:<52} {:>10.3} ms ± {:>7.3} ms  (n={reps}, uploads/rep={:.1}, execs/rep={:.1})",
+        res.mean_ms, res.std_ms, res.uploads_per_rep, res.execs_per_rep
     );
+    out.push(res);
+    Ok(())
+}
+
+fn write_json(path: &str, results: &[BenchResult]) -> anyhow::Result<()> {
+    let mut s = String::from("{\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "  \"{}\": {{\"mean_ms\": {:.6}, \"std_ms\": {:.6}, \"reps\": {}, \
+             \"uploads_per_rep\": {:.2}, \"upload_floats_per_rep\": {:.1}, \
+             \"execs_per_rep\": {:.2}}}{}\n",
+            r.name,
+            r.mean_ms,
+            r.std_ms,
+            r.reps,
+            r.uploads_per_rep,
+            r.upload_floats_per_rep,
+            r.execs_per_rep,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("}\n");
+    std::fs::write(path, s)?;
+    println!("\nwrote {path}");
     Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
-    let filter = std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with('-'))
-        .unwrap_or_default();
+    let mut filter = String::new();
+    let mut json_path: Option<String> = None;
+    let mut args = std::env::args().skip(1).peekable();
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            let path = match args.peek() {
+                Some(p) if !p.starts_with('-') => args.next().unwrap(),
+                _ => "BENCH_micro.json".to_string(),
+            };
+            json_path = Some(path);
+        } else if !a.starts_with('-') && filter.is_empty() {
+            filter = a;
+        }
+    }
     let want = |name: &str| filter.is_empty() || name.contains(&filter);
     let mut eng = Engine::open_default()?;
+    let mut results: Vec<BenchResult> = Vec::new();
 
     for model in ["mnist", "rcv1"] {
         if !want(model) {
@@ -59,17 +126,31 @@ fn main() -> anyhow::Result<()> {
         let staged = exes.stage(&eng.rt, &ds, &IndexSet::empty())?;
         let mut rng = Rng::new(3);
         let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.05).collect();
+        let out = &mut results;
 
-        bench("grad_sum_staged (full pass, 2 chunks)", 2, 20, || {
+        bench(out, &eng.rt, &format!("{model}/grad_sum_staged (full pass, 2 chunks)"), 2, 20, || {
             exes.grad_sum_staged(&eng.rt, &staged, &w).map(|_| ())
         })?;
 
         let removed = sample_removal(&mut rng, ds.n, 64);
-        bench("grad_sum_rows (r=64 removed-set term)", 2, 20, || {
-            exes.grad_sum_rows(&eng.rt, &ds, removed.as_slice(), &w).map(|_| ())
+        // the before/after shapes of the per-iteration delta-row term:
+        // 10 iterations' worth of the seed re-gather vs the staged reuse
+        bench(out, &eng.rt, &format!("{model}/delta rows re-gather x10 (before shape)"), 1, 10, || {
+            for _ in 0..10 {
+                exes.grad_sum_rows(&eng.rt, &ds, removed.as_slice(), &w)?;
+            }
+            Ok(())
+        })?;
+        let sr = exes.stage_rows(&eng.rt, &ds, removed.as_slice())?;
+        bench(out, &eng.rt, &format!("{model}/delta rows staged reuse x10 (after shape)"), 1, 10, || {
+            for _ in 0..10 {
+                let ctx = exes.pass_ctx(&eng.rt, &w)?;
+                exes.grad_rows_staged(&eng.rt, &sr, &ctx)?;
+            }
+            Ok(())
         })?;
 
-        bench("upload w (param literal)", 2, 50, || {
+        bench(out, &eng.rt, &format!("{model}/upload w (param literal)"), 2, 50, || {
             eng.rt.upload(&w, &[spec.p]).map(|_| ())
         })?;
 
@@ -85,20 +166,75 @@ fn main() -> anyhow::Result<()> {
             dgs.push(dg);
         }
         let v: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32()).collect();
-        bench("lbfgs B·v (host compact form)", 2, 50, || {
+        bench(out, &eng.rt, &format!("{model}/lbfgs B·v (incremental gram, cached LU)"), 2, 50, || {
             let _ = hist.bv(&v);
             Ok(())
         })?;
-        bench("lbfgs B·v (AOT artifact)", 2, 20, || {
+        let mut hist_push = hist.clone();
+        let push_pair = (dws[0].clone(), dgs[0].clone());
+        bench(out, &eng.rt, &format!("{model}/lbfgs evicting push (O(mp) gram update)"), 2, 50, || {
+            hist_push.push(push_pair.0.clone(), push_pair.1.clone());
+            Ok(())
+        })?;
+        bench(out, &eng.rt, &format!("{model}/lbfgs B·v (AOT artifact)"), 2, 20, || {
             exes.lbfgs_bv_artifact(&eng.rt, &dws, &dgs, &v).map(|_| ())
         })?;
 
         // pure step arithmetic
         let g = v.clone();
         let mut wc = w.clone();
-        bench("gd step axpy (p floats)", 2, 200, || {
+        bench(out, &eng.rt, &format!("{model}/gd step axpy (p floats)"), 2, 200, || {
             axpy(-0.1, &g, &mut wc);
             Ok(())
+        })?;
+    }
+
+    if want("batch-delete") {
+        println!("== batch-delete end-to-end (small, T=40, r=16) ==");
+        let exes = eng.model("small")?;
+        let spec = exes.spec.clone();
+        let (ds, _test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))?;
+        let traj = full.traj.expect("recorded");
+        let removed = sample_removal(&mut Rng::new(11), ds.n, 16);
+        let out = &mut results;
+        bench(out, &eng.rt, "batch-delete (per-iteration re-upload shape)", 1, 5, || {
+            deltagrad::testing::baseline::delete_gd_seed_shape(
+                &exes, &eng.rt, &ds, &traj, &hp, &removed,
+            )
+            .map(|_| ())
+        })?;
+        bench(out, &eng.rt, "batch-delete delete_gd (staged contexts)", 1, 5, || {
+            batch::delete_gd(&exes, &eng.rt, &ds, &traj, &hp, &removed).map(|_| ())
+        })?;
+        let staged = exes.stage(&eng.rt, &ds, &IndexSet::empty())?;
+        bench(out, &eng.rt, "batch-delete delete_gd_staged (shared dataset)", 1, 5, || {
+            batch::delete_gd_staged(&exes, &eng.rt, &ds, &staged, &traj, &hp, &removed)
+                .map(|_| ())
+        })?;
+    }
+
+    if want("online") {
+        println!("== online end-to-end (small, T=40, group of 4) ==");
+        let exes = eng.model("small")?;
+        let spec = exes.spec.clone();
+        let (ds, _test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))?;
+        let traj = full.traj.expect("recorded");
+        let mut state = OnlineState::new(&exes, &eng.rt, ds, traj, hp)?;
+        // every repetition commits its deletions, so draw fresh victims
+        let mut next_victim = 0usize;
+        bench(&mut results, &eng.rt, "online apply_group (4 deletes)", 1, 10, || {
+            let reqs: Vec<Request> =
+                (0..4).map(|i| Request::Delete(next_victim + i)).collect();
+            next_victim += 4;
+            state.apply_group(&exes, &eng.rt, &reqs).map(|_| ())
         })?;
     }
 
@@ -109,10 +245,14 @@ fn main() -> anyhow::Result<()> {
         let (ds, _test) = synth::train_test_for_spec(&spec, 7, None, None);
         let mut hp = HyperParams::for_dataset("small");
         hp.t = 20;
-        bench("train 20 iters (small, n=1024)", 1, 5, || {
+        bench(&mut results, &eng.rt, "train 20 iters (small, n=1024)", 1, 5, || {
             train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
                 .map(|_| ())
         })?;
+    }
+
+    if let Some(path) = json_path {
+        write_json(&path, &results)?;
     }
     Ok(())
 }

@@ -32,6 +32,12 @@ fn main() -> anyhow::Result<()> {
         let marker = md.lines().find(|l| l.starts_with("###")).unwrap_or("");
         println!("bench {id:>5}: {secs:8.2}s   {marker}");
     }
-    println!("\ntotal: {total:.1}s");
+    let tr = ctx.eng.rt.counters.snapshot();
+    println!(
+        "\ntotal: {total:.1}s   device traffic: {} uploads ({:.1} MB), {} execs",
+        tr.uploads,
+        tr.upload_mb(),
+        tr.execs
+    );
     Ok(())
 }

@@ -46,7 +46,10 @@ pub fn folds(n: usize, k_folds: usize) -> Vec<IndexSet> {
 
 /// Cross-conformal calibration: residuals of every training point under
 /// the fold model that excluded it. Fold models come from DeltaGrad
-/// batch deletion of the fold (vs BaseL: K full retrains).
+/// batch deletion of the fold (vs BaseL: K full retrains). The dataset
+/// stages once for all K passes; each pass stages its fold's rows once
+/// and uploads parameters once per iteration (runtime::engine staging
+/// discipline).
 pub fn cross_conformal_residuals(
     exes: &ModelExes,
     rt: &Runtime,

@@ -23,6 +23,9 @@ use crate::util::vecmath::{axpy, dot};
 
 /// Conjugate-gradient solve of (H + damp·I) z = b where H·v is the
 /// averaged Hessian over `rows` at parameters `w`.
+///
+/// The Hessian-sample rows and the (fixed) parameter vector are staged
+/// once; each CG iteration's H·v uploads only the direction vector.
 #[allow(clippy::too_many_arguments)]
 pub fn cg_solve_hvp(
     exes: &ModelExes,
@@ -37,8 +40,10 @@ pub fn cg_solve_hvp(
 ) -> Result<Vec<f32>> {
     let p = b.len();
     let navg = rows.len() as f64;
+    let sr = exes.stage_rows(rt, ds, rows)?;
+    let ctx = exes.pass_ctx(rt, w)?;
     let hv = |v: &[f32]| -> Result<Vec<f32>> {
-        let mut h = exes.hvp_sum_rows(rt, ds, rows, w, v)?;
+        let mut h = exes.hvp_rows_staged(rt, &sr, &ctx, v)?;
         crate::util::vecmath::scale(&mut h, (1.0 / navg) as f32);
         axpy(damp, v, &mut h);
         Ok(h)

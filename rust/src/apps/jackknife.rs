@@ -24,6 +24,9 @@ pub struct JackknifeResult {
     pub corrected: f64,
     /// number of leave-one-out refits used
     pub n_loo: usize,
+    /// total device traffic of all LOO passes (the dataset stages once
+    /// up front; each pass ships one delta row + per-iteration params)
+    pub transfers: crate::runtime::TransferStats,
 }
 
 /// Estimate the bias of `functional(w)` with leave-one-out DeltaGrad over
@@ -46,14 +49,16 @@ pub fn jackknife_bias(
     let full = functional(w_full);
     let staged = exes.stage(rt, ds, &IndexSet::empty())?;
     let mut acc = 0.0f64;
+    let mut transfers = crate::runtime::TransferStats::default();
     for &i in &picks {
         let removed = IndexSet::from_vec(vec![i]);
         let dg = batch::delete_gd_staged(exes, rt, ds, &staged, traj, hp, &removed)?;
+        transfers.accumulate(&dg.transfers);
         acc += functional(&dg.w);
     }
     let mean_loo = acc / picks.len() as f64;
     let bias = (n as f64 - 1.0) * (mean_loo - full);
-    Ok(JackknifeResult { full, bias, corrected: full - bias, n_loo: picks.len() })
+    Ok(JackknifeResult { full, bias, corrected: full - bias, n_loo: picks.len(), transfers })
 }
 
 #[cfg(test)]

@@ -21,22 +21,17 @@ pub fn per_sample_losses(
     ds: &Dataset,
     w: &[f32],
 ) -> Result<Vec<f64>> {
-    // one row per call through the small executable would be wasteful;
-    // batch rows and difference the masked loss sums instead: loss_i is
-    // obtained by evaluating row singletons in groups via cumulative
-    // masks. Simpler and exact: call per-row in chunks of 1 is O(n) execs;
-    // instead evaluate each row's loss via the grad_small executable on
-    // singleton gathers of up to chunk_small rows with per-row masks.
-    // The cheapest exact scheme with the existing artifacts: for each
-    // gathered group, get the group loss with all rows, then with each
-    // row masked off — O(n) executions. For the prune use-case we only
-    // need a RANKING, so we use the per-row CE computed host-side from
-    // the model's logits... which we do not have. Pragmatic choice:
-    // evaluate singleton groups (1 row per call) — fine for the example
-    // scale, and exact.
+    // Exact per-row losses need O(n) executions of the grad_small
+    // artifact (its stats output is a masked SUM). What they do NOT need
+    // is O(n) data shipping: stage every row (and the parameters) once,
+    // then sweep a singleton mask across the resident buffers — each
+    // row's execution uploads only a chunk_small-float mask.
+    let all: Vec<usize> = (0..ds.n).collect();
+    let sr = exes.stage_rows(rt, ds, &all)?;
+    let ctx = exes.pass_ctx(rt, w)?;
     let mut out = Vec::with_capacity(ds.n);
     for i in 0..ds.n {
-        let (_, stats) = exes.grad_sum_rows(rt, ds, &[i], w)?;
+        let (_, stats) = exes.grad_rows_subset(rt, &sr, &ctx, &[i])?;
         out.push(stats.loss_sum);
     }
     Ok(out)

@@ -14,7 +14,7 @@ use crate::data::{Dataset, IndexSet};
 use crate::deltagrad::batch;
 use crate::runtime::engine::ModelExes;
 use crate::runtime::Runtime;
-use crate::train::Trajectory;
+use crate::train::{self, Trajectory};
 
 /// Leave-one-out valuation result for one sample.
 #[derive(Clone, Debug)]
@@ -32,7 +32,10 @@ pub struct SampleValue {
 ///
 /// `traj` is the cached full-data trajectory; each candidate costs one
 /// DeltaGrad pass (vs a full retrain for the naive approach — that ratio
-/// is exactly the paper's Fig. 4 speedup).
+/// is exactly the paper's Fig. 4 speedup). Train and test sets are
+/// staged once for ALL candidates; within each pass the candidate's
+/// delta row stages once and the parameters upload once per iteration
+/// (runtime::engine staging discipline).
 pub fn leave_one_out_values(
     exes: &ModelExes,
     rt: &Runtime,
@@ -45,13 +48,13 @@ pub fn leave_one_out_values(
 ) -> Result<Vec<SampleValue>> {
     let test_staged = exes.stage(rt, test_ds, &IndexSet::empty())?;
     let train_staged = exes.stage(rt, train_ds, &IndexSet::empty())?;
-    let base_stats = exes.eval_staged(rt, &test_staged, w_full)?;
+    let base_stats = train::evaluate_staged(exes, rt, &test_staged, w_full)?;
     let base_loss = base_stats.mean_loss();
     let mut out = Vec::with_capacity(candidates.len());
     for &i in candidates {
         let removed = IndexSet::from_vec(vec![i]);
         let dg = batch::delete_gd_staged(exes, rt, train_ds, &train_staged, traj, hp, &removed)?;
-        let stats = exes.eval_staged(rt, &test_staged, &dg.w)?;
+        let stats = train::evaluate_staged(exes, rt, &test_staged, &dg.w)?;
         out.push(SampleValue {
             index: i,
             loss_delta: stats.mean_loss() - base_loss,

@@ -5,6 +5,8 @@
 
 use std::time::Duration;
 
+use crate::runtime::TransferStats;
+
 /// Fixed log-scale latency buckets (seconds).
 const BUCKETS: [f64; 12] = [
     0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0, 100.0, f64::INFINITY,
@@ -20,6 +22,11 @@ pub struct Metrics {
     pub exact_iters: u64,
     pub approx_iters: u64,
     pub fallback_iters: u64,
+    /// device traffic of the served passes (see runtime::TransferStats):
+    /// host→device buffer uploads, f32s shipped, artifact executions
+    pub uploads: u64,
+    pub upload_floats: u64,
+    pub execs: u64,
     latency_sum: f64,
     latency_max: f64,
     hist: [u64; 12],
@@ -52,6 +59,23 @@ impl Metrics {
         self.exact_iters += n_exact as u64;
         self.approx_iters += n_approx as u64;
         self.fallback_iters += n_fallback as u64;
+    }
+
+    /// Fold one pass's device traffic into the running totals.
+    pub fn record_transfers(&mut self, t: &TransferStats) {
+        self.uploads += t.uploads;
+        self.upload_floats += t.upload_floats;
+        self.execs += t.execs;
+    }
+
+    /// Mean uploads per served group (the staging-discipline health
+    /// signal: should be ~T + delta-row chunks, not ~3T).
+    pub fn uploads_per_group(&self) -> f64 {
+        if self.groups == 0 {
+            0.0
+        } else {
+            self.uploads as f64 / self.groups as f64
+        }
     }
 
     pub fn mean_latency(&self) -> f64 {
@@ -93,7 +117,8 @@ impl Metrics {
     pub fn render(&self) -> String {
         format!(
             "requests={} groups={} mean_group={:.2} mean_lat={:.4}s p95<={:.3}s max={:.4}s \
-             iters(exact/approx/fallback)={}/{}/{}",
+             iters(exact/approx/fallback)={}/{}/{} \
+             device(uploads={} floats={} execs={} uploads/group={:.1})",
             self.requests,
             self.groups,
             self.mean_group_size(),
@@ -103,6 +128,10 @@ impl Metrics {
             self.exact_iters,
             self.approx_iters,
             self.fallback_iters,
+            self.uploads,
+            self.upload_floats,
+            self.execs,
+            self.uploads_per_group(),
         )
     }
 }
@@ -130,6 +159,19 @@ mod tests {
         assert_eq!(m.mean_latency(), 0.0);
         assert_eq!(m.latency_quantile(0.99), 0.0);
         assert_eq!(m.mean_group_size(), 0.0);
+    }
+
+    #[test]
+    fn transfer_totals_accumulate() {
+        let mut m = Metrics::new();
+        m.record_group(1, &[Duration::from_millis(1)]);
+        m.record_transfers(&TransferStats { uploads: 41, upload_floats: 1000, execs: 50 });
+        m.record_group(1, &[Duration::from_millis(1)]);
+        m.record_transfers(&TransferStats { uploads: 43, upload_floats: 1200, execs: 52 });
+        assert_eq!(m.uploads, 84);
+        assert_eq!(m.upload_floats, 2200);
+        assert_eq!(m.execs, 102);
+        assert!((m.uploads_per_group() - 42.0).abs() < 1e-9);
     }
 
     #[test]

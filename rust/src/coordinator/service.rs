@@ -180,7 +180,7 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
                 });
             }
             Some(Command::Snapshot(reply)) => {
-                let stats = exes.eval_staged(&eng.rt, &test_staged, &w_current)?;
+                let stats = train::evaluate_staged(&exes, &eng.rt, &test_staged, &w_current)?;
                 let _ = reply.send(ModelSnapshot {
                     version,
                     w: w_current.clone(),
@@ -207,6 +207,7 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
                     let lats: Vec<_> = group.iter().map(|p| now - p.arrived).collect();
                     metrics.record_group(n, &lats);
                     metrics.record_outcome(out.n_exact, out.n_approx, out.n_fallback);
+                    metrics.record_transfers(&out.transfers);
                     for p in &group {
                         let _ = p.payload.reply.send(Ok(UpdateReply {
                             version,

@@ -13,6 +13,12 @@
 //! harvested at exact iterations only (Alg. 1 l.8–10); ∇F is the
 //! *full-data* average in GD mode and the *minibatch* average in SGD mode
 //! (§A.1.2), both of which the exact iteration computes anyway.
+//!
+//! Staging discipline (see runtime::engine): the delta rows are gathered
+//! and uploaded ONCE per retrain call (`StagedRows`), and each iteration
+//! uploads the parameter vector ONCE (`PassCtx`), shared by the
+//! delta-row and full-gradient executions. The pass's device traffic is
+//! reported in `RetrainOutput::transfers`.
 
 use anyhow::{bail, Result};
 
@@ -78,6 +84,7 @@ fn run_gd(
         bail!("deleting every sample leaves nothing to train on");
     }
     let t0 = std::time::Instant::now();
+    let transfers0 = rt.counters.snapshot();
     // full original dataset staged once: exact iterations evaluate the
     // full-data gradient (needed for Δg anyway) and subtract/add the
     // delta-row term. Callers that issue many passes over the same data
@@ -88,6 +95,15 @@ fn run_gd(
         None => {
             staged_local = exes.stage(rt, ds, &IndexSet::empty())?;
             &staged_local
+        }
+    };
+    // delta rows staged once per retrain call, reused by all hp.t
+    // iterations (the per-iteration re-gather was the dominant upload)
+    let sr_delta = match &change {
+        Change::Delete(r) => exes.stage_rows(rt, ds, r.as_slice())?,
+        Change::Add(a) => {
+            let all: Vec<usize> = (0..a.n).collect();
+            exes.stage_rows(rt, a, &all)?
         }
     };
     let mut hist = History::new(hp.m);
@@ -125,29 +141,20 @@ fn run_gd(
             }
         }
 
+        // one parameter upload for every call of this iteration
+        let ctx = exes.pass_ctx(rt, &w)?;
         // delta-row gradient sum at the current iterate (always exact,
-        // always cheap: r ≪ n rows through the small-chunk executable)
-        let (g_delta_sum, _) = match &change {
-            Change::Delete(r) => exes.grad_sum_rows(rt, ds, r.as_slice(), &w)?,
-            Change::Add(a) => {
-                let all: Vec<usize> = (0..a.n).collect();
-                exes.grad_sum_rows(rt, a, &all, &w)?
-            }
-        };
+        // always cheap: r ≪ n rows, already device-resident)
+        let (g_delta_sum, _) = exes.grad_rows_staged(rt, &sr_delta, &ctx)?;
 
         let step_scale = -(eta / n_new) as f32;
         if exact {
             n_exact += 1;
-            let (g_full_sum, stats) = exes.grad_sum_staged(rt, staged_full, &w)?;
+            let (g_full_sum, stats) = exes.grad_staged_ctx(rt, staged_full, &ctx)?;
             last_stats = stats;
-            // harvest history pair: Δw = w^I − w_t, Δg = ∇F(w^I) − ∇F(w_t)
-            sub(&w, wt, &mut dw);
-            let mut dg = g_full_sum.clone();
-            crate::util::vecmath::scale(&mut dg, (1.0 / n) as f32);
-            axpy(-1.0, gt, &mut dg);
-            if pair_ok(&dw, &dg, spec.model, hp.curvature_min) {
-                hist.push(dw.clone(), dg);
-            }
+            // harvest Δw = w^I − w_t before stepping (owned, no scratch
+            // clone)
+            let dw_pair: Vec<f32> = w.iter().zip(wt).map(|(a, b)| a - b).collect();
             // exact leave-r-out (or add-r) step
             match &change {
                 Change::Delete(_) => {
@@ -158,6 +165,13 @@ fn run_gd(
                     axpy(step_scale, &g_full_sum, &mut w);
                     axpy(step_scale, &g_delta_sum, &mut w);
                 }
+            }
+            // Δg = ∇F(w^I) − ∇F(w_t): reuse g_full_sum's allocation
+            let mut dg = g_full_sum;
+            crate::util::vecmath::scale(&mut dg, (1.0 / n) as f32);
+            axpy(-1.0, gt, &mut dg);
+            if pair_ok(&dw_pair, &dg, spec.model, hp.curvature_min) {
+                hist.push(dw_pair, dg);
             }
         } else {
             n_approx += 1;
@@ -183,6 +197,7 @@ fn run_gd(
         n_approx,
         n_fallback,
         last_stats,
+        transfers: rt.counters.snapshot().since(transfers0),
     })
 }
 
@@ -226,6 +241,13 @@ pub fn add_gd(
 
 /// SGD batch deletion (§3, eq. S7). Requires the trajectory to carry the
 /// original minibatch schedule (`hp.batch > 0` when training).
+///
+/// The removal set is staged once; per-iteration the removed∩minibatch
+/// term executes over the resident rows with a multiplicity mask (a
+/// sampled-with-replacement batch can hit a removed row twice), so only
+/// the tiny mask vector is uploaded. The full minibatch itself changes
+/// every iteration and is gathered per-iteration, sharing the
+/// iteration's parameter upload.
 pub fn delete_sgd(
     exes: &ModelExes,
     rt: &Runtime,
@@ -239,6 +261,9 @@ pub fn delete_sgd(
         bail!("delete_sgd needs a minibatch schedule; trajectory was GD");
     }
     let t0 = std::time::Instant::now();
+    let transfers0 = rt.counters.snapshot();
+    let rem = removed.as_slice();
+    let sr_rem = exes.stage_rows(rt, ds, rem)?;
     let mut hist = History::new(hp.m);
     let mut w = traj.ws[0].clone();
     let mut dw = vec![0.0f32; spec.p];
@@ -251,12 +276,16 @@ pub fn delete_sgd(
         let gt = &traj.gs[t];
         let batch = &traj.batches[t];
         let b = batch.len() as f64;
-        let in_r: Vec<usize> = batch.iter().copied().filter(|i| removed.contains(*i)).collect();
-        let kept: Vec<usize> = batch.iter().copied().filter(|i| !removed.contains(*i)).collect();
-        if kept.is_empty() {
+        // removed members of this minibatch, as positions into the
+        // staged removal set (multiplicity preserved)
+        let in_r: Vec<usize> = batch
+            .iter()
+            .filter_map(|i| rem.binary_search(i).ok())
+            .collect();
+        let b_new = (batch.len() - in_r.len()) as f64;
+        if b_new == 0.0 {
             continue; // B − ΔB_t == 0: no update this iteration (§3)
         }
-        let b_new = kept.len() as f64;
 
         let mut exact = hp.is_exact_iter(t);
         let mut bv: Option<Vec<f32>> = None;
@@ -279,28 +308,30 @@ pub fn delete_sgd(
             }
         }
 
-        // gradient sum over the removed members of this minibatch (cheap)
+        let ctx = exes.pass_ctx(rt, &w)?;
+        // gradient sum over the removed members of this minibatch (cheap:
+        // mask-only upload over the resident removal rows)
         let (g_rem_sum, _) = if in_r.is_empty() {
             (vec![0.0f32; spec.p], Stats::default())
         } else {
-            exes.grad_sum_rows(rt, ds, &in_r, &w)?
+            exes.grad_rows_subset(rt, &sr_rem, &ctx, &in_r)?
         };
 
         let step_scale = -(eta / b_new) as f32;
         if exact {
             n_exact += 1;
             // full-minibatch gradient at w^I (needed for Δg anyway)
-            let (g_bt_sum, stats) = exes.grad_sum_rows(rt, ds, batch, &w)?;
+            let (g_bt_sum, stats) = exes.grad_rows_gather_ctx(rt, ds, batch, &ctx)?;
             last_stats = stats;
-            sub(&w, wt, &mut dw);
-            let mut dg = g_bt_sum.clone();
-            crate::util::vecmath::scale(&mut dg, (1.0 / b) as f32);
-            axpy(-1.0, gt, &mut dg);
-            if pair_ok(&dw, &dg, spec.model, hp.curvature_min) {
-                hist.push(dw.clone(), dg);
-            }
+            let dw_pair: Vec<f32> = w.iter().zip(wt).map(|(a, b)| a - b).collect();
             axpy(step_scale, &g_bt_sum, &mut w);
             axpy(-step_scale, &g_rem_sum, &mut w);
+            let mut dg = g_bt_sum;
+            crate::util::vecmath::scale(&mut dg, (1.0 / b) as f32);
+            axpy(-1.0, gt, &mut dg);
+            if pair_ok(&dw_pair, &dg, spec.model, hp.curvature_min) {
+                hist.push(dw_pair, dg);
+            }
         } else {
             n_approx += 1;
             let mut g_bt_avg = bv.unwrap();
@@ -316,5 +347,6 @@ pub fn delete_sgd(
         n_approx,
         n_fallback,
         last_stats,
+        transfers: rt.counters.snapshot().since(transfers0),
     })
 }

@@ -16,6 +16,7 @@ pub mod batch;
 pub mod online;
 
 use crate::runtime::engine::Stats;
+use crate::runtime::TransferStats;
 
 /// Outcome of one incremental retraining run.
 pub struct RetrainOutput {
@@ -31,6 +32,11 @@ pub struct RetrainOutput {
     pub n_fallback: usize,
     /// stats of the last gradient evaluation (training loss view)
     pub last_stats: Stats,
+    /// device traffic of this pass (uploads / floats / executions);
+    /// with the staged-context layer the delta rows upload once per
+    /// PASS and the parameters once per ITERATION — see
+    /// docs/PERFORMANCE.md
+    pub transfers: TransferStats,
 }
 
 /// Why an approx-eligible iteration fell back to an exact step.

@@ -8,13 +8,18 @@
 //! refresh (w_t, g_t) with exactly-computed values, approximate
 //! iterations store the leave-one-out approximated gradient (eq. S62) so
 //! the next request's history stays anchored.
+//!
+//! Staging discipline: one `apply_group` call stages the group's delta
+//! rows (deleted base rows + incoming additions) and the added tail
+//! ONCE, then every one of the `hp.t` iterations runs against the
+//! resident buffers with a single shared parameter upload (`PassCtx`).
 
 use anyhow::{bail, Result};
 
 use crate::config::{HyperParams, ModelKind};
 use crate::data::{Dataset, IndexSet};
 use crate::lbfgs::History;
-use crate::runtime::engine::{ModelExes, Staged, Stats};
+use crate::runtime::engine::{ModelExes, PassCtx, Staged, StagedRows, Stats};
 use crate::runtime::Runtime;
 use crate::util::vecmath::{axpy, dot, scale, sub};
 
@@ -67,41 +72,41 @@ impl OnlineState {
     }
 
     /// Sum gradient over the current dataset (staged base minus removals,
-    /// plus added tail) at `w`.
+    /// plus the pre-staged added tail) at the iteration's parameters.
     fn grad_sum_current(
         &self,
         exes: &ModelExes,
         rt: &Runtime,
-        w: &[f32],
+        ctx: &PassCtx,
+        sr_tail: Option<&StagedRows>,
     ) -> Result<(Vec<f32>, Stats)> {
-        let (mut g, mut stats) = exes.grad_sum_staged(rt, &self.staged, w)?;
-        if self.added.n > 0 {
-            let all: Vec<usize> = (0..self.added.n).collect();
-            let (ga, sa) = exes.grad_sum_rows(rt, &self.added, &all, w)?;
+        let (mut g, mut stats) = exes.grad_staged_ctx(rt, &self.staged, ctx)?;
+        if let Some(sr) = sr_tail {
+            let (ga, sa) = exes.grad_rows_staged(rt, sr, ctx)?;
             axpy(1.0, &ga, &mut g);
             stats.accumulate(&sa);
         }
         Ok((g, stats))
     }
 
-    /// Signed gradient sum of all changed samples in the group at `w`:
-    /// `Σ_add ∇F_i(w) − Σ_del ∇F_i(w)`.
+    /// Signed gradient sum of all changed samples in the group at the
+    /// iteration's parameters: `Σ_add ∇F_i(w) − Σ_del ∇F_i(w)`, over the
+    /// group's pre-staged rows.
     fn grad_sum_group(
         &self,
         exes: &ModelExes,
         rt: &Runtime,
-        del_rows: &[usize],
-        add_ds: &Dataset,
-        w: &[f32],
+        ctx: &PassCtx,
+        sr_del: Option<&StagedRows>,
+        sr_add: Option<&StagedRows>,
     ) -> Result<Vec<f32>> {
         let mut g = vec![0.0f32; exes.spec.p];
-        if !del_rows.is_empty() {
-            let (gd, _) = exes.grad_sum_rows(rt, &self.base, del_rows, w)?;
+        if let Some(sr) = sr_del {
+            let (gd, _) = exes.grad_rows_staged(rt, sr, ctx)?;
             axpy(-1.0, &gd, &mut g);
         }
-        if add_ds.n > 0 {
-            let all: Vec<usize> = (0..add_ds.n).collect();
-            let (ga, _) = exes.grad_sum_rows(rt, add_ds, &all, w)?;
+        if let Some(sr) = sr_add {
+            let (ga, _) = exes.grad_rows_staged(rt, sr, ctx)?;
             axpy(1.0, &ga, &mut g);
         }
         Ok(g)
@@ -127,6 +132,7 @@ impl OnlineState {
         reqs: &[Request],
     ) -> Result<RetrainOutput> {
         let t0 = std::time::Instant::now();
+        let transfers0 = rt.counters.snapshot();
         let spec = &exes.spec;
         let hp = self.hp.clone();
         // split + validate the group
@@ -154,6 +160,24 @@ impl OnlineState {
         if n_new <= 0.0 {
             bail!("deleting the last sample");
         }
+        // the group's delta rows + the added tail: staged once per pass
+        let sr_del = if del_rows.is_empty() {
+            None
+        } else {
+            Some(exes.stage_rows(rt, &self.base, &del_rows)?)
+        };
+        let sr_add = if add_ds.n == 0 {
+            None
+        } else {
+            let all: Vec<usize> = (0..add_ds.n).collect();
+            Some(exes.stage_rows(rt, &add_ds, &all)?)
+        };
+        let sr_tail = if self.added.n == 0 {
+            None
+        } else {
+            let all: Vec<usize> = (0..self.added.n).collect();
+            Some(exes.stage_rows(rt, &self.added, &all)?)
+        };
         let mut hist = History::new(hp.m);
         let mut w = self.traj.ws[0].clone();
         let mut dw = vec![0.0f32; spec.p];
@@ -183,27 +207,32 @@ impl OnlineState {
                 }
             }
 
+            // one parameter upload shared by every call this iteration
+            let ctx = exes.pass_ctx(rt, &w)?;
             // signed gradient sum of the changed samples at the current
-            // iterate (always exact; |group| ≪ n rows)
-            let g_chg = self.grad_sum_group(exes, rt, &del_rows, &add_ds, &w)?;
+            // iterate (always exact; |group| ≪ n resident rows)
+            let g_chg =
+                self.grad_sum_group(exes, rt, &ctx, sr_del.as_ref(), sr_add.as_ref())?;
             // average gradient over the NEW dataset at the new iterate:
             // g_new_avg = (n_cur * g_cur_avg + g_chg) / n_new        (S62)
             let mut g_new_avg;
             if exact {
                 n_exact += 1;
-                let (g_sum_cur, stats) = self.grad_sum_current(exes, rt, &w)?;
+                let (g_sum_cur, stats) =
+                    self.grad_sum_current(exes, rt, &ctx, sr_tail.as_ref())?;
                 last_stats = stats;
                 // harvest (Δw, Δg) against the cached trajectory
-                sub(&w, &self.traj.ws[t], &mut dw);
+                let dw_pair: Vec<f32> =
+                    w.iter().zip(&self.traj.ws[t]).map(|(a, b)| a - b).collect();
                 let mut dg = g_sum_cur.clone();
                 scale(&mut dg, (1.0 / n_cur) as f32);
                 axpy(-1.0, &self.traj.gs[t], &mut dg);
                 let curv_ok = {
-                    let sw = dot(&dw, &dw);
-                    sw > 1e-20 && dot(&dg, &dw) / sw > 0.0
+                    let sw = dot(&dw_pair, &dw_pair);
+                    sw > 1e-20 && dot(&dg, &dw_pair) / sw > 0.0
                 };
                 if curv_ok {
-                    hist.push(dw.clone(), dg);
+                    hist.push(dw_pair, dg);
                 }
                 g_new_avg = g_sum_cur;
                 axpy(1.0, &g_chg, &mut g_new_avg);
@@ -216,11 +245,13 @@ impl OnlineState {
                 scale(&mut g_new_avg, (n_cur / n_new) as f32);
                 axpy(1.0 / n_new as f32, &g_chg, &mut g_new_avg);
             }
-            // rewrite the cache for the next request (Alg. 3 l.36/43)
+            // rewrite the cache for the next request (Alg. 3 l.36/43);
+            // the gradient moves into the cache and the step reads it
+            // from there — no scratch copy
             self.traj.ws[t] = w.clone();
-            self.traj.gs[t] = g_new_avg.clone();
+            self.traj.gs[t] = g_new_avg;
             // take the step
-            axpy(-(eta as f32), &g_new_avg, &mut w);
+            axpy(-(eta as f32), &self.traj.gs[t], &mut w);
         }
         self.traj.ws[hp.t] = w.clone();
         self.traj.n_effective = n_new as usize;
@@ -242,6 +273,7 @@ impl OnlineState {
             n_approx,
             n_fallback,
             last_stats,
+            transfers: rt.counters.snapshot().since(transfers0),
         })
     }
 

@@ -9,7 +9,8 @@ use anyhow::Result;
 
 use crate::config::HyperParams;
 use crate::data::{synth, Dataset, IndexSet};
-use crate::runtime::{Engine, ModelExes};
+use crate::runtime::engine::{Staged, Stats};
+use crate::runtime::{Engine, ModelExes, Runtime};
 use crate::train::{self, TrainOpts, Trajectory};
 
 /// Experiment context: engine + per-dataset trained-state cache so the
@@ -31,11 +32,22 @@ pub struct TrainedModel {
     pub exes: Rc<ModelExes>,
     pub train_ds: Dataset,
     pub test_ds: Dataset,
+    /// test set staged once; every sweep-point eval reuses the device
+    /// buffers instead of re-shipping the rows
+    pub test_staged: Staged,
     pub hp: HyperParams,
     pub w_full: Vec<f32>,
     pub traj: Trajectory,
     /// seconds the original full training took (reported context)
     pub train_seconds: f64,
+}
+
+impl TrainedModel {
+    /// Mean loss / accuracy of `w` on the cached, device-resident test
+    /// set (only the parameter vector is uploaded).
+    pub fn eval_test(&self, rt: &Runtime, w: &[f32]) -> Result<Stats> {
+        train::evaluate_staged(&self.exes, rt, &self.test_staged, w)
+    }
 }
 
 impl Ctx {
@@ -86,10 +98,12 @@ impl Ctx {
             &train_ds,
             &TrainOpts::full(&hp, &IndexSet::empty()),
         )?;
+        let test_staged = exes.stage(&self.eng.rt, &test_ds, &IndexSet::empty())?;
         let tm = Rc::new(TrainedModel {
             exes,
             train_ds,
             test_ds,
+            test_staged,
             hp,
             w_full: out.w,
             traj: out.traj.expect("recorded"),

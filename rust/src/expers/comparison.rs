@@ -65,7 +65,7 @@ pub fn d3(ctx: &mut Ctx) -> Result<String> {
                 ("WarmStart(T/5)", ws.seconds, &ws.w),
             ] {
                 let dist = dist2(w, &basel.w);
-                let stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, w)?;
+                let stats = tm.eval_test(&ctx.eng.rt, w)?;
                 eprintln!(
                     "  [d3] {name} r={rate}: {method} {secs:.2}s dist {dist:.2e} acc {:.4}",
                     stats.accuracy()

@@ -90,8 +90,8 @@ pub fn run_stream(
         w_u = out.w;
     }
 
-    let b_stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, &w_u)?;
-    let d_stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, &w_i)?;
+    let b_stats = tm.eval_test(&ctx.eng.rt, &w_u)?;
+    let d_stats = tm.eval_test(&ctx.eng.rt, &w_i)?;
     Ok(OnlineResult {
         dataset: name.to_string(),
         direction: dir,

@@ -66,8 +66,8 @@ pub fn run_point(
             (basel, dg)
         }
     };
-    let b_stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, &basel.w)?;
-    let d_stats = train::evaluate(&tm.exes, &ctx.eng.rt, &tm.test_ds, &dg.w)?;
+    let b_stats = tm.eval_test(&ctx.eng.rt, &basel.w)?;
+    let d_stats = tm.eval_test(&ctx.eng.rt, &dg.w)?;
     Ok(RatePoint {
         dataset: name.to_string(),
         rate,

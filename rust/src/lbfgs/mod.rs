@@ -7,36 +7,100 @@
 //! (paper Algorithm 1 l.8–10, Algorithm 2, §A.2.1).
 //!
 //! Per the paper's Discussion (small-matrix ops don't pay for GPU
-//! shipping), the O(m²p) contractions + O(m³) solve run natively here;
+//! shipping), the contractions + O(m³) solve run natively here;
 //! `ModelExes::lbfgs_bv_artifact` provides the accelerator variant for
 //! the `abl-lbfgs-host` ablation.
+//!
+//! The history is a true ring buffer: pushes and evictions update the
+//! compact-form Gram blocks SᵀS (Δwᵀ Δw), SᵀY (Δwᵀ Δg) and YᵀY (Δgᵀ Δg)
+//! **incrementally** — O(mp) dot products for the new row/column plus an
+//! O(m²) shift on eviction — instead of recomputing the full O(m²p)
+//! contraction inside every `bv()` call. The dense 2m x 2m middle-system
+//! factorization is cached between `bv()` calls while the history is
+//! unchanged, so an approximate iteration pays O(mp) for the
+//! v-dependent terms and O(m²) for the solve.
 
-use crate::util::vecmath::{dot, solve_dense};
+use std::cell::RefCell;
+use std::collections::VecDeque;
 
-/// Ring buffer of the last `m` (Δw, Δg) pairs, oldest first.
+use crate::util::vecmath::{dot, lu_factor, LuFactors};
+
+/// Cached factorization of the compact-form middle system, valid until
+/// the next push/clear.
+#[derive(Clone, Debug)]
+struct MiddleCache {
+    sigma: f64,
+    lu: LuFactors,
+}
+
+/// Ring buffer of the last `m` (Δw, Δg) pairs, oldest first, with the
+/// compact-form Gram blocks maintained incrementally.
 #[derive(Clone, Debug)]
 pub struct History {
     m: usize,
-    dws: Vec<Vec<f32>>,
-    dgs: Vec<Vec<f32>>,
+    dws: VecDeque<Vec<f32>>,
+    dgs: VecDeque<Vec<f32>>,
+    /// SᵀS, logical (oldest-first) indices, row-major with stride `m`
+    ss: Vec<f64>,
+    /// SᵀY: ss-style layout; `sy[i*m+j] = Δw_i · Δg_j` (NOT symmetric)
+    sy: Vec<f64>,
+    /// YᵀY, same layout (diagnostic + artifact parity; cheap to carry)
+    yy: Vec<f64>,
+    /// middle-system factorization, rebuilt lazily after each push
+    cache: RefCell<Option<MiddleCache>>,
 }
 
 impl History {
     pub fn new(m: usize) -> Self {
         assert!(m >= 1);
-        History { m, dws: Vec::new(), dgs: Vec::new() }
+        History {
+            m,
+            dws: VecDeque::with_capacity(m + 1),
+            dgs: VecDeque::with_capacity(m + 1),
+            ss: vec![0.0; m * m],
+            sy: vec![0.0; m * m],
+            yy: vec![0.0; m * m],
+            cache: RefCell::new(None),
+        }
     }
 
-    /// Push a pair; evicts the oldest beyond capacity (Alg. 1: "removing
-    /// the oldest entry ... at every period").
+    /// Push a pair by value; evicts the oldest beyond capacity (Alg. 1:
+    /// "removing the oldest entry ... at every period"). Gram upkeep is
+    /// O(mp) for the new row/column + O(m²) for the eviction shift.
     pub fn push(&mut self, dw: Vec<f32>, dg: Vec<f32>) {
         assert_eq!(dw.len(), dg.len());
-        self.dws.push(dw);
-        self.dgs.push(dg);
-        if self.dws.len() > self.m {
-            self.dws.remove(0);
-            self.dgs.remove(0);
+        let m = self.m;
+        if self.dws.len() == m {
+            self.dws.pop_front();
+            self.dgs.pop_front();
+            // evict logical row/column 0: shift the blocks up-left
+            for i in 0..m - 1 {
+                for j in 0..m - 1 {
+                    self.ss[i * m + j] = self.ss[(i + 1) * m + (j + 1)];
+                    self.sy[i * m + j] = self.sy[(i + 1) * m + (j + 1)];
+                    self.yy[i * m + j] = self.yy[(i + 1) * m + (j + 1)];
+                }
+            }
         }
+        let k = self.dws.len(); // logical index of the new pair
+        for j in 0..k {
+            let sj = &self.dws[j];
+            let yj = &self.dgs[j];
+            let ss_kj = dot(&dw, sj);
+            self.ss[k * m + j] = ss_kj;
+            self.ss[j * m + k] = ss_kj;
+            self.sy[k * m + j] = dot(&dw, yj);
+            self.sy[j * m + k] = dot(sj, &dg);
+            let yy_kj = dot(&dg, yj);
+            self.yy[k * m + j] = yy_kj;
+            self.yy[j * m + k] = yy_kj;
+        }
+        self.ss[k * m + k] = dot(&dw, &dw);
+        self.sy[k * m + k] = dot(&dw, &dg);
+        self.yy[k * m + k] = dot(&dg, &dg);
+        self.dws.push_back(dw);
+        self.dgs.push_back(dg);
+        self.cache.replace(None);
     }
 
     pub fn len(&self) -> usize {
@@ -51,45 +115,130 @@ impl History {
         self.m
     }
 
-    pub fn pairs(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
-        (&self.dws, &self.dgs)
+    /// The i-th oldest stored pair.
+    pub fn pair(&self, i: usize) -> (&[f32], &[f32]) {
+        (&self.dws[i], &self.dgs[i])
+    }
+
+    /// Iterate stored pairs oldest-first.
+    pub fn iter_pairs(&self) -> impl Iterator<Item = (&[f32], &[f32])> {
+        self.dws
+            .iter()
+            .zip(self.dgs.iter())
+            .map(|(s, y)| (s.as_slice(), y.as_slice()))
     }
 
     pub fn clear(&mut self) {
         self.dws.clear();
         self.dgs.clear();
+        self.cache.replace(None);
+        // gram blocks are only read up to len(), no need to zero them
     }
 
     /// Minimum curvature ratio Δg·Δw / ‖Δw‖² across stored pairs — the
-    /// Algorithm-4 convexity gate for non-convex models. Returns None when
-    /// empty.
+    /// Algorithm-4 convexity gate for non-convex models. O(m) reads from
+    /// the Gram diagonals (the dots were paid at push time). Returns None
+    /// when empty.
     pub fn min_curvature(&self) -> Option<f64> {
         if self.is_empty() {
             return None;
         }
+        let m = self.m;
         let mut min = f64::MAX;
-        for (dw, dg) in self.dws.iter().zip(&self.dgs) {
-            let sw = dot(dw, dw);
+        for i in 0..self.len() {
+            let sw = self.ss[i * m + i];
             if sw == 0.0 {
                 return Some(0.0);
             }
-            min = min.min(dot(dg, dw) / sw);
+            min = min.min(self.sy[i * m + i] / sw);
         }
         Some(min)
+    }
+
+    /// Build (and cache) the middle-system factorization for the current
+    /// history. Returns None when the last Δw is zero or the system is
+    /// singular.
+    fn middle(&self) -> Option<MiddleCache> {
+        if let Some(c) = self.cache.borrow().as_ref() {
+            return Some(c.clone());
+        }
+        let mlen = self.len();
+        let m = self.m;
+        let l = mlen - 1;
+        let ss_last = self.ss[l * m + l];
+        if ss_last == 0.0 {
+            return None;
+        }
+        let sigma = self.sy[l * m + l] / ss_last;
+        let n2 = 2 * mlen;
+        let mut mmat = vec![0.0f64; n2 * n2];
+        for i in 0..mlen {
+            for j in 0..mlen {
+                mmat[i * n2 + j] = sigma * self.ss[i * m + j];
+                // L: strictly lower part of SᵀY
+                mmat[i * n2 + (mlen + j)] = if i > j { self.sy[i * m + j] } else { 0.0 };
+                // Lᵀ
+                mmat[(mlen + i) * n2 + j] = if j > i { self.sy[j * m + i] } else { 0.0 };
+                // -D
+                mmat[(mlen + i) * n2 + (mlen + j)] =
+                    if i == j { -self.sy[i * m + i] } else { 0.0 };
+            }
+        }
+        let lu = lu_factor(mmat, n2).ok()?;
+        let built = MiddleCache { sigma, lu };
+        self.cache.replace(Some(built.clone()));
+        Some(built)
     }
 
     /// Compact-form B·v (Byrd, Nocedal & Schnabel 1994 Thm 2.3; oracle:
     /// python ref.lbfgs_hvp_ref). Falls back to `None` when the middle
     /// system is singular (caller then evaluates the gradient exactly).
     pub fn bv(&self, v: &[f32]) -> Option<Vec<f32>> {
-        let m = self.dws.len();
+        let mlen = self.len();
+        if mlen == 0 {
+            return None;
+        }
+        let p = v.len();
+        let mid = self.middle()?;
+        let sigma = mid.sigma;
+        let mut q = vec![0.0f64; 2 * mlen];
+        for i in 0..mlen {
+            q[i] = sigma * dot(&self.dws[i], v);
+            q[mlen + i] = dot(&self.dgs[i], v);
+        }
+        mid.lu.solve(&mut q);
+        // Bv = sigma*v - sigma*S c1 - Y c2
+        let mut out = vec![0.0f32; p];
+        for (o, vi) in out.iter_mut().zip(v) {
+            *o = sigma as f32 * vi;
+        }
+        for i in 0..mlen {
+            let c1 = (sigma * q[i]) as f32;
+            let c2 = q[mlen + i] as f32;
+            for (j, o) in out.iter_mut().enumerate() {
+                *o -= c1 * self.dws[i][j] + c2 * self.dgs[i][j];
+            }
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::vecmath::solve_dense;
+    use crate::util::Rng;
+
+    /// Naive recompute oracle: the seed implementation of `bv()`, which
+    /// rebuilds every Gram contraction and solves from scratch per call.
+    fn bv_naive(dws: &[Vec<f32>], dgs: &[Vec<f32>], v: &[f32]) -> Option<Vec<f32>> {
+        let m = dws.len();
         if m == 0 {
             return None;
         }
         let p = v.len();
-        let s = &self.dws;
-        let y = &self.dgs;
-        // sigma from the last pair
+        let s = dws;
+        let y = dgs;
         let sl = &s[m - 1];
         let yl = &y[m - 1];
         let ss_last = dot(sl, sl);
@@ -97,9 +246,8 @@ impl History {
             return None;
         }
         let sigma = dot(yl, sl) / ss_last;
-        // middle matrix blocks
-        let mut sts = vec![0.0f64; m * m]; // S^T S
-        let mut sty = vec![0.0f64; m * m]; // S^T Y
+        let mut sts = vec![0.0f64; m * m];
+        let mut sty = vec![0.0f64; m * m];
         for i in 0..m {
             for j in 0..m {
                 sts[i * m + j] = dot(&s[i], &s[j]);
@@ -111,11 +259,8 @@ impl History {
         for i in 0..m {
             for j in 0..m {
                 mmat[i * n2 + j] = sigma * sts[i * m + j];
-                // L: strictly lower part of S^T Y
                 mmat[i * n2 + (m + j)] = if i > j { sty[i * m + j] } else { 0.0 };
-                // L^T
                 mmat[(m + i) * n2 + j] = if j > i { sty[j * m + i] } else { 0.0 };
-                // -D
                 mmat[(m + i) * n2 + (m + j)] = if i == j { -sty[i * m + i] } else { 0.0 };
             }
         }
@@ -125,7 +270,6 @@ impl History {
             q[m + i] = dot(&y[i], v);
         }
         solve_dense(&mut mmat, &mut q).ok()?;
-        // Bv = sigma*v - sigma*S c1 - Y c2
         let mut out = vec![0.0f32; p];
         for (o, vi) in out.iter_mut().zip(v) {
             *o = sigma as f32 * vi;
@@ -139,12 +283,6 @@ impl History {
         }
         Some(out)
     }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::Rng;
 
     /// History pairs consistent with an SPD Hessian H: dg = H dw.
     fn curvature_pairs(seed: u64, m: usize, p: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f64>>) {
@@ -195,8 +333,50 @@ mod tests {
         h.push(vec![2.0], vec![2.0]);
         h.push(vec![3.0], vec![3.0]);
         assert_eq!(h.len(), 2);
-        assert_eq!(h.pairs().0[0], vec![2.0]);
-        assert_eq!(h.pairs().0[1], vec![3.0]);
+        assert_eq!(h.pair(0).0, &[2.0]);
+        assert_eq!(h.pair(1).0, &[3.0]);
+        let pairs: Vec<_> = h.iter_pairs().collect();
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[1].1, &[3.0]);
+    }
+
+    #[test]
+    fn incremental_gram_matches_naive_oracle_across_push_evict() {
+        // the satellite equivalence test: a long push sequence (3x the
+        // capacity, so every push after the m-th evicts) must keep bv()
+        // within 1e-6 of the seed recompute-everything oracle, including
+        // repeated bv() calls that exercise the cached factorization.
+        let mut rng = Rng::new(0xB1F);
+        for m in 1..=4usize {
+            let p = 24;
+            let (dws, dgs, _) = curvature_pairs(100 + m as u64, 3 * m, p);
+            let mut h = History::new(m);
+            let mut win_s: Vec<Vec<f32>> = Vec::new();
+            let mut win_y: Vec<Vec<f32>> = Vec::new();
+            for (dw, dg) in dws.iter().zip(&dgs) {
+                h.push(dw.clone(), dg.clone());
+                win_s.push(dw.clone());
+                win_y.push(dg.clone());
+                if win_s.len() > m {
+                    win_s.remove(0);
+                    win_y.remove(0);
+                }
+                for _ in 0..2 {
+                    let v: Vec<f32> = (0..p).map(|_| rng.gaussian_f32()).collect();
+                    let got = h.bv(&v).unwrap();
+                    let want = bv_naive(&win_s, &win_y, &v).unwrap();
+                    let denom = want.iter().map(|x| x.abs() as f64).fold(1.0, f64::max);
+                    for i in 0..p {
+                        assert!(
+                            ((got[i] - want[i]).abs() as f64) / denom < 1e-6,
+                            "m={m} i={i}: {} vs {}",
+                            got[i],
+                            want[i]
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]
@@ -204,9 +384,10 @@ mod tests {
         // B s_last == y_last (defining quasi-Newton property)
         for m in 1..=4 {
             let h = filled(42 + m as u64, m, 30);
-            let (dws, dgs) = h.pairs();
-            let bs = h.bv(&dws[m - 1]).unwrap();
-            let want = &dgs[m - 1];
+            let (s_last, y_last) = h.pair(m - 1);
+            let s_last = s_last.to_vec();
+            let want = y_last.to_vec();
+            let bs = h.bv(&s_last).unwrap();
             for i in 0..30 {
                 let denom = want.iter().map(|x| x.abs()).fold(1.0f32, f32::max);
                 assert!(
@@ -295,6 +476,18 @@ mod tests {
     }
 
     #[test]
+    fn curvature_gate_survives_eviction() {
+        // after the negative-curvature pair is evicted, the gate must
+        // reflect only the live window (exercises the Gram shift)
+        let mut h = History::new(2);
+        h.push(vec![0.0, 1.0], vec![0.0, -0.5]); // curvature -0.5
+        h.push(vec![1.0, 0.0], vec![2.0, 0.0]); // curvature 2
+        h.push(vec![0.0, 2.0], vec![0.0, 2.0]); // curvature 0.5, evicts -0.5
+        let c = h.min_curvature().unwrap();
+        assert!((c - 0.5).abs() < 1e-9, "{c}");
+    }
+
+    #[test]
     fn singular_system_returns_none() {
         let mut h = History::new(2);
         // duplicate pairs -> singular middle matrix
@@ -306,5 +499,18 @@ mod tests {
         let mut h2 = History::new(1);
         h2.push(vec![0.0, 0.0], vec![1.0, 1.0]);
         assert!(h2.bv(&[1.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn clear_resets_state() {
+        let mut h = filled(11, 3, 10);
+        assert!(h.bv(&vec![1.0; 10]).is_some());
+        h.clear();
+        assert!(h.is_empty());
+        assert!(h.bv(&vec![1.0; 10]).is_none());
+        // reusable after clear
+        h.push(vec![1.0; 10], vec![2.0; 10]);
+        assert_eq!(h.len(), 1);
+        assert!(h.bv(&vec![1.0; 10]).is_some());
     }
 }

@@ -2,17 +2,28 @@
 //!
 //! This is the bridge between the L3 coordinator and the L1/L2 compute:
 //! every gradient DeltaGrad ever takes flows through `ModelExes` calls to
-//! AOT-compiled executables. Datasets are *staged* once as device buffers
-//! (X / one-hot Y per chunk); per-iteration work uploads only the current
-//! parameter vector (and, for removals, refreshed masks) — the same
-//! "don't re-ship the dataset" discipline the paper's Discussion section
-//! identifies as the GPU bottleneck.
+//! AOT-compiled executables. The staging discipline (the paper's
+//! Discussion section: don't re-ship data the device already holds) has
+//! three layers:
+//!
+//! * [`Staged`] — a full dataset uploaded once (X / one-hot Y / mask per
+//!   chunk); per-request work only flips masks.
+//! * [`StagedRows`] — a fixed row subset (the removed/added delta rows of
+//!   one retrain call) gathered + uploaded **once per retrain** and
+//!   reused across all `hp.t` iterations.
+//! * [`PassCtx`] — one iteration's parameter vector uploaded **once per
+//!   iteration** and shared between the delta-row gradient, the full
+//!   staged gradient, and HVP calls.
+//!
+//! All uploads/executions are tallied by `Runtime::counters`, so the
+//! once-per-pass / once-per-iteration invariants are testable
+//! (tests/staging.rs) and benchable (benches/micro.rs --json).
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use super::{exec_tuple, literal_f32, Runtime};
+use super::{literal_f32, Runtime};
 use crate::config::{self, ModelSpec};
 use crate::data::{Dataset, IndexSet};
 
@@ -76,6 +87,9 @@ struct StagedChunk {
     y: xla::PjRtBuffer,
     mask: xla::PjRtBuffer,
     mask_host: Vec<f32>,
+    /// in-range rows currently masked out (removed); lets
+    /// `update_removed` skip chunks the removal set never touched
+    zeros: usize,
 }
 
 /// A dataset staged on device for repeated full-gradient passes.
@@ -83,6 +97,33 @@ pub struct Staged {
     chunks: Vec<StagedChunk>,
     pub n: usize,
     chunk: usize,
+}
+
+/// One `chunk_small`-padded group of explicitly gathered rows.
+struct RowChunk {
+    x: xla::PjRtBuffer,
+    y: xla::PjRtBuffer,
+    mask: xla::PjRtBuffer,
+    /// real (non-padding) rows in this group
+    rows: usize,
+}
+
+/// A fixed row subset (the delta rows of one retrain call) staged on
+/// device **once** and reused across every iteration of the pass.
+/// Row i of the original `idxs` argument lives at staged position i:
+/// chunk `i / chunk_small`, slot `i % chunk_small` (see
+/// [`ModelExes::grad_rows_subset`]).
+pub struct StagedRows {
+    chunks: Vec<RowChunk>,
+    pub n_rows: usize,
+    chunk: usize,
+}
+
+/// One iteration's parameter vector, uploaded once and shared between
+/// every gradient / HVP call of that iteration. Only valid against the
+/// `ModelExes` that created it (the buffer has that spec's `p`).
+pub struct PassCtx {
+    wbuf: xla::PjRtBuffer,
 }
 
 impl ModelExes {
@@ -98,6 +139,19 @@ impl ModelExes {
         })
     }
 
+    /// Upload the parameter vector for one iteration's worth of calls.
+    pub fn pass_ctx(&self, rt: &Runtime, w: &[f32]) -> Result<PassCtx> {
+        if w.len() != self.spec.p {
+            bail!(
+                "parameter vector length {} does not match spec {} (p={})",
+                w.len(),
+                self.spec.name,
+                self.spec.p
+            );
+        }
+        Ok(PassCtx { wbuf: rt.upload(w, &[self.spec.p])? })
+    }
+
     /// Stage a dataset (with `removed` rows masked out) as device buffers.
     pub fn stage(&self, rt: &Runtime, ds: &Dataset, removed: &IndexSet) -> Result<Staged> {
         let spec = &self.spec;
@@ -111,18 +165,49 @@ impl ModelExes {
         let mut chunks = Vec::with_capacity(ds.n_chunks(c));
         for ci in 0..ds.n_chunks(c) {
             let (x, y, mask) = ds.chunk_padded(ci, c, removed);
+            let rows = ((ci + 1) * c).min(ds.n) - ci * c;
+            let zeros = mask[..rows].iter().filter(|&&m| m == 0.0).count();
             chunks.push(StagedChunk {
                 x: rt.upload(&x, &[c, spec.da])?,
                 y: rt.upload(&y, &[c, spec.k])?,
                 mask: rt.upload(&mask, &[c])?,
                 mask_host: mask,
+                zeros,
             });
         }
         Ok(Staged { chunks, n: ds.n, chunk: c })
     }
 
+    /// Gather + upload an explicit row subset once, for reuse across a
+    /// whole retrain pass. Empty `idxs` stages nothing (zero gradient).
+    pub fn stage_rows(&self, rt: &Runtime, ds: &Dataset, idxs: &[usize]) -> Result<StagedRows> {
+        let spec = &self.spec;
+        if ds.da != spec.da || ds.k != spec.k {
+            bail!(
+                "dataset shape ({}, {}) does not match spec {} ({}, {})",
+                ds.da, ds.k, spec.name, spec.da, spec.k
+            );
+        }
+        let cs = spec.chunk_small;
+        let mut chunks = Vec::with_capacity(idxs.len().div_ceil(cs.max(1)));
+        let mut remaining = idxs.len();
+        for (x, y, mask) in ds.gather_padded(idxs, cs) {
+            let rows = remaining.min(cs);
+            remaining -= rows;
+            chunks.push(RowChunk {
+                x: rt.upload(&x, &[cs, spec.da])?,
+                y: rt.upload(&y, &[cs, spec.k])?,
+                mask: rt.upload(&mask, &[cs])?,
+                rows,
+            });
+        }
+        Ok(StagedRows { chunks, n_rows: idxs.len(), chunk: cs })
+    }
+
     /// Update the removal masks of a staged dataset in place; only chunks
-    /// whose mask changed are re-uploaded.
+    /// the removal set (or a previous removal) touches are rebuilt, and
+    /// only changed masks are re-uploaded. Mask construction reuses one
+    /// scratch buffer across chunks.
     pub fn update_removed(
         &self,
         rt: &Runtime,
@@ -131,38 +216,51 @@ impl ModelExes {
         removed: &IndexSet,
     ) -> Result<usize> {
         let c = staged.chunk;
+        let rem = removed.as_slice();
+        let mut scratch = vec![0.0f32; c];
         let mut reuploaded = 0;
         for (ci, sc) in staged.chunks.iter_mut().enumerate() {
             let lo = ci * c;
             let hi = ((ci + 1) * c).min(ds.n);
-            let mut mask = vec![0.0f32; c];
-            for (r, slot) in mask.iter_mut().enumerate().take(hi - lo) {
-                *slot = if removed.contains(lo + r) { 0.0 } else { 1.0 };
+            let rows = hi - lo;
+            // removal-set slice falling inside this chunk's index range
+            let a = rem.partition_point(|&i| i < lo);
+            let b = rem.partition_point(|&i| i < hi);
+            if a == b && sc.zeros == 0 {
+                continue; // nothing removed here, before or now
             }
-            if mask != sc.mask_host {
-                sc.mask = rt.upload(&mask, &[c])?;
-                sc.mask_host = mask;
+            for slot in scratch.iter_mut().take(rows) {
+                *slot = 1.0;
+            }
+            for slot in scratch.iter_mut().take(c).skip(rows) {
+                *slot = 0.0; // padding stays masked out
+            }
+            for &i in &rem[a..b] {
+                scratch[i - lo] = 0.0;
+            }
+            if scratch != sc.mask_host {
+                sc.mask = rt.upload(&scratch, &[c])?;
+                sc.mask_host.copy_from_slice(&scratch);
+                sc.zeros = b - a;
                 reuploaded += 1;
             }
         }
         Ok(reuploaded)
     }
 
-    /// Masked-SUM gradient over all staged chunks.
-    /// Returns (sum of per-sample gradients incl. per-sample L2, stats).
-    pub fn grad_sum_staged(
+    /// Masked-SUM gradient over all staged chunks, sharing an uploaded
+    /// parameter buffer. Returns (sum of per-sample gradients incl.
+    /// per-sample L2, stats).
+    pub fn grad_staged_ctx(
         &self,
         rt: &Runtime,
         staged: &Staged,
-        w: &[f32],
+        ctx: &PassCtx,
     ) -> Result<(Vec<f32>, Stats)> {
-        let spec = &self.spec;
-        debug_assert_eq!(w.len(), spec.p);
-        let wbuf = rt.upload(w, &[spec.p])?;
-        let mut g = vec![0.0f32; spec.p];
+        let mut g = vec![0.0f32; self.spec.p];
         let mut stats = Stats::default();
         for sc in &staged.chunks {
-            let outs = exec_tuple(&self.grad, &[&wbuf, &sc.x, &sc.y, &sc.mask])?;
+            let outs = rt.exec(&self.grad, &[&ctx.wbuf, &sc.x, &sc.y, &sc.mask])?;
             let gc = literal_f32(&outs[0])?;
             let sv = literal_f32(&outs[1])?;
             crate::util::vecmath::axpy(1.0, &gc, &mut g);
@@ -171,8 +269,83 @@ impl ModelExes {
         Ok((g, stats))
     }
 
-    /// Masked-SUM gradient over an explicit row subset (gathers rows into
-    /// `chunk_small`-padded calls of the `grad_small` executable).
+    /// Convenience: `grad_staged_ctx` with a one-off parameter upload.
+    pub fn grad_sum_staged(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Stats)> {
+        let ctx = self.pass_ctx(rt, w)?;
+        self.grad_staged_ctx(rt, staged, &ctx)
+    }
+
+    /// Masked-SUM gradient over pre-staged rows (the per-iteration hot
+    /// path: zero uploads beyond the shared `ctx`).
+    pub fn grad_rows_staged(
+        &self,
+        rt: &Runtime,
+        sr: &StagedRows,
+        ctx: &PassCtx,
+    ) -> Result<(Vec<f32>, Stats)> {
+        let mut g = vec![0.0f32; self.spec.p];
+        let mut stats = Stats::default();
+        for rc in &sr.chunks {
+            let outs = rt.exec(&self.grad_small, &[&ctx.wbuf, &rc.x, &rc.y, &rc.mask])?;
+            let gc = literal_f32(&outs[0])?;
+            let sv = literal_f32(&outs[1])?;
+            crate::util::vecmath::axpy(1.0, &gc, &mut g);
+            stats.accumulate(&Stats::from_vec(&sv));
+        }
+        Ok((g, stats))
+    }
+
+    /// Masked-SUM gradient over a *subset* of pre-staged rows, selected
+    /// by staged position (index into the `idxs` passed to
+    /// [`Self::stage_rows`]). Only the tiny per-chunk mask vectors are
+    /// re-uploaded; x/y stay resident. Repeated positions accumulate
+    /// multiplicity (an SGD minibatch can sample a row twice), since the
+    /// artifacts' mask enters the sums linearly. Chunks with no selected
+    /// row are skipped entirely.
+    pub fn grad_rows_subset(
+        &self,
+        rt: &Runtime,
+        sr: &StagedRows,
+        ctx: &PassCtx,
+        positions: &[usize],
+    ) -> Result<(Vec<f32>, Stats)> {
+        let cs = sr.chunk;
+        let mut counts: Vec<f32> = Vec::new();
+        let mut g = vec![0.0f32; self.spec.p];
+        let mut stats = Stats::default();
+        for (ci, rc) in sr.chunks.iter().enumerate() {
+            let lo = ci * cs;
+            let hi = lo + rc.rows;
+            // cheap overlap check first: untouched chunks cost
+            // O(|positions|), not O(chunk_small) zeroing
+            if !positions.iter().any(|&p| p >= lo && p < hi) {
+                continue;
+            }
+            counts.clear();
+            counts.resize(cs, 0.0);
+            for &pos in positions {
+                if pos >= lo && pos < hi {
+                    counts[pos - lo] += 1.0;
+                }
+            }
+            let mb = rt.upload(&counts, &[cs])?;
+            let outs = rt.exec(&self.grad_small, &[&ctx.wbuf, &rc.x, &rc.y, &mb])?;
+            let gc = literal_f32(&outs[0])?;
+            let sv = literal_f32(&outs[1])?;
+            crate::util::vecmath::axpy(1.0, &gc, &mut g);
+            stats.accumulate(&Stats::from_vec(&sv));
+        }
+        Ok((g, stats))
+    }
+
+    /// Masked-SUM gradient over an explicit row subset: one-shot
+    /// gather + upload + execute. Many-iteration callers should
+    /// [`Self::stage_rows`] once and use [`Self::grad_rows_staged`].
     pub fn grad_sum_rows(
         &self,
         rt: &Runtime,
@@ -180,27 +353,49 @@ impl ModelExes {
         idxs: &[usize],
         w: &[f32],
     ) -> Result<(Vec<f32>, Stats)> {
-        let spec = &self.spec;
-        let cs = spec.chunk_small;
-        let wbuf = rt.upload(w, &[spec.p])?;
-        let mut g = vec![0.0f32; spec.p];
-        let mut stats = Stats::default();
-        for (x, y, mask) in ds.gather_padded(idxs, cs) {
-            let xb = rt.upload(&x, &[cs, spec.da])?;
-            let yb = rt.upload(&y, &[cs, spec.k])?;
-            let mb = rt.upload(&mask, &[cs])?;
-            let outs = exec_tuple(&self.grad_small, &[&wbuf, &xb, &yb, &mb])?;
-            let gc = literal_f32(&outs[0])?;
-            let sv = literal_f32(&outs[1])?;
-            crate::util::vecmath::axpy(1.0, &gc, &mut g);
-            stats.accumulate(&Stats::from_vec(&sv));
-        }
-        Ok((g, stats))
+        let ctx = self.pass_ctx(rt, w)?;
+        self.grad_rows_gather_ctx(rt, ds, idxs, &ctx)
     }
 
-    /// Exact masked-SUM Hessian-vector product over a row subset.
+    /// One-shot row gather sharing an already-uploaded parameter buffer
+    /// (for per-iteration subsets that genuinely change every iteration,
+    /// e.g. the SGD minibatch).
+    pub fn grad_rows_gather_ctx(
+        &self,
+        rt: &Runtime,
+        ds: &Dataset,
+        idxs: &[usize],
+        ctx: &PassCtx,
+    ) -> Result<(Vec<f32>, Stats)> {
+        let sr = self.stage_rows(rt, ds, idxs)?;
+        self.grad_rows_staged(rt, &sr, ctx)
+    }
+
+    /// Exact masked-SUM Hessian-vector product over pre-staged rows.
     /// (The hvp artifact takes no labels: the softmax-CE Hessian is
     /// label-independent, so a y parameter would be pruned by XLA.)
+    /// `v` changes per call and is uploaded here; `w` rides on `ctx`.
+    pub fn hvp_rows_staged(
+        &self,
+        rt: &Runtime,
+        sr: &StagedRows,
+        ctx: &PassCtx,
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        let spec = &self.spec;
+        let vbuf = rt.upload(v, &[spec.p])?;
+        let mut hv = vec![0.0f32; spec.p];
+        for rc in &sr.chunks {
+            let outs = rt.exec(&self.hvp, &[&ctx.wbuf, &vbuf, &rc.x, &rc.mask])?;
+            let hc = literal_f32(&outs[0])?;
+            crate::util::vecmath::axpy(1.0, &hc, &mut hv);
+        }
+        Ok(hv)
+    }
+
+    /// One-shot exact masked-SUM HVP over a row subset. Iterative
+    /// solvers (CG) should stage the rows + parameters once and call
+    /// [`Self::hvp_rows_staged`] per iteration instead.
     pub fn hvp_sum_rows(
         &self,
         rt: &Runtime,
@@ -209,19 +404,9 @@ impl ModelExes {
         w: &[f32],
         v: &[f32],
     ) -> Result<Vec<f32>> {
-        let spec = &self.spec;
-        let cs = spec.chunk_small;
-        let wbuf = rt.upload(w, &[spec.p])?;
-        let vbuf = rt.upload(v, &[spec.p])?;
-        let mut hv = vec![0.0f32; spec.p];
-        for (x, _y, mask) in ds.gather_padded(idxs, cs) {
-            let xb = rt.upload(&x, &[cs, spec.da])?;
-            let mb = rt.upload(&mask, &[cs])?;
-            let outs = exec_tuple(&self.hvp, &[&wbuf, &vbuf, &xb, &mb])?;
-            let hc = literal_f32(&outs[0])?;
-            crate::util::vecmath::axpy(1.0, &hc, &mut hv);
-        }
-        Ok(hv)
+        let sr = self.stage_rows(rt, ds, idxs)?;
+        let ctx = self.pass_ctx(rt, w)?;
+        self.hvp_rows_staged(rt, &sr, &ctx, v)
     }
 
     /// Quasi-Hessian product B·v via the AOT L-BFGS artifact
@@ -251,7 +436,7 @@ impl ModelExes {
         let dwb = rt.upload(&flat(dws), &[spec.m, spec.p])?;
         let dgb = rt.upload(&flat(dgs), &[spec.m, spec.p])?;
         let vb = rt.upload(v, &[spec.p])?;
-        let outs = exec_tuple(&self.lbfgs, &[&dwb, &dgb, &vb])?;
+        let outs = rt.exec(&self.lbfgs, &[&dwb, &dgb, &vb])?;
         literal_f32(&outs[0])
     }
 

@@ -5,23 +5,93 @@
 //! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
 //! Entry points were lowered with return_tuple=True, so every result is a
 //! root tuple whose elements are the jax outputs in order.
+//!
+//! Every host→device upload and artifact execution is counted on the
+//! runtime (see [`TransferCounters`]); retrain passes snapshot the
+//! counters around their hot loop so the "delta rows uploaded once per
+//! pass, parameters once per iteration" staging discipline (paper
+//! Discussion; docs/PERFORMANCE.md) stays measurable instead of
+//! aspirational.
 
 pub mod engine;
 
-pub use engine::{Engine, ModelExes};
+pub use engine::{Engine, ModelExes, PassCtx, Staged, StagedRows};
 
 use anyhow::{Context, Result};
+use std::cell::Cell;
 use std::path::Path;
+
+/// Monotonic device-traffic counters, owned by the [`Runtime`].
+/// Single-threaded by construction (PJRT state never crosses threads in
+/// this crate), so plain `Cell`s suffice.
+#[derive(Debug, Default)]
+pub struct TransferCounters {
+    uploads: Cell<u64>,
+    upload_floats: Cell<u64>,
+    execs: Cell<u64>,
+}
+
+impl TransferCounters {
+    fn count_upload(&self, floats: usize) {
+        self.uploads.set(self.uploads.get() + 1);
+        self.upload_floats.set(self.upload_floats.get() + floats as u64);
+    }
+
+    fn count_exec(&self) {
+        self.execs.set(self.execs.get() + 1);
+    }
+
+    /// Copyable view of the counters at this instant.
+    pub fn snapshot(&self) -> TransferStats {
+        TransferStats {
+            uploads: self.uploads.get(),
+            upload_floats: self.upload_floats.get(),
+            execs: self.execs.get(),
+        }
+    }
+}
+
+/// Snapshot (or difference of two snapshots) of device traffic:
+/// host→device buffer uploads, f32s shipped, artifact executions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    pub uploads: u64,
+    pub upload_floats: u64,
+    pub execs: u64,
+}
+
+impl TransferStats {
+    /// Traffic between an `earlier` snapshot and this one.
+    pub fn since(self, earlier: TransferStats) -> TransferStats {
+        TransferStats {
+            uploads: self.uploads - earlier.uploads,
+            upload_floats: self.upload_floats - earlier.upload_floats,
+            execs: self.execs - earlier.execs,
+        }
+    }
+
+    pub fn accumulate(&mut self, o: &TransferStats) {
+        self.uploads += o.uploads;
+        self.upload_floats += o.upload_floats;
+        self.execs += o.execs;
+    }
+
+    /// Megabytes shipped host→device (f32 payloads).
+    pub fn upload_mb(&self) -> f64 {
+        self.upload_floats as f64 * 4.0 / (1 << 20) as f64
+    }
+}
 
 /// Thin wrapper over the PJRT CPU client.
 pub struct Runtime {
     pub client: xla::PjRtClient,
+    pub counters: TransferCounters,
 }
 
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+        Ok(Runtime { client, counters: TransferCounters::default() })
     }
 
     /// Load one HLO-text artifact and compile it.
@@ -36,21 +106,24 @@ impl Runtime {
 
     /// Upload a host f32 slice as a device buffer with the given dims.
     pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.counters.count_upload(data.len());
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .context("uploading host buffer")
     }
-}
 
-/// Execute with buffer args and decompose the root tuple into the list of
-/// output literals.
-pub fn exec_tuple(
-    exe: &xla::PjRtLoadedExecutable,
-    args: &[&xla::PjRtBuffer],
-) -> Result<Vec<xla::Literal>> {
-    let out = exe.execute_b(args).context("executing artifact")?;
-    let lit = out[0][0].to_literal_sync().context("fetching result")?;
-    lit.to_tuple().context("decomposing root tuple")
+    /// Execute with buffer args and decompose the root tuple into the
+    /// list of output literals.
+    pub fn exec(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        self.counters.count_exec();
+        let out = exe.execute_b(args).context("executing artifact")?;
+        let lit = out[0][0].to_literal_sync().context("fetching result")?;
+        lit.to_tuple().context("decomposing root tuple")
+    }
 }
 
 /// Read a rank-N f32 literal into a Vec.

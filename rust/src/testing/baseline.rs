@@ -1,0 +1,77 @@
+//! Seed-shaped reference implementations kept for equivalence testing
+//! and before/after benchmarking.
+
+use anyhow::Result;
+
+use crate::config::HyperParams;
+use crate::data::{Dataset, IndexSet};
+use crate::lbfgs::History;
+use crate::runtime::engine::ModelExes;
+use crate::runtime::Runtime;
+use crate::train::Trajectory;
+use crate::util::vecmath::{axpy, dot, scale, sub};
+
+/// Faithful reproduction of the SEED `delete_gd` hot loop (LR models):
+/// delta rows re-gathered + re-uploaded every iteration, every gradient
+/// call uploading its own parameter buffer. `batch::delete_gd` with the
+/// staged-context layer must stay BITWISE identical to this
+/// (tests/staging.rs); benches/micro.rs measures it as the "before"
+/// upload schedule.
+pub fn delete_gd_seed_shape(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    removed: &IndexSet,
+) -> Result<Vec<f32>> {
+    let spec = &exes.spec;
+    let n = ds.n as f64;
+    let n_new = n - removed.len() as f64;
+    let staged_full = exes.stage(rt, ds, &IndexSet::empty())?;
+    let mut hist = History::new(hp.m);
+    let mut w = traj.ws[0].clone();
+    let mut dw = vec![0.0f32; spec.p];
+    for t in 0..hp.t {
+        let eta = hp.lr_at(t) as f64;
+        let wt = &traj.ws[t];
+        let gt = &traj.gs[t];
+        let mut exact = hp.is_exact_iter(t);
+        let mut bv: Option<Vec<f32>> = None;
+        if !exact {
+            sub(&w, wt, &mut dw);
+            if hist.is_empty() {
+                exact = true;
+            } else {
+                bv = hist.bv(&dw);
+                if bv.is_none() {
+                    exact = true;
+                }
+            }
+        }
+        // the before-shape: gather + upload the SAME delta rows and a
+        // fresh parameter buffer on every iteration
+        let (g_delta_sum, _) = exes.grad_sum_rows(rt, ds, removed.as_slice(), &w)?;
+        let step_scale = -(eta / n_new) as f32;
+        if exact {
+            let (g_full_sum, _) = exes.grad_sum_staged(rt, &staged_full, &w)?;
+            sub(&w, wt, &mut dw);
+            let mut dg = g_full_sum.clone();
+            scale(&mut dg, (1.0 / n) as f32);
+            axpy(-1.0, gt, &mut dg);
+            // the LR pair_ok gate: non-degenerate step, positive curvature
+            let sw = dot(&dw, &dw);
+            if sw >= 1e-20 && dot(&dg, &dw) / sw > 0.0 {
+                hist.push(dw.clone(), dg);
+            }
+            axpy(step_scale, &g_full_sum, &mut w);
+            axpy(-step_scale, &g_delta_sum, &mut w);
+        } else {
+            let mut g_full_avg = bv.unwrap();
+            axpy(1.0, gt, &mut g_full_avg);
+            axpy(step_scale * n as f32, &g_full_avg, &mut w);
+            axpy(-step_scale, &g_delta_sum, &mut w);
+        }
+    }
+    Ok(w)
+}

@@ -1,2 +1,4 @@
-//! Hand-rolled property-testing helper (proptest is unavailable offline).
+//! Hand-rolled property-testing helper (proptest is unavailable offline)
+//! plus seed-shaped reference loops for equivalence tests and benches.
+pub mod baseline;
 pub mod prop;

@@ -64,14 +64,27 @@ pub fn scale(x: &mut [f32], a: f32) {
     }
 }
 
-/// Solve the dense n x n system `a x = b` in-place via Gaussian
-/// elimination with partial pivoting. `a` is row-major, consumed.
-/// Used for the 2m x 2m L-BFGS middle system (m <= 8) — no LAPACK dep.
-pub fn solve_dense(a: &mut [f64], b: &mut [f64]) -> Result<(), &'static str> {
-    let n = b.len();
+/// LU factorization (partial pivoting) of a dense n x n system, kept so
+/// the factor work is paid once and `solve` can be re-run against many
+/// right-hand sides. The elimination order matches [`solve_dense`]
+/// operation for operation, so a factored solve is bitwise-identical to
+/// the one-shot path. Used by `lbfgs::History` to cache the 2m x 2m
+/// middle-system factorization between `bv()` calls.
+#[derive(Clone, Debug)]
+pub struct LuFactors {
+    n: usize,
+    /// row-major combined L (strict lower, unit diagonal implied) + U
+    lu: Vec<f64>,
+    /// row swap applied at elimination step `col`: rows (col, perm[col])
+    perm: Vec<usize>,
+}
+
+/// Factor a row-major n x n matrix (consumed) with the same partial
+/// pivoting rule as [`solve_dense`].
+pub fn lu_factor(mut a: Vec<f64>, n: usize) -> Result<LuFactors, &'static str> {
     debug_assert_eq!(a.len(), n * n);
+    let mut perm = vec![0usize; n];
     for col in 0..n {
-        // pivot
         let mut piv = col;
         let mut best = a[col * n + col].abs();
         for row in (col + 1)..n {
@@ -82,33 +95,70 @@ pub fn solve_dense(a: &mut [f64], b: &mut [f64]) -> Result<(), &'static str> {
             }
         }
         if best < 1e-300 {
-            return Err("singular matrix in solve_dense");
+            return Err("singular matrix in lu_factor");
         }
+        perm[col] = piv;
         if piv != col {
             for j in 0..n {
                 a.swap(col * n + j, piv * n + j);
             }
-            b.swap(col, piv);
         }
         let d = a[col * n + col];
         for row in (col + 1)..n {
             let f = a[row * n + col] / d;
+            a[row * n + col] = f; // store the multiplier in L's slot
             if f == 0.0 {
                 continue;
             }
-            for j in col..n {
+            for j in (col + 1)..n {
                 a[row * n + j] -= f * a[col * n + j];
             }
-            b[row] -= f * b[col];
         }
     }
-    for col in (0..n).rev() {
-        let mut acc = b[col];
-        for j in (col + 1)..n {
-            acc -= a[col * n + j] * b[j];
-        }
-        b[col] = acc / a[col * n + col];
+    Ok(LuFactors { n, lu: a, perm })
+}
+
+impl LuFactors {
+    pub fn n(&self) -> usize {
+        self.n
     }
+
+    /// Solve `A x = b` in place. Forward substitution walks columns in
+    /// elimination order (exactly the update sequence `solve_dense`
+    /// applies to `b` during elimination), then back-substitutes.
+    pub fn solve(&self, b: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(b.len(), n);
+        for col in 0..n {
+            if self.perm[col] != col {
+                b.swap(col, self.perm[col]);
+            }
+            for row in (col + 1)..n {
+                let f = self.lu[row * n + col];
+                if f != 0.0 {
+                    b[row] -= f * b[col];
+                }
+            }
+        }
+        for col in (0..n).rev() {
+            let mut acc = b[col];
+            for j in (col + 1)..n {
+                acc -= self.lu[col * n + j] * b[j];
+            }
+            b[col] = acc / self.lu[col * n + col];
+        }
+    }
+}
+
+/// Solve the dense n x n system `a x = b` in-place via Gaussian
+/// elimination with partial pivoting. `a` is row-major, consumed.
+/// One-shot convenience over [`lu_factor`] + [`LuFactors::solve`]
+/// (m <= 8 L-BFGS middle systems — no LAPACK dep).
+pub fn solve_dense(a: &mut [f64], b: &mut [f64]) -> Result<(), &'static str> {
+    let n = b.len();
+    debug_assert_eq!(a.len(), n * n);
+    let lu = lu_factor(a.to_vec(), n).map_err(|_| "singular matrix in solve_dense")?;
+    lu.solve(b);
     Ok(())
 }
 
@@ -180,5 +230,34 @@ mod tests {
         let mut a = vec![1.0, 2.0, 2.0, 4.0];
         let mut b = vec![1.0, 2.0];
         assert!(solve_dense(&mut a, &mut b).is_err());
+    }
+
+    #[test]
+    fn lu_factored_solve_matches_one_shot() {
+        let mut rng = crate::util::Rng::new(77);
+        for n in 1..=8usize {
+            let raw: Vec<f64> = (0..n * n).map(|_| rng.gaussian()).collect();
+            // diagonally boosted to stay nonsingular
+            let mut a = raw.clone();
+            for i in 0..n {
+                a[i * n + i] += 3.0;
+            }
+            let lu = lu_factor(a.clone(), n).unwrap();
+            // several right-hand sides against the same factors
+            for _ in 0..4 {
+                let b: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                let mut x_lu = b.clone();
+                lu.solve(&mut x_lu);
+                let mut acopy = a.clone();
+                let mut x_dense = b.clone();
+                solve_dense(&mut acopy, &mut x_dense).unwrap();
+                assert_eq!(x_lu, x_dense, "n={n}: factored vs one-shot drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn lu_singular_errors() {
+        assert!(lu_factor(vec![1.0, 2.0, 2.0, 4.0], 2).is_err());
     }
 }

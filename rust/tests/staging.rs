@@ -1,0 +1,155 @@
+//! Staged-context equivalence tests (requires `make artifacts`).
+//!
+//! The PR that introduced `StagedRows`/`PassCtx` (see docs/PERFORMANCE.md)
+//! claims the refactor is a pure transfer-schedule change: same floats in,
+//! same floats out. These tests pin that down:
+//!  * reusing staged delta rows across parameter updates is BITWISE
+//!    identical to the seed per-iteration re-gather path;
+//!  * `delete_gd` end-to-end is bitwise identical to a faithful
+//!    reproduction of the seed per-iteration-upload loop;
+//!  * the per-pass upload counters prove delta rows ship once per PASS
+//!    and parameters once per ITERATION.
+
+use deltagrad::config::HyperParams;
+use deltagrad::data::{sample_removal, synth, IndexSet};
+use deltagrad::deltagrad::batch;
+use deltagrad::runtime::Engine;
+use deltagrad::train::{self, TrainOpts};
+use deltagrad::util::Rng;
+
+fn engine() -> Engine {
+    Engine::open_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn staged_rows_reuse_bitwise_matches_regather() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 51, Some(500), Some(10));
+    let mut rng = Rng::new(4);
+    let idxs = sample_removal(&mut rng, ds.n, 37);
+    let sr = exes.stage_rows(&eng.rt, &ds, idxs.as_slice()).unwrap();
+    // several distinct parameter vectors, as a retrain pass would issue
+    for trial in 0..5 {
+        let w: Vec<f32> = (0..spec.p)
+            .map(|_| rng.gaussian_f32() * 0.1)
+            .collect();
+        let (g_seed, s_seed) = exes.grad_sum_rows(&eng.rt, &ds, idxs.as_slice(), &w).unwrap();
+        let ctx = exes.pass_ctx(&eng.rt, &w).unwrap();
+        let (g_staged, s_staged) = exes.grad_rows_staged(&eng.rt, &sr, &ctx).unwrap();
+        assert_eq!(g_seed, g_staged, "trial {trial}: staged reuse drifted from re-gather");
+        assert_eq!(s_seed, s_staged, "trial {trial}: stats drifted");
+    }
+}
+
+#[test]
+fn subset_mask_matches_explicit_gather() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 13, Some(400), Some(10));
+    let mut rng = Rng::new(8);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+    // stage a 200-row pool spanning two chunk_small groups
+    let pool: Vec<usize> = (0..200).collect();
+    let sr = exes.stage_rows(&eng.rt, &ds, &pool).unwrap();
+    let ctx = exes.pass_ctx(&eng.rt, &w).unwrap();
+    // subset straddling both groups, with one duplicated position
+    let positions = vec![3usize, 40, 150, 199, 40];
+    let rows: Vec<usize> = positions.iter().map(|&p| pool[p]).collect();
+    let (g_mask, s_mask) = exes.grad_rows_subset(&eng.rt, &sr, &ctx, &positions).unwrap();
+    let (g_gather, s_gather) = exes.grad_sum_rows(&eng.rt, &ds, &rows, &w).unwrap();
+    assert_eq!(s_mask.cnt, s_gather.cnt, "multiplicity lost");
+    let denom = g_gather.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&g_mask, &g_gather);
+    assert!(d / denom < 1e-5, "subset-mask gradient drifted: {:.3e}", d / denom);
+    assert!(
+        (s_mask.loss_sum - s_gather.loss_sum).abs() / s_gather.loss_sum.abs().max(1.0) < 1e-5
+    );
+}
+
+#[test]
+fn delete_gd_bitwise_matches_seed_upload_schedule() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 3, Some(640), Some(10));
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 30;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    let traj = full.traj.unwrap();
+    let removed = sample_removal(&mut Rng::new(5), ds.n, 10);
+    let w_seed =
+        deltagrad::testing::baseline::delete_gd_seed_shape(&exes, &eng.rt, &ds, &traj, &hp, &removed)
+            .unwrap();
+    let dg = batch::delete_gd(&exes, &eng.rt, &ds, &traj, &hp, &removed).unwrap();
+    assert_eq!(
+        w_seed, dg.w,
+        "staged-context delete_gd drifted from the seed per-iteration-upload path"
+    );
+}
+
+#[test]
+fn delete_gd_uploads_delta_rows_once_per_pass() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 9, Some(640), Some(10));
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 30;
+    hp.j0 = 6;
+    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    let traj = full.traj.unwrap();
+    let removed = sample_removal(&mut Rng::new(2), ds.n, 10);
+    let dg = batch::delete_gd(&exes, &eng.rt, &ds, &traj, &hp, &removed).unwrap();
+    // upload budget of one pass: 3 buffers per full-dataset chunk staged
+    // once + 3 buffers per delta-row group staged once + ONE parameter
+    // upload per iteration. Nothing else.
+    let full_chunks = ds.n.div_ceil(spec.chunk);
+    let delta_groups = removed.len().div_ceil(spec.chunk_small);
+    let expected = (3 * full_chunks + 3 * delta_groups + hp.t) as u64;
+    assert_eq!(
+        dg.transfers.uploads, expected,
+        "upload schedule changed: got {}, expected 3*{full_chunks} + 3*{delta_groups} + {}",
+        dg.transfers.uploads, hp.t
+    );
+    // and with a pre-staged dataset the full-chunk term disappears
+    let staged = exes.stage(&eng.rt, &ds, &IndexSet::empty()).unwrap();
+    let dg2 = batch::delete_gd_staged(&exes, &eng.rt, &ds, &staged, &traj, &hp, &removed)
+        .unwrap();
+    assert_eq!(dg2.transfers.uploads, (3 * delta_groups + hp.t) as u64);
+    assert_eq!(dg2.w, dg.w, "staged-dataset reuse changed the result");
+}
+
+#[test]
+fn update_removed_skips_untouched_chunks() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 29, Some(3 * spec.chunk), Some(10));
+    let mut staged = exes.stage(&eng.rt, &ds, &IndexSet::empty()).unwrap();
+    // removal confined to chunk 1: exactly one mask re-upload
+    let removed = IndexSet::from_vec(vec![spec.chunk + 3, spec.chunk + 7]);
+    let n1 = exes.update_removed(&eng.rt, &mut staged, &ds, &removed).unwrap();
+    assert_eq!(n1, 1, "only the touched chunk should re-upload");
+    // same set again: nothing changes
+    let n2 = exes.update_removed(&eng.rt, &mut staged, &ds, &removed).unwrap();
+    assert_eq!(n2, 0);
+    // restoring one row touches the same chunk again
+    let removed2 = IndexSet::from_vec(vec![spec.chunk + 3]);
+    let n3 = exes.update_removed(&eng.rt, &mut staged, &ds, &removed2).unwrap();
+    assert_eq!(n3, 1);
+    // masked gradient agrees with leave-r-out arithmetic after updates
+    let mut rng = Rng::new(6);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+    let (g_masked, sm) = exes.grad_sum_staged(&eng.rt, &staged, &w).unwrap();
+    assert_eq!(sm.cnt as usize, ds.n - removed2.len());
+    let staged_fresh = exes.stage(&eng.rt, &ds, &removed2).unwrap();
+    let (g_fresh, _) = exes.grad_sum_staged(&eng.rt, &staged_fresh, &w).unwrap();
+    assert_eq!(g_masked, g_fresh, "incremental mask update drifted from fresh staging");
+}
