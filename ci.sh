@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# CI gate for the DeltaGrad rust_pallas reproduction.
+#
+# Runs, in order, from rust/:
+#   1. cargo build --release
+#   2. cargo test -q                      (tier-1; artifact tests need `make artifacts`)
+#   3. cargo clippy --all-targets -- -D warnings
+#   4. cargo bench --bench micro -- --json BENCH_micro.json
+# then asserts the bench JSON was produced, so upload-count regressions
+# (the staging discipline of rust/docs/PERFORMANCE.md) fail loudly in
+# review instead of silently drifting.
+#
+# Requires a Rust toolchain + the xla PJRT binding. In containers
+# without one (see .claude/skills/verify/SKILL.md) this script reports
+# BLOCKED and exits 3 so callers can distinguish "cannot run" from
+# "ran and failed".
+
+set -uo pipefail
+
+root="$(cd "$(dirname "$0")" && pwd)"
+cd "$root/rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh BLOCKED: no Rust toolchain (cargo) on PATH — see .claude/skills/verify/SKILL.md" >&2
+    exit 3
+fi
+
+set -e
+
+echo "== ci: cargo build --release =="
+cargo build --release
+
+echo "== ci: cargo test -q =="
+cargo test -q
+
+echo "== ci: cargo clippy --all-targets -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== ci: cargo bench --bench micro -- --json BENCH_micro.json =="
+rm -f BENCH_micro.json # a stale file must not satisfy the check below
+cargo bench --bench micro -- --json BENCH_micro.json
+
+if [ ! -s BENCH_micro.json ]; then
+    echo "ci.sh FAIL: bench did not write BENCH_micro.json (upload-count tracking broken)" >&2
+    exit 1
+fi
+echo "== ci: OK (bench counters in rust/BENCH_micro.json) =="

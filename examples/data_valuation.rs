@@ -1,34 +1,31 @@
 //! Data valuation (§5.4): leave-one-out influence of training samples,
-//! each computed with a DeltaGrad pass instead of a full retrain.
+//! each computed with a speculative `session.preview` instead of a full
+//! retrain — all candidates share the session's resident staged base.
 //!
 //! Run: `cargo run --release --example data_valuation`
 
 use deltagrad::apps::valuation;
 use deltagrad::config::HyperParams;
-use deltagrad::data::{synth, IndexSet};
-use deltagrad::runtime::Engine;
-use deltagrad::train::{self, TrainOpts};
+use deltagrad::session::SessionBuilder;
 use deltagrad::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let mut eng = Engine::open_default()?;
-    let exes = eng.model("small")?;
-    let spec = exes.spec.clone();
-    let (train_ds, test_ds) = synth::train_test_for_spec(&spec, 5, Some(1024), Some(512));
     let mut hp = HyperParams::for_dataset("small");
     hp.t = 80;
     println!("training base model ...");
-    let out = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &IndexSet::empty()))?;
-    let traj = out.traj.unwrap();
+    let session = SessionBuilder::new("small")
+        .seed(5)
+        .n_train(Some(1024))
+        .n_test(Some(512))
+        .hyper_params(hp)
+        .build()?;
 
     // score 16 random candidates
     let mut rng = Rng::new(11);
-    let candidates = rng.sample_distinct(train_ds.n, 16);
+    let candidates = rng.sample_distinct(session.train_dataset().n, 16);
     println!("scoring {} candidates by leave-one-out DeltaGrad ...", candidates.len());
     let t0 = std::time::Instant::now();
-    let values = valuation::leave_one_out_values(
-        &exes, &eng.rt, &train_ds, &test_ds, &traj, &hp, &out.w, &candidates,
-    )?;
+    let values = valuation::leave_one_out_values(&session, &candidates)?;
     let secs = t0.elapsed().as_secs_f64();
     let ranked = valuation::rank_by_influence(values);
     println!("top influential samples (param-space movement when removed):");
@@ -43,8 +40,9 @@ fn main() -> anyhow::Result<()> {
         ranked.len(),
         secs,
         secs / ranked.len() as f64,
-        out.seconds
+        session.train_seconds()
     );
+    println!("session stats: {}", session.stats().render());
     println!("data_valuation OK");
     Ok(())
 }

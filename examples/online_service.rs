@@ -1,6 +1,9 @@
 //! The unlearning service under concurrent load: a burst of
-//! deletion/addition requests; the coordinator's group-commit batcher
-//! coalesces them into shared DeltaGrad passes.
+//! deletion/addition edits; the coordinator's group-commit batcher
+//! coalesces them into shared DeltaGrad passes against the worker's
+//! `Session`. The queue is bounded (`BatchPolicy::max_queue`), so
+//! overload produces typed `Rejected::QueueFull` replies instead of
+//! unbounded memory growth.
 //!
 //! Run: `cargo run --release --example online_service`
 
@@ -9,7 +12,7 @@ use std::time::Duration;
 use deltagrad::config::HyperParams;
 use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
 use deltagrad::data::synth;
-use deltagrad::deltagrad::online::Request;
+use deltagrad::session::Edit;
 
 fn main() -> anyhow::Result<()> {
     let mut hp = HyperParams::for_dataset("small");
@@ -21,7 +24,11 @@ fn main() -> anyhow::Result<()> {
         n_train: Some(1024),
         n_test: Some(256),
         hp,
-        policy: BatchPolicy { max_group: 8, max_wait: Duration::from_millis(50) },
+        policy: BatchPolicy {
+            max_group: 8,
+            max_wait: Duration::from_millis(50),
+            max_queue: 64,
+        },
     })?;
     let snap = svc.snapshot()?;
     println!(
@@ -33,17 +40,17 @@ fn main() -> anyhow::Result<()> {
     println!("\n-- burst: 12 deletes + 4 adds (async) --");
     let mut rxs = Vec::new();
     for i in 0..12 {
-        rxs.push(svc.update_async(Request::Delete(i * 13))?);
+        rxs.push(svc.update_async(Edit::delete_row(i * 13))?);
     }
     // fabricate additions from the generator's spec
     let eng = deltagrad::runtime::Engine::open_default()?;
     let spec = eng.spec("small")?.clone();
     let adds = synth::addition_rows(&spec, 99, 4);
     for i in 0..4 {
-        rxs.push(svc.update_async(Request::Add(adds.row(i).to_vec(), adds.y[i]))?);
+        rxs.push(svc.update_async(Edit::add_row(adds.row(i).to_vec(), adds.y[i], spec.k))?);
     }
     for (i, rx) in rxs.into_iter().enumerate() {
-        let rep = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        let rep = rx.recv()??;
         println!(
             "  req {i:2}: committed v{} in group of {} (pass {:.2}s)",
             rep.version, rep.group_size, rep.pass_seconds

@@ -7,44 +7,42 @@
 
 use deltagrad::apps::privacy::{epsilon_bound, LaplaceMechanism};
 use deltagrad::config::HyperParams;
-use deltagrad::data::{sample_removal, synth, IndexSet};
-use deltagrad::deltagrad::batch;
-use deltagrad::runtime::Engine;
-use deltagrad::train::{self, TrainOpts};
+use deltagrad::data::sample_removal;
+use deltagrad::session::{Edit, SessionBuilder};
 use deltagrad::util::vecmath::dist2;
 use deltagrad::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let mut eng = Engine::open_default()?;
-    let exes = eng.model("small")?;
-    let spec = exes.spec.clone();
-    let (train_ds, test_ds) = synth::train_test_for_spec(&spec, 3, Some(1024), Some(512));
     let mut hp = HyperParams::for_dataset("small");
     hp.t = 80;
     println!("training + deleting 8 samples ...");
-    let full = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &IndexSet::empty()))?;
-    let traj = full.traj.unwrap();
-    let removed = sample_removal(&mut Rng::new(2), train_ds.n, 8);
-    let basel = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &removed))?;
-    let dg = batch::delete_gd(&exes, &eng.rt, &train_ds, &traj, &hp, &removed)?;
-    let delta0 = dist2(&dg.w, &basel.w);
+    let session = SessionBuilder::new("small")
+        .seed(3)
+        .n_train(Some(1024))
+        .n_test(Some(512))
+        .hyper_params(hp)
+        .build()?;
+    let edit = Edit::Delete(sample_removal(&mut Rng::new(2), session.train_dataset().n, 8));
+    let basel = session.baseline(&edit)?;
+    let dg = session.preview(&edit)?;
+    let delta0 = dist2(&dg.out.w, &basel.w);
     println!("‖w^I − w^U‖ = {delta0:.3e}  (the deletion error the noise must mask)");
 
     let epsilon = 1.0;
-    let mech = LaplaceMechanism::from_deletion_error(spec.p, delta0, epsilon);
+    let mech = LaplaceMechanism::from_deletion_error(session.spec().p, delta0, epsilon);
     println!("Laplace mechanism: ε = {epsilon}, per-coordinate scale b = {:.3e}", mech.scale);
 
     let mut rng = Rng::new(77);
-    let released = mech.release(&dg.w, &mut rng);
-    let eps_bound = epsilon_bound(&dg.w, &basel.w, mech.scale);
+    let released = mech.release(&dg.out.w, &mut rng);
+    let eps_bound = epsilon_bound(&dg.out.w, &basel.w, mech.scale);
     // empirical privacy loss at the released point
-    let loss = mech.privacy_loss(&dg.w, &basel.w, &released);
+    let loss = mech.privacy_loss(&dg.out.w, &basel.w, &released);
     println!("worst-case ε bound for this pair: {eps_bound:.3}");
     println!("empirical privacy loss at the released model: {loss:.3}");
     assert!(loss <= eps_bound + 1e-9);
 
-    let acc_clean = train::evaluate(&exes, &eng.rt, &test_ds, &dg.w)?.accuracy();
-    let acc_noised = train::evaluate(&exes, &eng.rt, &test_ds, &released)?.accuracy();
+    let acc_clean = session.eval_test(&dg.out.w)?.accuracy();
+    let acc_noised = session.eval_test(&released)?.accuracy();
     println!("test accuracy: exact-release {acc_clean:.4} vs ε-private release {acc_noised:.4}");
     println!("privacy_deletion OK");
     Ok(())

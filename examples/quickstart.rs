@@ -1,79 +1,96 @@
-//! End-to-end quickstart: the full three-layer stack on one workload.
+//! End-to-end quickstart: the full three-layer stack through the
+//! Session API on one workload.
 //!
-//! 1. Load the AOT artifacts (L1 Pallas kernels + L2 JAX graph, compiled
-//!    by `make artifacts`) through the PJRT runtime.
-//! 2. Train regularized multinomial logistic regression on a synthetic
-//!    covtype-like dataset with full-batch GD, logging the loss curve and
-//!    caching the (w_t, ∇F(w_t)) trajectory.
-//! 3. Delete 1% of the training data; retrain with BaseL (from scratch)
-//!    and with DeltaGrad (Algorithm 1).
-//! 4. Report running time, parameter distances, and test accuracy.
+//! 1. `SessionBuilder` loads the AOT artifacts (L1 Pallas kernels + L2
+//!    JAX graph, compiled by `make artifacts`) through the PJRT runtime,
+//!    trains regularized multinomial logistic regression on a synthetic
+//!    covtype-like dataset, and caches the (w_t, ∇F(w_t)) trajectory —
+//!    all behind one `Session` handle.
+//! 2. `session.preview(&edit)` speculatively deletes 1% of the training
+//!    data with DeltaGrad (Algorithm 1) WITHOUT touching session state;
+//!    `session.baseline(&edit)` retrains from scratch (BaseL).
+//! 3. `session.commit(edit)` applies the deletion for real: same pass
+//!    plus Algorithm-3 trajectory rewriting, mask flip, version bump.
+//! 4. Report running time, parameter distances, test accuracy, and the
+//!    session's cumulative device-traffic stats.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use deltagrad::config::HyperParams;
-use deltagrad::data::{sample_removal, synth, IndexSet};
-use deltagrad::deltagrad::batch;
-use deltagrad::runtime::Engine;
-use deltagrad::train::{self, TrainOpts};
+use deltagrad::data::sample_removal;
+use deltagrad::session::{Edit, SessionBuilder};
 use deltagrad::util::vecmath::dist2;
 use deltagrad::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let mut eng = Engine::open_default()?;
-    let exes = eng.model("covtype")?;
-    let spec = exes.spec.clone();
+    // --- build: train once, stage once, get a long-lived handle
+    let mut hp = HyperParams::for_dataset("covtype");
+    hp.t = 150;
+    let session = SessionBuilder::new("covtype")
+        .seed(42)
+        .hyper_params(hp)
+        .build()?;
+    let spec = session.spec();
     println!(
         "== quickstart: {} (d={} k={} p={} chunk={}) ==",
         spec.name, spec.d, spec.k, spec.p, spec.chunk
     );
-
-    // --- data
-    let (train_ds, test_ds) = synth::train_test_for_spec(&spec, 42, None, None);
-    println!("train n={} test n={}", train_ds.n, test_ds.n);
-
-    // --- initial training with loss-curve logging
-    let mut hp = HyperParams::for_dataset("covtype");
-    hp.t = 150;
-    println!("\n-- training T={} (lr={}, lam={}) --", hp.t, hp.lr, spec.lam);
-    let out = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &IndexSet::empty()))?;
-    let traj = out.traj.clone().unwrap();
-    // loss curve from checkpoints of the cached trajectory (one masked
-    // pass each — the same executables DeltaGrad uses)
-    let staged = exes.stage(&eng.rt, &train_ds, &IndexSet::empty())?;
-    println!("loss curve (train mean loss):");
-    for t in (0..=hp.t).step_by(hp.t / 10) {
-        let stats = exes.eval_staged(&eng.rt, &staged, &traj.ws[t])?;
-        println!("  iter {t:4}  loss {:.5}  acc {:.4}", stats.mean_loss(), stats.accuracy());
-    }
-    let test_full = train::evaluate(&exes, &eng.rt, &test_ds, &out.w)?;
     println!(
-        "trained in {:.2}s; test acc {:.4}; cached trajectory {} MB",
-        out.seconds,
-        test_full.accuracy(),
-        traj.approx_bytes() / (1 << 20)
+        "train n={} test n={}",
+        session.train_dataset().n,
+        session.test_dataset().n
     );
 
-    // --- delete 1% and retrain both ways
-    let r = train_ds.n / 100;
-    let removed = sample_removal(&mut Rng::new(7), train_ds.n, r);
-    println!("\n-- deleting r={r} rows (1%) --");
-    let basel = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &removed))?;
-    let dg = batch::delete_gd(&exes, &eng.rt, &train_ds, &traj, &hp, &removed)?;
-
-    let b_acc = train::evaluate(&exes, &eng.rt, &test_ds, &basel.w)?.accuracy();
-    let d_acc = train::evaluate(&exes, &eng.rt, &test_ds, &dg.w)?.accuracy();
-    println!("BaseL (retrain from scratch): {:.2}s, test acc {:.4}", basel.seconds, b_acc);
+    // loss curve from checkpoints of the cached trajectory (one masked
+    // pass each over the session's resident staged base)
+    let t = session.hyper_params().t;
+    println!("\n-- trained T={t} (lr={}) --", session.hyper_params().lr);
+    println!("loss curve (train mean loss):");
+    for i in (0..=t).step_by(t / 10) {
+        let stats = session.eval_train(&session.trajectory().ws[i])?;
+        println!("  iter {i:4}  loss {:.5}  acc {:.4}", stats.mean_loss(), stats.accuracy());
+    }
+    let test_full = session.eval_test(session.w())?;
     println!(
-        "DeltaGrad (Algorithm 1):      {:.2}s, test acc {:.4}  [{} exact + {} approx iters]",
-        dg.seconds, d_acc, dg.n_exact, dg.n_approx
+        "trained in {:.2}s; test acc {:.4}; cached trajectory {} MB",
+        session.train_seconds(),
+        test_full.accuracy(),
+        session.trajectory().approx_bytes() / (1 << 20)
+    );
+
+    // --- preview: speculative 1% deletion vs BaseL
+    let n = session.train_dataset().n;
+    let r = n / 100;
+    let edit = Edit::Delete(sample_removal(&mut Rng::new(7), n, r));
+    println!("\n-- deleting r={r} rows (1%) --");
+    let basel = session.baseline(&edit)?;
+    let pv = session.preview(&edit)?;
+    assert_eq!(session.version(), 0, "preview must not commit");
+
+    let b_acc = session.eval_test(&basel.w)?.accuracy();
+    let d_acc = session.eval_test(&pv.out.w)?.accuracy();
+    println!("BaseL (retrain from scratch): {:.2}s, test acc {b_acc:.4}", basel.seconds);
+    println!(
+        "DeltaGrad preview ({:?}):       {:.2}s, test acc {d_acc:.4}  [{} exact + {} approx iters]",
+        pv.mode, pv.out.seconds, pv.out.n_exact, pv.out.n_approx
     );
     println!(
         "speedup {:.2}x | ‖w*−w^U‖ = {:.3e} | ‖w^I−w^U‖ = {:.3e} ({}x smaller)",
-        basel.seconds / dg.seconds.max(1e-9),
-        dist2(&out.w, &basel.w),
-        dist2(&dg.w, &basel.w),
-        (dist2(&out.w, &basel.w) / dist2(&dg.w, &basel.w).max(1e-300)) as u64,
+        basel.seconds / pv.out.seconds.max(1e-9),
+        dist2(session.w(), &basel.w),
+        dist2(&pv.out.w, &basel.w),
+        (dist2(session.w(), &basel.w) / dist2(&pv.out.w, &basel.w).max(1e-300)) as u64,
+    );
+
+    // --- commit: make the deletion real (Algorithm-3 cache rewrite)
+    let mut session = session;
+    let c = session.commit(edit)?;
+    println!(
+        "\ncommitted v{}: n={} (pass {:.2}s); session stats: {}",
+        c.version,
+        session.n_current(),
+        c.out.seconds,
+        session.stats().render()
     );
     println!("\nquickstart OK");
     Ok(())

@@ -1,19 +1,19 @@
 //! Robust learning (§5.3 / appendix D.5): inject label-flip outliers,
-//! detect them by training loss, prune with DeltaGrad, and measure the
-//! accuracy recovered — at incremental-update cost instead of a retrain.
+//! detect them by training loss, prune with a speculative DeltaGrad
+//! preview, and measure the accuracy recovered — at incremental-update
+//! cost instead of a retrain.
 //!
 //! Run: `cargo run --release --example robust_learning`
 
 use deltagrad::apps::robust;
 use deltagrad::config::HyperParams;
-use deltagrad::data::{synth, IndexSet};
+use deltagrad::data::synth;
 use deltagrad::runtime::Engine;
-use deltagrad::train::{self, TrainOpts};
+use deltagrad::session::{Edit, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
     let mut eng = Engine::open_default()?;
-    let exes = eng.model("small")?;
-    let spec = exes.spec.clone();
+    let spec = eng.spec("small")?.clone();
     let (clean_ds, test_ds) = synth::train_test_for_spec(&spec, 9, Some(1024), Some(512));
     // poison 5% of the labels
     let n_poison = clean_ds.n / 20;
@@ -22,16 +22,18 @@ fn main() -> anyhow::Result<()> {
 
     let mut hp = HyperParams::for_dataset("small");
     hp.t = 80;
-    let out = train::train(&exes, &eng.rt, &poisoned_ds, &TrainOpts::full(&hp, &IndexSet::empty()))?;
-    let traj = out.traj.unwrap();
-    let acc_poisoned = train::evaluate(&exes, &eng.rt, &test_ds, &out.w)?.accuracy();
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp)
+        .datasets(poisoned_ds, test_ds)
+        .build_in(&mut eng)?;
+    let acc_poisoned = session.eval_test(session.w())?.accuracy();
     println!("model on poisoned data: test acc {acc_poisoned:.4}");
 
     // prune the 5% highest-loss samples and refit incrementally
     let t0 = std::time::Instant::now();
-    let fit = robust::prune_and_refit(&exes, &eng.rt, &poisoned_ds, &traj, &hp, &out.w, 0.05)?;
+    let fit = robust::prune_and_refit(&session, 0.05)?;
     let total = t0.elapsed().as_secs_f64();
-    let acc_robust = train::evaluate(&exes, &eng.rt, &test_ds, &fit.w)?.accuracy();
+    let acc_robust = session.eval_test(&fit.w)?.accuracy();
 
     // how many true poison points did the loss ranking catch?
     let caught = fit.pruned.iter().filter(|&i| victims.contains(i)).count();
@@ -48,8 +50,8 @@ fn main() -> anyhow::Result<()> {
     println!("robust model: test acc {acc_robust:.4} (was {acc_poisoned:.4})");
 
     // reference: full retrain without the pruned points
-    let basel = train::train(&exes, &eng.rt, &poisoned_ds, &TrainOpts::full(&hp, &fit.pruned))?;
-    let acc_basel = train::evaluate(&exes, &eng.rt, &test_ds, &basel.w)?.accuracy();
+    let basel = session.baseline(&Edit::Delete(fit.pruned.clone()))?;
+    let acc_basel = session.eval_test(&basel.w)?.accuracy();
     println!(
         "BaseL reference: acc {acc_basel:.4} in {:.2}s (DeltaGrad matched it {:.1}x faster)",
         basel.seconds,

@@ -16,10 +16,9 @@
 
 use deltagrad::config::HyperParams;
 use deltagrad::data::{sample_removal, synth, IndexSet};
-use deltagrad::deltagrad::batch;
-use deltagrad::deltagrad::online::{OnlineState, Request};
 use deltagrad::lbfgs::History;
 use deltagrad::runtime::{Engine, Runtime};
+use deltagrad::session::{Edit, SessionBuilder};
 use deltagrad::train::{self, TrainOpts};
 use deltagrad::util::vecmath::axpy;
 use deltagrad::util::Rng;
@@ -191,50 +190,57 @@ fn main() -> anyhow::Result<()> {
 
     if want("batch-delete") {
         println!("== batch-delete end-to-end (small, T=40, r=16) ==");
-        let exes = eng.model("small")?;
-        let spec = exes.spec.clone();
-        let (ds, _test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let spec = eng.spec("small")?.clone();
+        let (ds, test) = synth::train_test_for_spec(&spec, 7, None, None);
         let mut hp = HyperParams::for_dataset("small");
         hp.t = 40;
         hp.j0 = 8;
-        let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))?;
-        let traj = full.traj.expect("recorded");
+        let session = SessionBuilder::new("small")
+            .hyper_params(hp.clone())
+            .datasets(ds.clone(), test)
+            .build_in(&mut eng)?;
+        let exes = eng.model("small")?;
         let removed = sample_removal(&mut Rng::new(11), ds.n, 16);
+        let edit = Edit::Delete(removed.clone());
+        let rt = eng.runtime();
         let out = &mut results;
-        bench(out, &eng.rt, "batch-delete (per-iteration re-upload shape)", 1, 5, || {
+        bench(out, &rt, "batch-delete (per-iteration re-upload shape)", 1, 5, || {
             deltagrad::testing::baseline::delete_gd_seed_shape(
-                &exes, &eng.rt, &ds, &traj, &hp, &removed,
+                &exes, &rt, &ds, session.trajectory(), &hp, &removed,
             )
             .map(|_| ())
         })?;
-        bench(out, &eng.rt, "batch-delete delete_gd (staged contexts)", 1, 5, || {
-            batch::delete_gd(&exes, &eng.rt, &ds, &traj, &hp, &removed).map(|_| ())
+        #[allow(deprecated)]
+        bench(out, &rt, "batch-delete delete_gd shim (own dataset staging)", 1, 5, || {
+            deltagrad::deltagrad::batch::delete_gd(
+                &exes, &rt, &ds, session.trajectory(), &hp, &removed,
+            )
+            .map(|_| ())
         })?;
-        let staged = exes.stage(&eng.rt, &ds, &IndexSet::empty())?;
-        bench(out, &eng.rt, "batch-delete delete_gd_staged (shared dataset)", 1, 5, || {
-            batch::delete_gd_staged(&exes, &eng.rt, &ds, &staged, &traj, &hp, &removed)
-                .map(|_| ())
+        bench(out, &rt, "batch-delete session.preview (resident base)", 1, 5, || {
+            session.preview(&edit).map(|_| ())
         })?;
     }
 
     if want("online") {
         println!("== online end-to-end (small, T=40, group of 4) ==");
-        let exes = eng.model("small")?;
-        let spec = exes.spec.clone();
-        let (ds, _test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let spec = eng.spec("small")?.clone();
+        let (ds, test) = synth::train_test_for_spec(&spec, 7, None, None);
         let mut hp = HyperParams::for_dataset("small");
         hp.t = 40;
         hp.j0 = 8;
-        let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))?;
-        let traj = full.traj.expect("recorded");
-        let mut state = OnlineState::new(&exes, &eng.rt, ds, traj, hp)?;
+        let mut session = SessionBuilder::new("small")
+            .hyper_params(hp)
+            .datasets(ds, test)
+            .build_in(&mut eng)?;
+        let rt = eng.runtime();
         // every repetition commits its deletions, so draw fresh victims
         let mut next_victim = 0usize;
-        bench(&mut results, &eng.rt, "online apply_group (4 deletes)", 1, 10, || {
-            let reqs: Vec<Request> =
-                (0..4).map(|i| Request::Delete(next_victim + i)).collect();
+        bench(&mut results, &rt, "online session.commit (4 deletes)", 1, 10, || {
+            let edits: Vec<Edit> =
+                (0..4).map(|i| Edit::delete_row(next_victim + i)).collect();
             next_victim += 4;
-            state.apply_group(&exes, &eng.rt, &reqs).map(|_| ())
+            session.commit(Edit::group(edits)).map(|_| ())
         })?;
     }
 

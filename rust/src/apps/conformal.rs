@@ -10,12 +10,9 @@
 
 use anyhow::Result;
 
-use crate::config::{HyperParams, ModelKind};
-use crate::data::{Dataset, IndexSet};
-use crate::deltagrad::batch;
-use crate::runtime::engine::ModelExes;
-use crate::runtime::Runtime;
-use crate::train::Trajectory;
+use crate::config::ModelKind;
+use crate::data::IndexSet;
+use crate::session::{Edit, Session};
 
 /// Nonconformity score: 1 − softmax probability of the true class under
 /// model `w` (computed host-side; LR only — logits are x·W).
@@ -45,28 +42,21 @@ pub fn folds(n: usize, k_folds: usize) -> Vec<IndexSet> {
 }
 
 /// Cross-conformal calibration: residuals of every training point under
-/// the fold model that excluded it. Fold models come from DeltaGrad
-/// batch deletion of the fold (vs BaseL: K full retrains). The dataset
-/// stages once for all K passes; each pass stages its fold's rows once
-/// and uploads parameters once per iteration (runtime::engine staging
-/// discipline).
-pub fn cross_conformal_residuals(
-    exes: &ModelExes,
-    rt: &Runtime,
-    ds: &Dataset,
-    traj: &Trajectory,
-    hp: &HyperParams,
-    k_folds: usize,
-) -> Result<Vec<f64>> {
-    assert_eq!(exes.spec.model, ModelKind::Lr, "conformal app is LR-only");
-    let da = exes.spec.da;
-    let k = exes.spec.k;
-    let staged = exes.stage(rt, ds, &crate::data::IndexSet::empty())?;
+/// the fold model that excluded it. Fold models come from speculative
+/// `session.preview` deletions of each fold (vs BaseL: K full retrains).
+/// All K passes share the session's resident staged base; each pass
+/// stages its fold's rows once and uploads parameters once per iteration
+/// (runtime::engine staging discipline).
+pub fn cross_conformal_residuals(session: &Session, k_folds: usize) -> Result<Vec<f64>> {
+    assert_eq!(session.spec().model, ModelKind::Lr, "conformal app is LR-only");
+    let da = session.spec().da;
+    let k = session.spec().k;
+    let ds = session.train_dataset();
     let mut residuals = vec![0.0f64; ds.n];
     for fold in folds(ds.n, k_folds) {
-        let dg = batch::delete_gd_staged(exes, rt, ds, &staged, traj, hp, &fold)?;
+        let pv = session.preview(&Edit::Delete(fold.clone()))?;
         for i in fold.iter() {
-            residuals[i] = nonconformity_lr(da, k, &dg.w, ds.row(i), ds.y[i]);
+            residuals[i] = nonconformity_lr(da, k, &pv.out.w, ds.row(i), ds.y[i]);
         }
     }
     Ok(residuals)

@@ -19,6 +19,7 @@ use anyhow::Result;
 use crate::data::{Dataset, IndexSet};
 use crate::runtime::engine::ModelExes;
 use crate::runtime::Runtime;
+use crate::session::Session;
 use crate::util::vecmath::{axpy, dot};
 
 /// Conjugate-gradient solve of (H + damp·I) z = b where H·v is the
@@ -87,7 +88,26 @@ impl Default for InfluenceOpts {
     }
 }
 
+/// One-shot influence-function deletion update at the session's current
+/// parameters (the D.3 comparator against `session.preview`).
 pub fn influence_delete(
+    session: &Session,
+    removed: &IndexSet,
+    opts: &InfluenceOpts,
+) -> Result<(Vec<f32>, f64)> {
+    influence_delete_raw(
+        session.exes(),
+        session.runtime(),
+        session.train_dataset(),
+        session.w(),
+        removed,
+        opts,
+    )
+}
+
+/// Engine-level core of [`influence_delete`] (explicit model/parameters;
+/// used when comparing at a non-session iterate).
+pub fn influence_delete_raw(
     exes: &ModelExes,
     rt: &Runtime,
     ds: &Dataset,

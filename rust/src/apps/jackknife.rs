@@ -3,16 +3,12 @@
 //! For an estimator f̂_n computed from n samples, the jackknife bias
 //! estimate is  b̂ = (n−1)(mean_i f̂_{−i} − f̂_n)  and the corrected
 //! estimator  f̂_jack = f̂_n − b̂.  Every f̂_{−i} needs the model retrained
-//! without sample i — exactly DeltaGrad's leave-one-out fast path.
+//! without sample i — exactly a speculative `session.preview` against
+//! the shared staged base.
 
 use anyhow::Result;
 
-use crate::config::HyperParams;
-use crate::data::{Dataset, IndexSet};
-use crate::deltagrad::batch;
-use crate::runtime::engine::ModelExes;
-use crate::runtime::Runtime;
-use crate::train::Trajectory;
+use crate::session::{Edit, Session};
 
 /// Jackknife over a scalar functional of the model parameters.
 pub struct JackknifeResult {
@@ -24,37 +20,30 @@ pub struct JackknifeResult {
     pub corrected: f64,
     /// number of leave-one-out refits used
     pub n_loo: usize,
-    /// total device traffic of all LOO passes (the dataset stages once
-    /// up front; each pass ships one delta row + per-iteration params)
+    /// total device traffic of all LOO passes (the session's base is
+    /// already resident; each pass ships one delta row + per-iteration
+    /// params)
     pub transfers: crate::runtime::TransferStats,
 }
 
 /// Estimate the bias of `functional(w)` with leave-one-out DeltaGrad over
 /// a subsample of `loo_count` points (the full jackknife uses n).
-#[allow(clippy::too_many_arguments)]
 pub fn jackknife_bias(
-    exes: &ModelExes,
-    rt: &Runtime,
-    ds: &Dataset,
-    traj: &Trajectory,
-    hp: &HyperParams,
-    w_full: &[f32],
+    session: &Session,
     functional: impl Fn(&[f32]) -> f64,
     loo_count: usize,
     seed: u64,
 ) -> Result<JackknifeResult> {
-    let n = ds.n;
+    let n = session.train_dataset().n;
     let mut rng = crate::util::Rng::new(seed);
     let picks = rng.sample_distinct(n, loo_count.min(n));
-    let full = functional(w_full);
-    let staged = exes.stage(rt, ds, &IndexSet::empty())?;
+    let full = functional(session.w());
     let mut acc = 0.0f64;
     let mut transfers = crate::runtime::TransferStats::default();
     for &i in &picks {
-        let removed = IndexSet::from_vec(vec![i]);
-        let dg = batch::delete_gd_staged(exes, rt, ds, &staged, traj, hp, &removed)?;
-        transfers.accumulate(&dg.transfers);
-        acc += functional(&dg.w);
+        let pv = session.preview(&Edit::delete_row(i))?;
+        transfers.accumulate(&pv.out.transfers);
+        acc += functional(&pv.out.w);
     }
     let mean_loo = acc / picks.len() as f64;
     let bias = (n as f64 - 1.0) * (mean_loo - full);
@@ -63,8 +52,6 @@ pub fn jackknife_bias(
 
 #[cfg(test)]
 mod tests {
-    use super::*;
-
     #[test]
     fn jackknife_formula_on_synthetic_functional() {
         // direct check of the arithmetic with a fabricated mean_loo

@@ -1,7 +1,12 @@
-//! Applications of DeltaGrad (paper §5 and appendix D):
+//! Applications of DeltaGrad (paper §5 and appendix D), all built on
+//! speculative [`crate::session::Session::preview`] passes against one
+//! shared session — no `(exes, rt, ds, traj, hp)` plumbing, and no
+//! per-app staging of the retrain path. (The one remaining app-local
+//! upload is `robust::per_sample_losses`, whose per-row loss sweep
+//! stages its own `StagedRows` copy of the base once per call.)
 //!
 //! * [`privacy`]   — ε-approximate deletion via the Laplace mechanism
-//!   (§5.1, appendix B.1).
+//!   (§5.1, appendix B.1; host-side, model-agnostic).
 //! * [`valuation`] — leave-one-out data valuation (§5.4).
 //! * [`robust`]    — robust learning by outlier prune-and-refit
 //!   (§5.3, appendix D.5).

@@ -7,25 +7,20 @@
 
 use anyhow::Result;
 
-use crate::config::HyperParams;
 use crate::data::{Dataset, IndexSet};
-use crate::deltagrad::batch;
-use crate::runtime::engine::ModelExes;
-use crate::runtime::Runtime;
-use crate::train::Trajectory;
+use crate::session::{Edit, Session};
 
-/// Per-sample training losses under `w` (prune signal).
-pub fn per_sample_losses(
-    exes: &ModelExes,
-    rt: &Runtime,
-    ds: &Dataset,
-    w: &[f32],
-) -> Result<Vec<f64>> {
+/// Per-sample training losses under `w` (prune signal), over the
+/// session's base dataset.
+pub fn per_sample_losses(session: &Session, w: &[f32]) -> Result<Vec<f64>> {
     // Exact per-row losses need O(n) executions of the grad_small
     // artifact (its stats output is a masked SUM). What they do NOT need
     // is O(n) data shipping: stage every row (and the parameters) once,
     // then sweep a singleton mask across the resident buffers — each
     // row's execution uploads only a chunk_small-float mask.
+    let exes = session.exes();
+    let rt = session.runtime();
+    let ds = session.train_dataset();
     let all: Vec<usize> = (0..ds.n).collect();
     let sr = exes.stage_rows(rt, ds, &all)?;
     let ctx = exes.pass_ctx(rt, w)?;
@@ -44,25 +39,19 @@ pub struct RobustFit {
     pub seconds: f64,
 }
 
-/// Prune the `frac` highest-loss samples and refit with DeltaGrad.
-pub fn prune_and_refit(
-    exes: &ModelExes,
-    rt: &Runtime,
-    ds: &Dataset,
-    traj: &Trajectory,
-    hp: &HyperParams,
-    w_full: &[f32],
-    frac: f64,
-) -> Result<RobustFit> {
+/// Prune the `frac` highest-loss samples (scored at the session's
+/// current parameters) and refit with a speculative DeltaGrad pass.
+pub fn prune_and_refit(session: &Session, frac: f64) -> Result<RobustFit> {
     assert!((0.0..1.0).contains(&frac));
-    let losses = per_sample_losses(exes, rt, ds, w_full)?;
-    let mut idx: Vec<usize> = (0..ds.n).collect();
+    let n = session.train_dataset().n;
+    let losses = per_sample_losses(session, session.w())?;
+    let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_by(|&a, &b| losses[b].partial_cmp(&losses[a]).unwrap());
-    let r = ((ds.n as f64) * frac).round() as usize;
+    let r = ((n as f64) * frac).round() as usize;
     let pruned = IndexSet::from_vec(idx[..r].to_vec());
     let t0 = std::time::Instant::now();
-    let dg = batch::delete_gd(exes, rt, ds, traj, hp, &pruned)?;
-    Ok(RobustFit { pruned, w: dg.w, seconds: t0.elapsed().as_secs_f64() })
+    let pv = session.preview(&Edit::Delete(pruned.clone()))?;
+    Ok(RobustFit { pruned, w: pv.out.w, seconds: t0.elapsed().as_secs_f64() })
 }
 
 /// Inject label-flip outliers into a dataset copy (for the D.5 bench):

@@ -2,19 +2,13 @@
 //!
 //! The value of training sample i is the change it causes in a utility
 //! (here: test loss / test accuracy): V(i) = U(w_{-i}) − U(w_full).
-//! Naively this is n retrainings; DeltaGrad's online path makes each
-//! leave-one-out model a cheap incremental pass over the cached
-//! trajectory (this is the paper's motivating Cook-1977 / Data-Shapley
-//! use case).
+//! Naively this is n retrainings; DeltaGrad makes each leave-one-out
+//! model a cheap speculative pass over the cached trajectory (this is
+//! the paper's motivating Cook-1977 / Data-Shapley use case).
 
 use anyhow::Result;
 
-use crate::config::HyperParams;
-use crate::data::{Dataset, IndexSet};
-use crate::deltagrad::batch;
-use crate::runtime::engine::ModelExes;
-use crate::runtime::Runtime;
-use crate::train::{self, Trajectory};
+use crate::session::{Edit, Session};
 
 /// Leave-one-out valuation result for one sample.
 #[derive(Clone, Debug)]
@@ -30,35 +24,27 @@ pub struct SampleValue {
 
 /// Score a set of candidate samples by leave-one-out DeltaGrad.
 ///
-/// `traj` is the cached full-data trajectory; each candidate costs one
-/// DeltaGrad pass (vs a full retrain for the naive approach — that ratio
-/// is exactly the paper's Fig. 4 speedup). Train and test sets are
-/// staged once for ALL candidates; within each pass the candidate's
-/// delta row stages once and the parameters upload once per iteration
-/// (runtime::engine staging discipline).
+/// Each candidate costs one speculative `session.preview` (vs a full
+/// retrain for the naive approach — that ratio is exactly the paper's
+/// Fig. 4 speedup). All candidates share the session's resident staged
+/// base and test set; within each pass the candidate's delta row stages
+/// once and the parameters upload once per iteration (runtime::engine
+/// staging discipline).
 pub fn leave_one_out_values(
-    exes: &ModelExes,
-    rt: &Runtime,
-    train_ds: &Dataset,
-    test_ds: &Dataset,
-    traj: &Trajectory,
-    hp: &HyperParams,
-    w_full: &[f32],
+    session: &Session,
     candidates: &[usize],
 ) -> Result<Vec<SampleValue>> {
-    let test_staged = exes.stage(rt, test_ds, &IndexSet::empty())?;
-    let train_staged = exes.stage(rt, train_ds, &IndexSet::empty())?;
-    let base_stats = train::evaluate_staged(exes, rt, &test_staged, w_full)?;
+    let w_full = session.w().to_vec();
+    let base_stats = session.eval_test(&w_full)?;
     let base_loss = base_stats.mean_loss();
     let mut out = Vec::with_capacity(candidates.len());
     for &i in candidates {
-        let removed = IndexSet::from_vec(vec![i]);
-        let dg = batch::delete_gd_staged(exes, rt, train_ds, &train_staged, traj, hp, &removed)?;
-        let stats = train::evaluate_staged(exes, rt, &test_staged, &dg.w)?;
+        let pv = session.preview(&Edit::delete_row(i))?;
+        let stats = session.eval_test(&pv.out.w)?;
         out.push(SampleValue {
             index: i,
             loss_delta: stats.mean_loss() - base_loss,
-            param_dist: crate::util::vecmath::dist2(&dg.w, w_full),
+            param_dist: crate::util::vecmath::dist2(&pv.out.w, &w_full),
         });
     }
     Ok(out)

@@ -16,12 +16,27 @@ pub struct BatchPolicy {
     pub max_group: usize,
     /// max time the FIRST request in a group may wait for company
     pub max_wait: Duration,
+    /// max requests queued (admitted but not yet committed); arrivals
+    /// beyond this are rejected with `Rejected::QueueFull` instead of
+    /// growing the queue without bound under load
+    pub max_queue: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_group: 16, max_wait: Duration::from_millis(20) }
+        BatchPolicy {
+            max_group: 16,
+            max_wait: Duration::from_millis(20),
+            max_queue: 1024,
+        }
     }
+}
+
+/// Admission control: may a new request join a queue currently holding
+/// `queue_len` requests? Pure so the backpressure invariant is
+/// property-testable alongside the grouping rules.
+pub fn admits(queue_len: usize, policy: &BatchPolicy) -> bool {
+    queue_len < policy.max_queue
 }
 
 /// A queued request with its arrival time and an opaque payload.
@@ -83,7 +98,7 @@ mod tests {
 
     #[test]
     fn full_queue_commits_max_group() {
-        let p = BatchPolicy { max_group: 4, max_wait: Duration::from_secs(60) };
+        let p = BatchPolicy { max_group: 4, max_wait: Duration::from_secs(60), ..BatchPolicy::default() };
         let now = Instant::now();
         let q: Vec<_> = (0..7).map(|_| pend(now)).collect();
         assert_eq!(group_to_commit(&q, &p, now), 4);
@@ -91,7 +106,7 @@ mod tests {
 
     #[test]
     fn old_request_forces_commit() {
-        let p = BatchPolicy { max_group: 16, max_wait: Duration::from_millis(5) };
+        let p = BatchPolicy { max_group: 16, max_wait: Duration::from_millis(5), ..BatchPolicy::default() };
         let now = Instant::now();
         let q = vec![pend(now - Duration::from_millis(10)), pend(now)];
         assert_eq!(group_to_commit(&q, &p, now), 2);
@@ -99,7 +114,7 @@ mod tests {
 
     #[test]
     fn fresh_request_waits() {
-        let p = BatchPolicy { max_group: 16, max_wait: Duration::from_millis(50) };
+        let p = BatchPolicy { max_group: 16, max_wait: Duration::from_millis(50), ..BatchPolicy::default() };
         let now = Instant::now();
         let q = vec![pend(now)];
         assert_eq!(group_to_commit(&q, &p, now), 0);
@@ -114,7 +129,7 @@ mod tests {
         Cases::new(0xBA7C4).run(300, |g| {
             let max_group = 1 + g.below(32);
             let max_wait = Duration::from_millis(g.below(100) as u64);
-            let policy = BatchPolicy { max_group, max_wait };
+            let policy = BatchPolicy { max_group, max_wait, ..BatchPolicy::default() };
             let now = Instant::now();
             let qlen = g.below(64);
             let q: Vec<Pending<u32>> = (0..qlen)
@@ -138,6 +153,47 @@ mod tests {
             }
             if n == 0 && !q.is_empty() {
                 assert!(now.duration_since(q[0].arrived) < policy.max_wait);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_admission_bounds_queue_under_any_load() {
+        // simulate arbitrary interleavings of arrivals and commit ticks:
+        // with `admits` gating every arrival, the queue NEVER exceeds
+        // max_queue, rejections happen exactly at the bound, and a
+        // commit always reopens admission (no livelock).
+        Cases::new(0xBAC9).run(300, |g| {
+            let policy = BatchPolicy {
+                max_group: 1 + g.below(8),
+                max_wait: Duration::from_millis(g.below(50) as u64),
+                max_queue: 1 + g.below(32),
+            };
+            let now = Instant::now();
+            let mut queue: Vec<Pending<u32>> = Vec::new();
+            let mut rejected = 0usize;
+            for step in 0..g.below(200) {
+                if g.below(3) == 0 {
+                    // worker makes progress: commit a group if due
+                    let n = group_to_commit(&queue, &policy, now + Duration::from_millis(step as u64));
+                    queue.drain(..n);
+                } else {
+                    // client arrival, gated by admission control
+                    if admits(queue.len(), &policy) {
+                        queue.push(Pending { arrived: now, payload: step as u32 });
+                    } else {
+                        rejected += 1;
+                        assert_eq!(queue.len(), policy.max_queue, "rejected below the bound");
+                    }
+                }
+                assert!(queue.len() <= policy.max_queue, "backpressure bound violated");
+            }
+            // a full queue must reopen after one forced commit
+            if rejected > 0 {
+                let later = now + policy.max_wait + Duration::from_millis(1);
+                let n = group_to_commit(&queue, &policy, later);
+                queue.drain(..n);
+                assert!(admits(queue.len(), &policy), "commit must reopen admission");
             }
         });
     }

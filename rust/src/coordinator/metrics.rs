@@ -55,6 +55,13 @@ impl Metrics {
         }
     }
 
+    /// Record how many rows a served group deleted/added (from
+    /// `Edit::count_kinds`).
+    pub fn record_kinds(&mut self, dels: usize, adds: usize) {
+        self.deletes += dels as u64;
+        self.adds += adds as u64;
+    }
+
     pub fn record_outcome(&mut self, n_exact: usize, n_approx: usize, n_fallback: usize) {
         self.exact_iters += n_exact as u64;
         self.approx_iters += n_approx as u64;

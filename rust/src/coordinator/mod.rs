@@ -14,4 +14,4 @@ pub mod service;
 
 pub use batcher::{BatchPolicy, Pending};
 pub use metrics::Metrics;
-pub use service::{ModelSnapshot, ServiceConfig, ServiceHandle, UpdateReply};
+pub use service::{ModelSnapshot, Rejected, ServiceConfig, ServiceHandle, UpdateReply};

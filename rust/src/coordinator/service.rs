@@ -1,36 +1,68 @@
-//! The unlearning service: a leader thread owning the model + trajectory,
-//! serving deletion/addition requests through a group-commit batcher.
+//! The unlearning service: a leader thread owning a [`Session`], serving
+//! deletion/addition [`Edit`]s through a group-commit batcher.
 //!
 //! PJRT state (client, executables, staged buffers) lives entirely on the
-//! worker thread — callers talk over std mpsc channels, so any number of
-//! producer threads can enqueue requests (the Fig. 4 online workload, the
-//! `online_service` example, and the coordinator benches all drive this).
+//! worker thread inside the Session — callers talk over std mpsc
+//! channels, so any number of producer threads can enqueue edits (the
+//! Fig. 4 online workload, the `online_service` example, and the
+//! coordinator benches all drive this). The worker-side queue is bounded
+//! by `BatchPolicy::max_queue`: arrivals beyond it get a typed
+//! [`Rejected::QueueFull`] instead of buffering without limit. (The
+//! residual window is the unbounded mpsc command channel itself: edits
+//! sent *while a pass is running* sit there until the worker drains
+//! them, so transient overload can still hold up to
+//! arrival_rate × pass_duration commands in flight — they are then
+//! admitted or rejected one by one against `max_queue`.)
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use super::batcher::{group_to_commit, time_until_commit, BatchPolicy, Pending};
+use super::batcher::{admits, group_to_commit, time_until_commit, BatchPolicy, Pending};
 use super::metrics::Metrics;
 use crate::config::HyperParams;
-use crate::data::IndexSet;
-use crate::deltagrad::online::{OnlineState, Request};
-use crate::train::{self, TrainOpts};
+use crate::session::{Edit, SessionBuilder};
 
-/// What the service sends back for one served request.
+/// What the service sends back for one served edit.
 #[derive(Clone, Debug)]
 pub struct UpdateReply {
-    /// model version after this request was applied
+    /// model version after this edit was applied
     pub version: u64,
-    /// size of the group it was committed with
+    /// number of queued edits it was committed with
     pub group_size: usize,
     /// wall-clock seconds of the DeltaGrad pass (shared by the group)
     pub pass_seconds: f64,
     pub n_exact: usize,
     pub n_approx: usize,
 }
+
+/// Why an edit was not applied.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// the bounded request queue is full (`BatchPolicy::max_queue`);
+    /// back off and retry
+    QueueFull { max_queue: usize },
+    /// the pass (or validation) failed for this edit's group
+    Failed(String),
+    /// the service stopped before (or while) serving the edit
+    Stopped,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull { max_queue } => {
+                write!(f, "queue full (max_queue={max_queue}); back off and retry")
+            }
+            Rejected::Failed(e) => write!(f, "update rejected: {e}"),
+            Rejected::Stopped => write!(f, "service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
 
 /// Read-only model snapshot.
 #[derive(Clone, Debug)]
@@ -42,7 +74,7 @@ pub struct ModelSnapshot {
 }
 
 enum Command {
-    Update(Request, Sender<Result<UpdateReply, String>>),
+    Update(Edit, Sender<Result<UpdateReply, Rejected>>),
     Snapshot(Sender<ModelSnapshot>),
     Metrics(Sender<Metrics>),
     Shutdown,
@@ -66,8 +98,9 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Spawn the leader thread: loads artifacts, synthesizes data, trains
-    /// the initial model (caching the trajectory), then serves requests.
+    /// Spawn the leader thread: builds a [`Session`] (loads artifacts,
+    /// synthesizes data, trains the initial model, caches the
+    /// trajectory), then serves edits.
     pub fn spawn(cfg: ServiceConfig) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Command>();
         let join = std::thread::Builder::new()
@@ -76,25 +109,24 @@ impl ServiceHandle {
         Ok(ServiceHandle { tx, join: Some(join) })
     }
 
-    /// Enqueue one update request; blocks until it is committed.
-    pub fn update(&self, req: Request) -> Result<UpdateReply> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Command::Update(req, rtx))
-            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+    /// Enqueue one edit; blocks until it is committed (or rejected).
+    pub fn update(&self, edit: Edit) -> Result<UpdateReply, Rejected> {
+        let rrx = self.update_async(edit)?;
         match rrx.recv() {
-            Ok(Ok(rep)) => Ok(rep),
-            Ok(Err(e)) => bail!("update rejected: {e}"),
-            Err(_) => bail!("service died while serving"),
+            Ok(res) => res,
+            Err(_) => Err(Rejected::Stopped),
         }
     }
 
-    /// Enqueue an update without waiting (reply receiver returned).
-    pub fn update_async(&self, req: Request) -> Result<Receiver<Result<UpdateReply, String>>> {
+    /// Enqueue an edit without waiting (reply receiver returned).
+    pub fn update_async(
+        &self,
+        edit: Edit,
+    ) -> Result<Receiver<Result<UpdateReply, Rejected>>, Rejected> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Command::Update(req, rtx))
-            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+            .send(Command::Update(edit, rtx))
+            .map_err(|_| Rejected::Stopped)?;
         Ok(rrx)
     }
 
@@ -133,28 +165,23 @@ impl Drop for ServiceHandle {
 }
 
 struct PendingUpdate {
-    req: Request,
-    reply: Sender<Result<UpdateReply, String>>,
+    edit: Edit,
+    reply: Sender<Result<UpdateReply, Rejected>>,
 }
 
 fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
-    // --- initialization: engine, data, initial training
-    let mut eng = crate::runtime::Engine::open_default()?;
-    let exes = eng.model(&cfg.model)?;
-    let spec = exes.spec.clone();
-    let (train_ds, test_ds) =
-        crate::data::synth::train_test_for_spec(&spec, cfg.seed, cfg.n_train, cfg.n_test);
-    let test_staged = exes.stage(&eng.rt, &test_ds, &IndexSet::empty())?;
-    let out = train::train(
-        &exes,
-        &eng.rt,
-        &train_ds,
-        &TrainOpts::full(&cfg.hp, &IndexSet::empty()),
-    )?;
-    let traj = out.traj.expect("trajectory recorded");
-    let mut state = OnlineState::new(&exes, &eng.rt, train_ds, traj, cfg.hp.clone())?;
-    let mut w_current = out.w;
-    let mut version: u64 = 0;
+    // the service serves commits, which are GD-only (Algorithm-3 cache
+    // rewriting) — reject an SGD config before paying for training
+    if cfg.hp.batch != 0 {
+        anyhow::bail!("the unlearning service requires a GD config (hp.batch == 0)");
+    }
+    // --- initialization: one Session owns engine, data, model, staging
+    let mut session = SessionBuilder::new(&cfg.model)
+        .seed(cfg.seed)
+        .n_train(cfg.n_train)
+        .n_test(cfg.n_test)
+        .hyper_params(cfg.hp)
+        .build()?;
     let mut metrics = Metrics::new();
 
     // --- serve
@@ -173,19 +200,25 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
             },
         };
         match cmd {
-            Some(Command::Update(req, reply)) => {
-                queue.push(Pending {
-                    arrived: Instant::now(),
-                    payload: PendingUpdate { req, reply },
-                });
+            Some(Command::Update(edit, reply)) => {
+                if admits(queue.len(), &cfg.policy) {
+                    queue.push(Pending {
+                        arrived: Instant::now(),
+                        payload: PendingUpdate { edit, reply },
+                    });
+                } else {
+                    let _ = reply.send(Err(Rejected::QueueFull {
+                        max_queue: cfg.policy.max_queue,
+                    }));
+                }
             }
             Some(Command::Snapshot(reply)) => {
-                let stats = train::evaluate_staged(&exes, &eng.rt, &test_staged, &w_current)?;
+                let snap = session.snapshot()?;
                 let _ = reply.send(ModelSnapshot {
-                    version,
-                    w: w_current.clone(),
-                    n_train: state.n_current(),
-                    test_accuracy: stats.accuracy(),
+                    version: snap.version,
+                    w: snap.w,
+                    n_train: snap.n_train,
+                    test_accuracy: snap.test_accuracy,
                 });
             }
             Some(Command::Metrics(reply)) => {
@@ -198,29 +231,29 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
         let n = group_to_commit(&queue, &cfg.policy, Instant::now());
         if n > 0 {
             let group: Vec<Pending<PendingUpdate>> = queue.drain(..n).collect();
-            let reqs: Vec<Request> = group.iter().map(|p| p.payload.req.clone()).collect();
-            match state.apply_group(&exes, &eng.rt, &reqs) {
-                Ok(out) => {
-                    version += 1;
-                    w_current = out.w.clone();
+            let edit = Edit::group(group.iter().map(|p| p.payload.edit.clone()).collect());
+            let (dels, adds) = edit.count_kinds();
+            match session.commit(edit) {
+                Ok(c) => {
                     let now = Instant::now();
                     let lats: Vec<_> = group.iter().map(|p| now - p.arrived).collect();
                     metrics.record_group(n, &lats);
-                    metrics.record_outcome(out.n_exact, out.n_approx, out.n_fallback);
-                    metrics.record_transfers(&out.transfers);
+                    metrics.record_kinds(dels, adds);
+                    metrics.record_outcome(c.out.n_exact, c.out.n_approx, c.out.n_fallback);
+                    metrics.record_transfers(&c.out.transfers);
                     for p in &group {
                         let _ = p.payload.reply.send(Ok(UpdateReply {
-                            version,
+                            version: c.version,
                             group_size: n,
-                            pass_seconds: out.seconds,
-                            n_exact: out.n_exact,
-                            n_approx: out.n_approx,
+                            pass_seconds: c.out.seconds,
+                            n_exact: c.out.n_exact,
+                            n_approx: c.out.n_approx,
                         }));
                     }
                 }
                 Err(e) => {
                     for p in &group {
-                        let _ = p.payload.reply.send(Err(e.to_string()));
+                        let _ = p.payload.reply.send(Err(Rejected::Failed(e.to_string())));
                     }
                 }
             }
@@ -228,14 +261,7 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
     }
     // drain: reject anything left
     for p in queue {
-        let _ = p.payload.reply.send(Err("service shut down".into()));
+        let _ = p.payload.reply.send(Err(Rejected::Stopped));
     }
     Ok(())
-}
-
-/// Convenience: count deletes/adds in a request slice (used by callers
-/// building workloads).
-pub fn count_kinds(reqs: &[Request]) -> (usize, usize) {
-    let dels = reqs.iter().filter(|r| matches!(r, Request::Delete(_))).count();
-    (dels, reqs.len() - dels)
 }

@@ -25,7 +25,7 @@ use anyhow::{bail, Result};
 use crate::config::{HyperParams, ModelKind};
 use crate::data::{Dataset, IndexSet};
 use crate::lbfgs::History;
-use crate::runtime::engine::{ModelExes, Stats};
+use crate::runtime::engine::{ModelExes, StagedRows, Stats};
 use crate::runtime::Runtime;
 use crate::util::vecmath::{axpy, dot, sub};
 
@@ -52,12 +52,21 @@ fn pair_ok(dw: &[f32], dg: &[f32], kind: ModelKind, curvature_min: f32) -> bool 
 ///
 /// `delta` carries the changed rows: for deletion they are indices into
 /// `ds`; for addition they live in `added`.
-enum Change<'a> {
+pub(crate) enum Change<'a> {
     Delete(&'a IndexSet),
     Add(&'a Dataset),
 }
 
-fn run_gd(
+/// Algorithm-1 speculative pass, generalized for `session::Session`:
+/// `staged_reuse` is the (possibly removal-masked) resident base,
+/// `tail` the session's committed added rows (device-resident,
+/// append-only segments included in every exact full-gradient
+/// evaluation), and `n_current` the effective training-set size those
+/// two represent. The deprecated free functions below pass
+/// `None`/`&[]`/`None`, which reproduces the pre-Session behaviour
+/// bitwise.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_gd(
     exes: &ModelExes,
     rt: &Runtime,
     ds: &Dataset,
@@ -65,9 +74,11 @@ fn run_gd(
     hp: &HyperParams,
     change: Change<'_>,
     staged_reuse: Option<&crate::runtime::engine::Staged>,
+    tail: &[StagedRows],
+    n_current: Option<f64>,
 ) -> Result<RetrainOutput> {
     let spec = &exes.spec;
-    let n = ds.n as f64;
+    let n = n_current.unwrap_or(ds.n as f64);
     if traj.ws.len() != hp.t + 1 || traj.gs.len() != hp.t {
         bail!(
             "trajectory length mismatch: ws={} gs={} hp.t={}",
@@ -150,7 +161,14 @@ fn run_gd(
         let step_scale = -(eta / n_new) as f32;
         if exact {
             n_exact += 1;
-            let (g_full_sum, stats) = exes.grad_staged_ctx(rt, staged_full, &ctx)?;
+            let (mut g_full_sum, mut stats) = exes.grad_staged_ctx(rt, staged_full, &ctx)?;
+            for sr in tail {
+                // committed added rows ride resident buffers; their grads
+                // join the full-data sum (no-op for the deprecated shims)
+                let (g_tail, s_tail) = exes.grad_rows_staged(rt, sr, &ctx)?;
+                axpy(1.0, &g_tail, &mut g_full_sum);
+                stats.accumulate(&s_tail);
+            }
             last_stats = stats;
             // harvest Δw = w^I − w_t before stepping (owned, no scratch
             // clone)
@@ -202,6 +220,8 @@ fn run_gd(
 }
 
 /// Batch deletion (GD mode, `hp.batch == 0`).
+#[deprecated(note = "construct a deltagrad::session::Session and use \
+                     preview/commit with an Edit (see docs/API.md)")]
 pub fn delete_gd(
     exes: &ModelExes,
     rt: &Runtime,
@@ -210,11 +230,13 @@ pub fn delete_gd(
     hp: &HyperParams,
     removed: &IndexSet,
 ) -> Result<RetrainOutput> {
-    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), None)
+    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), None, &[], None)
 }
 
 /// `delete_gd` reusing a pre-staged dataset (many-pass callers:
 /// valuation, conformal, jackknife — saves the per-call upload).
+#[deprecated(note = "construct a deltagrad::session::Session and use \
+                     preview/commit with an Edit (see docs/API.md)")]
 pub fn delete_gd_staged(
     exes: &ModelExes,
     rt: &Runtime,
@@ -224,10 +246,12 @@ pub fn delete_gd_staged(
     hp: &HyperParams,
     removed: &IndexSet,
 ) -> Result<RetrainOutput> {
-    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), Some(staged_full))
+    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), Some(staged_full), &[], None)
 }
 
 /// Batch addition (GD mode): `added` rows join the training set.
+#[deprecated(note = "construct a deltagrad::session::Session and use \
+                     preview/commit with an Edit (see docs/API.md)")]
 pub fn add_gd(
     exes: &ModelExes,
     rt: &Runtime,
@@ -236,7 +260,7 @@ pub fn add_gd(
     hp: &HyperParams,
     added: &Dataset,
 ) -> Result<RetrainOutput> {
-    run_gd(exes, rt, ds, traj, hp, Change::Add(added), None)
+    run_gd(exes, rt, ds, traj, hp, Change::Add(added), None, &[], None)
 }
 
 /// SGD batch deletion (§3, eq. S7). Requires the trajectory to carry the
@@ -248,6 +272,8 @@ pub fn add_gd(
 /// the tiny mask vector is uploaded. The full minibatch itself changes
 /// every iteration and is gathered per-iteration, sharing the
 /// iteration's parameter upload.
+#[deprecated(note = "construct a deltagrad::session::Session and use \
+                     preview with an Edit (see docs/API.md)")]
 pub fn delete_sgd(
     exes: &ModelExes,
     rt: &Runtime,
@@ -256,7 +282,29 @@ pub fn delete_sgd(
     hp: &HyperParams,
     removed: &IndexSet,
 ) -> Result<RetrainOutput> {
+    run_sgd_delete(exes, rt, ds, traj, hp, removed)
+}
+
+/// Core of [`delete_sgd`]; shared with `session::Session::preview` so the
+/// deprecated shim and the Session path stay bitwise identical.
+pub(crate) fn run_sgd_delete(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    removed: &IndexSet,
+) -> Result<RetrainOutput> {
     let spec = &exes.spec;
+    if traj.ws.len() != hp.t + 1 || traj.gs.len() != hp.t || traj.batches.len() != hp.t {
+        bail!(
+            "trajectory length mismatch: ws={} gs={} batches={} hp.t={}",
+            traj.ws.len(),
+            traj.gs.len(),
+            traj.batches.len(),
+            hp.t
+        );
+    }
     if traj.batches.iter().any(|b| b.is_empty()) {
         bail!("delete_sgd needs a minibatch schedule; trajectory was GD");
     }

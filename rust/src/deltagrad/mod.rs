@@ -1,10 +1,13 @@
 //! The paper's contribution: DeltaGrad rapid-retraining algorithms.
 //!
 //! * [`batch`]  — Algorithm 1 (batch deletion/addition, GD) and its SGD
-//!   extension (§3 / eq. S7).
-//! * [`online`] — Algorithm 3 (online deletion/addition with cache
-//!   rewriting, appendix C.2).
-//! * BaseL (retraining from scratch) is `train::train` with a removal set.
+//!   extension (§3 / eq. S7). The public free functions are deprecated
+//!   shims; the cores back [`crate::session::Session::preview`].
+//! * [`online`] — deprecated `Request` shim; the Algorithm-3 online
+//!   state machine (cache rewriting, appendix C.2) now lives in
+//!   [`crate::session::Session::commit`].
+//! * BaseL (retraining from scratch) is `train::train` with a removal
+//!   set, exposed as `session::Session::baseline`.
 //!
 //! All variants share the iteration skeleton: exact full-gradient steps
 //! during burn-in (t ≤ j0) and every T0 iterations — which also harvest

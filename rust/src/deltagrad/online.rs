@@ -1,32 +1,16 @@
-//! Algorithm 3: online deletion/addition — one sample per request, with
-//! the cached trajectory rewritten in place after every request
-//! (appendix C.2, eq. S62–S63).
+//! Algorithm 3 compatibility surface.
 //!
-//! State per model: the base dataset (staged once; deletions only flip
-//! masks), a tail of added rows, and the trajectory (w_t, g_t) over the
-//! *current* dataset. A request runs one DeltaGrad pass; exact iterations
-//! refresh (w_t, g_t) with exactly-computed values, approximate
-//! iterations store the leave-one-out approximated gradient (eq. S62) so
-//! the next request's history stays anchored.
-//!
-//! Staging discipline: one `apply_group` call stages the group's delta
-//! rows (deleted base rows + incoming additions) and the added tail
-//! ONCE, then every one of the `hp.t` iterations runs against the
-//! resident buffers with a single shared parameter upload (`PassCtx`).
+//! The online deletion/addition state machine (one model handle, a
+//! stream of edits, the cached trajectory rewritten in place after every
+//! commit — appendix C.2, eq. S62–S63) now lives in
+//! [`crate::session::Session`]: `commit` runs the Algorithm-3 pass plus
+//! cache rewriting, `preview` runs the speculative Algorithm-1 pass
+//! without touching state. This module keeps the old request type as a
+//! deprecated shim for one release.
 
-use anyhow::{bail, Result};
-
-use crate::config::{HyperParams, ModelKind};
-use crate::data::{Dataset, IndexSet};
-use crate::lbfgs::History;
-use crate::runtime::engine::{ModelExes, PassCtx, Staged, StagedRows, Stats};
-use crate::runtime::Runtime;
-use crate::util::vecmath::{axpy, dot, scale, sub};
-
-use super::RetrainOutput;
-use crate::train::Trajectory;
-
-/// A single online update request.
+/// A single online update request (pre-Session API).
+#[deprecated(note = "use deltagrad::session::Edit — \
+                     `Edit::delete_row(i)` / `Edit::add_row(x, y, k)`")]
 #[derive(Clone, Debug)]
 pub enum Request {
     /// delete base-dataset row (by original index)
@@ -35,255 +19,15 @@ pub enum Request {
     Add(Vec<f32>, u32),
 }
 
-/// Online DeltaGrad session state.
-pub struct OnlineState {
-    pub base: Dataset,
-    staged: Staged,
-    pub removed: IndexSet,
-    /// rows added after initial training
-    pub added: Dataset,
-    pub traj: Trajectory,
-    pub hp: HyperParams,
-}
-
-impl OnlineState {
-    /// Begin a session from a full-training trajectory over `base`.
-    pub fn new(
-        exes: &ModelExes,
-        rt: &Runtime,
-        base: Dataset,
-        traj: Trajectory,
-        hp: HyperParams,
-    ) -> Result<Self> {
-        if hp.batch != 0 {
-            bail!("online mode is GD-only in this implementation (see DESIGN.md)");
+#[allow(deprecated)]
+impl Request {
+    /// Convert to the Session API's [`crate::session::Edit`]. `k` is the
+    /// label arity of the target session's dataset (the feature vector
+    /// already carries the bias column, so `da` is implied by its length).
+    pub fn into_edit(self, k: usize) -> crate::session::Edit {
+        match self {
+            Request::Delete(i) => crate::session::Edit::delete_row(i),
+            Request::Add(x, y) => crate::session::Edit::add_row(x, y, k),
         }
-        if traj.ws.len() != hp.t + 1 {
-            bail!("trajectory/hp length mismatch");
-        }
-        let staged = exes.stage(rt, &base, &IndexSet::empty())?;
-        let added = Dataset::new(Vec::new(), Vec::new(), base.da, base.k);
-        Ok(OnlineState { base, staged, removed: IndexSet::empty(), added, traj, hp })
-    }
-
-    /// Current effective training-set size.
-    pub fn n_current(&self) -> usize {
-        self.base.n - self.removed.len() + self.added.n
-    }
-
-    /// Sum gradient over the current dataset (staged base minus removals,
-    /// plus the pre-staged added tail) at the iteration's parameters.
-    fn grad_sum_current(
-        &self,
-        exes: &ModelExes,
-        rt: &Runtime,
-        ctx: &PassCtx,
-        sr_tail: Option<&StagedRows>,
-    ) -> Result<(Vec<f32>, Stats)> {
-        let (mut g, mut stats) = exes.grad_staged_ctx(rt, &self.staged, ctx)?;
-        if let Some(sr) = sr_tail {
-            let (ga, sa) = exes.grad_rows_staged(rt, sr, ctx)?;
-            axpy(1.0, &ga, &mut g);
-            stats.accumulate(&sa);
-        }
-        Ok((g, stats))
-    }
-
-    /// Signed gradient sum of all changed samples in the group at the
-    /// iteration's parameters: `Σ_add ∇F_i(w) − Σ_del ∇F_i(w)`, over the
-    /// group's pre-staged rows.
-    fn grad_sum_group(
-        &self,
-        exes: &ModelExes,
-        rt: &Runtime,
-        ctx: &PassCtx,
-        sr_del: Option<&StagedRows>,
-        sr_add: Option<&StagedRows>,
-    ) -> Result<Vec<f32>> {
-        let mut g = vec![0.0f32; exes.spec.p];
-        if let Some(sr) = sr_del {
-            let (gd, _) = exes.grad_rows_staged(rt, sr, ctx)?;
-            axpy(-1.0, &gd, &mut g);
-        }
-        if let Some(sr) = sr_add {
-            let (ga, _) = exes.grad_rows_staged(rt, sr, ctx)?;
-            axpy(1.0, &ga, &mut g);
-        }
-        Ok(g)
-    }
-
-    /// Serve one request with DeltaGrad, rewriting the cached trajectory.
-    pub fn apply(
-        &mut self,
-        exes: &ModelExes,
-        rt: &Runtime,
-        req: Request,
-    ) -> Result<RetrainOutput> {
-        self.apply_group(exes, rt, &[req])
-    }
-
-    /// Serve a GROUP of requests in a single DeltaGrad pass (the
-    /// coordinator's group-commit batching: k pending deletions/additions
-    /// cost one pass instead of k).
-    pub fn apply_group(
-        &mut self,
-        exes: &ModelExes,
-        rt: &Runtime,
-        reqs: &[Request],
-    ) -> Result<RetrainOutput> {
-        let t0 = std::time::Instant::now();
-        let transfers0 = rt.counters.snapshot();
-        let spec = &exes.spec;
-        let hp = self.hp.clone();
-        // split + validate the group
-        let mut del_rows: Vec<usize> = Vec::new();
-        let mut add_ds = Dataset::new(Vec::new(), Vec::new(), self.base.da, self.base.k);
-        for req in reqs {
-            match req {
-                Request::Delete(i) => {
-                    if self.removed.contains(*i) || del_rows.contains(i) {
-                        bail!("row {i} already deleted");
-                    }
-                    if *i >= self.base.n {
-                        bail!("row {i} out of range (additions cannot be deleted yet)");
-                    }
-                    del_rows.push(*i);
-                }
-                Request::Add(x, y) => {
-                    let one = Dataset::new(x.clone(), vec![*y], self.base.da, self.base.k);
-                    add_ds.append(&one);
-                }
-            }
-        }
-        let n_cur = self.n_current() as f64;
-        let n_new = n_cur - del_rows.len() as f64 + add_ds.n as f64;
-        if n_new <= 0.0 {
-            bail!("deleting the last sample");
-        }
-        // the group's delta rows + the added tail: staged once per pass
-        let sr_del = if del_rows.is_empty() {
-            None
-        } else {
-            Some(exes.stage_rows(rt, &self.base, &del_rows)?)
-        };
-        let sr_add = if add_ds.n == 0 {
-            None
-        } else {
-            let all: Vec<usize> = (0..add_ds.n).collect();
-            Some(exes.stage_rows(rt, &add_ds, &all)?)
-        };
-        let sr_tail = if self.added.n == 0 {
-            None
-        } else {
-            let all: Vec<usize> = (0..self.added.n).collect();
-            Some(exes.stage_rows(rt, &self.added, &all)?)
-        };
-        let mut hist = History::new(hp.m);
-        let mut w = self.traj.ws[0].clone();
-        let mut dw = vec![0.0f32; spec.p];
-        let (mut n_exact, mut n_approx, mut n_fallback) = (0usize, 0usize, 0usize);
-        let mut last_stats = Stats::default();
-
-        for t in 0..hp.t {
-            let eta = hp.lr_at(t) as f64;
-            let mut exact = hp.is_exact_iter(t);
-            let mut bv: Option<Vec<f32>> = None;
-            if !exact {
-                sub(&w, &self.traj.ws[t], &mut dw);
-                if hist.is_empty() {
-                    exact = true;
-                    n_fallback += 1;
-                } else if spec.model == ModelKind::Mlp
-                    && hist.min_curvature().unwrap_or(0.0) < hp.curvature_min as f64
-                {
-                    exact = true;
-                    n_fallback += 1;
-                } else {
-                    bv = hist.bv(&dw);
-                    if bv.is_none() {
-                        exact = true;
-                        n_fallback += 1;
-                    }
-                }
-            }
-
-            // one parameter upload shared by every call this iteration
-            let ctx = exes.pass_ctx(rt, &w)?;
-            // signed gradient sum of the changed samples at the current
-            // iterate (always exact; |group| ≪ n resident rows)
-            let g_chg =
-                self.grad_sum_group(exes, rt, &ctx, sr_del.as_ref(), sr_add.as_ref())?;
-            // average gradient over the NEW dataset at the new iterate:
-            // g_new_avg = (n_cur * g_cur_avg + g_chg) / n_new        (S62)
-            let mut g_new_avg;
-            if exact {
-                n_exact += 1;
-                let (g_sum_cur, stats) =
-                    self.grad_sum_current(exes, rt, &ctx, sr_tail.as_ref())?;
-                last_stats = stats;
-                // harvest (Δw, Δg) against the cached trajectory
-                let dw_pair: Vec<f32> =
-                    w.iter().zip(&self.traj.ws[t]).map(|(a, b)| a - b).collect();
-                let mut dg = g_sum_cur.clone();
-                scale(&mut dg, (1.0 / n_cur) as f32);
-                axpy(-1.0, &self.traj.gs[t], &mut dg);
-                let curv_ok = {
-                    let sw = dot(&dw_pair, &dw_pair);
-                    sw > 1e-20 && dot(&dg, &dw_pair) / sw > 0.0
-                };
-                if curv_ok {
-                    hist.push(dw_pair, dg);
-                }
-                g_new_avg = g_sum_cur;
-                axpy(1.0, &g_chg, &mut g_new_avg);
-                scale(&mut g_new_avg, (1.0 / n_new) as f32);
-            } else {
-                n_approx += 1;
-                let mut g_cur_avg = bv.unwrap();
-                axpy(1.0, &self.traj.gs[t], &mut g_cur_avg);
-                g_new_avg = g_cur_avg;
-                scale(&mut g_new_avg, (n_cur / n_new) as f32);
-                axpy(1.0 / n_new as f32, &g_chg, &mut g_new_avg);
-            }
-            // rewrite the cache for the next request (Alg. 3 l.36/43);
-            // the gradient moves into the cache and the step reads it
-            // from there — no scratch copy
-            self.traj.ws[t] = w.clone();
-            self.traj.gs[t] = g_new_avg;
-            // take the step
-            axpy(-(eta as f32), &self.traj.gs[t], &mut w);
-        }
-        self.traj.ws[hp.t] = w.clone();
-        self.traj.n_effective = n_new as usize;
-
-        // commit the dataset change
-        if !del_rows.is_empty() {
-            for i in del_rows {
-                self.removed.insert(i);
-            }
-            exes.update_removed(rt, &mut self.staged, &self.base, &self.removed)?;
-        }
-        if add_ds.n > 0 {
-            self.added.append(&add_ds);
-        }
-        Ok(RetrainOutput {
-            w,
-            seconds: t0.elapsed().as_secs_f64(),
-            n_exact,
-            n_approx,
-            n_fallback,
-            last_stats,
-            transfers: rt.counters.snapshot().since(transfers0),
-        })
-    }
-
-    /// The current training set materialized (for BaseL comparisons).
-    pub fn current_dataset(&self) -> Dataset {
-        let keep = self.removed.complement(self.base.n);
-        let mut ds = self.base.subset(&keep);
-        if self.added.n > 0 {
-            ds.append(&self.added);
-        }
-        ds
     }
 }

@@ -1,5 +1,10 @@
-//! Shared experiment-driver plumbing: context, trained-model cache,
-//! table rendering, CSV output.
+//! Shared experiment-driver plumbing: context, session cache, table
+//! rendering, CSV output.
+//!
+//! The old `TrainedModel` bundle (exes + datasets + trajectory + w)
+//! collapsed into [`crate::session::Session`]: drivers ask the context
+//! for a cached session per dataset and issue `preview`/`baseline`
+//! calls against it — no raw `(exes, rt, ds, traj, hp)` plumbing.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -8,12 +13,10 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use crate::config::HyperParams;
-use crate::data::{synth, Dataset, IndexSet};
-use crate::runtime::engine::{Staged, Stats};
-use crate::runtime::{Engine, ModelExes, Runtime};
-use crate::train::{self, TrainOpts, Trajectory};
+use crate::runtime::Engine;
+use crate::session::{Session, SessionBuilder};
 
-/// Experiment context: engine + per-dataset trained-state cache so the
+/// Experiment context: engine + per-dataset session cache so the
 /// expensive full training runs once per dataset per process.
 pub struct Ctx {
     pub eng: Engine,
@@ -24,30 +27,7 @@ pub struct Ctx {
     pub n_scale: f64,
     pub out_dir: PathBuf,
     pub seed: u64,
-    trained: BTreeMap<String, Rc<TrainedModel>>,
-}
-
-/// A fully trained model + its cached trajectory and datasets.
-pub struct TrainedModel {
-    pub exes: Rc<ModelExes>,
-    pub train_ds: Dataset,
-    pub test_ds: Dataset,
-    /// test set staged once; every sweep-point eval reuses the device
-    /// buffers instead of re-shipping the rows
-    pub test_staged: Staged,
-    pub hp: HyperParams,
-    pub w_full: Vec<f32>,
-    pub traj: Trajectory,
-    /// seconds the original full training took (reported context)
-    pub train_seconds: f64,
-}
-
-impl TrainedModel {
-    /// Mean loss / accuracy of `w` on the cached, device-resident test
-    /// set (only the parameter vector is uploaded).
-    pub fn eval_test(&self, rt: &Runtime, w: &[f32]) -> Result<Stats> {
-        train::evaluate_staged(&self.exes, rt, &self.test_staged, w)
-    }
+    sessions: BTreeMap<String, Rc<Session>>,
 }
 
 impl Ctx {
@@ -60,7 +40,7 @@ impl Ctx {
             n_scale: 1.0,
             out_dir,
             seed,
-            trained: BTreeMap::new(),
+            sessions: BTreeMap::new(),
         })
     }
 
@@ -77,40 +57,35 @@ impl Ctx {
         hp
     }
 
-    /// Train (once) and cache the full model for `name`; `n_override`
-    /// keys separate cache entries.
-    pub fn trained(&mut self, name: &str, n_override: Option<usize>) -> Result<Rc<TrainedModel>> {
+    /// Train (once) and cache a session for `name`; `n_override` keys
+    /// separate cache entries. The shared session serves speculative
+    /// previews and baselines; streams that commit should
+    /// [`Session::fork`] it (see [`Self::fork_session`]).
+    pub fn session(&mut self, name: &str, n_override: Option<usize>) -> Result<Rc<Session>> {
         let key = format!("{name}:{}", n_override.unwrap_or(0));
-        if let Some(tm) = self.trained.get(&key) {
-            return Ok(tm.clone());
+        if let Some(s) = self.sessions.get(&key) {
+            return Ok(s.clone());
         }
-        let exes = self.eng.model(name)?;
-        let spec = exes.spec.clone();
+        let spec = self.eng.spec(name)?.clone();
         let n_eff = n_override.or_else(|| {
             (self.n_scale < 1.0)
                 .then(|| ((spec.n_train as f64 * self.n_scale) as usize).max(spec.chunk_small))
         });
-        let (train_ds, test_ds) = synth::train_test_for_spec(&spec, self.seed, n_eff, None);
         let hp = self.hp_for(name);
-        let out = train::train(
-            &exes,
-            &self.eng.rt,
-            &train_ds,
-            &TrainOpts::full(&hp, &IndexSet::empty()),
-        )?;
-        let test_staged = exes.stage(&self.eng.rt, &test_ds, &IndexSet::empty())?;
-        let tm = Rc::new(TrainedModel {
-            exes,
-            train_ds,
-            test_ds,
-            test_staged,
-            hp,
-            w_full: out.w,
-            traj: out.traj.expect("recorded"),
-            train_seconds: out.seconds,
-        });
-        self.trained.insert(key, tm.clone());
-        Ok(tm)
+        let session = SessionBuilder::new(name)
+            .seed(self.seed)
+            .n_train(n_eff)
+            .hyper_params(hp)
+            .build_in(&mut self.eng)?;
+        let rc = Rc::new(session);
+        self.sessions.insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// An independent, committable copy of the cached session (online
+    /// streams mutate it without perturbing other drivers).
+    pub fn fork_session(&mut self, name: &str, n_override: Option<usize>) -> Result<Session> {
+        self.session(name, n_override)?.fork()
     }
 
     /// Write a CSV under results/.

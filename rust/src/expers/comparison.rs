@@ -12,8 +12,7 @@ use anyhow::Result;
 
 use crate::apps::influence::{influence_delete, InfluenceOpts};
 use crate::data::sample_removal;
-use crate::deltagrad::batch;
-use crate::train::{self, TrainOpts};
+use crate::session::Edit;
 use crate::util::vecmath::dist2;
 use crate::util::Rng;
 
@@ -24,48 +23,28 @@ pub fn d3(ctx: &mut Ctx) -> Result<String> {
     let mut csv = Vec::new();
     for name in ["covtype", "mnist"] {
         for rate in [0.002f64, 0.01] {
-            let tm = ctx.trained(name, None)?;
-            let ds = tm.train_ds.clone();
-            let r = ((ds.n as f64) * rate).round() as usize;
+            let sess = ctx.session(name, None)?;
+            let n = sess.train_dataset().n;
+            let r = ((n as f64) * rate).round() as usize;
             let mut rng = Rng::new(ctx.seed ^ 0xD3);
-            let removed = sample_removal(&mut rng, ds.n, r);
+            let removed = sample_removal(&mut rng, n, r);
+            let edit = Edit::Delete(removed.clone());
 
-            let basel =
-                train::train(&tm.exes, &ctx.eng.rt, &ds, &TrainOpts::full(&tm.hp, &removed))?;
-            let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, &ds, &tm.traj, &tm.hp, &removed)?;
-            let (w_inf, inf_secs) = influence_delete(
-                &tm.exes,
-                &ctx.eng.rt,
-                &ds,
-                &tm.w_full,
-                &removed,
-                &InfluenceOpts::default(),
-            )?;
+            let basel = sess.baseline(&edit)?;
+            let dg = sess.preview(&edit)?;
+            let (w_inf, inf_secs) =
+                influence_delete(&sess, &removed, &InfluenceOpts::default())?;
             // warm-start: T/5 iterations from w*
-            let mut hp_ws = tm.hp.clone();
-            hp_ws.t /= 5;
-            let ws = train::train(
-                &tm.exes,
-                &ctx.eng.rt,
-                &ds,
-                &TrainOpts {
-                    hp: &hp_ws,
-                    removed: &removed,
-                    record: false,
-                    reuse_batches: None,
-                    seed: 0,
-                    init: Some(&tm.w_full),
-                },
-            )?;
+            let ws = sess.warm_start(&edit, sess.hyper_params().t / 5)?;
 
             for (method, secs, w) in [
                 ("BaseL", basel.seconds, &basel.w),
-                ("DeltaGrad", dg.seconds, &dg.w),
+                ("DeltaGrad", dg.out.seconds, &dg.out.w),
                 ("Influence", inf_secs, &w_inf),
                 ("WarmStart(T/5)", ws.seconds, &ws.w),
             ] {
                 let dist = dist2(w, &basel.w);
-                let stats = tm.eval_test(&ctx.eng.rt, w)?;
+                let stats = sess.eval_test(w)?;
                 eprintln!(
                     "  [d3] {name} r={rate}: {method} {secs:.2}s dist {dist:.2e} acc {:.4}",
                     stats.accuracy()

@@ -8,8 +8,7 @@
 use anyhow::Result;
 
 use crate::data::sample_removal;
-use crate::deltagrad::batch;
-use crate::train::{self, TrainOpts};
+use crate::session::Edit;
 use crate::util::vecmath::dist2;
 use crate::util::Rng;
 
@@ -17,21 +16,21 @@ use super::common::{fsci, markdown_table, Ctx};
 
 pub fn thm1(ctx: &mut Ctx) -> Result<String> {
     let name = "covtype";
-    let tm = ctx.trained(name, None)?;
-    let ds = tm.train_ds.clone();
+    let sess = ctx.session(name, None)?;
+    let n = sess.train_dataset().n;
     let rates = [0.0002f64, 0.0005, 0.001, 0.002, 0.005, 0.01];
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     let mut ratios = Vec::new();
     for (i, &rate) in rates.iter().enumerate() {
-        let r = ((ds.n as f64) * rate).round().max(1.0) as usize;
-        let rn = r as f64 / ds.n as f64;
+        let r = ((n as f64) * rate).round().max(1.0) as usize;
+        let rn = r as f64 / n as f64;
         let mut rng = Rng::new(ctx.seed ^ (0x7714 + i as u64));
-        let removed = sample_removal(&mut rng, ds.n, r);
-        let basel = train::train(&tm.exes, &ctx.eng.rt, &ds, &TrainOpts::full(&tm.hp, &removed))?;
-        let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, &ds, &tm.traj, &tm.hp, &removed)?;
-        let d_star_u = dist2(&tm.w_full, &basel.w);
-        let d_i_u = dist2(&dg.w, &basel.w);
+        let edit = Edit::Delete(sample_removal(&mut rng, n, r));
+        let basel = sess.baseline(&edit)?;
+        let dg = sess.preview(&edit)?;
+        let d_star_u = dist2(sess.w(), &basel.w);
+        let d_i_u = dist2(&dg.out.w, &basel.w);
         let ratio_base = d_star_u / rn;
         let ratio_dg = d_i_u / rn;
         ratios.push(d_i_u / d_star_u.max(1e-300));

@@ -9,8 +9,7 @@
 use anyhow::Result;
 
 use crate::data::sample_removal;
-use crate::deltagrad::batch;
-use crate::train::{self, TrainOpts};
+use crate::session::Edit;
 use crate::util::vecmath::dist2;
 use crate::util::Rng;
 
@@ -19,37 +18,37 @@ use super::common::{fsci, fsec, markdown_table, Ctx};
 pub fn d2(ctx: &mut Ctx) -> Result<String> {
     let name = "mnist";
     let rate = 0.005;
-    let tm = ctx.trained(name, None)?;
-    let ds = tm.train_ds.clone();
-    let r = ((ds.n as f64) * rate).round() as usize;
+    let sess = ctx.session(name, None)?;
+    let n = sess.train_dataset().n;
+    let r = ((n as f64) * rate).round() as usize;
     let mut rng = Rng::new(ctx.seed ^ 0xD2);
-    let removed = sample_removal(&mut rng, ds.n, r);
+    let edit = Edit::Delete(sample_removal(&mut rng, n, r));
     // one BaseL reference for the distance metric
-    let basel = train::train(&tm.exes, &ctx.eng.rt, &ds, &TrainOpts::full(&tm.hp, &removed))?;
+    let basel = sess.baseline(&edit)?;
 
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     // T0 sweep at fixed j0, m
     for t0 in [2usize, 5, 10, 20] {
-        let mut hp = tm.hp.clone();
+        let mut hp = sess.hyper_params().clone();
         hp.t0 = t0;
-        let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, &ds, &tm.traj, &hp, &removed)?;
-        push_row(&mut rows, &mut csv, &format!("T0={t0}"), &hp, &dg, &basel.w, basel.seconds);
+        let pv = sess.preview_with(&edit, &hp)?;
+        push_row(&mut rows, &mut csv, &format!("T0={t0}"), &hp, &pv.out, &basel.w, basel.seconds);
     }
     // j0 sweep
     for j0 in [5usize, 10, 30, 60] {
-        let mut hp = tm.hp.clone();
+        let mut hp = sess.hyper_params().clone();
         hp.j0 = j0;
-        let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, &ds, &tm.traj, &hp, &removed)?;
-        push_row(&mut rows, &mut csv, &format!("j0={j0}"), &hp, &dg, &basel.w, basel.seconds);
+        let pv = sess.preview_with(&edit, &hp)?;
+        push_row(&mut rows, &mut csv, &format!("j0={j0}"), &hp, &pv.out, &basel.w, basel.seconds);
     }
     // m sweep (the host L-BFGS handles any m <= cap; the AOT artifact is
     // fixed at the manifest's m, so this sweep uses the host path)
     for m in [1usize, 2, 4, 8] {
-        let mut hp = tm.hp.clone();
+        let mut hp = sess.hyper_params().clone();
         hp.m = m;
-        let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, &ds, &tm.traj, &hp, &removed)?;
-        push_row(&mut rows, &mut csv, &format!("m={m}"), &hp, &dg, &basel.w, basel.seconds);
+        let pv = sess.preview_with(&edit, &hp)?;
+        push_row(&mut rows, &mut csv, &format!("m={m}"), &hp, &pv.out, &basel.w, basel.seconds);
     }
     ctx.write_csv("d2", "setting,t0,j0,m,dg_secs,basel_secs,dist_i_u,n_exact,n_approx", &csv)?;
     Ok(markdown_table(

@@ -1,12 +1,11 @@
 //! Fig. 4 + Table 2: online deletion/addition — a stream of single-sample
-//! requests, each triggering a model update by BaseL (full retrain) or
-//! DeltaGrad (Algorithm 3 with trajectory rewriting).
+//! edits, each triggering a model update by BaseL (full retrain) or
+//! DeltaGrad (`session.commit`: Algorithm 3 with trajectory rewriting).
 
 use anyhow::Result;
 
-use crate::data::{synth, IndexSet};
-use crate::deltagrad::online::{OnlineState, Request};
-use crate::train::{self, TrainOpts};
+use crate::data::synth;
+use crate::session::Edit;
 use crate::util::vecmath::dist2;
 use crate::util::Rng;
 
@@ -34,71 +33,50 @@ pub fn run_stream(
     n_requests: usize,
     n_override: Option<usize>,
 ) -> Result<OnlineResult> {
-    let tm = ctx.trained(name, n_override)?;
-    let spec = tm.exes.spec.clone();
+    let base = ctx.session(name, n_override)?;
+    let w_full = base.w().to_vec();
     let mut rng = Rng::new(ctx.seed ^ 0x0911);
-    // build the request stream
-    let victims = rng.sample_distinct(tm.train_ds.n, n_requests);
-    let additions = synth::addition_rows(&spec, ctx.seed ^ 0xADD, n_requests);
-    let reqs: Vec<Request> = (0..n_requests)
+    // build the edit stream
+    let victims = rng.sample_distinct(base.train_dataset().n, n_requests);
+    let additions = synth::addition_rows(base.spec(), ctx.seed ^ 0xADD, n_requests);
+    let k = base.spec().k;
+    let edits: Vec<Edit> = (0..n_requests)
         .map(|i| match dir {
-            Direction::Delete => Request::Delete(victims[i]),
-            Direction::Add => {
-                let x = additions.row(i).to_vec();
-                Request::Add(x, additions.y[i])
-            }
+            Direction::Delete => Edit::delete_row(victims[i]),
+            Direction::Add => Edit::add_row(additions.row(i).to_vec(), additions.y[i], k),
         })
         .collect();
 
-    // --- DeltaGrad: one OnlineState, sequential requests
-    let mut state = OnlineState::new(
-        &tm.exes,
-        &ctx.eng.rt,
-        tm.train_ds.clone(),
-        tm.traj.clone(),
-        tm.hp.clone(),
-    )?;
+    // --- DeltaGrad: one forked session, sequential commits
+    let mut live = ctx.fork_session(name, n_override)?;
     let mut dg_total = 0.0;
-    let mut w_i = tm.w_full.clone();
-    for req in &reqs {
-        let out = state.apply(&tm.exes, &ctx.eng.rt, req.clone())?;
-        dg_total += out.seconds;
-        w_i = out.w;
+    let mut w_i = w_full.clone();
+    for edit in &edits {
+        let c = live.commit(edit.clone())?;
+        dg_total += c.out.seconds;
+        w_i = c.out.w;
     }
 
-    // --- BaseL: retrain from scratch after EVERY request
-    let mut removed = IndexSet::empty();
-    let mut added_rows = crate::data::Dataset::new(Vec::new(), Vec::new(), spec.da, spec.k);
+    // --- BaseL: retrain from scratch after EVERY request (cumulative
+    // prefix of the stream as one grouped edit)
     let mut basel_total = 0.0;
-    let mut w_u = tm.w_full.clone();
-    for req in &reqs {
-        match req {
-            Request::Delete(i) => {
-                removed.insert(*i);
-            }
-            Request::Add(x, y) => {
-                let one = crate::data::Dataset::new(x.clone(), vec![*y], spec.da, spec.k);
-                added_rows.append(&one);
-            }
-        }
-        let mut ds = tm.train_ds.clone();
-        if added_rows.n > 0 {
-            ds.append(&added_rows);
-        }
-        let out = train::train(&tm.exes, &ctx.eng.rt, &ds, &TrainOpts::full(&tm.hp, &removed))?;
+    let mut w_u = w_full.clone();
+    for i in 0..edits.len() {
+        let cumulative = Edit::group(edits[..=i].to_vec());
+        let out = base.baseline(&cumulative)?;
         basel_total += out.seconds;
         w_u = out.w;
     }
 
-    let b_stats = tm.eval_test(&ctx.eng.rt, &w_u)?;
-    let d_stats = tm.eval_test(&ctx.eng.rt, &w_i)?;
+    let b_stats = base.eval_test(&w_u)?;
+    let d_stats = base.eval_test(&w_i)?;
     Ok(OnlineResult {
         dataset: name.to_string(),
         direction: dir,
         requests: n_requests,
         basel_total_secs: basel_total,
         dg_total_secs: dg_total,
-        dist_star_u: dist2(&tm.w_full, &w_u),
+        dist_star_u: dist2(&w_full, &w_u),
         dist_i_u: dist2(&w_i, &w_u),
         basel_acc: b_stats.accuracy(),
         dg_acc: d_stats.accuracy(),

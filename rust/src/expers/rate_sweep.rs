@@ -10,8 +10,7 @@
 use anyhow::Result;
 
 use crate::data::{sample_removal, synth, IndexSet};
-use crate::deltagrad::batch;
-use crate::train::{self, TrainOpts};
+use crate::session::Edit;
 use crate::util::vecmath::dist2;
 use crate::util::Rng;
 
@@ -45,40 +44,34 @@ pub fn run_point(
     dir: Direction,
     removal_seed: u64,
 ) -> Result<RatePoint> {
-    let tm = ctx.trained(name, None)?;
-    let ds = &tm.train_ds;
-    let r = ((ds.n as f64) * rate).round().max(0.0) as usize;
+    let sess = ctx.session(name, None)?;
+    let n = sess.train_dataset().n;
+    let r = ((n as f64) * rate).round().max(0.0) as usize;
     let mut rng = Rng::new(removal_seed);
-    let (basel, dg) = match dir {
+    let edit = match dir {
         Direction::Delete => {
-            let removed = if r == 0 { IndexSet::empty() } else { sample_removal(&mut rng, ds.n, r) };
-            let basel = train::train(&tm.exes, &ctx.eng.rt, ds, &TrainOpts::full(&tm.hp, &removed))?;
-            let dg = batch::delete_gd(&tm.exes, &ctx.eng.rt, ds, &tm.traj, &tm.hp, &removed)?;
-            (basel, dg)
+            let removed = if r == 0 { IndexSet::empty() } else { sample_removal(&mut rng, n, r) };
+            Edit::Delete(removed)
         }
         Direction::Add => {
-            let added = synth::addition_rows(&tm.exes.spec, ctx.seed ^ removal_seed, r.max(1));
-            let mut plus = ds.clone();
-            plus.append(&added);
-            let basel =
-                train::train(&tm.exes, &ctx.eng.rt, &plus, &TrainOpts::full(&tm.hp, &IndexSet::empty()))?;
-            let dg = batch::add_gd(&tm.exes, &ctx.eng.rt, ds, &tm.traj, &tm.hp, &added)?;
-            (basel, dg)
+            Edit::Add(synth::addition_rows(sess.spec(), ctx.seed ^ removal_seed, r.max(1)))
         }
     };
-    let b_stats = tm.eval_test(&ctx.eng.rt, &basel.w)?;
-    let d_stats = tm.eval_test(&ctx.eng.rt, &dg.w)?;
+    let basel = sess.baseline(&edit)?;
+    let pv = sess.preview(&edit)?;
+    let b_stats = sess.eval_test(&basel.w)?;
+    let d_stats = sess.eval_test(&pv.out.w)?;
     Ok(RatePoint {
         dataset: name.to_string(),
         rate,
         basel_secs: basel.seconds,
-        dg_secs: dg.seconds,
-        dist_star_u: dist2(&tm.w_full, &basel.w),
-        dist_i_u: dist2(&dg.w, &basel.w),
+        dg_secs: pv.out.seconds,
+        dist_star_u: dist2(sess.w(), &basel.w),
+        dist_i_u: dist2(&pv.out.w, &basel.w),
         basel_acc: b_stats.accuracy(),
         dg_acc: d_stats.accuracy(),
-        n_exact: dg.n_exact,
-        n_approx: dg.n_approx,
+        n_exact: pv.out.n_exact,
+        n_approx: pv.out.n_approx,
     })
 }
 

@@ -12,6 +12,13 @@
 //!   applications, and the experiment drivers that regenerate every table
 //!   and figure.
 //!
+//! The front door is [`session`]: a [`session::Session`] owns one trained
+//! model plus its cached trajectory and device-resident staging state,
+//! and every retraining scenario is an [`session::Edit`] previewed
+//! (speculative pass) or committed (online pass + cache rewrite) against
+//! it. See docs/API.md for the lifecycle and the migration table from
+//! the old free functions.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
@@ -23,6 +30,7 @@ pub mod deltagrad;
 pub mod expers;
 pub mod lbfgs;
 pub mod runtime;
+pub mod session;
 pub mod testing;
 pub mod train;
 pub mod util;
@@ -30,3 +38,4 @@ pub mod util;
 pub use config::{HyperParams, ModelSpec};
 pub use data::{Dataset, IndexSet};
 pub use runtime::{Engine, ModelExes};
+pub use session::{Edit, Session, SessionBuilder};

@@ -2,22 +2,22 @@
 //!
 //! Subcommands (hand-rolled parser — clap is unavailable offline):
 //!   list                         show dataset configs from the manifest
-//!   train --model M [--t N]      train + evaluate one model
-//!   delete --model M --rate R    one batch deletion: BaseL vs DeltaGrad
+//!   train --model M [--t N]      train + evaluate one model (Session build)
+//!   delete --model M --rate R    one batch deletion: BaseL vs DeltaGrad preview
 //!   serve --model M --requests N run the unlearning service demo
 //!   experiment <id>|all [--scale quick|paper] [--seed S]
 //!                                regenerate a paper table/figure
+//!
+//! Flags accept both `--flag value` and `--flag=value`; unknown flags
+//! are rejected with a usage message instead of being silently eaten.
 
 use anyhow::{Context, Result};
 
 use deltagrad::config::HyperParams;
 use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
-use deltagrad::data::{sample_removal, synth, IndexSet};
-use deltagrad::deltagrad::batch;
-use deltagrad::deltagrad::online::Request;
 use deltagrad::expers::{self, Ctx};
 use deltagrad::runtime::Engine;
-use deltagrad::train::{self, TrainOpts};
+use deltagrad::session::{Edit, SessionBuilder};
 use deltagrad::util::vecmath::dist2;
 use deltagrad::util::Rng;
 
@@ -32,12 +32,18 @@ fn parse_args() -> Args {
     let mut it = std::env::args().skip(1).peekable();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
-            let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
-                it.next().unwrap()
+            // `--flag=value` form first; else greedily take the next
+            // token unless it is itself a flag (`--flag value` form)
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
             } else {
-                "true".to_string()
-            };
-            flags.insert(name.to_string(), val);
+                let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            }
         } else {
             positional.push(a);
         }
@@ -55,22 +61,57 @@ impl Args {
             None => Ok(default),
         }
     }
+    /// Reject flags the subcommand does not understand (a typo like
+    /// `--rate=0.01` used to be silently swallowed as a boolean flag).
+    fn check_flags(&self, cmd: &str, allowed: &[&str]) {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                eprintln!("unknown flag --{k} for `{cmd}`");
+                usage(Some(cmd), allowed);
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+fn usage(cmd: Option<&str>, allowed: &[&str]) {
+    if let Some(cmd) = cmd {
+        let flags: Vec<String> = allowed.iter().map(|f| format!("[--{f} V]")).collect();
+        eprintln!("usage: deltagrad {cmd} {}", flags.join(" "));
+    }
+    eprintln!(
+        "usage: deltagrad <list|train|delete|serve|experiment> [flags]\n\
+         flags take `--flag value` or `--flag=value`\n\
+         experiments: {} all",
+        expers::ALL.join(" ")
+    );
 }
 
 fn main() -> Result<()> {
     let args = parse_args();
     match args.positional.first().map(|s| s.as_str()) {
-        Some("list") => cmd_list(),
-        Some("train") => cmd_train(&args),
-        Some("delete") => cmd_delete(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("experiment") => cmd_experiment(&args),
+        Some("list") => {
+            args.check_flags("list", &[]);
+            cmd_list()
+        }
+        Some("train") => {
+            args.check_flags("train", &["model", "t", "seed"]);
+            cmd_train(&args)
+        }
+        Some("delete") => {
+            args.check_flags("delete", &["model", "rate", "seed"]);
+            cmd_delete(&args)
+        }
+        Some("serve") => {
+            args.check_flags("serve", &["model", "requests", "t"]);
+            cmd_serve(&args)
+        }
+        Some("experiment") => {
+            args.check_flags("experiment", &["scale", "seed"]);
+            cmd_experiment(&args)
+        }
         _ => {
-            eprintln!(
-                "usage: deltagrad <list|train|delete|serve|experiment> [flags]\n\
-                 experiments: {} all",
-                expers::ALL.join(" ")
-            );
+            usage(None, &[]);
             std::process::exit(2);
         }
     }
@@ -91,59 +132,54 @@ fn cmd_list() -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let model = args.flag("model").unwrap_or("small").to_string();
-    let mut eng = Engine::open_default()?;
-    let exes = eng.model(&model)?;
-    let spec = exes.spec.clone();
-    let (tr, te) = synth::train_test_for_spec(&spec, args.usize_flag("seed", 7)? as u64, None, None);
     let mut hp = HyperParams::for_dataset(&model);
     hp.t = args.usize_flag("t", hp.t)?;
-    let out = train::train(&exes, &eng.rt, &tr, &TrainOpts::full(&hp, &IndexSet::empty()))?;
-    let s_tr = train::evaluate(&exes, &eng.rt, &tr, &out.w)?;
-    let s_te = train::evaluate(&exes, &eng.rt, &te, &out.w)?;
+    let t = hp.t;
+    let session = SessionBuilder::new(&model)
+        .seed(args.usize_flag("seed", 7)? as u64)
+        .hyper_params(hp)
+        .build()?;
+    let s_tr = session.eval_train(session.w())?;
+    let s_te = session.eval_test(session.w())?;
     println!(
-        "{model}: T={} train {:.2}s | train loss {:.4} acc {:.4} | test acc {:.4} | cached {} MB",
-        hp.t,
-        out.seconds,
+        "{model}: T={t} train {:.2}s | train loss {:.4} acc {:.4} | test acc {:.4} | cached {} MB",
+        session.train_seconds(),
         s_tr.mean_loss(),
         s_tr.accuracy(),
         s_te.accuracy(),
-        out.traj.map(|t| t.approx_bytes() / (1 << 20)).unwrap_or(0)
+        session.trajectory().approx_bytes() / (1 << 20)
     );
     Ok(())
 }
 
 fn cmd_delete(args: &Args) -> Result<()> {
     let model = args.flag("model").unwrap_or("small").to_string();
-    let rate: f64 = args.flag("rate").unwrap_or("0.005").parse()?;
+    let rate: f64 = args.flag("rate").unwrap_or("0.005").parse().context("--rate")?;
     let seed = args.usize_flag("seed", 7)? as u64;
-    let mut eng = Engine::open_default()?;
-    let exes = eng.model(&model)?;
-    let spec = exes.spec.clone();
-    let (tr, te) = synth::train_test_for_spec(&spec, seed, None, None);
     let hp = HyperParams::for_dataset(&model);
     println!("training {model} (T={}) ...", hp.t);
-    let full = train::train(&exes, &eng.rt, &tr, &TrainOpts::full(&hp, &IndexSet::empty()))?;
-    let traj = full.traj.unwrap();
-    let r = ((tr.n as f64) * rate).round().max(1.0) as usize;
-    let removed = sample_removal(&mut Rng::new(seed ^ 1), tr.n, r);
+    let session = SessionBuilder::new(&model).seed(seed).hyper_params(hp).build()?;
+    let n = session.train_dataset().n;
+    let r = ((n as f64) * rate).round().max(1.0) as usize;
+    let edit = Edit::Delete(deltagrad::data::sample_removal(&mut Rng::new(seed ^ 1), n, r));
     println!("deleting {r} rows ({:.3}%)", rate * 100.0);
-    let basel = train::train(&exes, &eng.rt, &tr, &TrainOpts::full(&hp, &removed))?;
-    let dg = batch::delete_gd(&exes, &eng.rt, &tr, &traj, &hp, &removed)?;
-    let b = train::evaluate(&exes, &eng.rt, &te, &basel.w)?;
-    let d = train::evaluate(&exes, &eng.rt, &te, &dg.w)?;
+    let basel = session.baseline(&edit)?;
+    let dg = session.preview(&edit)?;
+    let b = session.eval_test(&basel.w)?;
+    let d = session.eval_test(&dg.out.w)?;
     println!(
         "BaseL     {:.2}s  test acc {:.4}\n\
          DeltaGrad {:.2}s  test acc {:.4}  ({:.2}x speedup, {} exact / {} approx iters)\n\
          ‖w*−w^U‖ = {:.3e}   ‖w^I−w^U‖ = {:.3e}",
         basel.seconds,
         b.accuracy(),
-        dg.seconds,
+        dg.out.seconds,
         d.accuracy(),
-        basel.seconds / dg.seconds.max(1e-9),
-        dg.n_exact,
-        dg.n_approx,
-        dist2(&full.w, &basel.w),
-        dist2(&dg.w, &basel.w),
+        basel.seconds / dg.out.seconds.max(1e-9),
+        dg.out.n_exact,
+        dg.out.n_approx,
+        dist2(session.w(), &basel.w),
+        dist2(&dg.out.w, &basel.w),
     );
     Ok(())
 }
@@ -166,10 +202,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
     // fire a burst of async deletions to exercise group-commit
     let rxs: Vec<_> = (0..n_req)
-        .map(|i| svc.update_async(Request::Delete(i)))
-        .collect::<Result<_>>()?;
+        .map(|i| svc.update_async(Edit::delete_row(i)))
+        .collect::<Result<_, _>>()?;
     for rx in rxs {
-        let rep = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        let rep = rx.recv()??;
         println!(
             "  committed v{} (group of {}, pass {:.2}s, {} exact / {} approx)",
             rep.version, rep.group_size, rep.pass_seconds, rep.n_exact, rep.n_approx

@@ -448,8 +448,11 @@ impl ModelExes {
 }
 
 /// Top-level handle: runtime + manifest + lazily compiled model families.
+///
+/// The runtime is reference-counted so long-lived owners (notably
+/// [`crate::session::Session`]) can hold it without borrowing the engine.
 pub struct Engine {
-    pub rt: Runtime,
+    pub rt: std::rc::Rc<Runtime>,
     dir: std::path::PathBuf,
     specs: BTreeMap<String, ModelSpec>,
     loaded: BTreeMap<String, std::rc::Rc<ModelExes>>,
@@ -465,11 +468,16 @@ impl Engine {
     pub fn open(dir: &std::path::Path) -> Result<Self> {
         let specs = config::parse_manifest(&dir.join("manifest.txt"))?;
         Ok(Engine {
-            rt: Runtime::cpu()?,
+            rt: std::rc::Rc::new(Runtime::cpu()?),
             dir: dir.to_path_buf(),
             specs,
             loaded: BTreeMap::new(),
         })
+    }
+
+    /// Shared handle to the runtime (for owners that outlive this borrow).
+    pub fn runtime(&self) -> std::rc::Rc<Runtime> {
+        self.rt.clone()
     }
 
     pub fn spec(&self, name: &str) -> Result<&ModelSpec> {

@@ -1,0 +1,965 @@
+//! Session API: one long-lived handle over a trained model, its cached
+//! trajectory, and the device-resident staging state — the object every
+//! DeltaGrad workload actually edits.
+//!
+//! The paper's framing (and Descent-to-Delete / the certifiable-unlearning
+//! benchmarks after it) is a *stateful sequence of edits against one
+//! model handle*. This module gives that shape a first-class type:
+//!
+//! * [`SessionBuilder`] — model name, seed, sizes, hyperparameters;
+//!   trains the initial model and stages the datasets once.
+//! * [`Edit`] — a deletion set, an addition batch, or a group of both.
+//!   Replaces `online::Request` and the `delete_gd`/`add_gd`/`delete_sgd`
+//!   free-function fan-out.
+//! * [`Session::preview`] — a **speculative** DeltaGrad pass (Algorithm 1
+//!   GD, or the §3 SGD extension, auto-selected from the trajectory's
+//!   batch schedule) that does not mutate any session state. Jackknife,
+//!   valuation, conformal, and influence loops issue many of these
+//!   against one shared staged base.
+//! * [`Session::commit`] — the Algorithm-3 online pass: the same
+//!   speculation *plus* in-place cache rewriting (appendix C.2,
+//!   eq. S62–S63) and the dataset/mask update. The online path is
+//!   literally preview+commit composed.
+//!
+//! Staging discipline (docs/PERFORMANCE.md): the session keeps the base
+//! dataset (`Staged`, removal masks current), the committed added tail
+//! (append-only `StagedRows` segments — each add commit keeps its
+//! pass's staged rows), and the test set (`Staged`) device-resident
+//! across edits; each pass stages only its delta rows, and each
+//! iteration uploads one parameter vector. Cumulative per-edit device
+//! traffic is tracked in [`SessionStats`].
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{HyperParams, ModelKind, ModelSpec};
+use crate::data::{synth, Dataset, IndexSet};
+use crate::deltagrad::batch::{self, Change};
+use crate::deltagrad::RetrainOutput;
+use crate::lbfgs::History;
+use crate::runtime::engine::{ModelExes, PassCtx, Staged, StagedRows, Stats};
+use crate::runtime::{Engine, Runtime, TransferStats};
+use crate::train::{self, TrainOpts, Trajectory};
+use crate::util::vecmath::{axpy, dot, scale, sub};
+
+/// One edit against a session's training set. Groups commit (or preview)
+/// as a single DeltaGrad pass — the group-commit amortization of the
+/// coordinator rides on this.
+#[derive(Clone, Debug)]
+pub enum Edit {
+    /// delete base-dataset rows (by original index)
+    Delete(IndexSet),
+    /// add new rows (features WITH bias column; shapes must match the
+    /// session's dataset family)
+    Add(Dataset),
+    /// heterogeneous group, applied in one pass
+    Group(Vec<Edit>),
+}
+
+impl Edit {
+    /// Delete a single base row.
+    pub fn delete_row(i: usize) -> Edit {
+        Edit::Delete(IndexSet::from_vec(vec![i]))
+    }
+
+    /// Add a single sample. `x` must already carry the bias column
+    /// (`da = x.len()`); `k` is the label arity of the dataset family.
+    pub fn add_row(x: Vec<f32>, y: u32, k: usize) -> Edit {
+        let da = x.len();
+        Edit::Add(Dataset::new(x, vec![y], da, k))
+    }
+
+    /// Group edits into one pass (order preserved).
+    pub fn group(edits: Vec<Edit>) -> Edit {
+        Edit::Group(edits)
+    }
+
+    /// (rows deleted, rows added) across the whole edit. Replaces the
+    /// old `coordinator::service::count_kinds` over request slices.
+    pub fn count_kinds(&self) -> (usize, usize) {
+        match self {
+            Edit::Delete(set) => (set.len(), 0),
+            Edit::Add(ds) => (0, ds.n),
+            Edit::Group(es) => es.iter().fold((0, 0), |(d, a), e| {
+                let (dd, aa) = e.count_kinds();
+                (d + dd, a + aa)
+            }),
+        }
+    }
+
+    /// Total number of changed rows.
+    pub fn len(&self) -> usize {
+        let (d, a) = self.count_kinds();
+        d + a
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flatten into (delete indices in encounter order, one addition
+    /// dataset). Checks addition shapes against `(da, k)` and rejects a
+    /// row deleted twice within the edit.
+    pub fn normalize(&self, da: usize, k: usize) -> Result<(Vec<usize>, Dataset)> {
+        let mut dels = Vec::new();
+        let mut adds = Dataset::new(Vec::new(), Vec::new(), da, k);
+        self.collect(&mut dels, &mut adds)?;
+        let mut seen = dels.clone();
+        seen.sort_unstable();
+        if seen.windows(2).any(|w| w[0] == w[1]) {
+            bail!("edit deletes the same row twice");
+        }
+        Ok((dels, adds))
+    }
+
+    fn collect(&self, dels: &mut Vec<usize>, adds: &mut Dataset) -> Result<()> {
+        match self {
+            Edit::Delete(set) => dels.extend(set.iter()),
+            Edit::Add(ds) => {
+                if ds.n > 0 {
+                    if ds.da != adds.da || ds.k != adds.k {
+                        bail!(
+                            "addition shape ({}, {}) does not match the session's ({}, {})",
+                            ds.da, ds.k, adds.da, adds.k
+                        );
+                    }
+                    adds.append(ds);
+                }
+            }
+            Edit::Group(es) => {
+                for e in es {
+                    e.collect(dels, adds)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Which DeltaGrad variant a pass ran (auto-selected from the
+/// trajectory's batch schedule: `hp.batch == 0` trains full-batch GD and
+/// records empty minibatch lists, `hp.batch > 0` records the schedule
+/// the §3 SGD extension replays).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PassMode {
+    Gd,
+    Sgd,
+}
+
+/// Cumulative per-session accounting: every preview/commit folds its
+/// [`RetrainOutput`] counters in here (exposed via [`Session::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    pub previews: u64,
+    pub commits: u64,
+    pub rows_deleted: u64,
+    pub rows_added: u64,
+    pub exact_iters: u64,
+    pub approx_iters: u64,
+    pub fallback_iters: u64,
+    /// device traffic of speculative passes
+    pub preview_transfers: TransferStats,
+    /// device traffic of committed passes (incl. mask flips)
+    pub commit_transfers: TransferStats,
+    /// wall-clock seconds spent inside passes
+    pub seconds: f64,
+}
+
+impl SessionStats {
+    pub fn total_transfers(&self) -> TransferStats {
+        let mut t = self.preview_transfers;
+        t.accumulate(&self.commit_transfers);
+        t
+    }
+
+    pub fn render(&self) -> String {
+        let t = self.total_transfers();
+        format!(
+            "previews={} commits={} rows(del/add)={}/{} \
+             iters(exact/approx/fallback)={}/{}/{} \
+             device(uploads={} floats={} execs={}) pass_secs={:.3}",
+            self.previews,
+            self.commits,
+            self.rows_deleted,
+            self.rows_added,
+            self.exact_iters,
+            self.approx_iters,
+            self.fallback_iters,
+            t.uploads,
+            t.upload_floats,
+            t.execs,
+            self.seconds,
+        )
+    }
+
+    fn absorb(&mut self, out: &RetrainOutput, commit: bool) {
+        if commit {
+            self.commits += 1;
+            self.commit_transfers.accumulate(&out.transfers);
+        } else {
+            self.previews += 1;
+            self.preview_transfers.accumulate(&out.transfers);
+        }
+        self.exact_iters += out.n_exact as u64;
+        self.approx_iters += out.n_approx as u64;
+        self.fallback_iters += out.n_fallback as u64;
+        self.seconds += out.seconds;
+    }
+}
+
+/// Result of a speculative pass. Session state is untouched.
+pub struct Preview {
+    pub mode: PassMode,
+    pub out: RetrainOutput,
+}
+
+/// Result of a committed pass: the session's model, trajectory, dataset
+/// masks, and version have all advanced.
+pub struct Committed {
+    pub version: u64,
+    pub out: RetrainOutput,
+}
+
+/// A full (or warm-started) retrain used as the BaseL comparison point.
+pub struct BaselineRun {
+    pub w: Vec<f32>,
+    pub seconds: f64,
+    pub final_stats: Stats,
+}
+
+/// Read-only view of the session's current model.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub version: u64,
+    pub w: Vec<f32>,
+    pub n_train: usize,
+    pub test_accuracy: f64,
+}
+
+/// Builder: dataset family + seed + sizes + hyperparameters.
+pub struct SessionBuilder {
+    model: String,
+    seed: u64,
+    n_train: Option<usize>,
+    n_test: Option<usize>,
+    hp: Option<HyperParams>,
+    data: Option<(Dataset, Dataset)>,
+}
+
+impl SessionBuilder {
+    pub fn new(model: &str) -> Self {
+        SessionBuilder {
+            model: model.to_string(),
+            seed: 7,
+            n_train: None,
+            n_test: None,
+            hp: None,
+            data: None,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the manifest's train size (None = manifest default).
+    pub fn n_train(mut self, n: Option<usize>) -> Self {
+        self.n_train = n;
+        self
+    }
+
+    pub fn n_test(mut self, n: Option<usize>) -> Self {
+        self.n_test = n;
+        self
+    }
+
+    /// Override the per-dataset default hyperparameters.
+    pub fn hyper_params(mut self, hp: HyperParams) -> Self {
+        self.hp = Some(hp);
+        self
+    }
+
+    /// Train on explicit datasets instead of the seeded synthetic
+    /// generator (e.g. a poisoned copy in the robust-learning app).
+    pub fn datasets(mut self, train: Dataset, test: Dataset) -> Self {
+        self.data = Some((train, test));
+        self
+    }
+
+    /// Open the default engine, train, and build the session.
+    pub fn build(self) -> Result<Session> {
+        let mut eng = Engine::open_default()?;
+        self.build_in(&mut eng)
+    }
+
+    /// Build against an existing engine (sharing its runtime and
+    /// compiled artifacts — the path every in-process caller wants).
+    pub fn build_in(self, eng: &mut Engine) -> Result<Session> {
+        let exes = eng.model(&self.model)?;
+        let rt = eng.runtime();
+        let spec = exes.spec.clone();
+        let hp = self
+            .hp
+            .unwrap_or_else(|| HyperParams::for_dataset(&self.model));
+        let (train_ds, test_ds) = match self.data {
+            Some(pair) => pair,
+            None => synth::train_test_for_spec(&spec, self.seed, self.n_train, self.n_test),
+        };
+        let out = train::train(
+            &exes,
+            &rt,
+            &train_ds,
+            &TrainOpts::full(&hp, &IndexSet::empty()),
+        )?;
+        let traj = out.traj.expect("trajectory recorded");
+        Session::from_trained(rt, exes, train_ds, test_ds, traj, hp, out.w, out.seconds)
+    }
+}
+
+/// A trained model + cached trajectory + device-resident staging state,
+/// edited through [`Edit`]s. See the module docs for the lifecycle.
+pub struct Session {
+    rt: Rc<Runtime>,
+    exes: Rc<ModelExes>,
+    hp: HyperParams,
+    /// original training rows; deletions only flip masks on `staged`
+    base: Dataset,
+    staged: Staged,
+    removed: IndexSet,
+    /// rows added after initial training (committed)
+    added: Dataset,
+    /// the committed tail, device-resident across passes as append-only
+    /// segments: each add commit keeps the pass's already-staged delta
+    /// rows, so the tail never re-ships
+    added_staged: Vec<StagedRows>,
+    test_ds: Dataset,
+    test_staged: Staged,
+    traj: Trajectory,
+    w: Vec<f32>,
+    version: u64,
+    train_seconds: f64,
+    stats: Cell<SessionStats>,
+}
+
+impl Session {
+    #[allow(clippy::too_many_arguments)]
+    fn from_trained(
+        rt: Rc<Runtime>,
+        exes: Rc<ModelExes>,
+        base: Dataset,
+        test_ds: Dataset,
+        traj: Trajectory,
+        hp: HyperParams,
+        w: Vec<f32>,
+        train_seconds: f64,
+    ) -> Result<Self> {
+        if traj.ws.len() != hp.t + 1 {
+            bail!("trajectory/hp length mismatch");
+        }
+        let staged = exes.stage(&rt, &base, &IndexSet::empty())?;
+        let test_staged = exes.stage(&rt, &test_ds, &IndexSet::empty())?;
+        let added = Dataset::new(Vec::new(), Vec::new(), base.da, base.k);
+        Ok(Session {
+            rt,
+            exes,
+            hp,
+            base,
+            staged,
+            removed: IndexSet::empty(),
+            added,
+            added_staged: Vec::new(),
+            test_ds,
+            test_staged,
+            traj,
+            w,
+            version: 0,
+            train_seconds,
+            stats: Cell::new(SessionStats::default()),
+        })
+    }
+
+    // --- accessors -----------------------------------------------------
+
+    /// Current model parameters (w* before any commit, w^I after).
+    pub fn w(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Monotone commit counter (previews do not bump it).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn hyper_params(&self) -> &HyperParams {
+        &self.hp
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.exes.spec
+    }
+
+    /// Engine-level executables, for apps that drive the device directly
+    /// (per-row loss sweeps, CG over HVPs). Retraining goes through
+    /// preview/commit, not through these.
+    pub fn exes(&self) -> &ModelExes {
+        &self.exes
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Original training rows (delete indices refer to this).
+    pub fn train_dataset(&self) -> &Dataset {
+        &self.base
+    }
+
+    pub fn test_dataset(&self) -> &Dataset {
+        &self.test_ds
+    }
+
+    pub fn trajectory(&self) -> &Trajectory {
+        &self.traj
+    }
+
+    pub fn removed(&self) -> &IndexSet {
+        &self.removed
+    }
+
+    /// Seconds the initial full training took.
+    pub fn train_seconds(&self) -> f64 {
+        self.train_seconds
+    }
+
+    /// Cumulative per-edit accounting.
+    pub fn stats(&self) -> SessionStats {
+        self.stats.get()
+    }
+
+    /// Current effective training-set size.
+    pub fn n_current(&self) -> usize {
+        self.base.n - self.removed.len() + self.added.n
+    }
+
+    /// Which DeltaGrad variant passes on this session run.
+    pub fn mode(&self) -> PassMode {
+        if self.hp.batch > 0 {
+            PassMode::Sgd
+        } else {
+            PassMode::Gd
+        }
+    }
+
+    /// The current training set materialized (for BaseL comparisons).
+    pub fn current_dataset(&self) -> Dataset {
+        let keep = self.removed.complement(self.base.n);
+        let mut ds = self.base.subset(&keep);
+        if self.added.n > 0 {
+            ds.append(&self.added);
+        }
+        ds
+    }
+
+    /// Mean loss / accuracy of `w` on the resident test set (only the
+    /// parameter vector is uploaded).
+    pub fn eval_test(&self, w: &[f32]) -> Result<Stats> {
+        self.exes.eval_staged(&self.rt, &self.test_staged, w)
+    }
+
+    /// Mean loss / accuracy of `w` on the resident (masked) base set.
+    pub fn eval_train(&self, w: &[f32]) -> Result<Stats> {
+        self.exes.eval_staged(&self.rt, &self.staged, w)
+    }
+
+    pub fn snapshot(&self) -> Result<Snapshot> {
+        let stats = self.eval_test(&self.w)?;
+        Ok(Snapshot {
+            version: self.version,
+            w: self.w.clone(),
+            n_train: self.n_current(),
+            test_accuracy: stats.accuracy(),
+        })
+    }
+
+    /// Independent copy of this session (own staging buffers and stats,
+    /// shared runtime + compiled artifacts). Online streams fork the
+    /// cached session instead of retraining from scratch.
+    pub fn fork(&self) -> Result<Session> {
+        let staged = self.exes.stage(&self.rt, &self.base, &self.removed)?;
+        let added_staged = if self.added.n == 0 {
+            Vec::new()
+        } else {
+            // the fork's tail is one contiguous segment regardless of
+            // how many commits grew the original's
+            let all: Vec<usize> = (0..self.added.n).collect();
+            vec![self.exes.stage_rows(&self.rt, &self.added, &all)?]
+        };
+        let test_staged = self.exes.stage(&self.rt, &self.test_ds, &IndexSet::empty())?;
+        Ok(Session {
+            rt: self.rt.clone(),
+            exes: self.exes.clone(),
+            hp: self.hp.clone(),
+            base: self.base.clone(),
+            staged,
+            removed: self.removed.clone(),
+            added: self.added.clone(),
+            added_staged,
+            test_ds: self.test_ds.clone(),
+            test_staged,
+            traj: self.traj.clone(),
+            w: self.w.clone(),
+            version: self.version,
+            train_seconds: self.train_seconds,
+            stats: Cell::new(SessionStats::default()),
+        })
+    }
+
+    // --- validation ----------------------------------------------------
+
+    fn check_deletes(&self, dels: &[usize]) -> Result<()> {
+        for &i in dels {
+            if i >= self.base.n {
+                bail!("row {i} out of range (additions cannot be deleted yet)");
+            }
+            if self.removed.contains(i) {
+                bail!("row {i} already deleted");
+            }
+        }
+        Ok(())
+    }
+
+    // --- speculative pass ----------------------------------------------
+
+    /// Run a speculative DeltaGrad pass for `edit` against the current
+    /// state WITHOUT mutating anything: no trajectory rewrite, no mask
+    /// flip, no version bump. Multiple previews from one base are
+    /// independent of each other. An empty edit is allowed and replays
+    /// the cached trajectory (the rate sweeps' r=0 point); commits
+    /// reject it.
+    pub fn preview(&self, edit: &Edit) -> Result<Preview> {
+        self.preview_with(edit, &self.hp)
+    }
+
+    /// [`Self::preview`] with overridden hyperparameters (T0/j0/m sweeps;
+    /// `hp.t` must still match the cached trajectory, and `hp.batch`
+    /// must agree with the trajectory's recorded mode — the algorithm is
+    /// selected by what was trained, not by the override).
+    pub fn preview_with(&self, edit: &Edit, hp: &HyperParams) -> Result<Preview> {
+        let (del_rows, add_ds) = edit.normalize(self.base.da, self.base.k)?;
+        if !del_rows.is_empty() && add_ds.n > 0 {
+            bail!("mixed delete+add previews are not supported; commit applies mixed groups");
+        }
+        self.check_deletes(&del_rows)?;
+        let mode = self.mode();
+        if (hp.batch > 0) != (self.hp.batch > 0) {
+            bail!(
+                "hyperparameter override batch={} disagrees with the session's {:?} \
+                 trajectory (trained with batch={})",
+                hp.batch, mode, self.hp.batch
+            );
+        }
+        let out = match mode {
+            PassMode::Sgd => {
+                if add_ds.n > 0 {
+                    bail!("SGD addition previews are not implemented (deletion only, §3)");
+                }
+                if !self.removed.is_empty() || self.added.n > 0 {
+                    bail!("SGD previews require a pristine session (commits are GD-only)");
+                }
+                let removed = IndexSet::from_vec(del_rows);
+                batch::run_sgd_delete(&self.exes, &self.rt, &self.base, &self.traj, hp, &removed)?
+            }
+            PassMode::Gd => {
+                let n_cur = Some(self.n_current() as f64);
+                if add_ds.n > 0 {
+                    batch::run_gd(
+                        &self.exes,
+                        &self.rt,
+                        &self.base,
+                        &self.traj,
+                        hp,
+                        Change::Add(&add_ds),
+                        Some(&self.staged),
+                        &self.added_staged,
+                        n_cur,
+                    )?
+                } else {
+                    let removed = IndexSet::from_vec(del_rows);
+                    batch::run_gd(
+                        &self.exes,
+                        &self.rt,
+                        &self.base,
+                        &self.traj,
+                        hp,
+                        Change::Delete(&removed),
+                        Some(&self.staged),
+                        &self.added_staged,
+                        n_cur,
+                    )?
+                }
+            }
+        };
+        let mut s = self.stats.get();
+        s.absorb(&out, false);
+        self.stats.set(s);
+        Ok(Preview { mode, out })
+    }
+
+    // --- committed pass (Algorithm 3) ----------------------------------
+
+    /// Apply `edit` with the Algorithm-3 online pass: one DeltaGrad pass
+    /// over the group's delta rows, the cached trajectory rewritten
+    /// (exact iterations refresh (w_t, g_t) with exactly computed
+    /// values, approximate iterations store the eq. S62 estimate), then
+    /// the dataset change committed (removal masks flipped in place, the
+    /// pass's staged addition rows kept as the next resident tail
+    /// segment). The rewrite is built out-of-place, so an `Err` — from
+    /// validation or a device failure mid-pass — leaves the session
+    /// unchanged. (The only non-atomic window left is a device failure
+    /// inside the final mask flip itself.)
+    pub fn commit(&mut self, edit: Edit) -> Result<Committed> {
+        if self.hp.batch != 0 {
+            bail!("commit requires a GD trajectory (cache rewriting is GD-only; see DESIGN.md)");
+        }
+        let t0 = std::time::Instant::now();
+        let transfers0 = self.rt.counters.snapshot();
+        let spec = self.exes.spec.clone();
+        let hp = self.hp.clone();
+        let (del_rows, add_ds) = edit.normalize(self.base.da, self.base.k)?;
+        if del_rows.is_empty() && add_ds.n == 0 {
+            // a full pass + cache rewrite + version bump for a no-op
+            // would let empty edits monopolize the worker; previews
+            // accept empty edits (trajectory replay), commits do not
+            bail!("empty edit: nothing to commit");
+        }
+        self.check_deletes(&del_rows)?;
+        let n_cur = self.n_current() as f64;
+        let n_new = n_cur - del_rows.len() as f64 + add_ds.n as f64;
+        if n_new <= 0.0 {
+            bail!("deleting the last sample");
+        }
+        let exes = &self.exes;
+        let rt = &self.rt;
+        // the group's delta rows: staged once per pass. The committed
+        // tail is already resident (`added_staged`).
+        let sr_del = if del_rows.is_empty() {
+            None
+        } else {
+            Some(exes.stage_rows(rt, &self.base, &del_rows)?)
+        };
+        let sr_add = if add_ds.n == 0 {
+            None
+        } else {
+            let all: Vec<usize> = (0..add_ds.n).collect();
+            Some(exes.stage_rows(rt, &add_ds, &all)?)
+        };
+        let sr_tail = &self.added_staged;
+        let mut hist = History::new(hp.m);
+        let mut w = self.traj.ws[0].clone();
+        let mut dw = vec![0.0f32; spec.p];
+        let (mut n_exact, mut n_approx, mut n_fallback) = (0usize, 0usize, 0usize);
+        let mut last_stats = Stats::default();
+        // the rewritten cache is built out-of-place and swapped in only
+        // after the whole pass (and the mask flip) succeed, so a device
+        // error mid-pass leaves the session consistent
+        let mut ws_new: Vec<Vec<f32>> = Vec::with_capacity(hp.t + 1);
+        let mut gs_new: Vec<Vec<f32>> = Vec::with_capacity(hp.t);
+
+        for t in 0..hp.t {
+            let eta = hp.lr_at(t) as f64;
+            let mut exact = hp.is_exact_iter(t);
+            let mut bv: Option<Vec<f32>> = None;
+            if !exact {
+                sub(&w, &self.traj.ws[t], &mut dw);
+                if hist.is_empty() {
+                    exact = true;
+                    n_fallback += 1;
+                } else if spec.model == ModelKind::Mlp
+                    && hist.min_curvature().unwrap_or(0.0) < hp.curvature_min as f64
+                {
+                    exact = true;
+                    n_fallback += 1;
+                } else {
+                    bv = hist.bv(&dw);
+                    if bv.is_none() {
+                        exact = true;
+                        n_fallback += 1;
+                    }
+                }
+            }
+
+            // one parameter upload shared by every call this iteration
+            let ctx = exes.pass_ctx(rt, &w)?;
+            // signed gradient sum of the changed samples at the current
+            // iterate (always exact; |group| ≪ n resident rows)
+            let g_chg = grad_sum_group(exes, rt, &ctx, sr_del.as_ref(), sr_add.as_ref())?;
+            // average gradient over the NEW dataset at the new iterate:
+            // g_new_avg = (n_cur * g_cur_avg + g_chg) / n_new        (S62)
+            let mut g_new_avg;
+            if exact {
+                n_exact += 1;
+                let (g_sum_cur, stats) =
+                    grad_sum_current(exes, rt, &self.staged, &ctx, sr_tail)?;
+                last_stats = stats;
+                // harvest (Δw, Δg) against the cached trajectory
+                let dw_pair: Vec<f32> =
+                    w.iter().zip(&self.traj.ws[t]).map(|(a, b)| a - b).collect();
+                let mut dg = g_sum_cur.clone();
+                scale(&mut dg, (1.0 / n_cur) as f32);
+                axpy(-1.0, &self.traj.gs[t], &mut dg);
+                let curv_ok = {
+                    let sw = dot(&dw_pair, &dw_pair);
+                    sw > 1e-20 && dot(&dg, &dw_pair) / sw > 0.0
+                };
+                if curv_ok {
+                    hist.push(dw_pair, dg);
+                }
+                g_new_avg = g_sum_cur;
+                axpy(1.0, &g_chg, &mut g_new_avg);
+                scale(&mut g_new_avg, (1.0 / n_new) as f32);
+            } else {
+                n_approx += 1;
+                let mut g_cur_avg = bv.unwrap();
+                axpy(1.0, &self.traj.gs[t], &mut g_cur_avg);
+                g_new_avg = g_cur_avg;
+                scale(&mut g_new_avg, (n_cur / n_new) as f32);
+                axpy(1.0 / n_new as f32, &g_chg, &mut g_new_avg);
+            }
+            // rewrite the cache for the next edit (Alg. 3 l.36/43); the
+            // gradient moves into the rewritten cache and the step reads
+            // it from there — no scratch copy
+            ws_new.push(w.clone());
+            gs_new.push(g_new_avg);
+            // take the step
+            axpy(-(eta as f32), &gs_new[t], &mut w);
+        }
+        ws_new.push(w.clone());
+
+        // commit: flip the removal masks (the one remaining fallible
+        // step), then the infallible state swap
+        if !del_rows.is_empty() {
+            let mut removed_new = self.removed.clone();
+            for &i in &del_rows {
+                removed_new.insert(i);
+            }
+            exes.update_removed(rt, &mut self.staged, &self.base, &removed_new)?;
+            self.removed = removed_new;
+        }
+        if let Some(sr) = sr_add {
+            // the pass's staged addition rows become the next resident
+            // tail segment — the tail never re-ships
+            self.added.append(&add_ds);
+            self.added_staged.push(sr);
+        }
+        self.traj.ws = ws_new;
+        self.traj.gs = gs_new;
+        self.traj.n_effective = n_new as usize;
+        self.w = w.clone();
+        self.version += 1;
+
+        let out = RetrainOutput {
+            w,
+            seconds: t0.elapsed().as_secs_f64(),
+            n_exact,
+            n_approx,
+            n_fallback,
+            last_stats,
+            transfers: self.rt.counters.snapshot().since(transfers0),
+        };
+        let mut s = self.stats.get();
+        s.absorb(&out, true);
+        s.rows_deleted += del_rows.len() as u64;
+        s.rows_added += add_ds.n as u64;
+        self.stats.set(s);
+        Ok(Committed { version: self.version, out })
+    }
+
+    // --- baselines -----------------------------------------------------
+
+    /// BaseL: full retrain from scratch with `edit` applied to the
+    /// current dataset (the paper's exact-comparison point w^U).
+    pub fn baseline(&self, edit: &Edit) -> Result<BaselineRun> {
+        self.baseline_opts(edit, self.hp.t, false, false)
+    }
+
+    /// BaseL reusing the recorded minibatch schedule (§A.1.2: the SGD
+    /// comparison must share the original randomness).
+    pub fn baseline_same_batches(&self, edit: &Edit) -> Result<BaselineRun> {
+        self.baseline_opts(edit, self.hp.t, false, true)
+    }
+
+    /// Warm start: retrain for `iters` iterations from the session's
+    /// current parameters (the pragmatic comparator of appendix D.3).
+    pub fn warm_start(&self, edit: &Edit, iters: usize) -> Result<BaselineRun> {
+        self.baseline_opts(edit, iters, true, false)
+    }
+
+    fn baseline_opts(
+        &self,
+        edit: &Edit,
+        iters: usize,
+        warm: bool,
+        reuse_batches: bool,
+    ) -> Result<BaselineRun> {
+        let (del_rows, add_ds) = edit.normalize(self.base.da, self.base.k)?;
+        self.check_deletes(&del_rows)?;
+        let mut removed = self.removed.clone();
+        for &i in &del_rows {
+            removed.insert(i);
+        }
+        let mut hp = self.hp.clone();
+        hp.t = iters;
+        let opts = TrainOpts {
+            hp: &hp,
+            removed: &removed,
+            record: false,
+            reuse_batches: if reuse_batches {
+                Some(&self.traj.batches)
+            } else {
+                None
+            },
+            seed: if reuse_batches || warm { 0 } else { 0x5EED },
+            init: if warm { Some(&self.w) } else { None },
+        };
+        let out = if self.added.n == 0 && add_ds.n == 0 {
+            train::train(&self.exes, &self.rt, &self.base, &opts)?
+        } else {
+            let mut ds = self.base.clone();
+            ds.append(&self.added);
+            ds.append(&add_ds);
+            train::train(&self.exes, &self.rt, &ds, &opts)?
+        };
+        Ok(BaselineRun {
+            w: out.w,
+            seconds: out.seconds,
+            final_stats: out.final_stats,
+        })
+    }
+}
+
+/// Sum gradient over the current dataset (staged base minus removals,
+/// plus the resident added-tail segments) at the iteration's parameters.
+fn grad_sum_current(
+    exes: &ModelExes,
+    rt: &Runtime,
+    staged: &Staged,
+    ctx: &PassCtx,
+    sr_tail: &[StagedRows],
+) -> Result<(Vec<f32>, Stats)> {
+    let (mut g, mut stats) = exes.grad_staged_ctx(rt, staged, ctx)?;
+    for sr in sr_tail {
+        let (ga, sa) = exes.grad_rows_staged(rt, sr, ctx)?;
+        axpy(1.0, &ga, &mut g);
+        stats.accumulate(&sa);
+    }
+    Ok((g, stats))
+}
+
+/// Signed gradient sum of all changed samples in the group at the
+/// iteration's parameters: `Σ_add ∇F_i(w) − Σ_del ∇F_i(w)`, over the
+/// group's pre-staged rows.
+fn grad_sum_group(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ctx: &PassCtx,
+    sr_del: Option<&StagedRows>,
+    sr_add: Option<&StagedRows>,
+) -> Result<Vec<f32>> {
+    let mut g = vec![0.0f32; exes.spec.p];
+    if let Some(sr) = sr_del {
+        let (gd, _) = exes.grad_rows_staged(rt, sr, ctx)?;
+        axpy(-1.0, &gd, &mut g);
+    }
+    if let Some(sr) = sr_add {
+        let (ga, _) = exes.grad_rows_staged(rt, sr, ctx)?;
+        axpy(1.0, &ga, &mut g);
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add_ds(rows: usize, da: usize, k: usize) -> Dataset {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..rows {
+            x.extend(std::iter::repeat(0.5f32).take(da - 1));
+            x.push(1.0);
+            y.push((i % k) as u32);
+        }
+        Dataset::new(x, y, da, k)
+    }
+
+    #[test]
+    fn edit_count_kinds_and_len() {
+        let e = Edit::group(vec![
+            Edit::Delete(IndexSet::from_vec(vec![1, 5, 9])),
+            Edit::Add(add_ds(2, 4, 3)),
+            Edit::delete_row(11),
+        ]);
+        assert_eq!(e.count_kinds(), (4, 2));
+        assert_eq!(e.len(), 6);
+        assert!(!e.is_empty());
+        assert!(Edit::Delete(IndexSet::empty()).is_empty());
+    }
+
+    #[test]
+    fn edit_normalize_flattens_in_order() {
+        let e = Edit::group(vec![
+            Edit::delete_row(9),
+            Edit::Add(add_ds(1, 4, 3)),
+            Edit::Delete(IndexSet::from_vec(vec![2, 4])),
+            Edit::Add(add_ds(2, 4, 3)),
+        ]);
+        let (dels, adds) = e.normalize(4, 3).unwrap();
+        assert_eq!(dels, vec![9, 2, 4]);
+        assert_eq!(adds.n, 3);
+    }
+
+    #[test]
+    fn edit_normalize_rejects_duplicate_delete() {
+        let e = Edit::group(vec![Edit::delete_row(3), Edit::delete_row(3)]);
+        assert!(e.normalize(4, 3).is_err());
+    }
+
+    #[test]
+    fn edit_normalize_rejects_shape_mismatch() {
+        let e = Edit::Add(add_ds(1, 5, 3));
+        assert!(e.normalize(4, 3).is_err());
+    }
+
+    #[test]
+    fn add_row_infers_da() {
+        let e = Edit::add_row(vec![0.1, 0.2, 1.0], 1, 2);
+        let (dels, adds) = e.normalize(3, 2).unwrap();
+        assert!(dels.is_empty());
+        assert_eq!((adds.n, adds.da, adds.k), (1, 3, 2));
+    }
+
+    #[test]
+    fn session_stats_absorb_and_render() {
+        let mut s = SessionStats::default();
+        let out = RetrainOutput {
+            w: vec![],
+            seconds: 0.5,
+            n_exact: 3,
+            n_approx: 7,
+            n_fallback: 1,
+            last_stats: Stats::default(),
+            transfers: TransferStats { uploads: 10, upload_floats: 100, execs: 20 },
+        };
+        s.absorb(&out, false);
+        s.absorb(&out, true);
+        assert_eq!(s.previews, 1);
+        assert_eq!(s.commits, 1);
+        assert_eq!(s.exact_iters, 6);
+        assert_eq!(s.total_transfers().uploads, 20);
+        assert!((s.seconds - 1.0).abs() < 1e-12);
+        assert!(s.render().contains("previews=1"));
+    }
+}

@@ -1,12 +1,12 @@
 //! Seed-shaped reference implementations kept for equivalence testing
 //! and before/after benchmarking.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::HyperParams;
 use crate::data::{Dataset, IndexSet};
 use crate::lbfgs::History;
-use crate::runtime::engine::ModelExes;
+use crate::runtime::engine::{ModelExes, Stats};
 use crate::runtime::Runtime;
 use crate::train::Trajectory;
 use crate::util::vecmath::{axpy, dot, scale, sub};
@@ -74,4 +74,108 @@ pub fn delete_gd_seed_shape(
         }
     }
     Ok(w)
+}
+
+/// Faithful reproduction of the pre-Session `OnlineState::apply_group`
+/// (Algorithm 3, appendix C.2 / eq. S62) for a FRESH state: no prior
+/// removals, no added tail. `session::Session::commit` on a pristine
+/// session must stay BITWISE identical to this (tests/session.rs).
+///
+/// Returns the final parameters and the rewritten trajectory.
+pub fn online_group_seed_shape(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    del_rows: &[usize],
+    add_ds: &Dataset,
+) -> Result<(Vec<f32>, Trajectory)> {
+    let spec = &exes.spec;
+    if traj.ws.len() != hp.t + 1 {
+        bail!("trajectory/hp length mismatch");
+    }
+    let mut traj = traj.clone();
+    let staged = exes.stage(rt, ds, &IndexSet::empty())?;
+    let n_cur = ds.n as f64;
+    let n_new = n_cur - del_rows.len() as f64 + add_ds.n as f64;
+    if n_new <= 0.0 {
+        bail!("deleting the last sample");
+    }
+    let sr_del = if del_rows.is_empty() {
+        None
+    } else {
+        Some(exes.stage_rows(rt, ds, del_rows)?)
+    };
+    let sr_add = if add_ds.n == 0 {
+        None
+    } else {
+        let all: Vec<usize> = (0..add_ds.n).collect();
+        Some(exes.stage_rows(rt, add_ds, &all)?)
+    };
+    let mut hist = History::new(hp.m);
+    let mut w = traj.ws[0].clone();
+    let mut dw = vec![0.0f32; spec.p];
+
+    for t in 0..hp.t {
+        let eta = hp.lr_at(t) as f64;
+        let mut exact = hp.is_exact_iter(t);
+        let mut bv: Option<Vec<f32>> = None;
+        if !exact {
+            sub(&w, &traj.ws[t], &mut dw);
+            if hist.is_empty() {
+                exact = true;
+            } else if spec.model == crate::config::ModelKind::Mlp
+                && hist.min_curvature().unwrap_or(0.0) < hp.curvature_min as f64
+            {
+                exact = true;
+            } else {
+                bv = hist.bv(&dw);
+                if bv.is_none() {
+                    exact = true;
+                }
+            }
+        }
+        let ctx = exes.pass_ctx(rt, &w)?;
+        let mut g_chg = vec![0.0f32; spec.p];
+        if let Some(sr) = &sr_del {
+            let (gd, _) = exes.grad_rows_staged(rt, sr, &ctx)?;
+            axpy(-1.0, &gd, &mut g_chg);
+        }
+        if let Some(sr) = &sr_add {
+            let (ga, _) = exes.grad_rows_staged(rt, sr, &ctx)?;
+            axpy(1.0, &ga, &mut g_chg);
+        }
+        let mut g_new_avg;
+        if exact {
+            let (g_sum_cur, _stats): (Vec<f32>, Stats) =
+                exes.grad_staged_ctx(rt, &staged, &ctx)?;
+            let dw_pair: Vec<f32> = w.iter().zip(&traj.ws[t]).map(|(a, b)| a - b).collect();
+            let mut dg = g_sum_cur.clone();
+            scale(&mut dg, (1.0 / n_cur) as f32);
+            axpy(-1.0, &traj.gs[t], &mut dg);
+            let curv_ok = {
+                let sw = dot(&dw_pair, &dw_pair);
+                sw > 1e-20 && dot(&dg, &dw_pair) / sw > 0.0
+            };
+            if curv_ok {
+                hist.push(dw_pair, dg);
+            }
+            g_new_avg = g_sum_cur;
+            axpy(1.0, &g_chg, &mut g_new_avg);
+            scale(&mut g_new_avg, (1.0 / n_new) as f32);
+        } else {
+            let mut g_cur_avg = bv.unwrap();
+            axpy(1.0, &traj.gs[t], &mut g_cur_avg);
+            g_new_avg = g_cur_avg;
+            scale(&mut g_new_avg, (n_cur / n_new) as f32);
+            axpy(1.0 / n_new as f32, &g_chg, &mut g_new_avg);
+        }
+        traj.ws[t] = w.clone();
+        traj.gs[t] = g_new_avg;
+        axpy(-(eta as f32), &traj.gs[t], &mut w);
+    }
+    traj.ws[hp.t] = w.clone();
+    traj.n_effective = n_new as usize;
+    Ok((w, traj))
 }

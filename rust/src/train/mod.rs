@@ -189,21 +189,10 @@ pub fn train(
 /// Evaluate mean loss + accuracy of `w` over an entire dataset.
 ///
 /// Stages the dataset for this one call. Anything evaluating the same
-/// dataset repeatedly (the coordinator's snapshot path, the experiment
-/// drivers' per-point test eval) should stage once and use
-/// [`evaluate_staged`] so the rows ship to the device a single time.
+/// dataset repeatedly should stage once and use
+/// [`ModelExes::eval_staged`] (or a `session::Session`'s resident test
+/// set) so the rows ship to the device a single time.
 pub fn evaluate(exes: &ModelExes, rt: &Runtime, ds: &Dataset, w: &[f32]) -> Result<Stats> {
     let staged = exes.stage(rt, ds, &IndexSet::empty())?;
-    evaluate_staged(exes, rt, &staged, w)
-}
-
-/// Evaluate mean loss + accuracy on an already-staged dataset: only the
-/// parameter vector is uploaded.
-pub fn evaluate_staged(
-    exes: &ModelExes,
-    rt: &Runtime,
-    staged: &crate::runtime::engine::Staged,
-    w: &[f32],
-) -> Result<Stats> {
-    exes.eval_staged(rt, staged, w)
+    exes.eval_staged(rt, &staged, w)
 }

@@ -252,6 +252,17 @@ mod tests {
                 let mut x_dense = b.clone();
                 solve_dense(&mut acopy, &mut x_dense).unwrap();
                 assert_eq!(x_lu, x_dense, "n={n}: factored vs one-shot drifted");
+                // independent oracle (solve_dense shares the LU code, so
+                // the equality alone can't catch a shared regression):
+                // the residual A·x − b must vanish
+                for i in 0..n {
+                    let ax: f64 = (0..n).map(|j| a[i * n + j] * x_lu[j]).sum();
+                    assert!(
+                        (ax - b[i]).abs() < 1e-8 * b[i].abs().max(1.0),
+                        "n={n} row {i}: residual {:.3e}",
+                        ax - b[i]
+                    );
+                }
             }
         }
     }

@@ -1,111 +1,83 @@
-//! Application-layer integration tests (§5 apps over real artifacts).
-//! Requires `make artifacts`.
+//! Application-layer integration tests (§5 apps over real artifacts),
+//! all sharing one Session per fixture. Requires `make artifacts`.
 
 use deltagrad::apps::{conformal, influence, jackknife, privacy, robust, valuation};
 use deltagrad::config::HyperParams;
-use deltagrad::data::{sample_removal, synth, IndexSet};
-use deltagrad::deltagrad::batch;
+use deltagrad::data::{sample_removal, synth};
 use deltagrad::runtime::Engine;
-use deltagrad::train::{self, TrainOpts};
+use deltagrad::session::{Edit, Session, SessionBuilder};
 use deltagrad::util::vecmath::dist2;
 use deltagrad::util::Rng;
 
-struct Fixture {
-    eng: Engine,
-    exes: std::rc::Rc<deltagrad::ModelExes>,
-    train_ds: deltagrad::Dataset,
-    test_ds: deltagrad::Dataset,
-    hp: HyperParams,
-    w: Vec<f32>,
-    traj: deltagrad::train::Trajectory,
-}
-
-fn fixture() -> Fixture {
+fn fixture() -> Session {
     let mut eng = Engine::open_default().expect("make artifacts");
-    let exes = eng.model("small").unwrap();
-    let spec = exes.spec.clone();
+    let spec = eng.spec("small").unwrap().clone();
     let (train_ds, test_ds) = synth::train_test_for_spec(&spec, 21, Some(768), Some(384));
     let mut hp = HyperParams::for_dataset("small");
     hp.t = 60;
     hp.j0 = 8;
-    let out = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &IndexSet::empty()))
-        .unwrap();
-    Fixture {
-        eng,
-        exes,
-        train_ds,
-        test_ds,
-        hp,
-        w: out.w,
-        traj: out.traj.unwrap(),
-    }
+    SessionBuilder::new("small")
+        .hyper_params(hp)
+        .datasets(train_ds, test_ds)
+        .build_in(&mut eng)
+        .unwrap()
 }
 
 #[test]
 fn valuation_identifies_self_influence() {
-    let f = fixture();
+    let session = fixture();
     let candidates: Vec<usize> = (0..6).collect();
-    let values = valuation::leave_one_out_values(
-        &f.exes, &f.eng.rt, &f.train_ds, &f.test_ds, &f.traj, &f.hp, &f.w, &candidates,
-    )
-    .unwrap();
+    let values = valuation::leave_one_out_values(&session, &candidates).unwrap();
     assert_eq!(values.len(), 6);
     for v in &values {
         assert!(v.param_dist > 0.0, "removal must move the params");
         assert!(v.param_dist < 1.0, "single-sample influence must be small");
     }
+    // all six LOO models were speculative: nothing committed
+    assert_eq!(session.version(), 0);
+    assert_eq!(session.stats().previews, 6);
 }
 
 #[test]
 fn jackknife_runs_and_bias_is_finite() {
-    let f = fixture();
+    let session = fixture();
     // functional: ||w||^2 (a biased plug-in statistic)
-    let res = jackknife::jackknife_bias(
-        &f.exes,
-        &f.eng.rt,
-        &f.train_ds,
-        &f.traj,
-        &f.hp,
-        &f.w,
-        |w| deltagrad::util::vecmath::dot(w, w),
-        5,
-        3,
-    )
-    .unwrap();
+    let res =
+        jackknife::jackknife_bias(&session, |w| deltagrad::util::vecmath::dot(w, w), 5, 3)
+            .unwrap();
     assert_eq!(res.n_loo, 5);
     assert!(res.full > 0.0);
     assert!(res.bias.is_finite());
     assert!((res.corrected - (res.full - res.bias)).abs() < 1e-9);
+    assert!(res.transfers.uploads > 0, "LOO passes must report traffic");
 }
 
 #[test]
 fn conformal_residuals_and_coverage() {
-    let f = fixture();
-    let residuals = conformal::cross_conformal_residuals(
-        &f.exes, &f.eng.rt, &f.train_ds, &f.traj, &f.hp, 4,
-    )
-    .unwrap();
-    assert_eq!(residuals.len(), f.train_ds.n);
+    let session = fixture();
+    let residuals = conformal::cross_conformal_residuals(&session, 4).unwrap();
+    let test_ds = session.test_dataset();
+    assert_eq!(residuals.len(), session.train_dataset().n);
     assert!(residuals.iter().all(|r| (0.0..=1.0).contains(r)));
     // empirical coverage on the test set at alpha = 0.1 should be ~0.9
-    let spec = &f.exes.spec;
+    let spec = session.spec();
     let alpha = 0.1;
     let mut covered = 0usize;
     let mut total_size = 0usize;
-    for i in 0..f.test_ds.n {
+    for i in 0..test_ds.n {
         let set = conformal::prediction_set(
-            &residuals, alpha, spec.da, spec.k, &f.w, f.test_ds.row(i),
+            &residuals, alpha, spec.da, spec.k, session.w(), test_ds.row(i),
         );
-        if set.contains(&f.test_ds.y[i]) {
+        if set.contains(&test_ds.y[i]) {
             covered += 1;
         }
         total_size += set.len();
     }
-    let cov = covered as f64 / f.test_ds.n as f64;
+    let cov = covered as f64 / test_ds.n as f64;
     assert!(cov >= 1.0 - alpha - 0.07, "coverage {cov} too low");
     // sets must be informative (not always all k classes)
     assert!(
-        (total_size as f64 / f.test_ds.n as f64) < spec.k as f64,
+        (total_size as f64 / test_ds.n as f64) < spec.k as f64,
         "prediction sets are trivial"
     );
 }
@@ -114,56 +86,60 @@ fn conformal_residuals_and_coverage() {
 fn influence_comparator_is_worse_than_deltagrad() {
     // d3's claim: the one-shot influence update is cheap but its error
     // does not track the exact retrain as closely as DeltaGrad's
-    let f = fixture();
-    let removed = sample_removal(&mut Rng::new(5), f.train_ds.n, 8);
-    let basel = train::train(&f.exes, &f.eng.rt, &f.train_ds, &TrainOpts::full(&f.hp, &removed))
-        .unwrap();
-    let dg = batch::delete_gd(&f.exes, &f.eng.rt, &f.train_ds, &f.traj, &f.hp, &removed).unwrap();
+    let session = fixture();
+    let removed = sample_removal(&mut Rng::new(5), session.train_dataset().n, 8);
+    let edit = Edit::Delete(removed.clone());
+    let basel = session.baseline(&edit).unwrap();
+    let dg = session.preview(&edit).unwrap();
     let (w_inf, _) = influence::influence_delete(
-        &f.exes,
-        &f.eng.rt,
-        &f.train_ds,
-        &f.w,
+        &session,
         &removed,
         &influence::InfluenceOpts { hessian_sample: 512, ..Default::default() },
     )
     .unwrap();
-    let d_dg = dist2(&dg.w, &basel.w);
+    let d_dg = dist2(&dg.out.w, &basel.w);
     let d_inf = dist2(&w_inf, &basel.w);
-    let d_noop = dist2(&f.w, &basel.w);
+    let d_noop = dist2(session.w(), &basel.w);
     assert!(d_inf < d_noop, "influence should improve on doing nothing");
     assert!(d_dg < d_inf, "DeltaGrad ({d_dg:.2e}) should beat influence ({d_inf:.2e})");
 }
 
 #[test]
 fn privacy_release_hides_the_deletion_error() {
-    let f = fixture();
-    let removed = sample_removal(&mut Rng::new(9), f.train_ds.n, 5);
-    let basel = train::train(&f.exes, &f.eng.rt, &f.train_ds, &TrainOpts::full(&f.hp, &removed))
-        .unwrap();
-    let dg = batch::delete_gd(&f.exes, &f.eng.rt, &f.train_ds, &f.traj, &f.hp, &removed).unwrap();
-    let delta0 = dist2(&dg.w, &basel.w);
-    let mech = privacy::LaplaceMechanism::from_deletion_error(f.exes.spec.p, delta0, 1.0);
-    let bound = privacy::epsilon_bound(&dg.w, &basel.w, mech.scale);
+    let session = fixture();
+    let removed = sample_removal(&mut Rng::new(9), session.train_dataset().n, 5);
+    let edit = Edit::Delete(removed);
+    let basel = session.baseline(&edit).unwrap();
+    let dg = session.preview(&edit).unwrap();
+    let delta0 = dist2(&dg.out.w, &basel.w);
+    let mech = privacy::LaplaceMechanism::from_deletion_error(session.spec().p, delta0, 1.0);
+    let bound = privacy::epsilon_bound(&dg.out.w, &basel.w, mech.scale);
     // the √p factor makes the ℓ1-based worst case ≤ ε=1
     assert!(bound <= 1.0 + 1e-6, "ε bound {bound} exceeds the budget");
     let mut rng = Rng::new(1);
-    let z = mech.release(&dg.w, &mut rng);
-    assert!(mech.privacy_loss(&dg.w, &basel.w, &z) <= bound + 1e-9);
+    let z = mech.release(&dg.out.w, &mut rng);
+    assert!(mech.privacy_loss(&dg.out.w, &basel.w, &z) <= bound + 1e-9);
 }
 
 #[test]
 fn robust_prune_refit_matches_basel() {
-    let f = fixture();
-    let (poisoned, _victims) = robust::inject_label_flips(&f.train_ds, 30, 17);
-    let out = train::train(&f.exes, &f.eng.rt, &poisoned, &TrainOpts::full(&f.hp, &IndexSet::empty()))
+    // poisoned data needs its own session (the prune signal is the
+    // session's own training loss)
+    let mut eng = Engine::open_default().expect("make artifacts");
+    let spec = eng.spec("small").unwrap().clone();
+    let (train_ds, test_ds) = synth::train_test_for_spec(&spec, 21, Some(768), Some(384));
+    let (poisoned, _victims) = robust::inject_label_flips(&train_ds, 30, 17);
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 60;
+    hp.j0 = 8;
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp)
+        .datasets(poisoned, test_ds)
+        .build_in(&mut eng)
         .unwrap();
-    let traj = out.traj.unwrap();
-    let fit = robust::prune_and_refit(&f.exes, &f.eng.rt, &poisoned, &traj, &f.hp, &out.w, 0.04)
-        .unwrap();
-    let basel = train::train(&f.exes, &f.eng.rt, &poisoned, &TrainOpts::full(&f.hp, &fit.pruned))
-        .unwrap();
+    let fit = robust::prune_and_refit(&session, 0.04).unwrap();
+    let basel = session.baseline(&Edit::Delete(fit.pruned.clone())).unwrap();
     let gap = dist2(&fit.w, &basel.w);
-    let moved = dist2(&out.w, &basel.w);
+    let moved = dist2(session.w(), &basel.w);
     assert!(gap < 0.3 * moved.max(1e-12), "refit {gap:.2e} should track BaseL ({moved:.2e})");
 }

@@ -7,8 +7,8 @@
 
 use deltagrad::config::HyperParams;
 use deltagrad::data::{sample_removal, synth, IndexSet};
-use deltagrad::deltagrad::batch;
 use deltagrad::runtime::Engine;
+use deltagrad::session::{Edit, SessionBuilder};
 use deltagrad::train::{self, TrainOpts};
 use deltagrad::util::vecmath::dist2;
 use deltagrad::util::Rng;
@@ -90,52 +90,50 @@ fn training_converges_on_small() {
 #[test]
 fn deltagrad_delete_tracks_basel() {
     let mut eng = engine();
-    let exes = eng.model("small").unwrap();
-    let spec = exes.spec.clone();
-    let (ds, _) = synth::train_test_for_spec(&spec, 3, None, None);
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 3, None, None);
     let hp = small_hp();
-    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
         .unwrap();
-    let traj = full.traj.unwrap();
 
     let mut rng = Rng::new(5);
-    let removed = sample_removal(&mut rng, ds.n, 10); // ~1%
+    let edit = Edit::Delete(sample_removal(&mut rng, ds.n, 10)); // ~1%
     // BaseL: retrain from scratch on remaining
-    let basel = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &removed)).unwrap();
-    // DeltaGrad
-    let dg = batch::delete_gd(&exes, &eng.rt, &ds, &traj, &hp, &removed).unwrap();
+    let basel = session.baseline(&edit).unwrap();
+    // DeltaGrad (speculative pass)
+    let dg = session.preview(&edit).unwrap();
 
-    let d_star_u = dist2(&full.w, &basel.w); // ‖w* − w^U‖  = O(r/n)
-    let d_i_u = dist2(&dg.w, &basel.w); //      ‖w^I − w^U‖ = o(r/n)
+    let d_star_u = dist2(session.w(), &basel.w); // ‖w* − w^U‖  = O(r/n)
+    let d_i_u = dist2(&dg.out.w, &basel.w); //      ‖w^I − w^U‖ = o(r/n)
     assert!(d_star_u > 0.0, "removal should move the optimum");
     assert!(
         d_i_u < 0.2 * d_star_u,
         "DeltaGrad error {d_i_u:.3e} not well below baseline gap {d_star_u:.3e}"
     );
-    assert!(dg.n_approx > 0, "no approximated iterations ran");
-    assert!(dg.n_exact >= hp.j0, "burn-in not exact");
+    assert!(dg.out.n_approx > 0, "no approximated iterations ran");
+    assert!(dg.out.n_exact >= hp.j0, "burn-in not exact");
 }
 
 #[test]
 fn deltagrad_add_tracks_basel() {
     let mut eng = engine();
-    let exes = eng.model("small").unwrap();
-    let spec = exes.spec.clone();
-    let (ds, _) = synth::train_test_for_spec(&spec, 11, None, None);
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 11, None, None);
     let hp = small_hp();
-    let added = synth::addition_rows(&spec, 11, 10);
-    // trajectory over the base data
-    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp)
+        .datasets(ds, test)
+        .build_in(&mut eng)
         .unwrap();
-    let traj = full.traj.unwrap();
+    let edit = Edit::Add(synth::addition_rows(&spec, 11, 10));
     // BaseL: retrain on base + added
-    let mut ds_plus = ds.clone();
-    ds_plus.append(&added);
-    let basel = train::train(&exes, &eng.rt, &ds_plus, &TrainOpts::full(&hp, &IndexSet::empty()))
-        .unwrap();
-    let dg = batch::add_gd(&exes, &eng.rt, &ds, &traj, &hp, &added).unwrap();
-    let d_star_u = dist2(&full.w, &basel.w);
-    let d_i_u = dist2(&dg.w, &basel.w);
+    let basel = session.baseline(&edit).unwrap();
+    let dg = session.preview(&edit).unwrap();
+    let d_star_u = dist2(session.w(), &basel.w);
+    let d_i_u = dist2(&dg.out.w, &basel.w);
     assert!(
         d_i_u < 0.2 * d_star_u,
         "DeltaGrad-add error {d_i_u:.3e} vs baseline gap {d_star_u:.3e}"
@@ -145,34 +143,23 @@ fn deltagrad_add_tracks_basel() {
 #[test]
 fn deltagrad_sgd_delete_tracks_basel() {
     let mut eng = engine();
-    let exes = eng.model("small").unwrap();
-    let spec = exes.spec.clone();
-    let (ds, _) = synth::train_test_for_spec(&spec, 13, None, None);
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 13, None, None);
     let mut hp = small_hp();
     hp.batch = 512; // half the 1024 rows per minibatch
-    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp)
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
         .unwrap();
-    let traj = full.traj.unwrap();
     let mut rng = Rng::new(21);
-    let removed = sample_removal(&mut rng, ds.n, 10);
+    let edit = Edit::Delete(sample_removal(&mut rng, ds.n, 10));
     // BaseL with the SAME minibatch schedule (paper §A.1.2)
-    let basel = train::train(
-        &exes,
-        &eng.rt,
-        &ds,
-        &TrainOpts {
-            hp: &hp,
-            removed: &removed,
-            record: false,
-            reuse_batches: Some(&traj.batches),
-            seed: 0,
-            init: None,
-        },
-    )
-    .unwrap();
-    let dg = batch::delete_sgd(&exes, &eng.rt, &ds, &traj, &hp, &removed).unwrap();
-    let d_star_u = dist2(&full.w, &basel.w);
-    let d_i_u = dist2(&dg.w, &basel.w);
+    let basel = session.baseline_same_batches(&edit).unwrap();
+    let dg = session.preview(&edit).unwrap();
+    assert_eq!(dg.mode, deltagrad::session::PassMode::Sgd);
+    let d_star_u = dist2(session.w(), &basel.w);
+    let d_i_u = dist2(&dg.out.w, &basel.w);
     assert!(d_star_u > 0.0);
     assert!(
         d_i_u < 0.5 * d_star_u,
@@ -238,22 +225,23 @@ fn hvp_artifact_consistent_with_grad_difference() {
 #[test]
 fn mlp_deltagrad_with_curvature_gate() {
     let mut eng = engine();
-    let exes = eng.model("smallnn").unwrap();
-    let spec = exes.spec.clone();
-    let (ds, _) = synth::train_test_for_spec(&spec, 19, None, None);
+    let spec = eng.spec("smallnn").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 19, None, None);
     let mut hp = HyperParams::for_dataset("smallnn");
     hp.t = 50;
     hp.j0 = 12;
     hp.t0 = 2;
-    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+    let session = SessionBuilder::new("smallnn")
+        .hyper_params(hp)
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
         .unwrap();
-    let traj = full.traj.unwrap();
     let mut rng = Rng::new(29);
-    let removed = sample_removal(&mut rng, ds.n, 10);
-    let basel = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &removed)).unwrap();
-    let dg = batch::delete_gd(&exes, &eng.rt, &ds, &traj, &hp, &removed).unwrap();
-    let d_star_u = dist2(&full.w, &basel.w);
-    let d_i_u = dist2(&dg.w, &basel.w);
+    let edit = Edit::Delete(sample_removal(&mut rng, ds.n, 10));
+    let basel = session.baseline(&edit).unwrap();
+    let dg = session.preview(&edit).unwrap();
+    let d_star_u = dist2(session.w(), &basel.w);
+    let d_i_u = dist2(&dg.out.w, &basel.w);
     assert!(
         d_i_u < d_star_u,
         "MLP DeltaGrad error {d_i_u:.3e} should beat baseline gap {d_star_u:.3e}"

@@ -1,114 +1,110 @@
-//! Algorithm 3 (online deletion/addition) integration tests.
-//! Requires `make artifacts`.
+//! Algorithm 3 (online deletion/addition) integration tests, driven
+//! through `session.commit`. Requires `make artifacts`.
 
 use deltagrad::config::HyperParams;
 use deltagrad::data::{synth, IndexSet};
-use deltagrad::deltagrad::online::{OnlineState, Request};
 use deltagrad::runtime::Engine;
-use deltagrad::train::{self, TrainOpts};
+use deltagrad::session::{Edit, Session, SessionBuilder};
 use deltagrad::util::vecmath::dist2;
 
-fn setup() -> (
-    Engine,
-    std::rc::Rc<deltagrad::ModelExes>,
-    deltagrad::Dataset,
-    deltagrad::Dataset,
-    HyperParams,
-    Vec<f32>,
-    deltagrad::train::Trajectory,
-) {
+fn setup() -> (Engine, Session) {
     let mut eng = Engine::open_default().expect("make artifacts");
-    let exes = eng.model("small").unwrap();
-    let spec = exes.spec.clone();
+    let spec = eng.spec("small").unwrap().clone();
     let (train_ds, test_ds) = synth::train_test_for_spec(&spec, 33, Some(640), Some(256));
     let mut hp = HyperParams::for_dataset("small");
     hp.t = 50;
     hp.j0 = 8;
     hp.t0 = 5;
-    let out = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp)
+        .datasets(train_ds, test_ds)
+        .build_in(&mut eng)
         .unwrap();
-    (eng, exes, train_ds, test_ds, hp, out.w, out.traj.unwrap())
+    (eng, session)
 }
 
 #[test]
 fn sequential_deletions_track_basel() {
-    let (eng, exes, train_ds, _test, hp, _w, traj) = setup();
-    let mut state =
-        OnlineState::new(&exes, &eng.rt, train_ds.clone(), traj, hp.clone()).unwrap();
+    let (_eng, mut session) = setup();
+    let n0 = session.train_dataset().n;
     let victims = [3usize, 77, 200, 401, 555];
     let mut w_i = Vec::new();
     for &v in &victims {
-        let out = state.apply(&exes, &eng.rt, Request::Delete(v)).unwrap();
-        w_i = out.w;
-        assert!(out.n_approx > 0, "online pass should approximate");
+        let c = session.commit(Edit::delete_row(v)).unwrap();
+        w_i = c.out.w;
+        assert!(c.out.n_approx > 0, "online pass should approximate");
     }
-    assert_eq!(state.n_current(), train_ds.n - victims.len());
-    // BaseL on the final remaining set
-    let removed = IndexSet::from_vec(victims.to_vec());
-    let basel = train::train(&exes, &eng.rt, &train_ds, &TrainOpts::full(&hp, &removed)).unwrap();
+    assert_eq!(session.n_current(), n0 - victims.len());
+    assert_eq!(session.version(), victims.len() as u64);
+    // BaseL on the final remaining set: an empty edit on the committed
+    // session retrains exactly the current dataset
+    let basel = session.baseline(&Edit::Delete(IndexSet::empty())).unwrap();
     let d = dist2(&w_i, &basel.w);
-    let moved = dist2(&state.traj.ws[0], &basel.w).max(1e-12);
+    let moved = dist2(&session.trajectory().ws[0], &basel.w).max(1e-12);
     assert!(
-        d < 0.5 * moved.max(dist2(&basel.w, &basel.w) + 1e-3),
+        d < 0.5 * moved.max(1e-3),
         "online drift {d:.3e} too large vs scale {moved:.3e}"
     );
 }
 
 #[test]
-fn online_matches_batch_for_single_request() {
-    // one online deletion == one batch deletion (same trajectory)
-    let (eng, exes, train_ds, _test, hp, _w, traj) = setup();
+fn online_commit_matches_batch_preview_for_single_edit() {
+    // one committed deletion ~= one speculative batch deletion (same
+    // trajectory, different but convergent arithmetic)
+    let (_eng, mut session) = setup();
     let victim = 123usize;
-    let mut state =
-        OnlineState::new(&exes, &eng.rt, train_ds.clone(), traj.clone(), hp.clone()).unwrap();
-    let online = state.apply(&exes, &eng.rt, Request::Delete(victim)).unwrap();
-    let removed = IndexSet::from_vec(vec![victim]);
-    let batch =
-        deltagrad::deltagrad::batch::delete_gd(&exes, &eng.rt, &train_ds, &traj, &hp, &removed)
-            .unwrap();
-    let d = dist2(&online.w, &batch.w);
-    let scale = deltagrad::util::vecmath::norm2(&batch.w).max(1e-12);
-    assert!(d / scale < 1e-4, "online vs batch mismatch {d:.3e} (scale {scale:.3e})");
+    let edit = Edit::delete_row(victim);
+    let pv = session.preview(&edit).unwrap();
+    let c = session.commit(edit).unwrap();
+    let d = dist2(&c.out.w, &pv.out.w);
+    let scale = deltagrad::util::vecmath::norm2(&pv.out.w).max(1e-12);
+    assert!(d / scale < 1e-4, "commit vs preview mismatch {d:.3e} (scale {scale:.3e})");
 }
 
 #[test]
 fn online_addition_then_deletion_roundtrip_stays_close() {
-    let (eng, exes, train_ds, _test, hp, w_full, traj) = setup();
-    let spec = exes.spec.clone();
-    let mut state = OnlineState::new(&exes, &eng.rt, train_ds.clone(), traj, hp.clone()).unwrap();
+    let (_eng, mut session) = setup();
+    let spec = session.spec().clone();
+    let n0 = session.train_dataset().n;
+    let w_full = session.w().to_vec();
     // add two fresh samples, then delete one original
     let adds = synth::addition_rows(&spec, 5, 2);
     for i in 0..2 {
-        state
-            .apply(&exes, &eng.rt, Request::Add(adds.row(i).to_vec(), adds.y[i]))
+        session
+            .commit(Edit::add_row(adds.row(i).to_vec(), adds.y[i], spec.k))
             .unwrap();
     }
-    let out = state.apply(&exes, &eng.rt, Request::Delete(10)).unwrap();
-    assert_eq!(state.n_current(), train_ds.n + 2 - 1);
+    let out = session.commit(Edit::delete_row(10)).unwrap();
+    assert_eq!(session.n_current(), n0 + 2 - 1);
     // the model should not have wandered far from the original optimum
-    let drift = dist2(&out.w, &w_full);
+    let drift = dist2(&out.out.w, &w_full);
     assert!(drift < 0.5, "online drift {drift} implausibly large");
     // and BaseL on the materialized current dataset should agree
-    let current = state.current_dataset();
-    assert_eq!(current.n, state.n_current());
-    let basel =
-        train::train(&exes, &eng.rt, &current, &TrainOpts::full(&hp, &IndexSet::empty())).unwrap();
-    let gap = dist2(&out.w, &basel.w);
+    let current = session.current_dataset();
+    assert_eq!(current.n, session.n_current());
+    let basel = session.baseline(&Edit::Delete(IndexSet::empty())).unwrap();
+    let gap = dist2(&out.out.w, &basel.w);
     let moved = dist2(&w_full, &basel.w).max(1e-12);
     assert!(gap < moved, "online ({gap:.2e}) should beat the stale model ({moved:.2e})");
 }
 
 #[test]
-fn group_apply_equals_sequential_dataset_state() {
-    let (eng, exes, train_ds, _test, hp, _w, traj) = setup();
-    let mut state =
-        OnlineState::new(&exes, &eng.rt, train_ds.clone(), traj, hp.clone()).unwrap();
-    let reqs = vec![Request::Delete(1), Request::Delete(2), Request::Delete(3)];
-    let out = state.apply_group(&exes, &eng.rt, &reqs).unwrap();
-    assert_eq!(state.n_current(), train_ds.n - 3);
-    assert!(out.n_exact > 0 && out.n_approx > 0);
+fn group_commit_equals_sequential_dataset_state() {
+    let (_eng, mut session) = setup();
+    let n0 = session.train_dataset().n;
+    let edit = Edit::Delete(IndexSet::from_vec(vec![1, 2, 3]));
+    let c = session.commit(edit).unwrap();
+    assert_eq!(session.n_current(), n0 - 3);
+    assert!(c.out.n_exact > 0 && c.out.n_approx > 0);
     // double-delete in one group must be rejected atomically
-    let bad = vec![Request::Delete(4), Request::Delete(4)];
-    assert!(state.apply_group(&exes, &eng.rt, &bad).is_err());
-    assert_eq!(state.n_current(), train_ds.n - 3, "failed group must not commit");
+    let bad = Edit::group(vec![Edit::delete_row(4), Edit::delete_row(4)]);
+    assert!(session.commit(bad).is_err());
+    assert_eq!(session.n_current(), n0 - 3, "failed group must not commit");
+    assert_eq!(session.version(), 1, "failed group must not bump the version");
+    // deleting an already-removed row must also fail atomically
+    assert!(session.commit(Edit::delete_row(2)).is_err());
+    assert_eq!(session.n_current(), n0 - 3);
+    // an empty edit must not burn a pass or bump the version
+    assert!(session.commit(Edit::Delete(IndexSet::empty())).is_err());
+    assert_eq!(session.version(), 1);
 }

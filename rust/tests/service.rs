@@ -4,8 +4,8 @@
 use std::time::Duration;
 
 use deltagrad::config::HyperParams;
-use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
-use deltagrad::deltagrad::online::Request;
+use deltagrad::coordinator::{BatchPolicy, Rejected, ServiceConfig, ServiceHandle};
+use deltagrad::session::Edit;
 
 fn small_cfg(policy: BatchPolicy) -> ServiceConfig {
     let mut hp = HyperParams::for_dataset("small");
@@ -27,6 +27,7 @@ fn serves_sequential_deletions() {
     let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
         max_group: 1,
         max_wait: Duration::from_millis(1),
+        ..BatchPolicy::default()
     }))
     .unwrap();
     let snap0 = svc.snapshot().unwrap();
@@ -35,7 +36,7 @@ fn serves_sequential_deletions() {
     assert!(snap0.test_accuracy > 0.5, "initial acc {}", snap0.test_accuracy);
 
     for i in 0..3 {
-        let rep = svc.update(Request::Delete(i)).unwrap();
+        let rep = svc.update(Edit::delete_row(i)).unwrap();
         assert_eq!(rep.version, (i + 1) as u64);
         assert_eq!(rep.group_size, 1);
         assert!(rep.n_exact > 0);
@@ -48,6 +49,8 @@ fn serves_sequential_deletions() {
     let m = svc.metrics().unwrap();
     assert_eq!(m.requests, 3);
     assert_eq!(m.groups, 3);
+    assert_eq!(m.deletes, 3);
+    assert_eq!(m.adds, 0);
     svc.shutdown().unwrap();
 }
 
@@ -56,11 +59,12 @@ fn group_commit_coalesces_concurrent_requests() {
     let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
         max_group: 8,
         max_wait: Duration::from_millis(150),
+        ..BatchPolicy::default()
     }))
     .unwrap();
     // enqueue 5 requests quickly without waiting
     let rxs: Vec<_> = (10..15)
-        .map(|i| svc.update_async(Request::Delete(i)).unwrap())
+        .map(|i| svc.update_async(Edit::delete_row(i)).unwrap())
         .collect();
     let mut versions = Vec::new();
     let mut group_sizes = Vec::new();
@@ -83,17 +87,66 @@ fn group_commit_coalesces_concurrent_requests() {
 }
 
 #[test]
+fn committed_group_uploads_delta_rows_exactly_once() {
+    // transfer-accounting regression (docs/PERFORMANCE.md budget): one
+    // committed group of k deletes ships
+    //   3·⌈k/chunk_small⌉ buffers  (the delta rows, once per PASS)
+    //   + T                        (one parameter upload per iteration)
+    //   + the touched removal-mask chunks (flipped in place post-pass)
+    // and NOTHING else — the base dataset and test set are resident.
+    // shape info straight from the manifest (no second PJRT client)
+    let dir = deltagrad::config::artifacts_dir().expect("make artifacts");
+    let specs = deltagrad::config::parse_manifest(&dir.join("manifest.txt")).unwrap();
+    let spec = specs["small"].clone();
+    let cfg = small_cfg(BatchPolicy {
+        max_group: 8,
+        max_wait: Duration::from_millis(150),
+        ..BatchPolicy::default()
+    });
+    let hp_t = cfg.hp.t;
+    let svc = ServiceHandle::spawn(cfg).unwrap();
+    // k deletes, all inside the first staged chunk -> exactly one mask
+    // re-upload when the commit flips them
+    let k = 3usize;
+    let rxs: Vec<_> = (0..k)
+        .map(|i| svc.update_async(Edit::delete_row(i)).unwrap())
+        .collect();
+    for rx in rxs {
+        let rep = rx.recv().unwrap().unwrap();
+        assert_eq!(rep.group_size, k, "test assumes one group commit");
+    }
+    let m = svc.metrics().unwrap();
+    let delta_groups = k.div_ceil(spec.chunk_small);
+    let touched_chunks = 1; // rows 0..k live in staged chunk 0 (k << chunk)
+    assert!(k < spec.chunk, "victims must share one chunk for this budget");
+    let expected = (3 * delta_groups + hp_t + touched_chunks) as u64;
+    assert_eq!(
+        m.uploads, expected,
+        "committed group upload budget changed: got {}, expected \
+         3*{delta_groups} + {hp_t} + {touched_chunks}",
+        m.uploads
+    );
+    // exactly one pass-worth of executions was recorded
+    assert_eq!(m.groups, 1);
+    svc.shutdown().unwrap();
+}
+
+#[test]
 fn rejects_double_delete_but_keeps_serving() {
     let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
         max_group: 1,
         max_wait: Duration::from_millis(1),
+        ..BatchPolicy::default()
     }))
     .unwrap();
-    svc.update(Request::Delete(0)).unwrap();
-    let err = svc.update(Request::Delete(0));
-    assert!(err.is_err(), "double delete must be rejected");
+    svc.update(Edit::delete_row(0)).unwrap();
+    let err = svc.update(Edit::delete_row(0));
+    match err {
+        Err(Rejected::Failed(msg)) => assert!(msg.contains("already deleted"), "{msg}"),
+        other => panic!("double delete must be rejected as Failed, got {other:?}"),
+    }
     // the service must still be healthy
-    let rep = svc.update(Request::Delete(1)).unwrap();
+    let rep = svc.update(Edit::delete_row(1)).unwrap();
     assert!(rep.version >= 2);
     svc.shutdown().unwrap();
 }
@@ -103,16 +156,42 @@ fn addition_requests_grow_the_dataset() {
     let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
         max_group: 1,
         max_wait: Duration::from_millis(1),
+        ..BatchPolicy::default()
     }))
     .unwrap();
     let snap0 = svc.snapshot().unwrap();
     // fabricate a plausible sample: zeros with bias column
-    let da = snap0.w.len() / 3; // small: k=3
+    let k = 3; // small: k=3
+    let da = snap0.w.len() / k;
     let mut x = vec![0.0f32; da];
     x[da - 1] = 1.0;
-    let rep = svc.update(Request::Add(x, 1)).unwrap();
+    let rep = svc.update(Edit::add_row(x, 1, k)).unwrap();
     assert_eq!(rep.version, 1);
     let snap = svc.snapshot().unwrap();
     assert_eq!(snap.n_train, 513);
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.adds, 1);
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn queue_full_rejections_are_typed() {
+    // direct check of the typed error surface (the property test in
+    // batcher.rs covers the bound itself): max_queue = 0 rejects every
+    // arrival deterministically, without touching the worker's session
+    let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
+        max_group: 8,
+        max_wait: Duration::from_millis(5),
+        max_queue: 0,
+    }))
+    .unwrap();
+    match svc.update(Edit::delete_row(0)) {
+        Err(Rejected::QueueFull { max_queue }) => assert_eq!(max_queue, 0),
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    // snapshot still served; nothing was committed
+    let snap = svc.snapshot().unwrap();
+    assert_eq!(snap.version, 0);
+    assert_eq!(snap.n_train, 512);
     svc.shutdown().unwrap();
 }

@@ -1,0 +1,258 @@
+//! Session API equivalence tests (requires `make artifacts`).
+//!
+//! The Session redesign claims preview/commit are pure API re-plumbing
+//! over the pinned algorithm cores: same floats in, same floats out.
+//! These tests pin that down:
+//!  * `preview` of a Delete edit is BITWISE identical to the old
+//!    `delete_gd` free function on the seed workload;
+//!  * `commit` is BITWISE identical to the pre-redesign
+//!    `OnlineState::apply_group` loop (kept as a seed-shape reference in
+//!    `testing::baseline`), including the rewritten trajectory;
+//!  * interleaved previews from one base perturb neither each other nor
+//!    the committed state;
+//!  * GD vs SGD auto-selection follows `hp.batch`, and the SGD preview
+//!    matches the old `delete_sgd`;
+//!  * the per-pass upload budget of the staged-context layer holds
+//!    through the new API (preview pays no base re-staging).
+
+#![allow(deprecated)]
+
+use deltagrad::config::HyperParams;
+use deltagrad::data::{sample_removal, synth, IndexSet};
+use deltagrad::deltagrad::batch;
+use deltagrad::runtime::Engine;
+use deltagrad::session::{Edit, PassMode, SessionBuilder};
+use deltagrad::util::Rng;
+
+fn engine() -> Engine {
+    Engine::open_default().expect("run `make artifacts` first")
+}
+
+fn small_hp() -> HyperParams {
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 40;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    hp
+}
+
+#[test]
+fn preview_bitwise_matches_delete_gd() {
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 3, Some(640), Some(64));
+    let hp = small_hp();
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    let exes = eng.model("small").unwrap();
+    let removed = sample_removal(&mut Rng::new(5), ds.n, 10);
+
+    let old = batch::delete_gd(&exes, &eng.rt, &ds, session.trajectory(), &hp, &removed).unwrap();
+    let pv = session.preview(&Edit::Delete(removed)).unwrap();
+    assert_eq!(pv.mode, PassMode::Gd);
+    assert_eq!(pv.out.w, old.w, "session preview drifted from delete_gd");
+    assert_eq!(pv.out.n_exact, old.n_exact);
+    assert_eq!(pv.out.n_approx, old.n_approx);
+}
+
+#[test]
+fn preview_add_bitwise_matches_add_gd() {
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 11, Some(640), Some(64));
+    let hp = small_hp();
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    let exes = eng.model("small").unwrap();
+    let added = synth::addition_rows(&spec, 23, 8);
+
+    let old = batch::add_gd(&exes, &eng.rt, &ds, session.trajectory(), &hp, &added).unwrap();
+    let pv = session.preview(&Edit::Add(added)).unwrap();
+    assert_eq!(pv.out.w, old.w, "session add preview drifted from add_gd");
+}
+
+#[test]
+fn commit_bitwise_matches_old_apply_group() {
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 7, Some(640), Some(64));
+    let hp = small_hp();
+    let mut session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    let exes = eng.model("small").unwrap();
+
+    // mixed group: three deletes + one addition, exactly one pass
+    let adds = synth::addition_rows(&spec, 9, 1);
+    let del_rows = vec![4usize, 17, 130];
+    let (w_ref, traj_ref) = deltagrad::testing::baseline::online_group_seed_shape(
+        &exes,
+        &eng.rt,
+        &ds,
+        session.trajectory(),
+        &hp,
+        &del_rows,
+        &adds,
+    )
+    .unwrap();
+
+    let edit = Edit::group(vec![
+        Edit::Delete(IndexSet::from_vec(del_rows.clone())),
+        Edit::Add(adds),
+    ]);
+    let c = session.commit(edit).unwrap();
+    assert_eq!(c.version, 1);
+    assert_eq!(c.out.w, w_ref, "commit drifted from the old apply_group loop");
+    assert_eq!(session.w(), &w_ref[..]);
+    for t in 0..hp.t {
+        assert_eq!(
+            session.trajectory().ws[t], traj_ref.ws[t],
+            "rewritten w cache drifted at iteration {t}"
+        );
+        assert_eq!(
+            session.trajectory().gs[t], traj_ref.gs[t],
+            "rewritten g cache drifted at iteration {t}"
+        );
+    }
+    assert_eq!(session.n_current(), ds.n - 3 + 1);
+}
+
+#[test]
+fn interleaved_previews_are_independent_and_commit_free() {
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 13, Some(640), Some(64));
+    let session = SessionBuilder::new("small")
+        .hyper_params(small_hp())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    let w0 = session.w().to_vec();
+    let e1 = Edit::Delete(sample_removal(&mut Rng::new(1), ds.n, 7));
+    let e2 = Edit::Delete(sample_removal(&mut Rng::new(2), ds.n, 13));
+
+    // interleave: e1, e2, e1 again, e2 again — repeats must be bitwise
+    // stable (no hidden state leaks between speculative passes)
+    let p1a = session.preview(&e1).unwrap();
+    let p2a = session.preview(&e2).unwrap();
+    let p1b = session.preview(&e1).unwrap();
+    let p2b = session.preview(&e2).unwrap();
+    assert_eq!(p1a.out.w, p1b.out.w, "repeated preview of e1 drifted");
+    assert_eq!(p2a.out.w, p2b.out.w, "repeated preview of e2 drifted");
+    assert_ne!(p1a.out.w, p2a.out.w, "distinct edits must differ");
+
+    // and none of it committed anything
+    assert_eq!(session.version(), 0);
+    assert_eq!(session.w(), &w0[..]);
+    assert_eq!(session.n_current(), ds.n);
+    assert!(session.removed().is_empty());
+    let stats = session.stats();
+    assert_eq!(stats.previews, 4);
+    assert_eq!(stats.commits, 0);
+    assert_eq!(stats.commit_transfers.uploads, 0);
+}
+
+#[test]
+fn previews_after_commit_run_against_committed_state() {
+    // a preview between commits must see the committed base (masked
+    // rows + rewritten trajectory), and committing after previews must
+    // be unaffected by them
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 19, Some(640), Some(64));
+    let hp = small_hp();
+    let mut s_plain = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test.clone())
+        .build_in(&mut eng)
+        .unwrap();
+    let mut s_previewed = s_plain.fork().unwrap();
+
+    // session B runs speculative work first; both then commit the same edit
+    let probe = Edit::Delete(sample_removal(&mut Rng::new(3), ds.n, 5));
+    s_previewed.preview(&probe).unwrap();
+    let edit = Edit::Delete(IndexSet::from_vec(vec![2, 40]));
+    let c_plain = s_plain.commit(edit.clone()).unwrap();
+    let c_previewed = s_previewed.commit(edit).unwrap();
+    assert_eq!(
+        c_plain.out.w, c_previewed.out.w,
+        "speculative previews leaked into the committed state"
+    );
+
+    // previewing a deleted row must now be rejected
+    assert!(s_plain.preview(&Edit::delete_row(2)).is_err());
+    // and a fresh preview runs against n_current = n - 2
+    let pv = s_plain.preview(&Edit::delete_row(3)).unwrap();
+    assert!(pv.out.n_exact > 0);
+}
+
+#[test]
+fn auto_mode_selection_follows_batch_schedule() {
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 21, Some(640), Some(64));
+
+    // GD trajectory -> Gd mode
+    let gd = SessionBuilder::new("small")
+        .hyper_params(small_hp())
+        .datasets(ds.clone(), test.clone())
+        .build_in(&mut eng)
+        .unwrap();
+    assert_eq!(gd.mode(), PassMode::Gd);
+    assert!(gd.trajectory().batches.iter().all(|b| b.is_empty()));
+
+    // SGD trajectory -> Sgd mode, bitwise-equal to the old delete_sgd
+    let mut hp = small_hp();
+    hp.batch = 512;
+    let sgd = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    assert_eq!(sgd.mode(), PassMode::Sgd);
+    assert!(sgd.trajectory().batches.iter().all(|b| !b.is_empty()));
+    let exes = eng.model("small").unwrap();
+    let removed = sample_removal(&mut Rng::new(21), ds.n, 10);
+    let old = batch::delete_sgd(&exes, &eng.rt, &ds, sgd.trajectory(), &hp, &removed).unwrap();
+    let pv = sgd.preview(&Edit::Delete(removed)).unwrap();
+    assert_eq!(pv.mode, PassMode::Sgd);
+    assert_eq!(pv.out.w, old.w, "SGD preview drifted from delete_sgd");
+
+    // SGD sessions are preview-only
+    let mut sgd = sgd;
+    assert!(sgd.commit(Edit::delete_row(0)).is_err());
+}
+
+#[test]
+fn preview_upload_budget_pays_no_base_restaging() {
+    // the session's base is resident: a preview ships only the delta
+    // rows (3 buffers per chunk_small group) + one parameter upload per
+    // iteration — the tests/staging.rs budget with the dataset term gone
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 9, Some(640), Some(64));
+    let hp = small_hp();
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    let removed = sample_removal(&mut Rng::new(2), ds.n, 10);
+    let pv = session.preview(&Edit::Delete(removed.clone())).unwrap();
+    let delta_groups = removed.len().div_ceil(spec.chunk_small);
+    assert_eq!(
+        pv.out.transfers.uploads,
+        (3 * delta_groups + hp.t) as u64,
+        "preview upload schedule changed"
+    );
+    let stats = session.stats();
+    assert_eq!(stats.preview_transfers.uploads, pv.out.transfers.uploads);
+}

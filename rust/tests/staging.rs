@@ -9,6 +9,12 @@
 //!    reproduction of the seed per-iteration-upload loop;
 //!  * the per-pass upload counters prove delta rows ship once per PASS
 //!    and parameters once per ITERATION.
+//!
+//! The free functions under test are deprecated shims over the Session
+//! API now; these pins intentionally keep exercising them for one
+//! release (tests/session.rs pins the Session path against them).
+
+#![allow(deprecated)]
 
 use deltagrad::config::HyperParams;
 use deltagrad::data::{sample_removal, synth, IndexSet};
