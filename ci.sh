@@ -6,9 +6,12 @@
 #   2. cargo test -q                      (tier-1; artifact tests need `make artifacts`)
 #   3. cargo clippy --all-targets -- -D warnings
 #   4. cargo bench --bench micro -- --json BENCH_micro.json
-# then asserts the bench JSON was produced, so upload-count regressions
-# (the staging discipline of rust/docs/PERFORMANCE.md) fail loudly in
-# review instead of silently drifting.
+#   5. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
+#      snapshot (tools/bench_diff.py) — fails on >10% mean regression of
+#      the staged paths
+# then asserts the bench JSON was produced, so upload/download-count
+# regressions (the staging discipline of rust/docs/PERFORMANCE.md) fail
+# loudly in review instead of silently drifting.
 #
 # Requires a Rust toolchain + the xla PJRT binding. In containers
 # without one (see .claude/skills/verify/SKILL.md) this script reports
@@ -44,4 +47,18 @@ if [ ! -s BENCH_micro.json ]; then
     echo "ci.sh FAIL: bench did not write BENCH_micro.json (upload-count tracking broken)" >&2
     exit 1
 fi
+
+echo "== ci: bench-diff vs committed snapshot =="
+if [ -f BENCH_baseline.json ]; then
+    if command -v python3 >/dev/null 2>&1; then
+        python3 "$root/tools/bench_diff.py" BENCH_baseline.json BENCH_micro.json \
+            --max-regress 0.10
+    else
+        echo "ci.sh: python3 unavailable; skipping bench-diff" >&2
+    fi
+else
+    echo "ci.sh: no rust/BENCH_baseline.json snapshot committed yet; seed it with:"
+    echo "    cp rust/BENCH_micro.json rust/BENCH_baseline.json"
+fi
+
 echo "== ci: OK (bench counters in rust/BENCH_micro.json) =="

@@ -42,4 +42,14 @@ CONFIGS = {
                     n_test=256),
 }
 
-ENTRIES = ("grad", "grad_small", "hvp", "lbfgs")
+ENTRIES = (
+    "grad", "grad_small", "hvp", "lbfgs",
+    "grad_acc", "grad_small_acc", "hvp_acc",
+)
+
+# Entries lowered WITHOUT the root tuple wrapper. Their single array
+# output comes back from PJRT as a plain device buffer, so the Rust side
+# can thread it straight into the next execution (the fused multi-chunk
+# reduction: per-chunk partials accumulate on device and only the final
+# sum is downloaded). Tupled roots cannot be chained this way.
+UNTUPLED_ENTRIES = ("grad_acc", "grad_small_acc", "hvp_acc")

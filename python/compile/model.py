@@ -3,10 +3,20 @@
 Each dataset configuration (``configs.py``) gets a family of fixed-shape
 entry points which ``aot.py`` lowers to HLO text for the Rust runtime:
 
-  grad        (w, x[C,da], y[C,k], mask[C]) -> (g[p], stats[4])
-  grad_small  same at the small chunk size (removed-set / online terms)
-  hvp         (w, v, x[Cs,da], mask)        -> hv[p]     (exact Hessian.v)
-  lbfgs       (dws[m,p], dgs[m,p], v[p])    -> bv[p]     (quasi-Hessian.v)
+  grad           (w, x[C,da], y[C,k], mask[C]) -> (g[p], stats[4])
+  grad_small     same at the small chunk size (removed-set / online terms)
+  hvp            (w, v, x[Cs,da], mask)        -> hv[p]  (exact Hessian.v)
+  lbfgs          (dws[m,p], dgs[m,p], v[p])    -> bv[p]  (quasi-Hessian.v)
+  grad_acc       (w, x, y, mask, acc[p+4])     -> acc + [g ; stats]
+  grad_small_acc same at the small chunk size
+  hvp_acc        (w, v, x, mask, acc[p])       -> acc + hv
+
+The ``*_acc`` variants are the fused multi-chunk reduction: the Rust
+runtime chains the accumulator output of chunk i into the accumulator
+input of chunk i+1, so a full multi-chunk gradient (or HVP) downloads
+ONE p(+4)-sized result instead of one literal per chunk. They are
+lowered UNTUPLED (configs.UNTUPLED_ENTRIES) so the output is a plain
+device buffer the next execution can consume.
 
 ``stats = [loss_sum, correct, cnt, gnorm2]``. All gradients are masked
 SUMS (not means) including the per-sample L2 term, i.e. the artifact
@@ -156,6 +166,31 @@ def lbfgs_entry(dws, dgs, v, *, use_pallas=True):
 
 
 # ---------------------------------------------------------------------------
+# fused-reduction (accumulator) wrappers
+
+
+def acc_grad_entry(grad_fn):
+    """Wrap a ``(w, x, y, mask) -> (g, stats)`` entry into the chainable
+    accumulator form ``(w, x, y, mask, acc[p+4]) -> acc + [g ; stats]``."""
+
+    def fn(w, x, y, mask, acc):
+        g, stats = grad_fn(w, x, y, mask)
+        return acc + jnp.concatenate([g, stats])
+
+    return fn
+
+
+def acc_hvp_entry(hvp_fn):
+    """Wrap a ``(w, v, x, mask) -> hv`` entry into the chainable
+    accumulator form ``(w, v, x, mask, acc[p]) -> acc + hv``."""
+
+    def fn(w, v, x, mask, acc):
+        return acc + hvp_fn(w, v, x, mask)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # entry-point table used by aot.py
 
 
@@ -215,9 +250,16 @@ def build_entries(cfg, use_pallas=True):
     def lbfgs_fn(dws, dgs, v):
         return lbfgs_entry(dws, dgs, v, use_pallas=use_pallas)
 
+    accspec = jax.ShapeDtypeStruct((p + 4,), f32)
+    grad_acc_fn = acc_grad_entry(grad_fn)
+    hvp_acc_fn = acc_hvp_entry(hvp_fn)
+
     return {
         "grad": (grad_fn, (wspec, *shapes(c))),
         "grad_small": (grad_fn, (wspec, *shapes(cs))),
         "hvp": (hvp_fn, (wspec, wspec, *shapes_no_y(cs))),
         "lbfgs": (lbfgs_fn, (hist, hist, wspec)),
+        "grad_acc": (grad_acc_fn, (wspec, *shapes(c), accspec)),
+        "grad_small_acc": (grad_acc_fn, (wspec, *shapes(cs), accspec)),
+        "hvp_acc": (hvp_acc_fn, (wspec, wspec, *shapes_no_y(cs), wspec)),
     }, p

@@ -7,7 +7,7 @@ import jax
 import pytest
 
 from compile import aot
-from compile.configs import CONFIGS, ENTRIES
+from compile.configs import CONFIGS, ENTRIES, UNTUPLED_ENTRIES
 from compile.model import build_entries
 
 
@@ -32,11 +32,41 @@ class TestLowering:
             assert "custom-call" not in text, f"{name}_{entry} has a custom-call"
 
     def test_entry_names_match_contract(self):
-        assert set(ENTRIES) == {"grad", "grad_small", "hvp", "lbfgs"}
+        assert set(ENTRIES) == {
+            "grad", "grad_small", "hvp", "lbfgs",
+            "grad_acc", "grad_small_acc", "hvp_acc",
+        }
+        assert set(UNTUPLED_ENTRIES) <= set(ENTRIES)
         for name, cfg in CONFIGS.items():
             entries, p = build_entries(cfg)
             assert set(entries) == set(ENTRIES), name
             assert p > 0
+
+    @pytest.mark.parametrize("name", ["small", "smallnn"])
+    def test_acc_entries_lower_untupled(self, name):
+        # the accumulator entries must have a PLAIN array root (no tuple
+        # wrapper): the Rust runtime chains their output buffer into the
+        # next execution, which a tuple-typed buffer cannot do
+        cfg = CONFIGS[name]
+        entries, _ = build_entries(cfg)
+        for entry in UNTUPLED_ENTRIES:
+            fn, shapes = entries[entry]
+            text = aot.to_hlo_text(jax.jit(fn).lower(*shapes),
+                                   return_tuple=False)
+            # only the ENTRY computation's root matters (nested reduce /
+            # while bodies legitimately have tuple roots)
+            root = None
+            in_entry = False
+            for line in text.splitlines():
+                if line.startswith("ENTRY "):
+                    in_entry = True
+                elif in_entry and "ROOT" in line:
+                    root = line
+                elif in_entry and line.startswith("}"):
+                    break
+            assert root is not None, f"{name}_{entry}: no ENTRY ROOT found"
+            assert " = (" not in root, \
+                f"{name}_{entry} entry root is a tuple: {root.strip()}"
 
     def test_param_counts_consistent_with_manifest_formula(self):
         for name, cfg in CONFIGS.items():

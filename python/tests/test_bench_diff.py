@@ -1,0 +1,102 @@
+"""Unit tests for tools/bench_diff.py (the ci.sh bench-diff gate)."""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_diff",
+    os.path.join(os.path.dirname(__file__), "..", "..", "tools",
+                 "bench_diff.py"),
+)
+bench_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_diff)
+
+
+def entry(mean_ms):
+    return {"mean_ms": mean_ms, "std_ms": 0.1, "reps": 5,
+            "uploads_per_rep": 1.0, "upload_floats_per_rep": 10.0,
+            "execs_per_rep": 1.0, "downloads_per_rep": 1.0,
+            "download_floats_per_rep": 10.0}
+
+
+STAGED = "batch-delete session.preview (resident base)"
+BEFORE = "batch-delete (per-iteration re-upload shape)"
+
+
+class TestCompare:
+    def test_no_regression_passes(self):
+        base = {STAGED: entry(10.0), BEFORE: entry(30.0)}
+        new = {STAGED: entry(10.5), BEFORE: entry(31.0)}
+        _, regressions, missing = bench_diff.compare(base, new, 0.10)
+        assert regressions == []
+        assert missing == []
+
+    def test_staged_regression_fails(self):
+        base = {STAGED: entry(10.0)}
+        new = {STAGED: entry(11.5)}  # +15% > 10%
+        _, regressions, _ = bench_diff.compare(base, new, 0.10)
+        assert len(regressions) == 1
+        assert regressions[0][0] == STAGED
+
+    def test_seed_shape_regression_is_not_gated(self):
+        # the "before" benches exist for contrast, they never gate
+        base = {BEFORE: entry(10.0)}
+        new = {BEFORE: entry(50.0)}
+        _, regressions, _ = bench_diff.compare(base, new, 0.10)
+        assert regressions == []
+
+    def test_missing_staged_bench_is_reported_not_fatal(self):
+        base = {STAGED: entry(10.0), BEFORE: entry(30.0)}
+        new = {BEFORE: entry(30.0)}
+        _, regressions, missing = bench_diff.compare(base, new, 0.10)
+        assert regressions == []
+        assert missing == [STAGED]
+
+    def test_improvement_passes(self):
+        base = {STAGED: entry(10.0)}
+        new = {STAGED: entry(5.0)}
+        _, regressions, _ = bench_diff.compare(base, new, 0.10)
+        assert regressions == []
+
+    def test_marker_classification(self):
+        assert bench_diff.is_staged("sgd-delete session.preview (resident masks)")
+        assert bench_diff.is_staged("mnist/delta rows staged reuse x10 (after shape)")
+        assert not bench_diff.is_staged("sgd-delete (minibatch gather shape)")
+        assert not bench_diff.is_staged("mnist/upload w (param literal)")
+
+
+class TestMain:
+    def _write(self, tmp_path, name, data):
+        p = tmp_path / name
+        p.write_text(json.dumps(data))
+        return str(p)
+
+    def test_exit_zero_on_ok(self, tmp_path):
+        b = self._write(tmp_path, "b.json", {STAGED: entry(10.0)})
+        n = self._write(tmp_path, "n.json", {STAGED: entry(10.2)})
+        assert bench_diff.main([b, n]) == 0
+
+    def test_exit_one_on_regression(self, tmp_path):
+        b = self._write(tmp_path, "b.json", {STAGED: entry(10.0)})
+        n = self._write(tmp_path, "n.json", {STAGED: entry(20.0)})
+        assert bench_diff.main([b, n]) == 1
+
+    def test_threshold_flag(self, tmp_path):
+        b = self._write(tmp_path, "b.json", {STAGED: entry(10.0)})
+        n = self._write(tmp_path, "n.json", {STAGED: entry(14.0)})
+        assert bench_diff.main([b, n, "--max-regress", "0.5"]) == 0
+        assert bench_diff.main([b, n, "--max-regress", "0.1"]) == 1
+
+    def test_exit_two_on_bad_input(self, tmp_path):
+        n = self._write(tmp_path, "n.json", {STAGED: entry(10.0)})
+        assert bench_diff.main([str(tmp_path / "absent.json"), n]) == 2
+        bad = tmp_path / "bad.json"
+        bad.write_text("{not json")
+        assert bench_diff.main([str(bad), n]) == 2
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -124,15 +124,61 @@ class TestMlpEntry:
         np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
 
 
+class TestAccEntries:
+    """The fused-reduction wrappers: chaining the accumulator across
+    chunks must equal summing the per-chunk results."""
+
+    def test_grad_acc_chain_matches_per_chunk_sum(self):
+        (w, x1, y1, m1), da, k = lr_case(10, c=64, d=8, k=3)
+        (_, x2, y2, m2), _, _ = lr_case(11, c=64, d=8, k=3)
+
+        def grad_fn(w, x, y, mask):
+            return model.lr_grad_entry(w, x, y, mask, da=da, k=k, lam=5e-3,
+                                       use_pallas=False)
+
+        acc_fn = model.acc_grad_entry(grad_fn)
+        p = w.shape[0]
+        acc0 = jnp.zeros((p + 4,), jnp.float32)
+        acc1 = acc_fn(w, x1, y1, m1, acc0)
+        acc2 = acc_fn(w, x2, y2, m2, acc1)
+        g1, s1 = grad_fn(w, x1, y1, m1)
+        g2, s2 = grad_fn(w, x2, y2, m2)
+        want = jnp.concatenate([g1, s1]) + jnp.concatenate([g2, s2])
+        np.testing.assert_allclose(np.asarray(acc2), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_hvp_acc_chain_matches_sum(self):
+        (w, x, _y, mask), da, k = lr_case(12, c=64, d=6, k=3)
+        rng = np.random.default_rng(13)
+        v = jnp.array(rng.normal(size=w.shape), jnp.float32)
+
+        def hvp_fn(w, v, x, mask):
+            return model.lr_hvp_entry(w, v, x, mask, da=da, k=k, lam=5e-3)
+
+        acc_fn = model.acc_hvp_entry(hvp_fn)
+        acc0 = jnp.zeros_like(w)
+        acc1 = acc_fn(w, v, x, mask, acc0)
+        acc2 = acc_fn(w, v, x, mask, acc1)
+        hv = hvp_fn(w, v, x, mask)
+        np.testing.assert_allclose(np.asarray(acc2), np.asarray(2.0 * hv),
+                                   rtol=1e-5, atol=1e-5)
+
+
 class TestBuildEntries:
     @pytest.mark.parametrize("name", ["small", "smallnn"])
     def test_entries_trace(self, name):
         cfg = CONFIGS[name]
         entries, p = model.build_entries(cfg)
-        assert set(entries) == {"grad", "grad_small", "hvp", "lbfgs"}
+        assert set(entries) == {
+            "grad", "grad_small", "hvp", "lbfgs",
+            "grad_acc", "grad_small_acc", "hvp_acc",
+        }
         fn, shapes = entries["grad"]
         lowered = jax.jit(fn).lower(*shapes)
         assert lowered is not None
+        fn, shapes = entries["grad_acc"]
+        assert shapes[-1].shape == (p + 4,)
+        assert jax.jit(fn).lower(*shapes) is not None
         assert p > 0
 
     def test_param_counts(self):

@@ -5,10 +5,11 @@
 //! is made of: full-gradient chunk execution, removed-set gradient in
 //! both the seed per-iteration-re-upload shape and the staged-context
 //! shape, host vs artifact L-BFGS B·v, parameter upload, the pure vector
-//! step arithmetic, and end-to-end batch-delete / online passes. Every
-//! bench reports mean ± std AND per-repetition device traffic (uploads /
-//! executions), so the staging discipline of docs/PERFORMANCE.md is
-//! visible in numbers.
+//! step arithmetic, and end-to-end batch-delete / sgd-delete (gather vs
+//! resident-mask) / online passes. Every bench reports mean ± std AND
+//! per-repetition device traffic (uploads / executions / result
+//! downloads), so the staging discipline AND the fused-reduction
+//! download budget of docs/PERFORMANCE.md are visible in numbers.
 //!
 //! `--json <path>` additionally writes the results as JSON
 //! (default path BENCH_micro.json) so the perf trajectory is
@@ -31,6 +32,8 @@ struct BenchResult {
     uploads_per_rep: f64,
     upload_floats_per_rep: f64,
     execs_per_rep: f64,
+    downloads_per_rep: f64,
+    download_floats_per_rep: f64,
 }
 
 fn bench<F: FnMut() -> anyhow::Result<()>>(
@@ -63,10 +66,13 @@ fn bench<F: FnMut() -> anyhow::Result<()>>(
         uploads_per_rep: tr.uploads as f64 / n,
         upload_floats_per_rep: tr.upload_floats as f64 / n,
         execs_per_rep: tr.execs as f64 / n,
+        downloads_per_rep: tr.downloads as f64 / n,
+        download_floats_per_rep: tr.download_floats as f64 / n,
     };
     println!(
-        "  {name:<52} {:>10.3} ms ± {:>7.3} ms  (n={reps}, uploads/rep={:.1}, execs/rep={:.1})",
-        res.mean_ms, res.std_ms, res.uploads_per_rep, res.execs_per_rep
+        "  {name:<52} {:>10.3} ms ± {:>7.3} ms  (n={reps}, uploads/rep={:.1}, \
+         execs/rep={:.1}, downloads/rep={:.1})",
+        res.mean_ms, res.std_ms, res.uploads_per_rep, res.execs_per_rep, res.downloads_per_rep
     );
     out.push(res);
     Ok(())
@@ -78,7 +84,8 @@ fn write_json(path: &str, results: &[BenchResult]) -> anyhow::Result<()> {
         s.push_str(&format!(
             "  \"{}\": {{\"mean_ms\": {:.6}, \"std_ms\": {:.6}, \"reps\": {}, \
              \"uploads_per_rep\": {:.2}, \"upload_floats_per_rep\": {:.1}, \
-             \"execs_per_rep\": {:.2}}}{}\n",
+             \"execs_per_rep\": {:.2}, \"downloads_per_rep\": {:.2}, \
+             \"download_floats_per_rep\": {:.1}}}{}\n",
             r.name,
             r.mean_ms,
             r.std_ms,
@@ -86,6 +93,8 @@ fn write_json(path: &str, results: &[BenchResult]) -> anyhow::Result<()> {
             r.uploads_per_rep,
             r.upload_floats_per_rep,
             r.execs_per_rep,
+            r.downloads_per_rep,
+            r.download_floats_per_rep,
             if i + 1 == results.len() { "" } else { "," }
         ));
     }
@@ -218,6 +227,37 @@ fn main() -> anyhow::Result<()> {
             .map(|_| ())
         })?;
         bench(out, &rt, "batch-delete session.preview (resident base)", 1, 5, || {
+            session.preview(&edit).map(|_| ())
+        })?;
+    }
+
+    if want("sgd-delete") {
+        println!("== sgd-delete end-to-end (small, T=40, B=512, r=16) ==");
+        let spec = eng.spec("small")?.clone();
+        let (ds, test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        hp.batch = 512;
+        let session = SessionBuilder::new("small")
+            .hyper_params(hp.clone())
+            .datasets(ds.clone(), test)
+            .build_in(&mut eng)?;
+        let exes = eng.model("small")?;
+        let removed = sample_removal(&mut Rng::new(13), ds.n, 16);
+        let edit = Edit::Delete(removed.clone());
+        let rt = eng.runtime();
+        let out = &mut results;
+        // the before/after pair of the resident-minibatch change: every
+        // exact iteration gathering + uploading the batch rows vs the
+        // multiplicity masks over the session's resident chunks
+        bench(out, &rt, "sgd-delete (minibatch gather shape)", 1, 5, || {
+            deltagrad::testing::baseline::delete_sgd_gather_shape(
+                &exes, &rt, &ds, session.trajectory(), &hp, &removed,
+            )
+            .map(|_| ())
+        })?;
+        bench(out, &rt, "sgd-delete session.preview (resident masks)", 1, 5, || {
             session.preview(&edit).map(|_| ())
         })?;
     }

@@ -34,10 +34,13 @@ fn main() -> anyhow::Result<()> {
     }
     let tr = ctx.eng.rt.counters.snapshot();
     println!(
-        "\ntotal: {total:.1}s   device traffic: {} uploads ({:.1} MB), {} execs",
+        "\ntotal: {total:.1}s   device traffic: {} uploads ({:.1} MB), {} execs, \
+         {} downloads ({:.1} MB)",
         tr.uploads,
         tr.upload_mb(),
-        tr.execs
+        tr.execs,
+        tr.downloads,
+        tr.download_mb()
     );
     Ok(())
 }

@@ -15,17 +15,17 @@ use crate::session::{Edit, Session};
 pub fn per_sample_losses(session: &Session, w: &[f32]) -> Result<Vec<f64>> {
     // Exact per-row losses need O(n) executions of the grad_small
     // artifact (its stats output is a masked SUM). What they do NOT need
-    // is O(n) data shipping: stage every row (and the parameters) once,
-    // then sweep a singleton mask across the resident buffers — each
-    // row's execution uploads only a chunk_small-float mask.
+    // is O(n) data shipping: the row view comes from the session's
+    // cross-pass cache (`base_row_view`), so repeated sweeps re-stage
+    // NOTHING — only the parameters ship, then a singleton mask per
+    // row's execution.
     let exes = session.exes();
     let rt = session.runtime();
-    let ds = session.train_dataset();
-    let all: Vec<usize> = (0..ds.n).collect();
-    let sr = exes.stage_rows(rt, ds, &all)?;
+    let n = session.train_dataset().n;
+    let sr = session.base_row_view()?;
     let ctx = exes.pass_ctx(rt, w)?;
-    let mut out = Vec::with_capacity(ds.n);
-    for i in 0..ds.n {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
         let (_, stats) = exes.grad_rows_subset(rt, &sr, &ctx, &[i])?;
         out.push(stats.loss_sum);
     }

@@ -23,10 +23,13 @@ pub struct Metrics {
     pub approx_iters: u64,
     pub fallback_iters: u64,
     /// device traffic of the served passes (see runtime::TransferStats):
-    /// host→device buffer uploads, f32s shipped, artifact executions
+    /// host→device buffer uploads, f32s shipped, artifact executions,
+    /// and device→host result downloads
     pub uploads: u64,
     pub upload_floats: u64,
     pub execs: u64,
+    pub downloads: u64,
+    pub download_floats: u64,
     latency_sum: f64,
     latency_max: f64,
     hist: [u64; 12],
@@ -73,6 +76,8 @@ impl Metrics {
         self.uploads += t.uploads;
         self.upload_floats += t.upload_floats;
         self.execs += t.execs;
+        self.downloads += t.downloads;
+        self.download_floats += t.download_floats;
     }
 
     /// Mean uploads per served group (the staging-discipline health
@@ -82,6 +87,16 @@ impl Metrics {
             0.0
         } else {
             self.uploads as f64 / self.groups as f64
+        }
+    }
+
+    /// Mean result downloads per served group (fused-reduction health
+    /// signal: ≈ T + exact-iteration full passes, not one per chunk).
+    pub fn downloads_per_group(&self) -> f64 {
+        if self.groups == 0 {
+            0.0
+        } else {
+            self.downloads as f64 / self.groups as f64
         }
     }
 
@@ -125,7 +140,8 @@ impl Metrics {
         format!(
             "requests={} groups={} mean_group={:.2} mean_lat={:.4}s p95<={:.3}s max={:.4}s \
              iters(exact/approx/fallback)={}/{}/{} \
-             device(uploads={} floats={} execs={} uploads/group={:.1})",
+             device(uploads={} floats={} execs={} downloads={} dl_floats={} \
+             uploads/group={:.1} downloads/group={:.1})",
             self.requests,
             self.groups,
             self.mean_group_size(),
@@ -138,7 +154,10 @@ impl Metrics {
             self.uploads,
             self.upload_floats,
             self.execs,
+            self.downloads,
+            self.download_floats,
             self.uploads_per_group(),
+            self.downloads_per_group(),
         )
     }
 }
@@ -172,13 +191,29 @@ mod tests {
     fn transfer_totals_accumulate() {
         let mut m = Metrics::new();
         m.record_group(1, &[Duration::from_millis(1)]);
-        m.record_transfers(&TransferStats { uploads: 41, upload_floats: 1000, execs: 50 });
+        m.record_transfers(&TransferStats {
+            uploads: 41,
+            upload_floats: 1000,
+            execs: 50,
+            downloads: 45,
+            download_floats: 3000,
+        });
         m.record_group(1, &[Duration::from_millis(1)]);
-        m.record_transfers(&TransferStats { uploads: 43, upload_floats: 1200, execs: 52 });
+        m.record_transfers(&TransferStats {
+            uploads: 43,
+            upload_floats: 1200,
+            execs: 52,
+            downloads: 47,
+            download_floats: 3200,
+        });
         assert_eq!(m.uploads, 84);
         assert_eq!(m.upload_floats, 2200);
         assert_eq!(m.execs, 102);
+        assert_eq!(m.downloads, 92);
+        assert_eq!(m.download_floats, 6200);
         assert!((m.uploads_per_group() - 42.0).abs() < 1e-9);
+        assert!((m.downloads_per_group() - 46.0).abs() < 1e-9);
+        assert!(m.render().contains("downloads=92"));
     }
 
     #[test]

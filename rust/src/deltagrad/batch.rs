@@ -15,17 +15,19 @@
 //! (§A.1.2), both of which the exact iteration computes anyway.
 //!
 //! Staging discipline (see runtime::engine): the delta rows are gathered
-//! and uploaded ONCE per retrain call (`StagedRows`), and each iteration
-//! uploads the parameter vector ONCE (`PassCtx`), shared by the
-//! delta-row and full-gradient executions. The pass's device traffic is
-//! reported in `RetrainOutput::transfers`.
+//! and uploaded ONCE per retrain call (`StagedRows`, or handed in
+//! pre-staged from the session's cross-pass row cache), each iteration
+//! uploads the parameter vector ONCE (`PassCtx`), and SGD exact
+//! iterations execute the minibatch against the RESIDENT staged dataset
+//! with a per-chunk multiplicity mask — no per-iteration row gather.
+//! The pass's device traffic is reported in `RetrainOutput::transfers`.
 
 use anyhow::{bail, Result};
 
 use crate::config::{HyperParams, ModelKind};
 use crate::data::{Dataset, IndexSet};
 use crate::lbfgs::History;
-use crate::runtime::engine::{ModelExes, StagedRows, Stats};
+use crate::runtime::engine::{ModelExes, Staged, StagedRows, Stats};
 use crate::runtime::Runtime;
 use crate::util::vecmath::{axpy, dot, sub};
 
@@ -57,15 +59,37 @@ pub(crate) enum Change<'a> {
     Add(&'a Dataset),
 }
 
-/// Algorithm-1 speculative pass, generalized for `session::Session`:
-/// `staged_reuse` is the (possibly removal-masked) resident base,
-/// `tail` the session's committed added rows (device-resident,
-/// append-only segments included in every exact full-gradient
-/// evaluation), and `n_current` the effective training-set size those
-/// two represent. The deprecated free functions below pass
-/// `None`/`&[]`/`None`, which reproduces the pre-Session behaviour
-/// bitwise.
-#[allow(clippy::too_many_arguments)]
+/// Pre-staged device resources a caller (the Session) can lend to a GD
+/// pass so it re-stages nothing it already holds. The deprecated free
+/// functions pass `Default::default()`, which reproduces the
+/// stage-everything-per-call behaviour bitwise.
+#[derive(Default)]
+pub(crate) struct GdResources<'a> {
+    /// the (possibly removal-masked) resident base dataset
+    pub staged_reuse: Option<&'a Staged>,
+    /// the session's committed added rows (device-resident, append-only
+    /// segments included in every exact full-gradient evaluation)
+    pub tail: &'a [StagedRows],
+    /// effective training-set size the base + tail represent
+    pub n_current: Option<f64>,
+    /// the pass's delta rows, pre-staged (session row cache). For
+    /// `Change::Delete` these must be the removal set's rows in sorted
+    /// order; never set for `Change::Add`.
+    pub sr_delta: Option<&'a StagedRows>,
+}
+
+/// Pre-staged device resources for an SGD deletion pass.
+#[derive(Default)]
+pub(crate) struct SgdResources<'a> {
+    /// the resident base dataset the minibatch multiplicity masks
+    /// execute against (masks are ignored: the §3 batch replays the
+    /// ORIGINAL rows, removals are subtracted separately)
+    pub staged_reuse: Option<&'a Staged>,
+    /// the removal set's rows, pre-staged (session row cache)
+    pub sr_rem: Option<&'a StagedRows>,
+}
+
+/// Algorithm-1 speculative pass, generalized for `session::Session`.
 pub(crate) fn run_gd(
     exes: &ModelExes,
     rt: &Runtime,
@@ -73,12 +97,10 @@ pub(crate) fn run_gd(
     traj: &Trajectory,
     hp: &HyperParams,
     change: Change<'_>,
-    staged_reuse: Option<&crate::runtime::engine::Staged>,
-    tail: &[StagedRows],
-    n_current: Option<f64>,
+    res: &GdResources<'_>,
 ) -> Result<RetrainOutput> {
     let spec = &exes.spec;
-    let n = n_current.unwrap_or(ds.n as f64);
+    let n = res.n_current.unwrap_or(ds.n as f64);
     if traj.ws.len() != hp.t + 1 || traj.gs.len() != hp.t {
         bail!(
             "trajectory length mismatch: ws={} gs={} hp.t={}",
@@ -101,20 +123,27 @@ pub(crate) fn run_gd(
     // delta-row term. Callers that issue many passes over the same data
     // (valuation, conformal, jackknife) pass a pre-staged handle.
     let staged_local;
-    let staged_full = match staged_reuse {
+    let staged_full = match res.staged_reuse {
         Some(s) => s,
         None => {
             staged_local = exes.stage(rt, ds, &IndexSet::empty())?;
             &staged_local
         }
     };
-    // delta rows staged once per retrain call, reused by all hp.t
-    // iterations (the per-iteration re-gather was the dominant upload)
-    let sr_delta = match &change {
-        Change::Delete(r) => exes.stage_rows(rt, ds, r.as_slice())?,
-        Change::Add(a) => {
-            let all: Vec<usize> = (0..a.n).collect();
-            exes.stage_rows(rt, a, &all)?
+    // delta rows staged once per retrain call (or fetched from the
+    // session's cross-pass row cache), reused by all hp.t iterations
+    let sr_local;
+    let sr_delta: &StagedRows = match res.sr_delta {
+        Some(sr) => sr,
+        None => {
+            sr_local = match &change {
+                Change::Delete(r) => exes.stage_rows(rt, ds, r.as_slice())?,
+                Change::Add(a) => {
+                    let all: Vec<usize> = (0..a.n).collect();
+                    exes.stage_rows(rt, a, &all)?
+                }
+            };
+            &sr_local
         }
     };
     let mut hist = History::new(hp.m);
@@ -156,19 +185,16 @@ pub(crate) fn run_gd(
         let ctx = exes.pass_ctx(rt, &w)?;
         // delta-row gradient sum at the current iterate (always exact,
         // always cheap: r ≪ n rows, already device-resident)
-        let (g_delta_sum, _) = exes.grad_rows_staged(rt, &sr_delta, &ctx)?;
+        let (g_delta_sum, _) = exes.grad_rows_staged(rt, sr_delta, &ctx)?;
 
         let step_scale = -(eta / n_new) as f32;
         if exact {
             n_exact += 1;
-            let (mut g_full_sum, mut stats) = exes.grad_staged_ctx(rt, staged_full, &ctx)?;
-            for sr in tail {
-                // committed added rows ride resident buffers; their grads
-                // join the full-data sum (no-op for the deprecated shims)
-                let (g_tail, s_tail) = exes.grad_rows_staged(rt, sr, &ctx)?;
-                axpy(1.0, &g_tail, &mut g_full_sum);
-                stats.accumulate(&s_tail);
-            }
+            // full-data gradient: resident base chunks + the committed
+            // tail segments, fused into one on-device reduction (a
+            // single result download; no-op tail for the shims)
+            let (g_full_sum, stats) =
+                exes.grad_staged_with_tail(rt, staged_full, res.tail, &ctx)?;
             last_stats = stats;
             // harvest Δw = w^I − w_t before stepping (owned, no scratch
             // clone)
@@ -230,7 +256,7 @@ pub fn delete_gd(
     hp: &HyperParams,
     removed: &IndexSet,
 ) -> Result<RetrainOutput> {
-    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), None, &[], None)
+    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), &GdResources::default())
 }
 
 /// `delete_gd` reusing a pre-staged dataset (many-pass callers:
@@ -246,7 +272,8 @@ pub fn delete_gd_staged(
     hp: &HyperParams,
     removed: &IndexSet,
 ) -> Result<RetrainOutput> {
-    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), Some(staged_full), &[], None)
+    let res = GdResources { staged_reuse: Some(staged_full), ..Default::default() };
+    run_gd(exes, rt, ds, traj, hp, Change::Delete(removed), &res)
 }
 
 /// Batch addition (GD mode): `added` rows join the training set.
@@ -260,18 +287,18 @@ pub fn add_gd(
     hp: &HyperParams,
     added: &Dataset,
 ) -> Result<RetrainOutput> {
-    run_gd(exes, rt, ds, traj, hp, Change::Add(added), None, &[], None)
+    run_gd(exes, rt, ds, traj, hp, Change::Add(added), &GdResources::default())
 }
 
 /// SGD batch deletion (§3, eq. S7). Requires the trajectory to carry the
 /// original minibatch schedule (`hp.batch > 0` when training).
 ///
 /// The removal set is staged once; per-iteration the removed∩minibatch
-/// term executes over the resident rows with a multiplicity mask (a
-/// sampled-with-replacement batch can hit a removed row twice), so only
-/// the tiny mask vector is uploaded. The full minibatch itself changes
-/// every iteration and is gathered per-iteration, sharing the
-/// iteration's parameter upload.
+/// term executes over the resident rows with a multiplicity mask. The
+/// full minibatch, which changes every iteration, ALSO executes against
+/// the resident staged dataset: only a `chunk`-float multiplicity mask
+/// per touched chunk is uploaded (sampled-with-replacement duplicates
+/// included), never the rows themselves.
 #[deprecated(note = "construct a deltagrad::session::Session and use \
                      preview with an Edit (see docs/API.md)")]
 pub fn delete_sgd(
@@ -282,11 +309,13 @@ pub fn delete_sgd(
     hp: &HyperParams,
     removed: &IndexSet,
 ) -> Result<RetrainOutput> {
-    run_sgd_delete(exes, rt, ds, traj, hp, removed)
+    run_sgd_delete(exes, rt, ds, traj, hp, removed, &SgdResources::default())
 }
 
 /// Core of [`delete_sgd`]; shared with `session::Session::preview` so the
-/// deprecated shim and the Session path stay bitwise identical.
+/// deprecated shim and the Session path stay bitwise identical. When
+/// `res.staged_reuse` is absent the base dataset is staged here, once
+/// per pass — still a per-pass, not per-iteration, cost.
 pub(crate) fn run_sgd_delete(
     exes: &ModelExes,
     rt: &Runtime,
@@ -294,6 +323,7 @@ pub(crate) fn run_sgd_delete(
     traj: &Trajectory,
     hp: &HyperParams,
     removed: &IndexSet,
+    res: &SgdResources<'_>,
 ) -> Result<RetrainOutput> {
     let spec = &exes.spec;
     if traj.ws.len() != hp.t + 1 || traj.gs.len() != hp.t || traj.batches.len() != hp.t {
@@ -311,7 +341,24 @@ pub(crate) fn run_sgd_delete(
     let t0 = std::time::Instant::now();
     let transfers0 = rt.counters.snapshot();
     let rem = removed.as_slice();
-    let sr_rem = exes.stage_rows(rt, ds, rem)?;
+    // the resident dataset the per-iteration multiplicity masks execute
+    // against (the ONLY minibatch bytes that ever ship per iteration)
+    let staged_local;
+    let staged_full = match res.staged_reuse {
+        Some(s) => s,
+        None => {
+            staged_local = exes.stage(rt, ds, &IndexSet::empty())?;
+            &staged_local
+        }
+    };
+    let sr_local;
+    let sr_rem: &StagedRows = match res.sr_rem {
+        Some(sr) => sr,
+        None => {
+            sr_local = exes.stage_rows(rt, ds, rem)?;
+            &sr_local
+        }
+    };
     let mut hist = History::new(hp.m);
     let mut w = traj.ws[0].clone();
     let mut dw = vec![0.0f32; spec.p];
@@ -362,14 +409,16 @@ pub(crate) fn run_sgd_delete(
         let (g_rem_sum, _) = if in_r.is_empty() {
             (vec![0.0f32; spec.p], Stats::default())
         } else {
-            exes.grad_rows_subset(rt, &sr_rem, &ctx, &in_r)?
+            exes.grad_rows_subset(rt, sr_rem, &ctx, &in_r)?
         };
 
         let step_scale = -(eta / b_new) as f32;
         if exact {
             n_exact += 1;
-            // full-minibatch gradient at w^I (needed for Δg anyway)
-            let (g_bt_sum, stats) = exes.grad_rows_gather_ctx(rt, ds, batch, &ctx)?;
+            // full-minibatch gradient at w^I (needed for Δg anyway) over
+            // the RESIDENT chunks: uploads are one multiplicity mask per
+            // touched chunk, O(⌈n/chunk⌉) small vectors, not O(b) rows
+            let (g_bt_sum, stats) = exes.grad_staged_subset(rt, staged_full, &ctx, batch)?;
             last_stats = stats;
             let dw_pair: Vec<f32> = w.iter().zip(wt).map(|(a, b)| a - b).collect();
             axpy(step_scale, &g_bt_sum, &mut w);

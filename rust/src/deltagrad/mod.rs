@@ -35,9 +35,10 @@ pub struct RetrainOutput {
     pub n_fallback: usize,
     /// stats of the last gradient evaluation (training loss view)
     pub last_stats: Stats,
-    /// device traffic of this pass (uploads / floats / executions);
-    /// with the staged-context layer the delta rows upload once per
-    /// PASS and the parameters once per ITERATION — see
+    /// device traffic of this pass (uploads / floats / executions /
+    /// result downloads); with the staged-context layer the delta rows
+    /// upload once per PASS, the parameters once per ITERATION, and the
+    /// fused reduction downloads one result per gradient CALL — see
     /// docs/PERFORMANCE.md
     pub transfers: TransferStats,
 }

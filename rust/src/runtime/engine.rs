@@ -7,7 +7,9 @@
 //! three layers:
 //!
 //! * [`Staged`] — a full dataset uploaded once (X / one-hot Y / mask per
-//!   chunk); per-request work only flips masks.
+//!   chunk); per-request work only flips masks, and per-iteration row
+//!   subsets (the SGD minibatch) execute against the resident chunks
+//!   with a multiplicity mask ([`ModelExes::grad_staged_subset`]).
 //! * [`StagedRows`] — a fixed row subset (the removed/added delta rows of
 //!   one retrain call) gathered + uploaded **once per retrain** and
 //!   reused across all `hp.t` iterations.
@@ -15,9 +17,14 @@
 //!   iteration** and shared between the delta-row gradient, the full
 //!   staged gradient, and HVP calls.
 //!
-//! All uploads/executions are tallied by `Runtime::counters`, so the
-//! once-per-pass / once-per-iteration invariants are testable
-//! (tests/staging.rs) and benchable (benches/micro.rs --json).
+//! Multi-chunk results use the **fused reduction**: each chunk executes
+//! the chainable `*_acc` artifact, threading an accumulator buffer from
+//! chunk to chunk so partials never leave the device — a gradient (or
+//! HVP) call performs exactly ONE result download regardless of chunk
+//! count. All uploads/executions/downloads are tallied by
+//! `Runtime::counters`, so the once-per-pass / once-per-iteration /
+//! once-per-call invariants are testable (tests/staging.rs) and
+//! benchable (benches/micro.rs --json).
 
 use std::collections::BTreeMap;
 
@@ -29,6 +36,13 @@ use crate::data::{Dataset, IndexSet};
 
 /// Masked-sum statistics returned by the grad artifacts:
 /// `[loss_sum, correct, cnt, gnorm2]`.
+///
+/// With the fused reduction these accumulate across chunks ON DEVICE in
+/// f32 (the gradient components always did); `correct`/`cnt` therefore
+/// count exactly only up to 2^24 (~16.7M) rows per call, and `loss_sum`
+/// carries f32 rounding across chunks. The pre-fusion code summed
+/// per-chunk stats in f64 on the host at the price of one download per
+/// chunk — see the PERFORMANCE.md gap entry before staging >16M rows.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Stats {
     pub loss_sum: f64,
@@ -73,12 +87,21 @@ impl Stats {
 }
 
 /// The compiled executables for one dataset family.
+///
+/// Only the chainable accumulator artifacts (`grad_acc` /
+/// `grad_small_acc` / `hvp_acc`) and the `lbfgs` artifact are loaded;
+/// the tupled per-chunk entries are still emitted by the AOT step for
+/// ablations and debugging but the hot path no longer touches them.
 pub struct ModelExes {
     pub spec: ModelSpec,
-    grad: xla::PjRtLoadedExecutable,
-    grad_small: xla::PjRtLoadedExecutable,
-    hvp: xla::PjRtLoadedExecutable,
+    grad_acc: xla::PjRtLoadedExecutable,
+    grad_small_acc: xla::PjRtLoadedExecutable,
+    hvp_acc: xla::PjRtLoadedExecutable,
     lbfgs: xla::PjRtLoadedExecutable,
+    /// resident `[p+4]` zero accumulator seeding every grad chain
+    acc0_grad: xla::PjRtBuffer,
+    /// resident `[p]` zero accumulator seeding every HVP chain
+    acc0_hvp: xla::PjRtBuffer,
 }
 
 /// One staged (device-resident) chunk of a dataset.
@@ -119,6 +142,14 @@ pub struct StagedRows {
     chunk: usize,
 }
 
+impl StagedRows {
+    /// Empty subset holding no device buffers (unit-test scaffolding).
+    #[cfg(test)]
+    pub(crate) fn empty_for_tests(n_rows: usize, chunk: usize) -> Self {
+        StagedRows { chunks: Vec::new(), n_rows, chunk }
+    }
+}
+
 /// One iteration's parameter vector, uploaded once and shared between
 /// every gradient / HVP call of that iteration. Only valid against the
 /// `ModelExes` that created it (the buffer has that spec's `p`).
@@ -127,15 +158,26 @@ pub struct PassCtx {
 }
 
 impl ModelExes {
-    /// Compile all four artifacts for `spec` from `dir`.
+    /// Compile the artifacts for `spec` from `dir` and stage the zero
+    /// accumulators that seed the fused reduction chains.
     pub fn load(rt: &Runtime, dir: &std::path::Path, spec: &ModelSpec) -> Result<Self> {
-        let load = |entry: &str| rt.load(&spec.artifact_path(dir, entry));
+        let load = |entry: &str| {
+            rt.load(&spec.artifact_path(dir, entry)).with_context(|| {
+                format!(
+                    "loading {entry:?} for config {}; fused artifacts require \
+                     re-running the AOT step (make artifacts)",
+                    spec.name
+                )
+            })
+        };
         Ok(ModelExes {
             spec: spec.clone(),
-            grad: load("grad")?,
-            grad_small: load("grad_small")?,
-            hvp: load("hvp")?,
+            grad_acc: load("grad_acc")?,
+            grad_small_acc: load("grad_small_acc")?,
+            hvp_acc: load("hvp_acc")?,
             lbfgs: load("lbfgs")?,
+            acc0_grad: rt.upload(&vec![0.0f32; spec.p + 4], &[spec.p + 4])?,
+            acc0_hvp: rt.upload(&vec![0.0f32; spec.p], &[spec.p])?,
         })
     }
 
@@ -248,25 +290,69 @@ impl ModelExes {
         Ok(reuploaded)
     }
 
-    /// Masked-SUM gradient over all staged chunks, sharing an uploaded
-    /// parameter buffer. Returns (sum of per-sample gradients incl.
-    /// per-sample L2, stats).
+    /// Split a downloaded `[g ; stats]` accumulator; `None` means no
+    /// chunk executed (empty subset: zero gradient, zero downloads).
+    fn finish_grad(
+        &self,
+        rt: &Runtime,
+        acc: Option<xla::PjRtBuffer>,
+    ) -> Result<(Vec<f32>, Stats)> {
+        let p = self.spec.p;
+        match acc {
+            None => Ok((vec![0.0f32; p], Stats::default())),
+            Some(buf) => {
+                let mut v = rt.download(&buf)?;
+                if v.len() != p + 4 {
+                    bail!("accumulator length {} != p+4 = {}", v.len(), p + 4);
+                }
+                let stats = Stats::from_vec(&v[p..]);
+                v.truncate(p);
+                Ok((v, stats))
+            }
+        }
+    }
+
+    /// Masked-SUM gradient over all staged chunks plus optional resident
+    /// row-segment tails (a session's committed additions), sharing an
+    /// uploaded parameter buffer. The whole multi-chunk reduction is
+    /// fused: partials chain through the `*_acc` artifacts on device and
+    /// ONE `[g ; stats]` result is downloaded. Returns (sum of
+    /// per-sample gradients incl. per-sample L2, stats).
+    pub fn grad_staged_with_tail(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        tail: &[StagedRows],
+        ctx: &PassCtx,
+    ) -> Result<(Vec<f32>, Stats)> {
+        let mut acc: Option<xla::PjRtBuffer> = None;
+        for sc in &staged.chunks {
+            let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+            acc = Some(rt.exec_buffer(
+                &self.grad_acc,
+                &[&ctx.wbuf, &sc.x, &sc.y, &sc.mask, prev],
+            )?);
+        }
+        for sr in tail {
+            for rc in &sr.chunks {
+                let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+                acc = Some(rt.exec_buffer(
+                    &self.grad_small_acc,
+                    &[&ctx.wbuf, &rc.x, &rc.y, &rc.mask, prev],
+                )?);
+            }
+        }
+        self.finish_grad(rt, acc)
+    }
+
+    /// [`Self::grad_staged_with_tail`] without a tail.
     pub fn grad_staged_ctx(
         &self,
         rt: &Runtime,
         staged: &Staged,
         ctx: &PassCtx,
     ) -> Result<(Vec<f32>, Stats)> {
-        let mut g = vec![0.0f32; self.spec.p];
-        let mut stats = Stats::default();
-        for sc in &staged.chunks {
-            let outs = rt.exec(&self.grad, &[&ctx.wbuf, &sc.x, &sc.y, &sc.mask])?;
-            let gc = literal_f32(&outs[0])?;
-            let sv = literal_f32(&outs[1])?;
-            crate::util::vecmath::axpy(1.0, &gc, &mut g);
-            stats.accumulate(&Stats::from_vec(&sv));
-        }
-        Ok((g, stats))
+        self.grad_staged_with_tail(rt, staged, &[], ctx)
     }
 
     /// Convenience: `grad_staged_ctx` with a one-off parameter upload.
@@ -280,33 +366,75 @@ impl ModelExes {
         self.grad_staged_ctx(rt, staged, &ctx)
     }
 
+    /// Masked-SUM gradient over a row *subset* of a staged dataset,
+    /// selected by ORIGINAL row index with multiplicity (an SGD batch
+    /// sampled with replacement can hit a row twice; the mask enters the
+    /// sums linearly, so multiplicity k rides a mask value of k). The
+    /// resident X/Y never re-ship: the only uploads are one
+    /// `chunk`-float multiplicity mask per *touched* chunk, and the
+    /// fused reduction downloads one result. This is the resident
+    /// minibatch path of the §3 SGD extension.
+    ///
+    /// The uploaded multiplicity mask REPLACES the chunk's resident
+    /// removal mask: a selected index contributes even if `staged` has
+    /// it masked out. That is exactly the §3 semantics (the replayed
+    /// batch is the ORIGINAL one; removals are subtracted separately),
+    /// but it means callers holding a removal-masked `Staged` must not
+    /// expect deletions to be honored here — `Session` guarantees this
+    /// by restricting SGD previews to pristine sessions.
+    pub fn grad_staged_subset(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        ctx: &PassCtx,
+        idxs: &[usize],
+    ) -> Result<(Vec<f32>, Stats)> {
+        let c = staged.chunk;
+        let mut masks: Vec<Option<Vec<f32>>> = vec![None; staged.chunks.len()];
+        for &i in idxs {
+            if i >= staged.n {
+                bail!("subset row {i} out of staged range {}", staged.n);
+            }
+            masks[i / c].get_or_insert_with(|| vec![0.0f32; c])[i % c] += 1.0;
+        }
+        let mut acc: Option<xla::PjRtBuffer> = None;
+        for (sc, counts) in staged.chunks.iter().zip(&masks) {
+            if let Some(counts) = counts {
+                let mb = rt.upload(counts, &[c])?;
+                let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+                acc = Some(rt.exec_buffer(
+                    &self.grad_acc,
+                    &[&ctx.wbuf, &sc.x, &sc.y, &mb, prev],
+                )?);
+            }
+        }
+        self.finish_grad(rt, acc)
+    }
+
     /// Masked-SUM gradient over pre-staged rows (the per-iteration hot
-    /// path: zero uploads beyond the shared `ctx`).
+    /// path: zero uploads beyond the shared `ctx`, one fused download).
     pub fn grad_rows_staged(
         &self,
         rt: &Runtime,
         sr: &StagedRows,
         ctx: &PassCtx,
     ) -> Result<(Vec<f32>, Stats)> {
-        let mut g = vec![0.0f32; self.spec.p];
-        let mut stats = Stats::default();
+        let mut acc: Option<xla::PjRtBuffer> = None;
         for rc in &sr.chunks {
-            let outs = rt.exec(&self.grad_small, &[&ctx.wbuf, &rc.x, &rc.y, &rc.mask])?;
-            let gc = literal_f32(&outs[0])?;
-            let sv = literal_f32(&outs[1])?;
-            crate::util::vecmath::axpy(1.0, &gc, &mut g);
-            stats.accumulate(&Stats::from_vec(&sv));
+            let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+            acc = Some(rt.exec_buffer(
+                &self.grad_small_acc,
+                &[&ctx.wbuf, &rc.x, &rc.y, &rc.mask, prev],
+            )?);
         }
-        Ok((g, stats))
+        self.finish_grad(rt, acc)
     }
 
     /// Masked-SUM gradient over a *subset* of pre-staged rows, selected
     /// by staged position (index into the `idxs` passed to
     /// [`Self::stage_rows`]). Only the tiny per-chunk mask vectors are
     /// re-uploaded; x/y stay resident. Repeated positions accumulate
-    /// multiplicity (an SGD minibatch can sample a row twice), since the
-    /// artifacts' mask enters the sums linearly. Chunks with no selected
-    /// row are skipped entirely.
+    /// multiplicity, and chunks with no selected row are skipped.
     pub fn grad_rows_subset(
         &self,
         rt: &Runtime,
@@ -316,8 +444,7 @@ impl ModelExes {
     ) -> Result<(Vec<f32>, Stats)> {
         let cs = sr.chunk;
         let mut counts: Vec<f32> = Vec::new();
-        let mut g = vec![0.0f32; self.spec.p];
-        let mut stats = Stats::default();
+        let mut acc: Option<xla::PjRtBuffer> = None;
         for (ci, rc) in sr.chunks.iter().enumerate() {
             let lo = ci * cs;
             let hi = lo + rc.rows;
@@ -334,13 +461,13 @@ impl ModelExes {
                 }
             }
             let mb = rt.upload(&counts, &[cs])?;
-            let outs = rt.exec(&self.grad_small, &[&ctx.wbuf, &rc.x, &rc.y, &mb])?;
-            let gc = literal_f32(&outs[0])?;
-            let sv = literal_f32(&outs[1])?;
-            crate::util::vecmath::axpy(1.0, &gc, &mut g);
-            stats.accumulate(&Stats::from_vec(&sv));
+            let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+            acc = Some(rt.exec_buffer(
+                &self.grad_small_acc,
+                &[&ctx.wbuf, &rc.x, &rc.y, &mb, prev],
+            )?);
         }
-        Ok((g, stats))
+        self.finish_grad(rt, acc)
     }
 
     /// Masked-SUM gradient over an explicit row subset: one-shot
@@ -357,9 +484,10 @@ impl ModelExes {
         self.grad_rows_gather_ctx(rt, ds, idxs, &ctx)
     }
 
-    /// One-shot row gather sharing an already-uploaded parameter buffer
-    /// (for per-iteration subsets that genuinely change every iteration,
-    /// e.g. the SGD minibatch).
+    /// One-shot row gather sharing an already-uploaded parameter buffer.
+    /// Kept as the gather-shaped reference (testing::baseline, benches);
+    /// per-iteration subsets of resident data should use
+    /// [`Self::grad_staged_subset`] instead.
     pub fn grad_rows_gather_ctx(
         &self,
         rt: &Runtime,
@@ -375,6 +503,7 @@ impl ModelExes {
     /// (The hvp artifact takes no labels: the softmax-CE Hessian is
     /// label-independent, so a y parameter would be pruned by XLA.)
     /// `v` changes per call and is uploaded here; `w` rides on `ctx`.
+    /// Chunk partials chain on device; ONE `[p]` result is downloaded.
     pub fn hvp_rows_staged(
         &self,
         rt: &Runtime,
@@ -384,13 +513,18 @@ impl ModelExes {
     ) -> Result<Vec<f32>> {
         let spec = &self.spec;
         let vbuf = rt.upload(v, &[spec.p])?;
-        let mut hv = vec![0.0f32; spec.p];
+        let mut acc: Option<xla::PjRtBuffer> = None;
         for rc in &sr.chunks {
-            let outs = rt.exec(&self.hvp, &[&ctx.wbuf, &vbuf, &rc.x, &rc.mask])?;
-            let hc = literal_f32(&outs[0])?;
-            crate::util::vecmath::axpy(1.0, &hc, &mut hv);
+            let prev = acc.as_ref().unwrap_or(&self.acc0_hvp);
+            acc = Some(rt.exec_buffer(
+                &self.hvp_acc,
+                &[&ctx.wbuf, &vbuf, &rc.x, &rc.mask, prev],
+            )?);
         }
-        Ok(hv)
+        match acc {
+            None => Ok(vec![0.0f32; spec.p]),
+            Some(buf) => rt.download(&buf),
+        }
     }
 
     /// One-shot exact masked-SUM HVP over a row subset. Iterative

@@ -4,20 +4,25 @@
 //! Layout mirrors /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
 //! Entry points were lowered with return_tuple=True, so every result is a
-//! root tuple whose elements are the jax outputs in order.
+//! root tuple whose elements are the jax outputs in order — EXCEPT the
+//! chainable accumulator entries (`grad_acc` / `grad_small_acc` /
+//! `hvp_acc`), which are lowered untupled so their single array output
+//! comes back as a plain device buffer that [`Runtime::exec_buffer`] can
+//! feed straight into the next execution (the fused multi-chunk
+//! reduction: partials stay on device, one download per gradient).
 //!
-//! Every host→device upload and artifact execution is counted on the
-//! runtime (see [`TransferCounters`]); retrain passes snapshot the
-//! counters around their hot loop so the "delta rows uploaded once per
-//! pass, parameters once per iteration" staging discipline (paper
-//! Discussion; docs/PERFORMANCE.md) stays measurable instead of
-//! aspirational.
+//! Every host→device upload, artifact execution, AND device→host result
+//! download is counted on the runtime (see [`TransferCounters`]);
+//! retrain passes snapshot the counters around their hot loop so the
+//! "delta rows uploaded once per pass, parameters once per iteration,
+//! one download per gradient" staging discipline (paper Discussion;
+//! docs/PERFORMANCE.md) stays measurable instead of aspirational.
 
 pub mod engine;
 
 pub use engine::{Engine, ModelExes, PassCtx, Staged, StagedRows};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::cell::Cell;
 use std::path::Path;
 
@@ -29,6 +34,8 @@ pub struct TransferCounters {
     uploads: Cell<u64>,
     upload_floats: Cell<u64>,
     execs: Cell<u64>,
+    downloads: Cell<u64>,
+    download_floats: Cell<u64>,
 }
 
 impl TransferCounters {
@@ -41,23 +48,34 @@ impl TransferCounters {
         self.execs.set(self.execs.get() + 1);
     }
 
+    fn count_download(&self, floats: usize) {
+        self.downloads.set(self.downloads.get() + 1);
+        self.download_floats
+            .set(self.download_floats.get() + floats as u64);
+    }
+
     /// Copyable view of the counters at this instant.
     pub fn snapshot(&self) -> TransferStats {
         TransferStats {
             uploads: self.uploads.get(),
             upload_floats: self.upload_floats.get(),
             execs: self.execs.get(),
+            downloads: self.downloads.get(),
+            download_floats: self.download_floats.get(),
         }
     }
 }
 
 /// Snapshot (or difference of two snapshots) of device traffic:
-/// host→device buffer uploads, f32s shipped, artifact executions.
+/// host→device buffer uploads, f32s shipped, artifact executions, and
+/// device→host result downloads (count + f32 payload).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TransferStats {
     pub uploads: u64,
     pub upload_floats: u64,
     pub execs: u64,
+    pub downloads: u64,
+    pub download_floats: u64,
 }
 
 impl TransferStats {
@@ -67,6 +85,8 @@ impl TransferStats {
             uploads: self.uploads - earlier.uploads,
             upload_floats: self.upload_floats - earlier.upload_floats,
             execs: self.execs - earlier.execs,
+            downloads: self.downloads - earlier.downloads,
+            download_floats: self.download_floats - earlier.download_floats,
         }
     }
 
@@ -74,11 +94,18 @@ impl TransferStats {
         self.uploads += o.uploads;
         self.upload_floats += o.upload_floats;
         self.execs += o.execs;
+        self.downloads += o.downloads;
+        self.download_floats += o.download_floats;
     }
 
     /// Megabytes shipped host→device (f32 payloads).
     pub fn upload_mb(&self) -> f64 {
         self.upload_floats as f64 * 4.0 / (1 << 20) as f64
+    }
+
+    /// Megabytes shipped device→host (f32 result payloads).
+    pub fn download_mb(&self) -> f64 {
+        self.download_floats as f64 * 4.0 / (1 << 20) as f64
     }
 }
 
@@ -113,7 +140,8 @@ impl Runtime {
     }
 
     /// Execute with buffer args and decompose the root tuple into the
-    /// list of output literals.
+    /// list of output literals. Fetching the root tuple is ONE download
+    /// whose payload is the summed element sizes.
     pub fn exec(
         &self,
         exe: &xla::PjRtLoadedExecutable,
@@ -122,7 +150,42 @@ impl Runtime {
         self.counters.count_exec();
         let out = exe.execute_b(args).context("executing artifact")?;
         let lit = out[0][0].to_literal_sync().context("fetching result")?;
-        lit.to_tuple().context("decomposing root tuple")
+        let elems = lit.to_tuple().context("decomposing root tuple")?;
+        let floats: usize = elems.iter().map(|e| e.element_count()).sum();
+        self.counters.count_download(floats);
+        Ok(elems)
+    }
+
+    /// Execute an UNTUPLED artifact (the accumulator entries) and return
+    /// its single output as a device buffer WITHOUT downloading it —
+    /// the chaining primitive of the fused multi-chunk reduction.
+    pub fn exec_buffer(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        self.counters.count_exec();
+        let out = exe.execute_b(args).context("executing artifact")?;
+        let mut per_device = out
+            .into_iter()
+            .next()
+            .context("artifact produced no per-device results")?;
+        if per_device.len() != 1 {
+            bail!(
+                "exec_buffer expects a single untupled output, got {} buffers \
+                 (was this artifact lowered with return_tuple=True?)",
+                per_device.len()
+            );
+        }
+        Ok(per_device.remove(0))
+    }
+
+    /// Fetch a device buffer's f32 contents (ONE counted download).
+    pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().context("downloading result buffer")?;
+        let v = lit.to_vec::<f32>().context("reading f32 result")?;
+        self.counters.count_download(v.len());
+        Ok(v)
     }
 }
 

@@ -25,24 +25,86 @@
 //! dataset (`Staged`, removal masks current), the committed added tail
 //! (append-only `StagedRows` segments — each add commit keeps its
 //! pass's staged rows), and the test set (`Staged`) device-resident
-//! across edits; each pass stages only its delta rows, and each
-//! iteration uploads one parameter vector. Cumulative per-edit device
-//! traffic is tracked in [`SessionStats`].
+//! across edits; each pass stages only its delta rows — and repeated
+//! passes over the SAME rows (conformal folds, jackknife leave-outs,
+//! robust sweeps) re-stage nothing, thanks to a cross-pass row cache
+//! keyed by index-set hash — and each iteration uploads one parameter
+//! vector. Cumulative per-edit device traffic (and the row-cache
+//! hit/miss counts) is tracked in [`SessionStats`].
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
 use crate::config::{HyperParams, ModelKind, ModelSpec};
 use crate::data::{synth, Dataset, IndexSet};
-use crate::deltagrad::batch::{self, Change};
+use crate::deltagrad::batch::{self, Change, GdResources, SgdResources};
 use crate::deltagrad::RetrainOutput;
 use crate::lbfgs::History;
 use crate::runtime::engine::{ModelExes, PassCtx, Staged, StagedRows, Stats};
 use crate::runtime::{Engine, Runtime, TransferStats};
 use crate::train::{self, TrainOpts, Trajectory};
 use crate::util::vecmath::{axpy, dot, scale, sub};
+
+/// Bounded FIFO cache of staged base-row subsets, keyed by an FNV-1a
+/// hash of the index set (with the full index list kept for an exact
+/// collision-proof comparison). Base rows are immutable for the life of
+/// a session — deletions flip masks on `Staged`, additions live in the
+/// tail — so entries never go stale; eviction is purely size-bound.
+struct RowCache {
+    entries: VecDeque<RowCacheEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+struct RowCacheEntry {
+    key: u64,
+    idxs: Vec<usize>,
+    rows: Rc<StagedRows>,
+}
+
+/// Entries kept per session: enough for a conformal fold set or a
+/// jackknife window plus the robust sweep's all-rows view.
+const ROW_CACHE_CAP: usize = 16;
+
+fn hash_indices(idxs: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a
+    for &i in idxs {
+        let mut v = i as u64;
+        for _ in 0..8 {
+            h ^= v & 0xff;
+            h = h.wrapping_mul(0x100_0000_01b3);
+            v >>= 8;
+        }
+    }
+    h
+}
+
+impl RowCache {
+    fn new() -> Self {
+        RowCache { entries: VecDeque::new(), hits: 0, misses: 0 }
+    }
+
+    fn get(&mut self, key: u64, idxs: &[usize]) -> Option<Rc<StagedRows>> {
+        for e in &self.entries {
+            if e.key == key && e.idxs == idxs {
+                self.hits += 1;
+                return Some(e.rows.clone());
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    fn insert(&mut self, key: u64, idxs: Vec<usize>, rows: Rc<StagedRows>) {
+        if self.entries.len() >= ROW_CACHE_CAP {
+            self.entries.pop_front();
+        }
+        self.entries.push_back(RowCacheEntry { key, idxs, rows });
+    }
+}
 
 /// One edit against a session's training set. Groups commit (or preview)
 /// as a single DeltaGrad pass — the group-commit amortization of the
@@ -159,6 +221,10 @@ pub struct SessionStats {
     pub exact_iters: u64,
     pub approx_iters: u64,
     pub fallback_iters: u64,
+    /// cross-pass row cache: staging requests served from resident rows
+    pub row_cache_hits: u64,
+    /// cross-pass row cache: staging requests that had to gather+upload
+    pub row_cache_misses: u64,
     /// device traffic of speculative passes
     pub preview_transfers: TransferStats,
     /// device traffic of committed passes (incl. mask flips)
@@ -178,8 +244,9 @@ impl SessionStats {
         let t = self.total_transfers();
         format!(
             "previews={} commits={} rows(del/add)={}/{} \
-             iters(exact/approx/fallback)={}/{}/{} \
-             device(uploads={} floats={} execs={}) pass_secs={:.3}",
+             iters(exact/approx/fallback)={}/{}/{} row_cache(hit/miss)={}/{} \
+             device(uploads={} floats={} execs={} downloads={} dl_floats={}) \
+             pass_secs={:.3}",
             self.previews,
             self.commits,
             self.rows_deleted,
@@ -187,9 +254,13 @@ impl SessionStats {
             self.exact_iters,
             self.approx_iters,
             self.fallback_iters,
+            self.row_cache_hits,
+            self.row_cache_misses,
             t.uploads,
             t.upload_floats,
             t.execs,
+            t.downloads,
+            t.download_floats,
             self.seconds,
         )
     }
@@ -342,6 +413,12 @@ pub struct Session {
     version: u64,
     train_seconds: f64,
     stats: Cell<SessionStats>,
+    /// cross-pass cache of staged base-row subsets (conformal folds,
+    /// jackknife leave-outs, repeated previews of one edit)
+    row_cache: RefCell<RowCache>,
+    /// lazily staged all-rows view for per-row sweeps (its own slot, so
+    /// row-cache eviction can never drop the O(n) staging)
+    base_rows: RefCell<Option<Rc<StagedRows>>>,
 }
 
 impl Session {
@@ -378,6 +455,8 @@ impl Session {
             version: 0,
             train_seconds,
             stats: Cell::new(SessionStats::default()),
+            row_cache: RefCell::new(RowCache::new()),
+            base_rows: RefCell::new(None),
         })
     }
 
@@ -434,9 +513,55 @@ impl Session {
         self.train_seconds
     }
 
-    /// Cumulative per-edit accounting.
+    /// Cumulative per-edit accounting (incl. row-cache hit/miss counts).
     pub fn stats(&self) -> SessionStats {
-        self.stats.get()
+        let mut s = self.stats.get();
+        let rc = self.row_cache.borrow();
+        s.row_cache_hits = rc.hits;
+        s.row_cache_misses = rc.misses;
+        s
+    }
+
+    /// Stage a set of BASE-dataset rows, served from the cross-pass row
+    /// cache when an identical index set was staged before (conformal
+    /// folds, jackknife leave-outs, repeated previews of one edit). Base
+    /// rows are immutable for the session's life, so cached stagings
+    /// never go stale.
+    ///
+    /// `insert_on_miss` is false for commits: a committed deletion's
+    /// rows can never be staged again (`check_deletes` rejects them), so
+    /// inserting would waste a slot and could evict a live fold entry —
+    /// only the preview→commit direction of reuse is valid.
+    fn stage_rows_cached(&self, idxs: &[usize], insert_on_miss: bool) -> Result<Rc<StagedRows>> {
+        let key = hash_indices(idxs);
+        if let Some(hit) = self.row_cache.borrow_mut().get(key, idxs) {
+            return Ok(hit);
+        }
+        let sr = Rc::new(self.exes.stage_rows(&self.rt, &self.base, idxs)?);
+        if insert_on_miss {
+            self.row_cache
+                .borrow_mut()
+                .insert(key, idxs.to_vec(), sr.clone());
+        }
+        Ok(sr)
+    }
+
+    /// Device-resident `chunk_small`-grouped view of ALL base rows, for
+    /// per-row sweeps (`apps::robust::per_sample_losses`). The view is a
+    /// singleton with its own resident slot — NOT a row-cache entry — so
+    /// a burst of unrelated previews cannot evict it; repeated sweeps
+    /// re-stage nothing for the session's lifetime. Hits/misses still
+    /// count into the `SessionStats` row-cache totals.
+    pub fn base_row_view(&self) -> Result<Rc<StagedRows>> {
+        if let Some(sr) = self.base_rows.borrow().clone() {
+            self.row_cache.borrow_mut().hits += 1;
+            return Ok(sr);
+        }
+        self.row_cache.borrow_mut().misses += 1;
+        let all: Vec<usize> = (0..self.base.n).collect();
+        let sr = Rc::new(self.exes.stage_rows(&self.rt, &self.base, &all)?);
+        *self.base_rows.borrow_mut() = Some(sr.clone());
+        Ok(sr)
     }
 
     /// Current effective training-set size.
@@ -514,6 +639,8 @@ impl Session {
             version: self.version,
             train_seconds: self.train_seconds,
             stats: Cell::new(SessionStats::default()),
+            row_cache: RefCell::new(RowCache::new()),
+            base_rows: RefCell::new(None),
         })
     }
 
@@ -548,6 +675,10 @@ impl Session {
     /// must agree with the trajectory's recorded mode — the algorithm is
     /// selected by what was trained, not by the override).
     pub fn preview_with(&self, edit: &Edit, hp: &HyperParams) -> Result<Preview> {
+        // the preview's reported transfers must cover the delta-row
+        // staging too (a row-cache MISS pays it here, before the pass's
+        // own snapshot; a hit pays nothing)
+        let transfers0 = self.rt.counters.snapshot();
         let (del_rows, add_ds) = edit.normalize(self.base.da, self.base.k)?;
         if !del_rows.is_empty() && add_ds.n > 0 {
             bail!("mixed delete+add previews are not supported; commit applies mixed groups");
@@ -570,11 +701,26 @@ impl Session {
                     bail!("SGD previews require a pristine session (commits are GD-only)");
                 }
                 let removed = IndexSet::from_vec(del_rows);
-                batch::run_sgd_delete(&self.exes, &self.rt, &self.base, &self.traj, hp, &removed)?
+                // minibatches replay against the resident base; only the
+                // removal rows need staging (cross-pass cached)
+                let sr_rem = self.stage_rows_cached(removed.as_slice(), true)?;
+                let res = SgdResources {
+                    staged_reuse: Some(&self.staged),
+                    sr_rem: Some(&*sr_rem),
+                };
+                batch::run_sgd_delete(
+                    &self.exes, &self.rt, &self.base, &self.traj, hp, &removed, &res,
+                )?
             }
             PassMode::Gd => {
                 let n_cur = Some(self.n_current() as f64);
                 if add_ds.n > 0 {
+                    let res = GdResources {
+                        staged_reuse: Some(&self.staged),
+                        tail: &self.added_staged,
+                        n_current: n_cur,
+                        sr_delta: None, // fresh rows: nothing to cache
+                    };
                     batch::run_gd(
                         &self.exes,
                         &self.rt,
@@ -582,12 +728,19 @@ impl Session {
                         &self.traj,
                         hp,
                         Change::Add(&add_ds),
-                        Some(&self.staged),
-                        &self.added_staged,
-                        n_cur,
+                        &res,
                     )?
                 } else {
                     let removed = IndexSet::from_vec(del_rows);
+                    // delta rows come from the cross-pass cache: repeated
+                    // previews of one fold/leave-out re-stage nothing
+                    let sr_delta = self.stage_rows_cached(removed.as_slice(), true)?;
+                    let res = GdResources {
+                        staged_reuse: Some(&self.staged),
+                        tail: &self.added_staged,
+                        n_current: n_cur,
+                        sr_delta: Some(&*sr_delta),
+                    };
                     batch::run_gd(
                         &self.exes,
                         &self.rt,
@@ -595,13 +748,13 @@ impl Session {
                         &self.traj,
                         hp,
                         Change::Delete(&removed),
-                        Some(&self.staged),
-                        &self.added_staged,
-                        n_cur,
+                        &res,
                     )?
                 }
             }
         };
+        let mut out = out;
+        out.transfers = self.rt.counters.snapshot().since(transfers0);
         let mut s = self.stats.get();
         s.absorb(&out, false);
         self.stats.set(s);
@@ -643,12 +796,19 @@ impl Session {
         }
         let exes = &self.exes;
         let rt = &self.rt;
-        // the group's delta rows: staged once per pass. The committed
-        // tail is already resident (`added_staged`).
+        // the group's delta rows: staged once per pass — or served from
+        // the cross-pass row cache when the same edit was previewed
+        // (keyed by the SORTED set, matching preview's IndexSet order;
+        // the staging order fixes the f32 summation order, so a
+        // previewed-then-committed edit is also bitwise consistent).
+        // Committed rows can never be staged again, so a miss does NOT
+        // populate the cache. The committed tail is already resident
+        // (`added_staged`).
         let sr_del = if del_rows.is_empty() {
             None
         } else {
-            Some(exes.stage_rows(rt, &self.base, &del_rows)?)
+            let sorted = IndexSet::from_vec(del_rows.clone());
+            Some(self.stage_rows_cached(sorted.as_slice(), false)?)
         };
         let sr_add = if add_ds.n == 0 {
             None
@@ -695,14 +855,16 @@ impl Session {
             let ctx = exes.pass_ctx(rt, &w)?;
             // signed gradient sum of the changed samples at the current
             // iterate (always exact; |group| ≪ n resident rows)
-            let g_chg = grad_sum_group(exes, rt, &ctx, sr_del.as_ref(), sr_add.as_ref())?;
+            let g_chg = grad_sum_group(exes, rt, &ctx, sr_del.as_deref(), sr_add.as_ref())?;
             // average gradient over the NEW dataset at the new iterate:
             // g_new_avg = (n_cur * g_cur_avg + g_chg) / n_new        (S62)
             let mut g_new_avg;
             if exact {
                 n_exact += 1;
+                // base chunks + resident tail fused into one on-device
+                // reduction (a single result download)
                 let (g_sum_cur, stats) =
-                    grad_sum_current(exes, rt, &self.staged, &ctx, sr_tail)?;
+                    exes.grad_staged_with_tail(rt, &self.staged, sr_tail, &ctx)?;
                 last_stats = stats;
                 // harvest (Δw, Δg) against the cached trajectory
                 let dw_pair: Vec<f32> =
@@ -840,24 +1002,6 @@ impl Session {
     }
 }
 
-/// Sum gradient over the current dataset (staged base minus removals,
-/// plus the resident added-tail segments) at the iteration's parameters.
-fn grad_sum_current(
-    exes: &ModelExes,
-    rt: &Runtime,
-    staged: &Staged,
-    ctx: &PassCtx,
-    sr_tail: &[StagedRows],
-) -> Result<(Vec<f32>, Stats)> {
-    let (mut g, mut stats) = exes.grad_staged_ctx(rt, staged, ctx)?;
-    for sr in sr_tail {
-        let (ga, sa) = exes.grad_rows_staged(rt, sr, ctx)?;
-        axpy(1.0, &ga, &mut g);
-        stats.accumulate(&sa);
-    }
-    Ok((g, stats))
-}
-
 /// Signed gradient sum of all changed samples in the group at the
 /// iteration's parameters: `Σ_add ∇F_i(w) − Σ_del ∇F_i(w)`, over the
 /// group's pre-staged rows.
@@ -951,7 +1095,13 @@ mod tests {
             n_approx: 7,
             n_fallback: 1,
             last_stats: Stats::default(),
-            transfers: TransferStats { uploads: 10, upload_floats: 100, execs: 20 },
+            transfers: TransferStats {
+                uploads: 10,
+                upload_floats: 100,
+                execs: 20,
+                downloads: 5,
+                download_floats: 50,
+            },
         };
         s.absorb(&out, false);
         s.absorb(&out, true);
@@ -959,7 +1109,37 @@ mod tests {
         assert_eq!(s.commits, 1);
         assert_eq!(s.exact_iters, 6);
         assert_eq!(s.total_transfers().uploads, 20);
+        assert_eq!(s.total_transfers().downloads, 10);
+        assert_eq!(s.total_transfers().download_floats, 100);
         assert!((s.seconds - 1.0).abs() < 1e-12);
         assert!(s.render().contains("previews=1"));
+        assert!(s.render().contains("downloads=10"));
+    }
+
+    #[test]
+    fn row_cache_fifo_and_exact_match() {
+        let mut rc = RowCache::new();
+        let mk = |n_rows| Rc::new(StagedRows::empty_for_tests(n_rows, 4));
+        let a = vec![1usize, 2, 3];
+        let key = hash_indices(&a);
+        assert!(rc.get(key, &a).is_none());
+        rc.insert(key, a.clone(), mk(3));
+        assert_eq!(rc.get(key, &a).unwrap().n_rows, 3);
+        // same hash key but different indices must NOT hit
+        assert!(rc.get(key, &[9usize, 9, 9]).is_none());
+        // FIFO eviction at capacity drops the oldest entry
+        for i in 0..ROW_CACHE_CAP {
+            let idxs = vec![100 + i];
+            rc.insert(hash_indices(&idxs), idxs, mk(1));
+        }
+        assert!(rc.get(key, &a).is_none(), "oldest entry should be evicted");
+        assert_eq!((rc.hits, rc.misses), (1, 3));
+    }
+
+    #[test]
+    fn hash_indices_distinguishes_order_and_content() {
+        assert_eq!(hash_indices(&[1, 2, 3]), hash_indices(&[1, 2, 3]));
+        assert_ne!(hash_indices(&[1, 2, 3]), hash_indices(&[3, 2, 1]));
+        assert_ne!(hash_indices(&[]), hash_indices(&[0]));
     }
 }

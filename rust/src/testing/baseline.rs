@@ -3,8 +3,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::HyperParams;
+use crate::config::{HyperParams, ModelKind};
 use crate::data::{Dataset, IndexSet};
+use crate::deltagrad::RetrainOutput;
 use crate::lbfgs::History;
 use crate::runtime::engine::{ModelExes, Stats};
 use crate::runtime::Runtime;
@@ -76,10 +77,133 @@ pub fn delete_gd_seed_shape(
     Ok(w)
 }
 
+/// Faithful reproduction of the pre-resident-minibatch `delete_sgd` hot
+/// loop (§3, eq. S7): every EXACT iteration host-gathers the full
+/// minibatch and uploads it as fresh `chunk_small` row groups
+/// (`grad_rows_gather_ctx`) — the O(b·(da+k+1)) floats/iteration shape
+/// the resident multiplicity-mask path replaces. Kept as the "before"
+/// side of the resident-vs-gather bench pair and the parity oracle in
+/// tests/staging.rs. (Bitwise parity with the resident path is NOT
+/// expected: packing rows densely vs summing them in staged-chunk order
+/// changes the f32 reduction order.)
+pub fn delete_sgd_gather_shape(
+    exes: &ModelExes,
+    rt: &Runtime,
+    ds: &Dataset,
+    traj: &Trajectory,
+    hp: &HyperParams,
+    removed: &IndexSet,
+) -> Result<RetrainOutput> {
+    let spec = &exes.spec;
+    if traj.ws.len() != hp.t + 1 || traj.gs.len() != hp.t || traj.batches.len() != hp.t {
+        bail!("trajectory length mismatch");
+    }
+    if traj.batches.iter().any(|b| b.is_empty()) {
+        bail!("delete_sgd needs a minibatch schedule; trajectory was GD");
+    }
+    let pair_ok = |dw: &[f32], dg: &[f32]| -> bool {
+        let sw = dot(dw, dw);
+        if sw < 1e-20 {
+            return false;
+        }
+        let curv = dot(dg, dw) / sw;
+        match spec.model {
+            ModelKind::Lr => curv > 0.0,
+            ModelKind::Mlp => curv > hp.curvature_min as f64,
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let transfers0 = rt.counters.snapshot();
+    let rem = removed.as_slice();
+    let sr_rem = exes.stage_rows(rt, ds, rem)?;
+    let mut hist = History::new(hp.m);
+    let mut w = traj.ws[0].clone();
+    let mut dw = vec![0.0f32; spec.p];
+    let (mut n_exact, mut n_approx, mut n_fallback) = (0usize, 0usize, 0usize);
+    let mut last_stats = Stats::default();
+
+    for t in 0..hp.t {
+        let eta = hp.lr_at(t) as f64;
+        let wt = &traj.ws[t];
+        let gt = &traj.gs[t];
+        let batch = &traj.batches[t];
+        let b = batch.len() as f64;
+        let in_r: Vec<usize> = batch
+            .iter()
+            .filter_map(|i| rem.binary_search(i).ok())
+            .collect();
+        let b_new = (batch.len() - in_r.len()) as f64;
+        if b_new == 0.0 {
+            continue;
+        }
+        let mut exact = hp.is_exact_iter(t);
+        let mut bv: Option<Vec<f32>> = None;
+        if !exact {
+            sub(&w, wt, &mut dw);
+            if hist.is_empty() {
+                exact = true;
+                n_fallback += 1;
+            } else if spec.model == ModelKind::Mlp
+                && hist.min_curvature().unwrap_or(0.0) < hp.curvature_min as f64
+            {
+                exact = true;
+                n_fallback += 1;
+            } else {
+                bv = hist.bv(&dw);
+                if bv.is_none() {
+                    exact = true;
+                    n_fallback += 1;
+                }
+            }
+        }
+        let ctx = exes.pass_ctx(rt, &w)?;
+        let (g_rem_sum, _) = if in_r.is_empty() {
+            (vec![0.0f32; spec.p], Stats::default())
+        } else {
+            exes.grad_rows_subset(rt, &sr_rem, &ctx, &in_r)?
+        };
+        let step_scale = -(eta / b_new) as f32;
+        if exact {
+            n_exact += 1;
+            // the before-shape: host-gather + upload the full minibatch
+            let (g_bt_sum, stats) = exes.grad_rows_gather_ctx(rt, ds, batch, &ctx)?;
+            last_stats = stats;
+            let dw_pair: Vec<f32> = w.iter().zip(wt).map(|(a, b)| a - b).collect();
+            axpy(step_scale, &g_bt_sum, &mut w);
+            axpy(-step_scale, &g_rem_sum, &mut w);
+            let mut dg = g_bt_sum;
+            scale(&mut dg, (1.0 / b) as f32);
+            axpy(-1.0, gt, &mut dg);
+            if pair_ok(&dw_pair, &dg) {
+                hist.push(dw_pair, dg);
+            }
+        } else {
+            n_approx += 1;
+            let mut g_bt_avg = bv.unwrap();
+            axpy(1.0, gt, &mut g_bt_avg);
+            axpy(step_scale * b as f32, &g_bt_avg, &mut w);
+            axpy(-step_scale, &g_rem_sum, &mut w);
+        }
+    }
+    Ok(RetrainOutput {
+        w,
+        seconds: t0.elapsed().as_secs_f64(),
+        n_exact,
+        n_approx,
+        n_fallback,
+        last_stats,
+        transfers: rt.counters.snapshot().since(transfers0),
+    })
+}
+
 /// Faithful reproduction of the pre-Session `OnlineState::apply_group`
 /// (Algorithm 3, appendix C.2 / eq. S62) for a FRESH state: no prior
 /// removals, no added tail. `session::Session::commit` on a pristine
-/// session must stay BITWISE identical to this (tests/session.rs).
+/// session must stay BITWISE identical to this (tests/session.rs) for
+/// groups whose deletions arrive in SORTED order: this reference stages
+/// `del_rows` verbatim, while `commit` stages the sorted set (sharing
+/// the preview's row-cache key), so an unsorted group changes the f32
+/// summation order of the delta term by a ulp.
 ///
 /// Returns the final parameters and the rewritten trajectory.
 pub fn online_group_seed_shape(

@@ -126,6 +126,14 @@ fn committed_group_uploads_delta_rows_exactly_once() {
          3*{delta_groups} + {hp_t} + {touched_chunks}",
         m.uploads
     );
+    // fused-reduction download budget: the group's signed delta gradient
+    // downloads once per iteration, the current-data gradient once per
+    // exact iteration — never one literal per chunk
+    assert_eq!(
+        m.downloads,
+        hp_t as u64 + m.exact_iters,
+        "committed group download budget changed"
+    );
     // exactly one pass-worth of executions was recorded
     assert_eq!(m.groups, 1);
     svc.shutdown().unwrap();

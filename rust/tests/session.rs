@@ -12,8 +12,11 @@
 //!    the committed state;
 //!  * GD vs SGD auto-selection follows `hp.batch`, and the SGD preview
 //!    matches the old `delete_sgd`;
-//!  * the per-pass upload budget of the staged-context layer holds
-//!    through the new API (preview pays no base re-staging).
+//!  * the per-pass upload AND download budgets of the staged-context
+//!    layer hold through the new API (preview pays no base re-staging,
+//!    one fused download per gradient call);
+//!  * the cross-pass row cache serves repeated previews of one index
+//!    set (folds, leave-outs) without re-staging, across commits.
 
 #![allow(deprecated)]
 
@@ -253,6 +256,108 @@ fn preview_upload_budget_pays_no_base_restaging() {
         (3 * delta_groups + hp.t) as u64,
         "preview upload schedule changed"
     );
+    // fused-reduction download budget: the delta-row gradient downloads
+    // once per iteration, the full-data gradient once per exact
+    // iteration — nothing per chunk
+    assert_eq!(
+        pv.out.transfers.downloads,
+        (hp.t + pv.out.n_exact) as u64,
+        "preview download schedule changed"
+    );
     let stats = session.stats();
     assert_eq!(stats.preview_transfers.uploads, pv.out.transfers.uploads);
+
+    // repeated preview of the SAME edit: the cross-pass row cache serves
+    // the delta rows, so the staging term disappears entirely
+    let pv2 = session.preview(&Edit::Delete(removed.clone())).unwrap();
+    assert_eq!(
+        pv2.out.transfers.uploads,
+        hp.t as u64,
+        "repeated preview must re-stage nothing (row cache)"
+    );
+    assert_eq!(pv2.out.w, pv.out.w, "cache hit changed the floats");
+    let stats = session.stats();
+    assert_eq!(stats.row_cache_hits, 1);
+    assert_eq!(stats.row_cache_misses, 1);
+}
+
+#[test]
+fn preview_then_commit_stages_delta_rows_once() {
+    // the preview stages the edit's delta rows (keyed by the sorted
+    // set); the commit of the same edit — even written in a different
+    // group order — must find them and re-stage nothing
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 29, Some(640), Some(64));
+    let hp = small_hp();
+    let mut session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds, test)
+        .build_in(&mut eng)
+        .unwrap();
+    let edit = Edit::group(vec![Edit::delete_row(9), Edit::delete_row(2)]);
+    session.preview(&edit).unwrap(); // miss: stages sorted [2, 9]
+    let c = session.commit(edit).unwrap(); // hit: reuses the staging
+    let stats = session.stats();
+    assert_eq!(
+        (stats.row_cache_hits, stats.row_cache_misses),
+        (1, 1),
+        "commit must reuse the previewed staging"
+    );
+    // commit budget with the staging term gone: T params + the one
+    // touched removal-mask chunk (rows 2 and 9 share chunk 0)
+    assert!(9 < spec.chunk);
+    assert_eq!(
+        c.out.transfers.uploads,
+        (hp.t + 1) as u64,
+        "previewed-then-committed edit must not re-stage its delta rows"
+    );
+}
+
+#[test]
+fn row_cache_serves_interleaved_folds_and_survives_commits() {
+    // conformal/jackknife shape: alternating previews over two fixed
+    // folds must stage each fold exactly once; after a commit the cache
+    // stays valid (base rows are immutable, deletions are masks)
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 23, Some(640), Some(64));
+    let mut session = SessionBuilder::new("small")
+        .hyper_params(small_hp())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    let set_a = sample_removal(&mut Rng::new(1), ds.n, 8);
+    let set_b = sample_removal(&mut Rng::new(2), ds.n, 8);
+    // a victim row in neither fold, so fold previews stay valid after
+    // the commit deletes it
+    let victim = (0..ds.n)
+        .find(|&i| !set_a.contains(i) && !set_b.contains(i))
+        .unwrap();
+    let fold_a = Edit::Delete(set_a);
+    let fold_b = Edit::Delete(set_b);
+
+    session.preview(&fold_a).unwrap(); // miss
+    session.preview(&fold_b).unwrap(); // miss
+    let a2 = session.preview(&fold_a).unwrap(); // hit
+    let b2 = session.preview(&fold_b).unwrap(); // hit
+    let stats = session.stats();
+    assert_eq!((stats.row_cache_hits, stats.row_cache_misses), (2, 2));
+    assert_eq!(a2.out.transfers.uploads, small_hp().t as u64);
+    assert_eq!(b2.out.transfers.uploads, small_hp().t as u64);
+
+    // a commit of an unrelated row leaves cached fold stagings valid
+    session.commit(Edit::delete_row(victim)).unwrap();
+    let a3 = session.preview(&fold_a).unwrap();
+    assert_eq!(
+        a3.out.transfers.uploads,
+        small_hp().t as u64,
+        "fold staging must survive an unrelated commit"
+    );
+    let stats = session.stats();
+    assert_eq!(stats.row_cache_hits, 3);
+    // the commit's single-row delta was a lookup miss (it staged
+    // directly — committed rows can never be staged again, so commit
+    // misses do not populate the cache)
+    assert_eq!(stats.row_cache_misses, 3);
 }

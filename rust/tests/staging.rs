@@ -1,14 +1,20 @@
 //! Staged-context equivalence tests (requires `make artifacts`).
 //!
-//! The PR that introduced `StagedRows`/`PassCtx` (see docs/PERFORMANCE.md)
-//! claims the refactor is a pure transfer-schedule change: same floats in,
-//! same floats out. These tests pin that down:
+//! The PRs that introduced `StagedRows`/`PassCtx` and then the fused
+//! reduction + resident-minibatch SGD (see docs/PERFORMANCE.md) claim
+//! pure transfer-schedule changes: same floats in, same floats out (up
+//! to the documented reduction-order caveat for SGD). These tests pin:
 //!  * reusing staged delta rows across parameter updates is BITWISE
 //!    identical to the seed per-iteration re-gather path;
 //!  * `delete_gd` end-to-end is bitwise identical to a faithful
 //!    reproduction of the seed per-iteration-upload loop;
 //!  * the per-pass upload counters prove delta rows ship once per PASS
-//!    and parameters once per ITERATION.
+//!    and parameters once per ITERATION;
+//!  * every multi-chunk gradient/HVP call downloads exactly ONE result
+//!    (the fused on-device reduction);
+//!  * resident-mask SGD matches the gather-shaped reference on the seed
+//!    shapes, and its exact-iteration upload payload is the per-chunk
+//!    multiplicity masks — never the minibatch rows.
 //!
 //! The free functions under test are deprecated shims over the Session
 //! API now; these pins intentionally keep exercising them for one
@@ -20,6 +26,7 @@ use deltagrad::config::HyperParams;
 use deltagrad::data::{sample_removal, synth, IndexSet};
 use deltagrad::deltagrad::batch;
 use deltagrad::runtime::Engine;
+use deltagrad::session::{Edit, PassMode, SessionBuilder};
 use deltagrad::train::{self, TrainOpts};
 use deltagrad::util::Rng;
 
@@ -124,12 +131,212 @@ fn delete_gd_uploads_delta_rows_once_per_pass() {
         "upload schedule changed: got {}, expected 3*{full_chunks} + 3*{delta_groups} + {}",
         dg.transfers.uploads, hp.t
     );
+    // download budget of the fused reduction: one result per gradient
+    // call — the delta-row gradient every iteration plus the full-data
+    // gradient at exact iterations, nothing per chunk
+    assert_eq!(
+        dg.transfers.downloads,
+        (hp.t + dg.n_exact) as u64,
+        "download schedule changed (expected T + exact iterations)"
+    );
     // and with a pre-staged dataset the full-chunk term disappears
     let staged = exes.stage(&eng.rt, &ds, &IndexSet::empty()).unwrap();
     let dg2 = batch::delete_gd_staged(&exes, &eng.rt, &ds, &staged, &traj, &hp, &removed)
         .unwrap();
     assert_eq!(dg2.transfers.uploads, (3 * delta_groups + hp.t) as u64);
     assert_eq!(dg2.w, dg.w, "staged-dataset reuse changed the result");
+}
+
+#[test]
+fn fused_reduction_downloads_once_per_gradient_call() {
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    // three full chunks and two small row groups, so an unfused path
+    // would be caught red-handed (3 or 2 downloads instead of 1)
+    let (ds, _) = synth::train_test_for_spec(&spec, 17, Some(3 * spec.chunk), Some(10));
+    let staged = exes.stage(&eng.rt, &ds, &IndexSet::empty()).unwrap();
+    let mut rng = Rng::new(23);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+
+    let c0 = eng.rt.counters.snapshot();
+    exes.grad_sum_staged(&eng.rt, &staged, &w).unwrap();
+    let tr = eng.rt.counters.snapshot().since(c0);
+    assert_eq!(tr.downloads, 1, "full staged gradient must download once");
+    assert_eq!(tr.download_floats, (spec.p + 4) as u64);
+    assert_eq!(tr.execs, 3, "one execution per chunk is still expected");
+
+    let pool: Vec<usize> = (0..2 * spec.chunk_small).collect();
+    let sr = exes.stage_rows(&eng.rt, &ds, &pool).unwrap();
+    let ctx = exes.pass_ctx(&eng.rt, &w).unwrap();
+    let c0 = eng.rt.counters.snapshot();
+    exes.grad_rows_staged(&eng.rt, &sr, &ctx).unwrap();
+    let tr = eng.rt.counters.snapshot().since(c0);
+    assert_eq!(tr.downloads, 1, "staged-rows gradient must download once");
+
+    let v: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32()).collect();
+    let c0 = eng.rt.counters.snapshot();
+    exes.hvp_rows_staged(&eng.rt, &sr, &ctx, &v).unwrap();
+    let tr = eng.rt.counters.snapshot().since(c0);
+    assert_eq!(tr.downloads, 1, "HVP must download once");
+    assert_eq!(tr.download_floats, spec.p as u64);
+}
+
+#[test]
+fn staged_subset_matches_gather_and_ships_masks_only() {
+    // the resident-minibatch primitive: a multiplicity mask over the
+    // resident Staged chunks must agree with an explicit gather of the
+    // same rows, uploading only per-touched-chunk masks and downloading
+    // one fused result
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 31, Some(2 * spec.chunk + 64), Some(10));
+    let staged = exes.stage(&eng.rt, &ds, &IndexSet::empty()).unwrap();
+    let mut rng = Rng::new(5);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+    let ctx = exes.pass_ctx(&eng.rt, &w).unwrap();
+    // rows straddling all three chunks, one duplicated (multiplicity 2)
+    let rows = vec![3usize, spec.chunk + 40, 2 * spec.chunk + 10, 7, 3];
+    let touched = 3u64;
+
+    let c0 = eng.rt.counters.snapshot();
+    let (g_mask, s_mask) = exes.grad_staged_subset(&eng.rt, &staged, &ctx, &rows).unwrap();
+    let tr = eng.rt.counters.snapshot().since(c0);
+    assert_eq!(tr.uploads, touched, "only touched-chunk masks may ship");
+    assert_eq!(tr.upload_floats, touched * spec.chunk as u64);
+    assert_eq!(tr.downloads, 1, "fused subset gradient must download once");
+    assert_eq!(tr.execs, touched);
+
+    let (g_gather, s_gather) = exes.grad_sum_rows(&eng.rt, &ds, &rows, &w).unwrap();
+    assert_eq!(s_mask.cnt, s_gather.cnt, "multiplicity lost");
+    let denom = g_gather.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&g_mask, &g_gather);
+    assert!(d / denom < 1e-5, "staged-subset gradient drifted: {:.3e}", d / denom);
+    assert!(
+        (s_mask.loss_sum - s_gather.loss_sum).abs() / s_gather.loss_sum.abs().max(1.0) < 1e-5
+    );
+}
+
+#[test]
+fn resident_sgd_matches_gather_shape() {
+    // resident multiplicity-mask SGD vs the old per-exact-iteration
+    // minibatch gather. NOT bitwise: packing batch rows densely (gather)
+    // vs summing them in staged-chunk order (resident) changes the f32
+    // reduction order — the pin is a tight relative tolerance plus an
+    // identical exact/approx schedule.
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 3, Some(640), Some(10));
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 30;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    hp.batch = 512;
+    let full = train::train(&exes, &eng.rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))
+        .unwrap();
+    let traj = full.traj.unwrap();
+    let removed = sample_removal(&mut Rng::new(5), ds.n, 10);
+
+    let before = deltagrad::testing::baseline::delete_sgd_gather_shape(
+        &exes, &eng.rt, &ds, &traj, &hp, &removed,
+    )
+    .unwrap();
+    let after = batch::delete_sgd(&exes, &eng.rt, &ds, &traj, &hp, &removed).unwrap();
+    assert_eq!(after.n_exact, before.n_exact, "exact/approx schedule drifted");
+    assert_eq!(after.n_approx, before.n_approx);
+    let denom = before.w.iter().map(|x| x.abs()).fold(1e-12f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&after.w, &before.w);
+    assert!(
+        d / denom < 1e-3,
+        "resident-mask SGD drifted from the gather shape: {:.3e}",
+        d / denom
+    );
+}
+
+#[test]
+fn resident_sgd_upload_and_download_budget() {
+    // the acceptance budget: an SGD exact iteration ships ONE param
+    // vector plus per-touched-chunk multiplicity masks (O(⌈n/chunk⌉)
+    // small vectors) — never the minibatch rows — and every gradient
+    // call downloads exactly one fused result. All iterations are made
+    // exact (j0 >= T) so the schedule is statically replayable.
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 9, Some(640), Some(64));
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 12;
+    hp.j0 = 12; // every iteration exact
+    hp.batch = 512;
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    assert_eq!(session.mode(), PassMode::Sgd);
+    let removed = sample_removal(&mut Rng::new(2), ds.n, 10);
+    let rem = removed.clone();
+    let pv = session.preview(&Edit::Delete(removed)).unwrap();
+    assert_eq!(pv.out.n_exact, hp.t, "setup must make every iteration exact");
+
+    // replay the recorded schedule host-side to derive the exact budget
+    let cs = spec.chunk_small;
+    let c = spec.chunk;
+    let rem_groups = rem.len().div_ceil(cs);
+    let mut uploads = 3 * rem_groups; // removal rows staged once (cache miss)
+    let mut downloads = 0usize;
+    for batch in session.trajectory().batches.iter() {
+        let in_r: Vec<usize> = batch
+            .iter()
+            .filter_map(|i| rem.as_slice().binary_search(i).ok())
+            .collect();
+        if batch.len() == in_r.len() {
+            continue; // B − ΔB_t == 0: iteration skipped entirely
+        }
+        uploads += 1; // the parameter vector
+        if !in_r.is_empty() {
+            let mut groups: Vec<usize> = in_r.iter().map(|&p| p / cs).collect();
+            groups.sort_unstable();
+            groups.dedup();
+            uploads += groups.len(); // removed∩batch multiplicity masks
+            downloads += 1; // fused removed∩batch gradient
+        }
+        let mut chunks: Vec<usize> = batch.iter().map(|&i| i / c).collect();
+        chunks.sort_unstable();
+        chunks.dedup();
+        uploads += chunks.len(); // resident-minibatch multiplicity masks
+        downloads += 1; // fused minibatch gradient
+    }
+    assert_eq!(
+        pv.out.transfers.uploads, uploads as u64,
+        "resident SGD upload schedule changed"
+    );
+    assert_eq!(
+        pv.out.transfers.downloads, downloads as u64,
+        "resident SGD download schedule changed"
+    );
+    // no minibatch row upload: the payload stays a few masks per
+    // iteration, nowhere near b·(da+k+1) floats
+    let gather_floats = hp.t as u64
+        * (hp.batch as u64) * (spec.da + spec.k + 1) as u64;
+    assert!(
+        pv.out.transfers.upload_floats < gather_floats / 4,
+        "mask payload {} should be far below the gather payload {}",
+        pv.out.transfers.upload_floats,
+        gather_floats
+    );
+
+    // a repeat preview of the same edit re-stages nothing (row cache)
+    let pv2 = session.preview(&Edit::Delete(rem)).unwrap();
+    assert_eq!(
+        pv2.out.transfers.uploads,
+        (uploads - 3 * rem_groups) as u64,
+        "repeated preview must hit the cross-pass row cache"
+    );
+    let stats = session.stats();
+    assert_eq!(stats.row_cache_hits, 1);
+    assert_eq!(stats.row_cache_misses, 1);
 }
 
 #[test]

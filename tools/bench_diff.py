@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_micro.json files and fail on perf regressions.
+
+Usage:
+    python3 tools/bench_diff.py BASELINE.json NEW.json [--max-regress 0.10]
+
+The gate only FAILS on mean-time regressions of the *staged paths* —
+benches whose name marks them as the resident/staged/session shape
+(STAGED_MARKERS). Seed-shaped "before" benches (re-upload, gather) are
+reported but never gate: they exist to keep the before/after contrast
+measurable, not to be fast.
+
+Exit codes: 0 ok (or nothing to compare), 1 regression, 2 bad input.
+Designed to be driven by ci.sh's bench-diff step; the committed
+baseline snapshot lives at rust/BENCH_baseline.json (seed it with
+`cp rust/BENCH_micro.json rust/BENCH_baseline.json` on a quiet machine).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# a bench gates iff its name contains one of these (the staged paths)
+STAGED_MARKERS = ("staged", "resident", "session")
+
+DEFAULT_MAX_REGRESS = 0.10
+
+
+def is_staged(name: str) -> bool:
+    return any(m in name for m in STAGED_MARKERS)
+
+
+def compare(baseline: dict, new: dict, max_regress: float):
+    """Return (report_lines, regressions, missing).
+
+    regressions: staged benches whose new mean exceeds baseline by more
+    than max_regress (relative). missing: staged baseline benches absent
+    from the new run (reported, not fatal — filters exist).
+    """
+    report = []
+    regressions = []
+    missing = []
+    for name in sorted(baseline):
+        base_mean = baseline[name].get("mean_ms")
+        if base_mean is None:
+            continue
+        if name not in new:
+            if is_staged(name):
+                missing.append(name)
+            continue
+        new_mean = new[name].get("mean_ms")
+        if new_mean is None or base_mean <= 0:
+            continue
+        rel = (new_mean - base_mean) / base_mean
+        gate = is_staged(name)
+        flag = " "
+        if gate and rel > max_regress:
+            regressions.append((name, base_mean, new_mean, rel))
+            flag = "!"
+        report.append(
+            f"{flag} {name:<52} {base_mean:>10.3f} -> {new_mean:>10.3f} ms "
+            f"({rel:+7.1%}{', gated' if gate else ''})"
+        )
+    return report, regressions, missing
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--max-regress", type=float, default=DEFAULT_MAX_REGRESS,
+                    help="max allowed relative mean regression of staged "
+                         "paths (default 0.10)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.new) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read inputs: {e}", file=sys.stderr)
+        return 2
+
+    report, regressions, missing = compare(baseline, new, args.max_regress)
+    for line in report:
+        print(line)
+    for name in missing:
+        print(f"bench_diff: WARNING staged bench {name!r} missing from the "
+              f"new run (filtered?)", file=sys.stderr)
+    if regressions:
+        print(f"\nbench_diff: FAIL — {len(regressions)} staged path(s) "
+              f"regressed by more than {args.max_regress:.0%}:",
+              file=sys.stderr)
+        for name, b, n, rel in regressions:
+            print(f"  {name}: {b:.3f} -> {n:.3f} ms ({rel:+.1%})",
+                  file=sys.stderr)
+        return 1
+    print(f"\nbench_diff: OK ({len(report)} benches compared, staged paths "
+          f"within {args.max_regress:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
