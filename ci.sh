@@ -8,7 +8,8 @@
 #   4. cargo bench --bench micro -- --json BENCH_micro.json
 #   5. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
 #      snapshot (tools/bench_diff.py) — fails on >10% mean regression of
-#      the staged paths
+#      the staged paths (incl. the index-list SGD, resident-CG, and
+#      compacted long-tail series; presence of those series is asserted)
 # then asserts the bench JSON was produced, so upload/download-count
 # regressions (the staging discipline of rust/docs/PERFORMANCE.md) fail
 # loudly in review instead of silently drifting.
@@ -47,6 +48,16 @@ if [ ! -s BENCH_micro.json ]; then
     echo "ci.sh FAIL: bench did not write BENCH_micro.json (upload-count tracking broken)" >&2
     exit 1
 fi
+
+# the gated transfer-schedule series must actually be emitted — a filter
+# or refactor that silently drops them would leave the bench-diff gate
+# comparing nothing
+for series in "index-list" "resident state" "compacted tail" "segmented tail"; do
+    if ! grep -q "$series" BENCH_micro.json; then
+        echo "ci.sh FAIL: bench series \"$series\" missing from BENCH_micro.json" >&2
+        exit 1
+    fi
+done
 
 echo "== ci: bench-diff vs committed snapshot =="
 if [ -f BENCH_baseline.json ]; then

@@ -7,16 +7,43 @@ entry points which ``aot.py`` lowers to HLO text for the Rust runtime:
   grad_small     same at the small chunk size (removed-set / online terms)
   hvp            (w, v, x[Cs,da], mask)        -> hv[p]  (exact Hessian.v)
   lbfgs          (dws[m,p], dgs[m,p], v[p])    -> bv[p]  (quasi-Hessian.v)
-  grad_acc       (w, x, y, mask, acc[p+4])     -> acc + [g ; stats]
+  grad_acc       (w, x, y, mask, acc[p+8])     -> Kahan-chained acc
   grad_small_acc same at the small chunk size
   hvp_acc        (w, v, x, mask, acc[p])       -> acc + hv
+  grad_idx_acc   (w, x[C,da], y[C,k], idx[I] i32, mult[I], acc[p+8])
+                 -> gather rows idx on device, grad over them, chain acc
+  hvp_idx_acc    (w, v, x[C,da], idx[I] i32, mult[I], acc[p]) -> acc + hv
+  cg_dir         (state[3p+2]) -> d[p]          (CG direction slice)
+  cg_step        (state, ad_raw[p], consts[2]) -> state'   (one CG update)
+  cg_scalars     (state) -> [rs, dAd]           (2-float convergence pair)
+  cg_result      (state) -> z[p]                (solution slice)
 
 The ``*_acc`` variants are the fused multi-chunk reduction: the Rust
 runtime chains the accumulator output of chunk i into the accumulator
 input of chunk i+1, so a full multi-chunk gradient (or HVP) downloads
-ONE p(+4)-sized result instead of one literal per chunk. They are
-lowered UNTUPLED (configs.UNTUPLED_ENTRIES) so the output is a plain
-device buffer the next execution can consume.
+ONE result instead of one literal per chunk. They are lowered UNTUPLED
+(configs.UNTUPLED_ENTRIES) so the output is a plain device buffer the
+next execution can consume.
+
+The grad accumulator layout is ``[g[p] ; stats[4] ; comp[4]]``: the
+gradient components sum plainly (f32 always carried them), while the
+stats lanes chain through a Neumaier/Kahan compensated sum — ``comp``
+carries the low-order error so ``stats + comp`` (recombined in f64 on
+the host) keeps ``cnt``/``correct`` exact far past 2^24 rows and stops
+``loss_sum`` from drifting across long chunk chains.
+
+The ``*_idx_acc`` variants are the index-list execution path: instead
+of a C-float multiplicity mask they take ``idx_cap`` i32 row indices
+plus ``idx_cap`` f32 multiplicities (padding: idx 0 / mult 0), gather
+the rows from the RESIDENT chunk on device, and run the same masked-sum
+gradient/HVP over the gathered block — a sparse subset of a resident
+chunk ships O(b) scalars, not O(chunk) mask floats.
+
+The ``cg_*`` entries keep a conjugate-gradient solve's state resident:
+``state = [z ; r ; d ; rs ; dAd]`` (3p+2 floats) chains through
+``cg_step`` (which applies ``ad = ad_raw/navg + damp*d`` via
+``consts = [1/navg, damp]``), so each CG iteration uploads nothing and
+downloads only the 2-float ``cg_scalars`` pair.
 
 ``stats = [loss_sum, correct, cnt, gnorm2]``. All gradients are masked
 SUMS (not means) including the per-sample L2 term, i.e. the artifact
@@ -168,14 +195,56 @@ def lbfgs_entry(dws, dgs, v, *, use_pallas=True):
 # ---------------------------------------------------------------------------
 # fused-reduction (accumulator) wrappers
 
+# stats lanes carried by the grad accumulators: 4 sums + 4 compensations
+STATS_LANES = 4
+ACC_EXTRA = 2 * STATS_LANES
+
+
+def kahan_add(s, c, x):
+    """One Neumaier-compensated accumulation step, elementwise.
+
+    ``(s, c)`` is the running (sum, compensation) pair; returns the
+    updated pair. ``s + c`` (recombined in higher precision by the
+    consumer) carries ~2x the mantissa of a plain f32 sum, which keeps
+    integer counters exact past 2^24 and bounds loss_sum error
+    independent of the chain length.
+    """
+    t = s + x
+    low = jnp.where(jnp.abs(s) >= jnp.abs(x), (s - t) + x, (x - t) + s)
+    return t, c + low
+
 
 def acc_grad_entry(grad_fn):
     """Wrap a ``(w, x, y, mask) -> (g, stats)`` entry into the chainable
-    accumulator form ``(w, x, y, mask, acc[p+4]) -> acc + [g ; stats]``."""
+    accumulator form ``(w, x, y, mask, acc[p+8]) -> acc'`` with
+    ``acc = [g ; stats ; comp]`` and Kahan-compensated stats lanes."""
 
     def fn(w, x, y, mask, acc):
         g, stats = grad_fn(w, x, y, mask)
-        return acc + jnp.concatenate([g, stats])
+        gp = acc[:-ACC_EXTRA] + g
+        s, c = kahan_add(acc[-ACC_EXTRA:-STATS_LANES], acc[-STATS_LANES:],
+                         stats)
+        return jnp.concatenate([gp, s, c])
+
+    return fn
+
+
+def acc_grad_idx_entry(grad_fn):
+    """Index-list gather variant of :func:`acc_grad_entry`:
+    ``(w, x[C,da], y[C,k], idx[I] i32, mult[I], acc[p+8]) -> acc'``.
+
+    Gathers rows ``idx`` from the resident chunk on device and runs the
+    masked-sum gradient over the gathered block with ``mult`` as the
+    multiplicity mask (padding entries: idx 0, mult 0 — gathered but
+    contributing nothing). Only the 2·I-scalar index list ever ships.
+    """
+
+    def fn(w, x, y, idx, mult, acc):
+        g, stats = grad_fn(w, x[idx], y[idx], mult)
+        gp = acc[:-ACC_EXTRA] + g
+        s, c = kahan_add(acc[-ACC_EXTRA:-STATS_LANES], acc[-STATS_LANES:],
+                         stats)
+        return jnp.concatenate([gp, s, c])
 
     return fn
 
@@ -188,6 +257,61 @@ def acc_hvp_entry(hvp_fn):
         return acc + hvp_fn(w, v, x, mask)
 
     return fn
+
+
+def acc_hvp_idx_entry(hvp_fn):
+    """Index-list gather variant of :func:`acc_hvp_entry`:
+    ``(w, v, x[C,da], idx[I] i32, mult[I], acc[p]) -> acc + hv`` over
+    the gathered rows (same padding convention as grad_idx_acc)."""
+
+    def fn(w, v, x, idx, mult, acc):
+        return acc + hvp_fn(w, v, x[idx], mult)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# device-resident conjugate-gradient entries
+#
+# state = [z[p] ; r[p] ; d[p] ; rs ; dAd]  (3p+2 floats, uploaded once at
+# warm-up, chained through cg_step on device). One CG iteration is:
+#   d    = cg_dir(state)                    (buffer, feeds the HVP chain)
+#   ad   = hvp chain over the sample rows   (buffer)
+#   state = cg_step(state, ad, consts)      (buffer)
+#   [rs, dAd] = download(cg_scalars(state)) (the ONLY per-iter download)
+# mirroring the host loop in apps::influence (alpha guarded by the same
+# 1e-30 floor; beta = rs'/rs left unguarded exactly like the host code).
+
+
+def build_cg_entries(p):
+    """Return the four CG state-machine entry fns for parameter count p."""
+
+    def cg_dir(state):
+        return state[2 * p:3 * p]
+
+    def cg_scalars(state):
+        return state[3 * p:3 * p + 2]
+
+    def cg_result(state):
+        return state[:p]
+
+    def cg_step(state, ad_raw, consts):
+        z = state[:p]
+        r = state[p:2 * p]
+        d = state[2 * p:3 * p]
+        rs = state[3 * p]
+        ad = ad_raw * consts[0] + consts[1] * d
+        dad = jnp.dot(d, ad)
+        alpha = rs / jnp.maximum(dad, 1e-30)
+        z2 = z + alpha * d
+        r2 = r - alpha * ad
+        rs2 = jnp.dot(r2, r2)
+        beta = rs2 / rs
+        d2 = r2 + beta * d
+        return jnp.concatenate([z2, r2, d2, jnp.stack([rs2, dad])])
+
+    return {"cg_dir": cg_dir, "cg_step": cg_step,
+            "cg_scalars": cg_scalars, "cg_result": cg_result}
 
 
 # ---------------------------------------------------------------------------
@@ -250,9 +374,19 @@ def build_entries(cfg, use_pallas=True):
     def lbfgs_fn(dws, dgs, v):
         return lbfgs_entry(dws, dgs, v, use_pallas=use_pallas)
 
-    accspec = jax.ShapeDtypeStruct((p + 4,), f32)
+    accspec = jax.ShapeDtypeStruct((p + ACC_EXTRA,), f32)
     grad_acc_fn = acc_grad_entry(grad_fn)
     hvp_acc_fn = acc_hvp_entry(hvp_fn)
+
+    icap = cfg["idx_cap"]
+    idxspec = jax.ShapeDtypeStruct((icap,), jnp.int32)
+    multspec = jax.ShapeDtypeStruct((icap,), f32)
+    grad_idx_fn = acc_grad_idx_entry(grad_fn)
+    hvp_idx_fn = acc_hvp_idx_entry(hvp_fn)
+
+    statespec = jax.ShapeDtypeStruct((3 * p + 2,), f32)
+    constsspec = jax.ShapeDtypeStruct((2,), f32)
+    cg = build_cg_entries(p)
 
     return {
         "grad": (grad_fn, (wspec, *shapes(c))),
@@ -262,4 +396,13 @@ def build_entries(cfg, use_pallas=True):
         "grad_acc": (grad_acc_fn, (wspec, *shapes(c), accspec)),
         "grad_small_acc": (grad_acc_fn, (wspec, *shapes(cs), accspec)),
         "hvp_acc": (hvp_acc_fn, (wspec, wspec, *shapes_no_y(cs), wspec)),
+        "grad_idx_acc": (grad_idx_fn,
+                         (wspec, *shapes(c)[:2], idxspec, multspec, accspec)),
+        "hvp_idx_acc": (hvp_idx_fn,
+                        (wspec, wspec, shapes(c)[0], idxspec, multspec,
+                         wspec)),
+        "cg_dir": (cg["cg_dir"], (statespec,)),
+        "cg_step": (cg["cg_step"], (statespec, wspec, constsspec)),
+        "cg_scalars": (cg["cg_scalars"], (statespec,)),
+        "cg_result": (cg["cg_result"], (statespec,)),
     }, p

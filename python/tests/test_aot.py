@@ -35,6 +35,8 @@ class TestLowering:
         assert set(ENTRIES) == {
             "grad", "grad_small", "hvp", "lbfgs",
             "grad_acc", "grad_small_acc", "hvp_acc",
+            "grad_idx_acc", "hvp_idx_acc",
+            "cg_dir", "cg_step", "cg_scalars", "cg_result",
         }
         assert set(UNTUPLED_ENTRIES) <= set(ENTRIES)
         for name, cfg in CONFIGS.items():

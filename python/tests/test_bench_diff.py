@@ -66,6 +66,13 @@ class TestCompare:
         assert bench_diff.is_staged("mnist/delta rows staged reuse x10 (after shape)")
         assert not bench_diff.is_staged("sgd-delete (minibatch gather shape)")
         assert not bench_diff.is_staged("mnist/upload w (param literal)")
+        # the new gated series: index-list SGD, resident CG, compacted tail
+        assert bench_diff.is_staged(
+            "sgd-delete small-batch session.preview (index-list)")
+        assert bench_diff.is_staged("influence cg_solve_hvp (resident state)")
+        assert bench_diff.is_staged("long-tail session.preview (compacted tail)")
+        # the segmented long-tail is a before-shape: reported, not gated
+        assert not bench_diff.is_staged("long-tail preview (segmented tail)")
 
 
 class TestMain:

@@ -126,7 +126,8 @@ class TestMlpEntry:
 
 class TestAccEntries:
     """The fused-reduction wrappers: chaining the accumulator across
-    chunks must equal summing the per-chunk results."""
+    chunks must equal summing the per-chunk results, and the Kahan
+    lanes must keep the stats exact where naive f32 summation fails."""
 
     def test_grad_acc_chain_matches_per_chunk_sum(self):
         (w, x1, y1, m1), da, k = lr_case(10, c=64, d=8, k=3)
@@ -138,14 +139,50 @@ class TestAccEntries:
 
         acc_fn = model.acc_grad_entry(grad_fn)
         p = w.shape[0]
-        acc0 = jnp.zeros((p + 4,), jnp.float32)
+        acc0 = jnp.zeros((p + model.ACC_EXTRA,), jnp.float32)
         acc1 = acc_fn(w, x1, y1, m1, acc0)
         acc2 = acc_fn(w, x2, y2, m2, acc1)
         g1, s1 = grad_fn(w, x1, y1, m1)
         g2, s2 = grad_fn(w, x2, y2, m2)
-        want = jnp.concatenate([g1, s1]) + jnp.concatenate([g2, s2])
-        np.testing.assert_allclose(np.asarray(acc2), np.asarray(want),
+        got = np.asarray(acc2, np.float64)
+        np.testing.assert_allclose(got[:p], np.asarray(g1 + g2),
                                    rtol=1e-5, atol=1e-5)
+        # recombined stats (sum + compensation, the host-side convention)
+        stats = got[p:p + 4] + got[p + 4:]
+        np.testing.assert_allclose(stats, np.asarray(s1 + s2, np.float64),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_kahan_keeps_counts_exact_past_2p24(self):
+        # the ref-oracle for the f32 stats-precision fix: with cnt
+        # already at the f32 integer limit, naive summation of odd chunk
+        # counts rounds every step; the compensated lanes must recover
+        # the exact integer. The entry is driven through jax.jit exactly
+        # as the AOT pipeline lowers it, so this also proves XLA does
+        # not simplify the compensation away.
+        (w, x, y, mask), da, k = lr_case(20, c=64, d=4, k=3)
+        mask = mask.at[0].set(0.0)  # cnt = 63 per chunk (odd -> rounds)
+        reps = 10
+
+        def grad_fn(w, x, y, mask):
+            return model.lr_grad_entry(w, x, y, mask, da=da, k=k, lam=0.0,
+                                       use_pallas=False)
+
+        acc_fn = jax.jit(model.acc_grad_entry(grad_fn))
+        p = w.shape[0]
+        acc = jnp.zeros((p + model.ACC_EXTRA,), jnp.float32)
+        acc = acc.at[p + 2].set(2.0 ** 24)  # seed cnt at the cliff
+        for _ in range(reps):
+            acc = acc_fn(w, x, y, mask, acc)
+        got = np.asarray(acc, np.float64)
+        exact = 2.0 ** 24 + 63 * reps
+        # the naive seed behaviour demonstrably loses the low bits...
+        naive = np.float32(2.0 ** 24)
+        for _ in range(reps):
+            naive = np.float32(naive + np.float32(63.0))
+        assert float(naive) != exact, "test shape no longer exercises rounding"
+        # ...while sum + compensation recovers the exact count
+        assert got[p + 2] + got[p + 6] == exact, \
+            f"cnt drifted: {got[p + 2]} + {got[p + 6]} != {exact}"
 
     def test_hvp_acc_chain_matches_sum(self):
         (w, x, _y, mask), da, k = lr_case(12, c=64, d=6, k=3)
@@ -164,6 +201,129 @@ class TestAccEntries:
                                    rtol=1e-5, atol=1e-5)
 
 
+class TestIdxEntries:
+    """Index-list gather execution: shipping idx+mult scalars and
+    gathering on device must match the dense multiplicity-mask path."""
+
+    def _case(self, seed, c=128, d=8, k=3):
+        (w, x, y, mask), da, k = lr_case(seed, c=c, d=d, k=k)
+        return (w, x, y), da, k
+
+    def test_grad_idx_matches_dense_mask(self):
+        (w, x, y), da, k = self._case(30)
+        icap = 16
+
+        def grad_fn(w, x, y, mask):
+            return model.lr_grad_entry(w, x, y, mask, da=da, k=k, lam=5e-3,
+                                       use_pallas=False)
+
+        idx_fn = jax.jit(model.acc_grad_idx_entry(grad_fn))
+        p = w.shape[0]
+        acc0 = jnp.zeros((p + model.ACC_EXTRA,), jnp.float32)
+        # sparse selection with a multiplicity-2 row and idx-0 padding
+        idx = jnp.zeros((icap,), jnp.int32).at[0].set(3).at[1].set(77) \
+                 .at[2].set(40)
+        mult = jnp.zeros((icap,), jnp.float32).at[0].set(1.0).at[1].set(2.0) \
+                  .at[2].set(1.0)
+        got = idx_fn(w, x, y, idx, mult, acc0)
+        # dense equivalent: a full-chunk multiplicity mask
+        dense = jnp.zeros((x.shape[0],), jnp.float32).at[3].set(1.0) \
+                   .at[77].set(2.0).at[40].set(1.0)
+        g, s = grad_fn(w, x, y, dense)
+        gotn = np.asarray(got, np.float64)
+        np.testing.assert_allclose(gotn[:p], np.asarray(g),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gotn[p:p + 4] + gotn[p + 4:],
+                                   np.asarray(s, np.float64),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_hvp_idx_matches_dense_mask(self):
+        (w, x, _y), da, k = self._case(31)
+        rng = np.random.default_rng(32)
+        v = jnp.array(rng.normal(size=w.shape), jnp.float32)
+        icap = 8
+
+        def hvp_fn(w, v, x, mask):
+            return model.lr_hvp_entry(w, v, x, mask, da=da, k=k, lam=5e-3)
+
+        idx_fn = jax.jit(model.acc_hvp_idx_entry(hvp_fn))
+        idx = jnp.zeros((icap,), jnp.int32).at[0].set(10).at[1].set(5)
+        mult = jnp.zeros((icap,), jnp.float32).at[0].set(1.0).at[1].set(1.0)
+        got = idx_fn(w, v, x, idx, mult, jnp.zeros_like(w))
+        dense = jnp.zeros((x.shape[0],), jnp.float32).at[10].set(1.0) \
+                   .at[5].set(1.0)
+        want = hvp_fn(w, v, x, dense)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestCgEntries:
+    """The device-resident CG state machine: driving cg_dir/cg_step
+    exactly as the Rust loop does must solve an SPD system."""
+
+    def _spd(self, seed, p):
+        rng = np.random.default_rng(seed)
+        m = rng.normal(size=(p, p))
+        return (m @ m.T / p + np.eye(p)).astype(np.float64)
+
+    def test_cg_step_matches_host_formulas(self):
+        p = 12
+        cg = {k: jax.jit(v) for k, v in model.build_cg_entries(p).items()}
+        rng = np.random.default_rng(40)
+        z = rng.normal(size=p)
+        r = rng.normal(size=p)
+        d = rng.normal(size=p)
+        rs = float(np.float32(r.astype(np.float32) @ r.astype(np.float32)))
+        state = jnp.array(np.concatenate([z, r, d, [rs, 0.0]]), jnp.float32)
+        ad_raw = jnp.array(rng.normal(size=p), jnp.float32)
+        consts = jnp.array([0.5, 1e-3], jnp.float32)
+        np.testing.assert_allclose(np.asarray(cg["cg_dir"](state)),
+                                   np.asarray(state[2 * p:3 * p]))
+        out = np.asarray(cg["cg_step"](state, ad_raw, consts), np.float64)
+        # host reference in f64 (f32 state gives ~1e-5 agreement)
+        sf = np.asarray(state, np.float64)
+        ad = np.asarray(ad_raw, np.float64) * 0.5 + 1e-3 * sf[2 * p:3 * p]
+        dad = sf[2 * p:3 * p] @ ad
+        alpha = rs / max(dad, 1e-30)
+        z2 = sf[:p] + alpha * sf[2 * p:3 * p]
+        r2 = sf[p:2 * p] - alpha * ad
+        rs2 = r2 @ r2
+        beta = rs2 / rs
+        d2 = r2 + beta * sf[2 * p:3 * p]
+        want = np.concatenate([z2, r2, d2, [rs2, dad]])
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(cg["cg_scalars"](state)),
+                                   np.asarray(state[3 * p:]))
+        np.testing.assert_allclose(np.asarray(cg["cg_result"](state)),
+                                   np.asarray(state[:p]))
+
+    def test_cg_loop_solves_spd_system(self):
+        # end-to-end: the exact driving pattern of the Rust resident-CG
+        # loop (dir -> host matvec standing in for the HVP chain -> step
+        # -> scalars), against numpy's direct solve
+        p = 16
+        a = self._spd(41, p)
+        cg = {k: jax.jit(v) for k, v in model.build_cg_entries(p).items()}
+        rng = np.random.default_rng(42)
+        b = rng.normal(size=p).astype(np.float32)
+        rs0 = float(b.astype(np.float64) @ b.astype(np.float64))
+        state = jnp.array(np.concatenate([np.zeros(p), b, b, [rs0, 0.0]]),
+                          jnp.float32)
+        consts = jnp.array([1.0, 0.0], jnp.float32)  # A applied as-is
+        for _ in range(60):
+            d = np.asarray(cg["cg_dir"](state), np.float64)
+            ad = jnp.array(a @ d, jnp.float32)
+            state = cg["cg_step"](state, ad, consts)
+            rs, _dad = np.asarray(cg["cg_scalars"](state), np.float64)
+            if np.sqrt(rs) / np.sqrt(rs0) < 1e-6:
+                break
+        z = np.asarray(cg["cg_result"](state), np.float64)
+        want = np.linalg.solve(a, b.astype(np.float64))
+        denom = max(1.0, np.abs(want).max())
+        np.testing.assert_allclose(z / denom, want / denom,
+                                   rtol=2e-3, atol=2e-3)
+
+
 class TestBuildEntries:
     @pytest.mark.parametrize("name", ["small", "smallnn"])
     def test_entries_trace(self, name):
@@ -172,12 +332,21 @@ class TestBuildEntries:
         assert set(entries) == {
             "grad", "grad_small", "hvp", "lbfgs",
             "grad_acc", "grad_small_acc", "hvp_acc",
+            "grad_idx_acc", "hvp_idx_acc",
+            "cg_dir", "cg_step", "cg_scalars", "cg_result",
         }
         fn, shapes = entries["grad"]
         lowered = jax.jit(fn).lower(*shapes)
         assert lowered is not None
         fn, shapes = entries["grad_acc"]
-        assert shapes[-1].shape == (p + 4,)
+        assert shapes[-1].shape == (p + model.ACC_EXTRA,)
+        assert jax.jit(fn).lower(*shapes) is not None
+        fn, shapes = entries["grad_idx_acc"]
+        assert shapes[3].shape == (cfg["idx_cap"],)
+        assert shapes[3].dtype == jnp.int32
+        assert jax.jit(fn).lower(*shapes) is not None
+        fn, shapes = entries["cg_step"]
+        assert shapes[0].shape == (3 * p + 2,)
         assert jax.jit(fn).lower(*shapes) is not None
         assert p > 0
 

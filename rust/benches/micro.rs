@@ -4,11 +4,13 @@
 //! Covers the per-iteration costs DeltaGrad's complexity analysis (§2.4)
 //! is made of: full-gradient chunk execution, removed-set gradient in
 //! both the seed per-iteration-re-upload shape and the staged-context
-//! shape, host vs artifact L-BFGS B·v, parameter upload, the pure vector
-//! step arithmetic, and end-to-end batch-delete / sgd-delete (gather vs
-//! resident-mask) / online passes. Every bench reports mean ± std AND
-//! per-repetition device traffic (uploads / executions / result
-//! downloads), so the staging discipline AND the fused-reduction
+//! shape, host vs artifact L-BFGS B·v (one-shot vs resident history),
+//! parameter upload, the pure vector step arithmetic, and end-to-end
+//! batch-delete / sgd-delete (gather vs resident-mask vs sparse
+//! index-list) / online / long-tail (segmented vs compacted) passes,
+//! plus the device-resident influence CG solve. Every bench reports
+//! mean ± std AND per-repetition device traffic (uploads / executions /
+//! result downloads), so the staging discipline AND the fused-reduction
 //! download budget of docs/PERFORMANCE.md are visible in numbers.
 //!
 //! `--json <path>` additionally writes the results as JSON
@@ -187,6 +189,12 @@ fn main() -> anyhow::Result<()> {
         bench(out, &eng.rt, &format!("{model}/lbfgs B·v (AOT artifact)"), 2, 20, || {
             exes.lbfgs_bv_artifact(&eng.rt, &dws, &dgs, &v).map(|_| ())
         })?;
+        // the resident-history variant: the 2·m·p history floats stage
+        // once, each B·v ships only the direction vector
+        let lbufs = exes.lbfgs_stage_history(&eng.rt, &dws, &dgs)?;
+        bench(out, &eng.rt, &format!("{model}/lbfgs B·v (artifact, resident history)"), 2, 20, || {
+            exes.lbfgs_bv_staged(&eng.rt, &lbufs, &v).map(|_| ())
+        })?;
 
         // pure step arithmetic
         let g = v.clone();
@@ -260,6 +268,40 @@ fn main() -> anyhow::Result<()> {
         bench(out, &rt, "sgd-delete session.preview (resident masks)", 1, 5, || {
             session.preview(&edit).map(|_| ())
         })?;
+
+        // sparse minibatch: b=64 crosses the density threshold, so
+        // exact iterations ship 2·idx_cap-scalar index lists per
+        // touched chunk instead of chunk-float masks
+        let mut hp_sparse = hp.clone();
+        hp_sparse.batch = 64;
+        let session_sparse = SessionBuilder::new("small")
+            .hyper_params(hp_sparse)
+            .datasets(ds.clone(), synth::train_test_for_spec(&spec, 7, None, None).1)
+            .build_in(&mut eng)?;
+        let edit_sparse = Edit::Delete(removed.clone());
+        bench(out, &rt, "sgd-delete small-batch session.preview (index-list)", 1, 5, || {
+            session_sparse.preview(&edit_sparse).map(|_| ())
+        })?;
+    }
+
+    if want("influence") {
+        println!("== influence H⁻¹v solve (small, 25 CG iters, 1024-row sample) ==");
+        let exes = eng.model("small")?;
+        let spec = exes.spec.clone();
+        let (ds, _test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut rng = Rng::new(19);
+        let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.05).collect();
+        let b: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32()).collect();
+        let rows: Vec<usize> = (0..ds.n).collect();
+        let rt = eng.runtime();
+        // resident CG: state chained on device, one 2-float download
+        // per iteration (tol=0 pins the iteration count)
+        bench(&mut results, &rt, "influence cg_solve_hvp (resident state)", 1, 5, || {
+            deltagrad::apps::influence::cg_solve_hvp(
+                &exes, &rt, &ds, &rows, &w, &b, 1e-3, 25, 0.0,
+            )
+            .map(|_| ())
+        })?;
     }
 
     if want("online") {
@@ -281,6 +323,41 @@ fn main() -> anyhow::Result<()> {
                 (0..4).map(|i| Edit::delete_row(next_victim + i)).collect();
             next_victim += 4;
             session.commit(Edit::group(edits)).map(|_| ())
+        })?;
+    }
+
+    if want("long-tail") {
+        println!("== long-tail serving session (small, T=40, 12 one-row adds) ==");
+        let spec = eng.spec("small")?.clone();
+        let (ds, test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        // the before-shape: compaction disabled, 12 segments of one row
+        // each — every exact iteration pays 12 tiny tail launches
+        let mut segmented = SessionBuilder::new("small")
+            .hyper_params(hp.clone())
+            .datasets(ds.clone(), test.clone())
+            .tail_compact_watermark(usize::MAX)
+            .build_in(&mut eng)?;
+        // the after-shape: default watermark folds the same adds into
+        // full-size resident chunks
+        let mut compacted = SessionBuilder::new("small")
+            .hyper_params(hp)
+            .datasets(ds, test)
+            .build_in(&mut eng)?;
+        for i in 0..12u64 {
+            let add = synth::addition_rows(&spec, 200 + i, 1);
+            segmented.commit(Edit::Add(add.clone()))?;
+            compacted.commit(Edit::Add(add))?;
+        }
+        let rt = eng.runtime();
+        let edit = Edit::delete_row(3);
+        bench(&mut results, &rt, "long-tail preview (segmented tail)", 1, 5, || {
+            segmented.preview(&edit).map(|_| ())
+        })?;
+        bench(&mut results, &rt, "long-tail session.preview (compacted tail)", 1, 5, || {
+            compacted.preview(&edit).map(|_| ())
         })?;
     }
 

@@ -8,25 +8,76 @@
 //! ```
 //!
 //! where H is the empirical Hessian of the REMAINING objective at w*.
-//! We solve H z = Σ_R ∇F_i(w*) with conjugate gradients; every H·v uses
-//! the exact `hvp` artifact over sampled rows (Hessian-free, like the
-//! LiSSA approach in the original paper). This comparator is cheap but —
-//! unlike DeltaGrad — its error does NOT vanish as o(r/n): that contrast
-//! is experiment d3.
+//! We solve H z = Σ_R ∇F_i(w*) with DEVICE-RESIDENT conjugate
+//! gradients: the solver state chains through the `cg_*` artifacts and
+//! every H·v runs the exact HVP chain over sampled rows (Hessian-free,
+//! like the LiSSA approach in the original paper) — via resident
+//! index-list gathers on the session path, so an iteration uploads
+//! nothing and downloads two floats. This comparator is cheap but —
+//! unlike DeltaGrad — its error does NOT vanish as o(r/n): that
+//! contrast is experiment d3.
 
 use anyhow::Result;
 
 use crate::data::{Dataset, IndexSet};
-use crate::runtime::engine::ModelExes;
+use crate::runtime::engine::{ModelExes, PassCtx, Staged, StagedIdx, StagedRows};
 use crate::runtime::Runtime;
 use crate::session::Session;
-use crate::util::vecmath::{axpy, dot};
+use crate::util::vecmath::axpy;
+
+/// Where a resident CG solve gets its H·v chain from.
+enum HvpSource<'a> {
+    /// explicitly gathered + staged sample rows (the engine-level path)
+    Rows(&'a StagedRows),
+    /// index lists over an already-resident dataset: nothing row-shaped
+    /// ever shipped (the session path)
+    Idx(&'a Staged, &'a StagedIdx),
+}
+
+/// Device-resident CG solve of `(H/navg + damp·I) z = b`: the solver
+/// state `[z ; r ; d ; rs]` lives in one chained device buffer
+/// (`ModelExes::cg_init` / `cg_advance`), so after the warm-up uploads
+/// (the state + the `[1/navg, damp]` constants) each iteration uploads
+/// NOTHING and downloads one 2-float scalar pair — the direction vector
+/// feeds the HVP chain as a buffer, never revisiting the host. Mirrors
+/// the retired host loop exactly (same 1e-30 alpha floor, same
+/// `√rs/‖b‖ < tol` stop, f32 instead of f64 dot products).
+#[allow(clippy::too_many_arguments)]
+fn cg_solve_resident(
+    exes: &ModelExes,
+    rt: &Runtime,
+    src: HvpSource<'_>,
+    ctx: &PassCtx,
+    b: &[f32],
+    navg: f64,
+    damp: f32,
+    iters: usize,
+    tol: f64,
+) -> Result<Vec<f32>> {
+    let (mut st, rs0) = exes.cg_init(rt, b, (1.0 / navg.max(1.0)) as f32, damp)?;
+    let b_norm = rs0.sqrt().max(1e-30);
+    let mut rs = rs0;
+    for _ in 0..iters {
+        if rs.sqrt() / b_norm < tol {
+            break;
+        }
+        let d = exes.cg_direction(rt, &st)?;
+        let ad = match &src {
+            HvpSource::Rows(sr) => exes.hvp_chain_rows(rt, sr, ctx, &d)?,
+            HvpSource::Idx(staged, sidx) => exes.hvp_chain_idx(rt, staged, sidx, ctx, &d)?,
+        };
+        let (rs_new, _dad) = exes.cg_advance(rt, &mut st, ad.as_ref())?;
+        rs = rs_new;
+    }
+    exes.cg_solution(rt, &st)
+}
 
 /// Conjugate-gradient solve of (H + damp·I) z = b where H·v is the
 /// averaged Hessian over `rows` at parameters `w`.
 ///
-/// The Hessian-sample rows and the (fixed) parameter vector are staged
-/// once; each CG iteration's H·v uploads only the direction vector.
+/// The Hessian-sample rows, the (fixed) parameter vector, and the CG
+/// state are staged once; iterations upload nothing and download one
+/// scalar pair (see [`cg_solve_resident`]).
 #[allow(clippy::too_many_arguments)]
 pub fn cg_solve_hvp(
     exes: &ModelExes,
@@ -39,37 +90,19 @@ pub fn cg_solve_hvp(
     iters: usize,
     tol: f64,
 ) -> Result<Vec<f32>> {
-    let p = b.len();
-    let navg = rows.len() as f64;
     let sr = exes.stage_rows(rt, ds, rows)?;
     let ctx = exes.pass_ctx(rt, w)?;
-    let hv = |v: &[f32]| -> Result<Vec<f32>> {
-        let mut h = exes.hvp_rows_staged(rt, &sr, &ctx, v)?;
-        crate::util::vecmath::scale(&mut h, (1.0 / navg) as f32);
-        axpy(damp, v, &mut h);
-        Ok(h)
-    };
-    let mut z = vec![0.0f32; p];
-    let mut r = b.to_vec(); // residual b − Az (z=0)
-    let mut d = r.clone();
-    let mut rs = dot(&r, &r);
-    let b_norm = rs.sqrt().max(1e-30);
-    for _ in 0..iters {
-        if rs.sqrt() / b_norm < tol {
-            break;
-        }
-        let ad = hv(&d)?;
-        let alpha = rs / dot(&d, &ad).max(1e-30);
-        axpy(alpha as f32, &d, &mut z);
-        axpy(-(alpha as f32), &ad, &mut r);
-        let rs_new = dot(&r, &r);
-        let beta = rs_new / rs;
-        for (di, ri) in d.iter_mut().zip(&r) {
-            *di = ri + beta as f32 * *di;
-        }
-        rs = rs_new;
-    }
-    Ok(z)
+    cg_solve_resident(
+        exes,
+        rt,
+        HvpSource::Rows(&sr),
+        &ctx,
+        b,
+        rows.len() as f64,
+        damp,
+        iters,
+        tol,
+    )
 }
 
 /// One-shot influence-function deletion update at the trained optimum.
@@ -90,19 +123,77 @@ impl Default for InfluenceOpts {
 
 /// One-shot influence-function deletion update at the session's current
 /// parameters (the D.3 comparator against `session.preview`).
+///
+/// This is the serving-time hot path, and it ships O(r + sample)
+/// SCALARS total: the right-hand side executes the removed rows against
+/// the session's RESIDENT base (`grad_staged_subset` — index lists
+/// below the density threshold), the Hessian sample becomes resident
+/// index-list buffers (`stage_subset_indices`, reused by every H·v),
+/// and the CG state stays on device. No row is ever re-uploaded.
 pub fn influence_delete(
     session: &Session,
     removed: &IndexSet,
     opts: &InfluenceOpts,
 ) -> Result<(Vec<f32>, f64)> {
-    influence_delete_raw(
-        session.exes(),
-        session.runtime(),
-        session.train_dataset(),
-        session.w(),
-        removed,
-        opts,
-    )
+    let exes = session.exes();
+    let rt = session.runtime();
+    let ds = session.train_dataset();
+    let w_star = session.w();
+    let t0 = std::time::Instant::now();
+    let n = ds.n;
+    let r = removed.len();
+    let ctx = exes.pass_ctx(rt, w_star)?;
+    // b = mean over R of ∇F_i(w*), over the resident base rows
+    let (mut b, _) = exes.grad_staged_subset(rt, session.staged_base(), &ctx, removed.as_slice())?;
+    crate::util::vecmath::scale(&mut b, 1.0 / r.max(1) as f32);
+    let sample = hessian_sample(n, removed, opts);
+    let navg = sample.len() as f64;
+    // the sample rows are already resident: only index lists ship, once
+    // (a config with idx_cap=0 disables index lists — fall back to
+    // gather-staging the sample, still resident across iterations)
+    let z = if exes.spec.idx_cap > 0 {
+        let sidx = exes.stage_subset_indices(rt, session.staged_base(), &sample)?;
+        cg_solve_resident(
+            exes,
+            rt,
+            HvpSource::Idx(session.staged_base(), &sidx),
+            &ctx,
+            &b,
+            navg,
+            opts.damp,
+            opts.cg_iters,
+            opts.cg_tol,
+        )?
+    } else {
+        let sr = exes.stage_rows(rt, ds, &sample)?;
+        cg_solve_resident(
+            exes,
+            rt,
+            HvpSource::Rows(&sr),
+            &ctx,
+            &b,
+            navg,
+            opts.damp,
+            opts.cg_iters,
+            opts.cg_tol,
+        )?
+    };
+    let mut w = w_star.to_vec();
+    axpy(r as f32 / (n - r) as f32, &z, &mut w);
+    Ok((w, t0.elapsed().as_secs_f64()))
+}
+
+/// Sample rows estimating H from the REMAINING (non-removed) rows.
+fn hessian_sample(n: usize, removed: &IndexSet, opts: &InfluenceOpts) -> Vec<usize> {
+    let remaining = removed.complement(n);
+    if remaining.len() <= opts.hessian_sample {
+        return remaining;
+    }
+    let mut rng = crate::util::Rng::new(opts.seed);
+    rng.sample_distinct(remaining.len(), opts.hessian_sample)
+        .into_iter()
+        .map(|j| remaining[j])
+        .collect()
 }
 
 /// Engine-level core of [`influence_delete`] (explicit model/parameters;
@@ -121,17 +212,7 @@ pub fn influence_delete_raw(
     // b = mean over R of ∇F_i(w*)
     let (mut b, _) = exes.grad_sum_rows(rt, ds, removed.as_slice(), w_star)?;
     crate::util::vecmath::scale(&mut b, 1.0 / r.max(1) as f32);
-    // Hessian sample from the REMAINING rows
-    let remaining = removed.complement(n);
-    let mut rng = crate::util::Rng::new(opts.seed);
-    let sample: Vec<usize> = if remaining.len() <= opts.hessian_sample {
-        remaining
-    } else {
-        rng.sample_distinct(remaining.len(), opts.hessian_sample)
-            .into_iter()
-            .map(|j| remaining[j])
-            .collect()
-    };
+    let sample = hessian_sample(n, removed, opts);
     let z = cg_solve_hvp(exes, rt, ds, &sample, w_star, &b, opts.damp, opts.cg_iters, opts.cg_tol)?;
     // w_{-R} ≈ w* + (r/(n−r)) H^{-1} ḡ_R
     let mut w = w_star.to_vec();
@@ -142,11 +223,14 @@ pub fn influence_delete_raw(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::vecmath::dot;
 
     #[test]
     fn cg_math_on_host_spd_system() {
-        // sanity-check the CG kernel logic against a host matvec by
-        // replicating its loop with a closure-backed A (no XLA needed)
+        // sanity-check the CG recurrence (the exact formulas the
+        // cg_step artifact implements; see python test_model.py
+        // TestCgEntries for the device-side oracle) against a host
+        // matvec with a closure-backed A (no XLA needed)
         let n = 8;
         let mut rng = crate::util::Rng::new(4);
         // SPD A = M M^T + I

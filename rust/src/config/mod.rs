@@ -36,6 +36,9 @@ pub struct ModelSpec {
     pub chunk: usize,
     /// rows per `grad_small` / `hvp` executable call
     pub chunk_small: usize,
+    /// index-list capacity of the `*_idx_acc` gather entries (i32
+    /// indices + f32 multiplicities shipped per group)
+    pub idx_cap: usize,
     /// L2 regularization coefficient (baked into the artifacts)
     pub lam: f32,
     /// L-BFGS history size baked into the `lbfgs` artifact
@@ -47,6 +50,20 @@ pub struct ModelSpec {
 impl ModelSpec {
     pub fn artifact_path(&self, dir: &Path, entry: &str) -> PathBuf {
         dir.join(format!("{}_{}.hlo.txt", self.name, entry))
+    }
+
+    /// The density threshold of the subset-execution auto-select: does
+    /// the index-list path ship strictly fewer scalars than a
+    /// `chunk`-float multiplicity mask for a chunk with
+    /// `distinct_rows` selected rows? Each index-list group costs
+    /// `2·idx_cap` scalars (i32 indices + f32 multiplicities), so index
+    /// lists win below a selected-row density of roughly
+    /// `chunk / (2·idx_cap)` rows per chunk.
+    pub fn idx_list_wins(&self, distinct_rows: usize) -> bool {
+        if distinct_rows == 0 || self.idx_cap == 0 {
+            return false;
+        }
+        2 * distinct_rows.div_ceil(self.idx_cap) * self.idx_cap < self.chunk
     }
 }
 
@@ -173,6 +190,7 @@ pub fn parse_manifest_str(text: &str) -> Result<BTreeMap<String, ModelSpec>> {
             hidden: usize_of("hidden")?,
             chunk: usize_of("chunk")?,
             chunk_small: usize_of("chunk_small")?,
+            idx_cap: usize_of("idx_cap")?,
             lam: get("lam")?.parse::<f32>().context("lam")?,
             m: usize_of("m")?,
             n_train: usize_of("n_train")?,
@@ -213,8 +231,8 @@ mod tests {
 
     const SAMPLE: &str = "\
 # comment
-config small model=lr d=20 da=21 k=3 p=63 hidden=0 chunk=256 chunk_small=128 lam=0.005 m=2 n_train=1024 n_test=256
-config smallnn model=mlp d=20 da=21 k=3 p=387 hidden=16 chunk=256 chunk_small=128 lam=0.001 m=2 n_train=1024 n_test=256
+config small model=lr d=20 da=21 k=3 p=63 hidden=0 chunk=256 chunk_small=128 idx_cap=64 lam=0.005 m=2 n_train=1024 n_test=256
+config smallnn model=mlp d=20 da=21 k=3 p=387 hidden=16 chunk=256 chunk_small=128 idx_cap=64 lam=0.001 m=2 n_train=1024 n_test=256
 ";
 
     #[test]
@@ -225,6 +243,7 @@ config smallnn model=mlp d=20 da=21 k=3 p=387 hidden=16 chunk=256 chunk_small=12
         assert_eq!(s.model, ModelKind::Lr);
         assert_eq!((s.d, s.da, s.k, s.p), (20, 21, 3, 63));
         assert_eq!(s.chunk, 256);
+        assert_eq!(s.idx_cap, 64);
         assert!((s.lam - 0.005).abs() < 1e-9);
         let n = &specs["smallnn"];
         assert_eq!(n.model, ModelKind::Mlp);
@@ -242,6 +261,17 @@ config smallnn model=mlp d=20 da=21 k=3 p=387 hidden=16 chunk=256 chunk_small=12
     fn rejects_bad_da() {
         let bad = SAMPLE.replace("da=21", "da=22");
         assert!(parse_manifest_str(&bad).is_err());
+    }
+
+    #[test]
+    fn idx_density_threshold_is_payload_breakeven() {
+        let specs = parse_manifest_str(SAMPLE).unwrap();
+        let s = &specs["small"]; // chunk=256, idx_cap=64
+        assert!(!s.idx_list_wins(0));
+        assert!(s.idx_list_wins(1)); // one group: 128 scalars < 256 floats
+        assert!(s.idx_list_wins(64)); // still one group
+        assert!(!s.idx_list_wins(65)); // two groups: 256 scalars, no win
+        assert!(!s.idx_list_wins(256)); // dense: mask path
     }
 
     #[test]

@@ -197,6 +197,7 @@ mod tests {
             execs: 50,
             downloads: 45,
             download_floats: 3000,
+            ..Default::default()
         });
         m.record_group(1, &[Duration::from_millis(1)]);
         m.record_transfers(&TransferStats {
@@ -205,6 +206,7 @@ mod tests {
             execs: 52,
             downloads: 47,
             download_floats: 3200,
+            ..Default::default()
         });
         assert_eq!(m.uploads, 84);
         assert_eq!(m.upload_floats, 2200);

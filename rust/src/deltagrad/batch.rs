@@ -67,8 +67,14 @@ pub(crate) enum Change<'a> {
 pub(crate) struct GdResources<'a> {
     /// the (possibly removal-masked) resident base dataset
     pub staged_reuse: Option<&'a Staged>,
-    /// the session's committed added rows (device-resident, append-only
-    /// segments included in every exact full-gradient evaluation)
+    /// the session's compacted tail: accumulated added rows re-staged
+    /// as full-size `Staged` chunks once the segmented tail crossed the
+    /// compaction watermark (executes ⌈tail/chunk⌉ launches instead of
+    /// one per `chunk_small` segment group)
+    pub tail_compact: Option<&'a Staged>,
+    /// the session's committed added rows not yet compacted
+    /// (device-resident, append-only segments included in every exact
+    /// full-gradient evaluation)
     pub tail: &'a [StagedRows],
     /// effective training-set size the base + tail represent
     pub n_current: Option<f64>,
@@ -191,10 +197,11 @@ pub(crate) fn run_gd(
         if exact {
             n_exact += 1;
             // full-data gradient: resident base chunks + the committed
-            // tail segments, fused into one on-device reduction (a
-            // single result download; no-op tail for the shims)
+            // tail (compacted chunks, then leftover segments), fused
+            // into one on-device reduction (a single result download;
+            // no-op tail for the shims)
             let (g_full_sum, stats) =
-                exes.grad_staged_with_tail(rt, staged_full, res.tail, &ctx)?;
+                exes.grad_staged_with_tail(rt, staged_full, res.tail_compact, res.tail, &ctx)?;
             last_stats = stats;
             // harvest Δw = w^I − w_t before stepping (owned, no scratch
             // clone)
@@ -296,9 +303,12 @@ pub fn add_gd(
 /// The removal set is staged once; per-iteration the removed∩minibatch
 /// term executes over the resident rows with a multiplicity mask. The
 /// full minibatch, which changes every iteration, ALSO executes against
-/// the resident staged dataset: only a `chunk`-float multiplicity mask
-/// per touched chunk is uploaded (sampled-with-replacement duplicates
-/// included), never the rows themselves.
+/// the resident staged dataset: per touched chunk the payload is either
+/// a `chunk`-float multiplicity mask or — below the density threshold —
+/// a compact i32 index + multiplicity list the device gathers
+/// (`ModelExes::grad_staged_subset` auto-selects; see
+/// `ModelSpec::idx_list_wins`). Sampled-with-replacement duplicates
+/// ride multiplicity values; the rows themselves never ship.
 #[deprecated(note = "construct a deltagrad::session::Session and use \
                      preview with an Edit (see docs/API.md)")]
 pub fn delete_sgd(
@@ -416,8 +426,9 @@ pub(crate) fn run_sgd_delete(
         if exact {
             n_exact += 1;
             // full-minibatch gradient at w^I (needed for Δg anyway) over
-            // the RESIDENT chunks: uploads are one multiplicity mask per
-            // touched chunk, O(⌈n/chunk⌉) small vectors, not O(b) rows
+            // the RESIDENT chunks: the payload per touched chunk is a
+            // multiplicity mask or (sparse batches) an index list the
+            // device gathers — never the rows
             let (g_bt_sum, stats) = exes.grad_staged_subset(rt, staged_full, &ctx, batch)?;
             last_stats = stats;
             let dw_pair: Vec<f32> = w.iter().zip(wt).map(|(a, b)| a - b).collect();

@@ -9,10 +9,17 @@
 //! * [`Staged`] — a full dataset uploaded once (X / one-hot Y / mask per
 //!   chunk); per-request work only flips masks, and per-iteration row
 //!   subsets (the SGD minibatch) execute against the resident chunks
-//!   with a multiplicity mask ([`ModelExes::grad_staged_subset`]).
+//!   ([`ModelExes::grad_staged_subset`]) — shipping either a
+//!   multiplicity mask or, below the density threshold
+//!   (`ModelSpec::idx_list_wins`), a compact i32 index + f32
+//!   multiplicity list that the `*_idx_acc` artifacts gather on device
+//!   (O(b) scalars instead of O(chunk) mask floats).
 //! * [`StagedRows`] — a fixed row subset (the removed/added delta rows of
 //!   one retrain call) gathered + uploaded **once per retrain** and
 //!   reused across all `hp.t` iterations.
+//! * [`StagedIdx`] — a fixed row subset of an already-resident [`Staged`]
+//!   dataset, expressed as resident index-list buffers: nothing
+//!   row-shaped ever ships (the CG Hessian-sample path).
 //! * [`PassCtx`] — one iteration's parameter vector uploaded **once per
 //!   iteration** and shared between the delta-row gradient, the full
 //!   staged gradient, and HVP calls.
@@ -21,10 +28,13 @@
 //! the chainable `*_acc` artifact, threading an accumulator buffer from
 //! chunk to chunk so partials never leave the device — a gradient (or
 //! HVP) call performs exactly ONE result download regardless of chunk
-//! count. All uploads/executions/downloads are tallied by
-//! `Runtime::counters`, so the once-per-pass / once-per-iteration /
-//! once-per-call invariants are testable (tests/staging.rs) and
-//! benchable (benches/micro.rs --json).
+//! count. The conjugate-gradient solver state ([`CgState`]) chains the
+//! same way: after a one-time warm-up upload each CG iteration uploads
+//! nothing and downloads a 2-float scalar pair. All
+//! uploads/executions/downloads are tallied by `Runtime::counters`, so
+//! the once-per-pass / once-per-iteration / once-per-call invariants
+//! are testable (tests/staging.rs) and benchable (benches/micro.rs
+//! --json).
 
 use std::collections::BTreeMap;
 
@@ -34,15 +44,24 @@ use super::{literal_f32, Runtime};
 use crate::config::{self, ModelSpec};
 use crate::data::{Dataset, IndexSet};
 
+/// Number of stats lanes carried behind the gradient in the fused
+/// accumulator: 4 sums + 4 Kahan compensations (`[loss_sum, correct,
+/// cnt, gnorm2 ; c_loss, c_correct, c_cnt, c_gnorm2]`). Mirrors
+/// python/compile/model.py `ACC_EXTRA`.
+pub const ACC_EXTRA: usize = 8;
+
 /// Masked-sum statistics returned by the grad artifacts:
 /// `[loss_sum, correct, cnt, gnorm2]`.
 ///
 /// With the fused reduction these accumulate across chunks ON DEVICE in
-/// f32 (the gradient components always did); `correct`/`cnt` therefore
-/// count exactly only up to 2^24 (~16.7M) rows per call, and `loss_sum`
-/// carries f32 rounding across chunks. The pre-fusion code summed
-/// per-chunk stats in f64 on the host at the price of one download per
-/// chunk — see the PERFORMANCE.md gap entry before staging >16M rows.
+/// f32, but each lane chains through a Neumaier/Kahan compensated sum
+/// (the `*_acc` artifacts carry a second compensation float per lane);
+/// recombining `sum + compensation` in f64 here keeps `correct`/`cnt`
+/// exact far past 2^24 rows per call and bounds `loss_sum` rounding
+/// independent of the chunk-chain length — restoring the accuracy of
+/// the pre-fusion per-chunk f64 host summation without its one
+/// download per chunk (oracle:
+/// python/tests/test_model.py::test_kahan_keeps_counts_exact_past_2p24).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Stats {
     pub loss_sum: f64,
@@ -52,12 +71,15 @@ pub struct Stats {
 }
 
 impl Stats {
-    fn from_vec(v: &[f32]) -> Self {
+    /// Recombine the `[sums ; compensations]` lanes of a downloaded
+    /// accumulator tail (length [`ACC_EXTRA`]).
+    fn from_acc_tail(v: &[f32]) -> Self {
+        let lane = |i: usize| v[i] as f64 + v[i + 4] as f64;
         Stats {
-            loss_sum: v[0] as f64,
-            correct: v[1] as f64,
-            cnt: v[2] as f64,
-            gnorm2: v[3] as f64,
+            loss_sum: lane(0),
+            correct: lane(1),
+            cnt: lane(2),
+            gnorm2: lane(3),
         }
     }
 
@@ -89,16 +111,24 @@ impl Stats {
 /// The compiled executables for one dataset family.
 ///
 /// Only the chainable accumulator artifacts (`grad_acc` /
-/// `grad_small_acc` / `hvp_acc`) and the `lbfgs` artifact are loaded;
-/// the tupled per-chunk entries are still emitted by the AOT step for
-/// ablations and debugging but the hot path no longer touches them.
+/// `grad_small_acc` / `hvp_acc`, their `*_idx_acc` gather variants and
+/// the `cg_*` solver-state entries) and the `lbfgs` artifact are
+/// loaded; the tupled per-chunk entries are still emitted by the AOT
+/// step for ablations and debugging but the hot path no longer touches
+/// them.
 pub struct ModelExes {
     pub spec: ModelSpec,
     grad_acc: xla::PjRtLoadedExecutable,
     grad_small_acc: xla::PjRtLoadedExecutable,
     hvp_acc: xla::PjRtLoadedExecutable,
+    grad_idx_acc: xla::PjRtLoadedExecutable,
+    hvp_idx_acc: xla::PjRtLoadedExecutable,
+    cg_dir: xla::PjRtLoadedExecutable,
+    cg_step: xla::PjRtLoadedExecutable,
+    cg_scalars: xla::PjRtLoadedExecutable,
+    cg_result: xla::PjRtLoadedExecutable,
     lbfgs: xla::PjRtLoadedExecutable,
-    /// resident `[p+4]` zero accumulator seeding every grad chain
+    /// resident `[p+ACC_EXTRA]` zero accumulator seeding every grad chain
     acc0_grad: xla::PjRtBuffer,
     /// resident `[p]` zero accumulator seeding every HVP chain
     acc0_hvp: xla::PjRtBuffer,
@@ -148,6 +178,37 @@ impl StagedRows {
     pub(crate) fn empty_for_tests(n_rows: usize, chunk: usize) -> Self {
         StagedRows { chunks: Vec::new(), n_rows, chunk }
     }
+
+    /// Device launches one gradient over this subset costs (one per
+    /// `chunk_small` group) — the tail-compaction accounting unit.
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
+/// One resident index-list group: `idx_cap` i32 row indices + `idx_cap`
+/// f32 multiplicities selecting rows of ONE resident [`Staged`] chunk.
+struct IdxGroup {
+    chunk_i: usize,
+    idx: xla::PjRtBuffer,
+    mult: xla::PjRtBuffer,
+}
+
+/// A fixed row subset of an already-resident [`Staged`] dataset,
+/// expressed as resident index-list buffers ([`ModelExes::stage_subset_indices`]).
+/// Staging ships only `2·idx_cap` 4-byte scalars per group — nothing
+/// row-shaped — and iterative consumers (the CG Hessian sample) reuse
+/// the buffers across every iteration.
+pub struct StagedIdx {
+    groups: Vec<IdxGroup>,
+    pub n_sel: usize,
+}
+
+impl StagedIdx {
+    /// Device launches one gradient/HVP over this subset costs.
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
 }
 
 /// One iteration's parameter vector, uploaded once and shared between
@@ -155,6 +216,65 @@ impl StagedRows {
 /// `ModelExes` that created it (the buffer has that spec's `p`).
 pub struct PassCtx {
     wbuf: xla::PjRtBuffer,
+}
+
+/// Device-resident conjugate-gradient solver state: the packed
+/// `[z ; r ; d ; rs ; dAd]` buffer plus the `[1/navg, damp]` constants,
+/// uploaded once at [`ModelExes::cg_init`] and chained through
+/// `cg_step` executions — iterations upload nothing and download only
+/// the 2-float scalar pair.
+pub struct CgState {
+    state: xla::PjRtBuffer,
+    consts: xla::PjRtBuffer,
+}
+
+/// An L-BFGS history (`[m, p]` Δw and Δg blocks) staged once for
+/// repeated artifact B·v calls ([`ModelExes::lbfgs_bv_staged`]).
+pub struct LbfgsBufs {
+    dwb: xla::PjRtBuffer,
+    dgb: xla::PjRtBuffer,
+}
+
+/// Group a row-subset selection by resident chunk: ascending
+/// `(local index, multiplicity)` pairs per touched chunk, in chunk
+/// order. O(b log b) host work — no chunk-length buffer is built
+/// unless a dense chunk later takes the mask path.
+fn subset_selection(
+    staged: &Staged,
+    idxs: &[usize],
+) -> Result<BTreeMap<usize, Vec<(usize, f32)>>> {
+    let c = staged.chunk;
+    let mut sel: BTreeMap<usize, BTreeMap<usize, f32>> = BTreeMap::new();
+    for &i in idxs {
+        if i >= staged.n {
+            bail!("subset row {i} out of staged range {}", staged.n);
+        }
+        *sel.entry(i / c).or_default().entry(i % c).or_insert(0.0) += 1.0;
+    }
+    Ok(sel
+        .into_iter()
+        .map(|(ci, m)| (ci, m.into_iter().collect()))
+        .collect())
+}
+
+/// Pad-and-split one chunk's selection into `idx_cap`-capacity
+/// `(i32 idx, f32 mult)` upload vectors (padding: idx 0 / mult 0 —
+/// gathered but contributing nothing). The single source of the
+/// index-list packing convention, shared by the SGD-minibatch path
+/// ([`ModelExes::grad_staged_subset`]) and the resident CG sample
+/// ([`ModelExes::stage_subset_indices`]).
+fn idx_groups(sel: &[(usize, f32)], icap: usize) -> Vec<(Vec<i32>, Vec<f32>)> {
+    let mut out = Vec::new();
+    for part in sel.chunks(icap.max(1)) {
+        let mut idxv = vec![0i32; icap];
+        let mut multv = vec![0.0f32; icap];
+        for (slot, &(j, m)) in part.iter().enumerate() {
+            idxv[slot] = j as i32;
+            multv[slot] = m;
+        }
+        out.push((idxv, multv));
+    }
+    out
 }
 
 impl ModelExes {
@@ -175,8 +295,17 @@ impl ModelExes {
             grad_acc: load("grad_acc")?,
             grad_small_acc: load("grad_small_acc")?,
             hvp_acc: load("hvp_acc")?,
+            grad_idx_acc: load("grad_idx_acc")?,
+            hvp_idx_acc: load("hvp_idx_acc")?,
+            cg_dir: load("cg_dir")?,
+            cg_step: load("cg_step")?,
+            cg_scalars: load("cg_scalars")?,
+            cg_result: load("cg_result")?,
             lbfgs: load("lbfgs")?,
-            acc0_grad: rt.upload(&vec![0.0f32; spec.p + 4], &[spec.p + 4])?,
+            acc0_grad: rt.upload(
+                &vec![0.0f32; spec.p + ACC_EXTRA],
+                &[spec.p + ACC_EXTRA],
+            )?,
             acc0_hvp: rt.upload(&vec![0.0f32; spec.p], &[spec.p])?,
         })
     }
@@ -223,6 +352,20 @@ impl ModelExes {
     /// Gather + upload an explicit row subset once, for reuse across a
     /// whole retrain pass. Empty `idxs` stages nothing (zero gradient).
     pub fn stage_rows(&self, rt: &Runtime, ds: &Dataset, idxs: &[usize]) -> Result<StagedRows> {
+        self.stage_rows_masked(rt, ds, idxs, 1.0)
+    }
+
+    /// [`Self::stage_rows`] with an explicit mask value for the real
+    /// rows. `mask_val = -1.0` stages a subset whose gradient chain
+    /// contributes NEGATED row gradients (the mask enters every sum
+    /// linearly) — the deletion half of a fused mixed-group commit.
+    pub fn stage_rows_masked(
+        &self,
+        rt: &Runtime,
+        ds: &Dataset,
+        idxs: &[usize],
+        mask_val: f32,
+    ) -> Result<StagedRows> {
         let spec = &self.spec;
         if ds.da != spec.da || ds.k != spec.k {
             bail!(
@@ -233,9 +376,14 @@ impl ModelExes {
         let cs = spec.chunk_small;
         let mut chunks = Vec::with_capacity(idxs.len().div_ceil(cs.max(1)));
         let mut remaining = idxs.len();
-        for (x, y, mask) in ds.gather_padded(idxs, cs) {
+        for (x, y, mut mask) in ds.gather_padded(idxs, cs) {
             let rows = remaining.min(cs);
             remaining -= rows;
+            if mask_val != 1.0 {
+                for m in mask.iter_mut().take(rows) {
+                    *m = mask_val;
+                }
+            }
             chunks.push(RowChunk {
                 x: rt.upload(&x, &[cs, spec.da])?,
                 y: rt.upload(&y, &[cs, spec.k])?,
@@ -244,6 +392,39 @@ impl ModelExes {
             });
         }
         Ok(StagedRows { chunks, n_rows: idxs.len(), chunk: cs })
+    }
+
+    /// Stage a row subset of an already-resident [`Staged`] dataset as
+    /// resident index-list buffers: per touched chunk, ascending local
+    /// indices grouped into `idx_cap`-capacity (i32 idx, f32 mult)
+    /// pairs. Repeated original indices accumulate multiplicity. The
+    /// ONLY payload is `2·idx_cap` scalars per group — the rows
+    /// themselves never re-ship.
+    pub fn stage_subset_indices(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        idxs: &[usize],
+    ) -> Result<StagedIdx> {
+        let icap = self.spec.idx_cap;
+        if icap == 0 {
+            bail!(
+                "config {} disables index lists (idx_cap=0); gather-stage \
+                 the rows instead",
+                self.spec.name
+            );
+        }
+        let mut groups = Vec::new();
+        for (chunk_i, pairs) in subset_selection(staged, idxs)? {
+            for (idxv, multv) in idx_groups(&pairs, icap) {
+                groups.push(IdxGroup {
+                    chunk_i,
+                    idx: rt.upload_i32(&idxv, &[icap])?,
+                    mult: rt.upload(&multv, &[icap])?,
+                });
+            }
+        }
+        Ok(StagedIdx { groups, n_sel: idxs.len() })
     }
 
     /// Update the removal masks of a staged dataset in place; only chunks
@@ -290,8 +471,8 @@ impl ModelExes {
         Ok(reuploaded)
     }
 
-    /// Split a downloaded `[g ; stats]` accumulator; `None` means no
-    /// chunk executed (empty subset: zero gradient, zero downloads).
+    /// Split a downloaded `[g ; stats ; comp]` accumulator; `None` means
+    /// no chunk executed (empty subset: zero gradient, zero downloads).
     fn finish_grad(
         &self,
         rt: &Runtime,
@@ -302,10 +483,14 @@ impl ModelExes {
             None => Ok((vec![0.0f32; p], Stats::default())),
             Some(buf) => {
                 let mut v = rt.download(&buf)?;
-                if v.len() != p + 4 {
-                    bail!("accumulator length {} != p+4 = {}", v.len(), p + 4);
+                if v.len() != p + ACC_EXTRA {
+                    bail!(
+                        "accumulator length {} != p+{ACC_EXTRA} = {}",
+                        v.len(),
+                        p + ACC_EXTRA
+                    );
                 }
-                let stats = Stats::from_vec(&v[p..]);
+                let stats = Stats::from_acc_tail(&v[p..]);
                 v.truncate(p);
                 Ok((v, stats))
             }
@@ -313,25 +498,30 @@ impl ModelExes {
     }
 
     /// Masked-SUM gradient over all staged chunks plus optional resident
-    /// row-segment tails (a session's committed additions), sharing an
+    /// tails — a compacted tail (`tail_full`, full-size [`Staged`]
+    /// chunks a session's `commit` built from accumulated additions)
+    /// and the still-segmented [`StagedRows`] remainder — sharing an
     /// uploaded parameter buffer. The whole multi-chunk reduction is
     /// fused: partials chain through the `*_acc` artifacts on device and
-    /// ONE `[g ; stats]` result is downloaded. Returns (sum of
+    /// ONE `[g ; stats ; comp]` result is downloaded. Returns (sum of
     /// per-sample gradients incl. per-sample L2, stats).
     pub fn grad_staged_with_tail(
         &self,
         rt: &Runtime,
         staged: &Staged,
+        tail_full: Option<&Staged>,
         tail: &[StagedRows],
         ctx: &PassCtx,
     ) -> Result<(Vec<f32>, Stats)> {
         let mut acc: Option<xla::PjRtBuffer> = None;
-        for sc in &staged.chunks {
-            let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
-            acc = Some(rt.exec_buffer(
-                &self.grad_acc,
-                &[&ctx.wbuf, &sc.x, &sc.y, &sc.mask, prev],
-            )?);
+        for st in std::iter::once(staged).chain(tail_full) {
+            for sc in &st.chunks {
+                let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+                acc = Some(rt.exec_buffer(
+                    &self.grad_acc,
+                    &[&ctx.wbuf, &sc.x, &sc.y, &sc.mask, prev],
+                )?);
+            }
         }
         for sr in tail {
             for rc in &sr.chunks {
@@ -352,7 +542,7 @@ impl ModelExes {
         staged: &Staged,
         ctx: &PassCtx,
     ) -> Result<(Vec<f32>, Stats)> {
-        self.grad_staged_with_tail(rt, staged, &[], ctx)
+        self.grad_staged_with_tail(rt, staged, None, &[], ctx)
     }
 
     /// Convenience: `grad_staged_ctx` with a one-off parameter upload.
@@ -370,12 +560,16 @@ impl ModelExes {
     /// selected by ORIGINAL row index with multiplicity (an SGD batch
     /// sampled with replacement can hit a row twice; the mask enters the
     /// sums linearly, so multiplicity k rides a mask value of k). The
-    /// resident X/Y never re-ship: the only uploads are one
-    /// `chunk`-float multiplicity mask per *touched* chunk, and the
-    /// fused reduction downloads one result. This is the resident
-    /// minibatch path of the §3 SGD extension.
+    /// resident X/Y never re-ship. Per touched chunk the payload is
+    /// auto-selected by the density threshold
+    /// ([`ModelSpec::idx_list_wins`]): a sparse selection ships
+    /// `idx_cap`-capacity i32 index + f32 multiplicity lists that
+    /// `grad_idx_acc` gathers on device (O(b) scalars), a dense one
+    /// ships one `chunk`-float multiplicity mask. Either way the fused
+    /// reduction downloads one result. This is the resident minibatch
+    /// path of the §3 SGD extension.
     ///
-    /// The uploaded multiplicity mask REPLACES the chunk's resident
+    /// The uploaded multiplicity selection REPLACES the chunk's resident
     /// removal mask: a selected index contributes even if `staged` has
     /// it masked out. That is exactly the §3 semantics (the replayed
     /// batch is the ORIGINAL one; removals are subtracted separately),
@@ -390,17 +584,31 @@ impl ModelExes {
         idxs: &[usize],
     ) -> Result<(Vec<f32>, Stats)> {
         let c = staged.chunk;
-        let mut masks: Vec<Option<Vec<f32>>> = vec![None; staged.chunks.len()];
-        for &i in idxs {
-            if i >= staged.n {
-                bail!("subset row {i} out of staged range {}", staged.n);
-            }
-            masks[i / c].get_or_insert_with(|| vec![0.0f32; c])[i % c] += 1.0;
-        }
+        let icap = self.spec.idx_cap;
         let mut acc: Option<xla::PjRtBuffer> = None;
-        for (sc, counts) in staged.chunks.iter().zip(&masks) {
-            if let Some(counts) = counts {
-                let mb = rt.upload(counts, &[c])?;
+        for (ci, pairs) in subset_selection(staged, idxs)? {
+            let sc = &staged.chunks[ci];
+            if self.spec.idx_list_wins(pairs.len()) {
+                // index-list execution: ascending local indices, grouped
+                // into idx_cap-capacity (i32 idx, f32 mult) pairs —
+                // O(b) host AND device cost for the chunk
+                for (idxv, multv) in idx_groups(&pairs, icap) {
+                    let ib = rt.upload_i32(&idxv, &[icap])?;
+                    let mb = rt.upload(&multv, &[icap])?;
+                    let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+                    acc = Some(rt.exec_buffer(
+                        &self.grad_idx_acc,
+                        &[&ctx.wbuf, &sc.x, &sc.y, &ib, &mb, prev],
+                    )?);
+                }
+            } else {
+                // dense: materialize the chunk-float multiplicity mask
+                // (only here does O(chunk) host work happen)
+                let mut counts = vec![0.0f32; c];
+                for &(j, m) in &pairs {
+                    counts[j] = m;
+                }
+                let mb = rt.upload(&counts, &[c])?;
                 let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
                 acc = Some(rt.exec_buffer(
                     &self.grad_acc,
@@ -419,13 +627,28 @@ impl ModelExes {
         sr: &StagedRows,
         ctx: &PassCtx,
     ) -> Result<(Vec<f32>, Stats)> {
+        self.grad_rows_multi(rt, &[sr], ctx)
+    }
+
+    /// Masked-SUM gradient over SEVERAL pre-staged row subsets fused
+    /// into one accumulator chain (one download for all of them). With
+    /// signed stagings ([`Self::stage_rows_masked`]) this computes a
+    /// mixed group's `Σ_add ∇F_i − Σ_del ∇F_i` in a single chain.
+    pub fn grad_rows_multi(
+        &self,
+        rt: &Runtime,
+        srs: &[&StagedRows],
+        ctx: &PassCtx,
+    ) -> Result<(Vec<f32>, Stats)> {
         let mut acc: Option<xla::PjRtBuffer> = None;
-        for rc in &sr.chunks {
-            let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
-            acc = Some(rt.exec_buffer(
-                &self.grad_small_acc,
-                &[&ctx.wbuf, &rc.x, &rc.y, &rc.mask, prev],
-            )?);
+        for sr in srs {
+            for rc in &sr.chunks {
+                let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+                acc = Some(rt.exec_buffer(
+                    &self.grad_small_acc,
+                    &[&ctx.wbuf, &rc.x, &rc.y, &rc.mask, prev],
+                )?);
+            }
         }
         self.finish_grad(rt, acc)
     }
@@ -511,20 +734,58 @@ impl ModelExes {
         ctx: &PassCtx,
         v: &[f32],
     ) -> Result<Vec<f32>> {
-        let spec = &self.spec;
-        let vbuf = rt.upload(v, &[spec.p])?;
+        let vbuf = rt.upload(v, &[self.spec.p])?;
+        match self.hvp_chain_rows(rt, sr, ctx, &vbuf)? {
+            None => Ok(vec![0.0f32; self.spec.p]),
+            Some(buf) => rt.download(&buf),
+        }
+    }
+
+    /// Buffer-in/buffer-out HVP chain over pre-staged rows: the H·v
+    /// primitive of the device-resident CG loop (`v` is already a
+    /// device buffer — typically `cg_dir`'s output — and the summed
+    /// result stays resident for `cg_step`). `None` = no chunk executed.
+    pub fn hvp_chain_rows(
+        &self,
+        rt: &Runtime,
+        sr: &StagedRows,
+        ctx: &PassCtx,
+        vbuf: &xla::PjRtBuffer,
+    ) -> Result<Option<xla::PjRtBuffer>> {
         let mut acc: Option<xla::PjRtBuffer> = None;
         for rc in &sr.chunks {
             let prev = acc.as_ref().unwrap_or(&self.acc0_hvp);
             acc = Some(rt.exec_buffer(
                 &self.hvp_acc,
-                &[&ctx.wbuf, &vbuf, &rc.x, &rc.mask, prev],
+                &[&ctx.wbuf, vbuf, &rc.x, &rc.mask, prev],
             )?);
         }
-        match acc {
-            None => Ok(vec![0.0f32; spec.p]),
-            Some(buf) => rt.download(&buf),
+        Ok(acc)
+    }
+
+    /// Buffer-in/buffer-out HVP chain over a resident index-list subset
+    /// of an already-[`Staged`] dataset ([`Self::stage_subset_indices`]):
+    /// the `hvp_idx_acc` artifacts gather the selected rows on device,
+    /// so neither rows nor direction vector ever ship. `None` = empty
+    /// selection.
+    pub fn hvp_chain_idx(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        sidx: &StagedIdx,
+        ctx: &PassCtx,
+        vbuf: &xla::PjRtBuffer,
+    ) -> Result<Option<xla::PjRtBuffer>> {
+        let mut acc: Option<xla::PjRtBuffer> = None;
+        for g in &sidx.groups {
+            let sc = &staged.chunks[g.chunk_i];
+            let prev = acc.as_ref().unwrap_or(&self.acc0_hvp);
+            acc = Some(rt.exec_buffer(
+                &self.hvp_idx_acc,
+                &[&ctx.wbuf, vbuf, &sc.x, &g.idx, &g.mult, prev],
+            )?);
         }
+        Ok(acc)
     }
 
     /// One-shot exact masked-SUM HVP over a row subset. Iterative
@@ -543,15 +804,80 @@ impl ModelExes {
         self.hvp_rows_staged(rt, &sr, &ctx, v)
     }
 
-    /// Quasi-Hessian product B·v via the AOT L-BFGS artifact
-    /// (abl-lbfgs-host ablation; the hot path uses lbfgs::compact).
-    pub fn lbfgs_bv_artifact(
+    // --- device-resident conjugate gradient ----------------------------
+
+    /// Initialize a resident CG solve of `(H/navg + damp·I) z = b`: the
+    /// packed state `[z=0 ; r=b ; d=b ; rs ; dAd=0]` and the
+    /// `[1/navg, damp]` constants upload ONCE (the warm-up); every
+    /// subsequent iteration uploads nothing. Returns the state and the
+    /// initial residual norm² `rs₀`.
+    pub fn cg_init(
+        &self,
+        rt: &Runtime,
+        b: &[f32],
+        inv_navg: f32,
+        damp: f32,
+    ) -> Result<(CgState, f64)> {
+        let p = self.spec.p;
+        if b.len() != p {
+            bail!("cg rhs length {} != p = {p}", b.len());
+        }
+        let rs0: f64 = b.iter().map(|&x| x as f64 * x as f64).sum();
+        let mut state = vec![0.0f32; 3 * p + 2];
+        state[p..2 * p].copy_from_slice(b);
+        state[2 * p..3 * p].copy_from_slice(b);
+        state[3 * p] = rs0 as f32;
+        Ok((
+            CgState {
+                state: rt.upload(&state, &[3 * p + 2])?,
+                consts: rt.upload(&[inv_navg, damp], &[2])?,
+            },
+            rs0,
+        ))
+    }
+
+    /// Extract the current CG direction `d` as a resident buffer (feeds
+    /// the HVP chain). Zero uploads, zero downloads.
+    pub fn cg_direction(&self, rt: &Runtime, st: &CgState) -> Result<xla::PjRtBuffer> {
+        rt.exec_buffer(&self.cg_dir, &[&st.state])
+    }
+
+    /// One CG update: chain the state through `cg_step` with the raw
+    /// H·d sum (`None` = empty Hessian sample → zero product) and
+    /// download the `[rs_new, d·Ad]` scalar pair — the iteration's ONLY
+    /// download, and it uploads nothing.
+    pub fn cg_advance(
+        &self,
+        rt: &Runtime,
+        st: &mut CgState,
+        ad_raw: Option<&xla::PjRtBuffer>,
+    ) -> Result<(f64, f64)> {
+        let ad = ad_raw.unwrap_or(&self.acc0_hvp);
+        st.state = rt.exec_buffer(&self.cg_step, &[&st.state, ad, &st.consts])?;
+        let sc = rt.download(&rt.exec_buffer(&self.cg_scalars, &[&st.state])?)?;
+        if sc.len() != 2 {
+            bail!("cg_scalars returned {} floats, expected 2", sc.len());
+        }
+        Ok((sc[0] as f64, sc[1] as f64))
+    }
+
+    /// Download the CG solution `z` (one `[p]` download, at the end).
+    pub fn cg_solution(&self, rt: &Runtime, st: &CgState) -> Result<Vec<f32>> {
+        rt.download(&rt.exec_buffer(&self.cg_result, &[&st.state])?)
+    }
+
+    // --- L-BFGS artifact -----------------------------------------------
+
+    /// Upload an L-BFGS history ONCE for repeated artifact B·v calls
+    /// ([`Self::lbfgs_bv_staged`]); the history only changes at exact
+    /// iterations, so per-call re-uploads of the `2·m·p` floats are
+    /// pure waste.
+    pub fn lbfgs_stage_history(
         &self,
         rt: &Runtime,
         dws: &[Vec<f32>],
         dgs: &[Vec<f32>],
-        v: &[f32],
-    ) -> Result<Vec<f32>> {
+    ) -> Result<LbfgsBufs> {
         let spec = &self.spec;
         if dws.len() != spec.m || dgs.len() != spec.m {
             bail!(
@@ -567,11 +893,39 @@ impl ModelExes {
             }
             out
         };
-        let dwb = rt.upload(&flat(dws), &[spec.m, spec.p])?;
-        let dgb = rt.upload(&flat(dgs), &[spec.m, spec.p])?;
-        let vb = rt.upload(v, &[spec.p])?;
-        let outs = rt.exec(&self.lbfgs, &[&dwb, &dgb, &vb])?;
+        Ok(LbfgsBufs {
+            dwb: rt.upload(&flat(dws), &[spec.m, spec.p])?,
+            dgb: rt.upload(&flat(dgs), &[spec.m, spec.p])?,
+        })
+    }
+
+    /// Quasi-Hessian product B·v against a resident history: only the
+    /// direction vector ships per call.
+    pub fn lbfgs_bv_staged(
+        &self,
+        rt: &Runtime,
+        bufs: &LbfgsBufs,
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        let vb = rt.upload(v, &[self.spec.p])?;
+        let outs = rt.exec(&self.lbfgs, &[&bufs.dwb, &bufs.dgb, &vb])?;
         literal_f32(&outs[0])
+    }
+
+    /// Quasi-Hessian product B·v via the AOT L-BFGS artifact
+    /// (abl-lbfgs-host ablation; the hot path uses lbfgs::compact).
+    /// One-shot: stages the history and solves once. Repeated callers
+    /// should [`Self::lbfgs_stage_history`] and route every B·v through
+    /// [`Self::lbfgs_bv_staged`].
+    pub fn lbfgs_bv_artifact(
+        &self,
+        rt: &Runtime,
+        dws: &[Vec<f32>],
+        dgs: &[Vec<f32>],
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        let bufs = self.lbfgs_stage_history(rt, dws, dgs)?;
+        self.lbfgs_bv_staged(rt, &bufs, v)
     }
 
     /// Evaluate mean loss / accuracy of `w` on a staged dataset.

@@ -20,7 +20,9 @@
 
 pub mod engine;
 
-pub use engine::{Engine, ModelExes, PassCtx, Staged, StagedRows};
+pub use engine::{
+    CgState, Engine, LbfgsBufs, ModelExes, PassCtx, Staged, StagedIdx, StagedRows,
+};
 
 use anyhow::{bail, Context, Result};
 use std::cell::Cell;
@@ -33,6 +35,8 @@ use std::path::Path;
 pub struct TransferCounters {
     uploads: Cell<u64>,
     upload_floats: Cell<u64>,
+    idx_uploads: Cell<u64>,
+    idx_scalars: Cell<u64>,
     execs: Cell<u64>,
     downloads: Cell<u64>,
     download_floats: Cell<u64>,
@@ -42,6 +46,16 @@ impl TransferCounters {
     fn count_upload(&self, floats: usize) {
         self.uploads.set(self.uploads.get() + 1);
         self.upload_floats.set(self.upload_floats.get() + floats as u64);
+    }
+
+    /// An i32 index-list upload: counted into the general upload totals
+    /// (same 4-byte-per-scalar payload) AND the dedicated index-payload
+    /// class, so budget tests can pin "O(b) index scalars, not O(n) mask
+    /// floats" directly.
+    fn count_upload_idx(&self, scalars: usize) {
+        self.count_upload(scalars);
+        self.idx_uploads.set(self.idx_uploads.get() + 1);
+        self.idx_scalars.set(self.idx_scalars.get() + scalars as u64);
     }
 
     fn count_exec(&self) {
@@ -59,6 +73,8 @@ impl TransferCounters {
         TransferStats {
             uploads: self.uploads.get(),
             upload_floats: self.upload_floats.get(),
+            idx_uploads: self.idx_uploads.get(),
+            idx_scalars: self.idx_scalars.get(),
             execs: self.execs.get(),
             downloads: self.downloads.get(),
             download_floats: self.download_floats.get(),
@@ -67,12 +83,19 @@ impl TransferCounters {
 }
 
 /// Snapshot (or difference of two snapshots) of device traffic:
-/// host→device buffer uploads, f32s shipped, artifact executions, and
-/// device→host result downloads (count + f32 payload).
+/// host→device buffer uploads, f32s shipped (i32 index scalars count as
+/// the same 4-byte payload and are ALSO broken out as `idx_uploads` /
+/// `idx_scalars`), artifact executions, and device→host result
+/// downloads (count + f32 payload).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TransferStats {
     pub uploads: u64,
     pub upload_floats: u64,
+    /// subset of `uploads` that were i32 index lists (the index-list
+    /// gather payload class)
+    pub idx_uploads: u64,
+    /// subset of `upload_floats` shipped as i32 index scalars
+    pub idx_scalars: u64,
     pub execs: u64,
     pub downloads: u64,
     pub download_floats: u64,
@@ -84,6 +107,8 @@ impl TransferStats {
         TransferStats {
             uploads: self.uploads - earlier.uploads,
             upload_floats: self.upload_floats - earlier.upload_floats,
+            idx_uploads: self.idx_uploads - earlier.idx_uploads,
+            idx_scalars: self.idx_scalars - earlier.idx_scalars,
             execs: self.execs - earlier.execs,
             downloads: self.downloads - earlier.downloads,
             download_floats: self.download_floats - earlier.download_floats,
@@ -93,6 +118,8 @@ impl TransferStats {
     pub fn accumulate(&mut self, o: &TransferStats) {
         self.uploads += o.uploads;
         self.upload_floats += o.upload_floats;
+        self.idx_uploads += o.idx_uploads;
+        self.idx_scalars += o.idx_scalars;
         self.execs += o.execs;
         self.downloads += o.downloads;
         self.download_floats += o.download_floats;
@@ -137,6 +164,16 @@ impl Runtime {
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .context("uploading host buffer")
+    }
+
+    /// Upload a host i32 slice (an index list for the `*_idx_acc`
+    /// gather entries) as an S32 device buffer. Counted as an upload of
+    /// the same 4-byte scalar payload plus the dedicated index class.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.counters.count_upload_idx(data.len());
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading host index buffer")
     }
 
     /// Execute with buffer args and decompose the root tuple into the

@@ -24,13 +24,18 @@
 //! Staging discipline (docs/PERFORMANCE.md): the session keeps the base
 //! dataset (`Staged`, removal masks current), the committed added tail
 //! (append-only `StagedRows` segments — each add commit keeps its
-//! pass's staged rows), and the test set (`Staged`) device-resident
-//! across edits; each pass stages only its delta rows — and repeated
-//! passes over the SAME rows (conformal folds, jackknife leave-outs,
-//! robust sweeps) re-stage nothing, thanks to a cross-pass row cache
-//! keyed by index-set hash — and each iteration uploads one parameter
-//! vector. Cumulative per-edit device traffic (and the row-cache
-//! hit/miss counts) is tracked in [`SessionStats`].
+//! pass's staged rows — COMPACTED into full-size `Staged` chunks once
+//! the segments cross the [`TAIL_COMPACT_WATERMARK`] so long-lived
+//! sessions never execute hundreds of tiny tail launches), and the test
+//! set (`Staged`) device-resident across edits; each pass stages only
+//! its delta rows — and repeated passes over the SAME rows (conformal
+//! folds, jackknife leave-outs, robust sweeps) re-stage nothing, thanks
+//! to a cross-pass row cache keyed by index-set hash — and each
+//! iteration uploads one parameter vector. Mixed delete+add group
+//! commits run their signed group gradient as ONE ±1-masked accumulator
+//! chain (one download per iteration). Cumulative per-edit device
+//! traffic (and the row-cache hit/miss counts) is tracked in
+//! [`SessionStats`].
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
@@ -68,6 +73,16 @@ struct RowCacheEntry {
 /// Entries kept per session: enough for a conformal fold set or a
 /// jackknife window plus the robust sweep's all-rows view.
 const ROW_CACHE_CAP: usize = 16;
+
+/// Default tail-compaction watermark, in `chunk_small` segment groups:
+/// once the segmented committed tail would execute this many
+/// `grad_small_acc` launches per full gradient (and the pending
+/// segments hold at least a quarter of the tail — the geometric guard
+/// that keeps cumulative re-staging linear), `commit` re-stages the
+/// accumulated additions as full-size `Staged` chunks (⌈tail/chunk⌉
+/// launches) and clears the segments. Override per session with
+/// [`SessionBuilder::tail_compact_watermark`].
+pub const TAIL_COMPACT_WATERMARK: usize = 8;
 
 fn hash_indices(idxs: &[usize]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a
@@ -317,6 +332,7 @@ pub struct SessionBuilder {
     n_test: Option<usize>,
     hp: Option<HyperParams>,
     data: Option<(Dataset, Dataset)>,
+    compact_watermark: usize,
 }
 
 impl SessionBuilder {
@@ -328,7 +344,16 @@ impl SessionBuilder {
             n_test: None,
             hp: None,
             data: None,
+            compact_watermark: TAIL_COMPACT_WATERMARK,
         }
+    }
+
+    /// Override the tail-compaction watermark (in `chunk_small` segment
+    /// groups; see [`TAIL_COMPACT_WATERMARK`]). `usize::MAX` disables
+    /// compaction.
+    pub fn tail_compact_watermark(mut self, groups: usize) -> Self {
+        self.compact_watermark = groups.max(1);
+        self
     }
 
     pub fn seed(mut self, seed: u64) -> Self {
@@ -386,7 +411,11 @@ impl SessionBuilder {
             &TrainOpts::full(&hp, &IndexSet::empty()),
         )?;
         let traj = out.traj.expect("trajectory recorded");
-        Session::from_trained(rt, exes, train_ds, test_ds, traj, hp, out.w, out.seconds)
+        let mut s = Session::from_trained(
+            rt, exes, train_ds, test_ds, traj, hp, out.w, out.seconds,
+        )?;
+        s.compact_watermark = self.compact_watermark;
+        Ok(s)
     }
 }
 
@@ -404,8 +433,16 @@ pub struct Session {
     added: Dataset,
     /// the committed tail, device-resident across passes as append-only
     /// segments: each add commit keeps the pass's already-staged delta
-    /// rows, so the tail never re-ships
+    /// rows, so the tail never re-ships — until compaction folds them
+    /// into `tail_compact`
     added_staged: Vec<StagedRows>,
+    /// compacted tail: all `added` rows re-staged as full-size `Staged`
+    /// chunks once the segmented tail crossed `compact_watermark`
+    /// groups, so long-lived sessions execute ⌈tail/chunk⌉ launches per
+    /// full gradient instead of one per tiny segment group
+    tail_compact: Option<Staged>,
+    /// compaction trigger, in `chunk_small` segment groups
+    compact_watermark: usize,
     test_ds: Dataset,
     test_staged: Staged,
     traj: Trajectory,
@@ -419,6 +456,12 @@ pub struct Session {
     /// lazily staged all-rows view for per-row sweeps (its own slot, so
     /// row-cache eviction can never drop the O(n) staging)
     base_rows: RefCell<Option<Rc<StagedRows>>>,
+    /// double-buffered trajectory generations: `commit` copies each
+    /// iterate into the previous ws generation's allocations and swaps
+    /// — halving the rewrite's allocator traffic (the gs entries move
+    /// in for free, so only their outer container is recycled)
+    ws_scratch: Vec<Vec<f32>>,
+    gs_scratch: Vec<Vec<f32>>,
 }
 
 impl Session {
@@ -448,6 +491,8 @@ impl Session {
             removed: IndexSet::empty(),
             added,
             added_staged: Vec::new(),
+            tail_compact: None,
+            compact_watermark: TAIL_COMPACT_WATERMARK,
             test_ds,
             test_staged,
             traj,
@@ -457,6 +502,8 @@ impl Session {
             stats: Cell::new(SessionStats::default()),
             row_cache: RefCell::new(RowCache::new()),
             base_rows: RefCell::new(None),
+            ws_scratch: Vec::new(),
+            gs_scratch: Vec::new(),
         })
     }
 
@@ -489,6 +536,28 @@ impl Session {
 
     pub fn runtime(&self) -> &Runtime {
         &self.rt
+    }
+
+    /// The resident (removal-masked) base dataset, for apps that
+    /// execute row subsets against it without any row shipping
+    /// (`grad_staged_subset` / `stage_subset_indices` — the influence
+    /// CG path). Retraining goes through preview/commit, not this.
+    pub fn staged_base(&self) -> &Staged {
+        &self.staged
+    }
+
+    /// Device launches one full-gradient tail evaluation costs right
+    /// now: compacted chunks + still-segmented groups (the compaction
+    /// health signal; watermark = `compact_watermark` groups).
+    pub fn tail_launches(&self) -> usize {
+        self.tail_compact
+            .as_ref()
+            .map_or(0, |s| s.n.div_ceil(self.exes.spec.chunk))
+            + self
+                .added_staged
+                .iter()
+                .map(|sr| sr.n_chunks())
+                .sum::<usize>()
     }
 
     /// Original training rows (delete indices refer to this).
@@ -614,11 +683,15 @@ impl Session {
     /// cached session instead of retraining from scratch.
     pub fn fork(&self) -> Result<Session> {
         let staged = self.exes.stage(&self.rt, &self.base, &self.removed)?;
+        // the fork's tail re-stages from scratch: compacted when it is
+        // already past the watermark, one contiguous segment otherwise
+        let mut tail_compact = None;
         let added_staged = if self.added.n == 0 {
             Vec::new()
+        } else if self.added.n.div_ceil(self.exes.spec.chunk_small) >= self.compact_watermark {
+            tail_compact = Some(self.exes.stage(&self.rt, &self.added, &IndexSet::empty())?);
+            Vec::new()
         } else {
-            // the fork's tail is one contiguous segment regardless of
-            // how many commits grew the original's
             let all: Vec<usize> = (0..self.added.n).collect();
             vec![self.exes.stage_rows(&self.rt, &self.added, &all)?]
         };
@@ -632,6 +705,8 @@ impl Session {
             removed: self.removed.clone(),
             added: self.added.clone(),
             added_staged,
+            tail_compact,
+            compact_watermark: self.compact_watermark,
             test_ds: self.test_ds.clone(),
             test_staged,
             traj: self.traj.clone(),
@@ -641,6 +716,8 @@ impl Session {
             stats: Cell::new(SessionStats::default()),
             row_cache: RefCell::new(RowCache::new()),
             base_rows: RefCell::new(None),
+            ws_scratch: Vec::new(),
+            gs_scratch: Vec::new(),
         })
     }
 
@@ -717,6 +794,7 @@ impl Session {
                 if add_ds.n > 0 {
                     let res = GdResources {
                         staged_reuse: Some(&self.staged),
+                        tail_compact: self.tail_compact.as_ref(),
                         tail: &self.added_staged,
                         n_current: n_cur,
                         sr_delta: None, // fresh rows: nothing to cache
@@ -737,6 +815,7 @@ impl Session {
                     let sr_delta = self.stage_rows_cached(removed.as_slice(), true)?;
                     let res = GdResources {
                         staged_reuse: Some(&self.staged),
+                        tail_compact: self.tail_compact.as_ref(),
                         tail: &self.added_staged,
                         n_current: n_cur,
                         sr_delta: Some(&*sr_delta),
@@ -803,9 +882,22 @@ impl Session {
         // previewed-then-committed edit is also bitwise consistent).
         // Committed rows can never be staged again, so a miss does NOT
         // populate the cache. The committed tail is already resident
-        // (`added_staged`).
+        // (`added_staged` / `tail_compact`).
+        //
+        // MIXED groups fuse: the deletions stage with a −1 mask (the
+        // mask enters every sum linearly) so the signed group gradient
+        // Σ_add ∇F_i − Σ_del ∇F_i runs as ONE accumulator chain — one
+        // download per iteration instead of two. The −1 staging cannot
+        // come from the row cache (cached previews are +1-masked): a
+        // pure-delete preview of the same rows followed by a mixed
+        // commit does re-stage them, trading 3·⌈r/cs⌉ one-time uploads
+        // for T−n_exact saved downloads every mixed pass.
+        let mixed = !del_rows.is_empty() && add_ds.n > 0;
         let sr_del = if del_rows.is_empty() {
             None
+        } else if mixed {
+            let sorted = IndexSet::from_vec(del_rows.clone());
+            Some(Rc::new(exes.stage_rows_masked(rt, &self.base, sorted.as_slice(), -1.0)?))
         } else {
             let sorted = IndexSet::from_vec(del_rows.clone());
             Some(self.stage_rows_cached(sorted.as_slice(), false)?)
@@ -824,9 +916,29 @@ impl Session {
         let mut last_stats = Stats::default();
         // the rewritten cache is built out-of-place and swapped in only
         // after the whole pass (and the mask flip) succeed, so a device
-        // error mid-pass leaves the session consistent
-        let mut ws_new: Vec<Vec<f32>> = Vec::with_capacity(hp.t + 1);
-        let mut gs_new: Vec<Vec<f32>> = Vec::with_capacity(hp.t);
+        // error mid-pass leaves the session consistent. The ws side is
+        // double-buffered: `ws_scratch` holds the previous generation's
+        // T+1 allocations, so each iterate copies into existing
+        // capacity and the generations swap — no per-commit
+        // alloc/free churn for the T·p ws floats. The gs entries are
+        // produced as owned vectors and MOVE in (copying them into
+        // recycled buffers would add work, not save it); only their
+        // outer container is reused. (An aborted commit just leaves
+        // the scratch empty — the next one re-allocates.)
+        let mut ws_new: Vec<Vec<f32>> = std::mem::take(&mut self.ws_scratch);
+        let mut gs_new: Vec<Vec<f32>> = std::mem::take(&mut self.gs_scratch);
+        ws_new.truncate(hp.t + 1);
+        gs_new.clear(); // gs entries arrive as owned vectors (moved in)
+        let mut ws_filled = 0usize;
+        let mut write_w = |ws: &mut Vec<Vec<f32>>, filled: &mut usize, data: &[f32]| {
+            if let Some(buf) = ws.get_mut(*filled) {
+                buf.clear();
+                buf.extend_from_slice(data);
+            } else {
+                ws.push(data.to_vec());
+            }
+            *filled += 1;
+        };
 
         for t in 0..hp.t {
             let eta = hp.lr_at(t) as f64;
@@ -854,17 +966,33 @@ impl Session {
             // one parameter upload shared by every call this iteration
             let ctx = exes.pass_ctx(rt, &w)?;
             // signed gradient sum of the changed samples at the current
-            // iterate (always exact; |group| ≪ n resident rows)
-            let g_chg = grad_sum_group(exes, rt, &ctx, sr_del.as_deref(), sr_add.as_ref())?;
+            // iterate (always exact; |group| ≪ n resident rows); mixed
+            // groups run ONE fused chain over the ±1-masked stagings
+            let g_chg = if mixed {
+                let (g, _) = exes.grad_rows_multi(
+                    rt,
+                    &[sr_del.as_deref().unwrap(), sr_add.as_ref().unwrap()],
+                    &ctx,
+                )?;
+                g
+            } else {
+                grad_sum_group(exes, rt, &ctx, sr_del.as_deref(), sr_add.as_ref())?
+            };
             // average gradient over the NEW dataset at the new iterate:
             // g_new_avg = (n_cur * g_cur_avg + g_chg) / n_new        (S62)
             let mut g_new_avg;
             if exact {
                 n_exact += 1;
-                // base chunks + resident tail fused into one on-device
-                // reduction (a single result download)
-                let (g_sum_cur, stats) =
-                    exes.grad_staged_with_tail(rt, &self.staged, sr_tail, &ctx)?;
+                // base chunks + resident tail (compacted chunks, then
+                // leftover segments) fused into one on-device reduction
+                // (a single result download)
+                let (g_sum_cur, stats) = exes.grad_staged_with_tail(
+                    rt,
+                    &self.staged,
+                    self.tail_compact.as_ref(),
+                    sr_tail,
+                    &ctx,
+                )?;
                 last_stats = stats;
                 // harvest (Δw, Δg) against the cached trajectory
                 let dw_pair: Vec<f32> =
@@ -890,15 +1018,42 @@ impl Session {
                 scale(&mut g_new_avg, (n_cur / n_new) as f32);
                 axpy(1.0 / n_new as f32, &g_chg, &mut g_new_avg);
             }
-            // rewrite the cache for the next edit (Alg. 3 l.36/43); the
-            // gradient moves into the rewritten cache and the step reads
-            // it from there — no scratch copy
-            ws_new.push(w.clone());
+            // rewrite the cache for the next edit (Alg. 3 l.36/43); w
+            // copies into the recycled generation, the gradient moves
+            // in, and the step reads it from there — no scratch copy
+            write_w(&mut ws_new, &mut ws_filled, &w);
             gs_new.push(g_new_avg);
             // take the step
             axpy(-(eta as f32), &gs_new[t], &mut w);
         }
-        ws_new.push(w.clone());
+        write_w(&mut ws_new, &mut ws_filled, &w);
+        ws_new.truncate(ws_filled);
+
+        // tail compaction, staged BEFORE any state mutation: once the
+        // segmented tail (including this commit's new segment) would
+        // cost `compact_watermark` grad_small launches per full
+        // gradient, fold ALL committed additions into full-size
+        // resident chunks (⌈added/chunk⌉ launches). Compaction re-ships
+        // the whole tail, so it ALSO waits until the pending segments
+        // hold at least a quarter of it — the geometric growth makes
+        // cumulative re-upload traffic O(total added), not quadratic,
+        // for sessions that add forever. Staging here keeps the failure
+        // story clean: an error leaves the session entirely unchanged,
+        // never half-committed.
+        let seg_groups: usize = self.added_staged.iter().map(|s| s.n_chunks()).sum::<usize>()
+            + sr_add.as_ref().map_or(0, |s| s.n_chunks());
+        let total_added = self.added.n + add_ds.n;
+        let pending_rows = total_added - self.tail_compact.as_ref().map_or(0, |s| s.n);
+        let compacted = if pending_rows > 0
+            && seg_groups >= self.compact_watermark
+            && 4 * pending_rows >= total_added
+        {
+            let mut all = self.added.clone();
+            all.append(&add_ds);
+            Some(exes.stage(rt, &all, &IndexSet::empty())?)
+        } else {
+            None
+        };
 
         // commit: flip the removal masks (the one remaining fallible
         // step), then the infallible state swap
@@ -912,12 +1067,22 @@ impl Session {
         }
         if let Some(sr) = sr_add {
             // the pass's staged addition rows become the next resident
-            // tail segment — the tail never re-ships
+            // tail segment — the tail never re-ships (until compaction)
             self.added.append(&add_ds);
             self.added_staged.push(sr);
         }
-        self.traj.ws = ws_new;
-        self.traj.gs = gs_new;
+        if let Some(staged_tail) = compacted {
+            self.tail_compact = Some(staged_tail);
+            self.added_staged.clear();
+        }
+        // double-buffer swap: the outgoing ws generation's allocations
+        // become the next commit's scratch; the outgoing gs generation
+        // frees its entries NOW (they were moved in, there is nothing
+        // to recycle) and donates only the outer container
+        self.ws_scratch = std::mem::replace(&mut self.traj.ws, ws_new);
+        let mut old_gs = std::mem::replace(&mut self.traj.gs, gs_new);
+        old_gs.clear();
+        self.gs_scratch = old_gs;
         self.traj.n_effective = n_new as usize;
         self.w = w.clone();
         self.version += 1;
@@ -1101,6 +1266,7 @@ mod tests {
                 execs: 20,
                 downloads: 5,
                 download_floats: 50,
+                ..Default::default()
             },
         };
         s.absorb(&out, false);

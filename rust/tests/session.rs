@@ -5,9 +5,14 @@
 //! These tests pin that down:
 //!  * `preview` of a Delete edit is BITWISE identical to the old
 //!    `delete_gd` free function on the seed workload;
-//!  * `commit` is BITWISE identical to the pre-redesign
-//!    `OnlineState::apply_group` loop (kept as a seed-shape reference in
-//!    `testing::baseline`), including the rewritten trajectory;
+//!  * `commit` of a single-kind group is BITWISE identical to the
+//!    pre-redesign `OnlineState::apply_group` loop (kept as a
+//!    seed-shape reference in `testing::baseline`), including the
+//!    rewritten trajectory and across the double-buffered generations;
+//!    MIXED groups now fuse the signed delta chain (one download per
+//!    iteration) and pin at 1e-5 instead;
+//!  * tail compaction caps the committed tail at ⌈tail/chunk⌉ launches
+//!    without changing floats beyond reduction order;
 //!  * interleaved previews from one base perturb neither each other nor
 //!    the committed state;
 //!  * GD vs SGD auto-selection follows `hp.batch`, and the SGD preview
@@ -81,7 +86,10 @@ fn preview_add_bitwise_matches_add_gd() {
 }
 
 #[test]
-fn commit_bitwise_matches_old_apply_group() {
+fn pure_delete_commit_bitwise_matches_old_apply_group() {
+    // single-kind groups keep the seed schedule exactly, so the pin
+    // stays BITWISE (mixed groups now fuse their signed chain — see
+    // mixed_group_commit_fuses_signed_chain)
     let mut eng = engine();
     let spec = eng.spec("small").unwrap().clone();
     let (ds, test) = synth::train_test_for_spec(&spec, 7, Some(640), Some(64));
@@ -93,10 +101,79 @@ fn commit_bitwise_matches_old_apply_group() {
         .unwrap();
     let exes = eng.model("small").unwrap();
 
-    // mixed group: three deletes + one addition, exactly one pass
-    let adds = synth::addition_rows(&spec, 9, 1);
-    let del_rows = vec![4usize, 17, 130];
+    let del_rows = vec![4usize, 17, 130]; // sorted: matches commit's staging order
+    let no_adds = synth::addition_rows(&spec, 9, 0);
     let (w_ref, traj_ref) = deltagrad::testing::baseline::online_group_seed_shape(
+        &exes,
+        &eng.rt,
+        &ds,
+        session.trajectory(),
+        &hp,
+        &del_rows,
+        &no_adds,
+    )
+    .unwrap();
+
+    let c = session
+        .commit(Edit::Delete(IndexSet::from_vec(del_rows.clone())))
+        .unwrap();
+    assert_eq!(c.version, 1);
+    assert_eq!(c.out.w, w_ref, "commit drifted from the old apply_group loop");
+    assert_eq!(session.w(), &w_ref[..]);
+    for t in 0..hp.t {
+        assert_eq!(
+            session.trajectory().ws[t], traj_ref.ws[t],
+            "rewritten w cache drifted at iteration {t}"
+        );
+        assert_eq!(
+            session.trajectory().gs[t], traj_ref.gs[t],
+            "rewritten g cache drifted at iteration {t}"
+        );
+    }
+    assert_eq!(session.n_current(), ds.n - 3);
+
+    // the double-buffered rewrite must stay bitwise across commits: a
+    // fork (fresh allocations, identical resident floats) and the
+    // original (recycled previous-generation buffers) must agree
+    // exactly on the next commit
+    let mut fork = session.fork().unwrap();
+    let adds2 = synth::addition_rows(&spec, 21, 2);
+    let c2 = session.commit(Edit::Add(adds2.clone())).unwrap();
+    let c2f = fork.commit(Edit::Add(adds2)).unwrap();
+    assert_eq!(
+        c2.out.w, c2f.out.w,
+        "recycled trajectory buffers changed the floats"
+    );
+    for t in 0..hp.t {
+        assert_eq!(
+            session.trajectory().gs[t], fork.trajectory().gs[t],
+            "recycled g cache drifted at iteration {t}"
+        );
+    }
+}
+
+#[test]
+fn mixed_group_commit_fuses_signed_chain() {
+    // a mixed delete+add group now runs its signed group gradient as
+    // ONE ±1-masked chain: one download per iteration instead of two.
+    // The fusion reorders the f32 reduction (device chain vs host
+    // combine), so the pin against the seed-shape two-chain loop is a
+    // tight tolerance, not bitwise.
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 7, Some(640), Some(64));
+    let hp = small_hp();
+    let mut session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    let exes = eng.model("small").unwrap();
+
+    let adds = synth::addition_rows(&spec, 9, 1);
+    let adds_n = adds.n;
+    let del_rows = vec![4usize, 17, 130];
+    let (w_ref, _) = deltagrad::testing::baseline::online_group_seed_shape(
         &exes,
         &eng.rt,
         &ds,
@@ -113,19 +190,95 @@ fn commit_bitwise_matches_old_apply_group() {
     ]);
     let c = session.commit(edit).unwrap();
     assert_eq!(c.version, 1);
-    assert_eq!(c.out.w, w_ref, "commit drifted from the old apply_group loop");
-    assert_eq!(session.w(), &w_ref[..]);
-    for t in 0..hp.t {
-        assert_eq!(
-            session.trajectory().ws[t], traj_ref.ws[t],
-            "rewritten w cache drifted at iteration {t}"
-        );
-        assert_eq!(
-            session.trajectory().gs[t], traj_ref.gs[t],
-            "rewritten g cache drifted at iteration {t}"
-        );
-    }
     assert_eq!(session.n_current(), ds.n - 3 + 1);
+    let denom = w_ref.iter().map(|x| x.abs()).fold(1e-12f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&c.out.w, &w_ref);
+    assert!(
+        d / denom < 1e-5,
+        "fused mixed commit drifted from the two-chain loop: {:.3e}",
+        d / denom
+    );
+
+    // the fused budget: ONE signed-group download per iteration plus
+    // the full-data gradient at exact iterations — the two-chain loop
+    // paid 2T + exact
+    assert_eq!(
+        c.out.transfers.downloads,
+        (hp.t + c.out.n_exact) as u64,
+        "mixed commit must download one fused signed gradient per iteration"
+    );
+    // uploads: del rows staged −1-masked (no cache) + add rows + T
+    // params + the touched removal-mask chunk
+    let del_groups = del_rows.len().div_ceil(spec.chunk_small);
+    let add_groups = adds_n.div_ceil(spec.chunk_small);
+    assert_eq!(
+        c.out.transfers.uploads,
+        (3 * del_groups + 3 * add_groups + hp.t + 1) as u64,
+        "mixed commit upload schedule changed"
+    );
+}
+
+#[test]
+fn tail_compaction_caps_launches_and_preserves_floats() {
+    // long-lived serving sessions: add commits accumulate StagedRows
+    // segments until the watermark, then commit folds them into
+    // full-size Staged chunks — ≤ ⌈tail/chunk⌉ launches per full
+    // gradient — without changing results beyond f32 reduction order
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 27, Some(640), Some(64));
+    let hp = small_hp();
+    let mut session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .tail_compact_watermark(4)
+        .build_in(&mut eng)
+        .unwrap();
+
+    // 3 add commits of one row each: 3 segment groups, below watermark
+    for i in 0..3 {
+        session
+            .commit(Edit::Add(synth::addition_rows(&spec, 100 + i, 1)))
+            .unwrap();
+        assert_eq!(session.tail_launches(), (i + 1) as usize);
+    }
+    // the 4th crosses the watermark: segments fold into ⌈4/chunk⌉ = 1
+    // full-size chunk
+    session
+        .commit(Edit::Add(synth::addition_rows(&spec, 104, 1)))
+        .unwrap();
+    assert_eq!(
+        session.tail_launches(),
+        4usize.div_ceil(spec.chunk),
+        "compaction must cap tail launches at ⌈tail/chunk⌉"
+    );
+
+    // parity: a fork re-stages the same tail from scratch (below the
+    // watermark it stays one SEGMENT, giving the segmented-vs-compacted
+    // contrast); previews of the same edit must agree to
+    // f32-reduction-order tolerance
+    let fork = session.fork().unwrap();
+    let edit = Edit::delete_row(7);
+    let a = session.preview(&edit).unwrap();
+    let b = fork.preview(&edit).unwrap();
+    assert_eq!(a.out.n_exact, b.out.n_exact);
+    let denom = b.out.w.iter().map(|x| x.abs()).fold(1e-12f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&a.out.w, &b.out.w);
+    assert!(
+        d / denom < 1e-5,
+        "compacted-tail preview drifted from segmented staging: {:.3e}",
+        d / denom
+    );
+
+    // the compacted execution budget, from the preview's own counters:
+    // T delta-row launches + per exact iteration (base chunks + the
+    // compacted tail's ⌈4/chunk⌉ = 1 launch) — not one per segment
+    let base_chunks = ds.n.div_ceil(spec.chunk);
+    assert_eq!(
+        a.out.transfers.execs,
+        (hp.t + a.out.n_exact * (base_chunks + session.tail_launches())) as u64,
+        "compacted-tail exec schedule changed"
+    );
 }
 
 #[test]

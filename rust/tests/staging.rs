@@ -14,7 +14,10 @@
 //!    (the fused on-device reduction);
 //!  * resident-mask SGD matches the gather-shaped reference on the seed
 //!    shapes, and its exact-iteration upload payload is the per-chunk
-//!    multiplicity masks — never the minibatch rows.
+//!    multiplicity masks OR — below the density threshold — compact
+//!    index lists (O(b) scalars), never the minibatch rows;
+//!  * the device-resident CG solver uploads NOTHING per iteration after
+//!    its warm-up and downloads one 2-float scalar pair.
 //!
 //! The free functions under test are deprecated shims over the Session
 //! API now; these pins intentionally keep exercising them for one
@@ -163,7 +166,10 @@ fn fused_reduction_downloads_once_per_gradient_call() {
     exes.grad_sum_staged(&eng.rt, &staged, &w).unwrap();
     let tr = eng.rt.counters.snapshot().since(c0);
     assert_eq!(tr.downloads, 1, "full staged gradient must download once");
-    assert_eq!(tr.download_floats, (spec.p + 4) as u64);
+    assert_eq!(
+        tr.download_floats,
+        (spec.p + deltagrad::runtime::engine::ACC_EXTRA) as u64
+    );
     assert_eq!(tr.execs, 3, "one execution per chunk is still expected");
 
     let pool: Vec<usize> = (0..2 * spec.chunk_small).collect();
@@ -183,11 +189,12 @@ fn fused_reduction_downloads_once_per_gradient_call() {
 }
 
 #[test]
-fn staged_subset_matches_gather_and_ships_masks_only() {
-    // the resident-minibatch primitive: a multiplicity mask over the
-    // resident Staged chunks must agree with an explicit gather of the
-    // same rows, uploading only per-touched-chunk masks and downloading
-    // one fused result
+fn staged_subset_sparse_ships_index_lists_only() {
+    // the resident-minibatch primitive, sparse side of the density
+    // threshold: a 5-row selection over resident Staged chunks executes
+    // via the grad_idx_acc gather artifacts — per touched chunk, ONE
+    // (i32 idx, f32 mult) pair of idx_cap scalars each, O(b) payload —
+    // and must agree with an explicit gather of the same rows
     let mut eng = engine();
     let exes = eng.model("small").unwrap();
     let spec = exes.spec.clone();
@@ -199,23 +206,61 @@ fn staged_subset_matches_gather_and_ships_masks_only() {
     // rows straddling all three chunks, one duplicated (multiplicity 2)
     let rows = vec![3usize, spec.chunk + 40, 2 * spec.chunk + 10, 7, 3];
     let touched = 3u64;
+    assert!(spec.idx_list_wins(2), "test presumes sparse rows take the index path");
 
     let c0 = eng.rt.counters.snapshot();
-    let (g_mask, s_mask) = exes.grad_staged_subset(&eng.rt, &staged, &ctx, &rows).unwrap();
+    let (g_idx, s_idx) = exes.grad_staged_subset(&eng.rt, &staged, &ctx, &rows).unwrap();
     let tr = eng.rt.counters.snapshot().since(c0);
-    assert_eq!(tr.uploads, touched, "only touched-chunk masks may ship");
-    assert_eq!(tr.upload_floats, touched * spec.chunk as u64);
+    // one idx buffer + one mult buffer per touched chunk — and the idx
+    // payload class is counted separately
+    assert_eq!(tr.uploads, 2 * touched, "index-list path ships idx+mult per chunk");
+    assert_eq!(tr.upload_floats, 2 * touched * spec.idx_cap as u64);
+    assert_eq!(tr.idx_uploads, touched);
+    assert_eq!(tr.idx_scalars, touched * spec.idx_cap as u64);
+    // O(b) scalars, far below the O(chunk)-float mask payload
+    assert!(tr.upload_floats < touched * spec.chunk as u64);
     assert_eq!(tr.downloads, 1, "fused subset gradient must download once");
     assert_eq!(tr.execs, touched);
 
     let (g_gather, s_gather) = exes.grad_sum_rows(&eng.rt, &ds, &rows, &w).unwrap();
-    assert_eq!(s_mask.cnt, s_gather.cnt, "multiplicity lost");
+    assert_eq!(s_idx.cnt, s_gather.cnt, "multiplicity lost");
+    let denom = g_gather.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&g_idx, &g_gather);
+    assert!(d / denom < 1e-5, "index-list gradient drifted: {:.3e}", d / denom);
+    assert!(
+        (s_idx.loss_sum - s_gather.loss_sum).abs() / s_gather.loss_sum.abs().max(1.0) < 1e-5
+    );
+}
+
+#[test]
+fn staged_subset_dense_keeps_mask_path() {
+    // dense side of the threshold: selecting most of a chunk would need
+    // several index groups, so the auto-select keeps the single
+    // chunk-float multiplicity mask — and still matches the gather
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 33, Some(spec.chunk), Some(10));
+    let staged = exes.stage(&eng.rt, &ds, &IndexSet::empty()).unwrap();
+    let mut rng = Rng::new(6);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+    let ctx = exes.pass_ctx(&eng.rt, &w).unwrap();
+    let rows: Vec<usize> = (0..200).collect(); // 200 distinct > threshold
+    assert!(!spec.idx_list_wins(rows.len()), "test presumes the mask path");
+
+    let c0 = eng.rt.counters.snapshot();
+    let (g_mask, s_mask) = exes.grad_staged_subset(&eng.rt, &staged, &ctx, &rows).unwrap();
+    let tr = eng.rt.counters.snapshot().since(c0);
+    assert_eq!(tr.uploads, 1, "dense subset ships one multiplicity mask");
+    assert_eq!(tr.upload_floats, spec.chunk as u64);
+    assert_eq!(tr.idx_uploads, 0, "no index payload on the dense path");
+    assert_eq!(tr.downloads, 1);
+
+    let (g_gather, s_gather) = exes.grad_sum_rows(&eng.rt, &ds, &rows, &w).unwrap();
+    assert_eq!(s_mask.cnt, s_gather.cnt);
     let denom = g_gather.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
     let d = deltagrad::util::vecmath::dist2(&g_mask, &g_gather);
-    assert!(d / denom < 1e-5, "staged-subset gradient drifted: {:.3e}", d / denom);
-    assert!(
-        (s_mask.loss_sum - s_gather.loss_sum).abs() / s_gather.loss_sum.abs().max(1.0) < 1e-5
-    );
+    assert!(d / denom < 1e-5, "dense-mask gradient drifted: {:.3e}", d / denom);
 }
 
 #[test]
@@ -258,10 +303,11 @@ fn resident_sgd_matches_gather_shape() {
 #[test]
 fn resident_sgd_upload_and_download_budget() {
     // the acceptance budget: an SGD exact iteration ships ONE param
-    // vector plus per-touched-chunk multiplicity masks (O(⌈n/chunk⌉)
-    // small vectors) — never the minibatch rows — and every gradient
-    // call downloads exactly one fused result. All iterations are made
-    // exact (j0 >= T) so the schedule is statically replayable.
+    // vector plus, per touched chunk, a multiplicity mask OR (below the
+    // density threshold) 2·idx_cap index scalars — never the minibatch
+    // rows — and every gradient call downloads exactly one fused
+    // result. All iterations are made exact (j0 >= T) so the schedule
+    // is statically replayable, including the mask/index auto-select.
     let mut eng = engine();
     let spec = eng.spec("small").unwrap().clone();
     let (ds, test) = synth::train_test_for_spec(&spec, 9, Some(640), Some(64));
@@ -302,10 +348,19 @@ fn resident_sgd_upload_and_download_budget() {
             uploads += groups.len(); // removed∩batch multiplicity masks
             downloads += 1; // fused removed∩batch gradient
         }
-        let mut chunks: Vec<usize> = batch.iter().map(|&i| i / c).collect();
-        chunks.sort_unstable();
-        chunks.dedup();
-        uploads += chunks.len(); // resident-minibatch multiplicity masks
+        // resident-minibatch payload, replaying the density auto-select
+        let mut per_chunk: std::collections::BTreeMap<usize, std::collections::BTreeSet<usize>> =
+            Default::default();
+        for &i in batch.iter() {
+            per_chunk.entry(i / c).or_default().insert(i);
+        }
+        for distinct in per_chunk.values().map(|s| s.len()) {
+            if spec.idx_list_wins(distinct) {
+                uploads += 2 * distinct.div_ceil(spec.idx_cap); // idx + mult
+            } else {
+                uploads += 1; // one chunk-float multiplicity mask
+            }
+        }
         downloads += 1; // fused minibatch gradient
     }
     assert_eq!(
@@ -337,6 +392,137 @@ fn resident_sgd_upload_and_download_budget() {
     let stats = session.stats();
     assert_eq!(stats.row_cache_hits, 1);
     assert_eq!(stats.row_cache_misses, 1);
+}
+
+#[test]
+fn sparse_sgd_minibatch_ships_index_lists() {
+    // the index-list acceptance budget: with a minibatch much smaller
+    // than the dataset, every exact SGD iteration ships O(b) index
+    // scalars (2·idx_cap per touched chunk), not O(n) mask floats —
+    // replayed exactly, including the per-chunk auto-select
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 9, Some(640), Some(64));
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 12;
+    hp.j0 = 12; // every iteration exact
+    hp.batch = 64; // sparse: ≤ idx_cap distinct rows per chunk (typ.)
+    let session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .build_in(&mut eng)
+        .unwrap();
+    let removed = sample_removal(&mut Rng::new(4), ds.n, 10);
+    let rem = removed.clone();
+    let pv = session.preview(&Edit::Delete(removed)).unwrap();
+    assert_eq!(pv.out.n_exact, hp.t);
+
+    let cs = spec.chunk_small;
+    let c = spec.chunk;
+    let rem_groups = rem.len().div_ceil(cs);
+    let mut uploads = 3 * rem_groups;
+    let mut idx_uploads = 0usize;
+    for batch in session.trajectory().batches.iter() {
+        let in_r: Vec<usize> = batch
+            .iter()
+            .filter_map(|i| rem.as_slice().binary_search(i).ok())
+            .collect();
+        if batch.len() == in_r.len() {
+            continue;
+        }
+        uploads += 1; // parameter vector
+        if !in_r.is_empty() {
+            let mut groups: Vec<usize> = in_r.iter().map(|&p| p / cs).collect();
+            groups.sort_unstable();
+            groups.dedup();
+            uploads += groups.len();
+        }
+        let mut per_chunk: std::collections::BTreeMap<usize, std::collections::BTreeSet<usize>> =
+            Default::default();
+        for &i in batch.iter() {
+            per_chunk.entry(i / c).or_default().insert(i);
+        }
+        for distinct in per_chunk.values().map(|s| s.len()) {
+            if spec.idx_list_wins(distinct) {
+                let groups = distinct.div_ceil(spec.idx_cap);
+                uploads += 2 * groups;
+                idx_uploads += groups;
+            } else {
+                uploads += 1;
+            }
+        }
+    }
+    assert!(idx_uploads > 0, "a b=64 batch must take the index-list path");
+    assert_eq!(pv.out.transfers.uploads, uploads as u64, "upload schedule changed");
+    assert_eq!(pv.out.transfers.idx_uploads, idx_uploads as u64, "index payload class changed");
+    assert_eq!(
+        pv.out.transfers.idx_scalars,
+        (idx_uploads * spec.idx_cap) as u64
+    );
+    // payload sanity: the whole pass undercuts the gather shape's
+    // b·(da+k+1) floats/iter (the exact per-class budget is pinned by
+    // the replay above; each idx group is 2·idx_cap scalars where a
+    // mask would be `chunk` floats)
+    let gather_total = hp.t as u64 * hp.batch as u64 * (spec.da + spec.k + 1) as u64;
+    assert!(
+        pv.out.transfers.upload_floats < gather_total,
+        "index-list pass payload {} should undercut the gather payload {}",
+        pv.out.transfers.upload_floats,
+        gather_total
+    );
+}
+
+#[test]
+fn resident_cg_uploads_nothing_per_iteration() {
+    // the resident-CG acceptance budget: after the warm-up (sample rows
+    // + parameter vector + packed state + constants) every CG iteration
+    // uploads ZERO buffers and downloads exactly one 2-float scalar
+    // pair; the solution comes home once at the end — and the solve
+    // actually inverts (H/navg + damp·I).
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    let (ds, _) = synth::train_test_for_spec(&spec, 41, Some(512), Some(10));
+    let rows: Vec<usize> = (0..256).collect();
+    let mut rng = Rng::new(11);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+    let b: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32()).collect();
+    let damp = 0.1f32;
+    let iters = 25usize;
+
+    let c0 = eng.rt.counters.snapshot();
+    let z = deltagrad::apps::influence::cg_solve_hvp(
+        &exes, &eng.rt, &ds, &rows, &w, &b, damp, iters, 0.0, // tol=0: run all iters
+    )
+    .unwrap();
+    let tr = eng.rt.counters.snapshot().since(c0);
+    let sample_groups = rows.len().div_ceil(spec.chunk_small);
+    // warm-up only: 3 buffers per sample group + w + state + consts
+    assert_eq!(
+        tr.uploads,
+        (3 * sample_groups + 3) as u64,
+        "CG iterations must upload nothing after warm-up"
+    );
+    // per iteration: one 2-float scalar pair; plus the final [p] result
+    assert_eq!(tr.downloads, (iters + 1) as u64);
+    assert_eq!(tr.download_floats, (2 * iters + spec.p) as u64);
+    // per iteration: dir + per-group HVP + step + scalars; final result
+    assert_eq!(tr.execs, (iters * (3 + sample_groups) + 1) as u64);
+
+    // correctness: residual of (H/navg + damp I) z = b is small
+    let hz = exes.hvp_sum_rows(&eng.rt, &ds, &rows, &w, &z).unwrap();
+    let mut resid = 0.0f64;
+    let mut bn = 0.0f64;
+    for i in 0..spec.p {
+        let az = hz[i] as f64 / rows.len() as f64 + damp as f64 * z[i] as f64;
+        resid += (az - b[i] as f64).powi(2);
+        bn += (b[i] as f64).powi(2);
+    }
+    assert!(
+        resid.sqrt() / bn.sqrt() < 1e-2,
+        "resident CG failed to solve: rel resid {:.3e}",
+        resid.sqrt() / bn.sqrt()
+    );
 }
 
 #[test]

@@ -22,8 +22,10 @@ import argparse
 import json
 import sys
 
-# a bench gates iff its name contains one of these (the staged paths)
-STAGED_MARKERS = ("staged", "resident", "session")
+# a bench gates iff its name contains one of these (the staged paths:
+# resident/staged/session shapes, the index-list SGD series, the
+# resident-CG solve, and the compacted long-tail series)
+STAGED_MARKERS = ("staged", "resident", "session", "index-list", "compacted")
 
 DEFAULT_MAX_REGRESS = 0.10
 
