@@ -1,27 +1,53 @@
 #!/usr/bin/env bash
 # CI gate for the DeltaGrad rust_pallas reproduction.
 #
-# Runs, in order, from rust/:
+# Runs, in order:
+#   0. python tests (compile stack + tools) from the repo root —
+#      hypothesis comes from python/requirements-dev.txt when pip can
+#      reach an index; offline, conftest.py wires the deterministic
+#      fallback shim so test_kernel/test_solver run either way
+# then, from rust/:
 #   1. cargo build --release
 #   2. cargo test -q                      (tier-1; artifact tests need `make artifacts`)
 #   3. cargo clippy --all-targets -- -D warnings
 #   4. cargo bench --bench micro -- --json BENCH_micro.json
 #   5. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
 #      snapshot (tools/bench_diff.py) — fails on >10% mean regression of
-#      the staged paths (incl. the index-list SGD, resident-CG, and
-#      compacted long-tail series; presence of those series is asserted)
+#      the staged paths (incl. the index-list SGD, resident-CG,
+#      compacted long-tail, and query-throughput series; presence of
+#      those series is asserted)
 # then asserts the bench JSON was produced, so upload/download-count
 # regressions (the staging discipline of rust/docs/PERFORMANCE.md) fail
 # loudly in review instead of silently drifting.
 #
 # Requires a Rust toolchain + the xla PJRT binding. In containers
-# without one (see .claude/skills/verify/SKILL.md) this script reports
-# BLOCKED and exits 3 so callers can distinguish "cannot run" from
-# "ran and failed".
+# without one (see .claude/skills/verify/SKILL.md) this script runs the
+# python suite, then reports BLOCKED and exits 3 so callers can
+# distinguish "cannot run" from "ran and failed".
 
 set -uo pipefail
 
 root="$(cd "$(dirname "$0")" && pwd)"
+
+echo "== ci: python tests (compile stack + tools) =="
+if command -v python3 >/dev/null 2>&1 && python3 -c "import pytest" >/dev/null 2>&1; then
+    if ! python3 -c "import hypothesis" >/dev/null 2>&1; then
+        # best-effort: prefer the real engine; the deterministic shim in
+        # python/_hypothesis_fallback.py keeps the suite running offline
+        python3 -m pip install -q -r "$root/python/requirements-dev.txt" 2>/dev/null \
+            || echo "ci.sh: pip install unavailable; using the deterministic hypothesis fallback" >&2
+    fi
+    (cd "$root" && python3 -m pytest python/tests -q) || {
+        echo "ci.sh FAIL: python tests failed" >&2
+        exit 1
+    }
+else
+    # a missing interpreter/pytest is "cannot run", not "ran and
+    # failed" — skip here; the toolchain check below still reports
+    # BLOCKED (exit 3) when cargo is also absent
+    echo "ci.sh: python3/pytest unavailable; skipping python tests" >&2
+fi
+
 cd "$root/rust"
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -52,7 +78,7 @@ fi
 # the gated transfer-schedule series must actually be emitted — a filter
 # or refactor that silently drops them would leave the bench-diff gate
 # comparing nothing
-for series in "index-list" "resident state" "compacted tail" "segmented tail"; do
+for series in "index-list" "resident state" "compacted tail" "segmented tail" "query-throughput"; do
     if ! grep -q "$series" BENCH_micro.json; then
         echo "ci.sh FAIL: bench series \"$series\" missing from BENCH_micro.json" >&2
         exit 1
@@ -69,7 +95,7 @@ if [ -f BENCH_baseline.json ]; then
     fi
 else
     echo "ci.sh: no rust/BENCH_baseline.json snapshot committed yet; seed it with:"
-    echo "    cp rust/BENCH_micro.json rust/BENCH_baseline.json"
+    echo "    python3 tools/bench_diff.py rust/BENCH_baseline.json rust/BENCH_micro.json --write-baseline"
 fi
 
 echo "== ci: OK (bench counters in rust/BENCH_micro.json) =="

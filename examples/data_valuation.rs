@@ -1,12 +1,12 @@
 //! Data valuation (§5.4): leave-one-out influence of training samples,
-//! each computed with a speculative `session.preview` instead of a full
-//! retrain — all candidates share the session's resident staged base.
+//! served through the typed Query plane — one `Query::Valuation` whose
+//! leave-one-out passes all share the session's resident staged base.
 //!
 //! Run: `cargo run --release --example data_valuation`
 
 use deltagrad::apps::valuation;
 use deltagrad::config::HyperParams;
-use deltagrad::session::SessionBuilder;
+use deltagrad::session::{Query, QueryResult, SessionBuilder};
 use deltagrad::util::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -24,9 +24,12 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(11);
     let candidates = rng.sample_distinct(session.train_dataset().n, 16);
     println!("scoring {} candidates by leave-one-out DeltaGrad ...", candidates.len());
-    let t0 = std::time::Instant::now();
-    let values = valuation::leave_one_out_values(&session, &candidates)?;
-    let secs = t0.elapsed().as_secs_f64();
+    let reply = session.query(&Query::Valuation { candidates })?;
+    let secs = reply.seconds;
+    let values = match reply.result {
+        QueryResult::Valuation { values } => values,
+        other => anyhow::bail!("unexpected reply: {other:?}"),
+    };
     let ranked = valuation::rank_by_influence(values);
     println!("top influential samples (param-space movement when removed):");
     for v in ranked.iter().take(8) {

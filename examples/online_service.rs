@@ -1,9 +1,11 @@
 //! The unlearning service under concurrent load: a burst of
-//! deletion/addition edits; the coordinator's group-commit batcher
-//! coalesces them into shared DeltaGrad passes against the worker's
-//! `Session`. The queue is bounded (`BatchPolicy::max_queue`), so
-//! overload produces typed `Rejected::QueueFull` replies instead of
-//! unbounded memory growth.
+//! deletion/addition edits INTERLEAVED with typed read queries; the
+//! coordinator's group-commit batcher coalesces the edits into shared
+//! DeltaGrad passes against the worker's `Session`, and the queries are
+//! answered between passes with the committed version they saw. Both
+//! lanes are bounded (`BatchPolicy::{max_queue, max_query_queue}` plus
+//! the bounded command channel itself), so overload produces typed
+//! `Rejected::QueueFull` replies instead of unbounded memory growth.
 //!
 //! Run: `cargo run --release --example online_service`
 
@@ -12,7 +14,7 @@ use std::time::Duration;
 use deltagrad::config::HyperParams;
 use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
 use deltagrad::data::synth;
-use deltagrad::session::Edit;
+use deltagrad::session::{Edit, Query, QueryResult};
 
 fn main() -> anyhow::Result<()> {
     let mut hp = HyperParams::for_dataset("small");
@@ -28,6 +30,7 @@ fn main() -> anyhow::Result<()> {
             max_group: 8,
             max_wait: Duration::from_millis(50),
             max_queue: 64,
+            max_query_queue: 64,
         },
     })?;
     let snap = svc.snapshot()?;
@@ -36,11 +39,16 @@ fn main() -> anyhow::Result<()> {
         snap.version, snap.n_train, snap.test_accuracy
     );
 
-    // burst of 12 deletions + 4 additions from the client side
-    println!("\n-- burst: 12 deletes + 4 adds (async) --");
+    // burst of 12 deletions + 4 additions from the client side, with a
+    // read query riding along every few edits
+    println!("\n-- burst: 12 deletes + 4 adds (async), loss queries interleaved --");
     let mut rxs = Vec::new();
+    let mut qrxs = Vec::new();
     for i in 0..12 {
         rxs.push(svc.update_async(Edit::delete_row(i * 13))?);
+        if i % 4 == 0 {
+            qrxs.push(svc.query_async(Query::Loss)?);
+        }
     }
     // fabricate additions from the generator's spec
     let eng = deltagrad::runtime::Engine::open_default()?;
@@ -49,12 +57,26 @@ fn main() -> anyhow::Result<()> {
     for i in 0..4 {
         rxs.push(svc.update_async(Edit::add_row(adds.row(i).to_vec(), adds.y[i], spec.k))?);
     }
+    qrxs.push(svc.query_async(Query::Valuation { candidates: vec![1, 3, 5, 7] })?);
     for (i, rx) in rxs.into_iter().enumerate() {
         let rep = rx.recv()??;
         println!(
             "  req {i:2}: committed v{} in group of {} (pass {:.2}s)",
             rep.version, rep.group_size, rep.pass_seconds
         );
+    }
+    for (i, rx) in qrxs.into_iter().enumerate() {
+        let rep = rx.recv()??;
+        let what = match &rep.result {
+            QueryResult::Loss { test_accuracy, .. } => {
+                format!("loss query: test acc {test_accuracy:.4}")
+            }
+            QueryResult::Valuation { values } => {
+                format!("valuation query: {} candidates scored", values.len())
+            }
+            other => format!("{other:?}"),
+        };
+        println!("  query {i}: answered at v{} — {what}", rep.version);
     }
 
     let snap = svc.snapshot()?;

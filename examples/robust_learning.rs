@@ -9,7 +9,7 @@ use deltagrad::apps::robust;
 use deltagrad::config::HyperParams;
 use deltagrad::data::synth;
 use deltagrad::runtime::Engine;
-use deltagrad::session::{Edit, SessionBuilder};
+use deltagrad::session::{Edit, Query, QueryResult, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
     let mut eng = Engine::open_default()?;
@@ -29,10 +29,14 @@ fn main() -> anyhow::Result<()> {
     let acc_poisoned = session.eval_test(session.w())?.accuracy();
     println!("model on poisoned data: test acc {acc_poisoned:.4}");
 
-    // prune the 5% highest-loss samples and refit incrementally
-    let t0 = std::time::Instant::now();
-    let fit = robust::prune_and_refit(&session, 0.05)?;
-    let total = t0.elapsed().as_secs_f64();
+    // prune the 5% highest-loss samples and refit incrementally, through
+    // the typed Query plane
+    let reply = session.query(&Query::RobustSweep { frac: 0.05 })?;
+    let total = reply.seconds;
+    let fit = match reply.result {
+        QueryResult::Robust(fit) => fit,
+        other => anyhow::bail!("unexpected reply: {other:?}"),
+    };
     let acc_robust = session.eval_test(&fit.w)?.accuracy();
 
     // how many true poison points did the loss ranking catch?

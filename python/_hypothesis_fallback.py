@@ -1,0 +1,108 @@
+"""Deterministic fallback for the tiny `hypothesis` subset this repo's
+tests use, for offline containers where the real package cannot be
+installed (it is listed in requirements-dev.txt; conftest.py wires this
+shim in ONLY when `import hypothesis` fails).
+
+Implemented surface — exactly what tests/test_kernel.py and
+tests/test_solver.py touch:
+
+* ``@given(**strategies)`` with keyword strategies;
+* ``strategies.integers(lo, hi)`` and ``strategies.floats(lo, hi)``;
+* ``@settings(max_examples=…, deadline=…)`` stacked above ``@given``.
+
+Sampling is seeded from the wrapped test's qualified name, so runs are
+reproducible and a failure in CI reproduces locally. This is NOT a
+property-testing engine (no shrinking, no example database) — it exists
+so the kernel/solver oracles exercise a broad deterministic sweep
+instead of being skipped entirely.
+"""
+
+import hashlib
+import inspect
+import os
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(**kwargs):
+    """Decorator factory: records max_examples on the (already
+    given-wrapped) function. Other knobs (deadline, …) are accepted and
+    ignored."""
+    max_examples = kwargs.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies_kw):
+    """Decorator: runs the test once per drawn example, deterministically
+    seeded by the test's qualified name. The example budget honours a
+    stacked @settings, and HYPOTHESIS_FALLBACK_EXAMPLES caps it (CI
+    time-box knob)."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            cap = os.environ.get("HYPOTHESIS_FALLBACK_EXAMPLES")
+            if cap is not None:
+                n = min(n, max(1, int(cap)))
+            seed = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:8], "big"
+            )
+            rng = random.Random(seed)
+            for example in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies_kw.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 - re-raise with context
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on fallback example "
+                        f"{example} (drawn: {drawn!r})"
+                    ) from e
+
+        # expose a signature WITHOUT the drawn parameters, so pytest does
+        # not mistake them for fixtures (no functools.wraps: __wrapped__
+        # would leak the original signature right back)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in strategies_kw]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register the shim as `hypothesis` / `hypothesis.strategies` in
+    sys.modules (call only when the real package is absent)."""
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.floats = floats
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.__is_fallback_shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,7 +1,19 @@
 """Make `compile` importable when pytest runs from the workspace root
-(`pytest python/tests/`) as well as from `python/`."""
+(`pytest python/tests/`) as well as from `python/`, and wire in the
+deterministic hypothesis fallback (python/_hypothesis_fallback.py) when
+the real package is unavailable — so test_kernel/test_solver run
+everywhere instead of failing collection offline (they had been skipped
+since the seed). Install the real engine via requirements-dev.txt where
+pip can reach an index."""
 
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401  (prefer the real engine when present)
+except ImportError:
+    from _hypothesis_fallback import install
+
+    install()

@@ -73,6 +73,12 @@ class TestCompare:
         assert bench_diff.is_staged("long-tail session.preview (compacted tail)")
         # the segmented long-tail is a before-shape: reported, not gated
         assert not bench_diff.is_staged("long-tail preview (segmented tail)")
+        # the read plane's query-throughput series all gate (even the
+        # host-side predict, which carries no other marker)
+        assert bench_diff.is_staged(
+            "query-throughput loss (session::query, resident eval)")
+        assert bench_diff.is_staged("query-throughput predict (host softmax)")
+        assert bench_diff.is_staged("query-throughput influence (resident CG)")
 
 
 class TestMain:
@@ -103,6 +109,49 @@ class TestMain:
         bad = tmp_path / "bad.json"
         bad.write_text("{not json")
         assert bench_diff.main([str(bad), n]) == 2
+
+
+class TestWriteBaseline:
+    def _write(self, tmp_path, name, data):
+        p = tmp_path / name
+        p.write_text(json.dumps(data))
+        return str(p)
+
+    def test_seeds_missing_baseline(self, tmp_path):
+        new = {STAGED: entry(10.0), BEFORE: entry(30.0)}
+        n = self._write(tmp_path, "n.json", new)
+        b = str(tmp_path / "baseline.json")  # does not exist yet
+        assert bench_diff.main([b, n, "--write-baseline"]) == 0
+        assert json.loads(open(b).read()) == new
+        # the seeded snapshot immediately works as a compare baseline
+        assert bench_diff.main([b, n]) == 0
+
+    def test_refreshes_existing_baseline(self, tmp_path):
+        b = self._write(tmp_path, "b.json", {STAGED: entry(99.0)})
+        n = self._write(tmp_path, "n.json", {STAGED: entry(10.0)})
+        assert bench_diff.main([b, n, "--write-baseline"]) == 0
+        assert json.loads(open(b).read())[STAGED]["mean_ms"] == 10.0
+
+    def test_rejects_missing_or_bad_new(self, tmp_path):
+        b = str(tmp_path / "baseline.json")
+        assert bench_diff.main(
+            [b, str(tmp_path / "absent.json"), "--write-baseline"]) == 2
+        bad = tmp_path / "bad.json"
+        bad.write_text("{not json")
+        assert bench_diff.main([b, str(bad), "--write-baseline"]) == 2
+        assert not os.path.exists(b), "a failed seed must not write"
+
+    def test_rejects_run_without_staged_series(self, tmp_path):
+        # a filtered run (only before-shapes) must not become the gate
+        b = str(tmp_path / "baseline.json")
+        n = self._write(tmp_path, "n.json", {BEFORE: entry(30.0)})
+        assert bench_diff.main([b, n, "--write-baseline"]) == 2
+        assert not os.path.exists(b)
+
+    def test_rejects_non_bench_schema(self, tmp_path):
+        b = str(tmp_path / "baseline.json")
+        n = self._write(tmp_path, "n.json", {"whatever": {"no_mean": 1}})
+        assert bench_diff.main([b, n, "--write-baseline"]) == 2
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ use deltagrad::config::HyperParams;
 use deltagrad::data::{sample_removal, synth, IndexSet};
 use deltagrad::lbfgs::History;
 use deltagrad::runtime::{Engine, Runtime};
-use deltagrad::session::{Edit, SessionBuilder};
+use deltagrad::session::{Edit, Query, SessionBuilder};
 use deltagrad::train::{self, TrainOpts};
 use deltagrad::util::vecmath::axpy;
 use deltagrad::util::Rng;
@@ -358,6 +358,51 @@ fn main() -> anyhow::Result<()> {
         })?;
         bench(&mut results, &rt, "long-tail session.preview (compacted tail)", 1, 5, || {
             compacted.preview(&edit).map(|_| ())
+        })?;
+    }
+
+    if want("query") {
+        println!("== query plane (small, T=40, resident serving) ==");
+        let spec = eng.spec("small")?.clone();
+        let (ds, test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        let session = SessionBuilder::new("small")
+            .hyper_params(hp)
+            .datasets(ds.clone(), test.clone())
+            .build_in(&mut eng)?;
+        let rt = eng.runtime();
+        let out = &mut results;
+        // the pure read: resident test+train eval, two param uploads
+        bench(out, &rt, "query-throughput loss (session::query, resident eval)", 2, 20, || {
+            session.query(&Query::Loss).map(|_| ())
+        })?;
+        // host-only: no device traffic at all
+        let x = test.row(0).to_vec();
+        bench(out, &rt, "query-throughput predict (host softmax)", 2, 50, || {
+            session.query(&Query::Predict { x: x.clone() }).map(|_| ())
+        })?;
+        // resident-CG influence: O(r + sample) scalars, 2 floats/iter
+        let removed = sample_removal(&mut Rng::new(29), ds.n, 8);
+        bench(out, &rt, "query-throughput influence (resident CG)", 1, 5, || {
+            session
+                .query(&Query::Influence {
+                    targets: removed.clone(),
+                    opts: deltagrad::apps::influence::InfluenceOpts {
+                        hessian_sample: 512,
+                        ..Default::default()
+                    },
+                })
+                .map(|_| ())
+        })?;
+        // the preview-loop kind: repeated reps hit the cross-pass row
+        // cache, so steady-state reps re-stage nothing
+        let candidates: Vec<usize> = (0..4).collect();
+        bench(out, &rt, "query-throughput valuation x4 (row-cached previews)", 1, 5, || {
+            session
+                .query(&Query::Valuation { candidates: candidates.clone() })
+                .map(|_| ())
         })?;
     }
 

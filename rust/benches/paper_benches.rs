@@ -9,7 +9,11 @@
 //! exercised under `make bench` and (b) track regressions in the
 //! end-to-end stack.
 
+use deltagrad::apps::influence::InfluenceOpts;
+use deltagrad::data::sample_removal;
 use deltagrad::expers::{self, Ctx};
+use deltagrad::session::{JackknifeFunctional, Query};
+use deltagrad::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     let filter = std::env::args()
@@ -29,8 +33,47 @@ fn main() -> anyhow::Result<()> {
         let secs = t0.elapsed().as_secs_f64();
         total += secs;
         // first table heading as a sanity marker
-        let marker = md.lines().find(|l| l.starts_with("###")).unwrap_or("");
-        println!("bench {id:>5}: {secs:8.2}s   {marker}");
+        let marker = md.lines().find(|l| l.starts_with("###"));
+        println!("bench {id:>5}: {secs:8.2}s   {}", marker.unwrap_or(""));
+    }
+
+    // the query plane over the cached small session: one timed answer
+    // per preview-loop kind, so the read path's end-to-end cost is
+    // tracked next to the drivers it serves
+    if filter.is_empty() || "query".contains(&filter) {
+        let sess = ctx.session("small", None)?;
+        let n = sess.train_dataset().n;
+        let removed = sample_removal(&mut Rng::new(31), n, 8);
+        let queries: Vec<(&str, Query)> = vec![
+            ("loss", Query::Loss),
+            (
+                "influence",
+                Query::Influence {
+                    targets: removed,
+                    opts: InfluenceOpts { hessian_sample: 512, ..Default::default() },
+                },
+            ),
+            ("valuation", Query::Valuation { candidates: (0..4).collect() }),
+            (
+                "jackknife",
+                Query::Jackknife {
+                    functional: JackknifeFunctional::ParamNormSq,
+                    loo: 4,
+                    seed: 5,
+                },
+            ),
+            ("conformal", Query::Conformal { alpha: 0.1, folds: 4, x: None }),
+        ];
+        for (name, q) in queries {
+            let t0 = std::time::Instant::now();
+            let rep = sess.query(&q)?;
+            let secs = t0.elapsed().as_secs_f64();
+            total += secs;
+            println!(
+                "bench query/{name:>9}: {secs:8.2}s   v{} uploads={} downloads={}",
+                rep.version, rep.transfers.uploads, rep.transfers.downloads
+            );
+        }
     }
     let tr = ctx.eng.rt.counters.snapshot();
     println!(

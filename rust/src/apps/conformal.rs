@@ -14,9 +14,11 @@ use crate::config::ModelKind;
 use crate::data::IndexSet;
 use crate::session::{Edit, Session};
 
-/// Nonconformity score: 1 − softmax probability of the true class under
-/// model `w` (computed host-side; LR only — logits are x·W).
-pub fn nonconformity_lr(spec_da: usize, k: usize, w: &[f32], x: &[f32], y: u32) -> f64 {
+/// Softmax class probabilities of an LR model at one point (logits
+/// x·W, max-subtracted, accumulated in f64; host-side). The single
+/// source of the LR forward-pass numerics, shared by the
+/// nonconformity score and the query plane's `Predict`.
+pub fn softmax_probs_lr(spec_da: usize, k: usize, w: &[f32], x: &[f32]) -> Vec<f64> {
     debug_assert_eq!(w.len(), spec_da * k);
     let mut logits = vec![0.0f64; k];
     for (c, l) in logits.iter_mut().enumerate() {
@@ -29,37 +31,89 @@ pub fn nonconformity_lr(spec_da: usize, k: usize, w: &[f32], x: &[f32], y: u32) 
     let mx = logits.iter().cloned().fold(f64::MIN, f64::max);
     let exps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
     let z: f64 = exps.iter().sum();
-    1.0 - exps[y as usize] / z
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// Nonconformity score: 1 − softmax probability of the true class under
+/// model `w` (computed host-side; LR only — logits are x·W).
+pub fn nonconformity_lr(spec_da: usize, k: usize, w: &[f32], x: &[f32], y: u32) -> f64 {
+    1.0 - softmax_probs_lr(spec_da, k, w, x)[y as usize]
 }
 
 /// K fold index sets (round-robin, deterministic).
 pub fn folds(n: usize, k_folds: usize) -> Vec<IndexSet> {
+    folds_of(&(0..n).collect::<Vec<_>>(), k_folds)
+}
+
+/// K fold index sets over an explicit row list (round-robin over the
+/// list order) — the live-rows variant a session with committed
+/// deletions needs.
+pub fn folds_of(rows: &[usize], k_folds: usize) -> Vec<IndexSet> {
     let mut sets = vec![Vec::new(); k_folds];
-    for i in 0..n {
-        sets[i % k_folds].push(i);
+    for (pos, &i) in rows.iter().enumerate() {
+        sets[pos % k_folds].push(i);
     }
     sets.into_iter().map(IndexSet::from_vec).collect()
 }
 
-/// Cross-conformal calibration: residuals of every training point under
-/// the fold model that excluded it. Fold models come from speculative
-/// `session.preview` deletions of each fold (vs BaseL: K full retrains).
-/// All K passes share the session's resident staged base; each pass
-/// stages its fold's rows once and uploads parameters once per iteration
-/// (runtime::engine staging discipline).
-pub fn cross_conformal_residuals(session: &Session, k_folds: usize) -> Result<Vec<f64>> {
-    assert_eq!(session.spec().model, ModelKind::Lr, "conformal app is LR-only");
+/// Core of the cross-conformal calibration, invoked by the
+/// [`crate::session::query`] dispatcher (`Query::Conformal`): residuals
+/// of every LIVE training point under the fold model that excluded it
+/// (rows already deleted from the session are skipped — their residual
+/// slot is NaN and [`residual_threshold`] ignores it). Fold models come
+/// from speculative `session.preview` deletions of each fold (vs BaseL:
+/// K full retrains). All K passes share the session's resident staged
+/// base; each pass stages its fold's rows once — and repeated queries
+/// re-stage NOTHING (cross-pass row cache) — and uploads parameters
+/// once per iteration.
+pub(crate) fn residuals_core(session: &Session, k_folds: usize) -> Result<Vec<f64>> {
+    if session.spec().model != ModelKind::Lr {
+        anyhow::bail!("conformal queries are LR-only (host-side nonconformity)");
+    }
     let da = session.spec().da;
     let k = session.spec().k;
     let ds = session.train_dataset();
-    let mut residuals = vec![0.0f64; ds.n];
-    for fold in folds(ds.n, k_folds) {
+    let live = session.removed().complement(ds.n);
+    let mut residuals = vec![f64::NAN; ds.n];
+    for fold in folds_of(&live, k_folds) {
         let pv = session.preview(&Edit::Delete(fold.clone()))?;
         for i in fold.iter() {
             residuals[i] = nonconformity_lr(da, k, &pv.out.w, ds.row(i), ds.y[i]);
         }
     }
     Ok(residuals)
+}
+
+/// Cross-conformal calibration residuals.
+#[deprecated(note = "issue a session::Query::Conformal through \
+                     session::query (see docs/API.md)")]
+pub fn cross_conformal_residuals(session: &Session, k_folds: usize) -> Result<Vec<f64>> {
+    use crate::session::{query, Query, QueryResult};
+    let reply = query(
+        session,
+        &Query::Conformal { alpha: 0.1, folds: k_folds, x: None },
+    )?;
+    match reply.result {
+        QueryResult::Conformal { residuals, .. } => Ok(residuals),
+        other => anyhow::bail!("dispatcher returned the wrong kind: {other:?}"),
+    }
+}
+
+/// The ⌈(1−α)(n+1)⌉-th smallest residual: the cross-conformal
+/// acceptance threshold shared by [`prediction_set`] and the query
+/// dispatcher. Non-finite entries (deleted rows' NaN slots from
+/// [`residuals_core`]) are excluded from the ranking.
+pub fn residual_threshold(residuals: &[f64], alpha: f64) -> f64 {
+    let mut sorted: Vec<f64> = residuals.iter().copied().filter(|r| r.is_finite()).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    if n == 0 {
+        // no calibration rows at all: accept everything rather than
+        // index out of bounds
+        return f64::INFINITY;
+    }
+    let rank = (((1.0 - alpha) * (n as f64 + 1.0)).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
 }
 
 /// Prediction set for a test point: candidate labels whose nonconformity
@@ -72,11 +126,7 @@ pub fn prediction_set(
     w: &[f32],
     x: &[f32],
 ) -> Vec<u32> {
-    let mut sorted = residuals.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = sorted.len();
-    let rank = (((1.0 - alpha) * (n as f64 + 1.0)).ceil() as usize).min(n);
-    let thresh = sorted[rank - 1];
+    let thresh = residual_threshold(residuals, alpha);
     (0..k as u32)
         .filter(|&c| nonconformity_lr(da, k, w, x, c) <= thresh)
         .collect()

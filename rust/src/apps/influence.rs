@@ -106,6 +106,7 @@ pub fn cg_solve_hvp(
 }
 
 /// One-shot influence-function deletion update at the trained optimum.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct InfluenceOpts {
     /// rows used to estimate H (sampled; all remaining rows if None)
     pub hessian_sample: usize,
@@ -121,8 +122,10 @@ impl Default for InfluenceOpts {
     }
 }
 
-/// One-shot influence-function deletion update at the session's current
-/// parameters (the D.3 comparator against `session.preview`).
+/// Core of the one-shot influence-function deletion update at the
+/// session's current parameters (the D.3 comparator against
+/// `session.preview`), invoked by the [`crate::session::query`]
+/// dispatcher (`Query::Influence`).
 ///
 /// This is the serving-time hot path, and it ships O(r + sample)
 /// SCALARS total: the right-hand side executes the removed rows against
@@ -130,7 +133,7 @@ impl Default for InfluenceOpts {
 /// below the density threshold), the Hessian sample becomes resident
 /// index-list buffers (`stage_subset_indices`, reused by every H·v),
 /// and the CG state stays on device. No row is ever re-uploaded.
-pub fn influence_delete(
+pub(crate) fn influence_core(
     session: &Session,
     removed: &IndexSet,
     opts: &InfluenceOpts,
@@ -181,6 +184,26 @@ pub fn influence_delete(
     let mut w = w_star.to_vec();
     axpy(r as f32 / (n - r) as f32, &z, &mut w);
     Ok((w, t0.elapsed().as_secs_f64()))
+}
+
+/// One-shot influence-function deletion update at the session's current
+/// parameters.
+#[deprecated(note = "issue a session::Query::Influence through \
+                     session::query (see docs/API.md)")]
+pub fn influence_delete(
+    session: &Session,
+    removed: &IndexSet,
+    opts: &InfluenceOpts,
+) -> Result<(Vec<f32>, f64)> {
+    use crate::session::{query, Query, QueryResult};
+    let reply = query(
+        session,
+        &Query::Influence { targets: removed.clone(), opts: *opts },
+    )?;
+    match reply.result {
+        QueryResult::Influence { w, solve_seconds } => Ok((w, solve_seconds)),
+        other => anyhow::bail!("dispatcher returned the wrong kind: {other:?}"),
+    }
 }
 
 /// Sample rows estimating H from the REMAINING (non-removed) rows.

@@ -11,6 +11,7 @@ use anyhow::Result;
 use crate::session::{Edit, Session};
 
 /// Jackknife over a scalar functional of the model parameters.
+#[derive(Clone, Debug)]
 pub struct JackknifeResult {
     /// f̂_n on the full data
     pub full: f64,
@@ -26,28 +27,60 @@ pub struct JackknifeResult {
     pub transfers: crate::runtime::TransferStats,
 }
 
+/// Core of the jackknife sweep, generic over a FALLIBLE functional
+/// (a device-backed functional like test loss propagates eval failures
+/// as `Err` instead of poisoning the estimate). The
+/// [`crate::session::query`] dispatcher calls this with one of the
+/// typed `JackknifeFunctional`s; the deprecated closure-based shim
+/// below delegates here (a closure cannot ride a `Query` value).
+pub(crate) fn jackknife_core(
+    session: &Session,
+    functional: impl Fn(&[f32]) -> Result<f64>,
+    loo_count: usize,
+    seed: u64,
+) -> Result<JackknifeResult> {
+    // leave-outs draw from the LIVE rows only — a session that has
+    // committed deletions must not try to re-delete one (identical to
+    // the old draw on a pristine session)
+    let live = session.removed().complement(session.train_dataset().n);
+    let n = live.len();
+    let mut rng = crate::util::Rng::new(seed);
+    let picks: Vec<usize> = rng
+        .sample_distinct(n, loo_count.min(n))
+        .into_iter()
+        .map(|j| live[j])
+        .collect();
+    if picks.is_empty() {
+        // loo_count == 0 (or no live rows): 0/0 would NaN-poison the
+        // bias estimate silently
+        anyhow::bail!("jackknife needs at least one leave-out row");
+    }
+    let full = functional(session.w())?;
+    let mut acc = 0.0f64;
+    let mut transfers = crate::runtime::TransferStats::default();
+    for &i in &picks {
+        let pv = session.preview(&Edit::delete_row(i))?;
+        transfers.accumulate(&pv.out.transfers);
+        acc += functional(&pv.out.w)?;
+    }
+    let mean_loo = acc / picks.len() as f64;
+    let bias = (n as f64 - 1.0) * (mean_loo - full);
+    Ok(JackknifeResult { full, bias, corrected: full - bias, n_loo: picks.len(), transfers })
+}
+
 /// Estimate the bias of `functional(w)` with leave-one-out DeltaGrad over
 /// a subsample of `loo_count` points (the full jackknife uses n).
+#[deprecated(note = "issue a session::Query::Jackknife (typed functional) \
+                     through session::query; arbitrary closures keep this \
+                     entry point alive but new code should go through the \
+                     dispatcher (see docs/API.md)")]
 pub fn jackknife_bias(
     session: &Session,
     functional: impl Fn(&[f32]) -> f64,
     loo_count: usize,
     seed: u64,
 ) -> Result<JackknifeResult> {
-    let n = session.train_dataset().n;
-    let mut rng = crate::util::Rng::new(seed);
-    let picks = rng.sample_distinct(n, loo_count.min(n));
-    let full = functional(session.w());
-    let mut acc = 0.0f64;
-    let mut transfers = crate::runtime::TransferStats::default();
-    for &i in &picks {
-        let pv = session.preview(&Edit::delete_row(i))?;
-        transfers.accumulate(&pv.out.transfers);
-        acc += functional(&pv.out.w);
-    }
-    let mean_loo = acc / picks.len() as f64;
-    let bias = (n as f64 - 1.0) * (mean_loo - full);
-    Ok(JackknifeResult { full, bias, corrected: full - bias, n_loo: picks.len(), transfers })
+    jackknife_core(session, |w| Ok(functional(w)), loo_count, seed)
 }
 
 #[cfg(test)]

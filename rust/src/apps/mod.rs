@@ -1,9 +1,16 @@
 //! Applications of DeltaGrad (paper §5 and appendix D), all built on
 //! speculative [`crate::session::Session::preview`] passes against one
 //! shared session — no `(exes, rt, ds, traj, hp)` plumbing, and no
-//! per-app staging of the retrain path. (The one remaining app-local
-//! upload is `robust::per_sample_losses`, whose per-row loss sweep
-//! stages its own `StagedRows` copy of the base once per call.)
+//! per-app staging of the retrain path.
+//!
+//! Since the Query-plane redesign the apps are THIN WRAPPERS over the
+//! typed read dispatcher: each module keeps its computational core
+//! (`pub(crate)`, called by [`crate::session::query`]) and its old
+//! public signature as a deprecated shim routing through
+//! `Query::{Valuation, Jackknife, Conformal, RobustSweep, Influence}`.
+//! The coordinator serves the same `Query` values next to `Edit`s, so
+//! every read below is also a service request with a version, admission
+//! control, and metrics (docs/API.md has the migration table).
 //!
 //! * [`privacy`]   — ε-approximate deletion via the Laplace mechanism
 //!   (§5.1, appendix B.1; host-side, model-agnostic).

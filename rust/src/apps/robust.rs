@@ -33,25 +33,43 @@ pub fn per_sample_losses(session: &Session, w: &[f32]) -> Result<Vec<f64>> {
 }
 
 /// Result of one prune-and-refit round.
+#[derive(Clone, Debug)]
 pub struct RobustFit {
     pub pruned: IndexSet,
     pub w: Vec<f32>,
     pub seconds: f64,
 }
 
-/// Prune the `frac` highest-loss samples (scored at the session's
-/// current parameters) and refit with a speculative DeltaGrad pass.
-pub fn prune_and_refit(session: &Session, frac: f64) -> Result<RobustFit> {
+/// Core of the prune-and-refit sweep, invoked by the
+/// [`crate::session::query`] dispatcher (`Query::RobustSweep`): score
+/// every row at the session's current parameters (resident row view —
+/// nothing ships), prune the `frac` highest-loss rows, refit with one
+/// speculative DeltaGrad pass.
+pub(crate) fn prune_core(session: &Session, frac: f64) -> Result<RobustFit> {
     assert!((0.0..1.0).contains(&frac));
-    let n = session.train_dataset().n;
     let losses = per_sample_losses(session, session.w())?;
-    let mut idx: Vec<usize> = (0..n).collect();
+    // rank (and prune among) the LIVE rows only — already-deleted rows
+    // must not be re-deleted by the refit preview
+    let mut idx = session.removed().complement(session.train_dataset().n);
     idx.sort_by(|&a, &b| losses[b].partial_cmp(&losses[a]).unwrap());
-    let r = ((n as f64) * frac).round() as usize;
+    let r = ((idx.len() as f64) * frac).round() as usize;
     let pruned = IndexSet::from_vec(idx[..r].to_vec());
     let t0 = std::time::Instant::now();
     let pv = session.preview(&Edit::Delete(pruned.clone()))?;
     Ok(RobustFit { pruned, w: pv.out.w, seconds: t0.elapsed().as_secs_f64() })
+}
+
+/// Prune the `frac` highest-loss samples (scored at the session's
+/// current parameters) and refit with a speculative DeltaGrad pass.
+#[deprecated(note = "issue a session::Query::RobustSweep through \
+                     session::query (see docs/API.md)")]
+pub fn prune_and_refit(session: &Session, frac: f64) -> Result<RobustFit> {
+    use crate::session::{query, Query, QueryResult};
+    let reply = query(session, &Query::RobustSweep { frac })?;
+    match reply.result {
+        QueryResult::Robust(fit) => Ok(fit),
+        other => anyhow::bail!("dispatcher returned the wrong kind: {other:?}"),
+    }
 }
 
 /// Inject label-flip outliers into a dataset copy (for the D.5 bench):

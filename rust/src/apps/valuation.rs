@@ -22,7 +22,8 @@ pub struct SampleValue {
     pub param_dist: f64,
 }
 
-/// Score a set of candidate samples by leave-one-out DeltaGrad.
+/// Core of the leave-one-out sweep, invoked by the
+/// [`crate::session::query`] dispatcher (`Query::Valuation`).
 ///
 /// Each candidate costs one speculative `session.preview` (vs a full
 /// retrain for the naive approach — that ratio is exactly the paper's
@@ -30,7 +31,7 @@ pub struct SampleValue {
 /// base and test set; within each pass the candidate's delta row stages
 /// once and the parameters upload once per iteration (runtime::engine
 /// staging discipline).
-pub fn leave_one_out_values(
+pub(crate) fn leave_one_out_core(
     session: &Session,
     candidates: &[usize],
 ) -> Result<Vec<SampleValue>> {
@@ -48,6 +49,24 @@ pub fn leave_one_out_values(
         });
     }
     Ok(out)
+}
+
+/// Score a set of candidate samples by leave-one-out DeltaGrad.
+#[deprecated(note = "issue a session::Query::Valuation through \
+                     session::query (see docs/API.md)")]
+pub fn leave_one_out_values(
+    session: &Session,
+    candidates: &[usize],
+) -> Result<Vec<SampleValue>> {
+    use crate::session::{query, Query, QueryResult};
+    let reply = query(
+        session,
+        &Query::Valuation { candidates: candidates.to_vec() },
+    )?;
+    match reply.result {
+        QueryResult::Valuation { values } => Ok(values),
+        other => anyhow::bail!("dispatcher returned the wrong kind: {other:?}"),
+    }
 }
 
 /// Rank candidates by |influence| (largest parameter movement first).

@@ -20,6 +20,10 @@ pub struct BatchPolicy {
     /// beyond this are rejected with `Rejected::QueueFull` instead of
     /// growing the queue without bound under load
     pub max_queue: usize,
+    /// max READ queries held while the worker is between passes; reads
+    /// have their own admission lane so a write burst cannot consume
+    /// the queries' headroom (nor queries the writes')
+    pub max_query_queue: usize,
 }
 
 impl Default for BatchPolicy {
@@ -28,6 +32,7 @@ impl Default for BatchPolicy {
             max_group: 16,
             max_wait: Duration::from_millis(20),
             max_queue: 1024,
+            max_query_queue: 256,
         }
     }
 }
@@ -37,6 +42,12 @@ impl Default for BatchPolicy {
 /// property-testable alongside the grouping rules.
 pub fn admits(queue_len: usize, policy: &BatchPolicy) -> bool {
     queue_len < policy.max_queue
+}
+
+/// Admission control for the READ lane: may a new query join a queue
+/// currently holding `pending` queries?
+pub fn admits_query(pending: usize, policy: &BatchPolicy) -> bool {
+    pending < policy.max_query_queue
 }
 
 /// A queued request with its arrival time and an opaque payload.
@@ -158,6 +169,19 @@ mod tests {
     }
 
     #[test]
+    fn query_admission_has_its_own_lane() {
+        let p = BatchPolicy { max_queue: 2, max_query_queue: 3, ..BatchPolicy::default() };
+        // the write queue being full does not close the read lane
+        assert!(!admits(2, &p));
+        assert!(admits_query(2, &p));
+        assert!(!admits_query(3, &p));
+        // and a zero-sized read lane rejects every query deterministically
+        let p0 = BatchPolicy { max_query_queue: 0, ..BatchPolicy::default() };
+        assert!(!admits_query(0, &p0));
+        assert!(admits(0, &p0));
+    }
+
+    #[test]
     fn prop_admission_bounds_queue_under_any_load() {
         // simulate arbitrary interleavings of arrivals and commit ticks:
         // with `admits` gating every arrival, the queue NEVER exceeds
@@ -168,6 +192,7 @@ mod tests {
                 max_group: 1 + g.below(8),
                 max_wait: Duration::from_millis(g.below(50) as u64),
                 max_queue: 1 + g.below(32),
+                ..BatchPolicy::default()
             };
             let now = Instant::now();
             let mut queue: Vec<Pending<u32>> = Vec::new();

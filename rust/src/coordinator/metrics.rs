@@ -1,4 +1,6 @@
-//! Service metrics: request latency histogram + throughput counters.
+//! Service metrics: request latency histogram + throughput counters,
+//! for BOTH planes — write groups (edits) and the typed read queries
+//! served next to them (per-kind counts / latency / transfer stats).
 //!
 //! std-only (no prometheus offline); snapshots are plain structs the CLI
 //! and benches can print.
@@ -6,6 +8,7 @@
 use std::time::Duration;
 
 use crate::runtime::TransferStats;
+use crate::session::QueryKind;
 
 /// Fixed log-scale latency buckets (seconds).
 const BUCKETS: [f64; 12] = [
@@ -34,6 +37,19 @@ pub struct Metrics {
     latency_max: f64,
     hist: [u64; 12],
     group_size_sum: u64,
+    /// total served read queries (all kinds)
+    pub queries: u64,
+    /// per-kind served-query counts (indexed by `QueryKind::index()`)
+    query_counts: [u64; QueryKind::COUNT],
+    query_latency_sum: [f64; QueryKind::COUNT],
+    query_latency_max: f64,
+    /// device traffic of the QUERY plane, separated from the commit
+    /// plane so the zero-row-re-staging budget is directly assertable
+    pub query_uploads: u64,
+    pub query_upload_floats: u64,
+    pub query_execs: u64,
+    pub query_downloads: u64,
+    pub query_download_floats: u64,
 }
 
 impl Metrics {
@@ -78,6 +94,42 @@ impl Metrics {
         self.execs += t.execs;
         self.downloads += t.downloads;
         self.download_floats += t.download_floats;
+    }
+
+    /// Record one served read query: its kind, end-to-end latency
+    /// (enqueue → reply), and the device traffic answering it cost.
+    pub fn record_query(&mut self, kind: QueryKind, lat: Duration, t: &TransferStats) {
+        let s = lat.as_secs_f64();
+        self.queries += 1;
+        self.query_counts[kind.index()] += 1;
+        self.query_latency_sum[kind.index()] += s;
+        if s > self.query_latency_max {
+            self.query_latency_max = s;
+        }
+        self.query_uploads += t.uploads;
+        self.query_upload_floats += t.upload_floats;
+        self.query_execs += t.execs;
+        self.query_downloads += t.downloads;
+        self.query_download_floats += t.download_floats;
+    }
+
+    /// Served queries of one kind.
+    pub fn query_count(&self, kind: QueryKind) -> u64 {
+        self.query_counts[kind.index()]
+    }
+
+    /// Mean end-to-end latency of one query kind (0 when unserved).
+    pub fn mean_query_latency(&self, kind: QueryKind) -> f64 {
+        let n = self.query_counts[kind.index()];
+        if n == 0 {
+            0.0
+        } else {
+            self.query_latency_sum[kind.index()] / n as f64
+        }
+    }
+
+    pub fn max_query_latency(&self) -> f64 {
+        self.query_latency_max
     }
 
     /// Mean uploads per served group (the staging-discipline health
@@ -137,7 +189,7 @@ impl Metrics {
     }
 
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} groups={} mean_group={:.2} mean_lat={:.4}s p95<={:.3}s max={:.4}s \
              iters(exact/approx/fallback)={}/{}/{} \
              device(uploads={} floats={} execs={} downloads={} dl_floats={} \
@@ -158,7 +210,32 @@ impl Metrics {
             self.download_floats,
             self.uploads_per_group(),
             self.downloads_per_group(),
-        )
+        );
+        if self.queries > 0 {
+            s.push_str(&format!(" queries={}", self.queries));
+            for kind in QueryKind::ALL {
+                let n = self.query_count(kind);
+                if n > 0 {
+                    s.push_str(&format!(
+                        " {}={} ({:.4}s)",
+                        kind.name(),
+                        n,
+                        self.mean_query_latency(kind)
+                    ));
+                }
+            }
+            s.push_str(&format!(
+                " q_max_lat={:.4}s q_device(uploads={} floats={} execs={} \
+                 downloads={} dl_floats={})",
+                self.query_latency_max,
+                self.query_uploads,
+                self.query_upload_floats,
+                self.query_execs,
+                self.query_downloads,
+                self.query_download_floats,
+            ));
+        }
+        s
     }
 }
 
@@ -216,6 +293,39 @@ mod tests {
         assert!((m.uploads_per_group() - 42.0).abs() < 1e-9);
         assert!((m.downloads_per_group() - 46.0).abs() < 1e-9);
         assert!(m.render().contains("downloads=92"));
+    }
+
+    #[test]
+    fn query_metrics_accumulate_per_kind() {
+        let mut m = Metrics::new();
+        let t = TransferStats { uploads: 2, upload_floats: 100, execs: 3, downloads: 2,
+                                download_floats: 20, ..Default::default() };
+        m.record_query(QueryKind::Loss, Duration::from_millis(10), &t);
+        m.record_query(QueryKind::Loss, Duration::from_millis(30), &t);
+        m.record_query(QueryKind::Influence, Duration::from_millis(50), &t);
+        assert_eq!(m.queries, 3);
+        assert_eq!(m.query_count(QueryKind::Loss), 2);
+        assert_eq!(m.query_count(QueryKind::Influence), 1);
+        assert_eq!(m.query_count(QueryKind::Conformal), 0);
+        assert!((m.mean_query_latency(QueryKind::Loss) - 0.02).abs() < 1e-9);
+        assert_eq!(m.mean_query_latency(QueryKind::Valuation), 0.0);
+        assert!((m.max_query_latency() - 0.05).abs() < 1e-9);
+        assert_eq!(m.query_uploads, 6);
+        assert_eq!(m.query_upload_floats, 300);
+        assert_eq!(m.query_downloads, 6);
+        // edit-plane totals untouched by query traffic
+        assert_eq!(m.uploads, 0);
+        let r = m.render();
+        assert!(r.contains("queries=3"), "{r}");
+        assert!(r.contains("loss=2"), "{r}");
+        assert!(r.contains("influence=1"), "{r}");
+        assert!(!r.contains("conformal="), "{r}");
+    }
+
+    #[test]
+    fn render_without_queries_omits_query_section() {
+        let m = Metrics::new();
+        assert!(!m.render().contains("queries="));
     }
 
     #[test]

@@ -1,12 +1,15 @@
-//! L3 coordination: the unlearning service.
+//! L3 coordination: the unlearning service, serving BOTH request planes.
 //!
 //! A leader thread owns the model, its cached trajectory, and the PJRT
-//! state; callers enqueue deletion/addition requests over channels. The
-//! group-commit batcher coalesces concurrent requests into single
-//! DeltaGrad passes (one pass over k changed samples costs ~one pass over
-//! 1), and metrics track latency/throughput — the serving-system shape
-//! (request router / dynamic batcher) the brief's vLLM reference
-//! architecture describes, applied to unlearning.
+//! state; callers enqueue deletion/addition edits AND typed read
+//! queries over one bounded channel. The group-commit batcher coalesces
+//! concurrent edits into single DeltaGrad passes (one pass over k
+//! changed samples costs ~one pass over 1); queries admit under their
+//! own `BatchPolicy::max_query_queue` lane and are answered between
+//! passes with the committed version they saw. Metrics track
+//! latency/throughput per plane (and per query kind) — the
+//! serving-system shape (request router / dynamic batcher) the brief's
+//! vLLM reference architecture describes, applied to unlearning.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,29 +1,49 @@
 //! The unlearning service: a leader thread owning a [`Session`], serving
-//! deletion/addition [`Edit`]s through a group-commit batcher.
+//! BOTH planes of the request API — deletion/addition [`Edit`]s through
+//! a group-commit batcher, and typed read [`Query`]s answered from the
+//! committed state between passes.
 //!
 //! PJRT state (client, executables, staged buffers) lives entirely on the
 //! worker thread inside the Session — callers talk over std mpsc
-//! channels, so any number of producer threads can enqueue edits (the
+//! channels, so any number of producer threads can enqueue requests (the
 //! Fig. 4 online workload, the `online_service` example, and the
-//! coordinator benches all drive this). The worker-side queue is bounded
-//! by `BatchPolicy::max_queue`: arrivals beyond it get a typed
-//! [`Rejected::QueueFull`] instead of buffering without limit. (The
-//! residual window is the unbounded mpsc command channel itself: edits
-//! sent *while a pass is running* sit there until the worker drains
-//! them, so transient overload can still hold up to
-//! arrival_rate × pass_duration commands in flight — they are then
-//! admitted or rejected one by one against `max_queue`.)
+//! coordinator benches all drive this). Backpressure is enforced at TWO
+//! layers, both typed as [`Rejected::QueueFull`]:
+//!
+//! * the command channel itself is a **bounded `sync_channel`** sized
+//!   from `BatchPolicy` (`max_queue + max_query_queue`): a sender that
+//!   finds it full is rejected AT SEND TIME, so transient overload can
+//!   no longer buffer `arrival_rate × pass_duration` commands while a
+//!   pass runs (the residual window the unbounded channel used to
+//!   leave);
+//! * the worker-side queues admit per lane — edits under
+//!   `BatchPolicy::max_queue`, queries under
+//!   `BatchPolicy::max_query_queue` — and the worker drains the WHOLE
+//!   pending burst into those lanes (rejecting the overflow) before
+//!   every pass, so the shared channel is empty at each pass boundary
+//!   and one plane's burst delays the other's admission by at most one
+//!   pass. (The channel bound itself is shared: a reply's `QueueFull`
+//!   carries the receiving lane's limit, but during a pass an extreme
+//!   burst of either plane can transiently occupy it.)
+//!
+//! Queries never interrupt a pass: the worker answers everything queued
+//! BETWEEN commits, against the current committed state, and each
+//! [`QueryReply`] carries the version it saw — interleaved read/write
+//! streams get snapshot-consistent replies (tests/service.rs pins
+//! this, plus the query plane's zero-row-re-staging transfer budget).
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::{admits, group_to_commit, time_until_commit, BatchPolicy, Pending};
+use super::batcher::{
+    admits, admits_query, group_to_commit, time_until_commit, BatchPolicy, Pending,
+};
 use super::metrics::Metrics;
 use crate::config::HyperParams;
-use crate::session::{Edit, SessionBuilder};
+use crate::session::{Edit, Query, QueryReply, SessionBuilder};
 
 /// What the service sends back for one served edit.
 #[derive(Clone, Debug)]
@@ -38,15 +58,16 @@ pub struct UpdateReply {
     pub n_approx: usize,
 }
 
-/// Why an edit was not applied.
+/// Why a request (edit or query) was not served.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Rejected {
-    /// the bounded request queue is full (`BatchPolicy::max_queue`);
-    /// back off and retry
+    /// the bounded queue for this request's lane is full
+    /// (`BatchPolicy::max_queue` / `max_query_queue`, or the command
+    /// channel itself); back off and retry
     QueueFull { max_queue: usize },
-    /// the pass (or validation) failed for this edit's group
+    /// the pass (or validation) failed for this request
     Failed(String),
-    /// the service stopped before (or while) serving the edit
+    /// the service stopped before (or while) serving the request
     Stopped,
 }
 
@@ -56,7 +77,7 @@ impl std::fmt::Display for Rejected {
             Rejected::QueueFull { max_queue } => {
                 write!(f, "queue full (max_queue={max_queue}); back off and retry")
             }
-            Rejected::Failed(e) => write!(f, "update rejected: {e}"),
+            Rejected::Failed(e) => write!(f, "request rejected: {e}"),
             Rejected::Stopped => write!(f, "service stopped"),
         }
     }
@@ -75,6 +96,7 @@ pub struct ModelSnapshot {
 
 enum Command {
     Update(Edit, Sender<Result<UpdateReply, Rejected>>),
+    Query(Query, Sender<Result<QueryReply, Rejected>>),
     Snapshot(Sender<ModelSnapshot>),
     Metrics(Sender<Metrics>),
     Shutdown,
@@ -93,20 +115,44 @@ pub struct ServiceConfig {
 
 /// Client handle to a running service.
 pub struct ServiceHandle {
-    tx: Sender<Command>,
+    /// `None` only transiently during shutdown (the sender must drop
+    /// BEFORE the join, or a worker blocked on `recv` never exits)
+    tx: Option<SyncSender<Command>>,
     join: Option<JoinHandle<Result<()>>>,
+    max_queue: usize,
+    max_query_queue: usize,
 }
 
 impl ServiceHandle {
     /// Spawn the leader thread: builds a [`Session`] (loads artifacts,
     /// synthesizes data, trains the initial model, caches the
-    /// trajectory), then serves edits.
+    /// trajectory), then serves edits AND queries.
     pub fn spawn(cfg: ServiceConfig) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Command>();
+        // channel bound = the sum of both admission lanes (+1 so a
+        // zero/zero policy still has a control-command slot): anything
+        // beyond what the worker could admit anyway is rejected at send
+        // time instead of buffering for the length of a pass
+        let bound = cfg
+            .policy
+            .max_queue
+            .saturating_add(cfg.policy.max_query_queue)
+            .saturating_add(1);
+        let (tx, rx) = mpsc::sync_channel::<Command>(bound);
+        let max_queue = cfg.policy.max_queue;
+        let max_query_queue = cfg.policy.max_query_queue;
         let join = std::thread::Builder::new()
             .name(format!("deltagrad-{}", cfg.model))
             .spawn(move || worker(cfg, rx))?;
-        Ok(ServiceHandle { tx, join: Some(join) })
+        Ok(ServiceHandle {
+            tx: Some(tx),
+            join: Some(join),
+            max_queue,
+            max_query_queue,
+        })
+    }
+
+    fn tx(&self) -> &SyncSender<Command> {
+        self.tx.as_ref().expect("service handle already shut down")
     }
 
     /// Enqueue one edit; blocks until it is committed (or rejected).
@@ -118,21 +164,50 @@ impl ServiceHandle {
         }
     }
 
-    /// Enqueue an edit without waiting (reply receiver returned).
+    /// Enqueue an edit without waiting (reply receiver returned). A full
+    /// command channel rejects immediately — typed backpressure at the
+    /// send site, not after a pass-length buffering delay.
     pub fn update_async(
         &self,
         edit: Edit,
     ) -> Result<Receiver<Result<UpdateReply, Rejected>>, Rejected> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Command::Update(edit, rtx))
-            .map_err(|_| Rejected::Stopped)?;
-        Ok(rrx)
+        match self.tx().try_send(Command::Update(edit, rtx)) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => Err(Rejected::QueueFull { max_queue: self.max_queue }),
+            Err(TrySendError::Disconnected(_)) => Err(Rejected::Stopped),
+        }
+    }
+
+    /// Serve one typed read query; blocks until it is answered (the
+    /// worker answers queries between passes, against the committed
+    /// state — the reply carries the version it saw).
+    pub fn query(&self, q: Query) -> Result<QueryReply, Rejected> {
+        let rrx = self.query_async(q)?;
+        match rrx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(Rejected::Stopped),
+        }
+    }
+
+    /// Enqueue a query without waiting (reply receiver returned).
+    pub fn query_async(
+        &self,
+        q: Query,
+    ) -> Result<Receiver<Result<QueryReply, Rejected>>, Rejected> {
+        let (rtx, rrx) = mpsc::channel();
+        match self.tx().try_send(Command::Query(q, rtx)) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => {
+                Err(Rejected::QueueFull { max_queue: self.max_query_queue })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(Rejected::Stopped),
+        }
     }
 
     pub fn snapshot(&self) -> Result<ModelSnapshot> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
+        self.tx()
             .send(Command::Snapshot(rtx))
             .map_err(|_| anyhow::anyhow!("service stopped"))?;
         Ok(rrx.recv()?)
@@ -140,14 +215,18 @@ impl ServiceHandle {
 
     pub fn metrics(&self) -> Result<Metrics> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
+        self.tx()
             .send(Command::Metrics(rtx))
             .map_err(|_| anyhow::anyhow!("service stopped"))?;
         Ok(rrx.recv()?)
     }
 
     pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(Command::Shutdown);
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.try_send(Command::Shutdown);
+            // drop the sender so a worker past the Shutdown command (or
+            // with a full channel) still sees the disconnect and exits
+        }
         if let Some(j) = self.join.take() {
             j.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
         }
@@ -157,7 +236,9 @@ impl ServiceHandle {
 
 impl Drop for ServiceHandle {
     fn drop(&mut self) {
-        let _ = self.tx.send(Command::Shutdown);
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.try_send(Command::Shutdown);
+        }
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -167,6 +248,11 @@ impl Drop for ServiceHandle {
 struct PendingUpdate {
     edit: Edit,
     reply: Sender<Result<UpdateReply, Rejected>>,
+}
+
+struct PendingQuery {
+    q: Query,
+    reply: Sender<Result<QueryReply, Rejected>>,
 }
 
 fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
@@ -184,48 +270,71 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
         .build()?;
     let mut metrics = Metrics::new();
 
-    // --- serve
+    // --- serve both planes on one loop
     let mut queue: Vec<Pending<PendingUpdate>> = Vec::new();
+    let mut query_queue: Vec<Pending<PendingQuery>> = Vec::new();
+    let mut burst: Vec<Command> = Vec::new();
     loop {
         // wait for work (bounded by the batcher's commit deadline)
-        let cmd = match time_until_commit(&queue, &cfg.policy, Instant::now()) {
+        match time_until_commit(&queue, &cfg.policy, Instant::now()) {
             None => match rx.recv() {
-                Ok(c) => Some(c),
+                Ok(c) => burst.push(c),
                 Err(_) => break, // all handles dropped
             },
             Some(timeout) => match rx.recv_timeout(timeout) {
-                Ok(c) => Some(c),
-                Err(RecvTimeoutError::Timeout) => None,
+                Ok(c) => burst.push(c),
+                Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => break,
             },
         };
-        match cmd {
-            Some(Command::Update(edit, reply)) => {
-                if admits(queue.len(), &cfg.policy) {
-                    queue.push(Pending {
-                        arrived: Instant::now(),
-                        payload: PendingUpdate { edit, reply },
-                    });
-                } else {
-                    let _ = reply.send(Err(Rejected::QueueFull {
-                        max_queue: cfg.policy.max_queue,
-                    }));
+        // drain the whole pending burst before doing any pass work:
+        // admission decisions (and rejections) happen immediately, so
+        // the bounded channel frees up instead of staying full for a
+        // pass-length window while one plane's burst blocks the other
+        while let Ok(c) = rx.try_recv() {
+            burst.push(c);
+        }
+        let mut shutdown = false;
+        for cmd in burst.drain(..) {
+            match cmd {
+                Command::Update(edit, reply) => {
+                    if admits(queue.len(), &cfg.policy) {
+                        queue.push(Pending {
+                            arrived: Instant::now(),
+                            payload: PendingUpdate { edit, reply },
+                        });
+                    } else {
+                        let _ = reply.send(Err(Rejected::QueueFull {
+                            max_queue: cfg.policy.max_queue,
+                        }));
+                    }
                 }
+                Command::Query(q, reply) => {
+                    if admits_query(query_queue.len(), &cfg.policy) {
+                        query_queue.push(Pending {
+                            arrived: Instant::now(),
+                            payload: PendingQuery { q, reply },
+                        });
+                    } else {
+                        let _ = reply.send(Err(Rejected::QueueFull {
+                            max_queue: cfg.policy.max_query_queue,
+                        }));
+                    }
+                }
+                Command::Snapshot(reply) => {
+                    let snap = session.snapshot()?;
+                    let _ = reply.send(ModelSnapshot {
+                        version: snap.version,
+                        w: snap.w,
+                        n_train: snap.n_train,
+                        test_accuracy: snap.test_accuracy,
+                    });
+                }
+                Command::Metrics(reply) => {
+                    let _ = reply.send(metrics.clone());
+                }
+                Command::Shutdown => shutdown = true,
             }
-            Some(Command::Snapshot(reply)) => {
-                let snap = session.snapshot()?;
-                let _ = reply.send(ModelSnapshot {
-                    version: snap.version,
-                    w: snap.w,
-                    n_train: snap.n_train,
-                    test_accuracy: snap.test_accuracy,
-                });
-            }
-            Some(Command::Metrics(reply)) => {
-                let _ = reply.send(metrics.clone());
-            }
-            Some(Command::Shutdown) => break,
-            None => {}
         }
         // commit a group if the policy says so
         let n = group_to_commit(&queue, &cfg.policy, Instant::now());
@@ -258,9 +367,33 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
                 }
             }
         }
+        // answer every queued read BETWEEN passes, against the state the
+        // commit above (if any) left behind: the reply's version is
+        // exactly the committed snapshot the query executed on
+        for p in query_queue.drain(..) {
+            match session.query(&p.payload.q) {
+                Ok(rep) => {
+                    metrics.record_query(
+                        p.payload.q.kind(),
+                        Instant::now() - p.arrived,
+                        &rep.transfers,
+                    );
+                    let _ = p.payload.reply.send(Ok(rep));
+                }
+                Err(e) => {
+                    let _ = p.payload.reply.send(Err(Rejected::Failed(e.to_string())));
+                }
+            }
+        }
+        if shutdown {
+            break;
+        }
     }
     // drain: reject anything left
     for p in queue {
+        let _ = p.payload.reply.send(Err(Rejected::Stopped));
+    }
+    for p in query_queue {
         let _ = p.payload.reply.send(Err(Rejected::Stopped));
     }
     Ok(())

@@ -27,7 +27,7 @@ use anyhow::{bail, Result};
 use crate::config::{HyperParams, ModelKind};
 use crate::data::{Dataset, IndexSet};
 use crate::lbfgs::History;
-use crate::runtime::engine::{ModelExes, Staged, StagedRows, Stats};
+use crate::runtime::engine::{ModelExes, Staged, StagedRows, StagedSubset, Stats};
 use crate::runtime::Runtime;
 use crate::util::vecmath::{axpy, dot, sub};
 
@@ -82,6 +82,11 @@ pub(crate) struct GdResources<'a> {
     /// `Change::Delete` these must be the removal set's rows in sorted
     /// order; never set for `Change::Add`.
     pub sr_delta: Option<&'a StagedRows>,
+    /// a SECOND delta staging fused into the same accumulator chain (one
+    /// download for both): the committed-ADDED rows half of a session
+    /// deletion, staged from the session's added tail. Only meaningful
+    /// for `Change::Delete` with `sr_delta` also set.
+    pub sr_delta2: Option<&'a StagedRows>,
 }
 
 /// Pre-staged device resources for an SGD deletion pass.
@@ -93,6 +98,12 @@ pub(crate) struct SgdResources<'a> {
     pub staged_reuse: Option<&'a Staged>,
     /// the removal set's rows, pre-staged (session row cache)
     pub sr_rem: Option<&'a StagedRows>,
+    /// the trajectory's per-iteration minibatch payloads, staged ONCE
+    /// (session `sgd_schedule`): exact iterations execute
+    /// `grad_staged_subset_resident` — zero subset uploads per pass —
+    /// instead of re-shipping index lists / masks every call. Must hold
+    /// one entry per trajectory iteration.
+    pub sched: Option<&'a [StagedSubset]>,
 }
 
 /// Algorithm-1 speculative pass, generalized for `session::Session`.
@@ -190,8 +201,13 @@ pub(crate) fn run_gd(
         // one parameter upload for every call of this iteration
         let ctx = exes.pass_ctx(rt, &w)?;
         // delta-row gradient sum at the current iterate (always exact,
-        // always cheap: r ≪ n rows, already device-resident)
-        let (g_delta_sum, _) = exes.grad_rows_staged(rt, sr_delta, &ctx)?;
+        // always cheap: r ≪ n rows, already device-resident); a session
+        // deletion touching committed ADDED rows fuses its second
+        // staging into the same chain — still one download
+        let (g_delta_sum, _) = match res.sr_delta2 {
+            Some(sr2) => exes.grad_rows_multi(rt, &[sr_delta, sr2], &ctx)?,
+            None => exes.grad_rows_staged(rt, sr_delta, &ctx)?,
+        };
 
         let step_scale = -(eta / n_new) as f32;
         if exact {
@@ -348,6 +364,15 @@ pub(crate) fn run_sgd_delete(
     if traj.batches.iter().any(|b| b.is_empty()) {
         bail!("delete_sgd needs a minibatch schedule; trajectory was GD");
     }
+    if let Some(sched) = res.sched {
+        if sched.len() != hp.t {
+            bail!(
+                "staged minibatch schedule length {} != hp.t = {}",
+                sched.len(),
+                hp.t
+            );
+        }
+    }
     let t0 = std::time::Instant::now();
     let transfers0 = rt.counters.snapshot();
     let rem = removed.as_slice();
@@ -428,8 +453,15 @@ pub(crate) fn run_sgd_delete(
             // full-minibatch gradient at w^I (needed for Δg anyway) over
             // the RESIDENT chunks: the payload per touched chunk is a
             // multiplicity mask or (sparse batches) an index list the
-            // device gathers — never the rows
-            let (g_bt_sum, stats) = exes.grad_staged_subset(rt, staged_full, &ctx, batch)?;
+            // device gathers — never the rows. With a pre-staged
+            // schedule (session path) even that payload is resident and
+            // the call uploads NOTHING.
+            let (g_bt_sum, stats) = match res.sched {
+                Some(sched) => {
+                    exes.grad_staged_subset_resident(rt, staged_full, &ctx, &sched[t])?
+                }
+                None => exes.grad_staged_subset(rt, staged_full, &ctx, batch)?,
+            };
             last_stats = stats;
             let dw_pair: Vec<f32> = w.iter().zip(wt).map(|(a, b)| a - b).collect();
             axpy(step_scale, &g_bt_sum, &mut w);

@@ -10,9 +10,9 @@
 
 use anyhow::Result;
 
-use crate::apps::influence::{influence_delete, InfluenceOpts};
+use crate::apps::influence::InfluenceOpts;
 use crate::data::sample_removal;
-use crate::session::Edit;
+use crate::session::{Edit, Query, QueryResult};
 use crate::util::vecmath::dist2;
 use crate::util::Rng;
 
@@ -32,8 +32,14 @@ pub fn d3(ctx: &mut Ctx) -> Result<String> {
 
             let basel = sess.baseline(&edit)?;
             let dg = sess.preview(&edit)?;
-            let (w_inf, inf_secs) =
-                influence_delete(&sess, &removed, &InfluenceOpts::default())?;
+            let inf = sess.query(&Query::Influence {
+                targets: removed.clone(),
+                opts: InfluenceOpts::default(),
+            })?;
+            let (w_inf, inf_secs) = match inf.result {
+                QueryResult::Influence { w, solve_seconds } => (w, solve_seconds),
+                other => anyhow::bail!("unexpected reply: {other:?}"),
+            };
             // warm-start: T/5 iterations from w*
             let ws = sess.warm_start(&edit, sess.hyper_params().t / 5)?;
 

@@ -16,8 +16,12 @@
 //! model plus its cached trajectory and device-resident staging state,
 //! and every retraining scenario is an [`session::Edit`] previewed
 //! (speculative pass) or committed (online pass + cache rewrite) against
-//! it. See docs/API.md for the lifecycle and the migration table from
-//! the old free functions.
+//! it. Reads go through the same plane: a typed [`session::Query`]
+//! (predictions, losses, influence, valuation, jackknife, conformal
+//! sets, robust sweeps) is served by [`session::query`] against the
+//! resident state — and by the coordinator next to edits, with
+//! versioned, snapshot-consistent replies. See docs/API.md for the
+//! lifecycle and the migration tables from the old free functions.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
@@ -38,4 +42,4 @@ pub mod util;
 pub use config::{HyperParams, ModelSpec};
 pub use data::{Dataset, IndexSet};
 pub use runtime::{Engine, ModelExes};
-pub use session::{Edit, Session, SessionBuilder};
+pub use session::{Edit, Query, QueryKind, QueryReply, QueryResult, Session, SessionBuilder};

@@ -5,6 +5,9 @@
 //!   train --model M [--t N]      train + evaluate one model (Session build)
 //!   delete --model M --rate R    one batch deletion: BaseL vs DeltaGrad preview
 //!   serve --model M --requests N run the unlearning service demo
+//!   query --model M --kind K     serve typed read queries next to edits
+//!                                (K: loss predict influence valuation
+//!                                 jackknife conformal robust)
 //!   experiment <id>|all [--scale quick|paper] [--seed S]
 //!                                regenerate a paper table/figure
 //!
@@ -80,7 +83,7 @@ fn usage(cmd: Option<&str>, allowed: &[&str]) {
         eprintln!("usage: deltagrad {cmd} {}", flags.join(" "));
     }
     eprintln!(
-        "usage: deltagrad <list|train|delete|serve|experiment> [flags]\n\
+        "usage: deltagrad <list|train|delete|serve|query|experiment> [flags]\n\
          flags take `--flag value` or `--flag=value`\n\
          experiments: {} all",
         expers::ALL.join(" ")
@@ -105,6 +108,13 @@ fn main() -> Result<()> {
         Some("serve") => {
             args.check_flags("serve", &["model", "requests", "t"]);
             cmd_serve(&args)
+        }
+        Some("query") => {
+            args.check_flags(
+                "query",
+                &["model", "kind", "t", "count", "alpha", "targets", "frac", "loo"],
+            );
+            cmd_query(&args)
         }
         Some("experiment") => {
             args.check_flags("experiment", &["scale", "seed"]);
@@ -213,6 +223,110 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let snap = svc.snapshot()?;
     println!("final v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
+    println!("metrics: {}", svc.metrics()?.render());
+    svc.shutdown()
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    use deltagrad::session::{JackknifeFunctional, Query, QueryResult};
+
+    let model = args.flag("model").unwrap_or("small").to_string();
+    let kind = args.flag("kind").unwrap_or("loss").to_string();
+    let count = args.usize_flag("count", 4)?;
+    let alpha: f64 = args.flag("alpha").unwrap_or("0.1").parse().context("--alpha")?;
+    let frac: f64 = args.flag("frac").unwrap_or("0.02").parse().context("--frac")?;
+    let targets = args.usize_flag("targets", 8)?;
+    let loo = args.usize_flag("loo", 8)?;
+    let mut hp = HyperParams::for_dataset(&model);
+    hp.t = args.usize_flag("t", hp.t.min(100))?;
+    // shape info straight from the manifest (no second PJRT client)
+    let dir = deltagrad::config::artifacts_dir()?;
+    let spec = deltagrad::config::parse_manifest(&dir.join("manifest.txt"))?
+        .get(&model)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("unknown config {model:?}"))?;
+
+    println!("spawning service for {model} (queries served next to edits) ...");
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        model: model.clone(),
+        seed: 7,
+        n_train: None,
+        n_test: None,
+        hp,
+        policy: BatchPolicy::default(),
+    })?;
+    let snap = svc.snapshot()?;
+    println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
+
+    let mk_query = |i: usize| -> Result<Query> {
+        Ok(match kind.as_str() {
+            "loss" => Query::Loss,
+            "predict" => {
+                let mut x = vec![0.0f32; spec.da];
+                x[spec.da - 1] = 1.0; // bias column
+                Query::Predict { x }
+            }
+            "influence" => Query::Influence {
+                // draw targets past the demo's deleted prefix (the
+                // interleaved edits below delete rows 0..count; the
+                // dispatcher rejects already-deleted targets)
+                targets: deltagrad::data::IndexSet::from_vec(
+                    Rng::new(17 + i as u64)
+                        .sample_distinct(snap.n_train - count, targets)
+                        .into_iter()
+                        .map(|j| j + count)
+                        .collect(),
+                ),
+                opts: deltagrad::apps::influence::InfluenceOpts::default(),
+            },
+            "valuation" => Query::Valuation {
+                candidates: (i * 4..i * 4 + 4).collect(),
+            },
+            "jackknife" => Query::Jackknife {
+                functional: JackknifeFunctional::ParamNormSq,
+                loo,
+                seed: 3 + i as u64,
+            },
+            "conformal" => Query::Conformal { alpha, folds: 4, x: None },
+            "robust" => Query::RobustSweep { frac },
+            other => anyhow::bail!(
+                "unknown query kind {other:?}; have \
+                 loss predict influence valuation jackknife conformal robust"
+            ),
+        })
+    };
+
+    // interleave reads with writes so the versioned replies show the
+    // snapshot consistency the service guarantees
+    for i in 0..count {
+        let rep = svc.query(mk_query(i)?)?;
+        let summary = match &rep.result {
+            QueryResult::Loss { test_loss, test_accuracy, .. } => {
+                format!("test loss {test_loss:.4} acc {test_accuracy:.4}")
+            }
+            QueryResult::Predict { label, probs } => {
+                format!("label {label} (p={:.3})", probs[*label as usize])
+            }
+            QueryResult::Influence { w, solve_seconds } => {
+                format!("|w|={} solve {solve_seconds:.3}s", w.len())
+            }
+            QueryResult::Valuation { values } => format!("{} candidates scored", values.len()),
+            QueryResult::Jackknife(j) => format!("bias {:.3e} (n_loo={})", j.bias, j.n_loo),
+            QueryResult::Conformal { threshold, .. } => {
+                format!("residual threshold {threshold:.4} at alpha={alpha}")
+            }
+            QueryResult::Robust(fit) => format!("pruned {} rows", fit.pruned.len()),
+        };
+        println!(
+            "  {kind} @ v{} in {:.3}s (uploads {}, downloads {}): {summary}",
+            rep.version, rep.seconds, rep.transfers.uploads, rep.transfers.downloads
+        );
+        // one write between reads: the next reply's version advances
+        let up = svc.update(Edit::delete_row(i));
+        if let Ok(up) = up {
+            println!("  (edit committed v{})", up.version);
+        }
+    }
     println!("metrics: {}", svc.metrics()?.render());
     svc.shutdown()
 }

@@ -157,6 +157,10 @@ struct RowChunk {
     x: xla::PjRtBuffer,
     y: xla::PjRtBuffer,
     mask: xla::PjRtBuffer,
+    /// host copy of the multiplicity mask, kept so individual slots can
+    /// be rewritten in place ([`ModelExes::zero_row_positions`] — the
+    /// segment-rewrite half of deleting committed added rows)
+    mask_host: Vec<f32>,
     /// real (non-padding) rows in this group
     rows: usize,
 }
@@ -206,6 +210,37 @@ pub struct StagedIdx {
 
 impl StagedIdx {
     /// Device launches one gradient/HVP over this subset costs.
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// One resident element of a [`StagedSubset`]: an `idx_cap`-capacity
+/// index-list group (sparse chunk) or a `chunk`-float multiplicity mask
+/// (dense chunk) — the density auto-select of
+/// [`ModelExes::grad_staged_subset`], staged instead of re-uploaded.
+enum SubsetGroup {
+    Idx(IdxGroup),
+    Mask {
+        chunk_i: usize,
+        mask: xla::PjRtBuffer,
+    },
+}
+
+/// A row subset of an already-resident [`Staged`] dataset with its whole
+/// execution payload staged resident: per touched chunk, either index
+/// lists ([`StagedIdx`]-shaped groups) or a dense multiplicity mask —
+/// exactly what [`ModelExes::grad_staged_subset`] would upload, kept on
+/// device so replaying the subset (a fixed SGD minibatch schedule)
+/// uploads NOTHING. Execution order matches `grad_staged_subset`
+/// bitwise (ascending chunk, then group order within a chunk).
+pub struct StagedSubset {
+    groups: Vec<SubsetGroup>,
+    pub n_sel: usize,
+}
+
+impl StagedSubset {
+    /// Device launches one gradient over this subset costs.
     pub fn n_groups(&self) -> usize {
         self.groups.len()
     }
@@ -388,6 +423,7 @@ impl ModelExes {
                 x: rt.upload(&x, &[cs, spec.da])?,
                 y: rt.upload(&y, &[cs, spec.k])?,
                 mask: rt.upload(&mask, &[cs])?,
+                mask_host: mask,
                 rows,
             });
         }
@@ -430,21 +466,23 @@ impl ModelExes {
     /// Update the removal masks of a staged dataset in place; only chunks
     /// the removal set (or a previous removal) touches are rebuilt, and
     /// only changed masks are re-uploaded. Mask construction reuses one
-    /// scratch buffer across chunks.
+    /// scratch buffer across chunks. Removal indices at or beyond
+    /// `staged.n` are ignored (the compacted-tail caller holds a staging
+    /// of a PREFIX of its dataset).
     pub fn update_removed(
         &self,
         rt: &Runtime,
         staged: &mut Staged,
-        ds: &Dataset,
         removed: &IndexSet,
     ) -> Result<usize> {
         let c = staged.chunk;
         let rem = removed.as_slice();
         let mut scratch = vec![0.0f32; c];
         let mut reuploaded = 0;
+        let n = staged.n;
         for (ci, sc) in staged.chunks.iter_mut().enumerate() {
             let lo = ci * c;
-            let hi = ((ci + 1) * c).min(ds.n);
+            let hi = ((ci + 1) * c).min(n);
             let rows = hi - lo;
             // removal-set slice falling inside this chunk's index range
             let a = rem.partition_point(|&i| i < lo);
@@ -465,6 +503,43 @@ impl ModelExes {
                 sc.mask = rt.upload(&scratch, &[c])?;
                 sc.mask_host.copy_from_slice(&scratch);
                 sc.zeros = b - a;
+                reuploaded += 1;
+            }
+        }
+        Ok(reuploaded)
+    }
+
+    /// Zero the multiplicity-mask slots of the given staged POSITIONS
+    /// (indices into the `idxs` the rows were staged with) — the
+    /// segment-rewrite half of deleting committed ADDED rows. Only the
+    /// touched `chunk_small` masks re-upload; x/y stay resident.
+    /// Returns the number of re-uploaded masks.
+    pub fn zero_row_positions(
+        &self,
+        rt: &Runtime,
+        sr: &mut StagedRows,
+        positions: &[usize],
+    ) -> Result<usize> {
+        let cs = sr.chunk;
+        let mut touched: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &p in positions {
+            if p >= sr.n_rows {
+                bail!("staged position {p} out of range {}", sr.n_rows);
+            }
+            touched.entry(p / cs).or_default().push(p % cs);
+        }
+        let mut reuploaded = 0;
+        for (ci, slots) in touched {
+            let rc = &mut sr.chunks[ci];
+            let mut changed = false;
+            for s in slots {
+                if rc.mask_host[s] != 0.0 {
+                    rc.mask_host[s] = 0.0;
+                    changed = true;
+                }
+            }
+            if changed {
+                rc.mask = rt.upload(&rc.mask_host, &[cs])?;
                 reuploaded += 1;
             }
         }
@@ -615,6 +690,77 @@ impl ModelExes {
                     &[&ctx.wbuf, &sc.x, &sc.y, &mb, prev],
                 )?);
             }
+        }
+        self.finish_grad(rt, acc)
+    }
+
+    /// Stage a row subset's ENTIRE execution payload resident, with the
+    /// same per-chunk density auto-select as [`Self::grad_staged_subset`]:
+    /// sparse chunks become `idx_cap`-capacity index-list groups, dense
+    /// chunks become resident `chunk`-float multiplicity masks. A fixed
+    /// subset that executes many times (one iteration of an SGD
+    /// minibatch schedule, replayed by every preview) pays its payload
+    /// upload once here and nothing per replay
+    /// ([`Self::grad_staged_subset_resident`]).
+    pub fn stage_subset(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        idxs: &[usize],
+    ) -> Result<StagedSubset> {
+        let c = staged.chunk;
+        let icap = self.spec.idx_cap;
+        let mut groups = Vec::new();
+        for (chunk_i, pairs) in subset_selection(staged, idxs)? {
+            if self.spec.idx_list_wins(pairs.len()) {
+                for (idxv, multv) in idx_groups(&pairs, icap) {
+                    groups.push(SubsetGroup::Idx(IdxGroup {
+                        chunk_i,
+                        idx: rt.upload_i32(&idxv, &[icap])?,
+                        mult: rt.upload(&multv, &[icap])?,
+                    }));
+                }
+            } else {
+                let mut counts = vec![0.0f32; c];
+                for &(j, m) in &pairs {
+                    counts[j] = m;
+                }
+                groups.push(SubsetGroup::Mask {
+                    chunk_i,
+                    mask: rt.upload(&counts, &[c])?,
+                });
+            }
+        }
+        Ok(StagedSubset { groups, n_sel: idxs.len() })
+    }
+
+    /// [`Self::grad_staged_subset`] against a pre-staged payload
+    /// ([`Self::stage_subset`]): ZERO uploads beyond the shared `ctx`,
+    /// one fused download. Execution chain is bitwise identical to the
+    /// upload-per-call path (same artifacts, same group order).
+    pub fn grad_staged_subset_resident(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        ctx: &PassCtx,
+        ss: &StagedSubset,
+    ) -> Result<(Vec<f32>, Stats)> {
+        let mut acc: Option<xla::PjRtBuffer> = None;
+        for g in &ss.groups {
+            let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+            acc = Some(match g {
+                SubsetGroup::Idx(ig) => {
+                    let sc = &staged.chunks[ig.chunk_i];
+                    rt.exec_buffer(
+                        &self.grad_idx_acc,
+                        &[&ctx.wbuf, &sc.x, &sc.y, &ig.idx, &ig.mult, prev],
+                    )?
+                }
+                SubsetGroup::Mask { chunk_i, mask } => {
+                    let sc = &staged.chunks[*chunk_i];
+                    rt.exec_buffer(&self.grad_acc, &[&ctx.wbuf, &sc.x, &sc.y, mask, prev])?
+                }
+            });
         }
         self.finish_grad(rt, acc)
     }

@@ -21,7 +21,7 @@
 pub mod engine;
 
 pub use engine::{
-    CgState, Engine, LbfgsBufs, ModelExes, PassCtx, Staged, StagedIdx, StagedRows,
+    CgState, Engine, LbfgsBufs, ModelExes, PassCtx, Staged, StagedIdx, StagedRows, StagedSubset,
 };
 
 use anyhow::{bail, Context, Result};

@@ -21,6 +21,13 @@
 //!   eq. S62–S63) and the dataset/mask update. The online path is
 //!   literally preview+commit composed.
 //!
+//! The READ side is first-class too: [`Query`] (Predict / Loss /
+//! Influence / Valuation / Jackknife / Conformal / RobustSweep) served
+//! by the [`query`] dispatcher — every kind answered from the resident
+//! staging state with the committed `version` it saw, so the
+//! coordinator can serve reads next to writes on one loop (see the
+//! [`query`] module docs).
+//!
 //! Staging discipline (docs/PERFORMANCE.md): the session keeps the base
 //! dataset (`Staged`, removal masks current), the committed added tail
 //! (append-only `StagedRows` segments — each add commit keeps its
@@ -31,11 +38,20 @@
 //! its delta rows — and repeated passes over the SAME rows (conformal
 //! folds, jackknife leave-outs, robust sweeps) re-stage nothing, thanks
 //! to a cross-pass row cache keyed by index-set hash — and each
-//! iteration uploads one parameter vector. Mixed delete+add group
-//! commits run their signed group gradient as ONE ±1-masked accumulator
-//! chain (one download per iteration). Cumulative per-edit device
-//! traffic (and the row-cache hit/miss counts) is tracked in
-//! [`SessionStats`].
+//! iteration uploads one parameter vector. SGD sessions additionally
+//! stage their fixed per-iteration minibatch payloads ONCE
+//! (`sgd_schedule`), so every preview after the first replays the
+//! schedule uploads-free. Mixed delete+add group commits run their
+//! signed group gradient as ONE ±1-masked accumulator chain (one
+//! download per iteration). Deletions may target committed ADDED rows
+//! (index `base.n + j`): the commit flips the multiplicity mask on the
+//! compacted tail chunk or rewrites the owning segment's mask in place.
+//! Cumulative per-edit device traffic (and the row-cache hit/miss
+//! counts) is tracked in [`SessionStats`].
+
+pub mod query;
+
+pub use query::{query, JackknifeFunctional, Query, QueryKind, QueryReply, QueryResult};
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
@@ -48,7 +64,7 @@ use crate::data::{synth, Dataset, IndexSet};
 use crate::deltagrad::batch::{self, Change, GdResources, SgdResources};
 use crate::deltagrad::RetrainOutput;
 use crate::lbfgs::History;
-use crate::runtime::engine::{ModelExes, PassCtx, Staged, StagedRows, Stats};
+use crate::runtime::engine::{ModelExes, Staged, StagedRows, StagedSubset, Stats};
 use crate::runtime::{Engine, Runtime, TransferStats};
 use crate::train::{self, TrainOpts, Trajectory};
 use crate::util::vecmath::{axpy, dot, scale, sub};
@@ -429,8 +445,15 @@ pub struct Session {
     base: Dataset,
     staged: Staged,
     removed: IndexSet,
-    /// rows added after initial training (committed)
+    /// rows added after initial training (committed). A committed added
+    /// row is addressable for deletion as `base.n + j`; deleting it
+    /// flips its multiplicity mask on the resident tail (compacted
+    /// chunk or owning segment) and records it here-adjacent in
+    /// `added_removed` — the row data itself stays in `added` so later
+    /// indices keep their meaning.
     added: Dataset,
+    /// added-local indices of deleted added rows
+    added_removed: IndexSet,
     /// the committed tail, device-resident across passes as append-only
     /// segments: each add commit keeps the pass's already-staged delta
     /// rows, so the tail never re-ships — until compaction folds them
@@ -456,6 +479,12 @@ pub struct Session {
     /// lazily staged all-rows view for per-row sweeps (its own slot, so
     /// row-cache eviction can never drop the O(n) staging)
     base_rows: RefCell<Option<Rc<StagedRows>>>,
+    /// SGD only: the trajectory's per-iteration minibatch payloads
+    /// (index lists / multiplicity masks, density auto-select applied),
+    /// staged once on the first preview — every later preview replays
+    /// the fixed schedule uploads-free. The schedule cannot go stale:
+    /// SGD sessions are preview-only, so `traj.batches` never changes.
+    sgd_sched: RefCell<Option<Rc<Vec<StagedSubset>>>>,
     /// double-buffered trajectory generations: `commit` copies each
     /// iterate into the previous ws generation's allocations and swaps
     /// — halving the rewrite's allocator traffic (the gs entries move
@@ -490,6 +519,7 @@ impl Session {
             staged,
             removed: IndexSet::empty(),
             added,
+            added_removed: IndexSet::empty(),
             added_staged: Vec::new(),
             tail_compact: None,
             compact_watermark: TAIL_COMPACT_WATERMARK,
@@ -502,6 +532,7 @@ impl Session {
             stats: Cell::new(SessionStats::default()),
             row_cache: RefCell::new(RowCache::new()),
             base_rows: RefCell::new(None),
+            sgd_sched: RefCell::new(None),
             ws_scratch: Vec::new(),
             gs_scratch: Vec::new(),
         })
@@ -635,7 +666,14 @@ impl Session {
 
     /// Current effective training-set size.
     pub fn n_current(&self) -> usize {
-        self.base.n - self.removed.len() + self.added.n
+        self.base.n - self.removed.len() + self.added.n - self.added_removed.len()
+    }
+
+    /// Serve one typed read against the current committed state
+    /// ([`query::query`]): the reply carries this session's `version`
+    /// and the device traffic answering it cost.
+    pub fn query(&self, q: &Query) -> Result<QueryReply> {
+        query::query(self, q)
     }
 
     /// Which DeltaGrad variant passes on this session run.
@@ -651,8 +689,9 @@ impl Session {
     pub fn current_dataset(&self) -> Dataset {
         let keep = self.removed.complement(self.base.n);
         let mut ds = self.base.subset(&keep);
-        if self.added.n > 0 {
-            ds.append(&self.added);
+        if self.added.n > self.added_removed.len() {
+            let live = self.added_removed.complement(self.added.n);
+            ds.append(&self.added.subset(&live));
         }
         ds
     }
@@ -666,6 +705,21 @@ impl Session {
     /// Mean loss / accuracy of `w` on the resident (masked) base set.
     pub fn eval_train(&self, w: &[f32]) -> Result<Stats> {
         self.exes.eval_staged(&self.rt, &self.staged, w)
+    }
+
+    /// Mean loss / accuracy of `w` on the CURRENT training set: the
+    /// masked base plus the committed added tail, fused into one
+    /// on-device reduction (one param upload, one download).
+    pub fn eval_train_current(&self, w: &[f32]) -> Result<Stats> {
+        let ctx = self.exes.pass_ctx(&self.rt, w)?;
+        let (_, stats) = self.exes.grad_staged_with_tail(
+            &self.rt,
+            &self.staged,
+            self.tail_compact.as_ref(),
+            &self.added_staged,
+            &ctx,
+        )?;
+        Ok(stats)
     }
 
     pub fn snapshot(&self) -> Result<Snapshot> {
@@ -684,16 +738,22 @@ impl Session {
     pub fn fork(&self) -> Result<Session> {
         let staged = self.exes.stage(&self.rt, &self.base, &self.removed)?;
         // the fork's tail re-stages from scratch: compacted when it is
-        // already past the watermark, one contiguous segment otherwise
+        // already past the watermark, one contiguous segment otherwise —
+        // either way with the deleted-added-row masks already flipped
         let mut tail_compact = None;
         let added_staged = if self.added.n == 0 {
             Vec::new()
         } else if self.added.n.div_ceil(self.exes.spec.chunk_small) >= self.compact_watermark {
-            tail_compact = Some(self.exes.stage(&self.rt, &self.added, &IndexSet::empty())?);
+            tail_compact = Some(self.exes.stage(&self.rt, &self.added, &self.added_removed)?);
             Vec::new()
         } else {
             let all: Vec<usize> = (0..self.added.n).collect();
-            vec![self.exes.stage_rows(&self.rt, &self.added, &all)?]
+            let mut sr = self.exes.stage_rows(&self.rt, &self.added, &all)?;
+            if !self.added_removed.is_empty() {
+                self.exes
+                    .zero_row_positions(&self.rt, &mut sr, self.added_removed.as_slice())?;
+            }
+            vec![sr]
         };
         let test_staged = self.exes.stage(&self.rt, &self.test_ds, &IndexSet::empty())?;
         Ok(Session {
@@ -704,6 +764,7 @@ impl Session {
             staged,
             removed: self.removed.clone(),
             added: self.added.clone(),
+            added_removed: self.added_removed.clone(),
             added_staged,
             tail_compact,
             compact_watermark: self.compact_watermark,
@@ -716,6 +777,7 @@ impl Session {
             stats: Cell::new(SessionStats::default()),
             row_cache: RefCell::new(RowCache::new()),
             base_rows: RefCell::new(None),
+            sgd_sched: RefCell::new(None),
             ws_scratch: Vec::new(),
             gs_scratch: Vec::new(),
         })
@@ -723,16 +785,53 @@ impl Session {
 
     // --- validation ----------------------------------------------------
 
-    fn check_deletes(&self, dels: &[usize]) -> Result<()> {
+    /// Validate a deletion set and split it into (base rows, ADDED rows
+    /// by added-local index). Base indices are `[0, base.n)`; committed
+    /// added rows are addressable as `base.n + j` with `j` the
+    /// append-order index into the added tail.
+    fn check_deletes(&self, dels: &[usize]) -> Result<(Vec<usize>, Vec<usize>)> {
+        let mut base = Vec::new();
+        let mut added = Vec::new();
         for &i in dels {
-            if i >= self.base.n {
-                bail!("row {i} out of range (additions cannot be deleted yet)");
-            }
-            if self.removed.contains(i) {
-                bail!("row {i} already deleted");
+            if i < self.base.n {
+                if self.removed.contains(i) {
+                    bail!("row {i} already deleted");
+                }
+                base.push(i);
+            } else {
+                let j = i - self.base.n;
+                if j >= self.added.n {
+                    bail!(
+                        "row {i} out of range (base n = {}, committed additions = {})",
+                        self.base.n,
+                        self.added.n
+                    );
+                }
+                if self.added_removed.contains(j) {
+                    bail!("added row {i} already deleted");
+                }
+                added.push(j);
             }
         }
-        Ok(())
+        Ok((base, added))
+    }
+
+    /// The resident per-iteration minibatch payloads of this session's
+    /// SGD trajectory, staged once (lazily, on the first preview) and
+    /// replayed by every later pass with ZERO subset uploads. The
+    /// payload reproduces `grad_staged_subset`'s density auto-select
+    /// bitwise, so staging it changes no floats.
+    fn sgd_schedule(&self) -> Result<Rc<Vec<StagedSubset>>> {
+        if let Some(s) = self.sgd_sched.borrow().clone() {
+            return Ok(s);
+        }
+        let mut sched = Vec::with_capacity(self.traj.batches.len());
+        for batch in &self.traj.batches {
+            sched.push(self.exes.stage_subset(&self.rt, &self.staged, batch)?);
+        }
+        let rc = Rc::new(sched);
+        *self.sgd_sched.borrow_mut() = Some(rc.clone());
+        Ok(rc)
     }
 
     // --- speculative pass ----------------------------------------------
@@ -760,7 +859,7 @@ impl Session {
         if !del_rows.is_empty() && add_ds.n > 0 {
             bail!("mixed delete+add previews are not supported; commit applies mixed groups");
         }
-        self.check_deletes(&del_rows)?;
+        let (base_dels, added_dels) = self.check_deletes(&del_rows)?;
         let mode = self.mode();
         if (hp.batch > 0) != (self.hp.batch > 0) {
             bail!(
@@ -778,12 +877,17 @@ impl Session {
                     bail!("SGD previews require a pristine session (commits are GD-only)");
                 }
                 let removed = IndexSet::from_vec(del_rows);
-                // minibatches replay against the resident base; only the
-                // removal rows need staging (cross-pass cached)
+                // minibatches replay against the resident base through
+                // the staged per-iteration schedule (first preview pays
+                // the payload once; later passes upload nothing for the
+                // subsets); only the removal rows need staging
+                // (cross-pass cached)
                 let sr_rem = self.stage_rows_cached(removed.as_slice(), true)?;
+                let sched = self.sgd_schedule()?;
                 let res = SgdResources {
                     staged_reuse: Some(&self.staged),
                     sr_rem: Some(&*sr_rem),
+                    sched: Some(&sched[..]),
                 };
                 batch::run_sgd_delete(
                     &self.exes, &self.rt, &self.base, &self.traj, hp, &removed, &res,
@@ -798,6 +902,7 @@ impl Session {
                         tail: &self.added_staged,
                         n_current: n_cur,
                         sr_delta: None, // fresh rows: nothing to cache
+                        sr_delta2: None,
                     };
                     batch::run_gd(
                         &self.exes,
@@ -809,16 +914,31 @@ impl Session {
                         &res,
                     )?
                 } else {
+                    // base-row delta rows come from the cross-pass
+                    // cache: repeated previews of one fold/leave-out
+                    // re-stage nothing. Deleted ADDED rows (if any)
+                    // stage from the added tail dataset and fuse into
+                    // the same delta chain.
                     let removed = IndexSet::from_vec(del_rows);
-                    // delta rows come from the cross-pass cache: repeated
-                    // previews of one fold/leave-out re-stage nothing
-                    let sr_delta = self.stage_rows_cached(removed.as_slice(), true)?;
+                    let base_set = IndexSet::from_vec(base_dels);
+                    let sr_delta = self.stage_rows_cached(base_set.as_slice(), true)?;
+                    let sr_delta2 = if added_dels.is_empty() {
+                        None
+                    } else {
+                        let sorted = IndexSet::from_vec(added_dels);
+                        Some(self.exes.stage_rows(
+                            &self.rt,
+                            &self.added,
+                            sorted.as_slice(),
+                        )?)
+                    };
                     let res = GdResources {
                         staged_reuse: Some(&self.staged),
                         tail_compact: self.tail_compact.as_ref(),
                         tail: &self.added_staged,
                         n_current: n_cur,
                         sr_delta: Some(&*sr_delta),
+                        sr_delta2: sr_delta2.as_ref(),
                     };
                     batch::run_gd(
                         &self.exes,
@@ -867,7 +987,7 @@ impl Session {
             // accept empty edits (trajectory replay), commits do not
             bail!("empty edit: nothing to commit");
         }
-        self.check_deletes(&del_rows)?;
+        let (base_dels, added_dels) = self.check_deletes(&del_rows)?;
         let n_cur = self.n_current() as f64;
         let n_new = n_cur - del_rows.len() as f64 + add_ds.n as f64;
         if n_new <= 0.0 {
@@ -893,14 +1013,25 @@ impl Session {
         // commit does re-stage them, trading 3·⌈r/cs⌉ one-time uploads
         // for T−n_exact saved downloads every mixed pass.
         let mixed = !del_rows.is_empty() && add_ds.n > 0;
-        let sr_del = if del_rows.is_empty() {
+        let sr_del = if base_dels.is_empty() {
             None
         } else if mixed {
-            let sorted = IndexSet::from_vec(del_rows.clone());
+            let sorted = IndexSet::from_vec(base_dels.clone());
             Some(Rc::new(exes.stage_rows_masked(rt, &self.base, sorted.as_slice(), -1.0)?))
         } else {
-            let sorted = IndexSet::from_vec(del_rows.clone());
+            let sorted = IndexSet::from_vec(base_dels.clone());
             Some(self.stage_rows_cached(sorted.as_slice(), false)?)
+        };
+        // deleted ADDED rows stage from the added tail dataset (never
+        // row-cached: the cache is keyed by BASE indices) and join the
+        // same signed chain
+        let added_sorted = IndexSet::from_vec(added_dels.clone());
+        let sr_del_tail = if added_dels.is_empty() {
+            None
+        } else if mixed {
+            Some(exes.stage_rows_masked(rt, &self.added, added_sorted.as_slice(), -1.0)?)
+        } else {
+            Some(exes.stage_rows(rt, &self.added, added_sorted.as_slice())?)
         };
         let sr_add = if add_ds.n == 0 {
             None
@@ -967,16 +1098,34 @@ impl Session {
             let ctx = exes.pass_ctx(rt, &w)?;
             // signed gradient sum of the changed samples at the current
             // iterate (always exact; |group| ≪ n resident rows); mixed
-            // groups run ONE fused chain over the ±1-masked stagings
+            // groups run ONE fused chain over the ±1-masked stagings,
+            // and pure-delete groups fuse their base + added-tail delta
+            // stagings the same way (host negation afterwards)
             let g_chg = if mixed {
-                let (g, _) = exes.grad_rows_multi(
-                    rt,
-                    &[sr_del.as_deref().unwrap(), sr_add.as_ref().unwrap()],
-                    &ctx,
-                )?;
+                let mut chain: Vec<&StagedRows> = Vec::new();
+                if let Some(sr) = &sr_del {
+                    chain.push(sr);
+                }
+                if let Some(sr) = &sr_del_tail {
+                    chain.push(sr);
+                }
+                chain.push(sr_add.as_ref().unwrap());
+                let (g, _) = exes.grad_rows_multi(rt, &chain, &ctx)?;
+                g
+            } else if add_ds.n > 0 {
+                let (g, _) = exes.grad_rows_staged(rt, sr_add.as_ref().unwrap(), &ctx)?;
                 g
             } else {
-                grad_sum_group(exes, rt, &ctx, sr_del.as_deref(), sr_add.as_ref())?
+                let mut chain: Vec<&StagedRows> = Vec::new();
+                if let Some(sr) = &sr_del {
+                    chain.push(sr);
+                }
+                if let Some(sr) = &sr_del_tail {
+                    chain.push(sr);
+                }
+                let (mut g, _) = exes.grad_rows_multi(rt, &chain, &ctx)?;
+                scale(&mut g, -1.0);
+                g
             };
             // average gradient over the NEW dataset at the new iterate:
             // g_new_avg = (n_cur * g_cur_avg + g_chg) / n_new        (S62)
@@ -1044,26 +1193,60 @@ impl Session {
             + sr_add.as_ref().map_or(0, |s| s.n_chunks());
         let total_added = self.added.n + add_ds.n;
         let pending_rows = total_added - self.tail_compact.as_ref().map_or(0, |s| s.n);
+        // the post-edit deleted-added-rows set (this commit's added
+        // deletions included): compaction and mask flips both need it
+        let mut added_removed_new = self.added_removed.clone();
+        for &j in &added_dels {
+            added_removed_new.insert(j);
+        }
         let compacted = if pending_rows > 0
             && seg_groups >= self.compact_watermark
             && 4 * pending_rows >= total_added
         {
             let mut all = self.added.clone();
             all.append(&add_ds);
-            Some(exes.stage(rt, &all, &IndexSet::empty())?)
+            Some(exes.stage(rt, &all, &added_removed_new)?)
         } else {
             None
         };
 
         // commit: flip the removal masks (the one remaining fallible
         // step), then the infallible state swap
-        if !del_rows.is_empty() {
+        if !base_dels.is_empty() {
             let mut removed_new = self.removed.clone();
-            for &i in &del_rows {
+            for &i in &base_dels {
                 removed_new.insert(i);
             }
-            exes.update_removed(rt, &mut self.staged, &self.base, &removed_new)?;
+            exes.update_removed(rt, &mut self.staged, &removed_new)?;
             self.removed = removed_new;
+        }
+        if !added_dels.is_empty() {
+            // deleted ADDED rows: flip the multiplicity mask on the
+            // compacted tail chunk / rewrite the owning segment's mask —
+            // unless this commit's compaction replaces the whole tail
+            // below (the fresh staging already carries the masks)
+            if compacted.is_none() {
+                if let Some(tc) = self.tail_compact.as_mut() {
+                    // indices ≥ tc.n (rows added after compaction) are
+                    // ignored by update_removed; they live in segments
+                    exes.update_removed(rt, tc, &added_removed_new)?;
+                }
+                let mut seg_start = self.tail_compact.as_ref().map_or(0, |s| s.n);
+                for sr in self.added_staged.iter_mut() {
+                    let seg_end = seg_start + sr.n_rows;
+                    let pos: Vec<usize> = added_dels
+                        .iter()
+                        .copied()
+                        .filter(|&j| j >= seg_start && j < seg_end)
+                        .map(|j| j - seg_start)
+                        .collect();
+                    if !pos.is_empty() {
+                        exes.zero_row_positions(rt, sr, &pos)?;
+                    }
+                    seg_start = seg_end;
+                }
+            }
+            self.added_removed = added_removed_new;
         }
         if let Some(sr) = sr_add {
             // the pass's staged addition rows become the next resident
@@ -1132,10 +1315,14 @@ impl Session {
         reuse_batches: bool,
     ) -> Result<BaselineRun> {
         let (del_rows, add_ds) = edit.normalize(self.base.da, self.base.k)?;
-        self.check_deletes(&del_rows)?;
+        let (base_dels, added_dels) = self.check_deletes(&del_rows)?;
         let mut removed = self.removed.clone();
-        for &i in &del_rows {
+        for &i in &base_dels {
             removed.insert(i);
+        }
+        let mut added_removed = self.added_removed.clone();
+        for &j in &added_dels {
+            added_removed.insert(j);
         }
         let mut hp = self.hp.clone();
         hp.t = iters;
@@ -1155,7 +1342,10 @@ impl Session {
             train::train(&self.exes, &self.rt, &self.base, &opts)?
         } else {
             let mut ds = self.base.clone();
-            ds.append(&self.added);
+            if self.added.n > added_removed.len() {
+                let live = added_removed.complement(self.added.n);
+                ds.append(&self.added.subset(&live));
+            }
             ds.append(&add_ds);
             train::train(&self.exes, &self.rt, &ds, &opts)?
         };
@@ -1165,28 +1355,6 @@ impl Session {
             final_stats: out.final_stats,
         })
     }
-}
-
-/// Signed gradient sum of all changed samples in the group at the
-/// iteration's parameters: `Σ_add ∇F_i(w) − Σ_del ∇F_i(w)`, over the
-/// group's pre-staged rows.
-fn grad_sum_group(
-    exes: &ModelExes,
-    rt: &Runtime,
-    ctx: &PassCtx,
-    sr_del: Option<&StagedRows>,
-    sr_add: Option<&StagedRows>,
-) -> Result<Vec<f32>> {
-    let mut g = vec![0.0f32; exes.spec.p];
-    if let Some(sr) = sr_del {
-        let (gd, _) = exes.grad_rows_staged(rt, sr, ctx)?;
-        axpy(-1.0, &gd, &mut g);
-    }
-    if let Some(sr) = sr_add {
-        let (ga, _) = exes.grad_rows_staged(rt, sr, ctx)?;
-        axpy(1.0, &ga, &mut g);
-    }
-    Ok(g)
 }
 
 #[cfg(test)]

@@ -1,0 +1,363 @@
+//! The typed READ plane: every question a DeltaGrad consumer asks of a
+//! served model — predictions, losses, influence, valuation, jackknife,
+//! conformal sets, robust sweeps — as one [`Query`] enum dispatched by
+//! [`query`] against a [`Session`].
+//!
+//! DeltaGrad's cached-training-state design exists to *serve* these
+//! read-heavy evaluation loops (PAPER.md §5; the certifiable-unlearning
+//! benchmarks frame exactly this workload). Writes got a first-class
+//! API in the Session redesign ([`Edit`](super::Edit) → preview/commit);
+//! this module gives reads the same shape:
+//!
+//! * one typed request ([`Query`]) and reply ([`QueryReply`]) — the
+//!   reply carries the model **`version`** it was answered at, so
+//!   interleaved read/write streams get snapshot-consistent answers;
+//! * one dispatcher ([`query`]) that routes every kind through the
+//!   session's RESIDENT staging contexts (`Staged` base/test sets, the
+//!   cross-pass row cache, `StagedIdx` + resident CG for influence):
+//!   serving a query re-stages **nothing** row-shaped;
+//! * per-reply transfer accounting (the pass's `TransferStats`), so the
+//!   zero-re-staging claim is asserted, not asserted-by-comment
+//!   (tests/service.rs pins the budget);
+//! * the coordinator serves `Query` values next to `Edit`s on one
+//!   worker loop, with their own admission knob
+//!   (`BatchPolicy::max_query_queue`) and per-kind `Metrics`.
+//!
+//! The five §5 apps are thin wrappers over this dispatcher now; their
+//! old free-function signatures survive as deprecated shims
+//! (docs/API.md has the migration table).
+
+use anyhow::{bail, Result};
+
+use crate::apps::{conformal, influence, jackknife, robust, valuation};
+use crate::apps::influence::InfluenceOpts;
+use crate::apps::jackknife::JackknifeResult;
+use crate::apps::robust::RobustFit;
+use crate::apps::valuation::SampleValue;
+use crate::config::ModelKind;
+use crate::data::IndexSet;
+use crate::runtime::TransferStats;
+
+use super::Session;
+
+/// Which scalar functional a `Query::Jackknife` debiases. The closure
+/// form survives on [`jackknife::jackknife_core`]; the query plane
+/// carries a typed, serializable choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JackknifeFunctional {
+    /// ‖w‖² (the parameter-norm plug-in statistic)
+    ParamNormSq,
+    /// mean loss on the resident test set
+    TestLoss,
+    /// accuracy on the resident test set
+    TestAccuracy,
+}
+
+/// One read against a session's current committed state. Every kind is
+/// answered from resident device state — the base/test `Staged` sets,
+/// cached `StagedRows` (folds, leave-outs), resident index lists and CG
+/// state — so a query ships parameters and scalars, never rows.
+#[derive(Clone, Debug)]
+pub enum Query {
+    /// class prediction + per-class probabilities for one feature row
+    /// (bias column included; host-side softmax — LR only)
+    Predict { x: Vec<f32> },
+    /// mean loss / accuracy on the resident test AND train sets
+    Loss,
+    /// one-shot influence-function deletion estimate for `targets`
+    /// (resident CG; the D.3 comparator)
+    Influence { targets: IndexSet, opts: InfluenceOpts },
+    /// leave-one-out valuation of the candidate rows (§5.4)
+    Valuation { candidates: Vec<usize> },
+    /// jackknife bias estimate of a typed functional over `loo`
+    /// leave-one-out refits (§5.5)
+    Jackknife { functional: JackknifeFunctional, loo: usize, seed: u64 },
+    /// cross-conformal calibration at miscoverage `alpha` over `folds`
+    /// folds; with `x` also the prediction set for that point (§5.6)
+    Conformal { alpha: f64, folds: usize, x: Option<Vec<f32>> },
+    /// robust prune-and-refit of the `frac` highest-loss rows (§5.3)
+    RobustSweep { frac: f64 },
+}
+
+/// The kind tag of a [`Query`] — the coordinator's per-kind metrics key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryKind {
+    Predict,
+    Loss,
+    Influence,
+    Valuation,
+    Jackknife,
+    Conformal,
+    RobustSweep,
+}
+
+impl QueryKind {
+    pub const COUNT: usize = 7;
+    pub const ALL: [QueryKind; QueryKind::COUNT] = [
+        QueryKind::Predict,
+        QueryKind::Loss,
+        QueryKind::Influence,
+        QueryKind::Valuation,
+        QueryKind::Jackknife,
+        QueryKind::Conformal,
+        QueryKind::RobustSweep,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueryKind::Predict => "predict",
+            QueryKind::Loss => "loss",
+            QueryKind::Influence => "influence",
+            QueryKind::Valuation => "valuation",
+            QueryKind::Jackknife => "jackknife",
+            QueryKind::Conformal => "conformal",
+            QueryKind::RobustSweep => "robust",
+        }
+    }
+
+    /// Stable index into per-kind metric arrays.
+    pub fn index(&self) -> usize {
+        Self::ALL.iter().position(|k| k == self).unwrap()
+    }
+}
+
+impl Query {
+    pub fn kind(&self) -> QueryKind {
+        match self {
+            Query::Predict { .. } => QueryKind::Predict,
+            Query::Loss => QueryKind::Loss,
+            Query::Influence { .. } => QueryKind::Influence,
+            Query::Valuation { .. } => QueryKind::Valuation,
+            Query::Jackknife { .. } => QueryKind::Jackknife,
+            Query::Conformal { .. } => QueryKind::Conformal,
+            Query::RobustSweep { .. } => QueryKind::RobustSweep,
+        }
+    }
+}
+
+/// Kind-specific payload of a [`QueryReply`].
+#[derive(Clone, Debug)]
+pub enum QueryResult {
+    Predict {
+        label: u32,
+        /// softmax probabilities per class
+        probs: Vec<f64>,
+    },
+    Loss {
+        test_loss: f64,
+        test_accuracy: f64,
+        train_loss: f64,
+        train_accuracy: f64,
+    },
+    Influence {
+        /// the estimated post-deletion parameters w_{-R}
+        w: Vec<f32>,
+        /// seconds inside the resident CG solve
+        solve_seconds: f64,
+    },
+    Valuation {
+        values: Vec<SampleValue>,
+    },
+    Jackknife(JackknifeResult),
+    Conformal {
+        /// per-training-row cross-validation residuals
+        residuals: Vec<f64>,
+        /// the ⌈(1−α)(n+1)⌉-th smallest residual
+        threshold: f64,
+        /// prediction set for the query's `x`, when one was given
+        set: Option<Vec<u32>>,
+    },
+    Robust(RobustFit),
+}
+
+/// A served read: the result plus the model `version` it was answered
+/// at and the device traffic answering it cost.
+#[derive(Clone, Debug)]
+pub struct QueryReply {
+    /// the session's commit counter when the query executed — replies
+    /// from an interleaved read/write stream are snapshot-consistent
+    /// with exactly this committed state
+    pub version: u64,
+    /// wall-clock seconds answering
+    pub seconds: f64,
+    /// device traffic of the answer (uploads should be parameter
+    /// vectors and scalars only — zero row re-staging)
+    pub transfers: TransferStats,
+    pub result: QueryResult,
+}
+
+/// Serve one [`Query`] against the session's current committed state.
+///
+/// Every kind routes through the resident staging contexts: `Loss` and
+/// `Predict` touch only the resident eval sets (or the host), the
+/// preview-loop kinds (valuation / jackknife / conformal / robust) ride
+/// the cross-pass row cache, and `Influence` solves on device-resident
+/// CG state over resident index lists. The reply's `transfers` snapshot
+/// proves it.
+pub fn query(session: &Session, q: &Query) -> Result<QueryReply> {
+    let t0 = std::time::Instant::now();
+    let tr0 = session.runtime().counters.snapshot();
+    let version = session.version();
+    let result = match q {
+        Query::Predict { x } => predict(session, x)?,
+        Query::Loss => {
+            let test = session.eval_test(session.w())?;
+            // the CURRENT training set: masked base + committed added
+            // tail, fused into one download (eval_train alone would
+            // silently exclude the tail)
+            let train = session.eval_train_current(session.w())?;
+            QueryResult::Loss {
+                test_loss: test.mean_loss(),
+                test_accuracy: test.accuracy(),
+                train_loss: train.mean_loss(),
+                train_accuracy: train.accuracy(),
+            }
+        }
+        Query::Influence { targets, opts } => {
+            // influence estimates a BASE-row deletion; validate like the
+            // write plane would (the resident subset execution replaces
+            // removal masks, so a stale/deleted target would silently
+            // poison the estimate instead of erroring)
+            if targets.is_empty() {
+                bail!("influence query needs a non-empty target set");
+            }
+            let n = session.train_dataset().n;
+            for i in targets.iter() {
+                if i >= n {
+                    bail!("influence target {i} out of range (base n = {n})");
+                }
+                if session.removed().contains(i) {
+                    bail!("influence target {i} is already deleted");
+                }
+            }
+            if targets.len() + session.removed().len() >= n {
+                bail!("influence targets would delete every remaining base row");
+            }
+            let (w, solve_seconds) = influence::influence_core(session, targets, opts)?;
+            QueryResult::Influence { w, solve_seconds }
+        }
+        Query::Valuation { candidates } => QueryResult::Valuation {
+            values: valuation::leave_one_out_core(session, candidates)?,
+        },
+        Query::Jackknife { functional, loo, seed } => {
+            if *loo == 0 {
+                bail!("jackknife query needs at least one leave-out row");
+            }
+            // eval failures propagate as Err (not NaN-poisoned results)
+            let res = match functional {
+                JackknifeFunctional::ParamNormSq => jackknife::jackknife_core(
+                    session,
+                    |w| Ok(crate::util::vecmath::dot(w, w)),
+                    *loo,
+                    *seed,
+                )?,
+                JackknifeFunctional::TestLoss => jackknife::jackknife_core(
+                    session,
+                    |w| session.eval_test(w).map(|s| s.mean_loss()),
+                    *loo,
+                    *seed,
+                )?,
+                JackknifeFunctional::TestAccuracy => jackknife::jackknife_core(
+                    session,
+                    |w| session.eval_test(w).map(|s| s.accuracy()),
+                    *loo,
+                    *seed,
+                )?,
+            };
+            QueryResult::Jackknife(res)
+        }
+        Query::Conformal { alpha, folds, x } => {
+            // validate here: the cores were library-internal and panic
+            // on nonsense, but a Query arrives from service clients —
+            // bad parameters must reject, not kill the worker thread
+            if !(0.0..1.0).contains(alpha) {
+                bail!("conformal alpha {alpha} outside (0, 1)");
+            }
+            if *folds == 0 || *folds > session.train_dataset().n {
+                bail!(
+                    "conformal folds {} outside [1, n = {}]",
+                    folds,
+                    session.train_dataset().n
+                );
+            }
+            let residuals = conformal::residuals_core(session, *folds)?;
+            let threshold = conformal::residual_threshold(&residuals, *alpha);
+            let spec = session.spec();
+            let set = match x {
+                None => None,
+                Some(x) => {
+                    if x.len() != spec.da {
+                        bail!(
+                            "conformal point length {} != da = {}",
+                            x.len(),
+                            spec.da
+                        );
+                    }
+                    Some(conformal::prediction_set(
+                        &residuals, *alpha, spec.da, spec.k, session.w(), x,
+                    ))
+                }
+            };
+            QueryResult::Conformal { residuals, threshold, set }
+        }
+        Query::RobustSweep { frac } => {
+            if !(0.0..1.0).contains(frac) {
+                // NaN fails this check too; prune_core's assert must
+                // never be reachable from a service client
+                bail!("robust sweep frac {frac} outside [0, 1)");
+            }
+            QueryResult::Robust(robust::prune_core(session, *frac)?)
+        }
+    };
+    Ok(QueryReply {
+        version,
+        seconds: t0.elapsed().as_secs_f64(),
+        transfers: session.runtime().counters.snapshot().since(tr0),
+        result,
+    })
+}
+
+/// Host-side LR prediction over the shared softmax numerics
+/// ([`conformal::softmax_probs_lr`]). No device traffic at all.
+fn predict(session: &Session, x: &[f32]) -> Result<QueryResult> {
+    let spec = session.spec();
+    if spec.model != ModelKind::Lr {
+        bail!("Predict queries are LR-only (host-side softmax)");
+    }
+    if x.len() != spec.da {
+        bail!("feature length {} != da = {} (bias column included?)", x.len(), spec.da);
+    }
+    if x.iter().any(|v| !v.is_finite()) {
+        // NaN logits would poison the softmax (and the argmax below
+        // cannot order NaNs) — reject, never panic the serving worker
+        bail!("non-finite feature value in predict query");
+    }
+    let probs = conformal::softmax_probs_lr(spec.da, spec.k, session.w(), x);
+    let label = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u32)
+        .unwrap_or(0);
+    Ok(QueryResult::Predict { label, probs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_tags_and_indices_are_stable() {
+        assert_eq!(QueryKind::ALL.len(), QueryKind::COUNT);
+        for (i, k) in QueryKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+        assert_eq!(Query::Loss.kind(), QueryKind::Loss);
+        assert_eq!(Query::Predict { x: vec![] }.kind(), QueryKind::Predict);
+        assert_eq!(
+            Query::Conformal { alpha: 0.1, folds: 4, x: None }.kind().name(),
+            "conformal"
+        );
+        assert_eq!(Query::RobustSweep { frac: 0.05 }.kind().name(), "robust");
+    }
+}

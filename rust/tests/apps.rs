@@ -1,11 +1,20 @@
 //! Application-layer integration tests (§5 apps over real artifacts),
 //! all sharing one Session per fixture. Requires `make artifacts`.
+//!
+//! The apps are thin wrappers over the typed Query dispatcher now; the
+//! old free-function forms survive as deprecated shims, and this file
+//! pins the two surfaces bitwise-identical
+//! (`query_dispatcher_matches_free_functions`).
+
+#![allow(deprecated)]
 
 use deltagrad::apps::{conformal, influence, jackknife, privacy, robust, valuation};
 use deltagrad::config::HyperParams;
 use deltagrad::data::{sample_removal, synth};
 use deltagrad::runtime::Engine;
-use deltagrad::session::{Edit, Session, SessionBuilder};
+use deltagrad::session::{
+    Edit, JackknifeFunctional, Query, QueryResult, Session, SessionBuilder,
+};
 use deltagrad::util::vecmath::dist2;
 use deltagrad::util::Rng;
 
@@ -119,6 +128,244 @@ fn privacy_release_hides_the_deletion_error() {
     let mut rng = Rng::new(1);
     let z = mech.release(&dg.out.w, &mut rng);
     assert!(mech.privacy_loss(&dg.out.w, &basel.w, &z) <= bound + 1e-9);
+}
+
+#[test]
+fn query_dispatcher_matches_free_functions() {
+    // the api_redesign acceptance pin: every app answers IDENTICALLY
+    // through the new Query dispatcher and its old free-function form.
+    // The manual loops below replicate the pre-redesign bodies, so the
+    // pin is against the old behaviour, not shim-vs-shim identity.
+    let session = fixture();
+
+    // --- valuation: query vs a hand-rolled preview loop (bitwise; the
+    // second run's previews hit the cross-pass row cache)
+    let candidates: Vec<usize> = vec![2, 11, 40];
+    let manual: Vec<(f64, f64)> = {
+        let w_full = session.w().to_vec();
+        let base_loss = session.eval_test(&w_full).unwrap().mean_loss();
+        candidates
+            .iter()
+            .map(|&i| {
+                let pv = session.preview(&Edit::delete_row(i)).unwrap();
+                let stats = session.eval_test(&pv.out.w).unwrap();
+                (stats.mean_loss() - base_loss, dist2(&pv.out.w, &w_full))
+            })
+            .collect()
+    };
+    let reply = session
+        .query(&Query::Valuation { candidates: candidates.clone() })
+        .unwrap();
+    assert_eq!(reply.version, 0);
+    let values = match reply.result {
+        QueryResult::Valuation { values } => values,
+        other => panic!("wrong kind: {other:?}"),
+    };
+    assert_eq!(values.len(), manual.len());
+    for (v, (loss_delta, param_dist)) in values.iter().zip(&manual) {
+        assert_eq!(v.loss_delta, *loss_delta, "valuation loss drifted through the dispatcher");
+        assert_eq!(v.param_dist, *param_dist, "valuation dist drifted through the dispatcher");
+    }
+    // and the deprecated shim returns the same floats
+    let shim = valuation::leave_one_out_values(&session, &candidates).unwrap();
+    for (a, b) in shim.iter().zip(&values) {
+        assert_eq!((a.index, a.loss_delta, a.param_dist), (b.index, b.loss_delta, b.param_dist));
+    }
+
+    // --- conformal: query vs the hand-rolled fold loop (bitwise)
+    let spec = session.spec().clone();
+    let manual_res: Vec<f64> = {
+        let ds = session.train_dataset();
+        let mut residuals = vec![0.0f64; ds.n];
+        for fold in conformal::folds(ds.n, 4) {
+            let pv = session.preview(&Edit::Delete(fold.clone())).unwrap();
+            for i in fold.iter() {
+                residuals[i] =
+                    conformal::nonconformity_lr(spec.da, spec.k, &pv.out.w, ds.row(i), ds.y[i]);
+            }
+        }
+        residuals
+    };
+    let x0 = session.test_dataset().row(0).to_vec();
+    let reply = session
+        .query(&Query::Conformal { alpha: 0.1, folds: 4, x: Some(x0.clone()) })
+        .unwrap();
+    let (residuals, threshold, set) = match reply.result {
+        QueryResult::Conformal { residuals, threshold, set } => (residuals, threshold, set),
+        other => panic!("wrong kind: {other:?}"),
+    };
+    assert_eq!(residuals, manual_res, "conformal residuals drifted through the dispatcher");
+    assert_eq!(threshold, conformal::residual_threshold(&manual_res, 0.1));
+    assert_eq!(
+        set.unwrap(),
+        conformal::prediction_set(&manual_res, 0.1, spec.da, spec.k, session.w(), &x0)
+    );
+    assert_eq!(
+        conformal::cross_conformal_residuals(&session, 4).unwrap(),
+        manual_res,
+        "deprecated conformal shim drifted"
+    );
+
+    // --- influence: shim vs dispatcher (deterministic CG: bitwise)
+    let removed = sample_removal(&mut Rng::new(3), session.train_dataset().n, 6);
+    let opts = influence::InfluenceOpts { hessian_sample: 256, ..Default::default() };
+    let (w_shim, _) = influence::influence_delete(&session, &removed, &opts).unwrap();
+    let reply = session
+        .query(&Query::Influence { targets: removed.clone(), opts })
+        .unwrap();
+    let w_disp = match reply.result {
+        QueryResult::Influence { w, .. } => w,
+        other => panic!("wrong kind: {other:?}"),
+    };
+    assert_eq!(w_shim, w_disp, "influence drifted through the dispatcher");
+
+    // --- jackknife: typed functional vs the closure form (bitwise)
+    let shim = jackknife::jackknife_bias(&session, |w| deltagrad::util::vecmath::dot(w, w), 4, 9)
+        .unwrap();
+    let reply = session
+        .query(&Query::Jackknife {
+            functional: JackknifeFunctional::ParamNormSq,
+            loo: 4,
+            seed: 9,
+        })
+        .unwrap();
+    let disp = match reply.result {
+        QueryResult::Jackknife(j) => j,
+        other => panic!("wrong kind: {other:?}"),
+    };
+    assert_eq!(shim.full, disp.full);
+    assert_eq!(shim.bias, disp.bias, "jackknife drifted through the dispatcher");
+    assert_eq!(shim.n_loo, disp.n_loo);
+
+    // --- robust: shim vs dispatcher (bitwise)
+    let shim = robust::prune_and_refit(&session, 0.02).unwrap();
+    let reply = session.query(&Query::RobustSweep { frac: 0.02 }).unwrap();
+    let disp = match reply.result {
+        QueryResult::Robust(fit) => fit,
+        other => panic!("wrong kind: {other:?}"),
+    };
+    assert_eq!(shim.pruned.as_slice(), disp.pruned.as_slice());
+    assert_eq!(shim.w, disp.w, "robust refit drifted through the dispatcher");
+
+    // --- predict + loss sanity: host softmax agrees with eval counts
+    let reply = session.query(&Query::Predict { x: x0 }).unwrap();
+    match reply.result {
+        QueryResult::Predict { label, probs } => {
+            assert_eq!(probs.len(), spec.k);
+            assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!((label as usize) < spec.k);
+            // zero device traffic: prediction is host-side
+            assert_eq!(reply.transfers.uploads, 0);
+            assert_eq!(reply.transfers.downloads, 0);
+        }
+        other => panic!("wrong kind: {other:?}"),
+    }
+    let reply = session.query(&Query::Loss).unwrap();
+    match reply.result {
+        QueryResult::Loss { test_accuracy, train_accuracy, .. } => {
+            assert!(test_accuracy > 0.5);
+            assert!(train_accuracy > 0.5);
+        }
+        other => panic!("wrong kind: {other:?}"),
+    }
+    // nothing above committed anything
+    assert_eq!(session.version(), 0);
+}
+
+#[test]
+fn preview_loop_queries_survive_committed_deletions() {
+    // the interleaved read/write contract for the preview-loop kinds:
+    // after a delete commit, conformal folds, jackknife draws, and the
+    // robust prune set must all skip the removed rows instead of
+    // tripping "already deleted" (and deleted rows get no residual)
+    let mut session = fixture();
+    session.commit(Edit::delete_row(0)).unwrap();
+    session.commit(Edit::delete_row(7)).unwrap();
+
+    let reply = session
+        .query(&Query::Conformal { alpha: 0.1, folds: 4, x: None })
+        .unwrap();
+    match reply.result {
+        QueryResult::Conformal { residuals, threshold, .. } => {
+            assert_eq!(residuals.len(), session.train_dataset().n);
+            assert!(residuals[0].is_nan(), "deleted rows must carry no residual");
+            assert!(residuals[7].is_nan());
+            assert!(residuals[1].is_finite());
+            assert!(threshold.is_finite());
+        }
+        other => panic!("wrong kind: {other:?}"),
+    }
+
+    let reply = session.query(&Query::RobustSweep { frac: 0.02 }).unwrap();
+    match reply.result {
+        QueryResult::Robust(fit) => {
+            assert!(!fit.pruned.contains(0), "prune set must skip removed rows");
+            assert!(!fit.pruned.contains(7));
+        }
+        other => panic!("wrong kind: {other:?}"),
+    }
+
+    let reply = session
+        .query(&Query::Jackknife {
+            functional: JackknifeFunctional::ParamNormSq,
+            loo: 6,
+            seed: 11,
+        })
+        .unwrap();
+    match reply.result {
+        QueryResult::Jackknife(j) => assert!(j.bias.is_finite()),
+        other => panic!("wrong kind: {other:?}"),
+    }
+
+    // bad parameters reject (typed error), never panic the caller
+    assert!(session.query(&Query::RobustSweep { frac: 1.5 }).is_err());
+    assert!(session.query(&Query::RobustSweep { frac: f64::NAN }).is_err());
+    assert!(session
+        .query(&Query::Conformal { alpha: 1.5, folds: 4, x: None })
+        .is_err());
+    assert!(session
+        .query(&Query::Conformal { alpha: 0.1, folds: 0, x: None })
+        .is_err());
+    let da = session.spec().da;
+    assert!(session
+        .query(&Query::Predict { x: vec![f32::NAN; da] })
+        .is_err());
+    assert!(session
+        .query(&Query::Jackknife {
+            functional: JackknifeFunctional::ParamNormSq,
+            loo: 0,
+            seed: 1,
+        })
+        .is_err());
+    // influence targets validate like the write plane: deleted rows,
+    // out-of-range rows, and empty sets reject instead of silently
+    // computing a double-deletion estimate
+    let opts = influence::InfluenceOpts::default();
+    assert!(session
+        .query(&Query::Influence {
+            targets: deltagrad::data::IndexSet::from_vec(vec![0]),
+            opts
+        })
+        .is_err());
+    assert!(session
+        .query(&Query::Influence {
+            targets: deltagrad::data::IndexSet::from_vec(vec![session.train_dataset().n]),
+            opts
+        })
+        .is_err());
+    assert!(session
+        .query(&Query::Influence {
+            targets: deltagrad::data::IndexSet::empty(),
+            opts
+        })
+        .is_err());
+    // and a live target set still answers
+    assert!(session
+        .query(&Query::Influence {
+            targets: deltagrad::data::IndexSet::from_vec(vec![3, 9]),
+            opts: influence::InfluenceOpts { hessian_sample: 128, cg_iters: 5, ..opts }
+        })
+        .is_ok());
 }
 
 #[test]

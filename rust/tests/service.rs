@@ -1,11 +1,12 @@
-//! Coordinator integration: the unlearning service end to end.
-//! Requires `make artifacts`.
+//! Coordinator integration: the unlearning service end to end — both
+//! planes (edits through the group-commit batcher, typed read queries
+//! answered between passes). Requires `make artifacts`.
 
 use std::time::Duration;
 
 use deltagrad::config::HyperParams;
 use deltagrad::coordinator::{BatchPolicy, Rejected, ServiceConfig, ServiceHandle};
-use deltagrad::session::Edit;
+use deltagrad::session::{Edit, Query, QueryResult};
 
 fn small_cfg(policy: BatchPolicy) -> ServiceConfig {
     let mut hp = HyperParams::for_dataset("small");
@@ -183,6 +184,107 @@ fn addition_requests_grow_the_dataset() {
 }
 
 #[test]
+fn interleaved_queries_carry_committed_versions() {
+    // the snapshot-consistency contract: every QueryReply.version is a
+    // version the worker actually committed (or the initial 0), replies
+    // are monotone in request order, and reads never block on the write
+    // batcher's max_wait
+    let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
+        max_group: 2,
+        max_wait: Duration::from_millis(30),
+        ..BatchPolicy::default()
+    }))
+    .unwrap();
+    let mut edit_rxs = Vec::new();
+    let mut query_versions = Vec::new();
+    for i in 0..6 {
+        edit_rxs.push(svc.update_async(Edit::delete_row(i)).unwrap());
+        let rep = svc.query(Query::Loss).unwrap();
+        match rep.result {
+            QueryResult::Loss { test_accuracy, .. } => {
+                assert!(test_accuracy.is_finite());
+            }
+            other => panic!("wrong reply kind: {other:?}"),
+        }
+        query_versions.push(rep.version);
+    }
+    // the set of versions the worker reported committing
+    let mut committed: std::collections::BTreeSet<u64> = [0u64].into_iter().collect();
+    for rx in edit_rxs {
+        committed.insert(rx.recv().unwrap().unwrap().version);
+    }
+    for (i, v) in query_versions.iter().enumerate() {
+        assert!(
+            committed.contains(v),
+            "query {i} was answered at v{v}, which the worker never committed \
+             (committed: {committed:?})"
+        );
+    }
+    assert!(
+        query_versions.windows(2).all(|w| w[0] <= w[1]),
+        "reply versions must be monotone: {query_versions:?}"
+    );
+    // the final snapshot is the largest committed version
+    let snap = svc.snapshot().unwrap();
+    assert_eq!(Some(&snap.version), committed.iter().max());
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.queries, 6);
+    assert_eq!(m.query_count(deltagrad::session::QueryKind::Loss), 6);
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn query_path_restages_no_rows() {
+    // the query-plane transfer budget: a Loss query uploads exactly two
+    // parameter vectors (resident test + train evals) and downloads two
+    // fused results — zero row bytes, zero re-staging, proven from the
+    // per-plane metrics the worker keeps
+    let dir = deltagrad::config::artifacts_dir().expect("make artifacts");
+    let specs = deltagrad::config::parse_manifest(&dir.join("manifest.txt")).unwrap();
+    let p = specs["small"].p as u64;
+    let svc = ServiceHandle::spawn(small_cfg(BatchPolicy::default())).unwrap();
+    let q = 3u64;
+    for _ in 0..q {
+        svc.query(Query::Loss).unwrap();
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.queries, q);
+    assert_eq!(
+        m.query_uploads,
+        2 * q,
+        "a loss query must upload exactly its two parameter vectors"
+    );
+    assert_eq!(
+        m.query_upload_floats,
+        2 * p * q,
+        "query uploads must be parameter floats only — row re-staging detected"
+    );
+    assert_eq!(m.query_downloads, 2 * q, "one fused download per resident eval");
+    // and none of it leaked into the edit-plane accounting
+    assert_eq!(m.uploads, 0);
+    assert_eq!(m.groups, 0);
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn query_queue_full_rejections_are_typed() {
+    // the read lane's admission knob, independent of the write lane
+    let svc = ServiceHandle::spawn(small_cfg(BatchPolicy {
+        max_query_queue: 0,
+        ..BatchPolicy::default()
+    }))
+    .unwrap();
+    match svc.query(Query::Loss) {
+        Err(Rejected::QueueFull { max_queue }) => assert_eq!(max_queue, 0),
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    // writes still admitted
+    let rep = svc.update(Edit::delete_row(0)).unwrap();
+    assert_eq!(rep.version, 1);
+    svc.shutdown().unwrap();
+}
+
+#[test]
 fn queue_full_rejections_are_typed() {
     // direct check of the typed error surface (the property test in
     // batcher.rs covers the bound itself): max_queue = 0 rejects every
@@ -191,6 +293,7 @@ fn queue_full_rejections_are_typed() {
         max_group: 8,
         max_wait: Duration::from_millis(5),
         max_queue: 0,
+        ..BatchPolicy::default()
     }))
     .unwrap();
     match svc.update(Edit::delete_row(0)) {

@@ -282,6 +282,103 @@ fn tail_compaction_caps_launches_and_preserves_floats() {
 }
 
 #[test]
+fn delete_committed_added_rows_segmented_and_compacted() {
+    // the PERFORMANCE.md gap, closed: a committed ADDED row (index
+    // base.n + j) can be deleted. Below the compaction watermark the
+    // owning segment's multiplicity mask is rewritten in place; past it
+    // the compacted tail chunk's mask flips. Both paths must agree with
+    // a freshly-staged fork to reduction-order tolerance and keep the
+    // masked row counts exact.
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 31, Some(640), Some(64));
+    let hp = small_hp();
+    let mut session = SessionBuilder::new("small")
+        .hyper_params(hp.clone())
+        .datasets(ds.clone(), test)
+        .tail_compact_watermark(4)
+        .build_in(&mut eng)
+        .unwrap();
+    let n0 = ds.n;
+
+    // one add commit of 3 rows -> one segment, indices n0..n0+3
+    session
+        .commit(Edit::Add(synth::addition_rows(&spec, 41, 3)))
+        .unwrap();
+    assert_eq!(session.n_current(), n0 + 3);
+
+    // SEGMENTED path: delete the middle added row
+    let c = session.commit(Edit::delete_row(n0 + 1)).unwrap();
+    assert_eq!(c.version, 2);
+    assert_eq!(session.n_current(), n0 + 2);
+    // the masked row count of a full pass must be exact (empty preview
+    // replays the trajectory; its exact iterations evaluate base + tail)
+    let pv = session.preview(&Edit::Delete(IndexSet::empty())).unwrap();
+    assert_eq!(pv.out.last_stats.cnt as usize, n0 + 2, "tail mask row count drifted");
+    // parity vs a fork (fresh staging of the same live rows)
+    let fork = session.fork().unwrap();
+    let probe = Edit::delete_row(7);
+    let a = session.preview(&probe).unwrap();
+    let b = fork.preview(&probe).unwrap();
+    assert_eq!(a.out.n_exact, b.out.n_exact);
+    let denom = b.out.w.iter().map(|x| x.abs()).fold(1e-12f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&a.out.w, &b.out.w);
+    assert!(d / denom < 1e-5, "segment-rewrite drifted from fresh staging: {:.3e}", d / denom);
+
+    // double-delete of the added row and out-of-range both reject
+    assert!(session.commit(Edit::delete_row(n0 + 1)).is_err());
+    assert!(session.commit(Edit::delete_row(n0 + 999)).is_err());
+    assert!(session.preview(&Edit::delete_row(n0 + 1)).is_err());
+
+    // cross the watermark: 4 more one-row adds compact the tail (the
+    // deleted row must stay masked in the compacted staging)
+    for i in 0..4u64 {
+        session
+            .commit(Edit::Add(synth::addition_rows(&spec, 50 + i, 1)))
+            .unwrap();
+    }
+    assert_eq!(session.n_current(), n0 + 6);
+    // the 3rd one-row add crossed the watermark (4 segment groups), so
+    // the first 6 added rows compacted into ⌈6/chunk⌉ full-size chunks
+    // and the 4th add opened a fresh one-group segment
+    assert_eq!(
+        session.tail_launches(),
+        6usize.div_ceil(spec.chunk) + 1,
+        "compaction must fold the segments"
+    );
+    let pv = session.preview(&Edit::Delete(IndexSet::empty())).unwrap();
+    assert_eq!(pv.out.last_stats.cnt as usize, n0 + 6, "compacted tail lost the deletion");
+
+    // COMPACTED path: delete the first added row (lives in the
+    // compacted chunk now) — mask flip, no re-staging of the tail
+    session.commit(Edit::delete_row(n0)).unwrap();
+    assert_eq!(session.n_current(), n0 + 5);
+    let pv = session.preview(&Edit::Delete(IndexSet::empty())).unwrap();
+    assert_eq!(pv.out.last_stats.cnt as usize, n0 + 5);
+    let fork = session.fork().unwrap();
+    let a = session.preview(&probe).unwrap();
+    let b = fork.preview(&probe).unwrap();
+    let denom = b.out.w.iter().map(|x| x.abs()).fold(1e-12f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&a.out.w, &b.out.w);
+    assert!(d / denom < 1e-5, "compacted mask flip drifted: {:.3e}", d / denom);
+
+    // a BaseL baseline built from the session agrees on the dataset:
+    // current_dataset excludes both deleted added rows
+    assert_eq!(session.current_dataset().n, n0 + 5);
+
+    // mixed group touching base AND added rows commits in one pass
+    let c = session
+        .commit(Edit::group(vec![
+            Edit::delete_row(3),
+            Edit::delete_row(n0 + 2),
+            Edit::Add(synth::addition_rows(&spec, 77, 1)),
+        ]))
+        .unwrap();
+    assert!(c.out.n_exact > 0);
+    assert_eq!(session.n_current(), n0 + 4);
+}
+
+#[test]
 fn interleaved_previews_are_independent_and_commit_free() {
     let mut eng = engine();
     let spec = eng.spec("small").unwrap().clone();

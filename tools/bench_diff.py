@@ -3,6 +3,7 @@
 
 Usage:
     python3 tools/bench_diff.py BASELINE.json NEW.json [--max-regress 0.10]
+    python3 tools/bench_diff.py BASELINE.json NEW.json --write-baseline
 
 The gate only FAILS on mean-time regressions of the *staged paths* —
 benches whose name marks them as the resident/staged/session shape
@@ -10,10 +11,14 @@ benches whose name marks them as the resident/staged/session shape
 reported but never gate: they exist to keep the before/after contrast
 measurable, not to be fast.
 
+`--write-baseline` validates NEW (it must parse and contain at least
+one staged series — an empty or filtered run must not become the gate)
+and writes it to the BASELINE path instead of comparing: the supported
+way to seed or refresh rust/BENCH_baseline.json on a toolchain machine.
+
 Exit codes: 0 ok (or nothing to compare), 1 regression, 2 bad input.
 Designed to be driven by ci.sh's bench-diff step; the committed
-baseline snapshot lives at rust/BENCH_baseline.json (seed it with
-`cp rust/BENCH_micro.json rust/BENCH_baseline.json` on a quiet machine).
+baseline snapshot lives at rust/BENCH_baseline.json.
 """
 
 from __future__ import annotations
@@ -24,8 +29,12 @@ import sys
 
 # a bench gates iff its name contains one of these (the staged paths:
 # resident/staged/session shapes, the index-list SGD series, the
-# resident-CG solve, and the compacted long-tail series)
-STAGED_MARKERS = ("staged", "resident", "session", "index-list", "compacted")
+# resident-CG solve, the compacted long-tail series, and the
+# query-throughput read-plane series)
+STAGED_MARKERS = (
+    "staged", "resident", "session", "index-list", "compacted",
+    "query-throughput",
+)
 
 DEFAULT_MAX_REGRESS = 0.10
 
@@ -68,6 +77,37 @@ def compare(baseline: dict, new: dict, max_regress: float):
     return report, regressions, missing
 
 
+def write_baseline(baseline_path: str, new_path: str) -> int:
+    """Validate NEW and write it to BASELINE (seed/refresh the snapshot)."""
+    try:
+        with open(new_path) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read new results: {e}", file=sys.stderr)
+        return 2
+    if not isinstance(new, dict) or not all(
+        isinstance(v, dict) and "mean_ms" in v for v in new.values()
+    ):
+        print("bench_diff: new results are not a bench JSON "
+              "(expected {name: {mean_ms: …}})", file=sys.stderr)
+        return 2
+    staged = [name for name in new if is_staged(name)]
+    if not staged:
+        print("bench_diff: refusing to seed a baseline with no staged "
+              "series (empty or filtered run?)", file=sys.stderr)
+        return 2
+    try:
+        with open(baseline_path, "w") as f:
+            json.dump(new, f, indent=2, sort_keys=True)
+            f.write("\n")
+    except OSError as e:
+        print(f"bench_diff: cannot write baseline: {e}", file=sys.stderr)
+        return 2
+    print(f"bench_diff: wrote {baseline_path} ({len(new)} benches, "
+          f"{len(staged)} gated)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -75,7 +115,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-regress", type=float, default=DEFAULT_MAX_REGRESS,
                     help="max allowed relative mean regression of staged "
                          "paths (default 0.10)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="validate NEW and write it to BASELINE instead of "
+                         "comparing (seed/refresh the committed snapshot)")
     args = ap.parse_args(argv)
+
+    if args.write_baseline:
+        return write_baseline(args.baseline, args.new)
 
     try:
         with open(args.baseline) as f:
