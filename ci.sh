@@ -14,8 +14,8 @@
 #   5. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
 #      snapshot (tools/bench_diff.py) — fails on >10% mean regression of
 #      the staged paths (incl. the index-list SGD, resident-CG,
-#      compacted long-tail, and query-throughput series; presence of
-#      those series is asserted)
+#      compacted long-tail, query-throughput, reader-scaling, and
+#      memo-cache-hit series; presence of those series is asserted)
 # then asserts the bench JSON was produced, so upload/download-count
 # regressions (the staging discipline of rust/docs/PERFORMANCE.md) fail
 # loudly in review instead of silently drifting.
@@ -78,7 +78,8 @@ fi
 # the gated transfer-schedule series must actually be emitted — a filter
 # or refactor that silently drops them would leave the bench-diff gate
 # comparing nothing
-for series in "index-list" "resident state" "compacted tail" "segmented tail" "query-throughput"; do
+for series in "index-list" "resident state" "compacted tail" "segmented tail" \
+              "query-throughput" "query-throughput-readers" "cache-hit"; do
     if ! grep -q "$series" BENCH_micro.json; then
         echo "ci.sh FAIL: bench series \"$series\" missing from BENCH_micro.json" >&2
         exit 1
@@ -94,8 +95,7 @@ if [ -f BENCH_baseline.json ]; then
         echo "ci.sh: python3 unavailable; skipping bench-diff" >&2
     fi
 else
-    echo "ci.sh: no rust/BENCH_baseline.json snapshot committed yet; seed it with:"
-    echo "    python3 tools/bench_diff.py rust/BENCH_baseline.json rust/BENCH_micro.json --write-baseline"
+    echo "ci.sh SEED-ME: no rust/BENCH_baseline.json committed — on this (toolchain) machine run: python3 tools/bench_diff.py rust/BENCH_baseline.json rust/BENCH_micro.json --write-baseline  && git add rust/BENCH_baseline.json" >&2
 fi
 
 echo "== ci: OK (bench counters in rust/BENCH_micro.json) =="

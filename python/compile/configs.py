@@ -16,6 +16,13 @@ group) and gathering on device, instead of a ``chunk``-float mask. The
 Rust side picks index-list vs mask per chunk by payload (the density
 threshold): index lists win while
 ``2·idx_cap·ceil(distinct/idx_cap) < chunk``.
+
+``idx_cap_small`` is the same capacity for the SMALL shape: the
+``grad_small_idx_acc`` entry gathers from a resident ``chunk_small``
+block, serving the per-row preview sweeps (robust / valuation /
+jackknife) where the subset is typically ONE row — O(1) scalars per row
+instead of a ``chunk_small``-float mask. 0 disables the entry (older
+manifests parse the same way).
 """
 
 CONFIGS = {
@@ -23,38 +30,38 @@ CONFIGS = {
     # block_rows: §Perf-tuned row-tile (on XLA-CPU the optimum is one
     # grid step per chunk — no scratchpad bound; on TPU cap by VMEM)
     "mnist": dict(model="lr", d=784, k=10, chunk=2048, chunk_small=256,
-                  idx_cap=256, lam=5e-3, m=2, hidden=0, n_train=8192,
+                  idx_cap=256, idx_cap_small=64, lam=5e-3, m=2, hidden=0, n_train=8192,
                   n_test=2048, block_rows=2048),
     # paper: covtype 581k x 54, 7-class
     "covtype": dict(model="lr", d=54, k=7, chunk=8192, chunk_small=256,
-                    idx_cap=256, lam=5e-3, m=2, hidden=0, n_train=20480,
+                    idx_cap=256, idx_cap_small=64, lam=5e-3, m=2, hidden=0, n_train=20480,
                     n_test=4096, block_rows=8192),
     # paper: HIGGS 11M x 21, binary, near-chance accuracy
     "higgs": dict(model="lr", d=21, k=2, chunk=8192, chunk_small=256,
-                  idx_cap=256, lam=5e-3, m=2, hidden=0, n_train=32768,
+                  idx_cap=256, idx_cap_small=64, lam=5e-3, m=2, hidden=0, n_train=32768,
                   n_test=8192, block_rows=8192),
     # paper: RCV1 20,242 x 47,236 sparse, binary; d >> others preserved
     "rcv1": dict(model="lr", d=2000, k=2, chunk=1024, chunk_small=256,
-                 idx_cap=256, lam=5e-3, m=2, hidden=0, n_train=8192,
+                 idx_cap=256, idx_cap_small=64, lam=5e-3, m=2, hidden=0, n_train=8192,
                  n_test=2048, block_rows=1024),
     # paper: 2-layer 300-hidden ReLU MLP on MNIST, lam=0.001
     "mnistnn": dict(model="mlp", d=784, k=10, hidden=64, chunk=1024,
-                    chunk_small=256, idx_cap=256, lam=1e-3, m=2,
+                    chunk_small=256, idx_cap=256, idx_cap_small=64, lam=1e-3, m=2,
                     n_train=8192, n_test=2048),
     # tiny configs for tests and CI (idx_cap < chunk/2 so the index-list
     # path is exercisable on the test shapes)
     "small": dict(model="lr", d=20, k=3, chunk=256, chunk_small=128,
-                  idx_cap=64, lam=5e-3, m=2, hidden=0, n_train=1024,
+                  idx_cap=64, idx_cap_small=32, lam=5e-3, m=2, hidden=0, n_train=1024,
                   n_test=256, block_rows=256),
     "smallnn": dict(model="mlp", d=20, k=3, hidden=16, chunk=256,
-                    chunk_small=128, idx_cap=64, lam=1e-3, m=2,
+                    chunk_small=128, idx_cap=64, idx_cap_small=32, lam=1e-3, m=2,
                     n_train=1024, n_test=256),
 }
 
 ENTRIES = (
     "grad", "grad_small", "hvp", "lbfgs",
     "grad_acc", "grad_small_acc", "hvp_acc",
-    "grad_idx_acc", "hvp_idx_acc",
+    "grad_idx_acc", "grad_small_idx_acc", "hvp_idx_acc",
     "cg_dir", "cg_step", "cg_scalars", "cg_result",
 )
 
@@ -66,6 +73,6 @@ ENTRIES = (
 # way). Tupled roots cannot be chained this way.
 UNTUPLED_ENTRIES = (
     "grad_acc", "grad_small_acc", "hvp_acc",
-    "grad_idx_acc", "hvp_idx_acc",
+    "grad_idx_acc", "grad_small_idx_acc", "hvp_idx_acc",
     "cg_dir", "cg_step", "cg_scalars", "cg_result",
 )

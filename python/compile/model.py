@@ -12,6 +12,9 @@ entry points which ``aot.py`` lowers to HLO text for the Rust runtime:
   hvp_acc        (w, v, x, mask, acc[p])       -> acc + hv
   grad_idx_acc   (w, x[C,da], y[C,k], idx[I] i32, mult[I], acc[p+8])
                  -> gather rows idx on device, grad over them, chain acc
+  grad_small_idx_acc  same at the small chunk size (capacity
+                 idx_cap_small; omitted when that capacity is 0) — the
+                 per-row preview sweeps ship O(1) scalars per row
   hvp_idx_acc    (w, v, x[C,da], idx[I] i32, mult[I], acc[p]) -> acc + hv
   cg_dir         (state[3p+2]) -> d[p]          (CG direction slice)
   cg_step        (state, ad_raw[p], consts[2]) -> state'   (one CG update)
@@ -43,7 +46,10 @@ The ``cg_*`` entries keep a conjugate-gradient solve's state resident:
 ``state = [z ; r ; d ; rs ; dAd]`` (3p+2 floats) chains through
 ``cg_step`` (which applies ``ad = ad_raw/navg + damp*d`` via
 ``consts = [1/navg, damp]``), so each CG iteration uploads nothing and
-downloads only the 2-float ``cg_scalars`` pair.
+downloads only the 2-float ``cg_scalars`` pair. The two convergence dot
+products inside ``cg_step`` (``dAd`` and ``r'r``) accumulate through
+compensated reduction lanes (``comp_dot``), so the scalars CG steers by
+carry roughly twice the f32 mantissa instead of drifting O(p*eps).
 
 ``stats = [loss_sum, correct, cnt, gnorm2]``. All gradients are masked
 SUMS (not means) including the per-sample L2 term, i.e. the artifact
@@ -214,6 +220,62 @@ def kahan_add(s, c, x):
     return t, c + low
 
 
+VELTKAMP_SPLIT = 4097.0  # 2^12 + 1: splits an f32 into two 12-bit halves
+
+
+def two_prod(a, b):
+    """Dekker's exact product, elementwise: ``a*b == p + err`` in f32.
+
+    Uses the Veltkamp split (no FMA required, so it lowers portably),
+    giving the rounding error of every elementwise product exactly."""
+    p = a * b
+    ah = a * VELTKAMP_SPLIT
+    ah = ah - (ah - a)
+    al = a - ah
+    bh = b * VELTKAMP_SPLIT
+    bh = bh - (bh - b)
+    bl = b - bh
+    err = ((ah * bh - p) + ah * bl + al * bh) + al * bl
+    return p, err
+
+
+def comp_dot(a, b, lanes=128):
+    """Compensated f32 dot product (Ogita-Rump-Oishi Dot2 shape).
+
+    :func:`two_prod` captures each product's rounding error exactly; the
+    high parts fold through ``lanes`` parallel Neumaier lanes (one
+    :func:`kahan_add` per strip of ``lanes`` elements — a short
+    ``lax.scan`` of ceil(n/lanes) steps, not an O(n) sequential loop),
+    and the product errors sum plainly (they are already ~eps^2
+    relative). The result behaves like a twice-precision accumulation:
+    error ~O(eps) instead of the O(n*eps) a plain f32 ``jnp.dot``
+    carries — which is what lets a long ill-conditioned CG solve keep
+    its convergence scalars honest without widening any buffer to f64.
+    """
+    n = a.shape[0]
+    nb = -(-n // lanes)
+    pad = nb * lanes - n
+    if pad:
+        z = jnp.zeros((pad,), a.dtype)
+        a = jnp.concatenate([a, z])
+        b = jnp.concatenate([b, z])
+    p, e = two_prod(a, b)
+    rows = p.reshape(nb, lanes)
+
+    def step(carry, row):
+        s, c = kahan_add(carry[0], carry[1], row)
+        return (s, c), None
+
+    zero = jnp.zeros((lanes,), p.dtype)
+    (s, c), _ = jax.lax.scan(step, (zero, zero), rows)
+    # recombine the lanes compensated too: a plain f32 sum of `lanes`
+    # large cancelling partials would hand back the O(lanes*eps) error
+    # the lanes just removed
+    (hs, hc), _ = jax.lax.scan(step, (jnp.zeros((), p.dtype),
+                                      jnp.zeros((), p.dtype)), s)
+    return hs + (hc + jnp.sum(c) + jnp.sum(e))
+
+
 def acc_grad_entry(grad_fn):
     """Wrap a ``(w, x, y, mask) -> (g, stats)`` entry into the chainable
     accumulator form ``(w, x, y, mask, acc[p+8]) -> acc'`` with
@@ -301,11 +363,14 @@ def build_cg_entries(p):
         d = state[2 * p:3 * p]
         rs = state[3 * p]
         ad = ad_raw * consts[0] + consts[1] * d
-        dad = jnp.dot(d, ad)
+        # the two convergence dot products run compensated (Dot2): a
+        # plain f32 dot drifts O(p*eps) and an ill-conditioned solve
+        # reads alpha/beta off exactly these scalars
+        dad = comp_dot(d, ad)
         alpha = rs / jnp.maximum(dad, 1e-30)
         z2 = z + alpha * d
         r2 = r - alpha * ad
-        rs2 = jnp.dot(r2, r2)
+        rs2 = comp_dot(r2, r2)
         beta = rs2 / rs
         d2 = r2 + beta * d
         return jnp.concatenate([z2, r2, d2, jnp.stack([rs2, dad])])
@@ -388,7 +453,7 @@ def build_entries(cfg, use_pallas=True):
     constsspec = jax.ShapeDtypeStruct((2,), f32)
     cg = build_cg_entries(p)
 
-    return {
+    entries = {
         "grad": (grad_fn, (wspec, *shapes(c))),
         "grad_small": (grad_fn, (wspec, *shapes(cs))),
         "hvp": (hvp_fn, (wspec, wspec, *shapes_no_y(cs))),
@@ -405,4 +470,15 @@ def build_entries(cfg, use_pallas=True):
         "cg_step": (cg["cg_step"], (statespec, wspec, constsspec)),
         "cg_scalars": (cg["cg_scalars"], (statespec,)),
         "cg_result": (cg["cg_result"], (statespec,)),
-    }, p
+    }
+    icap_s = cfg.get("idx_cap_small", 0)
+    if icap_s > 0:
+        # small-shape index-list gather: one preview-sweep row ships
+        # 2 scalars instead of a chunk_small-float mask
+        entries["grad_small_idx_acc"] = (
+            grad_idx_fn,
+            (wspec, *shapes(cs)[:2],
+             jax.ShapeDtypeStruct((icap_s,), jnp.int32),
+             jax.ShapeDtypeStruct((icap_s,), f32), accspec),
+        )
+    return entries, p

@@ -35,13 +35,16 @@ class TestLowering:
         assert set(ENTRIES) == {
             "grad", "grad_small", "hvp", "lbfgs",
             "grad_acc", "grad_small_acc", "hvp_acc",
-            "grad_idx_acc", "hvp_idx_acc",
+            "grad_idx_acc", "grad_small_idx_acc", "hvp_idx_acc",
             "cg_dir", "cg_step", "cg_scalars", "cg_result",
         }
         assert set(UNTUPLED_ENTRIES) <= set(ENTRIES)
         for name, cfg in CONFIGS.items():
             entries, p = build_entries(cfg)
-            assert set(entries) == set(ENTRIES), name
+            # grad_small_idx_acc is conditional on idx_cap_small > 0
+            want = set(ENTRIES) if cfg.get("idx_cap_small", 0) > 0 \
+                else set(ENTRIES) - {"grad_small_idx_acc"}
+            assert set(entries) == want, name
             assert p > 0
 
     @pytest.mark.parametrize("name", ["small", "smallnn"])
@@ -92,23 +95,32 @@ class TestManifestOnDisk:
             pytest.skip("run `make artifacts` first")
         return open(path).read()
 
+    def _entries_on_disk(self, manifest, name):
+        """grad_small_idx_acc only exists when the (possibly older)
+        manifest advertises a non-zero idx_cap_small for this config."""
+        line = next(l for l in manifest.splitlines()
+                    if l.startswith(f"config {name} "))
+        if "idx_cap_small=" not in line or "idx_cap_small=0 " in line:
+            return [e for e in ENTRIES if e != "grad_small_idx_acc"]
+        return list(ENTRIES)
+
     def test_manifest_covers_all_configs(self):
         text = self._manifest()
         for name in CONFIGS:
             assert f"config {name} " in text, f"{name} missing from manifest"
 
     def test_artifact_files_exist_and_nonempty(self):
-        self._manifest()
+        manifest = self._manifest()
         for name in CONFIGS:
-            for entry in ENTRIES:
+            for entry in self._entries_on_disk(manifest, name):
                 path = os.path.join(self.ART, f"{name}_{entry}.hlo.txt")
                 assert os.path.exists(path), path
                 assert os.path.getsize(path) > 100, path
 
     def test_no_custom_calls_on_disk(self):
-        self._manifest()
+        manifest = self._manifest()
         for name in CONFIGS:
-            for entry in ENTRIES:
+            for entry in self._entries_on_disk(manifest, name):
                 path = os.path.join(self.ART, f"{name}_{entry}.hlo.txt")
                 text = open(path).read()
                 assert "custom-call" not in text, path

@@ -79,6 +79,24 @@ class TestCompare:
             "query-throughput loss (session::query, resident eval)")
         assert bench_diff.is_staged("query-throughput predict (host softmax)")
         assert bench_diff.is_staged("query-throughput influence (resident CG)")
+        # the concurrent read plane: reader-scaling and memo-cache series
+        assert bench_diff.is_staged(
+            "query-throughput-readers-2 loss (replica pool)")
+        assert bench_diff.is_staged(
+            "query-throughput loss (memo cache-hit)")
+        assert not bench_diff.is_staged("proofreaders warmup")  # no bare "readers"
+
+    def test_reader_scaling_series_gates(self):
+        name = "query-throughput-readers-4 loss (replica pool)"
+        base = {name: entry(10.0)}
+        _, regressions, _ = bench_diff.compare(base, {name: entry(12.0)}, 0.10)
+        assert len(regressions) == 1 and regressions[0][0] == name
+
+    def test_cache_hit_series_gates(self):
+        name = "query-throughput loss (memo cache-hit)"
+        base = {name: entry(1.0)}
+        _, regressions, _ = bench_diff.compare(base, {name: entry(1.5)}, 0.10)
+        assert len(regressions) == 1 and regressions[0][0] == name
 
 
 class TestMain:

@@ -324,6 +324,68 @@ class TestCgEntries:
                                    rtol=2e-3, atol=2e-3)
 
 
+class TestCompDot:
+    """The compensated dot product behind cg_step's convergence scalars:
+    two_prod must be EXACT against the f64 oracle, and comp_dot must
+    recover an ill-conditioned (heavily cancelling) dot product that a
+    plain f32 jnp.dot demonstrably loses."""
+
+    def test_two_prod_is_exact_against_f64(self):
+        # a product of two f32 values has <= 48 significant bits, so the
+        # f64 oracle is exact — and Dekker's p + err must equal it bit
+        # for bit
+        rng = np.random.default_rng(50)
+        a = (rng.normal(size=256) * 1e3).astype(np.float32)
+        b = (rng.normal(size=256) * 1e-2).astype(np.float32)
+        p, err = jax.jit(model.two_prod)(jnp.array(a), jnp.array(b))
+        exact = a.astype(np.float64) * b.astype(np.float64)
+        got = np.asarray(p, np.float64) + np.asarray(err, np.float64)
+        np.testing.assert_array_equal(got, exact)
+
+    def test_comp_dot_matches_plain_dot_on_benign_input(self):
+        rng = np.random.default_rng(51)
+        a = rng.normal(size=300).astype(np.float32)
+        b = rng.normal(size=300).astype(np.float32)
+        got = float(jax.jit(model.comp_dot)(jnp.array(a), jnp.array(b)))
+        want = float(a.astype(np.float64) @ b.astype(np.float64))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_comp_dot_survives_cancellation_where_f32_dot_fails(self):
+        # ref-oracle for the compensated CG scalars: construct vectors
+        # whose f64 dot is tiny against sum|a_i b_i| (condition ~1e7), as
+        # when CG's residual has nearly converged. Driven through
+        # jax.jit exactly as the AOT pipeline lowers cg_step, so this
+        # also proves XLA does not simplify the compensation away.
+        rng = np.random.default_rng(52)
+        n = 512
+        a = (rng.normal(size=n) * 1e3).astype(np.float32)
+        b = (rng.normal(size=n) * 1e3).astype(np.float32)
+        # steer the f64 dot towards zero, then re-quantize
+        b[-1] = np.float32(b[-1] - (a.astype(np.float64)
+                                    @ b.astype(np.float64)) / np.float64(a[-1]))
+        ref64 = a.astype(np.float64) @ b.astype(np.float64)
+        scale = np.abs(a.astype(np.float64) * b.astype(np.float64)).sum()
+        assert abs(ref64) < 1e-4 * scale, "case no longer ill-conditioned"
+        naive = float(jnp.dot(jnp.array(a), jnp.array(b)))
+        comp = float(jax.jit(model.comp_dot)(jnp.array(a), jnp.array(b)))
+        err_naive = abs(naive - ref64)
+        err_comp = abs(comp - ref64)
+        assert err_naive > 1e-8 * scale, \
+            "plain f32 dot no longer exercises rounding — tighten the case"
+        assert err_comp < err_naive / 100.0, \
+            f"compensation buys <100x: naive {err_naive:.3e} comp {err_comp:.3e}"
+
+    def test_comp_dot_handles_non_lane_multiple_lengths(self):
+        # padding path: lengths that do not divide the lane width
+        rng = np.random.default_rng(53)
+        for n in (1, 7, 127, 129, 513):
+            a = rng.normal(size=n).astype(np.float32)
+            b = rng.normal(size=n).astype(np.float32)
+            got = float(model.comp_dot(jnp.array(a), jnp.array(b)))
+            want = float(a.astype(np.float64) @ b.astype(np.float64))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
 class TestBuildEntries:
     @pytest.mark.parametrize("name", ["small", "smallnn"])
     def test_entries_trace(self, name):
@@ -332,7 +394,7 @@ class TestBuildEntries:
         assert set(entries) == {
             "grad", "grad_small", "hvp", "lbfgs",
             "grad_acc", "grad_small_acc", "hvp_acc",
-            "grad_idx_acc", "hvp_idx_acc",
+            "grad_idx_acc", "grad_small_idx_acc", "hvp_idx_acc",
             "cg_dir", "cg_step", "cg_scalars", "cg_result",
         }
         fn, shapes = entries["grad"]
@@ -345,6 +407,15 @@ class TestBuildEntries:
         assert shapes[3].shape == (cfg["idx_cap"],)
         assert shapes[3].dtype == jnp.int32
         assert jax.jit(fn).lower(*shapes) is not None
+        fn, shapes = entries["grad_small_idx_acc"]
+        assert shapes[1].shape == (cfg["chunk_small"], cfg["d"] + 1)
+        assert shapes[3].shape == (cfg["idx_cap_small"],)
+        assert shapes[3].dtype == jnp.int32
+        assert jax.jit(fn).lower(*shapes) is not None
+        # idx_cap_small=0 drops the entry (back-compat manifests)
+        no_small = dict(cfg, idx_cap_small=0)
+        entries0, _ = model.build_entries(no_small)
+        assert "grad_small_idx_acc" not in entries0
         fn, shapes = entries["cg_step"]
         assert shapes[0].shape == (3 * p + 2,)
         assert jax.jit(fn).lower(*shapes) is not None

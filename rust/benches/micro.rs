@@ -8,7 +8,9 @@
 //! parameter upload, the pure vector step arithmetic, and end-to-end
 //! batch-delete / sgd-delete (gather vs resident-mask vs sparse
 //! index-list) / online / long-tail (segmented vs compacted) passes,
-//! plus the device-resident influence CG solve. Every bench reports
+//! plus the device-resident influence CG solve, the concurrent read
+//! plane (reader-pool scaling at R=1/2/4) and the version-keyed query
+//! memo cache (pure-hit serving). Every bench reports
 //! mean ± std AND per-repetition device traffic (uploads / executions /
 //! result downloads), so the staging discipline AND the fused-reduction
 //! download budget of docs/PERFORMANCE.md are visible in numbers.
@@ -17,7 +19,10 @@
 //! (default path BENCH_micro.json) so the perf trajectory is
 //! machine-trackable across PRs.
 
+use std::time::Duration;
+
 use deltagrad::config::HyperParams;
+use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
 use deltagrad::data::{sample_removal, synth, IndexSet};
 use deltagrad::lbfgs::History;
 use deltagrad::runtime::{Engine, Runtime};
@@ -404,6 +409,94 @@ fn main() -> anyhow::Result<()> {
                 .query(&Query::Valuation { candidates: candidates.clone() })
                 .map(|_| ())
         })?;
+    }
+
+    if want("query-throughput-readers") {
+        println!("== concurrent read plane (small, replica reader pool) ==");
+        // reader-scaling series: R replica sessions answer a burst of 8
+        // Loss queries; the writer never sees them. Replica build cost
+        // is paid at spawn, outside the timed region. Device traffic
+        // happens on the worker/reader runtimes, so the per-rep counters
+        // here are intentionally zero.
+        let rt = eng.runtime();
+        for r in [1usize, 2, 4] {
+            let mut hp = HyperParams::for_dataset("small");
+            hp.t = 40;
+            hp.j0 = 8;
+            let svc = ServiceHandle::spawn(ServiceConfig {
+                model: "small".into(),
+                seed: 7,
+                n_train: Some(512),
+                n_test: Some(256),
+                hp,
+                policy: BatchPolicy {
+                    max_wait: Duration::from_millis(1),
+                    max_query_queue: 64,
+                    ..BatchPolicy::default()
+                },
+                readers: r,
+                query_cache: 0,
+            })?;
+            let name = format!("query-throughput-readers-{r} loss (replica pool)");
+            // each rep streams one commit through the writer while the
+            // burst of reads lands on the replicas — the interleaved
+            // deletion + inference regime the read plane exists for
+            let mut victim = 0usize;
+            bench(&mut results, &rt, &name, 1, 10, || {
+                let urx = svc
+                    .update_async(Edit::delete_row(victim))
+                    .map_err(|e| anyhow::anyhow!("update rejected: {e:?}"))?;
+                victim += 1;
+                let mut rxs = Vec::with_capacity(8);
+                for _ in 0..8 {
+                    rxs.push(
+                        svc.query_async(Query::Loss)
+                            .map_err(|e| anyhow::anyhow!("query rejected: {e:?}"))?,
+                    );
+                }
+                for rx in rxs {
+                    rx.recv()?
+                        .map_err(|e| anyhow::anyhow!("query failed: {e:?}"))?;
+                }
+                urx.recv()?
+                    .map_err(|e| anyhow::anyhow!("update failed: {e:?}"))?;
+                Ok(())
+            })?;
+            svc.shutdown()?;
+        }
+    }
+
+    if want("cache-hit") {
+        println!("== version-keyed query memo cache (small) ==");
+        let rt = eng.runtime();
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        let svc = ServiceHandle::spawn(ServiceConfig {
+            model: "small".into(),
+            seed: 7,
+            n_train: Some(512),
+            n_test: Some(256),
+            hp,
+            policy: BatchPolicy {
+                max_wait: Duration::from_millis(1),
+                max_query_queue: 64,
+                ..BatchPolicy::default()
+            },
+            readers: 0,
+            query_cache: 8,
+        })?;
+        // warm the entry: the first Loss at this version executes and
+        // fills the cache; every benched rep is then a pure O(1) hit
+        // with zero device transfers
+        svc.query(Query::Loss)
+            .map_err(|e| anyhow::anyhow!("warm-up query failed: {e:?}"))?;
+        bench(&mut results, &rt, "query-throughput loss (memo cache-hit)", 2, 50, || {
+            svc.query(Query::Loss)
+                .map(|_| ())
+                .map_err(|e| anyhow::anyhow!("query failed: {e:?}"))
+        })?;
+        svc.shutdown()?;
     }
 
     if want("iter") {

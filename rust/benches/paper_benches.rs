@@ -9,10 +9,14 @@
 //! exercised under `make bench` and (b) track regressions in the
 //! end-to-end stack.
 
+use std::time::Duration;
+
 use deltagrad::apps::influence::InfluenceOpts;
+use deltagrad::config::HyperParams;
+use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
 use deltagrad::data::sample_removal;
 use deltagrad::expers::{self, Ctx};
-use deltagrad::session::{JackknifeFunctional, Query};
+use deltagrad::session::{Edit, JackknifeFunctional, Query};
 use deltagrad::util::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -75,6 +79,59 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+    // the concurrent read plane end to end: bursts of Loss reads racing
+    // streamed deletes, writer-only (R=0, reads wait for pass
+    // boundaries) vs a replica reader pool
+    // (query-throughput-readers-N) — the interleaved deletion +
+    // inference regime of the serving north star
+    if filter.is_empty() || "query-throughput-readers".contains(&filter) {
+        for readers in [0usize, 2] {
+            let mut hp = HyperParams::for_dataset("small");
+            hp.t = 40;
+            hp.j0 = 8;
+            let svc = ServiceHandle::spawn(ServiceConfig {
+                model: "small".into(),
+                seed: 7,
+                n_train: Some(512),
+                n_test: Some(256),
+                hp,
+                policy: BatchPolicy {
+                    max_wait: Duration::from_millis(1),
+                    max_query_queue: 64,
+                    ..BatchPolicy::default()
+                },
+                readers,
+                query_cache: 0,
+            })?;
+            let t0 = std::time::Instant::now();
+            for rep in 0..3usize {
+                let urx = svc
+                    .update_async(Edit::delete_row(rep))
+                    .map_err(|e| anyhow::anyhow!("update rejected: {e:?}"))?;
+                let mut rxs = Vec::with_capacity(8);
+                for _ in 0..8 {
+                    rxs.push(
+                        svc.query_async(Query::Loss)
+                            .map_err(|e| anyhow::anyhow!("query rejected: {e:?}"))?,
+                    );
+                }
+                for rx in rxs {
+                    rx.recv()?
+                        .map_err(|e| anyhow::anyhow!("query failed: {e:?}"))?;
+                }
+                urx.recv()?
+                    .map_err(|e| anyhow::anyhow!("update failed: {e:?}"))?;
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            total += secs;
+            println!(
+                "bench query-throughput-readers-{readers}: {secs:8.2}s   \
+                 (3 commits × 8 interleaved reads)"
+            );
+            svc.shutdown()?;
+        }
+    }
+
     let tr = ctx.eng.rt.counters.snapshot();
     println!(
         "\ntotal: {total:.1}s   device traffic: {} uploads ({:.1} MB), {} execs, \

@@ -39,6 +39,10 @@ pub struct ModelSpec {
     /// index-list capacity of the `*_idx_acc` gather entries (i32
     /// indices + f32 multiplicities shipped per group)
     pub idx_cap: usize,
+    /// index-list capacity of the SMALL-shape `grad_small_idx_acc`
+    /// entry (per-row preview sweeps); 0 = entry absent (manifests
+    /// generated before it existed parse the same way)
+    pub idx_cap_small: usize,
     /// L2 regularization coefficient (baked into the artifacts)
     pub lam: f32,
     /// L-BFGS history size baked into the `lbfgs` artifact
@@ -64,6 +68,17 @@ impl ModelSpec {
             return false;
         }
         2 * distinct_rows.div_ceil(self.idx_cap) * self.idx_cap < self.chunk
+    }
+
+    /// Same payload break-even at the SMALL shape: does
+    /// `grad_small_idx_acc` ship fewer scalars than a
+    /// `chunk_small`-float multiplicity mask? Always false when the
+    /// manifest predates the entry (`idx_cap_small == 0`).
+    pub fn idx_list_wins_small(&self, distinct_rows: usize) -> bool {
+        if distinct_rows == 0 || self.idx_cap_small == 0 {
+            return false;
+        }
+        2 * distinct_rows.div_ceil(self.idx_cap_small) * self.idx_cap_small < self.chunk_small
     }
 }
 
@@ -191,6 +206,12 @@ pub fn parse_manifest_str(text: &str) -> Result<BTreeMap<String, ModelSpec>> {
             chunk: usize_of("chunk")?,
             chunk_small: usize_of("chunk_small")?,
             idx_cap: usize_of("idx_cap")?,
+            // OPTIONAL (default 0): older manifests predate the
+            // small-shape index-list entry and must keep parsing
+            idx_cap_small: match kv.get("idx_cap_small") {
+                Some(v) => v.parse::<usize>().context("key idx_cap_small")?,
+                None => 0,
+            },
             lam: get("lam")?.parse::<f32>().context("lam")?,
             m: usize_of("m")?,
             n_train: usize_of("n_train")?,
@@ -231,7 +252,7 @@ mod tests {
 
     const SAMPLE: &str = "\
 # comment
-config small model=lr d=20 da=21 k=3 p=63 hidden=0 chunk=256 chunk_small=128 idx_cap=64 lam=0.005 m=2 n_train=1024 n_test=256
+config small model=lr d=20 da=21 k=3 p=63 hidden=0 chunk=256 chunk_small=128 idx_cap=64 idx_cap_small=32 lam=0.005 m=2 n_train=1024 n_test=256
 config smallnn model=mlp d=20 da=21 k=3 p=387 hidden=16 chunk=256 chunk_small=128 idx_cap=64 lam=0.001 m=2 n_train=1024 n_test=256
 ";
 
@@ -244,10 +265,13 @@ config smallnn model=mlp d=20 da=21 k=3 p=387 hidden=16 chunk=256 chunk_small=12
         assert_eq!((s.d, s.da, s.k, s.p), (20, 21, 3, 63));
         assert_eq!(s.chunk, 256);
         assert_eq!(s.idx_cap, 64);
+        assert_eq!(s.idx_cap_small, 32);
         assert!((s.lam - 0.005).abs() < 1e-9);
         let n = &specs["smallnn"];
         assert_eq!(n.model, ModelKind::Mlp);
         assert_eq!(n.hidden, 16);
+        // smallnn's line omits idx_cap_small: older-manifest default
+        assert_eq!(n.idx_cap_small, 0);
     }
 
     #[test]
@@ -272,6 +296,19 @@ config smallnn model=mlp d=20 da=21 k=3 p=387 hidden=16 chunk=256 chunk_small=12
         assert!(s.idx_list_wins(64)); // still one group
         assert!(!s.idx_list_wins(65)); // two groups: 256 scalars, no win
         assert!(!s.idx_list_wins(256)); // dense: mask path
+    }
+
+    #[test]
+    fn idx_density_threshold_small_shape() {
+        let specs = parse_manifest_str(SAMPLE).unwrap();
+        let s = &specs["small"]; // chunk_small=128, idx_cap_small=32
+        assert!(!s.idx_list_wins_small(0));
+        assert!(s.idx_list_wins_small(1)); // one group: 64 scalars < 128 floats
+        assert!(s.idx_list_wins_small(32)); // still one group
+        assert!(!s.idx_list_wins_small(33)); // two groups: 128 scalars, no win
+        // a manifest without the entry never picks the path
+        let n = &specs["smallnn"];
+        assert!(!n.idx_list_wins_small(1));
     }
 
     #[test]

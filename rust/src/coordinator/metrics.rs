@@ -50,6 +50,26 @@ pub struct Metrics {
     pub query_execs: u64,
     pub query_downloads: u64,
     pub query_download_floats: u64,
+    // --- read-plane overlay (filled by `ServiceHandle::metrics`; the
+    // reader pool and memo cache live outside the worker thread) ------
+    /// reader-pool size R (0 = the writer answers queries)
+    pub readers: u64,
+    /// queries served by reader replicas (concurrent with passes)
+    pub reader_queries: u64,
+    /// committed deltas replayed across all replicas (R× commits when
+    /// every replica is current)
+    pub reader_replays: u64,
+    /// lowest version any replica has replayed to
+    pub replica_min_version: u64,
+    /// latest committed version minus `replica_min_version` (0 when
+    /// every replica is current — or when R=0)
+    pub replica_lag: u64,
+    /// version-keyed memo cache: replies served with zero transfers
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_entries: u64,
+    /// configured capacity (0 = cache disabled)
+    pub cache_capacity: u64,
 }
 
 impl Metrics {
@@ -235,6 +255,22 @@ impl Metrics {
                 self.query_download_floats,
             ));
         }
+        if self.readers > 0 {
+            s.push_str(&format!(
+                " readers={} reader_queries={} replays={} min_version={} lag={}",
+                self.readers,
+                self.reader_queries,
+                self.reader_replays,
+                self.replica_min_version,
+                self.replica_lag,
+            ));
+        }
+        if self.cache_capacity > 0 {
+            s.push_str(&format!(
+                " cache(hits={} misses={} entries={}/{})",
+                self.cache_hits, self.cache_misses, self.cache_entries, self.cache_capacity,
+            ));
+        }
         s
     }
 }
@@ -326,6 +362,29 @@ mod tests {
     fn render_without_queries_omits_query_section() {
         let m = Metrics::new();
         assert!(!m.render().contains("queries="));
+    }
+
+    #[test]
+    fn read_plane_overlay_renders_only_when_enabled() {
+        let mut m = Metrics::new();
+        // default config: no readers, no cache -> render is unchanged
+        let r = m.render();
+        assert!(!r.contains("readers="), "{r}");
+        assert!(!r.contains("cache("), "{r}");
+        m.readers = 2;
+        m.reader_queries = 7;
+        m.reader_replays = 10;
+        m.replica_min_version = 5;
+        m.replica_lag = 1;
+        m.cache_capacity = 64;
+        m.cache_hits = 3;
+        m.cache_misses = 4;
+        m.cache_entries = 4;
+        let r = m.render();
+        assert!(r.contains("readers=2"), "{r}");
+        assert!(r.contains("reader_queries=7"), "{r}");
+        assert!(r.contains("lag=1"), "{r}");
+        assert!(r.contains("cache(hits=3 misses=4 entries=4/64)"), "{r}");
     }
 
     #[test]

@@ -13,8 +13,10 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod readers;
 pub mod service;
 
 pub use batcher::{BatchPolicy, Pending};
 pub use metrics::Metrics;
+pub use readers::{CommitDelta, ReaderPool, ReaderSpawn};
 pub use service::{ModelSnapshot, Rejected, ServiceConfig, ServiceHandle, UpdateReply};

@@ -1,0 +1,299 @@
+//! The concurrent read plane: a pool of R reader threads, each owning a
+//! full replica [`Session`], serving queries WHILE the writer commits.
+//!
+//! PJRT handles are `Rc` and not `Send`, so a replica cannot be moved —
+//! each reader reconstructs its session from the same deterministic
+//! recipe the writer used (`SessionBuilder`: model, seed, sizes,
+//! hyperparameters — synthetic data and full-batch GD training are
+//! bitwise-reproducible) and then stays current by REPLAYING every
+//! committed [`Edit`] the writer publishes as a compact
+//! [`CommitDelta`] over its own channel. Replay is the existing O(edit)
+//! commit path (Algorithm 3 over the delta rows), so keeping R replicas
+//! current costs R× the edit size, never R× the dataset — and replica
+//! state is bitwise-deterministic against the writer (pinned by
+//! tests/service.rs).
+//!
+//! Ordering contract: the writer publishes each delta to EVERY reader
+//! BEFORE sending the commit's `UpdateReply`, and each reader channel is
+//! FIFO — so by the time a client can know about version v, every
+//! reader's queue already holds the deltas up to v ahead of any query
+//! the client sends next. Dispatch picks the least-lagged reader
+//! (highest replayed version, ties broken by fewest in-flight queries),
+//! which therefore answers at-or-above every version the client has
+//! observed: per-client reply versions stay monotone and always name a
+//! committed version, exactly the R=0 contract.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::service::Rejected;
+use crate::config::HyperParams;
+use crate::session::{Edit, Query, QueryCache, QueryReply, SessionBuilder};
+
+/// One committed edit, as published by the writer to every reader: the
+/// replica applies `edit` through its own `Session::commit` and must
+/// land on exactly `version`.
+#[derive(Clone, Debug)]
+pub struct CommitDelta {
+    pub version: u64,
+    pub edit: Edit,
+}
+
+pub(crate) enum ReaderCmd {
+    Delta(CommitDelta),
+    Query(Query, Sender<Result<QueryReply, Rejected>>),
+    Shutdown,
+}
+
+/// The deterministic session recipe a reader replays: identical inputs
+/// to the writer's own `SessionBuilder` call.
+#[derive(Clone)]
+pub struct ReaderSpawn {
+    pub model: String,
+    pub seed: u64,
+    pub n_train: Option<usize>,
+    pub n_test: Option<usize>,
+    pub hp: HyperParams,
+}
+
+struct Reader {
+    tx: Sender<ReaderCmd>,
+    /// latest version this replica has replayed to
+    version: Arc<AtomicU64>,
+    /// queries dispatched but not yet answered
+    inflight: Arc<AtomicUsize>,
+    served: Arc<AtomicU64>,
+    replays: Arc<AtomicU64>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Handle over the reader threads. Empty (R=0) is a valid pool: the
+/// coordinator then answers queries on the writer, today's path.
+pub struct ReaderPool {
+    readers: Vec<Reader>,
+}
+
+impl ReaderPool {
+    pub fn empty() -> Self {
+        ReaderPool { readers: Vec::new() }
+    }
+
+    /// Spawn `r` reader threads. Each builds its replica session on its
+    /// own thread (its own PJRT client and staged buffers); commands
+    /// queue during the build, so dispatch is valid immediately.
+    pub fn spawn(
+        r: usize,
+        spec: ReaderSpawn,
+        cache: Arc<Mutex<QueryCache>>,
+    ) -> Result<Self> {
+        let mut readers = Vec::with_capacity(r);
+        for i in 0..r {
+            let (tx, rx) = mpsc::channel::<ReaderCmd>();
+            let version = Arc::new(AtomicU64::new(0));
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let served = Arc::new(AtomicU64::new(0));
+            let replays = Arc::new(AtomicU64::new(0));
+            let spec_i = spec.clone();
+            let (v2, f2, s2, r2, c2) = (
+                version.clone(),
+                inflight.clone(),
+                served.clone(),
+                replays.clone(),
+                cache.clone(),
+            );
+            let join = std::thread::Builder::new()
+                .name(format!("deltagrad-{}-reader{i}", spec.model))
+                .spawn(move || reader_main(spec_i, rx, v2, f2, s2, r2, c2))?;
+            readers.push(Reader {
+                tx,
+                version,
+                inflight,
+                served,
+                replays,
+                join: Some(join),
+            });
+        }
+        Ok(ReaderPool { readers })
+    }
+
+    pub fn len(&self) -> usize {
+        self.readers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.readers.is_empty()
+    }
+
+    /// Senders the writer publishes each [`CommitDelta`] on (one per
+    /// reader, FIFO with that reader's queries).
+    pub(crate) fn delta_senders(&self) -> Vec<Sender<ReaderCmd>> {
+        self.readers.iter().map(|r| r.tx.clone()).collect()
+    }
+
+    /// Dispatch one query to the least-lagged reader: highest replayed
+    /// version first (it answers at-or-above anything the client has
+    /// observed — see the module docs), fewest in-flight queries second.
+    /// `max_inflight` is the read lane's admission bound
+    /// (`BatchPolicy::max_query_queue` applied pool-wide).
+    pub(crate) fn dispatch(
+        &self,
+        q: &Query,
+        max_inflight: usize,
+    ) -> Result<Receiver<Result<QueryReply, Rejected>>, Rejected> {
+        if self.total_inflight() >= max_inflight {
+            return Err(Rejected::QueueFull { max_queue: max_inflight });
+        }
+        let mut order: Vec<&Reader> = self.readers.iter().collect();
+        order.sort_by_key(|r| {
+            (
+                std::cmp::Reverse(r.version.load(Ordering::SeqCst)),
+                r.inflight.load(Ordering::SeqCst),
+            )
+        });
+        for r in order {
+            let (rtx, rrx) = mpsc::channel();
+            r.inflight.fetch_add(1, Ordering::SeqCst);
+            match r.tx.send(ReaderCmd::Query(q.clone(), rtx)) {
+                Ok(()) => return Ok(rrx),
+                Err(_) => {
+                    // reader died (replica divergence or panic): undo
+                    // and try the next one
+                    r.inflight.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+        }
+        Err(Rejected::Stopped)
+    }
+
+    pub fn total_inflight(&self) -> usize {
+        self.readers
+            .iter()
+            .map(|r| r.inflight.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    pub fn total_served(&self) -> u64 {
+        self.readers
+            .iter()
+            .map(|r| r.served.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    pub fn total_replays(&self) -> u64 {
+        self.readers
+            .iter()
+            .map(|r| r.replays.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    /// Lowest replayed version across the pool (0 for an empty pool):
+    /// `latest committed − min_version` is the pool's replica lag.
+    pub fn min_version(&self) -> u64 {
+        self.readers
+            .iter()
+            .map(|r| r.version.load(Ordering::SeqCst))
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Stop and join every reader (idempotent).
+    pub(crate) fn shutdown(&mut self) {
+        for r in &self.readers {
+            let _ = r.tx.send(ReaderCmd::Shutdown);
+        }
+        for r in &mut self.readers {
+            if let Some(j) = r.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Drop for ReaderPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn reader_main(
+    spec: ReaderSpawn,
+    rx: Receiver<ReaderCmd>,
+    version: Arc<AtomicU64>,
+    inflight: Arc<AtomicUsize>,
+    served: Arc<AtomicU64>,
+    replays: Arc<AtomicU64>,
+    cache: Arc<Mutex<QueryCache>>,
+) {
+    // the replica: same deterministic recipe as the writer's session
+    let built = SessionBuilder::new(&spec.model)
+        .seed(spec.seed)
+        .n_train(spec.n_train)
+        .n_test(spec.n_test)
+        .hyper_params(spec.hp)
+        .build();
+    let mut session = match built {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("deltagrad reader: replica build failed: {e:#}");
+            reject_all(rx, &inflight, &format!("replica build failed: {e}"));
+            return;
+        }
+    };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            ReaderCmd::Delta(d) => match session.commit(d.edit) {
+                Ok(c) => {
+                    debug_assert_eq!(
+                        c.version, d.version,
+                        "replica replay diverged from the writer's version"
+                    );
+                    version.store(c.version, Ordering::SeqCst);
+                    replays.fetch_add(1, Ordering::SeqCst);
+                }
+                Err(e) => {
+                    // the writer committed this exact edit, so a replica
+                    // failure means divergence — refuse to serve stale
+                    // state; dispatch skips dead readers
+                    eprintln!("deltagrad reader: replica replay failed: {e:#}");
+                    reject_all(rx, &inflight, &format!("replica diverged: {e}"));
+                    return;
+                }
+            },
+            ReaderCmd::Query(q, reply) => {
+                let res = session
+                    .query(&q)
+                    .map_err(|e| Rejected::Failed(e.to_string()));
+                if let Ok(rep) = &res {
+                    let mut c = cache.lock().expect("query cache poisoned");
+                    if c.enabled() {
+                        c.insert(&q, rep.clone());
+                    }
+                }
+                served.fetch_add(1, Ordering::SeqCst);
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                let _ = reply.send(res);
+            }
+            ReaderCmd::Shutdown => break,
+        }
+    }
+}
+
+/// Terminal state: answer every remaining (and future, until the sender
+/// side drops) command with a typed rejection so clients never hang —
+/// and keep the in-flight count honest so pool admission stays open.
+fn reject_all(rx: Receiver<ReaderCmd>, inflight: &AtomicUsize, why: &str) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            ReaderCmd::Query(_, reply) => {
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                let _ = reply.send(Err(Rejected::Failed(why.to_string())));
+            }
+            ReaderCmd::Delta(_) => {}
+            ReaderCmd::Shutdown => break,
+        }
+    }
+}

@@ -26,13 +26,32 @@
 //!   carries the receiving lane's limit, but during a pass an extreme
 //!   burst of either plane can transiently occupy it.)
 //!
-//! Queries never interrupt a pass: the worker answers everything queued
-//! BETWEEN commits, against the current committed state, and each
-//! [`QueryReply`] carries the version it saw — interleaved read/write
-//! streams get snapshot-consistent replies (tests/service.rs pins
-//! this, plus the query plane's zero-row-re-staging transfer budget).
+//! With `readers == 0` (the default), queries never interrupt a pass:
+//! the worker answers everything queued BETWEEN commits, against the
+//! current committed state, and each [`QueryReply`] carries the version
+//! it saw — interleaved read/write streams get snapshot-consistent
+//! replies (tests/service.rs pins this, plus the query plane's
+//! zero-row-re-staging transfer budget).
+//!
+//! With `readers == R > 0`, reads leave the worker entirely: a
+//! [`ReaderPool`](super::readers) of R replica sessions serves them
+//! CONCURRENTLY with passes. The worker publishes every committed edit
+//! as a [`CommitDelta`](super::readers::CommitDelta) to each reader
+//! BEFORE replying to the commit's clients, and each reader channel is
+//! FIFO, so the least-lagged-reader dispatch preserves the R=0
+//! contract: per-client reply versions are monotone and always name a
+//! committed version (see the readers module docs for the argument).
+//!
+//! Independently, `query_cache > 0` memoizes served replies in a
+//! version-keyed [`QueryCache`]: a repeated `Conformal` / `Jackknife` /
+//! `Valuation` / `RobustSweep` between two commits is answered from the
+//! handle in O(1) with ZERO device transfers. Both knobs default off,
+//! keeping the single-threaded byte-budget behavior pinned by the seed
+//! tests.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -42,8 +61,9 @@ use super::batcher::{
     admits, admits_query, group_to_commit, time_until_commit, BatchPolicy, Pending,
 };
 use super::metrics::Metrics;
+use super::readers::{CommitDelta, ReaderCmd, ReaderPool, ReaderSpawn};
 use crate::config::HyperParams;
-use crate::session::{Edit, Query, QueryReply, SessionBuilder};
+use crate::session::{Edit, Query, QueryCache, QueryReply, SessionBuilder};
 
 /// What the service sends back for one served edit.
 #[derive(Clone, Debug)]
@@ -111,6 +131,13 @@ pub struct ServiceConfig {
     pub n_test: Option<usize>,
     pub hp: HyperParams,
     pub policy: BatchPolicy,
+    /// reader-pool size R: replica sessions serving queries concurrently
+    /// with commits. 0 (default) = the writer answers between passes,
+    /// exactly the pre-pool behavior.
+    pub readers: usize,
+    /// version-keyed query memo cache capacity, in replies. 0 (default)
+    /// = disabled; repeated identical queries between commits re-execute.
+    pub query_cache: usize,
 }
 
 /// Client handle to a running service.
@@ -121,6 +148,11 @@ pub struct ServiceHandle {
     join: Option<JoinHandle<Result<()>>>,
     max_queue: usize,
     max_query_queue: usize,
+    /// latest version the worker has committed (published before the
+    /// commit's replies) — the memo key for handle-side cache lookups
+    latest: Arc<AtomicU64>,
+    cache: Arc<Mutex<QueryCache>>,
+    pool: ReaderPool,
 }
 
 impl ServiceHandle {
@@ -140,14 +172,41 @@ impl ServiceHandle {
         let (tx, rx) = mpsc::sync_channel::<Command>(bound);
         let max_queue = cfg.policy.max_queue;
         let max_query_queue = cfg.policy.max_query_queue;
+        let latest = Arc::new(AtomicU64::new(0));
+        let cache = Arc::new(Mutex::new(QueryCache::new(cfg.query_cache)));
+        // the read plane: R replica sessions, kept current by the
+        // worker's delta stream (empty pool when R=0)
+        let pool = if cfg.readers > 0 {
+            ReaderPool::spawn(
+                cfg.readers,
+                ReaderSpawn {
+                    model: cfg.model.clone(),
+                    seed: cfg.seed,
+                    n_train: cfg.n_train,
+                    n_test: cfg.n_test,
+                    hp: cfg.hp.clone(),
+                },
+                cache.clone(),
+            )?
+        } else {
+            ReaderPool::empty()
+        };
+        let shared = WorkerShared {
+            latest: latest.clone(),
+            cache: cache.clone(),
+            delta_txs: pool.delta_senders(),
+        };
         let join = std::thread::Builder::new()
             .name(format!("deltagrad-{}", cfg.model))
-            .spawn(move || worker(cfg, rx))?;
+            .spawn(move || worker(cfg, rx, shared))?;
         Ok(ServiceHandle {
             tx: Some(tx),
             join: Some(join),
             max_queue,
             max_query_queue,
+            latest,
+            cache,
+            pool,
         })
     }
 
@@ -191,10 +250,28 @@ impl ServiceHandle {
     }
 
     /// Enqueue a query without waiting (reply receiver returned).
+    ///
+    /// Served in priority order: the memo cache (a hit answers from the
+    /// handle with zero transfers, at the latest committed version),
+    /// then the reader pool (R>0: concurrent with passes), then the
+    /// worker's between-pass lane (R=0, today's path).
     pub fn query_async(
         &self,
         q: Query,
     ) -> Result<Receiver<Result<QueryReply, Rejected>>, Rejected> {
+        {
+            let mut cache = self.cache.lock().expect("query cache poisoned");
+            if cache.enabled() {
+                if let Some(rep) = cache.get(self.latest.load(Ordering::SeqCst), &q) {
+                    let (rtx, rrx) = mpsc::channel();
+                    let _ = rtx.send(Ok(rep));
+                    return Ok(rrx);
+                }
+            }
+        }
+        if !self.pool.is_empty() {
+            return self.pool.dispatch(&q, self.max_query_queue);
+        }
         let (rtx, rrx) = mpsc::channel();
         match self.tx().try_send(Command::Query(q, rtx)) {
             Ok(()) => Ok(rrx),
@@ -213,12 +290,28 @@ impl ServiceHandle {
         Ok(rrx.recv()?)
     }
 
+    /// Worker-side metrics, overlaid with the handle-side read-plane
+    /// counters (reader pool + memo cache live outside the worker).
     pub fn metrics(&self) -> Result<Metrics> {
         let (rtx, rrx) = mpsc::channel();
         self.tx()
             .send(Command::Metrics(rtx))
             .map_err(|_| anyhow::anyhow!("service stopped"))?;
-        Ok(rrx.recv()?)
+        let mut m = rrx.recv()?;
+        m.readers = self.pool.len() as u64;
+        m.reader_queries = self.pool.total_served();
+        m.reader_replays = self.pool.total_replays();
+        if !self.pool.is_empty() {
+            let latest = self.latest.load(Ordering::SeqCst);
+            m.replica_min_version = self.pool.min_version();
+            m.replica_lag = latest.saturating_sub(m.replica_min_version);
+        }
+        let cs = self.cache.lock().expect("query cache poisoned").stats();
+        m.cache_hits = cs.hits;
+        m.cache_misses = cs.misses;
+        m.cache_entries = cs.entries;
+        m.cache_capacity = cs.capacity;
+        Ok(m)
     }
 
     pub fn shutdown(mut self) -> Result<()> {
@@ -230,6 +323,8 @@ impl ServiceHandle {
         if let Some(j) = self.join.take() {
             j.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
         }
+        // the worker is gone (its delta senders dropped); stop readers
+        self.pool.shutdown();
         Ok(())
     }
 }
@@ -242,6 +337,7 @@ impl Drop for ServiceHandle {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+        // ReaderPool's own Drop joins the readers
     }
 }
 
@@ -255,7 +351,14 @@ struct PendingQuery {
     reply: Sender<Result<QueryReply, Rejected>>,
 }
 
-fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
+/// Read-plane state the worker shares with the handle and the readers.
+struct WorkerShared {
+    latest: Arc<AtomicU64>,
+    cache: Arc<Mutex<QueryCache>>,
+    delta_txs: Vec<Sender<ReaderCmd>>,
+}
+
+fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Result<()> {
     // the service serves commits, which are GD-only (Algorithm-3 cache
     // rewriting) — reject an SGD config before paying for training
     if cfg.hp.batch != 0 {
@@ -342,8 +445,29 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
             let group: Vec<Pending<PendingUpdate>> = queue.drain(..n).collect();
             let edit = Edit::group(group.iter().map(|p| p.payload.edit.clone()).collect());
             let (dels, adds) = edit.count_kinds();
+            // keep a copy for the delta stream: `commit` consumes its edit
+            let delta_edit = edit.clone();
             match session.commit(edit) {
                 Ok(c) => {
+                    // publish to the read plane BEFORE any client learns
+                    // of the commit: (1) the latest-version watermark
+                    // (handle-side cache key), (2) commit-time cache
+                    // invalidation, (3) the delta to every reader — so a
+                    // client that sees this UpdateReply and then queries
+                    // finds the delta already FIFO-queued ahead of its
+                    // query on whichever reader serves it
+                    shared.latest.store(c.version, Ordering::SeqCst);
+                    shared
+                        .cache
+                        .lock()
+                        .expect("query cache poisoned")
+                        .retain_version(c.version);
+                    for tx in &shared.delta_txs {
+                        let _ = tx.send(ReaderCmd::Delta(CommitDelta {
+                            version: c.version,
+                            edit: delta_edit.clone(),
+                        }));
+                    }
                     let now = Instant::now();
                     let lats: Vec<_> = group.iter().map(|p| now - p.arrived).collect();
                     metrics.record_group(n, &lats);
@@ -378,6 +502,14 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>) -> Result<()> {
                         Instant::now() - p.arrived,
                         &rep.transfers,
                     );
+                    {
+                        // memoize (R=0 path; readers insert their own)
+                        let mut cache =
+                            shared.cache.lock().expect("query cache poisoned");
+                        if cache.enabled() {
+                            cache.insert(&p.payload.q, rep.clone());
+                        }
+                    }
                     let _ = p.payload.reply.send(Ok(rep));
                 }
                 Err(e) => {

@@ -8,6 +8,8 @@
 //!   query --model M --kind K     serve typed read queries next to edits
 //!                                (K: loss predict influence valuation
 //!                                 jackknife conformal robust)
+//!   serve/query also take --readers R (replica reader pool) and
+//!   --cache C (version-keyed query memo cache capacity); both default 0
 //!   experiment <id>|all [--scale quick|paper] [--seed S]
 //!                                regenerate a paper table/figure
 //!
@@ -106,13 +108,16 @@ fn main() -> Result<()> {
             cmd_delete(&args)
         }
         Some("serve") => {
-            args.check_flags("serve", &["model", "requests", "t"]);
+            args.check_flags("serve", &["model", "requests", "t", "readers", "cache"]);
             cmd_serve(&args)
         }
         Some("query") => {
             args.check_flags(
                 "query",
-                &["model", "kind", "t", "count", "alpha", "targets", "frac", "loo"],
+                &[
+                    "model", "kind", "t", "count", "alpha", "targets", "frac", "loo", "readers",
+                    "cache",
+                ],
             );
             cmd_query(&args)
         }
@@ -207,6 +212,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_test: None,
         hp,
         policy: BatchPolicy::default(),
+        readers: args.usize_flag("readers", 0)?,
+        query_cache: args.usize_flag("cache", 0)?,
     })?;
     let snap = svc.snapshot()?;
     println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
@@ -254,6 +261,8 @@ fn cmd_query(args: &Args) -> Result<()> {
         n_test: None,
         hp,
         policy: BatchPolicy::default(),
+        readers: args.usize_flag("readers", 0)?,
+        query_cache: args.usize_flag("cache", 0)?,
     })?;
     let snap = svc.snapshot()?;
     println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);

@@ -122,6 +122,10 @@ pub struct ModelExes {
     grad_small_acc: xla::PjRtLoadedExecutable,
     hvp_acc: xla::PjRtLoadedExecutable,
     grad_idx_acc: xla::PjRtLoadedExecutable,
+    /// small-shape index-list gather variant of `grad_small_acc`; only
+    /// emitted (and only loaded) when the manifest advertises
+    /// `idx_cap_small > 0` — older manifests keep loading without it
+    grad_small_idx_acc: Option<xla::PjRtLoadedExecutable>,
     hvp_idx_acc: xla::PjRtLoadedExecutable,
     cg_dir: xla::PjRtLoadedExecutable,
     cg_step: xla::PjRtLoadedExecutable,
@@ -331,6 +335,11 @@ impl ModelExes {
             grad_small_acc: load("grad_small_acc")?,
             hvp_acc: load("hvp_acc")?,
             grad_idx_acc: load("grad_idx_acc")?,
+            grad_small_idx_acc: if spec.idx_cap_small > 0 {
+                Some(load("grad_small_idx_acc")?)
+            } else {
+                None
+            },
             hvp_idx_acc: load("hvp_idx_acc")?,
             cg_dir: load("cg_dir")?,
             cg_step: load("cg_step")?,
@@ -801,9 +810,15 @@ impl ModelExes {
 
     /// Masked-SUM gradient over a *subset* of pre-staged rows, selected
     /// by staged position (index into the `idxs` passed to
-    /// [`Self::stage_rows`]). Only the tiny per-chunk mask vectors are
-    /// re-uploaded; x/y stay resident. Repeated positions accumulate
-    /// multiplicity, and chunks with no selected row are skipped.
+    /// [`Self::stage_rows`]). x/y stay resident; per touched chunk the
+    /// payload is auto-selected by the small-shape density threshold
+    /// ([`ModelSpec::idx_list_wins_small`]): a sparse selection ships
+    /// `idx_cap_small`-capacity i32 index + f32 multiplicity lists that
+    /// `grad_small_idx_acc` gathers on device (O(b) scalars per chunk),
+    /// a dense one ships the `chunk_small`-float multiplicity mask.
+    /// Repeated positions accumulate multiplicity, and chunks with no
+    /// selected row are skipped. Configs whose manifest predates
+    /// `idx_cap_small` (parsed as 0) always take the mask path.
     pub fn grad_rows_subset(
         &self,
         rt: &Runtime,
@@ -812,6 +827,7 @@ impl ModelExes {
         positions: &[usize],
     ) -> Result<(Vec<f32>, Stats)> {
         let cs = sr.chunk;
+        let icap = self.spec.idx_cap_small;
         let mut counts: Vec<f32> = Vec::new();
         let mut acc: Option<xla::PjRtBuffer> = None;
         for (ci, rc) in sr.chunks.iter().enumerate() {
@@ -822,19 +838,40 @@ impl ModelExes {
             if !positions.iter().any(|&p| p >= lo && p < hi) {
                 continue;
             }
-            counts.clear();
-            counts.resize(cs, 0.0);
+            // ascending (local slot, multiplicity) pairs for this chunk
+            let mut by_slot: BTreeMap<usize, f32> = BTreeMap::new();
             for &pos in positions {
                 if pos >= lo && pos < hi {
-                    counts[pos - lo] += 1.0;
+                    *by_slot.entry(pos - lo).or_insert(0.0) += 1.0;
                 }
             }
-            let mb = rt.upload(&counts, &[cs])?;
-            let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
-            acc = Some(rt.exec_buffer(
-                &self.grad_small_acc,
-                &[&ctx.wbuf, &rc.x, &rc.y, &mb, prev],
-            )?);
+            if let (Some(exe), true) = (
+                self.grad_small_idx_acc.as_ref(),
+                self.spec.idx_list_wins_small(by_slot.len()),
+            ) {
+                let pairs: Vec<(usize, f32)> = by_slot.into_iter().collect();
+                for (idxv, multv) in idx_groups(&pairs, icap) {
+                    let ib = rt.upload_i32(&idxv, &[icap])?;
+                    let mb = rt.upload(&multv, &[icap])?;
+                    let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+                    acc = Some(rt.exec_buffer(
+                        exe,
+                        &[&ctx.wbuf, &rc.x, &rc.y, &ib, &mb, prev],
+                    )?);
+                }
+            } else {
+                counts.clear();
+                counts.resize(cs, 0.0);
+                for (j, m) in by_slot {
+                    counts[j] = m;
+                }
+                let mb = rt.upload(&counts, &[cs])?;
+                let prev = acc.as_ref().unwrap_or(&self.acc0_grad);
+                acc = Some(rt.exec_buffer(
+                    &self.grad_small_acc,
+                    &[&ctx.wbuf, &rc.x, &rc.y, &mb, prev],
+                )?);
+            }
         }
         self.finish_grad(rt, acc)
     }

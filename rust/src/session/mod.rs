@@ -50,8 +50,10 @@
 //! counts) is tracked in [`SessionStats`].
 
 pub mod query;
+pub mod query_cache;
 
 pub use query::{query, JackknifeFunctional, Query, QueryKind, QueryReply, QueryResult};
+pub use query_cache::{QueryCache, QueryCacheStats};
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;

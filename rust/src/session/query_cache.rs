@@ -1,0 +1,312 @@
+//! Version-keyed query memo cache: repeated reads between commits are
+//! O(1) instead of re-running fold/leave-out preview loops.
+//!
+//! A [`QueryReply`] is a pure function of `(committed version, Query)` —
+//! every kind is answered from the committed state and the session is
+//! deterministic — so a bounded memo over an FNV-1a key of the
+//! **canonicalized** parameters (floats by `to_bits`, lists
+//! length-prefixed, options tagged) serves repeats without touching the
+//! device at all: a hit reports **zero** transfers. The committed
+//! version is part of the key, so a commit invalidates by construction
+//! (stale entries can never match); the coordinator additionally calls
+//! [`QueryCache::retain_version`] at commit time so dead entries free
+//! their capacity instead of waiting for FIFO eviction.
+//!
+//! Same collision discipline as the session's row cache: hash first,
+//! then an exact compare of the stored key material — a hash collision
+//! can cost a miss, never a wrong answer. Capacity 0 disables the cache
+//! entirely (the default: the R=0 service stays byte-compatible with
+//! the pinned query-plane transfer budgets).
+
+use std::collections::VecDeque;
+
+use crate::runtime::TransferStats;
+
+use super::query::{JackknifeFunctional, Query, QueryReply};
+
+/// Bounded FIFO memo of served replies keyed by
+/// `(committed version, Query kind, canonicalized params)`.
+pub struct QueryCache {
+    cap: usize,
+    entries: VecDeque<CacheEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+struct CacheEntry {
+    key: u64,
+    /// full canonical key material, for the exact collision-proof compare
+    bytes: Vec<u8>,
+    reply: QueryReply,
+}
+
+/// Counters snapshot for metrics overlays.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueryCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: u64,
+    pub capacity: u64,
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_f32s(b: &mut Vec<u8>, vs: &[f32]) {
+    put_u64(b, vs.len() as u64);
+    for &v in vs {
+        put_f32(b, v);
+    }
+}
+
+fn put_indices<I: IntoIterator<Item = usize>>(b: &mut Vec<u8>, it: I) {
+    let start = b.len();
+    put_u64(b, 0); // length back-patched below
+    let mut n = 0u64;
+    for i in it {
+        put_u64(b, i as u64);
+        n += 1;
+    }
+    b[start..start + 8].copy_from_slice(&n.to_le_bytes());
+}
+
+/// Canonical byte encoding of one `(version, query)` cache key. Every
+/// parameter of every [`Query`] kind is covered (floats via `to_bits`,
+/// so `-0.0`/`0.0` and NaN payloads are distinguished exactly like the
+/// dispatcher would see them); two queries encode identically iff the
+/// dispatcher would compute identical replies at that version.
+pub fn canonical_key(version: u64, q: &Query) -> Vec<u8> {
+    let mut b = Vec::with_capacity(64);
+    put_u64(&mut b, version);
+    b.push(q.kind().index() as u8);
+    match q {
+        Query::Predict { x } => put_f32s(&mut b, x),
+        Query::Loss => {}
+        Query::Influence { targets, opts } => {
+            put_indices(&mut b, targets.iter());
+            put_u64(&mut b, opts.hessian_sample as u64);
+            put_f32(&mut b, opts.damp);
+            put_u64(&mut b, opts.cg_iters as u64);
+            put_f64(&mut b, opts.cg_tol);
+            put_u64(&mut b, opts.seed);
+        }
+        Query::Valuation { candidates } => put_indices(&mut b, candidates.iter().copied()),
+        Query::Jackknife { functional, loo, seed } => {
+            b.push(match functional {
+                JackknifeFunctional::ParamNormSq => 0u8,
+                JackknifeFunctional::TestLoss => 1,
+                JackknifeFunctional::TestAccuracy => 2,
+            });
+            put_u64(&mut b, *loo as u64);
+            put_u64(&mut b, *seed);
+        }
+        Query::Conformal { alpha, folds, x } => {
+            put_f64(&mut b, *alpha);
+            put_u64(&mut b, *folds as u64);
+            match x {
+                None => b.push(0),
+                Some(x) => {
+                    b.push(1);
+                    put_f32s(&mut b, x);
+                }
+            }
+        }
+        Query::RobustSweep { frac } => put_f64(&mut b, *frac),
+    }
+    b
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &x in bytes {
+        h ^= x as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+impl QueryCache {
+    /// `cap` = max memoized replies; 0 disables every operation.
+    pub fn new(cap: usize) -> Self {
+        QueryCache { cap, entries: VecDeque::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Look up the reply for `q` at committed `version`. A hit returns
+    /// the memoized reply with its transfers ZEROED — serving it cost no
+    /// device traffic — and the result/version payload bitwise-identical
+    /// to the originally served reply.
+    pub fn get(&mut self, version: u64, q: &Query) -> Option<QueryReply> {
+        if self.cap == 0 {
+            return None;
+        }
+        let bytes = canonical_key(version, q);
+        let key = fnv1a(&bytes);
+        for e in &self.entries {
+            if e.key == key && e.bytes == bytes {
+                self.hits += 1;
+                let mut rep = e.reply.clone();
+                rep.transfers = TransferStats::default();
+                return Some(rep);
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Memoize one served reply under the version IT was answered at
+    /// (`reply.version`, not the caller's guess — a commit can race the
+    /// answer). Duplicate keys are tolerated: the older entry still
+    /// matches first and ages out FIFO.
+    pub fn insert(&mut self, q: &Query, reply: QueryReply) {
+        if self.cap == 0 {
+            return;
+        }
+        let bytes = canonical_key(reply.version, q);
+        let key = fnv1a(&bytes);
+        if self.entries.len() >= self.cap {
+            self.entries.pop_front();
+        }
+        self.entries.push_back(CacheEntry { key, bytes, reply });
+    }
+
+    /// Commit-time invalidation: drop every entry answered at a version
+    /// other than `version`. (Version-mismatched entries could never hit
+    /// again anyway — the version is key material — but holding them
+    /// would waste capacity until FIFO eviction.)
+    pub fn retain_version(&mut self, version: u64) {
+        self.entries.retain(|e| e.reply.version == version);
+    }
+
+    pub fn stats(&self) -> QueryCacheStats {
+        QueryCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            entries: self.entries.len() as u64,
+            capacity: self.cap as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::IndexSet;
+    use crate::session::query::QueryResult;
+
+    fn loss_reply(version: u64, test_loss: f64) -> QueryReply {
+        QueryReply {
+            version,
+            seconds: 0.25,
+            transfers: TransferStats { uploads: 2, upload_floats: 126, ..Default::default() },
+            result: QueryResult::Loss {
+                test_loss,
+                test_accuracy: 0.9,
+                train_loss: 0.4,
+                train_accuracy: 0.95,
+            },
+        }
+    }
+
+    #[test]
+    fn canonical_key_covers_version_kind_and_params() {
+        let q = Query::Conformal { alpha: 0.1, folds: 4, x: None };
+        assert_eq!(canonical_key(3, &q), canonical_key(3, &q));
+        // version is key material: a commit invalidates by construction
+        assert_ne!(canonical_key(3, &q), canonical_key(4, &q));
+        // every param distinguishes
+        assert_ne!(
+            canonical_key(3, &q),
+            canonical_key(3, &Query::Conformal { alpha: 0.2, folds: 4, x: None })
+        );
+        assert_ne!(
+            canonical_key(3, &q),
+            canonical_key(3, &Query::Conformal { alpha: 0.1, folds: 5, x: None })
+        );
+        assert_ne!(
+            canonical_key(3, &q),
+            canonical_key(3, &Query::Conformal { alpha: 0.1, folds: 4, x: Some(vec![]) })
+        );
+        // kinds never collide even with empty params
+        assert_ne!(
+            canonical_key(0, &Query::Loss),
+            canonical_key(0, &Query::RobustSweep { frac: 0.0 })
+        );
+        // floats canonicalize via to_bits: -0.0 != 0.0
+        assert_ne!(
+            canonical_key(0, &Query::RobustSweep { frac: 0.0 }),
+            canonical_key(0, &Query::RobustSweep { frac: -0.0 })
+        );
+    }
+
+    #[test]
+    fn canonical_key_distinguishes_influence_opts_and_targets() {
+        use crate::apps::influence::InfluenceOpts;
+        let q = |seed: u64, t: Vec<usize>| Query::Influence {
+            targets: IndexSet::from_vec(t),
+            opts: InfluenceOpts { seed, ..Default::default() },
+        };
+        assert_eq!(canonical_key(1, &q(7, vec![1, 2])), canonical_key(1, &q(7, vec![1, 2])));
+        assert_ne!(canonical_key(1, &q(7, vec![1, 2])), canonical_key(1, &q(8, vec![1, 2])));
+        assert_ne!(canonical_key(1, &q(7, vec![1, 2])), canonical_key(1, &q(7, vec![1, 3])));
+    }
+
+    #[test]
+    fn hit_is_bitwise_and_reports_zero_transfers() {
+        let mut c = QueryCache::new(4);
+        assert!(c.get(5, &Query::Loss).is_none(), "cold cache must miss");
+        c.insert(&Query::Loss, loss_reply(5, 0.5));
+        let hit = c.get(5, &Query::Loss).expect("warm cache must hit");
+        assert_eq!(hit.version, 5);
+        assert_eq!(hit.transfers, TransferStats::default(), "hits cost no device traffic");
+        match hit.result {
+            QueryResult::Loss { test_loss, .. } => {
+                assert_eq!(test_loss.to_bits(), 0.5f64.to_bits());
+            }
+            other => panic!("wrong payload {other:?}"),
+        }
+        // a different version must miss (commit-time invalidation)
+        assert!(c.get(6, &Query::Loss).is_none());
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 2);
+    }
+
+    #[test]
+    fn fifo_eviction_and_retain_version() {
+        let mut c = QueryCache::new(2);
+        c.insert(&Query::Loss, loss_reply(1, 0.1));
+        c.insert(&Query::RobustSweep { frac: 0.1 }, loss_reply(1, 0.2));
+        c.insert(&Query::RobustSweep { frac: 0.2 }, loss_reply(2, 0.3));
+        // capacity 2: the oldest (Loss@1) was evicted
+        assert!(c.get(1, &Query::Loss).is_none());
+        assert!(c.get(1, &Query::RobustSweep { frac: 0.1 }).is_some());
+        // commit to v2 drops everything not answered at v2
+        c.retain_version(2);
+        assert!(c.get(1, &Query::RobustSweep { frac: 0.1 }).is_none());
+        assert!(c.get(2, &Query::RobustSweep { frac: 0.2 }).is_some());
+        assert_eq!(c.stats().entries, 1);
+    }
+
+    #[test]
+    fn capacity_zero_disables_everything() {
+        let mut c = QueryCache::new(0);
+        assert!(!c.enabled());
+        c.insert(&Query::Loss, loss_reply(1, 0.1));
+        assert!(c.get(1, &Query::Loss).is_none());
+        // disabled caches count nothing: the R=0 default config reports
+        // pristine counters, not a miss per served query
+        assert_eq!(c.stats(), QueryCacheStats { capacity: 0, ..Default::default() });
+    }
+}

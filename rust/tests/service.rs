@@ -6,7 +6,8 @@ use std::time::Duration;
 
 use deltagrad::config::HyperParams;
 use deltagrad::coordinator::{BatchPolicy, Rejected, ServiceConfig, ServiceHandle};
-use deltagrad::session::{Edit, Query, QueryResult};
+use deltagrad::runtime::TransferStats;
+use deltagrad::session::{Edit, Query, QueryResult, SessionBuilder};
 
 fn small_cfg(policy: BatchPolicy) -> ServiceConfig {
     let mut hp = HyperParams::for_dataset("small");
@@ -20,6 +21,8 @@ fn small_cfg(policy: BatchPolicy) -> ServiceConfig {
         n_test: Some(256),
         hp,
         policy,
+        readers: 0,
+        query_cache: 0,
     }
 }
 
@@ -281,6 +284,233 @@ fn query_queue_full_rejections_are_typed() {
     // writes still admitted
     let rep = svc.update(Edit::delete_row(0)).unwrap();
     assert_eq!(rep.version, 1);
+    svc.shutdown().unwrap();
+}
+
+/// The four Loss fields as raw bits, for bitwise-identity assertions.
+fn loss_bits(r: &QueryResult) -> [u64; 4] {
+    match r {
+        QueryResult::Loss { test_loss, test_accuracy, train_loss, train_accuracy } => [
+            test_loss.to_bits(),
+            test_accuracy.to_bits(),
+            train_loss.to_bits(),
+            train_accuracy.to_bits(),
+        ],
+        other => panic!("wrong reply kind: {other:?}"),
+    }
+}
+
+/// Poll metrics until every replica has replayed `replays` commits and
+/// the pool's lag is zero (bounded; replicas drain their FIFO queues).
+fn await_replicas_current(svc: &ServiceHandle, replays: u64) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let m = svc.metrics().unwrap();
+        if m.reader_replays == replays && m.replica_lag == 0 {
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "replicas never caught up: replays {} (want {replays}), lag {}",
+            m.reader_replays,
+            m.replica_lag
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn reader_pool_answers_while_the_writer_commits() {
+    // busy-writer smoke (R=1): with a reader pool the replica serves
+    // every read concurrently with passes; the worker's between-pass
+    // query lane is bypassed entirely
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        readers: 1,
+        ..small_cfg(BatchPolicy {
+            max_group: 2,
+            max_wait: Duration::from_millis(30),
+            ..BatchPolicy::default()
+        })
+    })
+    .unwrap();
+    let mut edit_rxs = Vec::new();
+    for i in 0..4 {
+        edit_rxs.push(svc.update_async(Edit::delete_row(i)).unwrap());
+        let rep = svc.query(Query::Loss).unwrap();
+        match rep.result {
+            QueryResult::Loss { test_accuracy, .. } => assert!(test_accuracy.is_finite()),
+            other => panic!("wrong reply kind: {other:?}"),
+        }
+    }
+    let mut committed = std::collections::BTreeSet::new();
+    for rx in edit_rxs {
+        committed.insert(rx.recv().unwrap().unwrap().version);
+    }
+    await_replicas_current(&svc, committed.len() as u64);
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.readers, 1);
+    assert_eq!(m.reader_queries, 4, "the replica must have served every read");
+    assert_eq!(m.queries, 0, "the writer must not have served any read");
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn reader_pool_replies_stay_versioned_and_monotone() {
+    // the R=0 snapshot-consistency contract survives R=2: every reply
+    // names a committed version (or the initial 0) and per-client reply
+    // versions are monotone — the delta-before-reply FIFO publication
+    // argument, pinned end to end
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        readers: 2,
+        ..small_cfg(BatchPolicy {
+            max_group: 2,
+            max_wait: Duration::from_millis(30),
+            ..BatchPolicy::default()
+        })
+    })
+    .unwrap();
+    let mut edit_rxs = Vec::new();
+    let mut query_versions = Vec::new();
+    for i in 0..6 {
+        edit_rxs.push(svc.update_async(Edit::delete_row(i)).unwrap());
+        query_versions.push(svc.query(Query::Loss).unwrap().version);
+    }
+    let mut committed: std::collections::BTreeSet<u64> = [0u64].into_iter().collect();
+    for rx in edit_rxs {
+        committed.insert(rx.recv().unwrap().unwrap().version);
+    }
+    for (i, v) in query_versions.iter().enumerate() {
+        assert!(
+            committed.contains(v),
+            "query {i} was answered at v{v}, which the writer never committed \
+             (committed: {committed:?})"
+        );
+    }
+    assert!(
+        query_versions.windows(2).all(|w| w[0] <= w[1]),
+        "reply versions must be monotone: {query_versions:?}"
+    );
+    // quiescence: both replicas replay every commit, then lag is zero
+    await_replicas_current(&svc, 2 * (committed.len() as u64 - 1));
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.readers, 2);
+    assert_eq!(m.reader_queries, 6);
+    assert_eq!(m.replica_lag, 0);
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn replica_replay_is_bitwise_deterministic() {
+    // a replica session replaying the writer's delta stream lands on
+    // bitwise the same model as an offline session applying the same
+    // edits — the determinism the read plane's correctness rests on
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        readers: 1,
+        ..small_cfg(BatchPolicy {
+            max_group: 1,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        })
+    })
+    .unwrap();
+    for i in 0..3 {
+        svc.update(Edit::delete_row(i)).unwrap();
+    }
+    await_replicas_current(&svc, 3);
+    let pool_rep = svc.query(Query::Loss).unwrap();
+    assert_eq!(pool_rep.version, 3);
+    let writer_snap = svc.snapshot().unwrap();
+    svc.shutdown().unwrap();
+
+    // offline: same recipe as small_cfg, same edits, no service at all
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 40;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    let mut local = SessionBuilder::new("small")
+        .seed(77)
+        .n_train(Some(512))
+        .n_test(Some(256))
+        .hyper_params(hp)
+        .build()
+        .unwrap();
+    for i in 0..3 {
+        local.commit(Edit::delete_row(i)).unwrap();
+    }
+    let local_rep = local.query(&Query::Loss).unwrap();
+    assert_eq!(
+        loss_bits(&pool_rep.result),
+        loss_bits(&local_rep.result),
+        "replica replay diverged from the offline session"
+    );
+    let local_w: Vec<u32> = local.snapshot().unwrap().w.iter().map(|x| x.to_bits()).collect();
+    let writer_w: Vec<u32> = writer_snap.w.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(local_w, writer_w, "writer diverged from the offline session");
+}
+
+#[test]
+fn memo_cache_hit_is_bitwise_with_zero_transfers() {
+    // the version-keyed memo cache: a repeated query between two commits
+    // is answered from the handle — bitwise the same reply, ZERO device
+    // transfers — and parameterization differences are cache misses
+    let dir = deltagrad::config::artifacts_dir().expect("make artifacts");
+    let specs = deltagrad::config::parse_manifest(&dir.join("manifest.txt")).unwrap();
+    let da = specs["small"].da;
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        query_cache: 8,
+        ..small_cfg(BatchPolicy::default())
+    })
+    .unwrap();
+    let first = svc.query(Query::Loss).unwrap();
+    assert!(first.transfers.uploads > 0, "the miss executes on device");
+    let second = svc.query(Query::Loss).unwrap();
+    assert_eq!(loss_bits(&first.result), loss_bits(&second.result));
+    assert_eq!(second.version, first.version);
+    assert_eq!(
+        second.transfers,
+        TransferStats::default(),
+        "a cache hit must move zero bytes"
+    );
+    // different params -> different key: x1 (miss), x1 (hit), x2 (miss)
+    let mut x1 = vec![0.0f32; da];
+    x1[da - 1] = 1.0;
+    let mut x2 = x1.clone();
+    x2[0] = 1.0;
+    svc.query(Query::Predict { x: x1.clone() }).unwrap();
+    svc.query(Query::Predict { x: x1 }).unwrap();
+    svc.query(Query::Predict { x: x2 }).unwrap();
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.cache_hits, 2);
+    assert_eq!(m.cache_misses, 3);
+    assert_eq!(m.cache_entries, 3);
+    assert_eq!(m.cache_capacity, 8);
+    assert_eq!(m.queries, 3, "hits must never reach the worker");
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn memo_cache_invalidates_across_commits() {
+    // commit-time invalidation: an entry memoized at version v must not
+    // answer a query after version v+1 committed
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        query_cache: 8,
+        ..small_cfg(BatchPolicy {
+            max_group: 1,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        })
+    })
+    .unwrap();
+    let before = svc.query(Query::Loss).unwrap();
+    assert_eq!(before.version, 0);
+    svc.update(Edit::delete_row(0)).unwrap();
+    let after = svc.query(Query::Loss).unwrap();
+    assert_eq!(after.version, 1, "a commit must invalidate version-0 entries");
+    assert!(after.transfers.uploads > 0, "the post-commit read must re-execute");
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.cache_hits, 0);
+    assert_eq!(m.cache_misses, 2);
+    assert_eq!(m.cache_entries, 1);
     svc.shutdown().unwrap();
 }
 

@@ -504,6 +504,74 @@ fn sparse_sgd_minibatch_ships_index_lists() {
 }
 
 #[test]
+fn sparse_rows_subset_ships_small_index_lists() {
+    // small-shape sibling of the staged_subset budget: a sparse position
+    // subset of pre-staged chunk_small rows (the robust-stats per-row
+    // sweep shape) must ship `idx_cap_small`-capacity index lists —
+    // O(1) scalars per selected row — instead of a chunk_small-float
+    // mask per touched group, and still agree with an explicit gather.
+    // Gated: manifests generated before the `idx_cap_small` key parse as
+    // 0 and keep the mask path — nothing to assert there.
+    let mut eng = engine();
+    let exes = eng.model("small").unwrap();
+    let spec = exes.spec.clone();
+    if spec.idx_cap_small == 0 {
+        eprintln!("manifest predates idx_cap_small; skipping small index-list budget");
+        return;
+    }
+    let icap = spec.idx_cap_small;
+    let cs = spec.chunk_small;
+    let (ds, _) = synth::train_test_for_spec(&spec, 47, Some(2 * cs + 32), Some(10));
+    let mut rng = Rng::new(14);
+    let w: Vec<f32> = (0..spec.p).map(|_| rng.gaussian_f32() * 0.1).collect();
+    let pool: Vec<usize> = (0..2 * cs).collect();
+    let sr = exes.stage_rows(&eng.rt, &ds, &pool).unwrap();
+    let ctx = exes.pass_ctx(&eng.rt, &w).unwrap();
+
+    // sparse: 2 distinct slots in group 0 (one duplicated), 1 in group 1
+    let positions = vec![3usize, 40, cs + 7, 3];
+    assert!(spec.idx_list_wins_small(2), "test presumes the index path wins");
+    let touched = 2u64;
+    let c0 = eng.rt.counters.snapshot();
+    let (g_idx, s_idx) = exes.grad_rows_subset(&eng.rt, &sr, &ctx, &positions).unwrap();
+    let tr = eng.rt.counters.snapshot().since(c0);
+    assert_eq!(tr.uploads, 2 * touched, "index path ships idx+mult per touched group");
+    assert_eq!(tr.upload_floats, 2 * touched * icap as u64);
+    assert_eq!(tr.idx_uploads, touched);
+    assert_eq!(tr.idx_scalars, touched * icap as u64);
+    assert!(
+        tr.upload_floats < touched * cs as u64,
+        "index payload must undercut the chunk_small-float masks"
+    );
+    assert_eq!(tr.downloads, 1, "fused subset gradient must download once");
+    assert_eq!(tr.execs, touched);
+
+    let rows: Vec<usize> = positions.iter().map(|&p| pool[p]).collect();
+    let (g_gather, s_gather) = exes.grad_sum_rows(&eng.rt, &ds, &rows, &w).unwrap();
+    assert_eq!(s_idx.cnt, s_gather.cnt, "multiplicity lost on the index path");
+    let denom = g_gather.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&g_idx, &g_gather);
+    assert!(d / denom < 1e-5, "small index-list gradient drifted: {:.3e}", d / denom);
+
+    // dense side of the threshold: selecting most of one group keeps
+    // the single chunk_small-float multiplicity mask
+    let dense: Vec<usize> = (0..cs - 1).collect();
+    assert!(!spec.idx_list_wins_small(dense.len()), "test presumes the mask path");
+    let c0 = eng.rt.counters.snapshot();
+    let (g_mask, s_mask) = exes.grad_rows_subset(&eng.rt, &sr, &ctx, &dense).unwrap();
+    let tr = eng.rt.counters.snapshot().since(c0);
+    assert_eq!(tr.uploads, 1, "dense subset ships one multiplicity mask");
+    assert_eq!(tr.upload_floats, cs as u64);
+    assert_eq!(tr.idx_uploads, 0, "no index payload on the dense path");
+    let rows: Vec<usize> = dense.iter().map(|&p| pool[p]).collect();
+    let (g_gather, s_gather) = exes.grad_sum_rows(&eng.rt, &ds, &rows, &w).unwrap();
+    assert_eq!(s_mask.cnt, s_gather.cnt);
+    let denom = g_gather.iter().map(|x| x.abs()).fold(1.0f32, f32::max) as f64;
+    let d = deltagrad::util::vecmath::dist2(&g_mask, &g_gather);
+    assert!(d / denom < 1e-5, "dense-mask gradient drifted: {:.3e}", d / denom);
+}
+
+#[test]
 fn resident_cg_uploads_nothing_per_iteration() {
     // the resident-CG acceptance budget: after the warm-up (sample rows
     // + parameter vector + packed state + constants) every CG iteration

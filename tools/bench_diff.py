@@ -29,11 +29,12 @@ import sys
 
 # a bench gates iff its name contains one of these (the staged paths:
 # resident/staged/session shapes, the index-list SGD series, the
-# resident-CG solve, the compacted long-tail series, and the
-# query-throughput read-plane series)
+# resident-CG solve, the compacted long-tail series, the
+# query-throughput read-plane series — including its reader-scaling
+# "readers-N" variants — and the version-keyed memo-cache hit series)
 STAGED_MARKERS = (
     "staged", "resident", "session", "index-list", "compacted",
-    "query-throughput",
+    "query-throughput", "readers-", "cache-hit",
 )
 
 DEFAULT_MAX_REGRESS = 0.10
