@@ -10,12 +10,15 @@
 #   1. cargo build --release
 #   2. cargo test -q                      (tier-1; artifact tests need `make artifacts`)
 #   3. cargo clippy --all-targets -- -D warnings
-#   4. cargo bench --bench micro -- --json BENCH_micro.json
-#   5. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
+#   4. durable-artifact round trip: save -> restore -> replay through the
+#      release CLI (replay exits nonzero if the rebuild diverges bitwise)
+#   5. cargo bench --bench micro -- --json BENCH_micro.json
+#   6. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
 #      snapshot (tools/bench_diff.py) — fails on >10% mean regression of
 #      the staged paths (incl. the index-list SGD, resident-CG,
-#      compacted long-tail, query-throughput, reader-scaling, and
-#      memo-cache-hit series; presence of those series is asserted)
+#      compacted long-tail, query-throughput, reader-scaling,
+#      memo-cache-hit, artifact-restore, and checkpoint-save series;
+#      presence of those series is asserted)
 # then asserts the bench JSON was produced, so upload/download-count
 # regressions (the staging discipline of rust/docs/PERFORMANCE.md) fail
 # loudly in review instead of silently drifting.
@@ -66,6 +69,14 @@ cargo test -q
 echo "== ci: cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== ci: durable artifact round trip (save -> restore -> replay) =="
+ci_store="$(mktemp -d /tmp/deltagrad-ci-store.XXXXXX)"
+trap 'rm -rf "$ci_store"' EXIT
+./target/release/deltagrad save --model small --t 40 --commits 2 --store "$ci_store"
+ci_art="$(ls "$ci_store"/*.dgar | head -n1)"
+./target/release/deltagrad restore --path "$ci_art"
+./target/release/deltagrad replay --path "$ci_art"
+
 echo "== ci: cargo bench --bench micro -- --json BENCH_micro.json =="
 rm -f BENCH_micro.json # a stale file must not satisfy the check below
 cargo bench --bench micro -- --json BENCH_micro.json
@@ -79,7 +90,8 @@ fi
 # or refactor that silently drops them would leave the bench-diff gate
 # comparing nothing
 for series in "index-list" "resident state" "compacted tail" "segmented tail" \
-              "query-throughput" "query-throughput-readers" "cache-hit"; do
+              "query-throughput" "query-throughput-readers" "cache-hit" \
+              "session restore" "checkpoint-overhead" "retrain-from-recipe"; do
     if ! grep -q "$series" BENCH_micro.json; then
         echo "ci.sh FAIL: bench series \"$series\" missing from BENCH_micro.json" >&2
         exit 1

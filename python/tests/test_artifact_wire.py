@@ -1,0 +1,546 @@
+"""Property tests for the durable-artifact wire format (rust/src/session/
+artifact.rs), transliterated byte for byte.
+
+The Rust side cannot run under pytest, so this file pins the format
+spec itself: a faithful pure-python encoder/decoder pair for the DGAR
+container (header framing, FNV-1a content hash, little-endian
+length-prefixed primitives, the recursive edit codec, and the decoder's
+structural cross-checks).  Any Rust-side change that breaks these
+properties is a wire-format break and must bump FORMAT_VERSION.
+"""
+
+import random
+import struct
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+MAGIC = b"DGAR"
+FORMAT_VERSION = 1
+HEADER_LEN = 24
+FNV_OFFSET = 0xCBF2_9CE4_8422_2325
+FNV_PRIME = 0x100_0000_01B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+class WireError(Exception):
+    """Typed decode failure; `kind` mirrors the Rust ArtifactError variant."""
+
+    def __init__(self, kind, detail=""):
+        super().__init__(f"{kind}: {detail}" if detail else kind)
+        self.kind = kind
+
+
+# --- writer (mirrors the put_* helpers) --------------------------------
+
+
+def put_u32(b, v):
+    b += struct.pack("<I", v)
+
+
+def put_u64(b, v):
+    b += struct.pack("<Q", v)
+
+
+def put_f32(b, v):
+    b += struct.pack("<f", v)
+
+
+def put_f64(b, v):
+    b += struct.pack("<d", v)
+
+
+def put_str(b, s):
+    raw = s.encode("utf-8")
+    put_u64(b, len(raw))
+    b += raw
+
+
+def put_opt_u64(b, v):
+    if v is None:
+        b.append(0)
+    else:
+        b.append(1)
+        put_u64(b, v)
+
+
+def put_f32s(b, v):
+    put_u64(b, len(v))
+    for x in v:
+        put_f32(b, x)
+
+
+def put_u32s(b, v):
+    put_u64(b, len(v))
+    for x in v:
+        put_u32(b, x)
+
+
+def put_u64s(b, v):
+    put_u64(b, len(v))
+    for x in v:
+        put_u64(b, x)
+
+
+def put_dataset(b, ds):
+    put_u64(b, ds["da"])
+    put_u64(b, ds["k"])
+    put_u64(b, ds["n"])
+    put_f32s(b, ds["x"])
+    put_u32s(b, ds["y"])
+
+
+def put_hp(b, hp):
+    put_u64(b, hp["t"])
+    put_u64(b, hp["t0"])
+    put_u64(b, hp["j0"])
+    put_u64(b, hp["m"])
+    put_f32(b, hp["lr"])
+    if hp["lr2"] is None:
+        b.append(0)
+    else:
+        b.append(1)
+        put_u64(b, hp["lr2"][0])
+        put_f32(b, hp["lr2"][1])
+    put_u64(b, hp["batch"])
+    put_f32(b, hp["curvature_min"])
+
+
+def put_transfers(b, t):
+    for key in ("uploads", "upload_floats", "idx_uploads", "idx_scalars",
+                "execs", "downloads", "download_floats"):
+        put_u64(b, t[key])
+
+
+def put_edit(b, e):
+    tag = e[0]
+    if tag == "delete":
+        b.append(0)
+        put_u64s(b, e[1])
+    elif tag == "add":
+        b.append(1)
+        put_dataset(b, e[1])
+    else:
+        assert tag == "group"
+        b.append(2)
+        put_u64(b, len(e[1]))
+        for sub in e[1]:
+            put_edit(b, sub)
+
+
+def canonical_bytes(a) -> bytes:
+    b = bytearray()
+    put_str(b, a["recipe"]["model"])
+    put_u64(b, a["recipe"]["seed"])
+    put_opt_u64(b, a["recipe"]["n_train"])
+    put_opt_u64(b, a["recipe"]["n_test"])
+    put_hp(b, a["recipe"]["hp"])
+    put_u64(b, a["recipe"]["compact_watermark"])
+    put_dataset(b, a["base"])
+    put_dataset(b, a["test"])
+    put_f32s(b, a["w"])
+    put_u64(b, a["version"])
+    put_f64(b, a["train_seconds"])
+    put_u64(b, len(a["ws"]))
+    for w in a["ws"]:
+        put_f32s(b, w)
+    put_u64(b, len(a["gs"]))
+    for g in a["gs"]:
+        put_f32s(b, g)
+    put_u64(b, len(a["batches"]))
+    for batch in a["batches"]:
+        put_u64s(b, batch)
+    put_u64(b, a["n_effective"])
+    put_u64s(b, a["removed"])
+    put_dataset(b, a["added"])
+    put_u64s(b, a["added_removed"])
+    put_u64(b, a["tail_compact_n"])
+    put_u64s(b, a["tail_segments"])
+    put_u64(b, len(a["edits"]))
+    for e in a["edits"]:
+        put_edit(b, e)
+    st_ = a["stats"]
+    for key in ("previews", "commits", "rows_deleted", "rows_added",
+                "exact_iters", "approx_iters", "fallback_iters",
+                "row_cache_hits", "row_cache_misses"):
+        put_u64(b, st_[key])
+    put_transfers(b, st_["preview_transfers"])
+    put_transfers(b, st_["commit_transfers"])
+    put_f64(b, st_["seconds"])
+    return bytes(b)
+
+
+def encode(a) -> bytes:
+    canon = canonical_bytes(a)
+    b = bytearray(MAGIC)
+    put_u32(b, FORMAT_VERSION)
+    put_u64(b, fnv1a(canon))
+    put_u64(b, len(canon))
+    b += canon
+    return bytes(b)
+
+
+# --- reader (mirrors struct Rd + Artifact::decode) ---------------------
+
+MAX_EDIT_DEPTH = 64
+
+
+class Rd:
+    def __init__(self, b):
+        self.b = b
+        self.pos = 0
+
+    def remaining(self):
+        return len(self.b) - self.pos
+
+    def take(self, n):
+        if self.remaining() < n:
+            raise WireError("Truncated")
+        s = self.b[self.pos:self.pos + n]
+        self.pos += n
+        return s
+
+    def get_u8(self):
+        return self.take(1)[0]
+
+    def get_u32(self):
+        return struct.unpack("<I", self.take(4))[0]
+
+    def get_u64(self):
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def get_f32(self):
+        return struct.unpack("<f", self.take(4))[0]
+
+    def get_f64(self):
+        return struct.unpack("<d", self.take(8))[0]
+
+    def get_count(self, elem_bytes):
+        # forged giant counts must fail before any allocation
+        n = self.get_u64()
+        if n * elem_bytes > self.remaining():
+            raise WireError("Truncated")
+        return n
+
+    def get_str(self):
+        n = self.get_count(1)
+        try:
+            return self.take(n).decode("utf-8")
+        except UnicodeDecodeError:
+            raise WireError("Malformed", "bad utf-8") from None
+
+    def get_opt_u64(self):
+        tag = self.get_u8()
+        if tag == 0:
+            return None
+        if tag == 1:
+            return self.get_u64()
+        raise WireError("Malformed", "bad option tag")
+
+    def get_f32s(self):
+        n = self.get_count(4)
+        return [self.get_f32() for _ in range(n)]
+
+    def get_u32s(self):
+        n = self.get_count(4)
+        return [self.get_u32() for _ in range(n)]
+
+    def get_u64s(self):
+        n = self.get_count(8)
+        return [self.get_u64() for _ in range(n)]
+
+    def get_dataset(self):
+        da, k, n = self.get_u64(), self.get_u64(), self.get_u64()
+        if da == 0 or k == 0:
+            raise WireError("Malformed", "degenerate dataset shape")
+        x = self.get_f32s()
+        y = self.get_u32s()
+        if len(x) != n * da or len(y) != n:
+            raise WireError("Malformed", "dataset length mismatch")
+        if any(label >= k for label in y):
+            raise WireError("Malformed", "label out of range")
+        return {"da": da, "k": k, "n": n, "x": x, "y": y}
+
+    def get_hp(self):
+        hp = {"t": self.get_u64(), "t0": self.get_u64(), "j0": self.get_u64(),
+              "m": self.get_u64(), "lr": self.get_f32()}
+        tag = self.get_u8()
+        if tag == 0:
+            hp["lr2"] = None
+        elif tag == 1:
+            hp["lr2"] = (self.get_u64(), self.get_f32())
+        else:
+            raise WireError("Malformed", "bad option tag")
+        hp["batch"] = self.get_u64()
+        hp["curvature_min"] = self.get_f32()
+        return hp
+
+    def get_transfers(self):
+        return {key: self.get_u64() for key in (
+            "uploads", "upload_floats", "idx_uploads", "idx_scalars",
+            "execs", "downloads", "download_floats")}
+
+    def get_edit(self, depth):
+        if depth > MAX_EDIT_DEPTH:
+            raise WireError("Malformed", "edit nesting too deep")
+        tag = self.get_u8()
+        if tag == 0:
+            return ("delete", self.get_u64s())
+        if tag == 1:
+            return ("add", self.get_dataset())
+        if tag == 2:
+            n = self.get_count(1)
+            return ("group", [self.get_edit(depth + 1) for _ in range(n)])
+        raise WireError("Malformed", "bad edit tag")
+
+
+def check_header(bytes_):
+    if len(bytes_) < 4:
+        raise WireError("Truncated")
+    if bytes_[0:4] != MAGIC:
+        raise WireError("BadMagic")
+    if len(bytes_) < HEADER_LEN:
+        raise WireError("Truncated")
+    ver = struct.unpack("<I", bytes_[4:8])[0]
+    if ver != FORMAT_VERSION:
+        raise WireError("UnsupportedVersion", str(ver))
+    canon_len = struct.unpack("<Q", bytes_[16:24])[0]
+    body = bytes_[HEADER_LEN:]
+    if len(body) < canon_len:
+        raise WireError("Truncated")
+    if len(body) > canon_len:
+        raise WireError("Malformed", "trailing bytes after canonical section")
+    return body
+
+
+def decode(bytes_):
+    canon = check_header(bytes_)
+    expected = struct.unpack("<Q", bytes_[8:16])[0]
+    actual = fnv1a(canon)
+    if actual != expected:
+        raise WireError("HashMismatch", f"{expected:016x} != {actual:016x}")
+    r = Rd(canon)
+    a = {"recipe": {"model": r.get_str(), "seed": r.get_u64(),
+                    "n_train": r.get_opt_u64(), "n_test": r.get_opt_u64(),
+                    "hp": r.get_hp(), "compact_watermark": r.get_u64()}}
+    a["base"] = r.get_dataset()
+    a["test"] = r.get_dataset()
+    a["w"] = r.get_f32s()
+    a["version"] = r.get_u64()
+    a["train_seconds"] = r.get_f64()
+    a["ws"] = [r.get_f32s() for _ in range(r.get_count(8))]
+    a["gs"] = [r.get_f32s() for _ in range(r.get_count(8))]
+    a["batches"] = [r.get_u64s() for _ in range(r.get_count(8))]
+    a["n_effective"] = r.get_u64()
+    a["removed"] = r.get_u64s()
+    a["added"] = r.get_dataset()
+    a["added_removed"] = r.get_u64s()
+    a["tail_compact_n"] = r.get_u64()
+    a["tail_segments"] = r.get_u64s()
+    a["edits"] = [r.get_edit(0) for _ in range(r.get_count(1))]
+    stats = {key: r.get_u64() for key in (
+        "previews", "commits", "rows_deleted", "rows_added", "exact_iters",
+        "approx_iters", "fallback_iters", "row_cache_hits", "row_cache_misses")}
+    stats["preview_transfers"] = r.get_transfers()
+    stats["commit_transfers"] = r.get_transfers()
+    stats["seconds"] = r.get_f64()
+    a["stats"] = stats
+    if r.remaining() != 0:
+        raise WireError("Malformed", "trailing bytes in canonical section")
+    # structural cross-checks, same order as the Rust decoder
+    if len(a["ws"]) != a["recipe"]["hp"]["t"] + 1 or \
+            len(a["gs"]) != a["recipe"]["hp"]["t"]:
+        raise WireError("Malformed", "trajectory/hp length mismatch")
+    if a["removed"] and a["removed"][-1] >= a["base"]["n"]:
+        raise WireError("Malformed", "removed index out of range")
+    if a["added_removed"] and a["added_removed"][-1] >= a["added"]["n"]:
+        raise WireError("Malformed", "added_removed index out of range")
+    if a["tail_compact_n"] + sum(a["tail_segments"]) != a["added"]["n"]:
+        raise WireError("Malformed", "tail layout does not cover the added rows")
+    if a["base"]["da"] != a["added"]["da"] or a["base"]["k"] != a["added"]["k"]:
+        raise WireError("Malformed", "added tail shape mismatch")
+    return a
+
+
+# --- random but structurally consistent artifacts ----------------------
+
+
+def make_artifact(seed):
+    r = random.Random(seed)
+
+    def f32(lo=-4.0, hi=4.0):
+        # round through binary32 so encode/decode round-trips exactly
+        return struct.unpack("<f", struct.pack("<f", r.uniform(lo, hi)))[0]
+
+    t = r.randint(1, 3)
+    p = r.randint(1, 6)
+    da, k = r.randint(1, 4), r.randint(1, 3)
+
+    def dataset(n):
+        return {"da": da, "k": k, "n": n,
+                "x": [f32() for _ in range(n * da)],
+                "y": [r.randrange(k) for _ in range(n)]}
+
+    def subset(n):
+        return sorted(r.sample(range(n), r.randint(0, n)))
+
+    def edit(depth):
+        kind = r.randint(0, 2 if depth < 2 else 1)
+        if kind == 0:
+            return ("delete", sorted(r.sample(range(64), r.randint(0, 4))))
+        if kind == 1:
+            return ("add", dataset(r.randint(1, 3)))
+        return ("group", [edit(depth + 1) for _ in range(r.randint(0, 3))])
+
+    def transfers():
+        return {key: r.randrange(1 << 32) for key in (
+            "uploads", "upload_floats", "idx_uploads", "idx_scalars",
+            "execs", "downloads", "download_floats")}
+
+    base = dataset(r.randint(1, 6))
+    added = dataset(r.randint(0, 5))
+    # partition the added rows into a compacted prefix + segments
+    tail_compact_n = r.randint(0, added["n"])
+    tail_segments = []
+    rest = added["n"] - tail_compact_n
+    while rest > 0:
+        seg = r.randint(1, rest)
+        tail_segments.append(seg)
+        rest -= seg
+    return {
+        "recipe": {
+            "model": r.choice(["small", "mnist", "rcv1", "µ-model"]),
+            "seed": r.randrange(1 << 64),
+            "n_train": r.choice([None, r.randrange(1 << 20)]),
+            "n_test": r.choice([None, r.randrange(1 << 20)]),
+            "hp": {"t": t, "t0": r.randint(0, t), "j0": r.randint(1, 8),
+                   "m": r.randint(1, 4), "lr": f32(0.001, 1.0),
+                   "lr2": r.choice([None, (r.randint(0, t), f32(0.001, 1.0))]),
+                   "batch": r.randrange(1 << 16),
+                   "curvature_min": f32(0.0, 0.1)},
+            "compact_watermark": r.randrange(1 << 32),
+        },
+        "base": base,
+        "test": dataset(r.randint(1, 4)),
+        "w": [f32() for _ in range(p)],
+        "version": r.randrange(1 << 32),
+        "train_seconds": r.uniform(0.0, 1e4),
+        "ws": [[f32() for _ in range(p)] for _ in range(t + 1)],
+        "gs": [[f32() for _ in range(p)] for _ in range(t)],
+        "batches": [sorted(r.sample(range(base["n"]), r.randint(0, base["n"])))
+                    for _ in range(r.randint(0, t))],
+        "n_effective": r.randrange(1 << 32),
+        "removed": subset(base["n"]),
+        "added": added,
+        "added_removed": subset(added["n"]) if added["n"] else [],
+        "tail_compact_n": tail_compact_n,
+        "tail_segments": tail_segments,
+        "edits": [edit(0) for _ in range(r.randint(0, 4))],
+        "stats": {"previews": r.randrange(1 << 32), "commits": r.randrange(1 << 32),
+                  "rows_deleted": r.randrange(1 << 32), "rows_added": r.randrange(1 << 32),
+                  "exact_iters": r.randrange(1 << 32), "approx_iters": r.randrange(1 << 32),
+                  "fallback_iters": r.randrange(1 << 32),
+                  "row_cache_hits": r.randrange(1 << 32),
+                  "row_cache_misses": r.randrange(1 << 32),
+                  "preview_transfers": transfers(),
+                  "commit_transfers": transfers(),
+                  "seconds": r.uniform(0.0, 1e4)},
+    }
+
+
+# --- properties --------------------------------------------------------
+
+
+class TestWireFormat:
+    def test_fnv1a_reference_vectors(self):
+        # same vectors the Rust unit test pins — the two implementations
+        # must address identical bytes identically
+        assert fnv1a(b"") == 0xCBF2_9CE4_8422_2325
+        assert fnv1a(b"a") == 0xAF63_DC4C_8601_EC8C
+        assert fnv1a(b"foobar") == 0x8594_4171_F739_67E8
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_encode_decode_round_trips(self, seed):
+        a = make_artifact(seed)
+        assert decode(encode(a)) == a
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), flip=st.integers(0, 2**31 - 1))
+    def test_hash_covers_every_canonical_byte(self, seed, flip):
+        wire = bytearray(encode(make_artifact(seed)))
+        i = HEADER_LEN + flip % (len(wire) - HEADER_LEN)
+        wire[i] ^= 1 << (flip % 8)
+        with pytest.raises(WireError) as e:
+            decode(bytes(wire))
+        assert e.value.kind == "HashMismatch"
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), cut=st.integers(0, 2**31 - 1))
+    def test_truncation_at_any_prefix_is_typed(self, seed, cut):
+        wire = encode(make_artifact(seed))
+        with pytest.raises(WireError) as e:
+            decode(wire[:cut % len(wire)])
+        assert e.value.kind == "Truncated"
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_bad_magic_and_future_version_are_typed(self, seed):
+        wire = bytearray(encode(make_artifact(seed)))
+        foreign = bytearray(wire)
+        foreign[0] = ord("X")
+        with pytest.raises(WireError) as e:
+            decode(bytes(foreign))
+        assert e.value.kind == "BadMagic"
+        future = bytearray(wire)
+        future[4:8] = struct.pack("<I", FORMAT_VERSION + 1)
+        with pytest.raises(WireError) as e:
+            decode(bytes(future))
+        assert e.value.kind == "UnsupportedVersion"
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_trailing_bytes_are_rejected(self, seed):
+        wire = encode(make_artifact(seed))
+        with pytest.raises(WireError) as e:
+            decode(wire + b"\x00")
+        assert e.value.kind == "Malformed"
+
+    def test_forged_giant_count_fails_without_allocating(self):
+        # a canonical section whose first field claims a 2^63-byte model
+        # name must die in get_count's bounds check, not in an allocation
+        canon = bytearray()
+        put_u64(canon, 1 << 63)
+        canon += b"tiny"
+        wire = bytearray(MAGIC)
+        put_u32(wire, FORMAT_VERSION)
+        put_u64(wire, fnv1a(bytes(canon)))
+        put_u64(wire, len(canon))
+        wire += canon
+        with pytest.raises(WireError) as e:
+            decode(bytes(wire))
+        assert e.value.kind == "Truncated"
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_content_hash_is_deterministic_and_input_sensitive(self, seed):
+        a = make_artifact(seed)
+        h1 = fnv1a(canonical_bytes(a))
+        h2 = fnv1a(canonical_bytes(a))
+        assert h1 == h2
+        a["version"] += 1
+        assert fnv1a(canonical_bytes(a)) != h1
+
+    def test_inconsistent_tail_layout_is_malformed(self):
+        a = make_artifact(5)
+        a["tail_compact_n"] += 1
+        with pytest.raises(WireError) as e:
+            decode(encode(a))
+        assert e.value.kind == "Malformed"

@@ -85,6 +85,14 @@ class TestCompare:
         assert bench_diff.is_staged(
             "query-throughput loss (memo cache-hit)")
         assert not bench_diff.is_staged("proofreaders warmup")  # no bare "readers"
+        # the durable-artifact series: warm restore and checkpoint save
+        # gate; the recipe-retrain contrast baseline does not (markers
+        # are case-sensitive, so "SessionBuilder" is not "session")
+        assert bench_diff.is_staged("session restore (artifact re-stage)")
+        assert bench_diff.is_staged(
+            "checkpoint-overhead save_artifact (content-addressed)")
+        assert not bench_diff.is_staged(
+            "retrain-from-recipe (full SessionBuilder train)")
 
     def test_reader_scaling_series_gates(self):
         name = "query-throughput-readers-4 loss (replica pool)"

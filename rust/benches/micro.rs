@@ -436,6 +436,8 @@ fn main() -> anyhow::Result<()> {
                 },
                 readers: r,
                 query_cache: 0,
+                checkpoint_every: 0,
+                checkpoint_dir: None,
             })?;
             let name = format!("query-throughput-readers-{r} loss (replica pool)");
             // each rep streams one commit through the writer while the
@@ -485,6 +487,8 @@ fn main() -> anyhow::Result<()> {
             },
             readers: 0,
             query_cache: 8,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
         })?;
         // warm the entry: the first Loss at this version executes and
         // fills the cache; every benched rep is then a pure O(1) hit
@@ -497,6 +501,73 @@ fn main() -> anyhow::Result<()> {
                 .map_err(|e| anyhow::anyhow!("query failed: {e:?}"))
         })?;
         svc.shutdown()?;
+    }
+
+    if want("restore-vs-retrain") {
+        println!("== durable artifact restore vs recipe retrain (small, T=40) ==");
+        let spec = eng.spec("small")?.clone();
+        let (ds, test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        let mut session = SessionBuilder::new("small")
+            .hyper_params(hp.clone())
+            .datasets(ds.clone(), test.clone())
+            .build_in(&mut eng)?;
+        // two committed edits so the artifact carries a real edit log,
+        // a removal mask, and a staged tail — the state a service
+        // checkpoint would hold
+        session.commit(Edit::delete_row(0))?;
+        session.commit(Edit::Add(synth::addition_rows(&spec, 300, 1)))?;
+        let art_path = std::env::temp_dir()
+            .join(format!("deltagrad-bench-restore-{}.dgar", std::process::id()));
+        let _ = std::fs::remove_file(&art_path);
+        session.save_artifact(&art_path)?;
+        let rt = eng.runtime();
+        let out = &mut results;
+        // the before-shape: what a replica pays when it rebuilds from
+        // the recipe — a full T-iteration training run
+        bench(out, &rt, "retrain-from-recipe (full SessionBuilder train)", 1, 3, || {
+            SessionBuilder::new("small")
+                .hyper_params(hp.clone())
+                .datasets(ds.clone(), test.clone())
+                .build_in(&mut eng)
+                .map(|_| ())
+        })?;
+        // the after-shape: deserialize + re-stage only; zero training
+        // iterations, zero gradient downloads
+        bench(out, &rt, "session restore (artifact re-stage)", 1, 5, || {
+            deltagrad::session::artifact::restore_in(&art_path, &mut eng).map(|_| ())
+        })?;
+        let _ = std::fs::remove_file(&art_path);
+    }
+
+    if want("checkpoint-overhead") {
+        println!("== checkpoint save overhead (small, T=40, 2 commits) ==");
+        let spec = eng.spec("small")?.clone();
+        let (ds, test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        let mut session = SessionBuilder::new("small")
+            .hyper_params(hp)
+            .datasets(ds, test)
+            .build_in(&mut eng)?;
+        session.commit(Edit::delete_row(0))?;
+        session.commit(Edit::delete_row(1))?;
+        let rt = eng.runtime();
+        // a fresh path per rep so every rep pays the full serialize +
+        // hash + write (a same-hash re-save short-circuits to a header
+        // peek); the unlink rides inside the timed region but is tiny
+        let mut seq = 0u64;
+        bench(&mut results, &rt, "checkpoint-overhead save_artifact (content-addressed)", 1, 10, || {
+            let p = std::env::temp_dir()
+                .join(format!("deltagrad-bench-ckpt-{}-{seq}.dgar", std::process::id()));
+            seq += 1;
+            session.save_artifact(&p)?;
+            std::fs::remove_file(&p)?;
+            Ok(())
+        })?;
     }
 
     if want("iter") {

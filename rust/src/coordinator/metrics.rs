@@ -59,6 +59,8 @@ pub struct Metrics {
     /// committed deltas replayed across all replicas (R× commits when
     /// every replica is current)
     pub reader_replays: u64,
+    /// replicas that came up by artifact restore (vs recipe retrain)
+    pub reader_restores: u64,
     /// lowest version any replica has replayed to
     pub replica_min_version: u64,
     /// latest committed version minus `replica_min_version` (0 when
@@ -70,6 +72,11 @@ pub struct Metrics {
     pub cache_entries: u64,
     /// configured capacity (0 = cache disabled)
     pub cache_capacity: u64,
+    // --- durability (worker-side) --------------------------------------
+    /// artifact checkpoints written (`ServiceConfig::checkpoint_every`)
+    pub checkpoints: u64,
+    /// wall-clock seconds spent saving checkpoints
+    pub checkpoint_seconds: f64,
 }
 
 impl Metrics {
@@ -114,6 +121,12 @@ impl Metrics {
         self.execs += t.execs;
         self.downloads += t.downloads;
         self.download_floats += t.download_floats;
+    }
+
+    /// Record one artifact checkpoint written by the worker.
+    pub fn record_checkpoint(&mut self, seconds: f64) {
+        self.checkpoints += 1;
+        self.checkpoint_seconds += seconds;
     }
 
     /// Record one served read query: its kind, end-to-end latency
@@ -257,10 +270,11 @@ impl Metrics {
         }
         if self.readers > 0 {
             s.push_str(&format!(
-                " readers={} reader_queries={} replays={} min_version={} lag={}",
+                " readers={} reader_queries={} replays={} restores={} min_version={} lag={}",
                 self.readers,
                 self.reader_queries,
                 self.reader_replays,
+                self.reader_restores,
                 self.replica_min_version,
                 self.replica_lag,
             ));
@@ -269,6 +283,12 @@ impl Metrics {
             s.push_str(&format!(
                 " cache(hits={} misses={} entries={}/{})",
                 self.cache_hits, self.cache_misses, self.cache_entries, self.cache_capacity,
+            ));
+        }
+        if self.checkpoints > 0 {
+            s.push_str(&format!(
+                " checkpoints={} ({:.3}s)",
+                self.checkpoints, self.checkpoint_seconds,
             ));
         }
         s
@@ -374,6 +394,7 @@ mod tests {
         m.readers = 2;
         m.reader_queries = 7;
         m.reader_replays = 10;
+        m.reader_restores = 2;
         m.replica_min_version = 5;
         m.replica_lag = 1;
         m.cache_capacity = 64;
@@ -383,8 +404,19 @@ mod tests {
         let r = m.render();
         assert!(r.contains("readers=2"), "{r}");
         assert!(r.contains("reader_queries=7"), "{r}");
+        assert!(r.contains("restores=2"), "{r}");
         assert!(r.contains("lag=1"), "{r}");
         assert!(r.contains("cache(hits=3 misses=4 entries=4/64)"), "{r}");
+    }
+
+    #[test]
+    fn checkpoint_section_renders_only_when_written() {
+        let mut m = Metrics::new();
+        assert!(!m.render().contains("checkpoints="));
+        m.record_checkpoint(0.25);
+        m.record_checkpoint(0.25);
+        let r = m.render();
+        assert!(r.contains("checkpoints=2 (0.500s)"), "{r}");
     }
 
     #[test]

@@ -2,16 +2,24 @@
 //! full replica [`Session`], serving queries WHILE the writer commits.
 //!
 //! PJRT handles are `Rc` and not `Send`, so a replica cannot be moved —
-//! each reader reconstructs its session from the same deterministic
-//! recipe the writer used (`SessionBuilder`: model, seed, sizes,
-//! hyperparameters — synthetic data and full-batch GD training are
-//! bitwise-reproducible) and then stays current by REPLAYING every
-//! committed [`Edit`] the writer publishes as a compact
-//! [`CommitDelta`] over its own channel. Replay is the existing O(edit)
-//! commit path (Algorithm 3 over the delta rows), so keeping R replicas
-//! current costs R× the edit size, never R× the dataset — and replica
-//! state is bitwise-deterministic against the writer (pinned by
-//! tests/service.rs).
+//! each reader reconstructs its session on its own thread and then
+//! stays current by REPLAYING every committed [`Edit`] the writer
+//! publishes as a compact [`CommitDelta`] over its own channel. Replay
+//! is the existing O(edit) commit path (Algorithm 3 over the delta
+//! rows), so keeping R replicas current costs R× the edit size, never
+//! R× the dataset — and replica state is bitwise-deterministic against
+//! the writer (pinned by tests/service.rs).
+//!
+//! Replica construction is a handshake: every reader buffers commands
+//! until the writer's [`ReaderCmd::Init`] arrives, carrying the path of
+//! the session artifact the writer saved right after its own build.
+//! The reader warm-restores from that artifact
+//! ([`SessionBuilder::restore_from`]: deserialize + re-stage, zero
+//! training iterations) — restore is bitwise against the writer's
+//! state, so the replica contract is unchanged. Only if the artifact is
+//! missing or unreadable does the reader fall back to retraining from
+//! the deterministic [`ReaderSpawn`] recipe (the pre-artifact path,
+//! also bitwise).
 //!
 //! Ordering contract: the writer publishes each delta to EVERY reader
 //! BEFORE sending the commit's `UpdateReply`, and each reader channel is
@@ -23,6 +31,7 @@
 //! observed: per-client reply versions stay monotone and always name a
 //! committed version, exactly the R=0 contract.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -32,7 +41,7 @@ use anyhow::Result;
 
 use super::service::Rejected;
 use crate::config::HyperParams;
-use crate::session::{Edit, Query, QueryCache, QueryReply, SessionBuilder};
+use crate::session::{Edit, Query, QueryCache, QueryReply, Session, SessionBuilder};
 
 /// One committed edit, as published by the writer to every reader: the
 /// replica applies `edit` through its own `Session::commit` and must
@@ -44,6 +53,11 @@ pub struct CommitDelta {
 }
 
 pub(crate) enum ReaderCmd {
+    /// the writer's construction handshake: restore the replica from
+    /// this artifact (None = no artifact available, retrain from the
+    /// recipe). Sent exactly once, before any Delta; commands that race
+    /// ahead of it are buffered by the reader.
+    Init(Option<PathBuf>),
     Delta(CommitDelta),
     Query(Query, Sender<Result<QueryReply, Rejected>>),
     Shutdown,
@@ -68,6 +82,8 @@ struct Reader {
     inflight: Arc<AtomicUsize>,
     served: Arc<AtomicU64>,
     replays: Arc<AtomicU64>,
+    /// 1 if this replica was built by artifact restore (0 = recipe retrain)
+    restored: Arc<AtomicU64>,
     join: Option<JoinHandle<()>>,
 }
 
@@ -97,23 +113,26 @@ impl ReaderPool {
             let inflight = Arc::new(AtomicUsize::new(0));
             let served = Arc::new(AtomicU64::new(0));
             let replays = Arc::new(AtomicU64::new(0));
+            let restored = Arc::new(AtomicU64::new(0));
             let spec_i = spec.clone();
-            let (v2, f2, s2, r2, c2) = (
+            let (v2, f2, s2, r2, e2, c2) = (
                 version.clone(),
                 inflight.clone(),
                 served.clone(),
                 replays.clone(),
+                restored.clone(),
                 cache.clone(),
             );
             let join = std::thread::Builder::new()
                 .name(format!("deltagrad-{}-reader{i}", spec.model))
-                .spawn(move || reader_main(spec_i, rx, v2, f2, s2, r2, c2))?;
+                .spawn(move || reader_main(spec_i, rx, v2, f2, s2, r2, e2, c2))?;
             readers.push(Reader {
                 tx,
                 version,
                 inflight,
                 served,
                 replays,
+                restored,
                 join: Some(join),
             });
         }
@@ -190,6 +209,15 @@ impl ReaderPool {
             .sum()
     }
 
+    /// Replicas that came up by artifact restore instead of retraining
+    /// (each reader contributes 0 or 1).
+    pub fn total_restores(&self) -> u64 {
+        self.readers
+            .iter()
+            .map(|r| r.restored.load(Ordering::SeqCst))
+            .sum()
+    }
+
     /// Lowest replayed version across the pool (0 for an empty pool):
     /// `latest committed − min_version` is the pool's replica lag.
     pub fn min_version(&self) -> u64 {
@@ -219,6 +247,26 @@ impl Drop for ReaderPool {
     }
 }
 
+/// Retrain-from-recipe fallback (and the path for writers that could
+/// not produce a spawn artifact).
+fn build_recipe(spec: &ReaderSpawn) -> Result<Session> {
+    SessionBuilder::new(&spec.model)
+        .seed(spec.seed)
+        .n_train(spec.n_train)
+        .n_test(spec.n_test)
+        .hyper_params(spec.hp.clone())
+        .build()
+}
+
+/// What one command did to the reader's serve loop.
+enum Step {
+    Continue,
+    Shutdown,
+    /// replica replay failed — the session no longer matches the writer
+    Diverged(String),
+}
+
+#[allow(clippy::too_many_arguments)]
 fn reader_main(
     spec: ReaderSpawn,
     rx: Receiver<ReaderCmd>,
@@ -226,59 +274,125 @@ fn reader_main(
     inflight: Arc<AtomicUsize>,
     served: Arc<AtomicU64>,
     replays: Arc<AtomicU64>,
+    restored: Arc<AtomicU64>,
     cache: Arc<Mutex<QueryCache>>,
 ) {
-    // the replica: same deterministic recipe as the writer's session
-    let built = SessionBuilder::new(&spec.model)
-        .seed(spec.seed)
-        .n_train(spec.n_train)
-        .n_test(spec.n_test)
-        .hyper_params(spec.hp)
-        .build();
+    // phase 1 — the construction handshake: the writer sends Init once
+    // its own session exists (and its spawn artifact is on disk).
+    // Commands that race ahead of Init are buffered, so dispatch is
+    // valid from the moment the pool spawns.
+    let mut pending: Vec<ReaderCmd> = Vec::new();
+    let init: Option<PathBuf> = loop {
+        match rx.recv() {
+            Ok(ReaderCmd::Init(p)) => break p,
+            Ok(ReaderCmd::Shutdown) => return,
+            Ok(cmd) => pending.push(cmd),
+            Err(_) => return,
+        }
+    };
+    // phase 2 — the replica: warm-restore from the writer's artifact
+    // (deserialize + re-stage, zero training iterations, bitwise against
+    // the writer), falling back to the deterministic recipe retrain if
+    // the artifact is unavailable
+    let built = match &init {
+        Some(path) => match SessionBuilder::restore_from(path) {
+            Ok(s) => {
+                restored.store(1, Ordering::SeqCst);
+                version.store(s.version(), Ordering::SeqCst);
+                Ok(s)
+            }
+            Err(e) => {
+                eprintln!(
+                    "deltagrad reader: artifact restore from {} failed ({e:#}); \
+                     retraining from the recipe",
+                    path.display()
+                );
+                build_recipe(&spec)
+            }
+        },
+        None => build_recipe(&spec),
+    };
     let mut session = match built {
         Ok(s) => s,
         Err(e) => {
             eprintln!("deltagrad reader: replica build failed: {e:#}");
-            reject_all(rx, &inflight, &format!("replica build failed: {e}"));
+            let why = format!("replica build failed: {e}");
+            for cmd in pending {
+                reject_one(cmd, &inflight, &why);
+            }
+            reject_all(rx, &inflight, &why);
             return;
         }
     };
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            ReaderCmd::Delta(d) => match session.commit(d.edit) {
-                Ok(c) => {
-                    debug_assert_eq!(
-                        c.version, d.version,
-                        "replica replay diverged from the writer's version"
-                    );
-                    version.store(c.version, Ordering::SeqCst);
-                    replays.fetch_add(1, Ordering::SeqCst);
-                }
-                Err(e) => {
-                    // the writer committed this exact edit, so a replica
-                    // failure means divergence — refuse to serve stale
-                    // state; dispatch skips dead readers
-                    eprintln!("deltagrad reader: replica replay failed: {e:#}");
-                    reject_all(rx, &inflight, &format!("replica diverged: {e}"));
-                    return;
-                }
-            },
-            ReaderCmd::Query(q, reply) => {
-                let res = session
-                    .query(&q)
-                    .map_err(|e| Rejected::Failed(e.to_string()));
-                if let Ok(rep) = &res {
-                    let mut c = cache.lock().expect("query cache poisoned");
-                    if c.enabled() {
-                        c.insert(&q, rep.clone());
-                    }
-                }
-                served.fetch_add(1, Ordering::SeqCst);
-                inflight.fetch_sub(1, Ordering::SeqCst);
-                let _ = reply.send(res);
+    // phase 3 — serve: first whatever queued behind the handshake, then
+    // the live stream
+    for cmd in pending {
+        match apply(cmd, &mut session, &version, &inflight, &served, &replays, &cache) {
+            Step::Continue => {}
+            Step::Shutdown => return,
+            Step::Diverged(why) => {
+                reject_all(rx, &inflight, &why);
+                return;
             }
-            ReaderCmd::Shutdown => break,
         }
+    }
+    while let Ok(cmd) = rx.recv() {
+        match apply(cmd, &mut session, &version, &inflight, &served, &replays, &cache) {
+            Step::Continue => {}
+            Step::Shutdown => return,
+            Step::Diverged(why) => {
+                reject_all(rx, &inflight, &why);
+                return;
+            }
+        }
+    }
+}
+
+fn apply(
+    cmd: ReaderCmd,
+    session: &mut Session,
+    version: &AtomicU64,
+    inflight: &AtomicUsize,
+    served: &AtomicU64,
+    replays: &AtomicU64,
+    cache: &Mutex<QueryCache>,
+) -> Step {
+    match cmd {
+        ReaderCmd::Init(_) => Step::Continue, // handshake already done
+        ReaderCmd::Delta(d) => match session.commit(d.edit) {
+            Ok(c) => {
+                debug_assert_eq!(
+                    c.version, d.version,
+                    "replica replay diverged from the writer's version"
+                );
+                version.store(c.version, Ordering::SeqCst);
+                replays.fetch_add(1, Ordering::SeqCst);
+                Step::Continue
+            }
+            Err(e) => {
+                // the writer committed this exact edit, so a replica
+                // failure means divergence — refuse to serve stale
+                // state; dispatch skips dead readers
+                eprintln!("deltagrad reader: replica replay failed: {e:#}");
+                Step::Diverged(format!("replica diverged: {e}"))
+            }
+        },
+        ReaderCmd::Query(q, reply) => {
+            let res = session
+                .query(&q)
+                .map_err(|e| Rejected::Failed(e.to_string()));
+            if let Ok(rep) = &res {
+                let mut c = cache.lock().expect("query cache poisoned");
+                if c.enabled() {
+                    c.insert(&q, rep.clone());
+                }
+            }
+            served.fetch_add(1, Ordering::SeqCst);
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            let _ = reply.send(res);
+            Step::Continue
+        }
+        ReaderCmd::Shutdown => Step::Shutdown,
     }
 }
 
@@ -287,13 +401,16 @@ fn reader_main(
 /// and keep the in-flight count honest so pool admission stays open.
 fn reject_all(rx: Receiver<ReaderCmd>, inflight: &AtomicUsize, why: &str) {
     while let Ok(cmd) = rx.recv() {
-        match cmd {
-            ReaderCmd::Query(_, reply) => {
-                inflight.fetch_sub(1, Ordering::SeqCst);
-                let _ = reply.send(Err(Rejected::Failed(why.to_string())));
-            }
-            ReaderCmd::Delta(_) => {}
-            ReaderCmd::Shutdown => break,
+        if matches!(cmd, ReaderCmd::Shutdown) {
+            break;
         }
+        reject_one(cmd, inflight, why);
+    }
+}
+
+fn reject_one(cmd: ReaderCmd, inflight: &AtomicUsize, why: &str) {
+    if let ReaderCmd::Query(_, reply) = cmd {
+        inflight.fetch_sub(1, Ordering::SeqCst);
+        let _ = reply.send(Err(Rejected::Failed(why.to_string())));
     }
 }

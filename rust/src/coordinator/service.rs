@@ -48,7 +48,16 @@
 //! handle in O(1) with ZERO device transfers. Both knobs default off,
 //! keeping the single-threaded byte-budget behavior pinned by the seed
 //! tests.
+//!
+//! Durability rides the same loop: right after its own build the worker
+//! saves a **spawn artifact** and hands its path to every reader
+//! ([`ReaderCmd::Init`]) so replicas warm-restore instead of retraining,
+//! and `checkpoint_every = K` snapshots the session into the
+//! content-addressed artifact store every K commits
+//! ([`artifact::save_to_store`]) — a crashed service warm-restarts from
+//! its latest checkpoint via `SessionBuilder::restore_from`.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -63,7 +72,7 @@ use super::batcher::{
 use super::metrics::Metrics;
 use super::readers::{CommitDelta, ReaderCmd, ReaderPool, ReaderSpawn};
 use crate::config::HyperParams;
-use crate::session::{Edit, Query, QueryCache, QueryReply, SessionBuilder};
+use crate::session::{artifact, Edit, Query, QueryCache, QueryReply, SessionBuilder};
 
 /// What the service sends back for one served edit.
 #[derive(Clone, Debug)]
@@ -138,6 +147,14 @@ pub struct ServiceConfig {
     /// version-keyed query memo cache capacity, in replies. 0 (default)
     /// = disabled; repeated identical queries between commits re-execute.
     pub query_cache: usize,
+    /// checkpoint the session to the artifact store every K commits
+    /// (content-addressed `save_to_store`, non-fatal on failure).
+    /// 0 (default) = no checkpointing.
+    pub checkpoint_every: usize,
+    /// artifact store directory for checkpoints; None = the default
+    /// store ([`artifact::store_dir`]: `$DELTAGRAD_STORE` or
+    /// `.deltagrad/artifacts/`).
+    pub checkpoint_dir: Option<PathBuf>,
 }
 
 /// Client handle to a running service.
@@ -301,6 +318,7 @@ impl ServiceHandle {
         m.readers = self.pool.len() as u64;
         m.reader_queries = self.pool.total_served();
         m.reader_replays = self.pool.total_replays();
+        m.reader_restores = self.pool.total_restores();
         if !self.pool.is_empty() {
             let latest = self.latest.load(Ordering::SeqCst);
             m.replica_min_version = self.pool.min_version();
@@ -358,6 +376,23 @@ struct WorkerShared {
     delta_txs: Vec<Sender<ReaderCmd>>,
 }
 
+/// Best-effort cleanup of the writer's spawn artifact: the file only
+/// exists to hand replicas their initial state, so it is removed when
+/// the worker exits — on ANY path (the guard drops on errors too).
+struct SpawnArtifact(Option<PathBuf>);
+
+impl Drop for SpawnArtifact {
+    fn drop(&mut self) {
+        if let Some(p) = self.0.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Monotone suffix for spawn-artifact temp names (several services can
+/// coexist in one process — the benches and tests do).
+static SPAWN_SEQ: AtomicU64 = AtomicU64::new(0);
+
 fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Result<()> {
     // the service serves commits, which are GD-only (Algorithm-3 cache
     // rewriting) — reject an SGD config before paying for training
@@ -365,12 +400,47 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
         anyhow::bail!("the unlearning service requires a GD config (hp.batch == 0)");
     }
     // --- initialization: one Session owns engine, data, model, staging
-    let mut session = SessionBuilder::new(&cfg.model)
+    let built = SessionBuilder::new(&cfg.model)
         .seed(cfg.seed)
         .n_train(cfg.n_train)
         .n_test(cfg.n_test)
-        .hyper_params(cfg.hp)
-        .build()?;
+        .hyper_params(cfg.hp.clone())
+        .build();
+    let mut session = match built {
+        Ok(s) => s,
+        Err(e) => {
+            // unblock the readers' construction handshake before dying,
+            // so they fall back to the recipe instead of waiting forever
+            for tx in &shared.delta_txs {
+                let _ = tx.send(ReaderCmd::Init(None));
+            }
+            return Err(e);
+        }
+    };
+    // hand every replica the writer's own state: save one spawn
+    // artifact and point the readers at it (Init). A reader restores in
+    // re-stage time instead of retraining; if the save fails, Init(None)
+    // sends them down the recipe-retrain fallback.
+    let spawn_artifact = SpawnArtifact(if shared.delta_txs.is_empty() {
+        None
+    } else {
+        let path = std::env::temp_dir().join(format!(
+            "deltagrad-spawn-{}-{}-{}.dgar",
+            cfg.model,
+            std::process::id(),
+            SPAWN_SEQ.fetch_add(1, Ordering::SeqCst),
+        ));
+        match artifact::save(&session, &path) {
+            Ok(rep) => Some(rep.path),
+            Err(e) => {
+                eprintln!("deltagrad service: spawn artifact save failed: {e:#}");
+                None
+            }
+        }
+    });
+    for tx in &shared.delta_txs {
+        let _ = tx.send(ReaderCmd::Init(spawn_artifact.0.clone()));
+    }
     let mut metrics = Metrics::new();
 
     // --- serve both planes on one loop
@@ -474,6 +544,28 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                     metrics.record_kinds(dels, adds);
                     metrics.record_outcome(c.out.n_exact, c.out.n_approx, c.out.n_fallback);
                     metrics.record_transfers(&c.out.transfers);
+                    // durable checkpoint every K commits: content-
+                    // addressed into the store (each version is a new
+                    // file; identical re-saves dedupe), non-fatal — a
+                    // full disk must not take down the serving plane
+                    if cfg.checkpoint_every > 0
+                        && c.version % cfg.checkpoint_every as u64 == 0
+                    {
+                        let dir = cfg
+                            .checkpoint_dir
+                            .clone()
+                            .unwrap_or_else(artifact::store_dir);
+                        let t = Instant::now();
+                        match artifact::save_to_store(&session, &dir) {
+                            Ok(_) => {
+                                metrics.record_checkpoint(t.elapsed().as_secs_f64())
+                            }
+                            Err(e) => eprintln!(
+                                "deltagrad service: checkpoint at v{} failed: {e:#}",
+                                c.version
+                            ),
+                        }
+                    }
                     for p in &group {
                         let _ = p.payload.reply.send(Ok(UpdateReply {
                             version: c.version,

@@ -42,4 +42,7 @@ pub mod util;
 pub use config::{HyperParams, ModelSpec};
 pub use data::{Dataset, IndexSet};
 pub use runtime::{Engine, ModelExes};
-pub use session::{Edit, Query, QueryKind, QueryReply, QueryResult, Session, SessionBuilder};
+pub use session::{
+    Artifact, ArtifactError, Edit, Query, QueryKind, QueryReply, QueryResult, Session,
+    SessionBuilder,
+};

@@ -9,7 +9,13 @@
 //!                                (K: loss predict influence valuation
 //!                                 jackknife conformal robust)
 //!   serve/query also take --readers R (replica reader pool) and
-//!   --cache C (version-keyed query memo cache capacity); both default 0
+//!   --cache C (version-keyed query memo cache capacity); both default 0;
+//!   serve additionally takes --checkpoint-every K (save an artifact to
+//!   the store every K commits) and --store DIR (artifact store dir)
+//!   save --model M [--commits K]  train, commit K edits, save an artifact
+//!   restore --path P             warm-restore a session from an artifact
+//!   replay --path P              re-derive from recipe + edit log, audit
+//!                                bitwise against the stored session
 //!   experiment <id>|all [--scale quick|paper] [--seed S]
 //!                                regenerate a paper table/figure
 //!
@@ -85,7 +91,7 @@ fn usage(cmd: Option<&str>, allowed: &[&str]) {
         eprintln!("usage: deltagrad {cmd} {}", flags.join(" "));
     }
     eprintln!(
-        "usage: deltagrad <list|train|delete|serve|query|experiment> [flags]\n\
+        "usage: deltagrad <list|train|delete|serve|query|save|restore|replay|experiment> [flags]\n\
          flags take `--flag value` or `--flag=value`\n\
          experiments: {} all",
         expers::ALL.join(" ")
@@ -108,8 +114,23 @@ fn main() -> Result<()> {
             cmd_delete(&args)
         }
         Some("serve") => {
-            args.check_flags("serve", &["model", "requests", "t", "readers", "cache"]);
+            args.check_flags(
+                "serve",
+                &["model", "requests", "t", "readers", "cache", "checkpoint-every", "store"],
+            );
             cmd_serve(&args)
+        }
+        Some("save") => {
+            args.check_flags("save", &["model", "t", "seed", "commits", "store", "out"]);
+            cmd_save(&args)
+        }
+        Some("restore") => {
+            args.check_flags("restore", &["path"]);
+            cmd_restore(&args)
+        }
+        Some("replay") => {
+            args.check_flags("replay", &["path"]);
+            cmd_replay(&args)
         }
         Some("query") => {
             args.check_flags(
@@ -129,6 +150,97 @@ fn main() -> Result<()> {
             usage(None, &[]);
             std::process::exit(2);
         }
+    }
+}
+
+fn cmd_save(args: &Args) -> Result<()> {
+    let model = args.flag("model").unwrap_or("small").to_string();
+    let mut hp = HyperParams::for_dataset(&model);
+    hp.t = args.usize_flag("t", hp.t.min(100))?;
+    let commits = args.usize_flag("commits", 2)?;
+    let seed = args.usize_flag("seed", 7)? as u64;
+    println!("training {model} (T={}) ...", hp.t);
+    let mut session = SessionBuilder::new(&model).seed(seed).hyper_params(hp).build()?;
+    for i in 0..commits {
+        let c = session.commit(Edit::delete_row(i))?;
+        println!("  committed v{} ({} exact / {} approx)", c.version, c.n_exact, c.n_approx);
+    }
+    let report = match args.flag("out") {
+        Some(out) => session.save_artifact(std::path::Path::new(out))?,
+        None => {
+            let dir = args
+                .flag("store")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(deltagrad::session::artifact::store_dir);
+            session.save_artifact_to_store(&dir)?
+        }
+    };
+    println!(
+        "saved v{} -> {} ({} bytes, hash {:016x}{})",
+        session.version(),
+        report.path.display(),
+        report.bytes,
+        report.content_hash,
+        if report.fresh { "" } else { ", already present" }
+    );
+    Ok(())
+}
+
+fn cmd_restore(args: &Args) -> Result<()> {
+    let path = args.flag("path").map(std::path::PathBuf::from).ok_or_else(|| {
+        anyhow::anyhow!("restore needs --path P (an artifact written by `deltagrad save`)")
+    })?;
+    let t0 = std::time::Instant::now();
+    let session = SessionBuilder::restore_from(&path)?;
+    let secs = t0.elapsed().as_secs_f64();
+    // the runtime was opened by the restore itself, so its cumulative
+    // counters at this instant ARE the re-stage traffic (snapshot before
+    // eval_test adds its own)
+    let tr = session.runtime().counters.snapshot();
+    let acc = session.eval_test(session.w())?.accuracy();
+    println!(
+        "restored v{} from {} in {:.2}s: n={} test acc {:.4}\n\
+         re-stage transfers: {} uploads ({} floats), {} downloads ({} floats)",
+        session.version(),
+        path.display(),
+        secs,
+        session.train_dataset().n,
+        acc,
+        tr.uploads,
+        tr.upload_floats,
+        tr.downloads,
+        tr.download_floats,
+    );
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    use deltagrad::session::artifact;
+    let path = args.flag("path").map(std::path::PathBuf::from).ok_or_else(|| {
+        anyhow::anyhow!("replay needs --path P (an artifact written by `deltagrad save`)")
+    })?;
+    let art = artifact::Artifact::load(&path)?;
+    println!(
+        "replaying {} edits from the recipe (hash {:016x}) ...",
+        art.edits.len(),
+        art.content_hash
+    );
+    let t0 = std::time::Instant::now();
+    let session = artifact::replay(&path)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let diffs = artifact::divergence(&art, &session);
+    if diffs.is_empty() {
+        println!(
+            "replay reached v{} in {:.2}s: bitwise-identical to the stored session",
+            session.version(),
+            secs
+        );
+        Ok(())
+    } else {
+        for d in &diffs {
+            eprintln!("  diverged: {d}");
+        }
+        anyhow::bail!("replay diverged from the stored session in {} field(s)", diffs.len())
     }
 }
 
@@ -214,6 +326,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy: BatchPolicy::default(),
         readers: args.usize_flag("readers", 0)?,
         query_cache: args.usize_flag("cache", 0)?,
+        checkpoint_every: args.usize_flag("checkpoint-every", 0)?,
+        checkpoint_dir: args.flag("store").map(std::path::PathBuf::from),
     })?;
     let snap = svc.snapshot()?;
     println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
@@ -263,6 +377,8 @@ fn cmd_query(args: &Args) -> Result<()> {
         policy: BatchPolicy::default(),
         readers: args.usize_flag("readers", 0)?,
         query_cache: args.usize_flag("cache", 0)?,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
     })?;
     let snap = svc.snapshot()?;
     println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);

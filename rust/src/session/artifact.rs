@@ -1,0 +1,1233 @@
+//! Durable session artifacts: a versioned on-disk wire format that turns
+//! a trained [`Session`] into a shippable, content-addressed unit.
+//!
+//! The format follows the regorus Program split (SNIPPETS.md §1): the
+//! **canonical section** holds everything that cannot be recomputed
+//! cheaply or must be reproduced bitwise — the builder recipe (model
+//! name, seed, sizes, hyperparameters), the datasets, the cached
+//! trajectory `ws`/`gs`, the removal masks, the committed added tail
+//! (with its EXACT resident layout: compacted-prefix size plus
+//! per-segment row counts, because the segment boundaries fix the f32
+//! summation order of every later pass), the full committed edit log,
+//! and the cumulative [`SessionStats`]. The **synthesized section** —
+//! staged device buffers, L-BFGS Gram blocks, compiled-executable
+//! handles — is deliberately NOT serialized: [`restore`] recreates it by
+//! re-staging against the engine's compiled artifacts, so a restore
+//! costs re-stage uploads only (zero training iterations, zero gradient
+//! downloads).
+//!
+//! The canonical bytes are addressed by an FNV-1a content hash
+//! (legion/vorpal-style hermetic determinism, SNIPPETS.md §2–3): the
+//! header carries the hash, [`Artifact::decode`] verifies it, and
+//! [`save`] refuses to clobber a path whose existing content hash
+//! differs — identical re-saves are idempotent no-ops.
+//!
+//! Three entry points:
+//!
+//! * [`save`] / [`save_to_store`] — serialize a live session (also as
+//!   [`Session::save_artifact`]).
+//! * [`restore`] — warm-restart: deserialize + re-stage. The restored
+//!   session is bitwise-identical to the original (parameters,
+//!   trajectory, masks, `version()`, continued `SessionStats`); pinned
+//!   by tests/artifact.rs. Also as [`SessionBuilder::restore_from`].
+//! * [`replay`] — integrity audit: re-derive the session purely from
+//!   recipe + edit log (full train, then re-commit every logged edit)
+//!   and land on the same bits. [`divergence`] names any field that
+//!   disagrees.
+//!
+//! ## Wire layout (version 1, all little-endian)
+//!
+//! ```text
+//! magic "DGAR" | u32 format version | u64 fnv1a(canonical) | u64 canonical len
+//! canonical:
+//!   recipe   str model · u64 seed · opt u64 n_train · opt u64 n_test
+//!            hp { u64 t,t0,j0,m · f32 lr · opt (u64,f32) lr2 · u64 batch ·
+//!                 f32 curvature_min } · u64 compact_watermark
+//!   base     dataset { u64 da,k,n · f32[n·da] x · u32[n] y }
+//!   test     dataset
+//!   model    f32[] w · u64 version · f64 train_seconds
+//!   traj     f32[][] ws · f32[][] gs · u64[][] batches · u64 n_effective
+//!   masks    u64[] removed · dataset added · u64[] added_removed
+//!   tail     u64 compacted prefix rows · u64[] segment row counts
+//!   edits    u64 count · edit (tag 0 Delete u64[] | 1 Add dataset |
+//!                              2 Group u64 count + edits, depth ≤ 64)
+//!   stats    u64 ×9 counters · transfers ×2 (u64 ×7) · f64 seconds
+//! ```
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::HyperParams;
+use crate::data::{Dataset, IndexSet};
+use crate::runtime::{Engine, TransferStats};
+use crate::train::{self, TrainOpts, Trajectory};
+
+use super::{Edit, RowCache, Session, SessionStats};
+
+pub const MAGIC: [u8; 4] = *b"DGAR";
+pub const FORMAT_VERSION: u32 = 1;
+/// header = magic + format version + content hash + canonical length
+const HEADER_LEN: usize = 4 + 4 + 8 + 8;
+/// `Edit::Group` nesting accepted by the decoder (the encoder never
+/// exceeds what commits accepted, but the decoder must bound untrusted
+/// input before recursing)
+const MAX_EDIT_DEPTH: usize = 64;
+/// default on-disk store for content-addressed artifacts
+pub const DEFAULT_STORE: &str = ".deltagrad/artifacts";
+
+/// Typed decode/save failures: corrupted, truncated, or mismatched
+/// artifacts surface as errors, never panics (tests/artifact.rs pins
+/// each variant via `downcast_ref`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// the file does not start with `DGAR`
+    BadMagic,
+    /// the format version is newer than this build understands
+    UnsupportedVersion(u32),
+    /// the file ends before the declared payload does
+    Truncated,
+    /// the canonical bytes do not hash to the header's content address
+    HashMismatch { expected: u64, actual: u64 },
+    /// structurally invalid payload (shape/length inconsistencies,
+    /// bad UTF-8, trailing bytes, excessive edit nesting)
+    Malformed(&'static str),
+    /// `save` would overwrite a file whose content hash differs
+    ClobberMismatch {
+        path: PathBuf,
+        existing: Option<u64>,
+        new: u64,
+    },
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::BadMagic => write!(f, "not a DeltaGrad artifact (bad magic)"),
+            ArtifactError::UnsupportedVersion(v) => {
+                write!(f, "unsupported artifact format version {v} (this build reads ≤ {FORMAT_VERSION})")
+            }
+            ArtifactError::Truncated => write!(f, "artifact truncated"),
+            ArtifactError::HashMismatch { expected, actual } => write!(
+                f,
+                "artifact content hash mismatch: header says {expected:016x}, bytes hash to {actual:016x}"
+            ),
+            ArtifactError::Malformed(why) => write!(f, "malformed artifact: {why}"),
+            ArtifactError::ClobberMismatch { path, existing, new } => match existing {
+                Some(h) => write!(
+                    f,
+                    "refusing to clobber {} (existing content hash {h:016x} != {new:016x})",
+                    path.display()
+                ),
+                None => write!(
+                    f,
+                    "refusing to clobber {} (existing file is not a readable artifact; new hash {new:016x})",
+                    path.display()
+                ),
+            },
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// FNV-1a over raw bytes — same constants as the session's row-cache
+/// index hash, but byte-granular so the content address covers every
+/// bit of the canonical section.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The builder recipe: everything `SessionBuilder` needs to re-derive
+/// the initial training run (replay) or to name the artifact (store).
+#[derive(Clone, Debug)]
+pub struct Recipe {
+    pub model: String,
+    pub seed: u64,
+    pub n_train: Option<usize>,
+    pub n_test: Option<usize>,
+    pub hp: HyperParams,
+    pub compact_watermark: usize,
+}
+
+/// Decoded canonical section: the host-side state of a session, ready
+/// to re-stage ([`restore_in`]) or re-derive ([`replay_in`]).
+pub struct Artifact {
+    pub recipe: Recipe,
+    pub base: Dataset,
+    pub test: Dataset,
+    pub w: Vec<f32>,
+    pub version: u64,
+    pub train_seconds: f64,
+    pub traj: Trajectory,
+    pub removed: IndexSet,
+    pub added: Dataset,
+    pub added_removed: IndexSet,
+    /// rows covered by the compacted tail prefix (0 = no compaction yet)
+    pub tail_compact_n: usize,
+    /// row counts of the still-segmented tail, in append order (the
+    /// exact resident layout — segment boundaries fix reduction order)
+    pub tail_segments: Vec<usize>,
+    /// every committed edit, in commit order
+    pub edits: Vec<Edit>,
+    pub stats: SessionStats,
+    /// FNV-1a over the canonical bytes (the content address)
+    pub content_hash: u64,
+}
+
+/// Outcome of a [`save`]: where it landed and under which address.
+#[derive(Debug, Clone)]
+pub struct SaveReport {
+    pub path: PathBuf,
+    pub content_hash: u64,
+    /// total file size (header + canonical section)
+    pub bytes: usize,
+    /// false when an identical artifact already existed (idempotent no-op)
+    pub fresh: bool,
+}
+
+// --- writer ------------------------------------------------------------
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(b: &mut Vec<u8>, v: usize) {
+    put_u64(b, v as u64);
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_usize(b, s.len());
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_usize(b: &mut Vec<u8>, v: Option<usize>) {
+    match v {
+        None => b.push(0),
+        Some(x) => {
+            b.push(1);
+            put_usize(b, x);
+        }
+    }
+}
+
+fn put_f32s(b: &mut Vec<u8>, v: &[f32]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_f32(b, x);
+    }
+}
+
+fn put_u32s(b: &mut Vec<u8>, v: &[u32]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_u32(b, x);
+    }
+}
+
+fn put_usizes(b: &mut Vec<u8>, v: &[usize]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_usize(b, x);
+    }
+}
+
+fn put_dataset(b: &mut Vec<u8>, ds: &Dataset) {
+    put_usize(b, ds.da);
+    put_usize(b, ds.k);
+    put_usize(b, ds.n);
+    put_f32s(b, &ds.x);
+    put_u32s(b, &ds.y);
+}
+
+fn put_hp(b: &mut Vec<u8>, hp: &HyperParams) {
+    put_usize(b, hp.t);
+    put_usize(b, hp.t0);
+    put_usize(b, hp.j0);
+    put_usize(b, hp.m);
+    put_f32(b, hp.lr);
+    match hp.lr2 {
+        None => b.push(0),
+        Some((at, lr)) => {
+            b.push(1);
+            put_usize(b, at);
+            put_f32(b, lr);
+        }
+    }
+    put_usize(b, hp.batch);
+    put_f32(b, hp.curvature_min);
+}
+
+fn put_transfers(b: &mut Vec<u8>, t: &TransferStats) {
+    put_u64(b, t.uploads);
+    put_u64(b, t.upload_floats);
+    put_u64(b, t.idx_uploads);
+    put_u64(b, t.idx_scalars);
+    put_u64(b, t.execs);
+    put_u64(b, t.downloads);
+    put_u64(b, t.download_floats);
+}
+
+fn put_edit(b: &mut Vec<u8>, e: &Edit) {
+    match e {
+        Edit::Delete(set) => {
+            b.push(0);
+            put_usizes(b, set.as_slice());
+        }
+        Edit::Add(ds) => {
+            b.push(1);
+            put_dataset(b, ds);
+        }
+        Edit::Group(es) => {
+            b.push(2);
+            put_usize(b, es.len());
+            for e in es {
+                put_edit(b, e);
+            }
+        }
+    }
+}
+
+// --- reader ------------------------------------------------------------
+
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ArtifactError> {
+        if self.remaining() < n {
+            return Err(ArtifactError::Truncated);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn get_u8(&mut self) -> Result<u8, ArtifactError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn get_u32(&mut self) -> Result<u32, ArtifactError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn get_u64(&mut self) -> Result<u64, ArtifactError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn get_f32(&mut self) -> Result<f32, ArtifactError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn get_f64(&mut self) -> Result<f64, ArtifactError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn get_usize(&mut self) -> Result<usize, ArtifactError> {
+        usize::try_from(self.get_u64()?).map_err(|_| ArtifactError::Malformed("count overflows usize"))
+    }
+
+    /// Element count for a vector of `elem_bytes`-wide items, bounded by
+    /// the bytes actually left — a forged huge count fails as Truncated
+    /// instead of triggering a giant allocation.
+    fn get_count(&mut self, elem_bytes: usize) -> Result<usize, ArtifactError> {
+        let n = self.get_usize()?;
+        if n.checked_mul(elem_bytes).map_or(true, |total| total > self.remaining()) {
+            return Err(ArtifactError::Truncated);
+        }
+        Ok(n)
+    }
+
+    fn get_str(&mut self) -> Result<String, ArtifactError> {
+        let n = self.get_count(1)?;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| ArtifactError::Malformed("non-UTF-8 string"))
+    }
+
+    fn get_opt_usize(&mut self) -> Result<Option<usize>, ArtifactError> {
+        match self.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.get_usize()?)),
+            _ => Err(ArtifactError::Malformed("bad option tag")),
+        }
+    }
+
+    fn get_f32s(&mut self) -> Result<Vec<f32>, ArtifactError> {
+        let n = self.get_count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_f32()?);
+        }
+        Ok(v)
+    }
+
+    fn get_u32s(&mut self) -> Result<Vec<u32>, ArtifactError> {
+        let n = self.get_count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_u32()?);
+        }
+        Ok(v)
+    }
+
+    fn get_usizes(&mut self) -> Result<Vec<usize>, ArtifactError> {
+        let n = self.get_count(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_usize()?);
+        }
+        Ok(v)
+    }
+
+    fn get_dataset(&mut self) -> Result<Dataset, ArtifactError> {
+        let da = self.get_usize()?;
+        let k = self.get_usize()?;
+        let n = self.get_usize()?;
+        let x = self.get_f32s()?;
+        let y = self.get_u32s()?;
+        if da == 0 || k == 0 {
+            return Err(ArtifactError::Malformed("dataset with zero da or k"));
+        }
+        if x.len() != n * da || y.len() != n {
+            return Err(ArtifactError::Malformed("dataset shape mismatch"));
+        }
+        if y.iter().any(|&c| (c as usize) >= k) {
+            return Err(ArtifactError::Malformed("dataset label out of range"));
+        }
+        Ok(Dataset::new(x, y, da, k))
+    }
+
+    fn get_hp(&mut self) -> Result<HyperParams, ArtifactError> {
+        let t = self.get_usize()?;
+        let t0 = self.get_usize()?;
+        let j0 = self.get_usize()?;
+        let m = self.get_usize()?;
+        let lr = self.get_f32()?;
+        let lr2 = match self.get_u8()? {
+            0 => None,
+            1 => Some((self.get_usize()?, self.get_f32()?)),
+            _ => return Err(ArtifactError::Malformed("bad lr2 tag")),
+        };
+        let batch = self.get_usize()?;
+        let curvature_min = self.get_f32()?;
+        Ok(HyperParams { t, t0, j0, m, lr, lr2, batch, curvature_min })
+    }
+
+    fn get_transfers(&mut self) -> Result<TransferStats, ArtifactError> {
+        Ok(TransferStats {
+            uploads: self.get_u64()?,
+            upload_floats: self.get_u64()?,
+            idx_uploads: self.get_u64()?,
+            idx_scalars: self.get_u64()?,
+            execs: self.get_u64()?,
+            downloads: self.get_u64()?,
+            download_floats: self.get_u64()?,
+        })
+    }
+
+    fn get_edit(&mut self, depth: usize) -> Result<Edit, ArtifactError> {
+        if depth > MAX_EDIT_DEPTH {
+            return Err(ArtifactError::Malformed("edit nesting too deep"));
+        }
+        match self.get_u8()? {
+            0 => Ok(Edit::Delete(IndexSet::from_vec(self.get_usizes()?))),
+            1 => Ok(Edit::Add(self.get_dataset()?)),
+            2 => {
+                let n = self.get_count(1)?;
+                let mut es = Vec::with_capacity(n);
+                for _ in 0..n {
+                    es.push(self.get_edit(depth + 1)?);
+                }
+                Ok(Edit::Group(es))
+            }
+            _ => Err(ArtifactError::Malformed("bad edit tag")),
+        }
+    }
+}
+
+impl Artifact {
+    /// Snapshot a live session's canonical state (host-side only — no
+    /// device traffic).
+    pub fn from_session(s: &Session) -> Artifact {
+        let (tail_compact_n, tail_segments) = s.tail_layout();
+        let mut a = Artifact {
+            recipe: Recipe {
+                model: s.spec().name.clone(),
+                seed: s.seed,
+                n_train: s.recipe_n_train,
+                n_test: s.recipe_n_test,
+                hp: s.hp.clone(),
+                compact_watermark: s.compact_watermark,
+            },
+            base: s.base.clone(),
+            test: s.test_ds.clone(),
+            w: s.w.clone(),
+            version: s.version,
+            train_seconds: s.train_seconds,
+            traj: s.traj.clone(),
+            removed: s.removed.clone(),
+            added: s.added.clone(),
+            added_removed: s.added_removed.clone(),
+            tail_compact_n,
+            tail_segments,
+            edits: s.edit_log.clone(),
+            stats: s.stats(),
+            content_hash: 0,
+        };
+        a.content_hash = fnv1a(&a.canonical_bytes());
+        a
+    }
+
+    /// The canonical section (the bytes the content hash covers).
+    pub fn canonical_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        put_str(&mut b, &self.recipe.model);
+        put_u64(&mut b, self.recipe.seed);
+        put_opt_usize(&mut b, self.recipe.n_train);
+        put_opt_usize(&mut b, self.recipe.n_test);
+        put_hp(&mut b, &self.recipe.hp);
+        put_usize(&mut b, self.recipe.compact_watermark);
+        put_dataset(&mut b, &self.base);
+        put_dataset(&mut b, &self.test);
+        put_f32s(&mut b, &self.w);
+        put_u64(&mut b, self.version);
+        put_f64(&mut b, self.train_seconds);
+        put_usize(&mut b, self.traj.ws.len());
+        for w in &self.traj.ws {
+            put_f32s(&mut b, w);
+        }
+        put_usize(&mut b, self.traj.gs.len());
+        for g in &self.traj.gs {
+            put_f32s(&mut b, g);
+        }
+        put_usize(&mut b, self.traj.batches.len());
+        for batch in &self.traj.batches {
+            put_usizes(&mut b, batch);
+        }
+        put_usize(&mut b, self.traj.n_effective);
+        put_usizes(&mut b, self.removed.as_slice());
+        put_dataset(&mut b, &self.added);
+        put_usizes(&mut b, self.added_removed.as_slice());
+        put_usize(&mut b, self.tail_compact_n);
+        put_usizes(&mut b, &self.tail_segments);
+        put_usize(&mut b, self.edits.len());
+        for e in &self.edits {
+            put_edit(&mut b, e);
+        }
+        let st = &self.stats;
+        put_u64(&mut b, st.previews);
+        put_u64(&mut b, st.commits);
+        put_u64(&mut b, st.rows_deleted);
+        put_u64(&mut b, st.rows_added);
+        put_u64(&mut b, st.exact_iters);
+        put_u64(&mut b, st.approx_iters);
+        put_u64(&mut b, st.fallback_iters);
+        put_u64(&mut b, st.row_cache_hits);
+        put_u64(&mut b, st.row_cache_misses);
+        put_transfers(&mut b, &st.preview_transfers);
+        put_transfers(&mut b, &st.commit_transfers);
+        put_f64(&mut b, st.seconds);
+        b
+    }
+
+    /// Full file bytes: header (magic, format version, content hash,
+    /// canonical length) + canonical section.
+    pub fn encode(&self) -> Vec<u8> {
+        let canon = self.canonical_bytes();
+        let hash = fnv1a(&canon);
+        let mut out = Vec::with_capacity(HEADER_LEN + canon.len());
+        out.extend_from_slice(&MAGIC);
+        put_u32(&mut out, FORMAT_VERSION);
+        put_u64(&mut out, hash);
+        put_u64(&mut out, canon.len() as u64);
+        out.extend_from_slice(&canon);
+        out
+    }
+
+    /// Decode + verify a full artifact file. Every failure is a typed
+    /// [`ArtifactError`]; nothing panics on untrusted bytes.
+    pub fn decode(bytes: &[u8]) -> Result<Artifact, ArtifactError> {
+        let canon = Self::check_header(bytes)?;
+        let expected = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let actual = fnv1a(canon);
+        if actual != expected {
+            return Err(ArtifactError::HashMismatch { expected, actual });
+        }
+        let mut r = Rd::new(canon);
+        let recipe = Recipe {
+            model: r.get_str()?,
+            seed: r.get_u64()?,
+            n_train: r.get_opt_usize()?,
+            n_test: r.get_opt_usize()?,
+            hp: r.get_hp()?,
+            compact_watermark: r.get_usize()?,
+        };
+        let base = r.get_dataset()?;
+        let test = r.get_dataset()?;
+        let w = r.get_f32s()?;
+        let version = r.get_u64()?;
+        let train_seconds = r.get_f64()?;
+        let n_ws = r.get_count(8)?;
+        let mut ws = Vec::with_capacity(n_ws);
+        for _ in 0..n_ws {
+            ws.push(r.get_f32s()?);
+        }
+        let n_gs = r.get_count(8)?;
+        let mut gs = Vec::with_capacity(n_gs);
+        for _ in 0..n_gs {
+            gs.push(r.get_f32s()?);
+        }
+        let n_batches = r.get_count(8)?;
+        let mut batches = Vec::with_capacity(n_batches);
+        for _ in 0..n_batches {
+            batches.push(r.get_usizes()?);
+        }
+        let n_effective = r.get_usize()?;
+        let traj = Trajectory { ws, gs, batches, n_effective };
+        let removed = IndexSet::from_vec(r.get_usizes()?);
+        let added = r.get_dataset()?;
+        let added_removed = IndexSet::from_vec(r.get_usizes()?);
+        let tail_compact_n = r.get_usize()?;
+        let tail_segments = r.get_usizes()?;
+        let n_edits = r.get_count(1)?;
+        let mut edits = Vec::with_capacity(n_edits);
+        for _ in 0..n_edits {
+            edits.push(r.get_edit(0)?);
+        }
+        let stats = SessionStats {
+            previews: r.get_u64()?,
+            commits: r.get_u64()?,
+            rows_deleted: r.get_u64()?,
+            rows_added: r.get_u64()?,
+            exact_iters: r.get_u64()?,
+            approx_iters: r.get_u64()?,
+            fallback_iters: r.get_u64()?,
+            row_cache_hits: r.get_u64()?,
+            row_cache_misses: r.get_u64()?,
+            preview_transfers: r.get_transfers()?,
+            commit_transfers: r.get_transfers()?,
+            seconds: r.get_f64()?,
+        };
+        if r.remaining() != 0 {
+            return Err(ArtifactError::Malformed("trailing bytes in canonical section"));
+        }
+        // structural cross-checks (the hash only proves integrity, not
+        // that the writer was sane)
+        if traj.ws.len() != recipe.hp.t + 1 || traj.gs.len() != recipe.hp.t {
+            return Err(ArtifactError::Malformed("trajectory/hp length mismatch"));
+        }
+        if removed.as_slice().last().is_some_and(|&i| i >= base.n) {
+            return Err(ArtifactError::Malformed("removed index out of range"));
+        }
+        if added_removed.as_slice().last().is_some_and(|&j| j >= added.n) {
+            return Err(ArtifactError::Malformed("added_removed index out of range"));
+        }
+        if tail_compact_n + tail_segments.iter().sum::<usize>() != added.n {
+            return Err(ArtifactError::Malformed("tail layout does not cover the added rows"));
+        }
+        if base.da != added.da || base.k != added.k {
+            return Err(ArtifactError::Malformed("added tail shape mismatch"));
+        }
+        Ok(Artifact {
+            recipe,
+            base,
+            test,
+            w,
+            version,
+            train_seconds,
+            traj,
+            removed,
+            added,
+            added_removed,
+            tail_compact_n,
+            tail_segments,
+            edits,
+            stats,
+            content_hash: expected,
+        })
+    }
+
+    /// Validate the header and return the canonical slice (shared by
+    /// [`decode`] and the clobber check's hash peek).
+    fn check_header(bytes: &[u8]) -> Result<&[u8], ArtifactError> {
+        if bytes.len() < 4 {
+            return Err(ArtifactError::Truncated);
+        }
+        if bytes[0..4] != MAGIC {
+            return Err(ArtifactError::BadMagic);
+        }
+        if bytes.len() < HEADER_LEN {
+            return Err(ArtifactError::Truncated);
+        }
+        let ver = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if ver != FORMAT_VERSION {
+            return Err(ArtifactError::UnsupportedVersion(ver));
+        }
+        let canon_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        let body = &bytes[HEADER_LEN..];
+        if (body.len() as u64) < canon_len {
+            return Err(ArtifactError::Truncated);
+        }
+        if (body.len() as u64) > canon_len {
+            return Err(ArtifactError::Malformed("trailing bytes after canonical section"));
+        }
+        Ok(body)
+    }
+
+    /// Header-only read of a file's content hash (no payload decode).
+    pub fn peek_hash(bytes: &[u8]) -> Result<u64, ArtifactError> {
+        if bytes.len() < 4 {
+            return Err(ArtifactError::Truncated);
+        }
+        if bytes[0..4] != MAGIC {
+            return Err(ArtifactError::BadMagic);
+        }
+        if bytes.len() < HEADER_LEN {
+            return Err(ArtifactError::Truncated);
+        }
+        Ok(u64::from_le_bytes(bytes[8..16].try_into().unwrap()))
+    }
+
+    /// Read + decode + verify an artifact file.
+    pub fn load(path: &Path) -> Result<Artifact> {
+        let bytes =
+            fs::read(path).with_context(|| format!("reading artifact {}", path.display()))?;
+        Artifact::decode(&bytes)
+            .map_err(|e| anyhow::Error::new(e).context(format!("decoding {}", path.display())))
+    }
+}
+
+// --- save --------------------------------------------------------------
+
+/// The artifact store directory: `$DELTAGRAD_STORE` if set, else
+/// [`DEFAULT_STORE`] relative to the working directory.
+pub fn store_dir() -> PathBuf {
+    std::env::var_os("DELTAGRAD_STORE")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(DEFAULT_STORE))
+}
+
+/// Content-addressed file name inside a store directory.
+pub fn store_path(dir: &Path, model: &str, version: u64, hash: u64) -> PathBuf {
+    dir.join(format!("{model}-v{version}-{hash:016x}.dgar"))
+}
+
+/// Serialize `session` to `path`. Refuses to clobber an existing file
+/// whose content hash differs ([`ArtifactError::ClobberMismatch`]);
+/// re-saving identical content is an idempotent no-op (`fresh: false`).
+pub fn save(session: &Session, path: &Path) -> Result<SaveReport> {
+    write_artifact(&Artifact::from_session(session), path)
+}
+
+/// Serialize `session` into `dir` under its content-addressed name
+/// (`{model}-v{version}-{hash:016x}.dgar`). Every commit changes the
+/// hash, so checkpoints accumulate side by side and identical re-saves
+/// dedupe.
+pub fn save_to_store(session: &Session, dir: &Path) -> Result<SaveReport> {
+    let art = Artifact::from_session(session);
+    let path = store_path(dir, &art.recipe.model, art.version, art.content_hash);
+    write_artifact(&art, &path)
+}
+
+fn write_artifact(art: &Artifact, path: &Path) -> Result<SaveReport> {
+    let bytes = art.encode();
+    if path.exists() {
+        let existing = fs::read(path)
+            .with_context(|| format!("reading existing artifact {}", path.display()))?;
+        let existing_hash = Artifact::peek_hash(&existing).ok();
+        if existing_hash == Some(art.content_hash) {
+            return Ok(SaveReport {
+                path: path.to_path_buf(),
+                content_hash: art.content_hash,
+                bytes: bytes.len(),
+                fresh: false,
+            });
+        }
+        return Err(ArtifactError::ClobberMismatch {
+            path: path.to_path_buf(),
+            existing: existing_hash,
+            new: art.content_hash,
+        }
+        .into());
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+        }
+    }
+    // write-then-rename so a crash mid-write never leaves a truncated
+    // file under the content-addressed name
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(SaveReport {
+        path: path.to_path_buf(),
+        content_hash: art.content_hash,
+        bytes: bytes.len(),
+        fresh: true,
+    })
+}
+
+// --- restore -----------------------------------------------------------
+
+/// Warm-restart from an artifact with a fresh default engine: zero
+/// training iterations, zero gradient downloads — the synthesized
+/// section (staged buffers) is recreated by re-staging only.
+pub fn restore(path: &Path) -> Result<Session> {
+    let mut eng = Engine::open_default()?;
+    restore_in(path, &mut eng)
+}
+
+/// [`restore`] against an existing engine (sharing its runtime and
+/// compiled artifacts).
+pub fn restore_in(path: &Path, eng: &mut Engine) -> Result<Session> {
+    restore_artifact_in(Artifact::load(path)?, eng)
+}
+
+pub(crate) fn restore_artifact_in(a: Artifact, eng: &mut Engine) -> Result<Session> {
+    let exes = eng.model(&a.recipe.model)?;
+    let spec = &exes.spec;
+    // the artifact is internally consistent (decode checked), but it
+    // must also match THIS engine's compiled model
+    if a.base.da != spec.da || a.base.k != spec.k {
+        bail!(
+            "artifact dataset shape ({}, {}) does not match model '{}' ({}, {})",
+            a.base.da, a.base.k, spec.name, spec.da, spec.k
+        );
+    }
+    if a.w.len() != spec.p {
+        bail!(
+            "artifact parameter count {} does not match model '{}' (p = {})",
+            a.w.len(), spec.name, spec.p
+        );
+    }
+    let rt = eng.runtime();
+    let staged = exes.stage(&rt, &a.base, &a.removed)?;
+    let test_staged = exes.stage(&rt, &a.test, &IndexSet::empty())?;
+    // recreate the tail's EXACT resident layout: a compacted prefix is
+    // re-staged as full-size chunks with the deletion masks already
+    // applied, and each still-segmented commit's rows are re-staged as
+    // their own segment — the boundaries fix the f32 reduction order of
+    // every later pass, which is what makes restore bitwise
+    let tail_compact = if a.tail_compact_n > 0 {
+        let idxs: Vec<usize> = (0..a.tail_compact_n).collect();
+        let head = a.added.subset(&idxs);
+        let mask =
+            IndexSet::from_vec(a.added_removed.iter().filter(|&j| j < a.tail_compact_n).collect());
+        Some(exes.stage(&rt, &head, &mask)?)
+    } else {
+        None
+    };
+    let mut added_staged = Vec::with_capacity(a.tail_segments.len());
+    let mut seg_start = a.tail_compact_n;
+    for &rows in &a.tail_segments {
+        let idxs: Vec<usize> = (seg_start..seg_start + rows).collect();
+        let mut sr = exes.stage_rows(&rt, &a.added, &idxs)?;
+        let pos: Vec<usize> = a
+            .added_removed
+            .iter()
+            .filter(|&j| j >= seg_start && j < seg_start + rows)
+            .map(|j| j - seg_start)
+            .collect();
+        if !pos.is_empty() {
+            exes.zero_row_positions(&rt, &mut sr, &pos)?;
+        }
+        added_staged.push(sr);
+        seg_start += rows;
+    }
+    let stats = a.stats;
+    Ok(Session {
+        rt,
+        exes,
+        hp: a.recipe.hp,
+        base: a.base,
+        staged,
+        removed: a.removed,
+        added: a.added,
+        added_removed: a.added_removed,
+        added_staged,
+        tail_compact,
+        compact_watermark: a.recipe.compact_watermark,
+        test_ds: a.test,
+        test_staged,
+        traj: a.traj,
+        w: a.w,
+        version: a.version,
+        train_seconds: a.train_seconds,
+        stats: Cell::new(stats),
+        // `Session::stats` overlays the live cache counters, so seeding
+        // them from the artifact keeps the cumulative stats continuous
+        // across the save/restore boundary
+        row_cache: RefCell::new(RowCache {
+            entries: VecDeque::new(),
+            hits: stats.row_cache_hits,
+            misses: stats.row_cache_misses,
+        }),
+        base_rows: RefCell::new(None),
+        sgd_sched: RefCell::new(None),
+        ws_scratch: Vec::new(),
+        gs_scratch: Vec::new(),
+        seed: a.recipe.seed,
+        recipe_n_train: a.recipe.n_train,
+        recipe_n_test: a.recipe.n_test,
+        edit_log: a.edits,
+    })
+}
+
+// --- replay ------------------------------------------------------------
+
+/// Integrity audit: re-derive the session purely from the recipe + edit
+/// log — full initial training over the serialized base dataset (the
+/// same deterministic `TrainOpts::full` the builder used), then every
+/// logged edit re-committed in order. The result must land on the
+/// artifact's version; [`divergence`] then pins the bits.
+pub fn replay(path: &Path) -> Result<Session> {
+    let mut eng = Engine::open_default()?;
+    replay_in(path, &mut eng)
+}
+
+/// [`replay`] against an existing engine.
+pub fn replay_in(path: &Path, eng: &mut Engine) -> Result<Session> {
+    replay_artifact_in(&Artifact::load(path)?, eng)
+}
+
+pub(crate) fn replay_artifact_in(a: &Artifact, eng: &mut Engine) -> Result<Session> {
+    let exes = eng.model(&a.recipe.model)?;
+    let rt = eng.runtime();
+    let hp = a.recipe.hp.clone();
+    let out = train::train(&exes, &rt, &a.base, &TrainOpts::full(&hp, &IndexSet::empty()))?;
+    let traj = out.traj.expect("trajectory recorded");
+    let mut s = Session::from_trained(
+        rt,
+        exes,
+        a.base.clone(),
+        a.test.clone(),
+        traj,
+        hp,
+        out.w,
+        out.seconds,
+    )?;
+    s.compact_watermark = a.recipe.compact_watermark;
+    s.seed = a.recipe.seed;
+    s.recipe_n_train = a.recipe.n_train;
+    s.recipe_n_test = a.recipe.n_test;
+    for e in &a.edits {
+        s.commit(e.clone())?;
+    }
+    if s.version() != a.version {
+        bail!(
+            "replay landed on version {} but the artifact records {}",
+            s.version(),
+            a.version
+        );
+    }
+    Ok(s)
+}
+
+/// Bitwise audit: which canonical fields of `s` disagree with the
+/// artifact? Empty = the session reproduces the artifact exactly
+/// (f32 comparisons are on bits, not values).
+pub fn divergence(a: &Artifact, s: &Session) -> Vec<String> {
+    let mut bad = Vec::new();
+    if s.version != a.version {
+        bad.push(format!("version ({} != {})", s.version, a.version));
+    }
+    if !f32s_eq(&s.w, &a.w) {
+        bad.push("w".to_string());
+    }
+    if s.traj.ws.len() != a.traj.ws.len()
+        || s.traj.ws.iter().zip(&a.traj.ws).any(|(x, y)| !f32s_eq(x, y))
+    {
+        bad.push("trajectory.ws".to_string());
+    }
+    if s.traj.gs.len() != a.traj.gs.len()
+        || s.traj.gs.iter().zip(&a.traj.gs).any(|(x, y)| !f32s_eq(x, y))
+    {
+        bad.push("trajectory.gs".to_string());
+    }
+    if s.traj.n_effective != a.traj.n_effective {
+        bad.push("trajectory.n_effective".to_string());
+    }
+    if s.removed.as_slice() != a.removed.as_slice() {
+        bad.push("removed".to_string());
+    }
+    if s.added_removed.as_slice() != a.added_removed.as_slice() {
+        bad.push("added_removed".to_string());
+    }
+    if s.added.n != a.added.n || !f32s_eq(&s.added.x, &a.added.x) || s.added.y != a.added.y {
+        bad.push("added".to_string());
+    }
+    bad
+}
+
+fn f32s_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds(rows: usize, da: usize, k: usize, salt: f32) -> Dataset {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..rows {
+            for j in 0..da - 1 {
+                x.push(salt + (i * da + j) as f32 * 0.25);
+            }
+            x.push(1.0);
+            y.push((i % k) as u32);
+        }
+        Dataset::new(x, y, da, k)
+    }
+
+    fn sample_artifact() -> Artifact {
+        let hp = HyperParams {
+            t: 2,
+            t0: 5,
+            j0: 1,
+            m: 2,
+            lr: 0.1,
+            lr2: Some((10, 0.05)),
+            batch: 0,
+            curvature_min: 1e-4,
+        };
+        let p = 4;
+        let mut a = Artifact {
+            recipe: Recipe {
+                model: "small".to_string(),
+                seed: 42,
+                n_train: Some(6),
+                n_test: None,
+                hp,
+                compact_watermark: 8,
+            },
+            base: ds(6, 3, 2, 0.0),
+            test: ds(4, 3, 2, 9.0),
+            w: vec![0.5, -0.25, f32::MIN_POSITIVE, -0.0],
+            version: 3,
+            train_seconds: 1.25,
+            traj: Trajectory {
+                ws: vec![vec![0.0; p], vec![0.125; p], vec![0.25; p]],
+                gs: vec![vec![1.0; p], vec![-1.0; p]],
+                batches: vec![vec![], vec![0, 2, 4]],
+                n_effective: 6,
+            },
+            removed: IndexSet::from_vec(vec![1, 4]),
+            added: ds(3, 3, 2, 5.0),
+            added_removed: IndexSet::from_vec(vec![0]),
+            tail_compact_n: 2,
+            tail_segments: vec![1],
+            edits: vec![
+                Edit::delete_row(1),
+                Edit::group(vec![
+                    Edit::Delete(IndexSet::from_vec(vec![4])),
+                    Edit::Add(ds(2, 3, 2, 5.0)),
+                ]),
+                Edit::Add(ds(1, 3, 2, 7.0)),
+            ],
+            stats: SessionStats {
+                previews: 2,
+                commits: 3,
+                rows_deleted: 2,
+                rows_added: 3,
+                exact_iters: 4,
+                approx_iters: 1,
+                fallback_iters: 1,
+                row_cache_hits: 5,
+                row_cache_misses: 6,
+                preview_transfers: TransferStats { uploads: 7, ..Default::default() },
+                commit_transfers: TransferStats { downloads: 8, ..Default::default() },
+                seconds: 0.75,
+            },
+            content_hash: 0,
+        };
+        a.content_hash = fnv1a(&a.canonical_bytes());
+        a
+    }
+
+    #[test]
+    fn encode_decode_round_trips_bitwise() {
+        let a = sample_artifact();
+        let bytes = a.encode();
+        let b = Artifact::decode(&bytes).unwrap();
+        // the strongest equality check the format can make about itself:
+        // the decoded artifact re-encodes to the same bytes
+        assert_eq!(b.encode(), bytes);
+        assert_eq!(b.content_hash, a.content_hash);
+        assert_eq!(b.version, 3);
+        assert_eq!(b.recipe.model, "small");
+        assert_eq!(b.recipe.n_train, Some(6));
+        assert_eq!(b.recipe.n_test, None);
+        assert_eq!(b.recipe.hp.lr2, Some((10, 0.05)));
+        assert!(f32s_eq(&b.w, &a.w));
+        assert_eq!(b.removed.as_slice(), &[1, 4]);
+        assert_eq!(b.tail_compact_n, 2);
+        assert_eq!(b.tail_segments, vec![1]);
+        assert_eq!(b.edits.len(), 3);
+        assert_eq!(b.stats.commits, 3);
+        assert_eq!(b.stats.preview_transfers.uploads, 7);
+    }
+
+    #[test]
+    fn content_hash_is_deterministic_and_input_sensitive() {
+        let a = sample_artifact();
+        assert_eq!(a.content_hash, fnv1a(&a.canonical_bytes()));
+        let mut b = sample_artifact();
+        b.w[0] = 0.5000001;
+        assert_ne!(a.content_hash, fnv1a(&b.canonical_bytes()));
+        let mut c = sample_artifact();
+        c.version = 4;
+        assert_ne!(a.content_hash, fnv1a(&c.canonical_bytes()));
+    }
+
+    #[test]
+    fn corrupted_payload_is_a_typed_hash_mismatch() {
+        let mut bytes = sample_artifact().encode();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        match Artifact::decode(&bytes) {
+            Err(ArtifactError::HashMismatch { .. }) => {}
+            other => panic!("expected HashMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_prefix_is_typed_not_a_panic() {
+        let bytes = sample_artifact().encode();
+        // sweep a dense prefix grid (every cut through the header plus
+        // samples through the payload)
+        for cut in (0..bytes.len()).step_by(7).chain(0..HEADER_LEN) {
+            match Artifact::decode(&bytes[..cut]) {
+                Err(ArtifactError::Truncated) | Err(ArtifactError::Malformed(_)) => {}
+                other => panic!("cut={cut}: expected typed error, got {:?}", other.err()),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let mut bytes = sample_artifact().encode();
+        bytes[0] = b'X';
+        assert_eq!(Artifact::decode(&bytes).unwrap_err(), ArtifactError::BadMagic);
+        let mut bytes = sample_artifact().encode();
+        bytes[4] = 99;
+        assert_eq!(
+            Artifact::decode(&bytes).unwrap_err(),
+            ArtifactError::UnsupportedVersion(99)
+        );
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = sample_artifact().encode();
+        bytes.push(0);
+        assert!(matches!(
+            Artifact::decode(&bytes).unwrap_err(),
+            ArtifactError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn forged_giant_count_fails_without_allocating() {
+        let a = sample_artifact();
+        let mut canon = a.canonical_bytes();
+        // overwrite the model-name length (first 8 bytes) with u64::MAX
+        canon[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        put_u32(&mut bytes, FORMAT_VERSION);
+        put_u64(&mut bytes, fnv1a(&canon));
+        put_u64(&mut bytes, canon.len() as u64);
+        bytes.extend_from_slice(&canon);
+        assert!(matches!(
+            Artifact::decode(&bytes).unwrap_err(),
+            ArtifactError::Truncated
+        ));
+    }
+
+    #[test]
+    fn inconsistent_tail_layout_is_malformed() {
+        let mut a = sample_artifact();
+        a.tail_segments = vec![2]; // 2 + 2 != added.n (3)
+        let bytes = a.encode();
+        assert!(matches!(
+            Artifact::decode(&bytes).unwrap_err(),
+            ArtifactError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn store_path_is_content_addressed() {
+        let p = store_path(Path::new("/tmp/store"), "small", 7, 0xabcd);
+        assert_eq!(
+            p,
+            PathBuf::from("/tmp/store/small-v7-000000000000abcd.dgar")
+        );
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // classic FNV-1a 64-bit test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn save_is_idempotent_and_refuses_mismatched_clobber() {
+        let a = sample_artifact();
+        let dir = std::env::temp_dir().join(format!("dgar-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("x.dgar");
+        let r1 = write_artifact(&a, &path).unwrap();
+        assert!(r1.fresh);
+        let r2 = write_artifact(&a, &path).unwrap();
+        assert!(!r2.fresh, "identical re-save must be an idempotent no-op");
+        assert_eq!(r2.content_hash, r1.content_hash);
+        let mut b = sample_artifact();
+        b.version = 9;
+        b.content_hash = fnv1a(&b.canonical_bytes());
+        let err = write_artifact(&b, &path).unwrap_err();
+        match err.downcast_ref::<ArtifactError>() {
+            Some(ArtifactError::ClobberMismatch { .. }) => {}
+            other => panic!("expected ClobberMismatch, got {other:?}"),
+        }
+        // loading back the original still verifies
+        let loaded = Artifact::load(&path).unwrap();
+        assert_eq!(loaded.content_hash, r1.content_hash);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

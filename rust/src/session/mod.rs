@@ -49,9 +49,11 @@
 //! Cumulative per-edit device traffic (and the row-cache hit/miss
 //! counts) is tracked in [`SessionStats`].
 
+pub mod artifact;
 pub mod query;
 pub mod query_cache;
 
+pub use artifact::{Artifact, ArtifactError, SaveReport};
 pub use query::{query, JackknifeFunctional, Query, QueryKind, QueryReply, QueryResult};
 pub use query_cache::{QueryCache, QueryCacheStats};
 
@@ -433,7 +435,26 @@ impl SessionBuilder {
             rt, exes, train_ds, test_ds, traj, hp, out.w, out.seconds,
         )?;
         s.compact_watermark = self.compact_watermark;
+        s.seed = self.seed;
+        s.recipe_n_train = self.n_train;
+        s.recipe_n_test = self.n_test;
         Ok(s)
+    }
+
+    /// Warm-restart from a saved artifact instead of training: the
+    /// canonical state is deserialized and the device staging recreated
+    /// (zero training iterations). The restored session is
+    /// bitwise-identical to the one [`Session::save_artifact`] saw —
+    /// parameters, trajectory, masks, `version()`, and cumulative
+    /// [`SessionStats`] all continue where they left off.
+    pub fn restore_from(path: &std::path::Path) -> Result<Session> {
+        artifact::restore(path)
+    }
+
+    /// [`Self::restore_from`] against an existing engine (sharing its
+    /// runtime and compiled artifacts).
+    pub fn restore_from_in(path: &std::path::Path, eng: &mut Engine) -> Result<Session> {
+        artifact::restore_in(path, eng)
     }
 }
 
@@ -493,6 +514,14 @@ pub struct Session {
     /// in for free, so only their outer container is recycled)
     ws_scratch: Vec<Vec<f32>>,
     gs_scratch: Vec<Vec<f32>>,
+    /// builder-recipe provenance, serialized into artifacts so a replay
+    /// (or a reader's recipe fallback) can re-derive this session
+    seed: u64,
+    recipe_n_train: Option<usize>,
+    recipe_n_test: Option<usize>,
+    /// every committed edit in commit order — the artifact's replay log
+    /// (previews are speculative and never recorded)
+    edit_log: Vec<Edit>,
 }
 
 impl Session {
@@ -537,6 +566,10 @@ impl Session {
             sgd_sched: RefCell::new(None),
             ws_scratch: Vec::new(),
             gs_scratch: Vec::new(),
+            seed: 7,
+            recipe_n_train: None,
+            recipe_n_test: None,
+            edit_log: Vec::new(),
         })
     }
 
@@ -613,6 +646,34 @@ impl Session {
     /// Seconds the initial full training took.
     pub fn train_seconds(&self) -> f64 {
         self.train_seconds
+    }
+
+    /// Every committed edit in commit order (the artifact replay log).
+    pub fn edit_log(&self) -> &[Edit] {
+        &self.edit_log
+    }
+
+    /// The tail's exact resident layout: (rows in the compacted prefix,
+    /// per-segment row counts). Serialized into artifacts because the
+    /// segment boundaries fix the f32 reduction order of later passes.
+    pub(crate) fn tail_layout(&self) -> (usize, Vec<usize>) {
+        (
+            self.tail_compact.as_ref().map_or(0, |s| s.n),
+            self.added_staged.iter().map(|sr| sr.n_rows).collect(),
+        )
+    }
+
+    /// Serialize this session's canonical state to `path` (see
+    /// [`artifact`]): refuses to clobber a mismatched content hash,
+    /// no-ops on an identical re-save.
+    pub fn save_artifact(&self, path: &std::path::Path) -> Result<artifact::SaveReport> {
+        artifact::save(self, path)
+    }
+
+    /// Serialize into `dir` under the content-addressed name
+    /// `{model}-v{version}-{hash:016x}.dgar`.
+    pub fn save_artifact_to_store(&self, dir: &std::path::Path) -> Result<artifact::SaveReport> {
+        artifact::save_to_store(self, dir)
     }
 
     /// Cumulative per-edit accounting (incl. row-cache hit/miss counts).
@@ -782,6 +843,10 @@ impl Session {
             sgd_sched: RefCell::new(None),
             ws_scratch: Vec::new(),
             gs_scratch: Vec::new(),
+            seed: self.seed,
+            recipe_n_train: self.recipe_n_train,
+            recipe_n_test: self.recipe_n_test,
+            edit_log: self.edit_log.clone(),
         })
     }
 
@@ -1271,6 +1336,10 @@ impl Session {
         self.traj.n_effective = n_new as usize;
         self.w = w.clone();
         self.version += 1;
+        // the committed edit joins the artifact's replay log (only after
+        // every fallible step succeeded — a failed commit leaves the log
+        // exactly as replayable as the session)
+        self.edit_log.push(edit);
 
         let out = RetrainOutput {
             w,

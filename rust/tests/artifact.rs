@@ -1,0 +1,213 @@
+//! Durable session artifacts end to end: bitwise warm restore, edit-log
+//! replay, and the typed failure surface of the wire format, against a
+//! real device session. Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use deltagrad::config::HyperParams;
+use deltagrad::session::artifact::{self, Artifact, ArtifactError};
+use deltagrad::session::{Edit, Query, QueryResult, Session, SessionBuilder};
+
+fn quick_session(t: usize) -> Session {
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = t;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    SessionBuilder::new("small")
+        .seed(77)
+        .n_train(Some(512))
+        .n_test(Some(256))
+        .hyper_params(hp)
+        .build()
+        .unwrap()
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("deltagrad-test-{tag}-{}.dgar", std::process::id()))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A fabricated addition row for the small config: zeros + bias column.
+fn add_row_for(s: &Session) -> Edit {
+    let da = s.train_dataset().da;
+    let k = s.train_dataset().k;
+    let mut x = vec![0.0f32; da];
+    x[da - 1] = 1.0;
+    Edit::add_row(x, 1, k)
+}
+
+fn loss_bits(r: &QueryResult) -> [u64; 4] {
+    match r {
+        QueryResult::Loss { test_loss, test_accuracy, train_loss, train_accuracy } => [
+            test_loss.to_bits(),
+            test_accuracy.to_bits(),
+            train_loss.to_bits(),
+            train_accuracy.to_bits(),
+        ],
+        other => panic!("wrong reply kind: {other:?}"),
+    }
+}
+
+#[test]
+fn restore_is_bitwise_with_zero_training() {
+    let mut live = quick_session(40);
+    // two committed edit groups so the artifact carries a removal mask,
+    // a staged tail, and a non-trivial edit log
+    live.commit(Edit::delete_row(3)).unwrap();
+    let add = add_row_for(&live);
+    live.commit(add).unwrap();
+
+    let path = tmp_path("restore");
+    let _ = std::fs::remove_file(&path);
+    let report = live.save_artifact(&path).unwrap();
+    assert!(report.fresh);
+    assert_eq!(report.content_hash, Artifact::load(&path).unwrap().content_hash);
+
+    let restored = SessionBuilder::restore_from(&path).unwrap();
+    // zero training iterations: the restore's runtime has only re-staged
+    // host rows — uploads, never a gradient download
+    let tr = restored.runtime().counters.snapshot();
+    assert!(tr.uploads > 0, "restore must re-stage the resident buffers");
+    assert_eq!(tr.downloads, 0, "restore must not run a single training iteration");
+
+    assert_eq!(restored.version(), live.version());
+    assert_eq!(bits(restored.w()), bits(live.w()), "parameters must restore bitwise");
+    let (lt, rt2) = (live.trajectory(), restored.trajectory());
+    assert_eq!(lt.ws.len(), rt2.ws.len());
+    for (a, b) in lt.ws.iter().zip(&rt2.ws) {
+        assert_eq!(bits(a), bits(b), "trajectory ws must restore bitwise");
+    }
+    for (a, b) in lt.gs.iter().zip(&rt2.gs) {
+        assert_eq!(bits(a), bits(b), "trajectory gs must restore bitwise");
+    }
+    assert_eq!(lt.n_effective, rt2.n_effective);
+    assert_eq!(restored.train_dataset().n, live.train_dataset().n);
+    assert_eq!(restored.edit_log().len(), 2);
+
+    // SessionStats continuity: the restored session keeps counting from
+    // where the saved one stopped
+    let (a, b) = (live.stats(), restored.stats());
+    assert_eq!(a.commits, b.commits);
+    assert_eq!(a.rows_deleted, b.rows_deleted);
+    assert_eq!(a.rows_added, b.rows_added);
+    assert_eq!(a.exact_iters, b.exact_iters);
+    assert_eq!(a.approx_iters, b.approx_iters);
+    assert_eq!(a.row_cache_hits, b.row_cache_hits);
+    assert_eq!(a.row_cache_misses, b.row_cache_misses);
+
+    // reads off the re-staged device state are bitwise the live ones
+    let lr = live.query(&Query::Loss).unwrap();
+    let rr = restored.query(&Query::Loss).unwrap();
+    assert_eq!(loss_bits(&lr.result), loss_bits(&rr.result));
+
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn restored_sessions_keep_committing_in_lockstep() {
+    // the synthesized section (staged chunks, tail segments, masks) is
+    // recreated faithfully enough that the NEXT commit lands bitwise on
+    // the same model as the original session's
+    let mut live = quick_session(40);
+    live.commit(Edit::delete_row(0)).unwrap();
+    let add = add_row_for(&live);
+    live.commit(add).unwrap();
+
+    let path = tmp_path("lockstep");
+    let _ = std::fs::remove_file(&path);
+    live.save_artifact(&path).unwrap();
+    let mut restored = SessionBuilder::restore_from(&path).unwrap();
+
+    let edit = Edit::group(vec![Edit::delete_row(7), Edit::delete_row(8)]);
+    let cl = live.commit(edit.clone()).unwrap();
+    let cr = restored.commit(edit).unwrap();
+    assert_eq!(cl.version, cr.version);
+    assert_eq!(cl.n_exact, cr.n_exact);
+    assert_eq!(cl.n_approx, cr.n_approx);
+    assert_eq!(bits(live.w()), bits(restored.w()), "post-restore commit diverged");
+    assert_eq!(restored.edit_log().len(), 3, "the restored log keeps growing");
+
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn replay_reproduces_the_live_session_bitwise() {
+    let mut live = quick_session(40);
+    // interleaved Delete / Add / Group — the full edit vocabulary
+    live.commit(Edit::delete_row(0)).unwrap();
+    let add = add_row_for(&live);
+    live.commit(add).unwrap();
+    live.commit(Edit::group(vec![Edit::delete_row(5), Edit::delete_row(6)]))
+        .unwrap();
+
+    let path = tmp_path("replay");
+    let _ = std::fs::remove_file(&path);
+    live.save_artifact(&path).unwrap();
+
+    let art = Artifact::load(&path).unwrap();
+    let replayed = artifact::replay(&path).unwrap();
+    let diffs = artifact::divergence(&art, &replayed);
+    assert!(diffs.is_empty(), "replay diverged from the stored session: {diffs:?}");
+    assert_eq!(replayed.version(), 3);
+    assert_eq!(bits(replayed.w()), bits(live.w()), "replay diverged from the live session");
+
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn malformed_artifacts_fail_typed_and_saves_are_clobber_safe() {
+    let mut live = quick_session(20);
+    live.commit(Edit::delete_row(1)).unwrap();
+    let path = tmp_path("wire");
+    let _ = std::fs::remove_file(&path);
+    assert!(live.save_artifact(&path).unwrap().fresh);
+    // a same-content re-save is an idempotent no-op
+    assert!(!live.save_artifact(&path).unwrap().fresh);
+
+    let bytes = std::fs::read(&path).unwrap();
+    let bad_path = tmp_path("wire-bad");
+    let typed = |bytes: &[u8]| {
+        std::fs::write(&bad_path, bytes).unwrap();
+        let err = Artifact::load(&bad_path).unwrap_err();
+        err.downcast_ref::<ArtifactError>()
+            .unwrap_or_else(|| panic!("untyped artifact error: {err:?}"))
+            .clone()
+    };
+
+    // flipped payload byte -> hash mismatch (detected before decoding)
+    let mut corrupt = bytes.clone();
+    *corrupt.last_mut().unwrap() ^= 0x40;
+    assert!(matches!(typed(&corrupt), ArtifactError::HashMismatch { .. }));
+
+    // truncation -> typed, never a panic or an over-allocation
+    assert!(matches!(typed(&bytes[..bytes.len() / 2]), ArtifactError::Truncated));
+
+    // foreign file -> bad magic
+    let mut foreign = bytes.clone();
+    foreign[0] = b'X';
+    assert!(matches!(typed(&foreign), ArtifactError::BadMagic));
+
+    // future format version -> typed version error naming the version
+    let mut future = bytes.clone();
+    future[4..8].copy_from_slice(&99u32.to_le_bytes());
+    assert!(matches!(typed(&future), ArtifactError::UnsupportedVersion(99)));
+
+    // a path already holding DIFFERENT bytes is never clobbered
+    std::fs::write(&bad_path, b"precious non-artifact data").unwrap();
+    let err = live.save_artifact(&bad_path).unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<ArtifactError>(), Some(ArtifactError::ClobberMismatch { .. })),
+        "expected ClobberMismatch, got {err:?}"
+    );
+    assert_eq!(
+        std::fs::read(&bad_path).unwrap(),
+        b"precious non-artifact data",
+        "the existing file must survive the refused save"
+    );
+
+    std::fs::remove_file(&path).unwrap();
+    std::fs::remove_file(&bad_path).unwrap();
+}

@@ -23,6 +23,8 @@ fn small_cfg(policy: BatchPolicy) -> ServiceConfig {
         policy,
         readers: 0,
         query_cache: 0,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
     }
 }
 
@@ -512,6 +514,84 @@ fn memo_cache_invalidates_across_commits() {
     assert_eq!(m.cache_misses, 2);
     assert_eq!(m.cache_entries, 1);
     svc.shutdown().unwrap();
+}
+
+#[test]
+fn replicas_spawn_from_the_writers_artifact() {
+    // PR 6 gap closed: replicas warm-restore from the artifact the
+    // worker saves at spawn instead of retraining from the recipe —
+    // every reader reports restored=1 and still serves correct reads
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        readers: 2,
+        ..small_cfg(BatchPolicy {
+            max_group: 1,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        })
+    })
+    .unwrap();
+    // readers restore asynchronously after the worker hands them the
+    // artifact path; poll until both report in
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let m = svc.metrics().unwrap();
+        if m.reader_restores == 2 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "replicas never restored from the spawn artifact: restores {}",
+            m.reader_restores
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // a restored replica serves reads and replays commits like before
+    svc.update(Edit::delete_row(0)).unwrap();
+    await_replicas_current(&svc, 2);
+    let rep = svc.query(Query::Loss).unwrap();
+    assert_eq!(rep.version, 1);
+    match rep.result {
+        QueryResult::Loss { test_accuracy, .. } => assert!(test_accuracy.is_finite()),
+        other => panic!("wrong reply kind: {other:?}"),
+    }
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn checkpoint_every_commit_writes_loadable_store_artifacts() {
+    use deltagrad::session::artifact::Artifact;
+
+    let store = std::env::temp_dir()
+        .join(format!("deltagrad-test-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store);
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        checkpoint_every: 1,
+        checkpoint_dir: Some(store.clone()),
+        ..small_cfg(BatchPolicy {
+            max_group: 1,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        })
+    })
+    .unwrap();
+    svc.update(Edit::delete_row(0)).unwrap();
+    svc.update(Edit::delete_row(1)).unwrap();
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.checkpoints, 2, "K=1 must checkpoint every commit");
+    assert!(m.checkpoint_seconds > 0.0);
+    svc.shutdown().unwrap();
+
+    // the store holds one content-addressed file per version, and each
+    // round-trips through the typed loader
+    let mut versions = Vec::new();
+    for entry in std::fs::read_dir(&store).unwrap() {
+        let path = entry.unwrap().path();
+        assert_eq!(path.extension().and_then(|e| e.to_str()), Some("dgar"));
+        versions.push(Artifact::load(&path).unwrap().version);
+    }
+    versions.sort_unstable();
+    assert_eq!(versions, vec![1, 2]);
+    std::fs::remove_dir_all(&store).unwrap();
 }
 
 #[test]

@@ -31,10 +31,15 @@ import sys
 # resident/staged/session shapes, the index-list SGD series, the
 # resident-CG solve, the compacted long-tail series, the
 # query-throughput read-plane series — including its reader-scaling
-# "readers-N" variants — and the version-keyed memo-cache hit series)
+# "readers-N" variants — the version-keyed memo-cache hit series, and
+# the durable-artifact series: warm restore and checkpoint save.
+# NOTE markers are case-sensitive substrings: "session" deliberately
+# does NOT match the ungated "retrain-from-recipe (full SessionBuilder
+# train)" baseline, and "restore"/"checkpoint" do not collide with the
+# "(AOT artifact)" L-BFGS series)
 STAGED_MARKERS = (
     "staged", "resident", "session", "index-list", "compacted",
-    "query-throughput", "readers-", "cache-hit",
+    "query-throughput", "readers-", "cache-hit", "restore", "checkpoint",
 )
 
 DEFAULT_MAX_REGRESS = 0.10
