@@ -12,13 +12,18 @@
 #   3. cargo clippy --all-targets -- -D warnings
 #   4. durable-artifact round trip: save -> restore -> replay through the
 #      release CLI (replay exits nonzero if the rebuild diverges bitwise)
-#   5. cargo bench --bench micro -- --json BENCH_micro.json
-#   6. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
+#   5. chaos smoke: `serve` under a --fault-seed sweep with the WAL and a
+#      reader replica on — every injected run must exit clean (retried
+#      commits, supervised respawns) and at least one respawn must have
+#      fired across the sweep
+#   6. cargo bench --bench micro -- --json BENCH_micro.json
+#   7. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
 #      snapshot (tools/bench_diff.py) — fails on >10% mean regression of
 #      the staged paths (incl. the index-list SGD, resident-CG,
 #      compacted long-tail, query-throughput, reader-scaling,
-#      memo-cache-hit, artifact-restore, and checkpoint-save series;
-#      presence of those series is asserted)
+#      memo-cache-hit, artifact-restore, checkpoint-save,
+#      supervised-overhead, and wal-append series; presence of those
+#      series is asserted)
 # then asserts the bench JSON was produced, so upload/download-count
 # regressions (the staging discipline of rust/docs/PERFORMANCE.md) fail
 # loudly in review instead of silently drifting.
@@ -77,6 +82,29 @@ ci_art="$(ls "$ci_store"/*.dgar | head -n1)"
 ./target/release/deltagrad restore --path "$ci_art"
 ./target/release/deltagrad replay --path "$ci_art"
 
+echo "== ci: chaos smoke (deterministic fault injection under serve) =="
+# a small seed sweep so one lucky schedule cannot hide a hang: every run
+# must complete its whole edit stream (injected pass faults are retried,
+# reader respawns catch up via the spawn artifact + WAL) and exit 0
+chaos_respawns=0
+for seed in 1 2 3; do
+    chaos_store="$(mktemp -d /tmp/deltagrad-ci-chaos.XXXXXX)"
+    chaos_log="$chaos_store/serve.log"
+    ./target/release/deltagrad serve --model small --t 40 --requests 6 \
+        --readers 1 --wal --store "$chaos_store" \
+        --fault-seed "$seed" --fault-rate 0.5 | tee "$chaos_log"
+    # a zero-respawn run is legal for one seed (the sweep total is what
+    # must be nonzero), so the grep must not trip `set -e`
+    n="$(grep -o 'respawns=[0-9]*' "$chaos_log" | head -n1 | cut -d= -f2 || true)"
+    chaos_respawns=$((chaos_respawns + ${n:-0}))
+    rm -rf "$chaos_store"
+done
+if [ "$chaos_respawns" -eq 0 ]; then
+    echo "ci.sh FAIL: chaos smoke never exercised a reader respawn (respawns=0 across the sweep)" >&2
+    exit 1
+fi
+echo "ci.sh: chaos smoke ok ($chaos_respawns respawns across the sweep)"
+
 echo "== ci: cargo bench --bench micro -- --json BENCH_micro.json =="
 rm -f BENCH_micro.json # a stale file must not satisfy the check below
 cargo bench --bench micro -- --json BENCH_micro.json
@@ -91,7 +119,8 @@ fi
 # comparing nothing
 for series in "index-list" "resident state" "compacted tail" "segmented tail" \
               "query-throughput" "query-throughput-readers" "cache-hit" \
-              "session restore" "checkpoint-overhead" "retrain-from-recipe"; do
+              "session restore" "checkpoint-overhead" "retrain-from-recipe" \
+              "supervised-overhead" "wal-append"; do
     if ! grep -q "$series" BENCH_micro.json; then
         echo "ci.sh FAIL: bench series \"$series\" missing from BENCH_micro.json" >&2
         exit 1

@@ -93,6 +93,12 @@ class TestCompare:
             "checkpoint-overhead save_artifact (content-addressed)")
         assert not bench_diff.is_staged(
             "retrain-from-recipe (full SessionBuilder train)")
+        # the robustness series: supervised serving overhead and the
+        # fsync'd WAL append gate; "wal-" needs its hyphen
+        assert bench_diff.is_staged(
+            "supervised-overhead commit+loss (reader supervision, wal on)")
+        assert bench_diff.is_staged("wal-append edit record (fsync'd)")
+        assert not bench_diff.is_staged("random walk warmup")
 
     def test_reader_scaling_series_gates(self):
         name = "query-throughput-readers-4 loss (replica pool)"

@@ -22,7 +22,7 @@
 use std::time::Duration;
 
 use deltagrad::config::HyperParams;
-use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
+use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle, Supervision};
 use deltagrad::data::{sample_removal, synth, IndexSet};
 use deltagrad::lbfgs::History;
 use deltagrad::runtime::{Engine, Runtime};
@@ -438,6 +438,11 @@ fn main() -> anyhow::Result<()> {
                 query_cache: 0,
                 checkpoint_every: 0,
                 checkpoint_dir: None,
+                checkpoint_keep: 0,
+                wal: false,
+                restore_latest: false,
+                supervision: Supervision::default(),
+                faults: None,
             })?;
             let name = format!("query-throughput-readers-{r} loss (replica pool)");
             // each rep streams one commit through the writer while the
@@ -489,6 +494,11 @@ fn main() -> anyhow::Result<()> {
             query_cache: 8,
             checkpoint_every: 0,
             checkpoint_dir: None,
+            checkpoint_keep: 0,
+            wal: false,
+            restore_latest: false,
+            supervision: Supervision::default(),
+            faults: None,
         })?;
         // warm the entry: the first Loss at this version executes and
         // fills the cache; every benched rep is then a pure O(1) hit
@@ -568,6 +578,82 @@ fn main() -> anyhow::Result<()> {
             std::fs::remove_file(&p)?;
             Ok(())
         })?;
+    }
+
+    if want("wal-append") {
+        println!("== WAL append (fsync'd, O(edit) bytes per record) ==");
+        let rt = eng.runtime();
+        let wal_p = std::env::temp_dir()
+            .join(format!("deltagrad-bench-wal-{}.dgwal", std::process::id()));
+        let _ = std::fs::remove_file(&wal_p);
+        let mut w = deltagrad::session::artifact::WalWriter::create(&wal_p)?;
+        let mut version = 0u64;
+        // each rep journals one single-row deletion: framing + version +
+        // edit wire bytes, then fsync — the per-commit durability tax
+        bench(&mut results, &rt, "wal-append edit record (fsync'd)", 5, 200, || {
+            version += 1;
+            w.append(version, &Edit::delete_row(version as usize))?;
+            Ok(())
+        })?;
+        let _ = std::fs::remove_file(&wal_p);
+    }
+
+    if want("supervised-overhead") {
+        println!("== supervised serving overhead (reader supervision + WAL on) ==");
+        // the full robustness stack enabled but fault-free: one replica
+        // under supervision, the edit journal fsync'ing per commit.
+        // Each rep is one commit + one replica-served Loss read; the
+        // delta vs query-throughput-readers-1 is what supervision + WAL
+        // cost on the healthy path.
+        let rt = eng.runtime();
+        let store = std::env::temp_dir()
+            .join(format!("deltagrad-bench-supervised-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&store);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        let svc = ServiceHandle::spawn(ServiceConfig {
+            model: "small".into(),
+            seed: 7,
+            n_train: Some(512),
+            n_test: Some(256),
+            hp,
+            policy: BatchPolicy {
+                max_wait: Duration::from_millis(1),
+                max_query_queue: 64,
+                ..BatchPolicy::default()
+            },
+            readers: 1,
+            query_cache: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: Some(store.clone()),
+            checkpoint_keep: 4,
+            wal: true,
+            restore_latest: false,
+            supervision: Supervision::default(),
+            faults: None,
+        })?;
+        let mut victim = 0usize;
+        bench(
+            &mut results,
+            &rt,
+            "supervised-overhead commit+loss (reader supervision, wal on)",
+            1,
+            10,
+            || {
+                let urx = svc
+                    .update_async(Edit::delete_row(victim))
+                    .map_err(|e| anyhow::anyhow!("update rejected: {e:?}"))?;
+                victim += 1;
+                svc.query(Query::Loss)
+                    .map_err(|e| anyhow::anyhow!("query failed: {e:?}"))?;
+                urx.recv()?
+                    .map_err(|e| anyhow::anyhow!("update failed: {e:?}"))?;
+                Ok(())
+            },
+        )?;
+        svc.shutdown()?;
+        let _ = std::fs::remove_dir_all(&store);
     }
 
     if want("iter") {

@@ -102,6 +102,13 @@ fn main() -> anyhow::Result<()> {
                 },
                 readers,
                 query_cache: 0,
+                checkpoint_every: 0,
+                checkpoint_dir: None,
+                checkpoint_keep: 0,
+                wal: false,
+                restore_latest: false,
+                supervision: deltagrad::coordinator::Supervision::default(),
+                faults: None,
             })?;
             let t0 = std::time::Instant::now();
             for rep in 0..3usize {

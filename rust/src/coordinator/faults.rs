@@ -1,0 +1,341 @@
+//! Deterministic fault-injection plane for the serving coordinator.
+//!
+//! Every recovery path in the service (reader respawn, checkpoint
+//! fallback, WAL replay, worker pass rejection) is provable in tests
+//! only if failures can be produced on demand and reproducibly. This
+//! module provides that: a seed-driven [`FaultPlane`] consulted at the
+//! coordinator's hazard points — device upload/exec (the worker pass),
+//! reader delta replay, checkpoint write/read, and delta channel
+//! publication. Each consultation ("draw") is decided by a pure hash of
+//! `(seed, site, draw index)`, so a given seed produces the same fault
+//! schedule on every run, independent of wall-clock timing.
+//!
+//! The plane is shared as an `Arc` across the worker and reader
+//! threads. When disabled (the default — no `--fault-seed`/`--fault-rate`,
+//! `ServiceConfig.faults: None`) the single `enabled` check at the top
+//! of [`FaultPlane::trip`] makes every site a branch-predicted no-op:
+//! no atomics are touched and no hash is computed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A coordinator hazard point where a fault can be injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Staging an edit's rows/params onto the device for the worker pass.
+    DeviceUpload,
+    /// Executing the worker pass itself (Algorithm-3 iterations).
+    DeviceExec,
+    /// A reader replica applying a committed delta from its stream.
+    ReaderReplay,
+    /// Writing a checkpoint artifact to the content-addressed store.
+    CheckpointWrite,
+    /// Reading a checkpoint artifact back during recovery/respawn.
+    CheckpointRead,
+    /// Publishing a committed delta onto a reader's channel (lost message).
+    ChannelSend,
+}
+
+impl FaultSite {
+    pub const COUNT: usize = 6;
+    pub const ALL: [FaultSite; Self::COUNT] = [
+        FaultSite::DeviceUpload,
+        FaultSite::DeviceExec,
+        FaultSite::ReaderReplay,
+        FaultSite::CheckpointWrite,
+        FaultSite::CheckpointRead,
+        FaultSite::ChannelSend,
+    ];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::DeviceUpload => "device-upload",
+            FaultSite::DeviceExec => "device-exec",
+            FaultSite::ReaderReplay => "reader-replay",
+            FaultSite::CheckpointWrite => "checkpoint-write",
+            FaultSite::CheckpointRead => "checkpoint-read",
+            FaultSite::ChannelSend => "channel-send",
+        }
+    }
+}
+
+/// Knobs for the fault plane, carried on `ServiceConfig.faults`.
+///
+/// The CLI surface (`--fault-seed`, `--fault-rate`) fills `seed` and
+/// `rate` and leaves every site armed with no budget; tests narrow
+/// `sites` (e.g. only `ReaderReplay`) and/or cap total injections with
+/// `budget` to pin an exact failure schedule.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Seed for the deterministic per-draw decisions.
+    pub seed: u64,
+    /// Probability in `[0, 1]` that any given draw injects a fault.
+    /// `1.0` means every armed draw fails (useful with `budget`).
+    pub rate: f64,
+    /// Sites to arm; `None` arms all of them.
+    pub sites: Option<Vec<FaultSite>>,
+    /// Cap on total injected faults across all sites; `None` = unlimited.
+    pub budget: Option<u64>,
+}
+
+impl FaultConfig {
+    pub fn new(seed: u64, rate: f64) -> Self {
+        FaultConfig { seed, rate, sites: None, budget: None }
+    }
+}
+
+/// Per-site salts keep the decision streams of different sites
+/// decorrelated even under the same seed and draw index.
+const SITE_SALT: [u64; FaultSite::COUNT] = [
+    0x9e6b_55b1_d392_0e71,
+    0x2545_f491_4f6c_dd1d,
+    0xc2b2_ae3d_27d4_eb4f,
+    0x1656_67b1_9e37_79f9,
+    0x8ebc_6af0_9c88_c6e3,
+    0x5899_65cc_7537_4cc3,
+];
+
+#[inline]
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The shared fault-injection plane. See the module docs.
+pub struct FaultPlane {
+    enabled: bool,
+    seed: u64,
+    rate: f64,
+    armed: [bool; FaultSite::COUNT],
+    budget: Option<u64>,
+    drawn: [AtomicU64; FaultSite::COUNT],
+    injected: [AtomicU64; FaultSite::COUNT],
+    spent: AtomicU64,
+}
+
+impl FaultPlane {
+    /// A plane that never injects anything; `trip` is a single branch.
+    pub fn off() -> Arc<FaultPlane> {
+        Arc::new(FaultPlane {
+            enabled: false,
+            seed: 0,
+            rate: 0.0,
+            armed: [false; FaultSite::COUNT],
+            budget: None,
+            drawn: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: std::array::from_fn(|_| AtomicU64::new(0)),
+            spent: AtomicU64::new(0),
+        })
+    }
+
+    /// Build the plane from an optional config (`None` → disabled).
+    pub fn from_config(cfg: Option<FaultConfig>) -> Arc<FaultPlane> {
+        let Some(cfg) = cfg else { return Self::off() };
+        let mut armed = match &cfg.sites {
+            None => [true; FaultSite::COUNT],
+            Some(sites) => {
+                let mut m = [false; FaultSite::COUNT];
+                for s in sites {
+                    m[s.index()] = true;
+                }
+                m
+            }
+        };
+        let rate = cfg.rate.clamp(0.0, 1.0);
+        if rate == 0.0 {
+            armed = [false; FaultSite::COUNT];
+        }
+        Arc::new(FaultPlane {
+            enabled: rate > 0.0 && armed.iter().any(|&a| a),
+            seed: cfg.seed,
+            rate,
+            armed,
+            budget: cfg.budget,
+            drawn: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: std::array::from_fn(|_| AtomicU64::new(0)),
+            spent: AtomicU64::new(0),
+        })
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Consult the plane at `site`: returns `true` when the caller must
+    /// fail this operation. Each call consumes one draw at the site, so
+    /// a retried operation sees a fresh (still deterministic) decision.
+    #[inline]
+    pub fn trip(&self, site: FaultSite) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        self.trip_armed(site)
+    }
+
+    #[cold]
+    fn trip_armed(&self, site: FaultSite) -> bool {
+        let i = site.index();
+        if !self.armed[i] {
+            return false;
+        }
+        let n = self.drawn[i].fetch_add(1, Ordering::Relaxed);
+        let h = splitmix64(self.seed ^ SITE_SALT[i] ^ n.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        // 53 uniform bits in [0, 1); rate 1.0 therefore trips every draw
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u >= self.rate {
+            return false;
+        }
+        if let Some(b) = self.budget {
+            if self.spent.fetch_add(1, Ordering::Relaxed) >= b {
+                return false;
+            }
+        }
+        self.injected[i].fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Draws consulted at `site` so far.
+    pub fn drawn(&self, site: FaultSite) -> u64 {
+        self.drawn[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Faults actually injected at `site` so far.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total faults injected across all sites.
+    pub fn total_injected(&self) -> u64 {
+        self.injected.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plane_never_trips_and_counts_nothing() {
+        let p = FaultPlane::off();
+        assert!(!p.enabled());
+        for _ in 0..100 {
+            for s in FaultSite::ALL {
+                assert!(!p.trip(s));
+            }
+        }
+        for s in FaultSite::ALL {
+            assert_eq!(p.drawn(s), 0);
+            assert_eq!(p.injected(s), 0);
+        }
+        assert_eq!(p.total_injected(), 0);
+    }
+
+    #[test]
+    fn none_config_is_disabled_and_zero_rate_disarms() {
+        assert!(!FaultPlane::from_config(None).enabled());
+        let p = FaultPlane::from_config(Some(FaultConfig::new(7, 0.0)));
+        assert!(!p.enabled());
+        assert!(!p.trip(FaultSite::DeviceExec));
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mk = || FaultPlane::from_config(Some(FaultConfig::new(42, 0.3)));
+        let (a, b) = (mk(), mk());
+        for k in 0..200 {
+            let site = FaultSite::ALL[k % FaultSite::COUNT];
+            assert_eq!(a.trip(site), b.trip(site), "draw {k} diverged");
+        }
+        for s in FaultSite::ALL {
+            assert_eq!(a.injected(s), b.injected(s));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ_somewhere() {
+        let a = FaultPlane::from_config(Some(FaultConfig::new(1, 0.5)));
+        let b = FaultPlane::from_config(Some(FaultConfig::new(2, 0.5)));
+        let mut differs = false;
+        for _ in 0..256 {
+            if a.trip(FaultSite::ReaderReplay) != b.trip(FaultSite::ReaderReplay) {
+                differs = true;
+            }
+        }
+        assert!(differs, "256 draws under different seeds never disagreed");
+    }
+
+    #[test]
+    fn rate_one_trips_every_armed_draw() {
+        let p = FaultPlane::from_config(Some(FaultConfig::new(9, 1.0)));
+        for _ in 0..50 {
+            assert!(p.trip(FaultSite::ChannelSend));
+        }
+        assert_eq!(p.injected(FaultSite::ChannelSend), 50);
+        assert_eq!(p.drawn(FaultSite::ChannelSend), 50);
+    }
+
+    #[test]
+    fn site_mask_scopes_injection() {
+        let p = FaultPlane::from_config(Some(FaultConfig {
+            seed: 5,
+            rate: 1.0,
+            sites: Some(vec![FaultSite::ReaderReplay]),
+            budget: None,
+        }));
+        assert!(p.enabled());
+        assert!(p.trip(FaultSite::ReaderReplay));
+        assert!(!p.trip(FaultSite::DeviceUpload));
+        assert!(!p.trip(FaultSite::CheckpointWrite));
+        assert_eq!(p.total_injected(), 1);
+        // unarmed sites do not even consume draws
+        assert_eq!(p.drawn(FaultSite::DeviceUpload), 0);
+    }
+
+    #[test]
+    fn budget_caps_total_injections() {
+        let p = FaultPlane::from_config(Some(FaultConfig {
+            seed: 11,
+            rate: 1.0,
+            sites: None,
+            budget: Some(2),
+        }));
+        let mut hits = 0;
+        for _ in 0..20 {
+            if p.trip(FaultSite::DeviceExec) {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 2);
+        assert_eq!(p.total_injected(), 2);
+    }
+
+    #[test]
+    fn rates_roughly_track_over_many_draws() {
+        let p = FaultPlane::from_config(Some(FaultConfig::new(1234, 0.25)));
+        let n = 4000;
+        let mut hits = 0u64;
+        for _ in 0..n {
+            if p.trip(FaultSite::CheckpointRead) {
+                hits += 1;
+            }
+        }
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.05, "rate 0.25 produced {frac}");
+    }
+
+    #[test]
+    fn site_names_and_indices_are_stable() {
+        for (i, s) in FaultSite::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert!(!s.name().is_empty());
+        }
+    }
+}

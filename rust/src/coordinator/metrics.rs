@@ -61,6 +61,9 @@ pub struct Metrics {
     pub reader_replays: u64,
     /// replicas that came up by artifact restore (vs recipe retrain)
     pub reader_restores: u64,
+    /// in-place replica rebuilds after death/divergence/lag (the
+    /// supervision plane's recovery count)
+    pub respawns: u64,
     /// lowest version any replica has replayed to
     pub replica_min_version: u64,
     /// latest committed version minus `replica_min_version` (0 when
@@ -72,11 +75,19 @@ pub struct Metrics {
     pub cache_entries: u64,
     /// configured capacity (0 = cache disabled)
     pub cache_capacity: u64,
+    /// poisoned-lock recoveries: a panic while holding the cache lock
+    /// cleared the cache instead of propagating (should stay 0)
+    pub cache_resets: u64,
     // --- durability (worker-side) --------------------------------------
     /// artifact checkpoints written (`ServiceConfig::checkpoint_every`)
     pub checkpoints: u64,
     /// wall-clock seconds spent saving checkpoints
     pub checkpoint_seconds: f64,
+    /// edits appended to the sidecar WAL over the service's lifetime
+    /// (monotone; journal truncation does not subtract)
+    pub wal_records: u64,
+    /// bytes those appends wrote, framing included — O(edit) each
+    pub wal_bytes: u64,
 }
 
 impl Metrics {
@@ -127,6 +138,12 @@ impl Metrics {
     pub fn record_checkpoint(&mut self, seconds: f64) {
         self.checkpoints += 1;
         self.checkpoint_seconds += seconds;
+    }
+
+    /// Record one fsync'd WAL append of `bytes` bytes.
+    pub fn record_wal(&mut self, bytes: u64) {
+        self.wal_records += 1;
+        self.wal_bytes += bytes;
     }
 
     /// Record one served read query: its kind, end-to-end latency
@@ -278,17 +295,39 @@ impl Metrics {
                 self.replica_min_version,
                 self.replica_lag,
             ));
+            if self.respawns > 0 {
+                s.push_str(&format!(" respawns={}", self.respawns));
+            }
         }
         if self.cache_capacity > 0 {
-            s.push_str(&format!(
-                " cache(hits={} misses={} entries={}/{})",
-                self.cache_hits, self.cache_misses, self.cache_entries, self.cache_capacity,
-            ));
+            // `resets` only intrudes when nonzero, keeping the healthy
+            // cache section byte-identical to the pre-supervision output
+            if self.cache_resets > 0 {
+                s.push_str(&format!(
+                    " cache(hits={} misses={} entries={}/{} resets={})",
+                    self.cache_hits,
+                    self.cache_misses,
+                    self.cache_entries,
+                    self.cache_capacity,
+                    self.cache_resets,
+                ));
+            } else {
+                s.push_str(&format!(
+                    " cache(hits={} misses={} entries={}/{})",
+                    self.cache_hits, self.cache_misses, self.cache_entries, self.cache_capacity,
+                ));
+            }
         }
         if self.checkpoints > 0 {
             s.push_str(&format!(
                 " checkpoints={} ({:.3}s)",
                 self.checkpoints, self.checkpoint_seconds,
+            ));
+        }
+        if self.wal_records > 0 {
+            s.push_str(&format!(
+                " wal(records={} bytes={})",
+                self.wal_records, self.wal_bytes,
             ));
         }
         s
@@ -417,6 +456,28 @@ mod tests {
         m.record_checkpoint(0.25);
         let r = m.render();
         assert!(r.contains("checkpoints=2 (0.500s)"), "{r}");
+    }
+
+    #[test]
+    fn robustness_counters_render_only_when_nonzero() {
+        let mut m = Metrics::new();
+        m.readers = 2;
+        m.cache_capacity = 64;
+        let r = m.render();
+        // a healthy run's output is byte-identical to pre-supervision
+        assert!(!r.contains("respawns="), "{r}");
+        assert!(!r.contains("resets="), "{r}");
+        assert!(!r.contains("wal("), "{r}");
+        assert!(r.contains("entries=0/64)"), "{r}");
+        m.respawns = 3;
+        m.cache_resets = 1;
+        m.cache_hits = 5;
+        m.record_wal(37);
+        m.record_wal(41);
+        let r = m.render();
+        assert!(r.contains("respawns=3"), "{r}");
+        assert!(r.contains("cache(hits=5 misses=0 entries=0/64 resets=1)"), "{r}");
+        assert!(r.contains("wal(records=2 bytes=78)"), "{r}");
     }
 
     #[test]

@@ -12,11 +12,13 @@
 //! vLLM reference architecture describes, applied to unlearning.
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod readers;
 pub mod service;
 
 pub use batcher::{BatchPolicy, Pending};
+pub use faults::{FaultConfig, FaultPlane, FaultSite};
 pub use metrics::Metrics;
-pub use readers::{CommitDelta, ReaderPool, ReaderSpawn};
+pub use readers::{CommitDelta, ReaderPool, ReaderSpawn, Supervision};
 pub use service::{ModelSnapshot, Rejected, ServiceConfig, ServiceHandle, UpdateReply};

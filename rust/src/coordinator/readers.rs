@@ -21,27 +21,48 @@
 //! the deterministic [`ReaderSpawn`] recipe (the pre-artifact path,
 //! also bitwise).
 //!
+//! ## Supervision
+//!
+//! A replica failure — a replay error, a lost delta (version gap), a
+//! lag past [`Supervision::lag_watermark`], or an injected
+//! [`FaultSite::ReaderReplay`] fault — no longer kills the reader for
+//! the rest of the run. The reader thread keeps its channel and
+//! *respawns in place*: it rebuilds its session from the newest
+//! loadable checkpoint in the store (falling back to the writer's spawn
+//! artifact, then the recipe) and replays the sidecar WAL suffix to
+//! catch back up, under bounded exponential backoff with deterministic
+//! jitter and capped retries. While recovering it is marked unhealthy —
+//! dispatch routes around it (and the service falls back to
+//! writer-served reads when NO reader is healthy), and any query that
+//! still reaches it is rejected typed, never hung. Only when every
+//! retry is exhausted does the reader enter the terminal reject-all
+//! state. Respawn parity with the writer is bitwise (tests/recovery.rs).
+//!
 //! Ordering contract: the writer publishes each delta to EVERY reader
 //! BEFORE sending the commit's `UpdateReply`, and each reader channel is
 //! FIFO — so by the time a client can know about version v, every
 //! reader's queue already holds the deltas up to v ahead of any query
-//! the client sends next. Dispatch picks the least-lagged reader
-//! (highest replayed version, ties broken by fewest in-flight queries),
-//! which therefore answers at-or-above every version the client has
-//! observed: per-client reply versions stay monotone and always name a
-//! committed version, exactly the R=0 contract.
+//! the client sends next. Dispatch picks the least-lagged healthy
+//! reader (highest replayed version, ties broken by fewest in-flight
+//! queries), which therefore answers at-or-above every version the
+//! client has observed: per-client reply versions stay monotone and
+//! always name a committed version, exactly the R=0 contract.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use super::service::Rejected;
+use super::faults::{FaultPlane, FaultSite};
+use super::service::{lock_cache, Rejected};
 use crate::config::HyperParams;
+use crate::session::artifact;
 use crate::session::{Edit, Query, QueryCache, QueryReply, Session, SessionBuilder};
+use crate::util::Rng;
 
 /// One committed edit, as published by the writer to every reader: the
 /// replica applies `edit` through its own `Session::commit` and must
@@ -74,8 +95,55 @@ pub struct ReaderSpawn {
     pub hp: HyperParams,
 }
 
-struct Reader {
-    tx: Sender<ReaderCmd>,
+/// Reader-supervision knobs, carried on `ServiceConfig.supervision`.
+#[derive(Clone, Debug)]
+pub struct Supervision {
+    /// A replica more than this many committed versions behind the
+    /// writer resyncs from a fresh artifact instead of grinding through
+    /// its delta backlog.
+    pub lag_watermark: u64,
+    /// Respawn attempts per incident before the reader goes terminal.
+    pub max_respawns: u32,
+    /// First backoff delay; doubles per attempt (jittered ±50%).
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Seed for the deterministic backoff jitter (decorrelated per
+    /// reader index).
+    pub seed: u64,
+}
+
+impl Default for Supervision {
+    fn default() -> Self {
+        Supervision {
+            lag_watermark: 4096,
+            max_respawns: 5,
+            backoff_base: Duration::from_millis(25),
+            backoff_cap: Duration::from_secs(2),
+            seed: 0x0dd5_eed5,
+        }
+    }
+}
+
+/// Shared state the pool and service need from every reader, bundled so
+/// spawn plumbing stays flat.
+#[derive(Clone)]
+pub(crate) struct ReaderCtx {
+    pub cache: Arc<Mutex<QueryCache>>,
+    pub cache_resets: Arc<AtomicU64>,
+    /// the writer's latest committed version (lag detection)
+    pub latest: Arc<AtomicU64>,
+    pub faults: Arc<FaultPlane>,
+    /// checkpoint store to respawn from (None = checkpointing off)
+    pub store_dir: Option<PathBuf>,
+    /// sidecar WAL to replay during respawn (None = WAL off)
+    pub wal: Option<PathBuf>,
+    pub sup: Supervision,
+}
+
+/// Per-reader counters, shared between the reader thread and the pool.
+#[derive(Clone)]
+struct ReaderStats {
     /// latest version this replica has replayed to
     version: Arc<AtomicU64>,
     /// queries dispatched but not yet answered
@@ -84,6 +152,29 @@ struct Reader {
     replays: Arc<AtomicU64>,
     /// 1 if this replica was built by artifact restore (0 = recipe retrain)
     restored: Arc<AtomicU64>,
+    /// in-place rebuilds after death/divergence/lag
+    respawns: Arc<AtomicU64>,
+    /// false while recovering or terminal — dispatch routes around it
+    healthy: Arc<AtomicBool>,
+}
+
+impl ReaderStats {
+    fn new() -> Self {
+        ReaderStats {
+            version: Arc::new(AtomicU64::new(0)),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            served: Arc::new(AtomicU64::new(0)),
+            replays: Arc::new(AtomicU64::new(0)),
+            restored: Arc::new(AtomicU64::new(0)),
+            respawns: Arc::new(AtomicU64::new(0)),
+            healthy: Arc::new(AtomicBool::new(true)),
+        }
+    }
+}
+
+struct Reader {
+    tx: Sender<ReaderCmd>,
+    stats: ReaderStats,
     join: Option<JoinHandle<()>>,
 }
 
@@ -101,40 +192,18 @@ impl ReaderPool {
     /// Spawn `r` reader threads. Each builds its replica session on its
     /// own thread (its own PJRT client and staged buffers); commands
     /// queue during the build, so dispatch is valid immediately.
-    pub fn spawn(
-        r: usize,
-        spec: ReaderSpawn,
-        cache: Arc<Mutex<QueryCache>>,
-    ) -> Result<Self> {
+    pub(crate) fn spawn(r: usize, spec: ReaderSpawn, ctx: ReaderCtx) -> Result<Self> {
         let mut readers = Vec::with_capacity(r);
         for i in 0..r {
             let (tx, rx) = mpsc::channel::<ReaderCmd>();
-            let version = Arc::new(AtomicU64::new(0));
-            let inflight = Arc::new(AtomicUsize::new(0));
-            let served = Arc::new(AtomicU64::new(0));
-            let replays = Arc::new(AtomicU64::new(0));
-            let restored = Arc::new(AtomicU64::new(0));
+            let stats = ReaderStats::new();
             let spec_i = spec.clone();
-            let (v2, f2, s2, r2, e2, c2) = (
-                version.clone(),
-                inflight.clone(),
-                served.clone(),
-                replays.clone(),
-                restored.clone(),
-                cache.clone(),
-            );
+            let ctx_i = ctx.clone();
+            let stats_i = stats.clone();
             let join = std::thread::Builder::new()
                 .name(format!("deltagrad-{}-reader{i}", spec.model))
-                .spawn(move || reader_main(spec_i, rx, v2, f2, s2, r2, e2, c2))?;
-            readers.push(Reader {
-                tx,
-                version,
-                inflight,
-                served,
-                replays,
-                restored,
-                join: Some(join),
-            });
+                .spawn(move || reader_main(spec_i, rx, i, ctx_i, stats_i))?;
+            readers.push(Reader { tx, stats, join: Some(join) });
         }
         Ok(ReaderPool { readers })
     }
@@ -153,11 +222,14 @@ impl ReaderPool {
         self.readers.iter().map(|r| r.tx.clone()).collect()
     }
 
-    /// Dispatch one query to the least-lagged reader: highest replayed
-    /// version first (it answers at-or-above anything the client has
-    /// observed — see the module docs), fewest in-flight queries second.
-    /// `max_inflight` is the read lane's admission bound
-    /// (`BatchPolicy::max_query_queue` applied pool-wide).
+    /// Dispatch one query to the least-lagged HEALTHY reader: highest
+    /// replayed version first (it answers at-or-above anything the
+    /// client has observed — see the module docs), fewest in-flight
+    /// queries second. Recovering/terminal readers are routed around;
+    /// with no healthy reader at all this returns [`Rejected::Stopped`]
+    /// and the service degrades to writer-served reads. `max_inflight`
+    /// is the read lane's admission bound (`BatchPolicy::max_query_queue`
+    /// applied pool-wide).
     pub(crate) fn dispatch(
         &self,
         q: &Query,
@@ -166,22 +238,25 @@ impl ReaderPool {
         if self.total_inflight() >= max_inflight {
             return Err(Rejected::QueueFull { max_queue: max_inflight });
         }
-        let mut order: Vec<&Reader> = self.readers.iter().collect();
+        let mut order: Vec<&Reader> = self
+            .readers
+            .iter()
+            .filter(|r| r.stats.healthy.load(Ordering::SeqCst))
+            .collect();
         order.sort_by_key(|r| {
             (
-                std::cmp::Reverse(r.version.load(Ordering::SeqCst)),
-                r.inflight.load(Ordering::SeqCst),
+                std::cmp::Reverse(r.stats.version.load(Ordering::SeqCst)),
+                r.stats.inflight.load(Ordering::SeqCst),
             )
         });
         for r in order {
             let (rtx, rrx) = mpsc::channel();
-            r.inflight.fetch_add(1, Ordering::SeqCst);
+            r.stats.inflight.fetch_add(1, Ordering::SeqCst);
             match r.tx.send(ReaderCmd::Query(q.clone(), rtx)) {
                 Ok(()) => return Ok(rrx),
                 Err(_) => {
-                    // reader died (replica divergence or panic): undo
-                    // and try the next one
-                    r.inflight.fetch_sub(1, Ordering::SeqCst);
+                    // reader died (panic): undo and try the next one
+                    r.stats.inflight.fetch_sub(1, Ordering::SeqCst);
                 }
             }
         }
@@ -191,21 +266,21 @@ impl ReaderPool {
     pub fn total_inflight(&self) -> usize {
         self.readers
             .iter()
-            .map(|r| r.inflight.load(Ordering::SeqCst))
+            .map(|r| r.stats.inflight.load(Ordering::SeqCst))
             .sum()
     }
 
     pub fn total_served(&self) -> u64 {
         self.readers
             .iter()
-            .map(|r| r.served.load(Ordering::SeqCst))
+            .map(|r| r.stats.served.load(Ordering::SeqCst))
             .sum()
     }
 
     pub fn total_replays(&self) -> u64 {
         self.readers
             .iter()
-            .map(|r| r.replays.load(Ordering::SeqCst))
+            .map(|r| r.stats.replays.load(Ordering::SeqCst))
             .sum()
     }
 
@@ -214,8 +289,24 @@ impl ReaderPool {
     pub fn total_restores(&self) -> u64 {
         self.readers
             .iter()
-            .map(|r| r.restored.load(Ordering::SeqCst))
+            .map(|r| r.stats.restored.load(Ordering::SeqCst))
             .sum()
+    }
+
+    /// In-place replica rebuilds after death/divergence/lag, pool-wide.
+    pub fn total_respawns(&self) -> u64 {
+        self.readers
+            .iter()
+            .map(|r| r.stats.respawns.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    /// Readers currently able to take queries.
+    pub fn healthy(&self) -> usize {
+        self.readers
+            .iter()
+            .filter(|r| r.stats.healthy.load(Ordering::SeqCst))
+            .count()
     }
 
     /// Lowest replayed version across the pool (0 for an empty pool):
@@ -223,7 +314,7 @@ impl ReaderPool {
     pub fn min_version(&self) -> u64 {
         self.readers
             .iter()
-            .map(|r| r.version.load(Ordering::SeqCst))
+            .map(|r| r.stats.version.load(Ordering::SeqCst))
             .min()
             .unwrap_or(0)
     }
@@ -262,20 +353,27 @@ fn build_recipe(spec: &ReaderSpawn) -> Result<Session> {
 enum Step {
     Continue,
     Shutdown,
-    /// replica replay failed — the session no longer matches the writer
+    /// replica no longer matches the writer (replay failure, lost
+    /// delta, watermark lag, or an injected fault) — respawn it
     Diverged(String),
 }
 
-#[allow(clippy::too_many_arguments)]
+/// How a recovery incident ended.
+enum Recovered {
+    /// rebuilt and caught up — resume serving
+    Replica(Session),
+    /// shutdown arrived (or the service hung up) mid-recovery
+    Shutdown,
+    /// every retry exhausted — go terminal
+    GaveUp,
+}
+
 fn reader_main(
     spec: ReaderSpawn,
     rx: Receiver<ReaderCmd>,
-    version: Arc<AtomicU64>,
-    inflight: Arc<AtomicUsize>,
-    served: Arc<AtomicU64>,
-    replays: Arc<AtomicU64>,
-    restored: Arc<AtomicU64>,
-    cache: Arc<Mutex<QueryCache>>,
+    idx: usize,
+    ctx: ReaderCtx,
+    stats: ReaderStats,
 ) {
     // phase 1 — the construction handshake: the writer sends Init once
     // its own session exists (and its spawn artifact is on disk).
@@ -297,13 +395,13 @@ fn reader_main(
     let built = match &init {
         Some(path) => match SessionBuilder::restore_from(path) {
             Ok(s) => {
-                restored.store(1, Ordering::SeqCst);
-                version.store(s.version(), Ordering::SeqCst);
+                stats.restored.store(1, Ordering::SeqCst);
+                stats.version.store(s.version(), Ordering::SeqCst);
                 Ok(s)
             }
             Err(e) => {
                 eprintln!(
-                    "deltagrad reader: artifact restore from {} failed ({e:#}); \
+                    "deltagrad reader{idx}: artifact restore from {} failed ({e:#}); \
                      retraining from the recipe",
                     path.display()
                 );
@@ -315,80 +413,232 @@ fn reader_main(
     let mut session = match built {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("deltagrad reader: replica build failed: {e:#}");
+            eprintln!("deltagrad reader{idx}: replica build failed: {e:#}");
+            stats.healthy.store(false, Ordering::SeqCst);
             let why = format!("replica build failed: {e}");
             for cmd in pending {
-                reject_one(cmd, &inflight, &why);
+                reject_one(cmd, &stats.inflight, &why);
             }
-            reject_all(rx, &inflight, &why);
+            reject_all(rx, &stats.inflight, &why);
             return;
         }
     };
-    // phase 3 — serve: first whatever queued behind the handshake, then
-    // the live stream
-    for cmd in pending {
-        match apply(cmd, &mut session, &version, &inflight, &served, &replays, &cache) {
-            Step::Continue => {}
+    // phase 3 — serve, under supervision: a divergence triggers an
+    // in-place respawn (same thread, same channel) instead of killing
+    // the reader for the rest of the run
+    let mut pending = pending.into_iter();
+    loop {
+        let cmd = match pending.next() {
+            Some(c) => c,
+            None => match rx.recv() {
+                Ok(c) => c,
+                Err(_) => return,
+            },
+        };
+        let why = match apply(cmd, &mut session, &ctx, &stats) {
+            Step::Continue => continue,
             Step::Shutdown => return,
-            Step::Diverged(why) => {
-                reject_all(rx, &inflight, &why);
-                return;
+            Step::Diverged(why) => why,
+        };
+        stats.healthy.store(false, Ordering::SeqCst);
+        eprintln!("deltagrad reader{idx}: {why}; respawning");
+        match recover(&spec, &rx, idx, &init, &ctx, &stats, &why) {
+            Recovered::Replica(s) => {
+                session = s;
+                stats.version.store(session.version(), Ordering::SeqCst);
+                stats.respawns.fetch_add(1, Ordering::SeqCst);
+                stats.healthy.store(true, Ordering::SeqCst);
             }
-        }
-    }
-    while let Ok(cmd) = rx.recv() {
-        match apply(cmd, &mut session, &version, &inflight, &served, &replays, &cache) {
-            Step::Continue => {}
-            Step::Shutdown => return,
-            Step::Diverged(why) => {
-                reject_all(rx, &inflight, &why);
+            Recovered::Shutdown => return,
+            Recovered::GaveUp => {
+                eprintln!(
+                    "deltagrad reader{idx}: respawn retries exhausted; reader is terminal"
+                );
+                reject_all(rx, &stats.inflight, &why);
                 return;
             }
         }
     }
 }
 
-fn apply(
-    cmd: ReaderCmd,
-    session: &mut Session,
-    version: &AtomicU64,
-    inflight: &AtomicUsize,
-    served: &AtomicU64,
-    replays: &AtomicU64,
-    cache: &Mutex<QueryCache>,
-) -> Step {
+/// One respawn incident: drain the channel (rejecting queries typed,
+/// honoring shutdown), then rebuild the replica with bounded
+/// exponential backoff and deterministic jitter, capped at
+/// `sup.max_respawns` attempts.
+fn recover(
+    spec: &ReaderSpawn,
+    rx: &Receiver<ReaderCmd>,
+    idx: usize,
+    init: &Option<PathBuf>,
+    ctx: &ReaderCtx,
+    stats: &ReaderStats,
+    why: &str,
+) -> Recovered {
+    let incident = stats.respawns.load(Ordering::SeqCst);
+    let mut rng = Rng::new(
+        ctx.sup
+            .seed
+            .wrapping_add((idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            .wrapping_add(incident.wrapping_mul(0xc2b2_ae3d_27d4_eb4f)),
+    );
+    for attempt in 1..=ctx.sup.max_respawns.max(1) {
+        if attempt > 1 {
+            // bounded exponential backoff, jittered ±50% so R readers
+            // recovering from the same incident do not stampede the
+            // store in lockstep
+            let exp = ctx
+                .sup
+                .backoff_base
+                .saturating_mul(1u32 << (attempt - 2).min(16));
+            let jitter = 0.5 + rng.next_f64();
+            std::thread::sleep(exp.min(ctx.sup.backoff_cap).mul_f64(jitter));
+        }
+        // whatever queued while we were down: queries are rejected
+        // typed (never hung), deltas are superseded by the rebuild,
+        // shutdown wins immediately
+        loop {
+            match rx.try_recv() {
+                Ok(ReaderCmd::Shutdown) => return Recovered::Shutdown,
+                Ok(cmd @ ReaderCmd::Query(..)) => reject_one(cmd, &stats.inflight, why),
+                Ok(_) => {}
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return Recovered::Shutdown,
+            }
+        }
+        match rebuild(spec, init, ctx) {
+            Ok(s) => return Recovered::Replica(s),
+            Err(e) => eprintln!(
+                "deltagrad reader{idx}: respawn attempt {attempt}/{} failed: {e:#}",
+                ctx.sup.max_respawns.max(1)
+            ),
+        }
+    }
+    Recovered::GaveUp
+}
+
+/// Rebuild a replica and catch it up: newest loadable store checkpoint
+/// → writer's spawn artifact → recipe retrain, then replay the sidecar
+/// WAL suffix. Fails (for this attempt) if the result is still behind
+/// the writer's published latest — a stale replica must not serve.
+fn rebuild(spec: &ReaderSpawn, init: &Option<PathBuf>, ctx: &ReaderCtx) -> Result<Session> {
+    let mut base: Option<Session> = None;
+    if let Some(dir) = &ctx.store_dir {
+        for (cv, path) in artifact::store_checkpoints(dir, &spec.model)? {
+            if ctx.faults.trip(FaultSite::CheckpointRead) {
+                eprintln!(
+                    "deltagrad reader: injected {} fault, skipping checkpoint v{cv}",
+                    FaultSite::CheckpointRead.name()
+                );
+                continue;
+            }
+            match SessionBuilder::restore_from(&path) {
+                Ok(s) => {
+                    base = Some(s);
+                    break;
+                }
+                Err(e) => eprintln!(
+                    "deltagrad reader: checkpoint v{cv} {} unreadable ({e:#}); \
+                     falling back to the previous checkpoint",
+                    path.display()
+                ),
+            }
+        }
+    }
+    if base.is_none() {
+        if let Some(path) = init {
+            match SessionBuilder::restore_from(path) {
+                Ok(s) => base = Some(s),
+                Err(e) => eprintln!(
+                    "deltagrad reader: spawn artifact {} unreadable ({e:#}); \
+                     falling back to the recipe",
+                    path.display()
+                ),
+            }
+        }
+    }
+    let mut session = match base {
+        Some(s) => s,
+        None => build_recipe(spec)?,
+    };
+    if let Some(wal) = &ctx.wal {
+        artifact::wal_replay_onto(&mut session, wal)?;
+    }
+    let latest = ctx.latest.load(Ordering::SeqCst);
+    if session.version() < latest {
+        bail!(
+            "recovered to v{} but the writer is at v{latest} \
+             (no checkpoint or WAL suffix covers the gap)",
+            session.version()
+        );
+    }
+    Ok(session)
+}
+
+fn apply(cmd: ReaderCmd, session: &mut Session, ctx: &ReaderCtx, stats: &ReaderStats) -> Step {
     match cmd {
         ReaderCmd::Init(_) => Step::Continue, // handshake already done
-        ReaderCmd::Delta(d) => match session.commit(d.edit) {
-            Ok(c) => {
-                debug_assert_eq!(
-                    c.version, d.version,
-                    "replica replay diverged from the writer's version"
-                );
-                version.store(c.version, Ordering::SeqCst);
-                replays.fetch_add(1, Ordering::SeqCst);
-                Step::Continue
+        ReaderCmd::Delta(d) => {
+            let at = session.version();
+            if d.version <= at {
+                // already covered by a respawn's checkpoint/WAL catch-up
+                return Step::Continue;
             }
-            Err(e) => {
-                // the writer committed this exact edit, so a replica
-                // failure means divergence — refuse to serve stale
-                // state; dispatch skips dead readers
-                eprintln!("deltagrad reader: replica replay failed: {e:#}");
-                Step::Diverged(format!("replica diverged: {e}"))
+            if d.version != at + 1 {
+                // a delta went missing (lost message): the stream can
+                // never reconverge by replay alone
+                return Step::Diverged(format!(
+                    "replica missed deltas (at v{at}, next delta is v{})",
+                    d.version
+                ));
             }
-        },
+            let latest = ctx.latest.load(Ordering::SeqCst);
+            if latest > d.version && latest - d.version > ctx.sup.lag_watermark {
+                // far behind the writer: resync from a fresh artifact
+                // instead of grinding through the backlog
+                return Step::Diverged(format!(
+                    "replica lag {} exceeds watermark {}",
+                    latest - d.version,
+                    ctx.sup.lag_watermark
+                ));
+            }
+            if ctx.faults.trip(FaultSite::ReaderReplay) {
+                return Step::Diverged(format!(
+                    "injected {} fault at v{}",
+                    FaultSite::ReaderReplay.name(),
+                    d.version
+                ));
+            }
+            match session.commit(d.edit) {
+                Ok(c) => {
+                    debug_assert_eq!(
+                        c.version, d.version,
+                        "replica replay diverged from the writer's version"
+                    );
+                    stats.version.store(c.version, Ordering::SeqCst);
+                    stats.replays.fetch_add(1, Ordering::SeqCst);
+                    Step::Continue
+                }
+                Err(e) => {
+                    // the writer committed this exact edit, so a replica
+                    // failure means divergence — refuse to serve stale
+                    // state and respawn
+                    eprintln!("deltagrad reader: replica replay failed: {e:#}");
+                    Step::Diverged(format!("replica diverged: {e}"))
+                }
+            }
+        }
         ReaderCmd::Query(q, reply) => {
             let res = session
                 .query(&q)
                 .map_err(|e| Rejected::Failed(e.to_string()));
             if let Ok(rep) = &res {
-                let mut c = cache.lock().expect("query cache poisoned");
+                let mut c = lock_cache(&ctx.cache, &ctx.cache_resets);
                 if c.enabled() {
                     c.insert(&q, rep.clone());
                 }
             }
-            served.fetch_add(1, Ordering::SeqCst);
-            inflight.fetch_sub(1, Ordering::SeqCst);
+            stats.served.fetch_add(1, Ordering::SeqCst);
+            stats.inflight.fetch_sub(1, Ordering::SeqCst);
             let _ = reply.send(res);
             Step::Continue
         }

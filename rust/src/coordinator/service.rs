@@ -54,13 +54,26 @@
 //! ([`ReaderCmd::Init`]) so replicas warm-restore instead of retraining,
 //! and `checkpoint_every = K` snapshots the session into the
 //! content-addressed artifact store every K commits
-//! ([`artifact::save_to_store`]) — a crashed service warm-restarts from
-//! its latest checkpoint via `SessionBuilder::restore_from`.
+//! ([`artifact::save_to_store`], pruned to the newest `checkpoint_keep`
+//! files). With `wal = true` every committed edit is ALSO appended —
+//! fsync'd, checksummed, O(edit) bytes — to a sidecar journal, so a
+//! crashed service recovers every acknowledged commit:
+//! `restore_latest = true` warm-restarts from the newest loadable
+//! checkpoint plus the journal suffix (bitwise, audited by
+//! [`artifact::divergence`] in tests/recovery.rs).
+//!
+//! Failure is a first-class input: `ServiceConfig.faults` arms the
+//! deterministic [`FaultPlane`](super::faults) consulted at the worker
+//! pass (device upload/exec), checkpoint write, and delta publication;
+//! readers consult it at replay and checkpoint read. An injected pass
+//! fault rejects the group typed ([`Rejected::Failed`]) with session
+//! state untouched; a lost delta or replay fault triggers the reader's
+//! supervised in-place respawn (see the readers module docs).
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -69,10 +82,11 @@ use anyhow::Result;
 use super::batcher::{
     admits, admits_query, group_to_commit, time_until_commit, BatchPolicy, Pending,
 };
+use super::faults::{FaultConfig, FaultPlane, FaultSite};
 use super::metrics::Metrics;
-use super::readers::{CommitDelta, ReaderCmd, ReaderPool, ReaderSpawn};
+use super::readers::{CommitDelta, ReaderCmd, ReaderCtx, ReaderPool, ReaderSpawn, Supervision};
 use crate::config::HyperParams;
-use crate::session::{artifact, Edit, Query, QueryCache, QueryReply, SessionBuilder};
+use crate::session::{artifact, Edit, Query, QueryCache, QueryReply, Session, SessionBuilder};
 
 /// What the service sends back for one served edit.
 #[derive(Clone, Debug)]
@@ -114,6 +128,27 @@ impl std::fmt::Display for Rejected {
 
 impl std::error::Error for Rejected {}
 
+/// Lock the shared query cache, absorbing a poisoned lock: if a thread
+/// panicked while holding it, the entries written around the panic are
+/// untrusted — clear them, clear the poison flag, bump `resets`, and
+/// keep serving (the cache rebuilds from misses). Shared with the
+/// reader pool; the `cache_resets` metric reports the count.
+pub(crate) fn lock_cache<'a>(
+    cache: &'a Mutex<QueryCache>,
+    resets: &AtomicU64,
+) -> MutexGuard<'a, QueryCache> {
+    match cache.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            resets.fetch_add(1, Ordering::SeqCst);
+            cache.clear_poison();
+            let mut g = poisoned.into_inner();
+            g.clear();
+            g
+        }
+    }
+}
+
 /// Read-only model snapshot.
 #[derive(Clone, Debug)]
 pub struct ModelSnapshot {
@@ -126,7 +161,7 @@ pub struct ModelSnapshot {
 enum Command {
     Update(Edit, Sender<Result<UpdateReply, Rejected>>),
     Query(Query, Sender<Result<QueryReply, Rejected>>),
-    Snapshot(Sender<ModelSnapshot>),
+    Snapshot(Sender<Result<ModelSnapshot, Rejected>>),
     Metrics(Sender<Metrics>),
     Shutdown,
 }
@@ -155,6 +190,25 @@ pub struct ServiceConfig {
     /// store ([`artifact::store_dir`]: `$DELTAGRAD_STORE` or
     /// `.deltagrad/artifacts/`).
     pub checkpoint_dir: Option<PathBuf>,
+    /// keep only the newest K checkpoints per model after each
+    /// successful save (`--checkpoint-keep`; 0 = keep everything).
+    pub checkpoint_keep: usize,
+    /// append every committed edit to a durable sidecar WAL in the
+    /// store directory (fsync'd, checksummed, O(edit) bytes per
+    /// commit); crashes then lose NO acknowledged commit — recovery is
+    /// checkpoint + journal replay (`--wal`).
+    pub wal: bool,
+    /// start by recovering the newest loadable checkpoint + WAL suffix
+    /// from the store instead of training fresh (`--restore-latest`).
+    /// Falls back to recipe build + WAL replay when the store has no
+    /// checkpoint yet.
+    pub restore_latest: bool,
+    /// reader supervision knobs (respawn backoff, retry cap, lag
+    /// watermark); `Supervision::default()` is the serving default.
+    pub supervision: Supervision,
+    /// deterministic fault injection (`--fault-seed`/`--fault-rate`);
+    /// None (default) = disabled, every hazard site is a no-op branch.
+    pub faults: Option<FaultConfig>,
 }
 
 /// Client handle to a running service.
@@ -169,6 +223,7 @@ pub struct ServiceHandle {
     /// commit's replies) — the memo key for handle-side cache lookups
     latest: Arc<AtomicU64>,
     cache: Arc<Mutex<QueryCache>>,
+    cache_resets: Arc<AtomicU64>,
     pool: ReaderPool,
 }
 
@@ -191,6 +246,9 @@ impl ServiceHandle {
         let max_query_queue = cfg.policy.max_query_queue;
         let latest = Arc::new(AtomicU64::new(0));
         let cache = Arc::new(Mutex::new(QueryCache::new(cfg.query_cache)));
+        let cache_resets = Arc::new(AtomicU64::new(0));
+        let faults = FaultPlane::from_config(cfg.faults.clone());
+        let store_dir = cfg.checkpoint_dir.clone().unwrap_or_else(artifact::store_dir);
         // the read plane: R replica sessions, kept current by the
         // worker's delta stream (empty pool when R=0)
         let pool = if cfg.readers > 0 {
@@ -203,7 +261,15 @@ impl ServiceHandle {
                     n_test: cfg.n_test,
                     hp: cfg.hp.clone(),
                 },
-                cache.clone(),
+                ReaderCtx {
+                    cache: cache.clone(),
+                    cache_resets: cache_resets.clone(),
+                    latest: latest.clone(),
+                    faults: faults.clone(),
+                    store_dir: (cfg.checkpoint_every > 0).then(|| store_dir.clone()),
+                    wal: cfg.wal.then(|| artifact::wal_path(&store_dir, &cfg.model)),
+                    sup: cfg.supervision.clone(),
+                },
             )?
         } else {
             ReaderPool::empty()
@@ -211,7 +277,9 @@ impl ServiceHandle {
         let shared = WorkerShared {
             latest: latest.clone(),
             cache: cache.clone(),
+            cache_resets: cache_resets.clone(),
             delta_txs: pool.delta_senders(),
+            faults,
         };
         let join = std::thread::Builder::new()
             .name(format!("deltagrad-{}", cfg.model))
@@ -223,12 +291,15 @@ impl ServiceHandle {
             max_query_queue,
             latest,
             cache,
+            cache_resets,
             pool,
         })
     }
 
-    fn tx(&self) -> &SyncSender<Command> {
-        self.tx.as_ref().expect("service handle already shut down")
+    /// The command sender, or [`Rejected::Stopped`] after shutdown —
+    /// use-after-shutdown is a typed rejection, never a panic.
+    fn tx(&self) -> Result<&SyncSender<Command>, Rejected> {
+        self.tx.as_ref().ok_or(Rejected::Stopped)
     }
 
     /// Enqueue one edit; blocks until it is committed (or rejected).
@@ -248,7 +319,7 @@ impl ServiceHandle {
         edit: Edit,
     ) -> Result<Receiver<Result<UpdateReply, Rejected>>, Rejected> {
         let (rtx, rrx) = mpsc::channel();
-        match self.tx().try_send(Command::Update(edit, rtx)) {
+        match self.tx()?.try_send(Command::Update(edit, rtx)) {
             Ok(()) => Ok(rrx),
             Err(TrySendError::Full(_)) => Err(Rejected::QueueFull { max_queue: self.max_queue }),
             Err(TrySendError::Disconnected(_)) => Err(Rejected::Stopped),
@@ -271,13 +342,15 @@ impl ServiceHandle {
     /// Served in priority order: the memo cache (a hit answers from the
     /// handle with zero transfers, at the latest committed version),
     /// then the reader pool (R>0: concurrent with passes), then the
-    /// worker's between-pass lane (R=0, today's path).
+    /// worker's between-pass lane (R=0, today's path — ALSO the
+    /// degraded path when every reader is down or recovering, so reads
+    /// keep flowing instead of failing).
     pub fn query_async(
         &self,
         q: Query,
     ) -> Result<Receiver<Result<QueryReply, Rejected>>, Rejected> {
         {
-            let mut cache = self.cache.lock().expect("query cache poisoned");
+            let mut cache = lock_cache(&self.cache, &self.cache_resets);
             if cache.enabled() {
                 if let Some(rep) = cache.get(self.latest.load(Ordering::SeqCst), &q) {
                     let (rtx, rrx) = mpsc::channel();
@@ -287,10 +360,15 @@ impl ServiceHandle {
             }
         }
         if !self.pool.is_empty() {
-            return self.pool.dispatch(&q, self.max_query_queue);
+            match self.pool.dispatch(&q, self.max_query_queue) {
+                // no healthy replica right now: degrade gracefully to
+                // writer-served reads (the R=0 lane) instead of failing
+                Err(Rejected::Stopped) => {}
+                other => return other,
+            }
         }
         let (rtx, rrx) = mpsc::channel();
-        match self.tx().try_send(Command::Query(q, rtx)) {
+        match self.tx()?.try_send(Command::Query(q, rtx)) {
             Ok(()) => Ok(rrx),
             Err(TrySendError::Full(_)) => {
                 Err(Rejected::QueueFull { max_queue: self.max_query_queue })
@@ -301,17 +379,18 @@ impl ServiceHandle {
 
     pub fn snapshot(&self) -> Result<ModelSnapshot> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx()
+        self.tx()?
             .send(Command::Snapshot(rtx))
             .map_err(|_| anyhow::anyhow!("service stopped"))?;
-        Ok(rrx.recv()?)
+        rrx.recv()?
+            .map_err(|r| anyhow::anyhow!("snapshot rejected: {r}"))
     }
 
     /// Worker-side metrics, overlaid with the handle-side read-plane
     /// counters (reader pool + memo cache live outside the worker).
     pub fn metrics(&self) -> Result<Metrics> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx()
+        self.tx()?
             .send(Command::Metrics(rtx))
             .map_err(|_| anyhow::anyhow!("service stopped"))?;
         let mut m = rrx.recv()?;
@@ -319,16 +398,18 @@ impl ServiceHandle {
         m.reader_queries = self.pool.total_served();
         m.reader_replays = self.pool.total_replays();
         m.reader_restores = self.pool.total_restores();
+        m.respawns = self.pool.total_respawns();
         if !self.pool.is_empty() {
             let latest = self.latest.load(Ordering::SeqCst);
             m.replica_min_version = self.pool.min_version();
             m.replica_lag = latest.saturating_sub(m.replica_min_version);
         }
-        let cs = self.cache.lock().expect("query cache poisoned").stats();
+        let cs = lock_cache(&self.cache, &self.cache_resets).stats();
         m.cache_hits = cs.hits;
         m.cache_misses = cs.misses;
         m.cache_entries = cs.entries;
         m.cache_capacity = cs.capacity;
+        m.cache_resets = self.cache_resets.load(Ordering::SeqCst);
         Ok(m)
     }
 
@@ -373,7 +454,9 @@ struct PendingQuery {
 struct WorkerShared {
     latest: Arc<AtomicU64>,
     cache: Arc<Mutex<QueryCache>>,
+    cache_resets: Arc<AtomicU64>,
     delta_txs: Vec<Sender<ReaderCmd>>,
+    faults: Arc<FaultPlane>,
 }
 
 /// Best-effort cleanup of the writer's spawn artifact: the file only
@@ -393,19 +476,49 @@ impl Drop for SpawnArtifact {
 /// coexist in one process — the benches and tests do).
 static SPAWN_SEQ: AtomicU64 = AtomicU64::new(0);
 
+fn build_fresh(cfg: &ServiceConfig) -> Result<Session> {
+    SessionBuilder::new(&cfg.model)
+        .seed(cfg.seed)
+        .n_train(cfg.n_train)
+        .n_test(cfg.n_test)
+        .hyper_params(cfg.hp.clone())
+        .build()
+}
+
 fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Result<()> {
     // the service serves commits, which are GD-only (Algorithm-3 cache
     // rewriting) — reject an SGD config before paying for training
     if cfg.hp.batch != 0 {
         anyhow::bail!("the unlearning service requires a GD config (hp.batch == 0)");
     }
-    // --- initialization: one Session owns engine, data, model, staging
-    let built = SessionBuilder::new(&cfg.model)
-        .seed(cfg.seed)
-        .n_train(cfg.n_train)
-        .n_test(cfg.n_test)
-        .hyper_params(cfg.hp.clone())
-        .build();
+    let store_dir = cfg.checkpoint_dir.clone().unwrap_or_else(artifact::store_dir);
+    // --- initialization: one Session owns engine, data, model, staging.
+    // `restore_latest` recovers the previous run — newest loadable
+    // checkpoint + WAL suffix; an empty store degrades to recipe build
+    // + WAL replay, so a service that crashed before its first
+    // checkpoint still loses nothing.
+    let built = if cfg.restore_latest {
+        match artifact::restore_latest(&store_dir, &cfg.model) {
+            Ok(s) => Ok(s),
+            Err(e) => {
+                eprintln!(
+                    "deltagrad service: restore-latest found no loadable checkpoint \
+                     ({e:#}); rebuilding from the recipe + WAL"
+                );
+                build_fresh(&cfg).and_then(|mut s| {
+                    if cfg.wal {
+                        artifact::wal_replay_onto(
+                            &mut s,
+                            &artifact::wal_path(&store_dir, &cfg.model),
+                        )?;
+                    }
+                    Ok(s)
+                })
+            }
+        }
+    } else {
+        build_fresh(&cfg)
+    };
     let mut session = match built {
         Ok(s) => s,
         Err(e) => {
@@ -416,6 +529,30 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
             }
             return Err(e);
         }
+    };
+    // a recovered session resumes at its restored version — publish it
+    // so cache keys and lag accounting start correct
+    shared.latest.store(session.version(), Ordering::SeqCst);
+    // the durable journal: fresh runs start a fresh journal (their
+    // version counter restarts), restore-latest continues the one it
+    // just replayed. A failed open degrades to running without a WAL —
+    // durability is reported through `wal_records`, never a crash.
+    let mut wal = if cfg.wal {
+        let path = artifact::wal_path(&store_dir, &cfg.model);
+        let opened = if cfg.restore_latest {
+            artifact::WalWriter::open_append(&path)
+        } else {
+            artifact::WalWriter::create(&path)
+        };
+        match opened {
+            Ok(w) => Some(w),
+            Err(e) => {
+                eprintln!("deltagrad service: WAL open failed ({e:#}); journaling disabled");
+                None
+            }
+        }
+    } else {
+        None
     };
     // hand every replica the writer's own state: save one spawn
     // artifact and point the readers at it (Init). A reader restores in
@@ -494,15 +631,22 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                         }));
                     }
                 }
-                Command::Snapshot(reply) => {
-                    let snap = session.snapshot()?;
-                    let _ = reply.send(ModelSnapshot {
-                        version: snap.version,
-                        w: snap.w,
-                        n_train: snap.n_train,
-                        test_accuracy: snap.test_accuracy,
-                    });
-                }
+                Command::Snapshot(reply) => match session.snapshot() {
+                    Ok(snap) => {
+                        let _ = reply.send(Ok(ModelSnapshot {
+                            version: snap.version,
+                            w: snap.w,
+                            n_train: snap.n_train,
+                            test_accuracy: snap.test_accuracy,
+                        }));
+                    }
+                    Err(e) => {
+                        // a failed snapshot must not take down the
+                        // serving loop — the caller gets a typed error
+                        eprintln!("deltagrad service: snapshot failed: {e:#}");
+                        let _ = reply.send(Err(Rejected::Failed(e.to_string())));
+                    }
+                },
                 Command::Metrics(reply) => {
                     let _ = reply.send(metrics.clone());
                 }
@@ -517,8 +661,37 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
             let (dels, adds) = edit.count_kinds();
             // keep a copy for the delta stream: `commit` consumes its edit
             let delta_edit = edit.clone();
-            match session.commit(edit) {
+            // the fault plane models a device failure DURING the pass:
+            // an injected fault fails the group before the session is
+            // touched — the same contract as a real pass error (the
+            // double-buffered commit leaves state untouched on failure)
+            let injected = if shared.faults.trip(FaultSite::DeviceUpload) {
+                Some(FaultSite::DeviceUpload)
+            } else if shared.faults.trip(FaultSite::DeviceExec) {
+                Some(FaultSite::DeviceExec)
+            } else {
+                None
+            };
+            let committed = match injected {
+                Some(site) => Err(anyhow::anyhow!(
+                    "injected {} fault during the pass",
+                    site.name()
+                )),
+                None => session.commit(edit),
+            };
+            match committed {
                 Ok(c) => {
+                    // journal FIRST: once any client sees this commit
+                    // acknowledged, a crash must be able to replay it
+                    if let Some(w) = wal.as_mut() {
+                        match w.append(c.version, &delta_edit) {
+                            Ok(bytes) => metrics.record_wal(bytes),
+                            Err(e) => eprintln!(
+                                "deltagrad service: WAL append at v{} failed: {e:#}",
+                                c.version
+                            ),
+                        }
+                    }
                     // publish to the read plane BEFORE any client learns
                     // of the commit: (1) the latest-version watermark
                     // (handle-side cache key), (2) commit-time cache
@@ -527,12 +700,13 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                     // finds the delta already FIFO-queued ahead of its
                     // query on whichever reader serves it
                     shared.latest.store(c.version, Ordering::SeqCst);
-                    shared
-                        .cache
-                        .lock()
-                        .expect("query cache poisoned")
-                        .retain_version(c.version);
+                    lock_cache(&shared.cache, &shared.cache_resets).retain_version(c.version);
                     for tx in &shared.delta_txs {
+                        if shared.faults.trip(FaultSite::ChannelSend) {
+                            // lost message: the reader sees the version
+                            // gap on the NEXT delta and respawns
+                            continue;
+                        }
                         let _ = tx.send(ReaderCmd::Delta(CommitDelta {
                             version: c.version,
                             edit: delta_edit.clone(),
@@ -551,14 +725,49 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                     if cfg.checkpoint_every > 0
                         && c.version % cfg.checkpoint_every as u64 == 0
                     {
-                        let dir = cfg
-                            .checkpoint_dir
-                            .clone()
-                            .unwrap_or_else(artifact::store_dir);
                         let t = Instant::now();
-                        match artifact::save_to_store(&session, &dir) {
+                        let saved = if shared.faults.trip(FaultSite::CheckpointWrite) {
+                            Err(anyhow::anyhow!(
+                                "injected {} fault",
+                                FaultSite::CheckpointWrite.name()
+                            ))
+                        } else {
+                            artifact::save_to_store(&session, &store_dir)
+                        };
+                        match saved {
                             Ok(_) => {
-                                metrics.record_checkpoint(t.elapsed().as_secs_f64())
+                                metrics.record_checkpoint(t.elapsed().as_secs_f64());
+                                // retention and journal truncation ride
+                                // a SUCCESSFUL save only: prune to the
+                                // newest K checkpoints, then drop WAL
+                                // records the oldest RETAINED checkpoint
+                                // already covers (recovery from any
+                                // retained checkpoint keeps a contiguous
+                                // journal suffix)
+                                if let Err(e) = artifact::prune_store(
+                                    &store_dir,
+                                    &cfg.model,
+                                    cfg.checkpoint_keep,
+                                ) {
+                                    eprintln!(
+                                        "deltagrad service: checkpoint pruning failed: {e:#}"
+                                    );
+                                }
+                                if let Some(w) = wal.as_mut() {
+                                    let oldest = artifact::store_checkpoints(
+                                        &store_dir, &cfg.model,
+                                    )
+                                    .ok()
+                                    .and_then(|cps| cps.last().map(|(v, _)| *v));
+                                    if let Some(oldest) = oldest {
+                                        if let Err(e) = w.truncate_to(oldest) {
+                                            eprintln!(
+                                                "deltagrad service: WAL truncation \
+                                                 failed: {e:#}"
+                                            );
+                                        }
+                                    }
+                                }
                             }
                             Err(e) => eprintln!(
                                 "deltagrad service: checkpoint at v{} failed: {e:#}",
@@ -577,6 +786,8 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                     }
                 }
                 Err(e) => {
+                    // typed rejection, session untouched: clients may
+                    // retry, subsequent commits are unaffected
                     for p in &group {
                         let _ = p.payload.reply.send(Err(Rejected::Failed(e.to_string())));
                     }
@@ -596,8 +807,7 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                     );
                     {
                         // memoize (R=0 path; readers insert their own)
-                        let mut cache =
-                            shared.cache.lock().expect("query cache poisoned");
+                        let mut cache = lock_cache(&shared.cache, &shared.cache_resets);
                         if cache.enabled() {
                             cache.insert(&p.payload.q, rep.clone());
                         }
@@ -621,4 +831,33 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
         let _ = p.payload.reply.send(Err(Rejected::Stopped));
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisoned_cache_lock_recovers_resets_and_counts() {
+        let cache = Arc::new(Mutex::new(QueryCache::new(4)));
+        let resets = Arc::new(AtomicU64::new(0));
+        let poisoner = cache.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("poison the cache lock");
+        })
+        .join();
+        assert!(cache.is_poisoned(), "lock must be poisoned by the panic");
+        {
+            let g = lock_cache(&cache, &resets);
+            assert!(g.enabled(), "capacity survives the reset");
+            assert_eq!(g.stats().entries, 0, "entries are cleared");
+        }
+        assert_eq!(resets.load(Ordering::SeqCst), 1);
+        // the poison flag is cleared: later locks are clean and do NOT
+        // count additional resets
+        assert!(cache.lock().is_ok());
+        let _ = lock_cache(&cache, &resets);
+        assert_eq!(resets.load(Ordering::SeqCst), 1);
+    }
 }

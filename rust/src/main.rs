@@ -11,7 +11,12 @@
 //!   serve/query also take --readers R (replica reader pool) and
 //!   --cache C (version-keyed query memo cache capacity); both default 0;
 //!   serve additionally takes --checkpoint-every K (save an artifact to
-//!   the store every K commits) and --store DIR (artifact store dir)
+//!   the store every K commits), --store DIR (artifact store dir),
+//!   --checkpoint-keep K (retention, default 4), --wal (durable edit
+//!   journal; acknowledged commits survive a crash), --restore-latest
+//!   (recover checkpoint + WAL before serving), and --fault-seed S /
+//!   --fault-rate R (deterministic fault injection for chaos runs;
+//!   injected pass faults are retried, so the demo still completes)
 //!   save --model M [--commits K]  train, commit K edits, save an artifact
 //!   restore --path P             warm-restore a session from an artifact
 //!   replay --path P              re-derive from recipe + edit log, audit
@@ -25,7 +30,9 @@
 use anyhow::{Context, Result};
 
 use deltagrad::config::HyperParams;
-use deltagrad::coordinator::{BatchPolicy, ServiceConfig, ServiceHandle};
+use deltagrad::coordinator::{
+    BatchPolicy, FaultConfig, Rejected, ServiceConfig, ServiceHandle, Supervision,
+};
 use deltagrad::expers::{self, Ctx};
 use deltagrad::runtime::Engine;
 use deltagrad::session::{Edit, SessionBuilder};
@@ -116,7 +123,10 @@ fn main() -> Result<()> {
         Some("serve") => {
             args.check_flags(
                 "serve",
-                &["model", "requests", "t", "readers", "cache", "checkpoint-every", "store"],
+                &[
+                    "model", "requests", "t", "readers", "cache", "checkpoint-every", "store",
+                    "checkpoint-keep", "wal", "restore-latest", "fault-seed", "fault-rate",
+                ],
             );
             cmd_serve(&args)
         }
@@ -316,6 +326,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_req = args.usize_flag("requests", 10)?;
     let mut hp = HyperParams::for_dataset(&model);
     hp.t = args.usize_flag("t", hp.t.min(100))?;
+    let fault_rate: f64 = args.flag("fault-rate").unwrap_or("0").parse().context("--fault-rate")?;
+    let fault_seed = args.usize_flag("fault-seed", 0)? as u64;
+    let faults_on = fault_rate > 0.0;
     println!("spawning unlearning service for {model} ...");
     let svc = ServiceHandle::spawn(ServiceConfig {
         model: model.clone(),
@@ -328,19 +341,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
         query_cache: args.usize_flag("cache", 0)?,
         checkpoint_every: args.usize_flag("checkpoint-every", 0)?,
         checkpoint_dir: args.flag("store").map(std::path::PathBuf::from),
+        checkpoint_keep: args.usize_flag("checkpoint-keep", 4)?,
+        wal: args.flag("wal").map(|v| v != "false").unwrap_or(false),
+        restore_latest: args.flag("restore-latest").map(|v| v != "false").unwrap_or(false),
+        supervision: Supervision::default(),
+        faults: faults_on.then(|| FaultConfig::new(fault_seed, fault_rate)),
     })?;
     let snap = svc.snapshot()?;
     println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
-    // fire a burst of async deletions to exercise group-commit
-    let rxs: Vec<_> = (0..n_req)
-        .map(|i| svc.update_async(Edit::delete_row(i)))
-        .collect::<Result<_, _>>()?;
-    for rx in rxs {
-        let rep = rx.recv()??;
-        println!(
-            "  committed v{} (group of {}, pass {:.2}s, {} exact / {} approx)",
-            rep.version, rep.group_size, rep.pass_seconds, rep.n_exact, rep.n_approx
-        );
+    if faults_on {
+        // chaos mode: injected pass faults reject commits typed; retry
+        // each edit (bounded) so the demo still drives the full stream —
+        // the point is that the SERVICE survives, not that every first
+        // attempt lands
+        for i in 0..n_req {
+            let mut attempts = 0u32;
+            loop {
+                attempts += 1;
+                match svc.update(Edit::delete_row(i)) {
+                    Ok(rep) => {
+                        println!(
+                            "  committed v{} (attempt {attempts}, pass {:.2}s, \
+                             {} exact / {} approx)",
+                            rep.version, rep.pass_seconds, rep.n_exact, rep.n_approx
+                        );
+                        break;
+                    }
+                    Err(e @ (Rejected::Failed(_) | Rejected::QueueFull { .. }))
+                        if attempts < 50 =>
+                    {
+                        println!("  edit {i} rejected (attempt {attempts}): {e}; retrying");
+                        continue;
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+    } else {
+        // fire a burst of async deletions to exercise group-commit
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| svc.update_async(Edit::delete_row(i)))
+            .collect::<Result<_, _>>()?;
+        for rx in rxs {
+            let rep = rx.recv()??;
+            println!(
+                "  committed v{} (group of {}, pass {:.2}s, {} exact / {} approx)",
+                rep.version, rep.group_size, rep.pass_seconds, rep.n_exact, rep.n_approx
+            );
+        }
     }
     let snap = svc.snapshot()?;
     println!("final v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
@@ -379,6 +427,11 @@ fn cmd_query(args: &Args) -> Result<()> {
         query_cache: args.usize_flag("cache", 0)?,
         checkpoint_every: 0,
         checkpoint_dir: None,
+        checkpoint_keep: 4,
+        wal: false,
+        restore_latest: false,
+        supervision: Supervision::default(),
+        faults: None,
     })?;
     let snap = svc.snapshot()?;
     println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);

@@ -800,6 +800,349 @@ fn write_artifact(art: &Artifact, path: &Path) -> Result<SaveReport> {
     })
 }
 
+// --- store retention ---------------------------------------------------
+
+/// Parse `{model}-v{version}-{16-hex-hash}.dgar` back into its version.
+fn parse_store_version(name: &str, model: &str) -> Option<u64> {
+    let rest = name.strip_prefix(model)?.strip_prefix("-v")?;
+    let rest = rest.strip_suffix(".dgar")?;
+    let (ver, hash) = rest.split_once('-')?;
+    if hash.len() != 16 || !hash.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    ver.parse().ok()
+}
+
+/// Checkpoints for `model` in the store directory, newest first. A
+/// missing directory is an empty store, not an error. Files that do not
+/// match the content-addressed naming scheme (including the sidecar
+/// WAL) are ignored.
+pub fn store_checkpoints(dir: &Path, model: &str) -> Result<Vec<(u64, PathBuf)>> {
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => {
+            return Err(anyhow::Error::new(e)
+                .context(format!("listing checkpoint store {}", dir.display())))
+        }
+    };
+    let mut out = Vec::new();
+    for entry in rd {
+        let path = entry
+            .with_context(|| format!("listing checkpoint store {}", dir.display()))?
+            .path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if let Some(version) = parse_store_version(name, model) {
+            out.push((version, path));
+        }
+    }
+    // newest first; ties (same version, different hash — possible only
+    // across divergent runs) break deterministically by path
+    out.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+    Ok(out)
+}
+
+/// Retention: delete all but the newest `keep` checkpoints for `model`.
+/// `keep == 0` keeps everything. Returns how many files were pruned.
+pub fn prune_store(dir: &Path, model: &str, keep: usize) -> Result<usize> {
+    if keep == 0 {
+        return Ok(0);
+    }
+    let mut pruned = 0;
+    for (_, path) in store_checkpoints(dir, model)?.iter().skip(keep) {
+        fs::remove_file(path)
+            .with_context(|| format!("pruning checkpoint {}", path.display()))?;
+        pruned += 1;
+    }
+    Ok(pruned)
+}
+
+/// Recover `model` from the store: restore the newest *loadable*
+/// checkpoint (a corrupt or truncated newest file — e.g.
+/// [`ArtifactError::HashMismatch`] — falls back to the next-newest),
+/// then replay the sidecar WAL suffix so edits committed after that
+/// checkpoint are recovered too. Bitwise-pinned by tests/recovery.rs
+/// via [`divergence`].
+pub fn restore_latest_in_store(dir: &Path, model: &str, eng: &mut Engine) -> Result<Session> {
+    let cps = store_checkpoints(dir, model)?;
+    if cps.is_empty() {
+        bail!("no checkpoints for model '{model}' in {}", dir.display());
+    }
+    let mut last_err = None;
+    for (version, path) in &cps {
+        match restore_in(path, eng) {
+            Ok(mut s) => {
+                wal_replay_onto(&mut s, &wal_path(dir, model))?;
+                return Ok(s);
+            }
+            Err(e) => {
+                eprintln!(
+                    "restore-latest: checkpoint v{version} {} unreadable ({e:#}); \
+                     falling back to the previous checkpoint",
+                    path.display()
+                );
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(last_err.expect("non-empty checkpoint list").context(format!(
+        "no loadable checkpoint for model '{model}' in {}",
+        dir.display()
+    )))
+}
+
+/// [`restore_latest_in_store`] with a fresh default engine.
+pub fn restore_latest(dir: &Path, model: &str) -> Result<Session> {
+    let mut eng = Engine::open_default()?;
+    restore_latest_in_store(dir, model, &mut eng)
+}
+
+// --- write-ahead log ---------------------------------------------------
+//
+// Commits made since the last checkpoint would be lost on crash; the
+// service therefore appends every committed `Edit` to a durable sidecar
+// journal before acknowledging it. Records are self-delimiting and
+// individually checksummed:
+//
+//   u32 body len | u64 fnv1a(body) | body: u64 version · edit
+//
+// (little-endian, same `put_*`/`Rd` codec as the artifact canonical
+// section). Each append is fsync'd, so after a crash the file is a
+// valid prefix plus at most one torn record; `read_wal` stops at the
+// first record whose checksum fails or whose bytes run short. Recovery
+// is checkpoint + WAL-suffix replay ([`restore_latest_in_store`]),
+// bitwise-audited by [`divergence`]. After a successful checkpoint the
+// worker truncates the journal to the oldest *retained* checkpoint's
+// version, so WAL growth is bounded by retention × checkpoint cadence.
+
+/// Per-record framing overhead: u32 length + u64 FNV-1a checksum.
+pub const WAL_RECORD_HEADER: usize = 4 + 8;
+
+/// Sidecar journal path for `model` next to its checkpoints.
+pub fn wal_path(dir: &Path, model: &str) -> PathBuf {
+    dir.join(format!("{model}.dgwal"))
+}
+
+/// One recovered journal entry: the committed version and its edit.
+#[derive(Debug, Clone)]
+pub struct WalRecord {
+    pub version: u64,
+    pub edit: Edit,
+}
+
+/// Append-only, fsync-per-record journal writer owned by the service
+/// worker. Append cost is O(edit) bytes — [`WAL_RECORD_HEADER`] + 8
+/// (version) + the edit's wire encoding — independent of model or
+/// dataset size (asserted in tests/recovery.rs).
+pub struct WalWriter {
+    file: fs::File,
+    path: PathBuf,
+    records: u64,
+    bytes: u64,
+}
+
+impl WalWriter {
+    /// Start a fresh journal at `path`, truncating any previous run's.
+    pub fn create(path: &Path) -> Result<WalWriter> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)
+                    .with_context(|| format!("creating WAL dir {}", dir.display()))?;
+            }
+        }
+        let file = fs::File::create(path)
+            .with_context(|| format!("creating WAL {}", path.display()))?;
+        Ok(WalWriter { file, path: path.to_path_buf(), records: 0, bytes: 0 })
+    }
+
+    /// Continue an existing journal (the `--restore-latest` path). The
+    /// intact prefix is counted so `records()` stays meaningful; a torn
+    /// tail from the crash is trimmed off before appending resumes.
+    pub fn open_append(path: &Path) -> Result<WalWriter> {
+        if !path.exists() {
+            return Self::create(path);
+        }
+        let existing = read_wal(path)?;
+        let valid_bytes: u64 = existing
+            .iter()
+            .map(|r| {
+                let mut body = Vec::new();
+                put_u64(&mut body, r.version);
+                put_edit(&mut body, &r.edit);
+                (WAL_RECORD_HEADER + body.len()) as u64
+            })
+            .sum();
+        let file = fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        file.set_len(valid_bytes)
+            .with_context(|| format!("trimming torn WAL tail in {}", path.display()))?;
+        use std::io::Seek as _;
+        let mut file = file;
+        file.seek(std::io::SeekFrom::End(0))
+            .with_context(|| format!("seeking WAL {}", path.display()))?;
+        Ok(WalWriter {
+            file,
+            path: path.to_path_buf(),
+            records: existing.len() as u64,
+            bytes: valid_bytes,
+        })
+    }
+
+    /// Append one committed edit; returns the bytes written (O(edit)).
+    /// Durable when this returns: the record is flushed and fsync'd.
+    pub fn append(&mut self, version: u64, edit: &Edit) -> Result<u64> {
+        use std::io::Write as _;
+        let mut body = Vec::with_capacity(32);
+        put_u64(&mut body, version);
+        put_edit(&mut body, edit);
+        let mut rec = Vec::with_capacity(WAL_RECORD_HEADER + body.len());
+        put_u32(&mut rec, body.len() as u32);
+        put_u64(&mut rec, fnv1a(&body));
+        rec.extend_from_slice(&body);
+        self.file
+            .write_all(&rec)
+            .with_context(|| format!("appending to WAL {}", self.path.display()))?;
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsyncing WAL {}", self.path.display()))?;
+        self.records += 1;
+        self.bytes += rec.len() as u64;
+        Ok(rec.len() as u64)
+    }
+
+    /// Truncate the journal through the live writer: drop records at or
+    /// below `keep_after` (see [`truncate_wal_to`]), then REOPEN the
+    /// file handle — the atomic rename leaves this writer's descriptor
+    /// on the old, now-unlinked inode, and appends there would be
+    /// silently lost.
+    pub fn truncate_to(&mut self, keep_after: u64) -> Result<u64> {
+        let kept = truncate_wal_to(&self.path, keep_after)?;
+        use std::io::Seek as _;
+        let mut file = fs::OpenOptions::new()
+            .write(true)
+            .open(&self.path)
+            .with_context(|| format!("reopening WAL {}", self.path.display()))?;
+        let end = file
+            .seek(std::io::SeekFrom::End(0))
+            .with_context(|| format!("seeking WAL {}", self.path.display()))?;
+        self.file = file;
+        self.records = kept;
+        self.bytes = end;
+        Ok(kept)
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Read the intact prefix of a journal. A missing file is an empty
+/// journal. A torn tail (short bytes or checksum mismatch — what a
+/// crash mid-append leaves) ends the read; a record whose checksum
+/// verifies but whose body does not decode is a format error and is
+/// surfaced, not skipped.
+pub fn read_wal(path: &Path) -> Result<Vec<WalRecord>> {
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => {
+            return Err(anyhow::Error::new(e).context(format!("reading WAL {}", path.display())))
+        }
+    };
+    let mut rd = Rd::new(&bytes);
+    let mut out = Vec::new();
+    while rd.remaining() >= WAL_RECORD_HEADER {
+        let len = rd.get_u32().expect("length checked") as usize;
+        let want = rd.get_u64().expect("length checked");
+        if rd.remaining() < len {
+            break; // torn tail
+        }
+        let body = rd.take(len).expect("length checked");
+        if fnv1a(body) != want {
+            break; // torn or corrupted tail record
+        }
+        let mut brd = Rd::new(body);
+        let version = brd
+            .get_u64()
+            .map_err(|e| anyhow::Error::new(e).context("decoding WAL record version"))?;
+        let edit = brd
+            .get_edit(0)
+            .map_err(|e| anyhow::Error::new(e).context("decoding WAL record edit"))?;
+        if brd.remaining() != 0 {
+            bail!("WAL record v{version} has trailing bytes in {}", path.display());
+        }
+        out.push(WalRecord { version, edit });
+    }
+    Ok(out)
+}
+
+/// Drop journal records at or below `keep_after` (they are covered by a
+/// retained checkpoint). Atomic: the survivors are rewritten to a temp
+/// file and renamed into place, so a crash mid-truncate leaves either
+/// journal intact. Returns the surviving record count.
+pub fn truncate_wal_to(path: &Path, keep_after: u64) -> Result<u64> {
+    let recs = read_wal(path)?;
+    let kept: Vec<&WalRecord> = recs.iter().filter(|r| r.version > keep_after).collect();
+    if kept.len() == recs.len() {
+        return Ok(recs.len() as u64);
+    }
+    let mut bytes = Vec::new();
+    for r in &kept {
+        let mut body = Vec::new();
+        put_u64(&mut body, r.version);
+        put_edit(&mut body, &r.edit);
+        put_u32(&mut bytes, body.len() as u32);
+        put_u64(&mut bytes, fnv1a(&body));
+        bytes.extend_from_slice(&body);
+    }
+    let tmp = path.with_extension(format!("waltmp{}", std::process::id()));
+    fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(kept.len() as u64)
+}
+
+/// Replay a journal onto `session`: records at or below the session's
+/// version are skipped (already covered by the restored checkpoint),
+/// later ones are committed in order. A version gap means the journal
+/// was truncated past this session's base and is a hard error — the
+/// caller must recover from a newer checkpoint instead. Returns how
+/// many records were applied.
+pub fn wal_replay_onto(session: &mut Session, path: &Path) -> Result<u64> {
+    let mut applied = 0u64;
+    for rec in read_wal(path)? {
+        let at = session.version();
+        if rec.version <= at {
+            continue;
+        }
+        if rec.version != at + 1 {
+            bail!(
+                "WAL gap: next record is v{} but session is at v{at} ({})",
+                rec.version,
+                path.display()
+            );
+        }
+        let c = session
+            .commit(rec.edit)
+            .with_context(|| format!("replaying WAL record v{}", rec.version))?;
+        debug_assert_eq!(c.version, rec.version);
+        applied += 1;
+    }
+    Ok(applied)
+}
+
 // --- restore -----------------------------------------------------------
 
 /// Warm-restart from an artifact with a fresh default engine: zero
@@ -1228,6 +1571,143 @@ mod tests {
         // loading back the original still verifies
         let loaded = Artifact::load(&path).unwrap();
         assert_eq!(loaded.content_hash, r1.content_hash);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    fn edit_bytes(e: &Edit) -> Vec<u8> {
+        let mut b = Vec::new();
+        put_edit(&mut b, e);
+        b
+    }
+
+    fn wal_tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dgar-wal-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn wal_round_trip_is_exact_and_o_edit_sized() {
+        let path = wal_tmp("roundtrip");
+        let _ = fs::remove_file(&path);
+        let edits = vec![
+            Edit::delete_row(3),
+            Edit::Add(ds(2, 3, 2, 0.5)),
+            Edit::group(vec![Edit::delete_row(1), Edit::delete_row(2)]),
+        ];
+        let mut w = WalWriter::create(&path).unwrap();
+        for (i, e) in edits.iter().enumerate() {
+            let n = w.append(i as u64 + 1, e).unwrap();
+            // framing + version + edit encoding, nothing else
+            assert_eq!(
+                n as usize,
+                WAL_RECORD_HEADER + 8 + edit_bytes(e).len(),
+                "record {i} is not O(edit) bytes"
+            );
+        }
+        // a single-row delete is a fixed 37 bytes: 12 framing + 8
+        // version + (1 tag + 8 count + 8 index) — independent of model
+        // or dataset size
+        assert_eq!(
+            WAL_RECORD_HEADER + 8 + edit_bytes(&Edit::delete_row(3)).len(),
+            37
+        );
+        assert_eq!(w.records(), 3);
+        assert_eq!(w.bytes(), fs::metadata(&path).unwrap().len());
+        let recs = read_wal(&path).unwrap();
+        assert_eq!(recs.len(), 3);
+        for (i, (rec, e)) in recs.iter().zip(&edits).enumerate() {
+            assert_eq!(rec.version, i as u64 + 1);
+            assert_eq!(edit_bytes(&rec.edit), edit_bytes(e), "edit {i} mutated");
+        }
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wal_missing_file_is_empty_journal() {
+        let path = wal_tmp("missing");
+        let _ = fs::remove_file(&path);
+        assert!(read_wal(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn wal_tolerates_torn_tail_and_stops_at_corruption() {
+        let path = wal_tmp("torn");
+        let _ = fs::remove_file(&path);
+        let mut w = WalWriter::create(&path).unwrap();
+        w.append(1, &Edit::delete_row(5)).unwrap();
+        w.append(2, &Edit::delete_row(6)).unwrap();
+        drop(w);
+        // crash mid-append: a partial third record
+        let mut bytes = fs::read(&path).unwrap();
+        let intact = bytes.clone();
+        bytes.extend_from_slice(&[0x25, 0x00, 0x00, 0x00, 0xde, 0xad]);
+        fs::write(&path, &bytes).unwrap();
+        assert_eq!(read_wal(&path).unwrap().len(), 2, "torn tail must be dropped");
+        // a flipped byte inside record 2's body fails its checksum and
+        // ends the read after record 1
+        let mut corrupt = intact.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0x40;
+        fs::write(&path, &corrupt).unwrap();
+        assert_eq!(read_wal(&path).unwrap().len(), 1);
+        // open_append trims the invalid suffix and resumes cleanly
+        fs::write(&path, &bytes).unwrap();
+        let mut w = WalWriter::open_append(&path).unwrap();
+        assert_eq!(w.records(), 2);
+        w.append(3, &Edit::delete_row(7)).unwrap();
+        let recs = read_wal(&path).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[2].version, 3);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wal_truncation_keeps_only_the_suffix() {
+        let path = wal_tmp("trunc");
+        let _ = fs::remove_file(&path);
+        let mut w = WalWriter::create(&path).unwrap();
+        for v in 1..=5u64 {
+            w.append(v, &Edit::delete_row(v as usize)).unwrap();
+        }
+        drop(w);
+        assert_eq!(truncate_wal_to(&path, 3).unwrap(), 2);
+        let recs = read_wal(&path).unwrap();
+        assert_eq!(
+            recs.iter().map(|r| r.version).collect::<Vec<_>>(),
+            vec![4, 5]
+        );
+        // idempotent: nothing below the watermark remains
+        assert_eq!(truncate_wal_to(&path, 3).unwrap(), 2);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn store_scan_orders_newest_first_and_prunes_to_keep() {
+        let dir = std::env::temp_dir().join(format!("dgar-store-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        for v in [1u64, 3, 2, 4] {
+            fs::write(store_path(&dir, "small", v, 0x10 + v as u64), b"x").unwrap();
+        }
+        // decoys the scan must ignore: other models, the WAL sidecar,
+        // malformed hashes
+        fs::write(store_path(&dir, "large", 9, 0x99), b"x").unwrap();
+        fs::write(wal_path(&dir, "small"), b"x").unwrap();
+        fs::write(dir.join("small-v5-nothex.dgar"), b"x").unwrap();
+        let cps = store_checkpoints(&dir, "small").unwrap();
+        assert_eq!(
+            cps.iter().map(|(v, _)| *v).collect::<Vec<_>>(),
+            vec![4, 3, 2, 1]
+        );
+        assert_eq!(prune_store(&dir, "small", 2).unwrap(), 2);
+        let cps = store_checkpoints(&dir, "small").unwrap();
+        assert_eq!(cps.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![4, 3]);
+        // keep == 0 keeps everything; other models untouched
+        assert_eq!(prune_store(&dir, "small", 0).unwrap(), 0);
+        assert_eq!(store_checkpoints(&dir, "large").unwrap().len(), 1);
+        // a missing store is an empty store
+        assert!(store_checkpoints(Path::new("/nonexistent-dgar"), "small")
+            .unwrap()
+            .is_empty());
         let _ = fs::remove_dir_all(&dir);
     }
 }

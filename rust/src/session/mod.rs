@@ -53,7 +53,7 @@ pub mod artifact;
 pub mod query;
 pub mod query_cache;
 
-pub use artifact::{Artifact, ArtifactError, SaveReport};
+pub use artifact::{Artifact, ArtifactError, SaveReport, WalRecord, WalWriter};
 pub use query::{query, JackknifeFunctional, Query, QueryKind, QueryReply, QueryResult};
 pub use query_cache::{QueryCache, QueryCacheStats};
 

@@ -198,6 +198,14 @@ impl QueryCache {
             capacity: self.cap as u64,
         }
     }
+
+    /// Drop every memoized entry, keeping capacity and hit/miss
+    /// counters. Used to reset a cache recovered from a poisoned lock:
+    /// entries written around a panic are not trusted, the cache
+    /// rebuilds from misses.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,307 @@
+//! Fault-tolerance integration: deterministic fault injection, reader
+//! supervision & respawn, and crash-recoverable commits via the edit-log
+//! WAL. Every recovery claim is pinned BITWISE against an uninjected /
+//! offline twin — surviving a fault is not enough, the recovered state
+//! must be indistinguishable from one that never failed.
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use deltagrad::config::HyperParams;
+use deltagrad::coordinator::{
+    BatchPolicy, FaultConfig, FaultSite, Rejected, ServiceConfig, ServiceHandle, Supervision,
+};
+use deltagrad::session::{artifact, Edit, Query, QueryResult, Session, SessionBuilder};
+
+/// Per-test scratch store (checkpoints + WAL), wiped on drop so reruns
+/// never see a previous run's files.
+struct Store(PathBuf);
+
+impl Store {
+    fn new(tag: &str) -> Store {
+        let p = std::env::temp_dir()
+            .join(format!("deltagrad-test-recovery-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        Store(p)
+    }
+    fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for Store {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn small_hp() -> HyperParams {
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 40;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    hp
+}
+
+/// The service recipe every test uses (same as tests/service.rs), one
+/// edit per pass so versions are deterministic.
+fn base_cfg() -> ServiceConfig {
+    ServiceConfig {
+        model: "small".into(),
+        seed: 77,
+        n_train: Some(512),
+        n_test: Some(256),
+        hp: small_hp(),
+        policy: BatchPolicy {
+            max_group: 1,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        },
+        readers: 0,
+        query_cache: 0,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
+        checkpoint_keep: 4,
+        wal: false,
+        restore_latest: false,
+        supervision: Supervision::default(),
+        faults: None,
+    }
+}
+
+/// Offline twin: same recipe, `n` single-row deletions, no service, no
+/// faults — the bitwise reference every recovery path must match.
+fn offline_twin(n: usize) -> Session {
+    let mut s = SessionBuilder::new("small")
+        .seed(77)
+        .n_train(Some(512))
+        .n_test(Some(256))
+        .hyper_params(small_hp())
+        .build()
+        .unwrap();
+    for i in 0..n {
+        s.commit(Edit::delete_row(i)).unwrap();
+    }
+    s
+}
+
+fn w_bits(w: &[f32]) -> Vec<u32> {
+    w.iter().map(|x| x.to_bits()).collect()
+}
+
+fn loss_bits(r: &QueryResult) -> [u64; 4] {
+    match r {
+        QueryResult::Loss { test_loss, test_accuracy, train_loss, train_accuracy } => [
+            test_loss.to_bits(),
+            test_accuracy.to_bits(),
+            train_loss.to_bits(),
+            train_accuracy.to_bits(),
+        ],
+        other => panic!("wrong reply kind: {other:?}"),
+    }
+}
+
+#[test]
+fn reader_respawns_after_injected_replay_faults_and_stays_bitwise() {
+    // every delta replay is killed by an injected fault, so the single
+    // replica must respawn (spawn artifact + WAL catch-up) to serve at
+    // all — and what it serves must still be bitwise the offline model
+    let store = Store::new("respawn");
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        readers: 1,
+        wal: true,
+        checkpoint_dir: Some(store.path().to_path_buf()),
+        faults: Some(FaultConfig {
+            seed: 1,
+            rate: 1.0,
+            sites: Some(vec![FaultSite::ReaderReplay]),
+            budget: None,
+        }),
+        ..base_cfg()
+    })
+    .unwrap();
+    for i in 0..3 {
+        let rep = svc.update(Edit::delete_row(i)).unwrap();
+        assert_eq!(rep.version, (i + 1) as u64);
+    }
+    // quiescence: the replica has recovered to the writer's version (a
+    // respawn can swallow several versions at once via the WAL, so the
+    // respawn count is 1..=3, not exactly 3)
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let m = svc.metrics().unwrap();
+        if m.replica_min_version == 3 {
+            assert!(
+                (1..=3).contains(&m.respawns),
+                "expected 1..=3 respawns, got {}",
+                m.respawns
+            );
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "replica never recovered: min_version {}, respawns {}",
+            m.replica_min_version,
+            m.respawns
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let rep = svc.query(Query::Loss).unwrap();
+    assert_eq!(rep.version, 3, "the recovered replica must serve at the writer's version");
+    let m = svc.metrics().unwrap();
+    assert!(m.wal_records >= 3, "every commit must have been journaled");
+    svc.shutdown().unwrap();
+
+    let twin = offline_twin(3);
+    assert_eq!(
+        loss_bits(&rep.result),
+        loss_bits(&twin.query(&Query::Loss).unwrap().result),
+        "respawned replica diverged from the offline twin"
+    );
+}
+
+#[test]
+fn corrupt_checkpoint_falls_back_to_previous_and_wal_covers_the_gap() {
+    // offline: two checkpoints + a two-record journal; corrupt the
+    // newest checkpoint on disk. Recovery must detect the bad hash,
+    // fall back to the older checkpoint, and close the gap via the WAL
+    let store = Store::new("corrupt");
+    let mut live = offline_twin(0);
+    let wal_p = artifact::wal_path(store.path(), "small");
+    let mut wal = artifact::WalWriter::create(&wal_p).unwrap();
+    for i in 0..2 {
+        let c = live.commit(Edit::delete_row(i)).unwrap();
+        wal.append(c.version, &Edit::delete_row(i)).unwrap();
+        artifact::save_to_store(&live, store.path()).unwrap();
+    }
+    let cps = artifact::store_checkpoints(store.path(), "small").unwrap();
+    assert_eq!(cps.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![2, 1]);
+    // flip one payload byte of the v2 checkpoint: its content hash no
+    // longer verifies, so restore must refuse it
+    let v2_path = &cps[0].1;
+    let mut bytes = std::fs::read(v2_path).unwrap();
+    let last = bytes.len() - 9;
+    bytes[last] ^= 0x40;
+    std::fs::write(v2_path, &bytes).unwrap();
+
+    let recovered = artifact::restore_latest(store.path(), "small").unwrap();
+    assert_eq!(recovered.version(), 2, "v1 checkpoint + WAL replay must land on v2");
+    assert_eq!(
+        w_bits(&recovered.snapshot().unwrap().w),
+        w_bits(&live.snapshot().unwrap().w),
+        "recovered model diverged from the live session"
+    );
+
+    // without the journal, the same corruption is only recoverable to
+    // the older checkpoint — still typed, still no panic
+    std::fs::remove_file(&wal_p).unwrap();
+    let older = artifact::restore_latest(store.path(), "small").unwrap();
+    assert_eq!(older.version(), 1);
+}
+
+#[test]
+fn injected_pass_fault_rejects_typed_and_the_session_stays_clean() {
+    // budget 1: exactly the first pass dies at device upload. The group
+    // gets a typed Rejected::Failed, the session is untouched, and the
+    // retried stream commits to bitwise the uninjected model
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        faults: Some(FaultConfig {
+            seed: 5,
+            rate: 1.0,
+            sites: Some(vec![FaultSite::DeviceUpload]),
+            budget: Some(1),
+        }),
+        ..base_cfg()
+    })
+    .unwrap();
+    match svc.update(Edit::delete_row(0)) {
+        Err(Rejected::Failed(e)) => {
+            assert!(e.contains("injected"), "unexpected failure message: {e}")
+        }
+        other => panic!("expected the injected fault to reject the first pass, got {other:?}"),
+    }
+    // the budget is spent: the retry and everything after commit clean
+    assert_eq!(svc.update(Edit::delete_row(0)).unwrap().version, 1);
+    assert_eq!(svc.update(Edit::delete_row(1)).unwrap().version, 2);
+    let snap = svc.snapshot().unwrap();
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.requests, 2, "only the served groups count");
+    assert_eq!(m.respawns, 0);
+    svc.shutdown().unwrap();
+
+    let twin = offline_twin(2);
+    assert_eq!(
+        w_bits(&snap.w),
+        w_bits(&twin.snapshot().unwrap().w),
+        "a rejected pass must leave no trace in the committed state"
+    );
+}
+
+#[test]
+fn wal_recovery_after_shutdown_is_bitwise_via_divergence_audit() {
+    // 5 commits with checkpoints every 2: the store holds v2/v4, the
+    // journal holds the suffix the retention truncation left. A cold
+    // restore must reach v5 and be bitwise-indistinguishable from an
+    // offline twin — audited field by field by artifact::divergence
+    let store = Store::new("wal");
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        wal: true,
+        checkpoint_every: 2,
+        checkpoint_dir: Some(store.path().to_path_buf()),
+        ..base_cfg()
+    })
+    .unwrap();
+    for i in 0..5 {
+        assert_eq!(svc.update(Edit::delete_row(i)).unwrap().version, (i + 1) as u64);
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.wal_records, 5, "every commit journals exactly one record");
+    assert_eq!(m.checkpoints, 2);
+    svc.shutdown().unwrap();
+
+    // the journal was truncated to the oldest retained checkpoint (v2),
+    // so only the suffix survives — recovery still has v4 + v5 covered
+    let recs = artifact::read_wal(&artifact::wal_path(store.path(), "small")).unwrap();
+    assert_eq!(recs.iter().map(|r| r.version).collect::<Vec<_>>(), vec![3, 4, 5]);
+
+    let recovered = artifact::restore_latest(store.path(), "small").unwrap();
+    assert_eq!(recovered.version(), 5, "checkpoint v4 + WAL v5 must reach the final state");
+
+    let twin = offline_twin(5);
+    let twin_path = std::env::temp_dir()
+        .join(format!("deltagrad-test-recovery-twin-{}.dgar", std::process::id()));
+    let _ = std::fs::remove_file(&twin_path);
+    twin.save_artifact(&twin_path).unwrap();
+    let twin_art = artifact::Artifact::load(&twin_path).unwrap();
+    let _ = std::fs::remove_file(&twin_path);
+    let diffs = artifact::divergence(&twin_art, &recovered);
+    assert!(
+        diffs.is_empty(),
+        "WAL recovery diverged from the offline twin: {diffs:?}"
+    );
+}
+
+#[test]
+fn checkpoint_retention_keeps_only_the_newest_k() {
+    let store = Store::new("retention");
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        checkpoint_every: 1,
+        checkpoint_keep: 2,
+        checkpoint_dir: Some(store.path().to_path_buf()),
+        ..base_cfg()
+    })
+    .unwrap();
+    for i in 0..4 {
+        svc.update(Edit::delete_row(i)).unwrap();
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.checkpoints, 4, "every commit checkpointed");
+    svc.shutdown().unwrap();
+    let cps = artifact::store_checkpoints(store.path(), "small").unwrap();
+    assert_eq!(
+        cps.iter().map(|(v, _)| *v).collect::<Vec<_>>(),
+        vec![4, 3],
+        "retention must prune to the newest 2 checkpoints"
+    );
+}

@@ -25,6 +25,11 @@ fn small_cfg(policy: BatchPolicy) -> ServiceConfig {
         query_cache: 0,
         checkpoint_every: 0,
         checkpoint_dir: None,
+        checkpoint_keep: 0,
+        wal: false,
+        restore_latest: false,
+        supervision: deltagrad::coordinator::Supervision::default(),
+        faults: None,
     }
 }
 
@@ -58,6 +63,28 @@ fn serves_sequential_deletions() {
     assert_eq!(m.deletes, 3);
     assert_eq!(m.adds, 0);
     svc.shutdown().unwrap();
+}
+
+#[test]
+fn stopped_service_rejects_typed_instead_of_panicking() {
+    // an SGD config makes the worker refuse service and exit right
+    // after spawn — the handle then faces a dead service
+    let mut cfg = small_cfg(BatchPolicy::default());
+    cfg.hp.batch = 512;
+    let svc = ServiceHandle::spawn(cfg).unwrap();
+    // whichever side of the shutdown race the send lands on, the client
+    // gets a typed Stopped — never a panic, never a hang
+    match svc.update(Edit::delete_row(0)) {
+        Err(Rejected::Stopped) => {}
+        other => panic!("expected Rejected::Stopped, got {other:?}"),
+    }
+    match svc.query(Query::Loss) {
+        Err(Rejected::Stopped) => {}
+        other => panic!("expected Rejected::Stopped, got {other:?}"),
+    }
+    assert!(svc.snapshot().is_err(), "snapshot on a dead service must error, not panic");
+    // drop (not shutdown) tears the handle down; the worker's own error
+    // is its exit status, not ours
 }
 
 #[test]

@@ -32,14 +32,18 @@ import sys
 # resident-CG solve, the compacted long-tail series, the
 # query-throughput read-plane series — including its reader-scaling
 # "readers-N" variants — the version-keyed memo-cache hit series, and
-# the durable-artifact series: warm restore and checkpoint save.
+# the durable-artifact series: warm restore and checkpoint save — and
+# the robustness series: supervised serving overhead and the fsync'd
+# WAL append.
 # NOTE markers are case-sensitive substrings: "session" deliberately
 # does NOT match the ungated "retrain-from-recipe (full SessionBuilder
 # train)" baseline, and "restore"/"checkpoint" do not collide with the
-# "(AOT artifact)" L-BFGS series)
+# "(AOT artifact)" L-BFGS series; "wal-" requires the hyphen so it can
+# never match a word like "walk")
 STAGED_MARKERS = (
     "staged", "resident", "session", "index-list", "compacted",
     "query-throughput", "readers-", "cache-hit", "restore", "checkpoint",
+    "supervised", "wal-",
 )
 
 DEFAULT_MAX_REGRESS = 0.10
