@@ -16,14 +16,18 @@
 #      reader replica on — every injected run must exit clean (retried
 #      commits, supervised respawns) and at least one respawn must have
 #      fired across the sweep
-#   6. cargo bench --bench micro -- --json BENCH_micro.json
-#   7. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
+#   6. shard-sweep smoke: `serve` at --shards 1/2/4 over the same edit
+#      stream — every shard count must exit clean, and the sharded runs
+#      must report their shard pool in the metrics line (shards=N,
+#      reduces>0), so a silent fall-back to the resident path fails here
+#   7. cargo bench --bench micro -- --json BENCH_micro.json
+#   8. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
 #      snapshot (tools/bench_diff.py) — fails on >10% mean regression of
 #      the staged paths (incl. the index-list SGD, resident-CG,
 #      compacted long-tail, query-throughput, reader-scaling,
 #      memo-cache-hit, artifact-restore, checkpoint-save,
-#      supervised-overhead, and wal-append series; presence of those
-#      series is asserted)
+#      supervised-overhead, wal-append, sharded-commit, and
+#      wal-group-commit series; presence of those series is asserted)
 # then asserts the bench JSON was produced, so upload/download-count
 # regressions (the staging discipline of rust/docs/PERFORMANCE.md) fail
 # loudly in review instead of silently drifting.
@@ -105,6 +109,38 @@ if [ "$chaos_respawns" -eq 0 ]; then
 fi
 echo "ci.sh: chaos smoke ok ($chaos_respawns respawns across the sweep)"
 
+echo "== ci: shard-sweep smoke (serve at --shards 1/2/4) =="
+# the same edit stream at every supported shard count: each run must
+# exit clean, and a sharded run must actually drive its shard pool —
+# the metrics line carries shards=N and a nonzero reduce count only
+# when the pool is live, so a silent fall-back to the resident path
+# (or a pool that never reduces) fails loudly here
+for s in 1 2 4; do
+    shard_store="$(mktemp -d /tmp/deltagrad-ci-shards.XXXXXX)"
+    shard_log="$shard_store/serve.log"
+    ./target/release/deltagrad serve --model small --t 40 --requests 4 \
+        --shards "$s" --store "$shard_store" | tee "$shard_log"
+    if [ "$s" -gt 1 ]; then
+        if ! grep -q "shards=$s " "$shard_log"; then
+            echo "ci.sh FAIL: serve --shards $s never reported its shard pool (shards=$s missing)" >&2
+            exit 1
+        fi
+        reduces="$(grep -o 'reduces=[0-9]*' "$shard_log" | head -n1 | cut -d= -f2 || true)"
+        if [ "${reduces:-0}" -eq 0 ]; then
+            echo "ci.sh FAIL: serve --shards $s committed without a single tree reduce" >&2
+            exit 1
+        fi
+    else
+        # S=1 must stay on the resident path: no pool, no shard metrics
+        if grep -q 'shards=' "$shard_log"; then
+            echo "ci.sh FAIL: serve --shards 1 spun up a shard pool" >&2
+            exit 1
+        fi
+    fi
+    rm -rf "$shard_store"
+done
+echo "ci.sh: shard sweep ok (1/2/4)"
+
 echo "== ci: cargo bench --bench micro -- --json BENCH_micro.json =="
 rm -f BENCH_micro.json # a stale file must not satisfy the check below
 cargo bench --bench micro -- --json BENCH_micro.json
@@ -120,7 +156,8 @@ fi
 for series in "index-list" "resident state" "compacted tail" "segmented tail" \
               "query-throughput" "query-throughput-readers" "cache-hit" \
               "session restore" "checkpoint-overhead" "retrain-from-recipe" \
-              "supervised-overhead" "wal-append"; do
+              "supervised-overhead" "wal-append" \
+              "commit-shards-2" "commit-shards-4" "wal-group-commit"; do
     if ! grep -q "$series" BENCH_micro.json; then
         echo "ci.sh FAIL: bench series \"$series\" missing from BENCH_micro.json" >&2
         exit 1

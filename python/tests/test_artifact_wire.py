@@ -174,6 +174,16 @@ def canonical_bytes(a) -> bytes:
     put_transfers(b, st_["preview_transfers"])
     put_transfers(b, st_["commit_transfers"])
     put_f64(b, st_["seconds"])
+    # optional trailing shard-layout section INSIDE the canonical bytes:
+    # present only when the saving session was sharded, so an S=1
+    # artifact stays byte-identical to the pre-sharding format
+    if a.get("shard_layout") is not None:
+        rec = a["shard_layout"]
+        put_u64(b, rec["shards"])
+        put_u64(b, len(rec["ranges"]))
+        for lo, hi in rec["ranges"]:
+            put_u64(b, lo)
+            put_u64(b, hi)
     return bytes(b)
 
 
@@ -352,6 +362,24 @@ def decode(bytes_):
     stats["commit_transfers"] = r.get_transfers()
     stats["seconds"] = r.get_f64()
     a["stats"] = stats
+    # bytes past the stats are the optional shard-layout section
+    # (absent in S=1 and pre-sharding artifacts)
+    if r.remaining() > 0:
+        shards = r.get_u64()
+        n_ranges = r.get_count(16)
+        ranges = [(r.get_u64(), r.get_u64()) for _ in range(n_ranges)]
+        if shards < 2 or len(ranges) != shards:
+            raise WireError("Malformed", "shard layout count mismatch")
+        expect = 0
+        for lo, hi in ranges:
+            if lo != expect or hi < lo:
+                raise WireError("Malformed", "shard ranges must tile contiguously")
+            expect = hi
+        if expect != a["base"]["n"]:
+            raise WireError("Malformed", "shard ranges do not cover the base")
+        a["shard_layout"] = {"shards": shards, "ranges": ranges}
+    else:
+        a["shard_layout"] = None
     if r.remaining() != 0:
         raise WireError("Malformed", "trailing bytes in canonical section")
     # structural cross-checks, same order as the Rust decoder
@@ -405,6 +433,16 @@ def make_artifact(seed):
             "execs", "downloads", "download_floats")}
 
     base = dataset(r.randint(1, 6))
+    # half the artifacts carry a shard layout (the optional trailing
+    # section), computed exactly like ShardLayout::new — contiguous
+    # integer-floor ranges tiling the base
+    if base["n"] >= 2 and r.random() < 0.5:
+        s = r.randint(2, min(4, base["n"]))
+        shard_layout = {"shards": s,
+                        "ranges": [(i * base["n"] // s, (i + 1) * base["n"] // s)
+                                   for i in range(s)]}
+    else:
+        shard_layout = None
     added = dataset(r.randint(0, 5))
     # partition the added rows into a compacted prefix + segments
     tail_compact_n = r.randint(0, added["n"])
@@ -452,6 +490,7 @@ def make_artifact(seed):
                   "preview_transfers": transfers(),
                   "commit_transfers": transfers(),
                   "seconds": r.uniform(0.0, 1e4)},
+        "shard_layout": shard_layout,
     }
 
 
@@ -544,3 +583,65 @@ class TestWireFormat:
         with pytest.raises(WireError) as e:
             decode(encode(a))
         assert e.value.kind == "Malformed"
+
+
+class TestShardLayoutSection:
+    """The OPTIONAL trailing shard-layout section: absent for S=1 (so
+    pre-sharding artifacts stay byte-identical), present + structurally
+    cross-checked for a sharded save."""
+
+    def _with_layout(self, seed=11):
+        a = make_artifact(seed)
+        n = a["base"]["n"]
+        a["shard_layout"] = {"shards": 2, "ranges": [(0, n // 2), (n // 2, n)]}
+        return a
+
+    def test_absent_section_decodes_to_none_and_matches_missing_key(self):
+        a = make_artifact(7)
+        a["shard_layout"] = None
+        wire = encode(a)
+        assert decode(wire)["shard_layout"] is None
+        # an artifact dict that predates the field encodes identically:
+        # S=1 saves write NO section, old bytes stay valid
+        legacy = dict(a)
+        del legacy["shard_layout"]
+        assert encode(legacy) == wire
+
+    def test_present_section_round_trips(self):
+        a = self._with_layout()
+        assert decode(encode(a))["shard_layout"] == a["shard_layout"]
+
+    def test_layout_is_covered_by_the_content_hash(self):
+        a = self._with_layout()
+        plain = dict(a)
+        plain["shard_layout"] = None
+        assert fnv1a(canonical_bytes(a)) != fnv1a(canonical_bytes(plain))
+
+    def _expect_malformed(self, a, msg):
+        with pytest.raises(WireError) as e:
+            decode(encode(a))
+        assert e.value.kind == "Malformed"
+        assert msg in str(e.value)
+
+    def test_shard_count_below_two_is_malformed(self):
+        # S=1 must be expressed by OMITTING the section, never shards=1
+        a = make_artifact(9)
+        a["shard_layout"] = {"shards": 1, "ranges": [(0, a["base"]["n"])]}
+        self._expect_malformed(a, "shard layout count mismatch")
+
+    def test_range_count_mismatch_is_malformed(self):
+        a = make_artifact(9)
+        a["shard_layout"] = {"shards": 3,
+                             "ranges": [(0, 1), (1, a["base"]["n"])]}
+        self._expect_malformed(a, "shard layout count mismatch")
+
+    def test_non_tiling_ranges_are_malformed(self):
+        a = make_artifact(9)
+        a["shard_layout"] = {"shards": 2, "ranges": [(0, 1), (2, 2)]}
+        self._expect_malformed(a, "shard ranges must tile contiguously")
+
+    def test_ranges_not_covering_the_base_are_malformed(self):
+        a = make_artifact(9)
+        n = a["base"]["n"]
+        a["shard_layout"] = {"shards": 2, "ranges": [(0, 1), (1, n + 1)]}
+        self._expect_malformed(a, "shard ranges do not cover the base")

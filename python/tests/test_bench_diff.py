@@ -99,6 +99,25 @@ class TestCompare:
             "supervised-overhead commit+loss (reader supervision, wal on)")
         assert bench_diff.is_staged("wal-append edit record (fsync'd)")
         assert not bench_diff.is_staged("random walk warmup")
+        # the sharded-execution series: the shard-count commit sweep
+        # gates via "shards-" (and "session"), the group-commit WAL
+        # burst via "wal-"
+        assert bench_diff.is_staged("commit-shards-2 session.commit (1 delete)")
+        assert bench_diff.is_staged("commit-shards-4 session.commit (1 delete)")
+        assert bench_diff.is_staged("wal-group-commit 16 records one fsync")
+        assert not bench_diff.is_staged("scatter across shards warmup")
+
+    def test_sharded_commit_series_gates(self):
+        name = "commit-shards-4 session.commit (1 delete)"
+        base = {name: entry(10.0)}
+        _, regressions, _ = bench_diff.compare(base, {name: entry(12.0)}, 0.10)
+        assert len(regressions) == 1 and regressions[0][0] == name
+
+    def test_wal_group_commit_series_gates(self):
+        name = "wal-group-commit 16 records one fsync"
+        base = {name: entry(1.0)}
+        _, regressions, _ = bench_diff.compare(base, {name: entry(1.5)}, 0.10)
+        assert len(regressions) == 1 and regressions[0][0] == name
 
     def test_reader_scaling_series_gates(self):
         name = "query-throughput-readers-4 loss (replica pool)"

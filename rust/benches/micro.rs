@@ -436,11 +436,14 @@ fn main() -> anyhow::Result<()> {
                 },
                 readers: r,
                 query_cache: 0,
+                query_cache_bytes: 0,
+                shards: 1,
                 checkpoint_every: 0,
                 checkpoint_dir: None,
                 checkpoint_keep: 0,
                 wal: false,
                 restore_latest: false,
+                store_fresh: false,
                 supervision: Supervision::default(),
                 faults: None,
             })?;
@@ -492,11 +495,14 @@ fn main() -> anyhow::Result<()> {
             },
             readers: 0,
             query_cache: 8,
+            query_cache_bytes: 0,
+            shards: 1,
             checkpoint_every: 0,
             checkpoint_dir: None,
             checkpoint_keep: 0,
             wal: false,
             restore_latest: false,
+            store_fresh: false,
             supervision: Supervision::default(),
             faults: None,
         })?;
@@ -580,6 +586,59 @@ fn main() -> anyhow::Result<()> {
         })?;
     }
 
+    if want("commit-shards") {
+        println!("== sharded commit (small, T=40, S = 1 / 2 / 4) ==");
+        // shard-scaling series: one single-row deletion per rep through
+        // the sharded session. S=1 is the plain resident path (the
+        // byte-identity baseline); S=2/4 scatter the pass across worker
+        // shards and tree-reduce the accumulators on the host. Shard
+        // device traffic lands on the workers' own runtimes, so the
+        // per-rep counters here only show the coordinator's share.
+        let rt = eng.runtime();
+        for s in [1usize, 2, 4] {
+            let spec = eng.spec("small")?.clone();
+            let (ds, test) = synth::train_test_for_spec(&spec, 7, None, None);
+            let mut hp = HyperParams::for_dataset("small");
+            hp.t = 40;
+            hp.j0 = 8;
+            let mut session = SessionBuilder::new("small")
+                .hyper_params(hp)
+                .datasets(ds, test)
+                .shards(s)
+                .build_sharded_in(&mut eng)?;
+            let name = format!("commit-shards-{s} session.commit (1 delete)");
+            let mut victim = 0usize;
+            bench(&mut results, &rt, &name, 1, 10, || {
+                session.commit(Edit::delete_row(victim)).map(|_| ())?;
+                victim += 1;
+                Ok(())
+            })?;
+        }
+    }
+
+    if want("wal-group") {
+        println!("== WAL group commit (16 records per fsync) ==");
+        // the group-commit shape: a burst journals every frame with
+        // append_nosync and pays ONE fsync before any ack — divide the
+        // per-rep time by 16 and compare against wal-append's
+        // per-record fsync to see the durability tax amortize
+        let rt = eng.runtime();
+        let wal_p = std::env::temp_dir()
+            .join(format!("deltagrad-bench-wal-group-{}.dgwal", std::process::id()));
+        let _ = std::fs::remove_file(&wal_p);
+        let mut w = deltagrad::session::artifact::WalWriter::create(&wal_p)?;
+        let mut version = 0u64;
+        bench(&mut results, &rt, "wal-group-commit 16 records one fsync", 5, 200, || {
+            for _ in 0..16 {
+                version += 1;
+                w.append_nosync(version, &Edit::delete_row(version as usize))?;
+            }
+            w.sync()?;
+            Ok(())
+        })?;
+        let _ = std::fs::remove_file(&wal_p);
+    }
+
     if want("wal-append") {
         println!("== WAL append (fsync'd, O(edit) bytes per record) ==");
         let rt = eng.runtime();
@@ -625,11 +684,14 @@ fn main() -> anyhow::Result<()> {
             },
             readers: 1,
             query_cache: 0,
+            query_cache_bytes: 0,
+            shards: 1,
             checkpoint_every: 0,
             checkpoint_dir: Some(store.clone()),
             checkpoint_keep: 4,
             wal: true,
             restore_latest: false,
+            store_fresh: false,
             supervision: Supervision::default(),
             faults: None,
         })?;

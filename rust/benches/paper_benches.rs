@@ -102,11 +102,14 @@ fn main() -> anyhow::Result<()> {
                 },
                 readers,
                 query_cache: 0,
+                query_cache_bytes: 0,
+                shards: 1,
                 checkpoint_every: 0,
                 checkpoint_dir: None,
                 checkpoint_keep: 0,
                 wal: false,
                 restore_latest: false,
+                store_fresh: false,
                 supervision: deltagrad::coordinator::Supervision::default(),
                 faults: None,
             })?;

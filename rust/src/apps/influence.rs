@@ -207,7 +207,9 @@ pub fn influence_delete(
 }
 
 /// Sample rows estimating H from the REMAINING (non-removed) rows.
-fn hessian_sample(n: usize, removed: &IndexSet, opts: &InfluenceOpts) -> Vec<usize> {
+/// Deterministic in `(n, removed, opts)` — the sharded influence path
+/// reuses it so both paths draw the identical sample.
+pub(crate) fn hessian_sample(n: usize, removed: &IndexSet, opts: &InfluenceOpts) -> Vec<usize> {
     let remaining = removed.complement(n);
     if remaining.len() <= opts.hessian_sample {
         return remaining;

@@ -78,6 +78,28 @@ pub struct Metrics {
     /// poisoned-lock recoveries: a panic while holding the cache lock
     /// cleared the cache instead of propagating (should stay 0)
     pub cache_resets: u64,
+    /// approximate resident bytes currently memoized (`--cache-bytes`)
+    pub cache_bytes: u64,
+    /// configured byte budget (0 = unbounded; the section renders only
+    /// when a budget is set, so `--cache N` output is unchanged)
+    pub cache_byte_budget: u64,
+    /// entries FIFO-evicted to satisfy the byte budget
+    pub cache_byte_evictions: u64,
+    // --- shard plane (filled at Metrics time from the worker's
+    // ShardedSession; zero when --shards 1) ---------------------------
+    /// shard-pool size S (0 or 1 = the single-session path)
+    pub shards: u64,
+    /// host f64 tree-reductions (one per exact iteration + one per
+    /// influence CG step)
+    pub shard_reduces: u64,
+    /// wall-clock seconds inside the reduction tree
+    pub shard_reduce_seconds: f64,
+    /// cumulative device traffic summed over every shard runtime
+    pub shard_uploads: u64,
+    pub shard_upload_floats: u64,
+    pub shard_execs: u64,
+    pub shard_downloads: u64,
+    pub shard_download_floats: u64,
     // --- durability (worker-side) --------------------------------------
     /// artifact checkpoints written (`ServiceConfig::checkpoint_every`)
     pub checkpoints: u64,
@@ -88,6 +110,10 @@ pub struct Metrics {
     pub wal_records: u64,
     /// bytes those appends wrote, framing included — O(edit) each
     pub wal_bytes: u64,
+    /// fsyncs issued for those appends: group commit batches a whole
+    /// burst of frames under ONE data sync, so `wal_syncs <=
+    /// wal_records` (equality only when every burst held one commit)
+    pub wal_syncs: u64,
 }
 
 impl Metrics {
@@ -140,10 +166,42 @@ impl Metrics {
         self.checkpoint_seconds += seconds;
     }
 
-    /// Record one fsync'd WAL append of `bytes` bytes.
+    /// Record one WAL append of `bytes` bytes (framing included).
     pub fn record_wal(&mut self, bytes: u64) {
         self.wal_records += 1;
         self.wal_bytes += bytes;
+    }
+
+    /// Record one group-commit fsync covering every append since the
+    /// previous sync.
+    pub fn record_wal_sync(&mut self) {
+        self.wal_syncs += 1;
+    }
+
+    /// Fold a shard-plane snapshot into the overlay fields: pool size,
+    /// reduction counters, and the summed per-shard device traffic.
+    pub fn record_shards(
+        &mut self,
+        shards: usize,
+        reduces: u64,
+        reduce_seconds: f64,
+        per_shard: &[TransferStats],
+    ) {
+        self.shards = shards as u64;
+        self.shard_reduces = reduces;
+        self.shard_reduce_seconds = reduce_seconds;
+        self.shard_uploads = 0;
+        self.shard_upload_floats = 0;
+        self.shard_execs = 0;
+        self.shard_downloads = 0;
+        self.shard_download_floats = 0;
+        for t in per_shard {
+            self.shard_uploads += t.uploads;
+            self.shard_upload_floats += t.upload_floats;
+            self.shard_execs += t.execs;
+            self.shard_downloads += t.downloads;
+            self.shard_download_floats += t.download_floats;
+        }
     }
 
     /// Record one served read query: its kind, end-to-end latency
@@ -318,6 +376,26 @@ impl Metrics {
                 ));
             }
         }
+        if self.cache_byte_budget > 0 {
+            s.push_str(&format!(
+                " cache_bytes(used={} budget={} evictions={})",
+                self.cache_bytes, self.cache_byte_budget, self.cache_byte_evictions,
+            ));
+        }
+        if self.shards > 1 {
+            s.push_str(&format!(
+                " shards={} reduces={} ({:.3}s) shard_device(uploads={} floats={} \
+                 execs={} downloads={} dl_floats={})",
+                self.shards,
+                self.shard_reduces,
+                self.shard_reduce_seconds,
+                self.shard_uploads,
+                self.shard_upload_floats,
+                self.shard_execs,
+                self.shard_downloads,
+                self.shard_download_floats,
+            ));
+        }
         if self.checkpoints > 0 {
             s.push_str(&format!(
                 " checkpoints={} ({:.3}s)",
@@ -325,10 +403,19 @@ impl Metrics {
             ));
         }
         if self.wal_records > 0 {
-            s.push_str(&format!(
-                " wal(records={} bytes={})",
-                self.wal_records, self.wal_bytes,
-            ));
+            // syncs intrude only when group commit actually ran — a
+            // pre-group-commit consumer's exact-match parse still works
+            if self.wal_syncs > 0 {
+                s.push_str(&format!(
+                    " wal(records={} bytes={} syncs={})",
+                    self.wal_records, self.wal_bytes, self.wal_syncs,
+                ));
+            } else {
+                s.push_str(&format!(
+                    " wal(records={} bytes={})",
+                    self.wal_records, self.wal_bytes,
+                ));
+            }
         }
         s
     }
@@ -478,6 +565,37 @@ mod tests {
         assert!(r.contains("respawns=3"), "{r}");
         assert!(r.contains("cache(hits=5 misses=0 entries=0/64 resets=1)"), "{r}");
         assert!(r.contains("wal(records=2 bytes=78)"), "{r}");
+    }
+
+    #[test]
+    fn shard_and_wal_sync_sections_render_only_when_active() {
+        let mut m = Metrics::new();
+        m.record_wal(37);
+        let r = m.render();
+        // single-commit bursts without a recorded sync keep the exact
+        // historical wal(...) shape, and S<=1 renders no shard section
+        assert!(r.contains("wal(records=1 bytes=37)"), "{r}");
+        assert!(!r.contains("shards="), "{r}");
+        assert!(!r.contains("cache_bytes("), "{r}");
+        m.record_wal(41);
+        m.record_wal_sync();
+        m.record_shards(
+            2,
+            5,
+            0.25,
+            &[
+                TransferStats { uploads: 3, execs: 4, downloads: 3, ..Default::default() },
+                TransferStats { uploads: 2, execs: 4, downloads: 3, ..Default::default() },
+            ],
+        );
+        m.cache_byte_budget = 4096;
+        m.cache_bytes = 100;
+        m.cache_byte_evictions = 2;
+        let r = m.render();
+        assert!(r.contains("wal(records=2 bytes=78 syncs=1)"), "{r}");
+        assert!(r.contains("shards=2 reduces=5 (0.250s)"), "{r}");
+        assert!(r.contains("shard_device(uploads=5 floats=0 execs=8 downloads=6 dl_floats=0)"), "{r}");
+        assert!(r.contains("cache_bytes(used=100 budget=4096 evictions=2)"), "{r}");
     }
 
     #[test]

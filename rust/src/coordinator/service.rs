@@ -86,7 +86,9 @@ use super::faults::{FaultConfig, FaultPlane, FaultSite};
 use super::metrics::Metrics;
 use super::readers::{CommitDelta, ReaderCmd, ReaderCtx, ReaderPool, ReaderSpawn, Supervision};
 use crate::config::HyperParams;
-use crate::session::{artifact, Edit, Query, QueryCache, QueryReply, Session, SessionBuilder};
+use crate::session::{
+    artifact, Edit, Query, QueryCache, QueryReply, Session, SessionBuilder, ShardedSession,
+};
 
 /// What the service sends back for one served edit.
 #[derive(Clone, Debug)]
@@ -182,6 +184,21 @@ pub struct ServiceConfig {
     /// version-keyed query memo cache capacity, in replies. 0 (default)
     /// = disabled; repeated identical queries between commits re-execute.
     pub query_cache: usize,
+    /// approximate byte budget for the memo cache's resident payloads
+    /// (`--cache-bytes`); oldest entries FIFO-evict past it. 0 (default)
+    /// = no byte bound, the count cap alone applies.
+    pub query_cache_bytes: usize,
+    /// shard-pool size S: partition the base dataset across S worker
+    /// shards (each its own engine thread) and run every exact-iteration
+    /// full gradient as an S-way parallel broadcast, tree-reduced in f64
+    /// (`--shards`). 1 (default) = the single-session path, byte-
+    /// identical to the pre-sharding service.
+    pub shards: usize,
+    /// serve fresh against a non-empty checkpoint store anyway
+    /// (`--store-fresh`): overrides the stale-lineage guard that refuses
+    /// to interleave a restarted version counter into an existing
+    /// store/WAL lineage.
+    pub store_fresh: bool,
     /// checkpoint the session to the artifact store every K commits
     /// (content-addressed `save_to_store`, non-fatal on failure).
     /// 0 (default) = no checkpointing.
@@ -245,7 +262,8 @@ impl ServiceHandle {
         let max_queue = cfg.policy.max_queue;
         let max_query_queue = cfg.policy.max_query_queue;
         let latest = Arc::new(AtomicU64::new(0));
-        let cache = Arc::new(Mutex::new(QueryCache::new(cfg.query_cache)));
+        let cache =
+            Arc::new(Mutex::new(QueryCache::with_byte_budget(cfg.query_cache, cfg.query_cache_bytes)));
         let cache_resets = Arc::new(AtomicU64::new(0));
         let faults = FaultPlane::from_config(cfg.faults.clone());
         let store_dir = cfg.checkpoint_dir.clone().unwrap_or_else(artifact::store_dir);
@@ -410,6 +428,9 @@ impl ServiceHandle {
         m.cache_entries = cs.entries;
         m.cache_capacity = cs.capacity;
         m.cache_resets = self.cache_resets.load(Ordering::SeqCst);
+        m.cache_bytes = cs.bytes;
+        m.cache_byte_budget = cs.byte_budget;
+        m.cache_byte_evictions = cs.byte_evictions;
         Ok(m)
     }
 
@@ -492,32 +513,62 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
         anyhow::bail!("the unlearning service requires a GD config (hp.batch == 0)");
     }
     let store_dir = cfg.checkpoint_dir.clone().unwrap_or_else(artifact::store_dir);
-    // --- initialization: one Session owns engine, data, model, staging.
-    // `restore_latest` recovers the previous run — newest loadable
-    // checkpoint + WAL suffix; an empty store degrades to recipe build
-    // + WAL replay, so a service that crashed before its first
-    // checkpoint still loses nothing.
+    // stale-lineage guard: a FRESH durable service (writing checkpoints
+    // or a WAL) against a store that already holds this model's
+    // checkpoints would restart the version counter at 0 and interleave
+    // a second lineage into the history those checkpoints anchor —
+    // recovery could then replay the wrong run's edits. Refuse up front
+    // with the ways out; `--store-fresh` overrides deliberately.
+    if !cfg.restore_latest && !cfg.store_fresh && (cfg.wal || cfg.checkpoint_every > 0) {
+        let existing = artifact::store_checkpoints(&store_dir, &cfg.model).unwrap_or_default();
+        if let Some((newest, _)) = existing.first() {
+            // unblock the readers' construction handshake before dying
+            for tx in &shared.delta_txs {
+                let _ = tx.send(ReaderCmd::Init(None));
+            }
+            anyhow::bail!(
+                "checkpoint store {} already holds {} checkpoint(s) for model '{}' \
+                 (newest v{newest}); serving fresh would restart versions at 0 and \
+                 interleave a stale lineage into that store's history. Pass \
+                 --restore-latest to continue the stored lineage, --store-fresh to \
+                 serve fresh anyway, or point --store at an empty directory",
+                store_dir.display(),
+                existing.len(),
+                cfg.model,
+            );
+        }
+    }
+    // --- initialization: one Session owns engine, data, model, staging
+    // (wrapped in a ShardedSession: S>1 adds the shard pool, S=1 is the
+    // plain path). `restore_latest` recovers the previous run — newest
+    // loadable checkpoint + WAL suffix; an empty store degrades to
+    // recipe build + WAL replay, so a service that crashed before its
+    // first checkpoint still loses nothing. A restored artifact's
+    // recorded shard layout must agree with `--shards` (or decides it
+    // when --shards is 1).
     let built = if cfg.restore_latest {
-        match artifact::restore_latest(&store_dir, &cfg.model) {
-            Ok(s) => Ok(s),
+        match artifact::restore_latest_with_layout(&store_dir, &cfg.model) {
+            Ok((s, rec)) => ShardedSession::attach_restored(s, rec, cfg.shards),
             Err(e) => {
                 eprintln!(
                     "deltagrad service: restore-latest found no loadable checkpoint \
                      ({e:#}); rebuilding from the recipe + WAL"
                 );
-                build_fresh(&cfg).and_then(|mut s| {
-                    if cfg.wal {
-                        artifact::wal_replay_onto(
-                            &mut s,
-                            &artifact::wal_path(&store_dir, &cfg.model),
-                        )?;
-                    }
-                    Ok(s)
-                })
+                build_fresh(&cfg)
+                    .and_then(|mut s| {
+                        if cfg.wal {
+                            artifact::wal_replay_onto(
+                                &mut s,
+                                &artifact::wal_path(&store_dir, &cfg.model),
+                            )?;
+                        }
+                        Ok(s)
+                    })
+                    .and_then(|s| ShardedSession::attach(s, cfg.shards))
             }
         }
     } else {
-        build_fresh(&cfg)
+        build_fresh(&cfg).and_then(|s| ShardedSession::attach(s, cfg.shards))
     };
     let mut session = match built {
         Ok(s) => s,
@@ -567,7 +618,7 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
             std::process::id(),
             SPAWN_SEQ.fetch_add(1, Ordering::SeqCst),
         ));
-        match artifact::save(&session, &path) {
+        match session.save_artifact(&path) {
             Ok(rep) => Some(rep.path),
             Err(e) => {
                 eprintln!("deltagrad service: spawn artifact save failed: {e:#}");
@@ -648,14 +699,36 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                     }
                 },
                 Command::Metrics(reply) => {
+                    // fold the shard plane's counters in at report time
+                    // (poisoned/degraded pools just skip the overlay)
+                    if let Ok(Some(st)) = session.shard_stats() {
+                        metrics.record_shards(
+                            st.shards,
+                            st.reduces,
+                            st.reduce_seconds,
+                            &st.per_shard,
+                        );
+                    }
                     let _ = reply.send(metrics.clone());
                 }
                 Command::Shutdown => shutdown = true,
             }
         }
-        // commit a group if the policy says so
-        let n = group_to_commit(&queue, &cfg.policy, Instant::now());
-        if n > 0 {
+        // commit every currently-committable group, journaling the
+        // whole burst under ONE fsync: frames append per commit
+        // (buffered, no sync) and the clients' acks are DEFERRED until
+        // a single data sync covers every frame — an acknowledged
+        // commit is still always durable, but a burst of k groups pays
+        // one fsync instead of k. Read-plane publication (version
+        // watermark, cache invalidation, reader deltas) stays
+        // per-commit and still precedes the acks.
+        let mut acks: Vec<(Sender<Result<UpdateReply, Rejected>>, UpdateReply)> = Vec::new();
+        let mut wal_dirty = false;
+        loop {
+            let n = group_to_commit(&queue, &cfg.policy, Instant::now());
+            if n == 0 {
+                break;
+            }
             let group: Vec<Pending<PendingUpdate>> = queue.drain(..n).collect();
             let edit = Edit::group(group.iter().map(|p| p.payload.edit.clone()).collect());
             let (dels, adds) = edit.count_kinds();
@@ -682,10 +755,15 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
             match committed {
                 Ok(c) => {
                     // journal FIRST: once any client sees this commit
-                    // acknowledged, a crash must be able to replay it
+                    // acknowledged, a crash must be able to replay it —
+                    // the frame appends now, the burst's single fsync
+                    // lands before the deferred acks below
                     if let Some(w) = wal.as_mut() {
-                        match w.append(c.version, &delta_edit) {
-                            Ok(bytes) => metrics.record_wal(bytes),
+                        match w.append_nosync(c.version, &delta_edit) {
+                            Ok(bytes) => {
+                                metrics.record_wal(bytes);
+                                wal_dirty = true;
+                            }
                             Err(e) => eprintln!(
                                 "deltagrad service: WAL append at v{} failed: {e:#}",
                                 c.version
@@ -732,7 +810,7 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                                 FaultSite::CheckpointWrite.name()
                             ))
                         } else {
-                            artifact::save_to_store(&session, &store_dir)
+                            session.save_artifact_to_store(&store_dir)
                         };
                         match saved {
                             Ok(_) => {
@@ -775,24 +853,44 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                             ),
                         }
                     }
-                    for p in &group {
-                        let _ = p.payload.reply.send(Ok(UpdateReply {
-                            version: c.version,
-                            group_size: n,
-                            pass_seconds: c.out.seconds,
-                            n_exact: c.out.n_exact,
-                            n_approx: c.out.n_approx,
-                        }));
+                    // acks wait for the burst's fsync; everything else
+                    // above (publication, metrics, checkpoints) already
+                    // ran per-commit
+                    for p in group {
+                        acks.push((
+                            p.payload.reply,
+                            UpdateReply {
+                                version: c.version,
+                                group_size: n,
+                                pass_seconds: c.out.seconds,
+                                n_exact: c.out.n_exact,
+                                n_approx: c.out.n_approx,
+                            },
+                        ));
                     }
                 }
                 Err(e) => {
                     // typed rejection, session untouched: clients may
-                    // retry, subsequent commits are unaffected
+                    // retry, subsequent commits are unaffected (nothing
+                    // was journaled, so rejections need no fsync)
                     for p in &group {
                         let _ = p.payload.reply.send(Err(Rejected::Failed(e.to_string())));
                     }
                 }
             }
+        }
+        // one data sync covers every frame appended this burst; only
+        // then may any client learn its commit happened
+        if wal_dirty {
+            if let Some(w) = wal.as_mut() {
+                match w.sync() {
+                    Ok(()) => metrics.record_wal_sync(),
+                    Err(e) => eprintln!("deltagrad service: WAL sync failed: {e:#}"),
+                }
+            }
+        }
+        for (reply, rep) in acks {
+            let _ = reply.send(Ok(rep));
         }
         // answer every queued read BETWEEN passes, against the state the
         // commit above (if any) left behind: the reply's version is

@@ -124,8 +124,9 @@ fn main() -> Result<()> {
             args.check_flags(
                 "serve",
                 &[
-                    "model", "requests", "t", "readers", "cache", "checkpoint-every", "store",
-                    "checkpoint-keep", "wal", "restore-latest", "fault-seed", "fault-rate",
+                    "model", "requests", "t", "readers", "cache", "cache-bytes", "shards",
+                    "checkpoint-every", "store", "checkpoint-keep", "wal", "restore-latest",
+                    "store-fresh", "fault-seed", "fault-rate",
                 ],
             );
             cmd_serve(&args)
@@ -147,7 +148,7 @@ fn main() -> Result<()> {
                 "query",
                 &[
                     "model", "kind", "t", "count", "alpha", "targets", "frac", "loo", "readers",
-                    "cache",
+                    "cache", "cache-bytes", "shards",
                 ],
             );
             cmd_query(&args)
@@ -339,11 +340,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy: BatchPolicy::default(),
         readers: args.usize_flag("readers", 0)?,
         query_cache: args.usize_flag("cache", 0)?,
+        query_cache_bytes: args.usize_flag("cache-bytes", 0)?,
+        shards: args.usize_flag("shards", 1)?,
         checkpoint_every: args.usize_flag("checkpoint-every", 0)?,
         checkpoint_dir: args.flag("store").map(std::path::PathBuf::from),
         checkpoint_keep: args.usize_flag("checkpoint-keep", 4)?,
         wal: args.flag("wal").map(|v| v != "false").unwrap_or(false),
         restore_latest: args.flag("restore-latest").map(|v| v != "false").unwrap_or(false),
+        store_fresh: args.flag("store-fresh").map(|v| v != "false").unwrap_or(false),
         supervision: Supervision::default(),
         faults: faults_on.then(|| FaultConfig::new(fault_seed, fault_rate)),
     })?;
@@ -425,11 +429,14 @@ fn cmd_query(args: &Args) -> Result<()> {
         policy: BatchPolicy::default(),
         readers: args.usize_flag("readers", 0)?,
         query_cache: args.usize_flag("cache", 0)?,
+        query_cache_bytes: args.usize_flag("cache-bytes", 0)?,
+        shards: args.usize_flag("shards", 1)?,
         checkpoint_every: 0,
         checkpoint_dir: None,
         checkpoint_keep: 4,
         wal: false,
         restore_latest: false,
+        store_fresh: false,
         supervision: Supervision::default(),
         faults: None,
     })?;

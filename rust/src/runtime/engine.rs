@@ -597,6 +597,55 @@ impl ModelExes {
         tail: &[StagedRows],
         ctx: &PassCtx,
     ) -> Result<(Vec<f32>, Stats)> {
+        let acc = self.grad_chain_with_tail(rt, staged, tail_full, tail, ctx)?;
+        self.finish_grad(rt, acc)
+    }
+
+    /// [`Self::grad_staged_with_tail`] returning the RAW fused
+    /// accumulator `[g ; sums4 ; comps4]` (`p + ACC_EXTRA` floats)
+    /// undecoded. Shard workers ship this to the coordinator, which
+    /// tree-reduces the per-shard vectors in f64 before splitting off
+    /// the gradient and recombining the Kahan stats lanes — decoding
+    /// per shard first would throw away the compensation terms the
+    /// cross-shard reduction needs.
+    pub fn grad_staged_with_tail_acc(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        tail_full: Option<&Staged>,
+        tail: &[StagedRows],
+        ctx: &PassCtx,
+    ) -> Result<Vec<f32>> {
+        let p = self.spec.p;
+        match self.grad_chain_with_tail(rt, staged, tail_full, tail, ctx)? {
+            None => Ok(vec![0.0f32; p + ACC_EXTRA]),
+            Some(buf) => {
+                let v = rt.download(&buf)?;
+                if v.len() != p + ACC_EXTRA {
+                    bail!(
+                        "accumulator length {} != p+{ACC_EXTRA} = {}",
+                        v.len(),
+                        p + ACC_EXTRA
+                    );
+                }
+                Ok(v)
+            }
+        }
+    }
+
+    /// Shared fused-chain body of [`Self::grad_staged_with_tail`] /
+    /// [`Self::grad_staged_with_tail_acc`]: chains `grad_acc` over the
+    /// base + compacted-tail chunks and `grad_small_acc` over the
+    /// segmented remainder, returning the final on-device accumulator
+    /// (None when there was nothing staged).
+    fn grad_chain_with_tail(
+        &self,
+        rt: &Runtime,
+        staged: &Staged,
+        tail_full: Option<&Staged>,
+        tail: &[StagedRows],
+        ctx: &PassCtx,
+    ) -> Result<Option<xla::PjRtBuffer>> {
         let mut acc: Option<xla::PjRtBuffer> = None;
         for st in std::iter::once(staged).chain(tail_full) {
             for sc in &st.chunks {
@@ -616,7 +665,7 @@ impl ModelExes {
                 )?);
             }
         }
-        self.finish_grad(rt, acc)
+        Ok(acc)
     }
 
     /// [`Self::grad_staged_with_tail`] without a tail.

@@ -179,8 +179,23 @@ pub struct Artifact {
     /// every committed edit, in commit order
     pub edits: Vec<Edit>,
     pub stats: SessionStats,
+    /// shard-execution layout of the saving session (None for S=1 —
+    /// the section is simply absent, so single-session artifact bytes
+    /// are unchanged and old artifacts decode as None)
+    pub shard_layout: Option<ShardLayoutRec>,
     /// FNV-1a over the canonical bytes (the content address)
     pub content_hash: u64,
+}
+
+/// Wire record of a sharded session's base partition: shard count plus
+/// the contiguous `[lo, hi)` base row-range per shard, in shard order.
+/// Restore recomputes the layout from `(base.n, shards)` and insists it
+/// matches this record bitwise, so a restored session re-shards
+/// identically.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardLayoutRec {
+    pub shards: u64,
+    pub ranges: Vec<(u64, u64)>,
 }
 
 /// Outcome of a [`save`]: where it landed and under which address.
@@ -502,6 +517,7 @@ impl Artifact {
             tail_segments,
             edits: s.edit_log.clone(),
             stats: s.stats(),
+            shard_layout: None,
             content_hash: 0,
         };
         a.content_hash = fnv1a(&a.canonical_bytes());
@@ -557,6 +573,18 @@ impl Artifact {
         put_transfers(&mut b, &st.preview_transfers);
         put_transfers(&mut b, &st.commit_transfers);
         put_f64(&mut b, st.seconds);
+        // optional trailing shard-layout section INSIDE the canonical
+        // bytes (covered by the content hash): present only when the
+        // saving session was sharded, so an S=1 artifact is
+        // byte-identical to the pre-sharding format
+        if let Some(rec) = &self.shard_layout {
+            put_u64(&mut b, rec.shards);
+            put_usize(&mut b, rec.ranges.len());
+            for &(lo, hi) in &rec.ranges {
+                put_u64(&mut b, lo);
+                put_u64(&mut b, hi);
+            }
+        }
         b
     }
 
@@ -638,6 +666,34 @@ impl Artifact {
             commit_transfers: r.get_transfers()?,
             seconds: r.get_f64()?,
         };
+        // bytes past the stats are the optional shard-layout section
+        // (absent in S=1 and pre-sharding artifacts)
+        let shard_layout = if r.remaining() > 0 {
+            let shards = r.get_u64()?;
+            let n_ranges = r.get_count(16)?;
+            let mut ranges = Vec::with_capacity(n_ranges);
+            for _ in 0..n_ranges {
+                let lo = r.get_u64()?;
+                let hi = r.get_u64()?;
+                ranges.push((lo, hi));
+            }
+            if shards < 2 || ranges.len() as u64 != shards {
+                return Err(ArtifactError::Malformed("shard layout count mismatch"));
+            }
+            let mut expect = 0u64;
+            for &(lo, hi) in &ranges {
+                if lo != expect || hi < lo {
+                    return Err(ArtifactError::Malformed("shard ranges must tile contiguously"));
+                }
+                expect = hi;
+            }
+            if expect != base.n as u64 {
+                return Err(ArtifactError::Malformed("shard ranges do not cover the base"));
+            }
+            Some(ShardLayoutRec { shards, ranges })
+        } else {
+            None
+        };
         if r.remaining() != 0 {
             return Err(ArtifactError::Malformed("trailing bytes in canonical section"));
         }
@@ -673,6 +729,7 @@ impl Artifact {
             tail_segments,
             edits,
             stats,
+            shard_layout,
             content_hash: expected,
         })
     }
@@ -754,9 +811,39 @@ pub fn save(session: &Session, path: &Path) -> Result<SaveReport> {
 /// hash, so checkpoints accumulate side by side and identical re-saves
 /// dedupe.
 pub fn save_to_store(session: &Session, dir: &Path) -> Result<SaveReport> {
-    let art = Artifact::from_session(session);
+    save_to_store_with_layout(session, None, dir)
+}
+
+/// [`save`] carrying a sharded session's layout record in the optional
+/// canonical tail section (`layout == None` writes byte-identical
+/// single-session artifacts — [`save`] delegates here).
+pub fn save_with_layout(
+    session: &Session,
+    layout: Option<&ShardLayoutRec>,
+    path: &Path,
+) -> Result<SaveReport> {
+    write_artifact(&artifact_with_layout(session, layout), path)
+}
+
+/// [`save_to_store`] carrying a shard-layout record (content-addressed
+/// name; the layout section is covered by the hash).
+pub fn save_to_store_with_layout(
+    session: &Session,
+    layout: Option<&ShardLayoutRec>,
+    dir: &Path,
+) -> Result<SaveReport> {
+    let art = artifact_with_layout(session, layout);
     let path = store_path(dir, &art.recipe.model, art.version, art.content_hash);
     write_artifact(&art, &path)
+}
+
+fn artifact_with_layout(session: &Session, layout: Option<&ShardLayoutRec>) -> Artifact {
+    let mut art = Artifact::from_session(session);
+    if layout.is_some() {
+        art.shard_layout = layout.cloned();
+        art.content_hash = fnv1a(&art.canonical_bytes());
+    }
+    art
 }
 
 fn write_artifact(art: &Artifact, path: &Path) -> Result<SaveReport> {
@@ -995,6 +1082,18 @@ impl WalWriter {
     /// Append one committed edit; returns the bytes written (O(edit)).
     /// Durable when this returns: the record is flushed and fsync'd.
     pub fn append(&mut self, version: u64, edit: &Edit) -> Result<u64> {
+        let n = self.append_nosync(version, edit)?;
+        self.sync()?;
+        Ok(n)
+    }
+
+    /// Append WITHOUT forcing durability — the group-commit half of
+    /// [`Self::append`]. The caller MUST [`Self::sync`] before
+    /// acknowledging the commit(s) these frames cover; until then a
+    /// crash may lose them (the checksummed framing still guarantees
+    /// the journal is a valid prefix). Batching a burst of appends
+    /// under ONE fsync amortizes the per-ack fdatasync tax.
+    pub fn append_nosync(&mut self, version: u64, edit: &Edit) -> Result<u64> {
         use std::io::Write as _;
         let mut body = Vec::with_capacity(32);
         put_u64(&mut body, version);
@@ -1006,12 +1105,17 @@ impl WalWriter {
         self.file
             .write_all(&rec)
             .with_context(|| format!("appending to WAL {}", self.path.display()))?;
-        self.file
-            .sync_data()
-            .with_context(|| format!("fsyncing WAL {}", self.path.display()))?;
         self.records += 1;
         self.bytes += rec.len() as u64;
         Ok(rec.len() as u64)
+    }
+
+    /// fdatasync the journal: every [`Self::append_nosync`] frame so
+    /// far becomes durable at once.
+    pub fn sync(&mut self) -> Result<()> {
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsyncing WAL {}", self.path.display()))
     }
 
     /// Truncate the journal through the live writer: drop records at or
@@ -1157,6 +1261,54 @@ pub fn restore(path: &Path) -> Result<Session> {
 /// compiled artifacts).
 pub fn restore_in(path: &Path, eng: &mut Engine) -> Result<Session> {
     restore_artifact_in(Artifact::load(path)?, eng)
+}
+
+/// [`restore`] surfacing the artifact's recorded shard layout (None
+/// for single-session artifacts) so the caller can re-shard
+/// identically — see `session::sharded::ShardedSession::restore_from`.
+pub fn restore_with_layout(path: &Path) -> Result<(Session, Option<ShardLayoutRec>)> {
+    let mut eng = Engine::open_default()?;
+    let art = Artifact::load(path)?;
+    let layout = art.shard_layout.clone();
+    Ok((restore_artifact_in(art, &mut eng)?, layout))
+}
+
+/// [`restore_latest_in_store`] surfacing the restored checkpoint's
+/// shard-layout record alongside the session.
+pub fn restore_latest_with_layout(
+    dir: &Path,
+    model: &str,
+) -> Result<(Session, Option<ShardLayoutRec>)> {
+    let mut eng = Engine::open_default()?;
+    let cps = store_checkpoints(dir, model)?;
+    if cps.is_empty() {
+        bail!("no checkpoints for model '{model}' in {}", dir.display());
+    }
+    let mut last_err = None;
+    for (version, path) in &cps {
+        let attempt = (|| -> Result<(Session, Option<ShardLayoutRec>)> {
+            let art = Artifact::load(path)?;
+            let layout = art.shard_layout.clone();
+            let mut s = restore_artifact_in(art, &mut eng)?;
+            wal_replay_onto(&mut s, &wal_path(dir, model))?;
+            Ok((s, layout))
+        })();
+        match attempt {
+            Ok(out) => return Ok(out),
+            Err(e) => {
+                eprintln!(
+                    "restore-latest: checkpoint v{version} {} unreadable ({e:#}); \
+                     falling back to the previous checkpoint",
+                    path.display()
+                );
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(last_err.expect("non-empty checkpoint list").context(format!(
+        "no loadable checkpoint for model '{model}' in {}",
+        dir.display()
+    )))
 }
 
 pub(crate) fn restore_artifact_in(a: Artifact, eng: &mut Engine) -> Result<Session> {
@@ -1415,6 +1567,7 @@ mod tests {
                 commit_transfers: TransferStats { downloads: 8, ..Default::default() },
                 seconds: 0.75,
             },
+            shard_layout: None,
             content_hash: 0,
         };
         a.content_hash = fnv1a(&a.canonical_bytes());

@@ -52,10 +52,12 @@
 pub mod artifact;
 pub mod query;
 pub mod query_cache;
+pub mod sharded;
 
 pub use artifact::{Artifact, ArtifactError, SaveReport, WalRecord, WalWriter};
 pub use query::{query, JackknifeFunctional, Query, QueryKind, QueryReply, QueryResult};
 pub use query_cache::{QueryCache, QueryCacheStats};
+pub use sharded::{ShardLayout, ShardedSession, ShardedStats, SubEdit};
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
@@ -353,6 +355,7 @@ pub struct SessionBuilder {
     hp: Option<HyperParams>,
     data: Option<(Dataset, Dataset)>,
     compact_watermark: usize,
+    shards: usize,
 }
 
 impl SessionBuilder {
@@ -365,7 +368,17 @@ impl SessionBuilder {
             hp: None,
             data: None,
             compact_watermark: TAIL_COMPACT_WATERMARK,
+            shards: 1,
         }
+    }
+
+    /// Partition the base dataset across S worker shards (parallel
+    /// full-pass accumulation; see [`sharded::ShardedSession`]). Only
+    /// [`Self::build_sharded`] / [`Self::build_sharded_in`] honor this;
+    /// 1 (the default) builds the plain single-session path.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
     }
 
     /// Override the tail-compaction watermark (in `chunk_small` segment
@@ -455,6 +468,32 @@ impl SessionBuilder {
     /// runtime and compiled artifacts).
     pub fn restore_from_in(path: &std::path::Path, eng: &mut Engine) -> Result<Session> {
         artifact::restore_in(path, eng)
+    }
+
+    /// [`Self::build`] wrapped in a [`ShardedSession`] honoring
+    /// [`Self::shards`] (S=1: no pool, byte-identical to the plain
+    /// session).
+    pub fn build_sharded(self) -> Result<ShardedSession> {
+        let shards = self.shards;
+        ShardedSession::attach(self.build()?, shards)
+    }
+
+    /// [`Self::build_sharded`] against an existing engine. The engine
+    /// serves only the coordinator-side session — each shard worker
+    /// opens its own (PJRT handles never cross threads).
+    pub fn build_sharded_in(self, eng: &mut Engine) -> Result<ShardedSession> {
+        let shards = self.shards;
+        ShardedSession::attach(self.build_in(eng)?, shards)
+    }
+
+    /// Warm-restart a sharded session from an artifact, honoring the
+    /// artifact's recorded shard layout (see
+    /// [`ShardedSession::restore_from`]).
+    pub fn restore_sharded_from(
+        path: &std::path::Path,
+        shards: usize,
+    ) -> Result<ShardedSession> {
+        ShardedSession::restore_from(path, shards)
     }
 }
 
@@ -1040,6 +1079,22 @@ impl Session {
     /// unchanged. (The only non-atomic window left is a device failure
     /// inside the final mask flip itself.)
     pub fn commit(&mut self, edit: Edit) -> Result<Committed> {
+        self.commit_with_plane(edit, None)
+    }
+
+    /// [`Self::commit`] with an optional full-gradient plane: exact
+    /// iterations take the full masked gradient SUM from `plane`
+    /// (the sharded S-way parallel broadcast) instead of this session's
+    /// own resident chain. `None` IS the resident chain — the public
+    /// `commit` delegates with `None`, so the single-session path is
+    /// untouched byte-for-byte. Everything else (delta-row gradients,
+    /// L-BFGS history, trajectory rewrite, mask flips) stays on this
+    /// session regardless of the plane.
+    pub(crate) fn commit_with_plane(
+        &mut self,
+        edit: Edit,
+        plane: Option<&dyn sharded::FullGradPlane>,
+    ) -> Result<Committed> {
         if self.hp.batch != 0 {
             bail!("commit requires a GD trajectory (cache rewriting is GD-only; see DESIGN.md)");
         }
@@ -1201,14 +1256,19 @@ impl Session {
                 n_exact += 1;
                 // base chunks + resident tail (compacted chunks, then
                 // leftover segments) fused into one on-device reduction
-                // (a single result download)
-                let (g_sum_cur, stats) = exes.grad_staged_with_tail(
-                    rt,
-                    &self.staged,
-                    self.tail_compact.as_ref(),
-                    sr_tail,
-                    &ctx,
-                )?;
+                // (a single result download) — or, when a shard plane
+                // is attached, the S-way parallel broadcast reduced on
+                // the host (masks over there mirror this session's)
+                let (g_sum_cur, stats) = match plane {
+                    Some(pl) => pl.full_grad(&w)?,
+                    None => exes.grad_staged_with_tail(
+                        rt,
+                        &self.staged,
+                        self.tail_compact.as_ref(),
+                        sr_tail,
+                        &ctx,
+                    )?,
+                };
                 last_stats = stats;
                 // harvest (Δw, Δg) against the cached trajectory
                 let dw_pair: Vec<f32> =

@@ -26,8 +26,19 @@ use super::query::{JackknifeFunctional, Query, QueryReply};
 
 /// Bounded FIFO memo of served replies keyed by
 /// `(committed version, Query kind, canonicalized params)`.
+///
+/// Two independent bounds compose: `cap` (entry count, 0 disables the
+/// cache) and `byte_budget` (approximate resident payload bytes, 0 =
+/// unbounded). The byte bound dominates — a giant Influence reply can
+/// evict many small Loss replies — with the count cap as the secondary
+/// backstop, so `--cache N` alone keeps its historical meaning.
 pub struct QueryCache {
     cap: usize,
+    /// approximate-resident-bytes budget; 0 = no byte bound
+    byte_budget: usize,
+    /// running Σ entry_bytes over `entries`
+    bytes: usize,
+    byte_evictions: u64,
     entries: VecDeque<CacheEntry>,
     hits: u64,
     misses: u64,
@@ -40,6 +51,32 @@ struct CacheEntry {
     reply: QueryReply,
 }
 
+impl CacheEntry {
+    /// Approximate resident footprint: key material plus the
+    /// variable-length reply payload (the fixed header — version,
+    /// seconds, transfers — folded into a per-entry constant).
+    fn approx_bytes(&self) -> usize {
+        const ENTRY_OVERHEAD: usize = 64;
+        ENTRY_OVERHEAD + self.bytes.len() + reply_payload_bytes(&self.reply)
+    }
+}
+
+/// Approximate heap bytes of one reply's variable-length payload.
+fn reply_payload_bytes(reply: &QueryReply) -> usize {
+    use super::query::QueryResult;
+    match &reply.result {
+        QueryResult::Predict { probs, .. } => probs.len() * 8,
+        QueryResult::Loss { .. } => 0,
+        QueryResult::Influence { w, .. } => w.len() * 4,
+        QueryResult::Valuation { values } => values.len() * std::mem::size_of::<crate::apps::valuation::SampleValue>(),
+        QueryResult::Jackknife(_) => 0,
+        QueryResult::Conformal { residuals, set, .. } => {
+            residuals.len() * 8 + set.as_ref().map_or(0, |s| s.len() * 4)
+        }
+        QueryResult::Robust(fit) => fit.pruned.len() * 8 + fit.w.len() * 4,
+    }
+}
+
 /// Counters snapshot for metrics overlays.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QueryCacheStats {
@@ -47,6 +84,12 @@ pub struct QueryCacheStats {
     pub misses: u64,
     pub entries: u64,
     pub capacity: u64,
+    /// approximate resident payload bytes currently memoized
+    pub bytes: u64,
+    /// configured byte budget (0 = unbounded)
+    pub byte_budget: u64,
+    /// entries evicted to satisfy the byte budget (FIFO order)
+    pub byte_evictions: u64,
 }
 
 fn put_u64(b: &mut Vec<u8>, v: u64) {
@@ -135,9 +178,24 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 }
 
 impl QueryCache {
-    /// `cap` = max memoized replies; 0 disables every operation.
+    /// `cap` = max memoized replies; 0 disables every operation. No
+    /// byte bound (the historical `--cache N` shape).
     pub fn new(cap: usize) -> Self {
-        QueryCache { cap, entries: VecDeque::new(), hits: 0, misses: 0 }
+        Self::with_byte_budget(cap, 0)
+    }
+
+    /// [`QueryCache::new`] with an approximate-resident-bytes budget on
+    /// top of the entry count (`byte_budget` 0 = unbounded).
+    pub fn with_byte_budget(cap: usize, byte_budget: usize) -> Self {
+        QueryCache {
+            cap,
+            byte_budget,
+            bytes: 0,
+            byte_evictions: 0,
+            entries: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
     }
 
     pub fn enabled(&self) -> bool {
@@ -169,17 +227,35 @@ impl QueryCache {
     /// Memoize one served reply under the version IT was answered at
     /// (`reply.version`, not the caller's guess — a commit can race the
     /// answer). Duplicate keys are tolerated: the older entry still
-    /// matches first and ages out FIFO.
+    /// matches first and ages out FIFO. An entry too large for the
+    /// whole byte budget is not memoized at all — admitting it would
+    /// empty the cache and still blow the bound.
     pub fn insert(&mut self, q: &Query, reply: QueryReply) {
         if self.cap == 0 {
             return;
         }
         let bytes = canonical_key(reply.version, q);
         let key = fnv1a(&bytes);
-        if self.entries.len() >= self.cap {
-            self.entries.pop_front();
+        let entry = CacheEntry { key, bytes, reply };
+        let entry_bytes = entry.approx_bytes();
+        if self.byte_budget > 0 && entry_bytes > self.byte_budget {
+            return;
         }
-        self.entries.push_back(CacheEntry { key, bytes, reply });
+        // byte budget first (it dominates), then the count backstop
+        while self.byte_budget > 0
+            && self.bytes + entry_bytes > self.byte_budget
+            && !self.entries.is_empty()
+        {
+            let dropped = self.entries.pop_front().expect("non-empty");
+            self.bytes -= dropped.approx_bytes();
+            self.byte_evictions += 1;
+        }
+        if self.entries.len() >= self.cap {
+            let dropped = self.entries.pop_front().expect("cap > 0");
+            self.bytes -= dropped.approx_bytes();
+        }
+        self.bytes += entry_bytes;
+        self.entries.push_back(entry);
     }
 
     /// Commit-time invalidation: drop every entry answered at a version
@@ -188,6 +264,7 @@ impl QueryCache {
     /// would waste capacity until FIFO eviction.)
     pub fn retain_version(&mut self, version: u64) {
         self.entries.retain(|e| e.reply.version == version);
+        self.bytes = self.entries.iter().map(|e| e.approx_bytes()).sum();
     }
 
     pub fn stats(&self) -> QueryCacheStats {
@@ -196,6 +273,9 @@ impl QueryCache {
             misses: self.misses,
             entries: self.entries.len() as u64,
             capacity: self.cap as u64,
+            bytes: self.bytes as u64,
+            byte_budget: self.byte_budget as u64,
+            byte_evictions: self.byte_evictions,
         }
     }
 
@@ -205,6 +285,7 @@ impl QueryCache {
     /// rebuilds from misses.
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.bytes = 0;
     }
 }
 
@@ -305,6 +386,55 @@ mod tests {
         assert!(c.get(1, &Query::RobustSweep { frac: 0.1 }).is_none());
         assert!(c.get(2, &Query::RobustSweep { frac: 0.2 }).is_some());
         assert_eq!(c.stats().entries, 1);
+    }
+
+    #[test]
+    fn byte_budget_evicts_fifo_and_tracks_bytes() {
+        // entry footprint for a Loss reply: 64 overhead + key bytes
+        // (9 for Query::Loss: 8-byte version + 1 kind byte) + 0 payload
+        let per = 64 + 9;
+        let mut c = QueryCache::with_byte_budget(16, 2 * per);
+        c.insert(&Query::Loss, loss_reply(1, 0.1));
+        c.insert(&Query::Loss, loss_reply(2, 0.2));
+        assert_eq!(c.stats().bytes, 2 * per as u64);
+        assert_eq!(c.stats().byte_evictions, 0);
+        // a third entry overflows the byte budget: the OLDEST goes
+        c.insert(&Query::Loss, loss_reply(3, 0.3));
+        assert_eq!(c.stats().byte_evictions, 1);
+        assert_eq!(c.stats().bytes, 2 * per as u64);
+        assert!(c.get(1, &Query::Loss).is_none(), "v1 was byte-evicted");
+        assert!(c.get(2, &Query::Loss).is_some());
+        assert!(c.get(3, &Query::Loss).is_some());
+        // retain_version recomputes the running total
+        c.retain_version(3);
+        assert_eq!(c.stats().entries, 1);
+        assert_eq!(c.stats().bytes, per as u64);
+        c.clear();
+        assert_eq!(c.stats().bytes, 0);
+        assert_eq!(c.stats().byte_budget, 2 * per as u64);
+    }
+
+    #[test]
+    fn oversized_entry_is_not_admitted() {
+        let mut c = QueryCache::with_byte_budget(16, 8);
+        c.insert(&Query::Loss, loss_reply(1, 0.1));
+        assert_eq!(c.stats().entries, 0, "entry larger than the whole budget is skipped");
+        assert_eq!(c.stats().bytes, 0);
+        assert!(c.get(1, &Query::Loss).is_none());
+    }
+
+    #[test]
+    fn zero_byte_budget_means_unbounded() {
+        let mut c = QueryCache::new(2);
+        c.insert(&Query::Loss, loss_reply(1, 0.1));
+        c.insert(&Query::Loss, loss_reply(2, 0.2));
+        assert_eq!(c.stats().entries, 2);
+        assert_eq!(c.stats().byte_budget, 0);
+        assert_eq!(c.stats().byte_evictions, 0);
+        // the count cap still applies (and keeps the byte total honest)
+        c.insert(&Query::Loss, loss_reply(3, 0.3));
+        assert_eq!(c.stats().entries, 2);
+        assert_eq!(c.stats().bytes, 2 * (64 + 9));
     }
 
     #[test]

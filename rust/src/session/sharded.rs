@@ -1,0 +1,1118 @@
+//! Sharded session execution: S worker shards, each a full
+//! `Session`-grade resident context on its own thread, accelerating the
+//! two full-pass reductions of the DeltaGrad plane.
+//!
+//! The fused gradient/HVP accumulators are sums over rows, so the base
+//! dataset partitions across S shards — contiguous even row-ranges,
+//! committed additions round-robin — and every full pass runs
+//! chunk-parallel: the coordinator broadcasts the iterate, each shard
+//! executes its own fused accumulator chain (own `Runtime` + `Staged`
+//! chunks + tail + masks; PJRT handles are `Rc` and never cross
+//! threads), and the per-shard raw `[g ; sums4 ; comps4]` accumulators
+//! come home to be tree-reduced in f64 over a FIXED binary tree — a
+//! given S is bitwise deterministic run-to-run. Everything sequential
+//! stays global on the coordinator: the L-BFGS `History`, the
+//! trajectory `ws/gs` rewrite, the CG driver, validation, and the
+//! artifact/query surface.
+//!
+//! `ShardedSession` wraps the ordinary [`Session`] (which remains the
+//! complete source of truth — previews, non-Influence queries, stats,
+//! and artifacts serve from it unchanged) and scatters each committed
+//! [`Edit`] into per-shard [`SubEdit`]s AFTER the inner commit
+//! succeeds, so a failed commit leaves every shard consistent. With
+//! S=1 no pool exists and every call byte-for-byte degrades to the
+//! single-session path.
+
+use std::cell::Cell;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::apps::influence::{hessian_sample, InfluenceOpts};
+use crate::data::{Dataset, IndexSet};
+use crate::runtime::engine::{
+    Engine, ModelExes, PassCtx, Staged, StagedIdx, StagedRows, Stats, ACC_EXTRA,
+};
+use crate::runtime::{Runtime, TransferStats};
+use crate::session::artifact::{self, SaveReport, ShardLayoutRec};
+use crate::session::{
+    Committed, Edit, Preview, Query, QueryReply, QueryResult, Session, SessionStats, Snapshot,
+};
+use crate::util::vecmath::{axpy, dot};
+
+/// A coordinator-side provider of the full masked gradient SUM over the
+/// CURRENT dataset (base + committed tail) at an iterate — the single
+/// hook `Session::commit_with_plane` calls at exact iterations instead
+/// of its own `grad_staged_with_tail`. Must be numerically equivalent
+/// to the resident single-device chain up to f32 summation order.
+pub(crate) trait FullGradPlane {
+    fn full_grad(&self, w: &[f32]) -> Result<(Vec<f32>, Stats)>;
+}
+
+// --- layout ------------------------------------------------------------
+
+/// The deterministic base partition: shard `s` owns the contiguous
+/// row-range `[s·n/S, (s+1)·n/S)` (integer floor — ranges differ by at
+/// most one row), and committed ADDED row `j` (added-local index) is
+/// owned round-robin by shard `j mod S` at shard-local index `j / S`.
+/// A pure function of `(n_base, S)`, so restoring an artifact with the
+/// same S re-shards bitwise identically.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardLayout {
+    n_base: usize,
+    shards: usize,
+}
+
+impl ShardLayout {
+    pub fn new(n_base: usize, shards: usize) -> Result<Self> {
+        if shards == 0 {
+            bail!("shard count must be >= 1");
+        }
+        if shards > 1 && n_base < shards {
+            bail!("cannot shard {n_base} base rows across {shards} shards (need n >= S)");
+        }
+        Ok(ShardLayout { n_base, shards })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn n_base(&self) -> usize {
+        self.n_base
+    }
+
+    /// Base row-range `[lo, hi)` owned by shard `s`.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        debug_assert!(s < self.shards);
+        (s * self.n_base / self.shards, (s + 1) * self.n_base / self.shards)
+    }
+
+    pub fn ranges(&self) -> Vec<(usize, usize)> {
+        (0..self.shards).map(|s| self.range(s)).collect()
+    }
+
+    /// (owning shard, shard-local index) of base row `i`.
+    pub fn owner_of_base(&self, i: usize) -> (usize, usize) {
+        debug_assert!(i < self.n_base);
+        // the float-free guess lands on or next to the owner; ranges
+        // are monotone so the adjustment loop moves at most one step
+        let mut s = (i * self.shards / self.n_base).min(self.shards - 1);
+        while self.range(s).0 > i {
+            s -= 1;
+        }
+        while self.range(s).1 <= i {
+            s += 1;
+        }
+        (s, i - self.range(s).0)
+    }
+
+    /// (owning shard, shard-local index) of committed added row `j`
+    /// (added-local, i.e. the session-global row id minus `base.n`).
+    pub fn owner_of_added(&self, j: usize) -> (usize, usize) {
+        (j % self.shards, j / self.shards)
+    }
+
+    /// Wire-format record for the artifact's canonical section.
+    pub fn to_rec(&self) -> ShardLayoutRec {
+        ShardLayoutRec {
+            shards: self.shards as u64,
+            ranges: self.ranges().iter().map(|&(a, b)| (a as u64, b as u64)).collect(),
+        }
+    }
+}
+
+// --- edit scatter ------------------------------------------------------
+
+/// One shard's slice of a committed edit, already translated to
+/// shard-local indices. Shards not touched by the edit receive an empty
+/// sub-edit (a no-op apply).
+#[derive(Clone, Debug)]
+pub struct SubEdit {
+    /// shard-local BASE row indices to mask out (encounter order)
+    pub base_dels: Vec<usize>,
+    /// shard-local ADDED row indices to mask out (encounter order)
+    pub added_dels: Vec<usize>,
+    /// addition rows this shard owns (round-robin slice, global order)
+    pub add: Dataset,
+}
+
+impl SubEdit {
+    pub fn is_empty(&self) -> bool {
+        self.base_dels.is_empty() && self.added_dels.is_empty() && self.add.n == 0
+    }
+}
+
+/// Split a validated edit into per-shard [`SubEdit`]s. `base_dels` are
+/// global base indices, `added_dels` added-local indices (both as
+/// returned by the session's delete validation), `add` the normalized
+/// addition rows, and `added_before` the number of added rows committed
+/// BEFORE this edit (round-robin ownership is by GLOBAL added index, so
+/// an addition stream scatters identically no matter how it is grouped
+/// into edits). Pure host function; unit-tested without a device.
+pub fn scatter_edit(
+    layout: &ShardLayout,
+    base_dels: &[usize],
+    added_dels: &[usize],
+    add: &Dataset,
+    added_before: usize,
+) -> Vec<SubEdit> {
+    let s_n = layout.shards();
+    let mut subs: Vec<SubEdit> = (0..s_n)
+        .map(|_| SubEdit {
+            base_dels: Vec::new(),
+            added_dels: Vec::new(),
+            add: Dataset::new(Vec::new(), Vec::new(), add.da, add.k),
+        })
+        .collect();
+    for &i in base_dels {
+        let (s, li) = layout.owner_of_base(i);
+        subs[s].base_dels.push(li);
+    }
+    for &j in added_dels {
+        let (s, lj) = layout.owner_of_added(j);
+        subs[s].added_dels.push(lj);
+    }
+    for r in 0..add.n {
+        let (s, _) = layout.owner_of_added(added_before + r);
+        subs[s].add.append(&add.subset(&[r]));
+    }
+    subs
+}
+
+// --- the f64 reduction tree --------------------------------------------
+
+/// Reduce equal-length per-shard f32 vectors elementwise in f64 over a
+/// FIXED binary tree (pairwise rounds: 0+1, 2+3, … then recurse), so a
+/// given shard count reduces bitwise deterministically regardless of
+/// which shard finished first.
+pub fn tree_reduce_f64(parts: &[Vec<f32>]) -> Result<Vec<f64>> {
+    let Some(first) = parts.first() else {
+        return Ok(Vec::new());
+    };
+    let len = first.len();
+    for (s, p) in parts.iter().enumerate() {
+        if p.len() != len {
+            bail!("shard {s} accumulator length {} != {len}", p.len());
+        }
+    }
+    let mut level: Vec<Vec<f64>> =
+        parts.iter().map(|v| v.iter().map(|&x| x as f64).collect()).collect();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += *y;
+                }
+            }
+            next.push(a);
+        }
+        level = next;
+    }
+    Ok(level.pop().unwrap_or_default())
+}
+
+/// Recombine the reduced `[sums4 ; comps4]` accumulator tail into
+/// [`Stats`] — the cross-shard analogue of `Stats::from_acc_tail`, with
+/// the per-shard Kahan compensations folded in f64.
+fn stats_from_reduced_tail(tail: &[f64]) -> Stats {
+    debug_assert_eq!(tail.len(), ACC_EXTRA);
+    let lane = |i: usize| tail[i] + tail[i + 4];
+    Stats { loss_sum: lane(0), correct: lane(1), cnt: lane(2), gnorm2: lane(3) }
+}
+
+// --- shard worker ------------------------------------------------------
+
+/// Mirrored initial state handed to a spawning shard worker thread:
+/// already shard-local (sliced base, round-robin added tail, translated
+/// masks).
+struct ShardInit {
+    slice: Dataset,
+    removed: IndexSet,
+    added: Dataset,
+    added_removed: IndexSet,
+    compact_watermark: usize,
+}
+
+enum ShardCmd {
+    /// broadcast iterate -> raw fused `[g ; sums4 ; comps4]` accumulator
+    FullGrad { w: Vec<f32>, reply: Sender<Result<Vec<f32>>> },
+    /// apply this shard's slice of a committed edit
+    Apply { sub: SubEdit, reply: Sender<Result<()>> },
+    /// gradient SUM over shard-local live base rows (influence RHS)
+    GradSubset { w: Vec<f32>, rows: Vec<usize>, reply: Sender<Result<Vec<f32>>> },
+    /// stage the shard's Hessian-sample selection + iterate for a CG run
+    HvpPrepare { w: Vec<f32>, sample: Vec<usize>, reply: Sender<Result<()>> },
+    /// one H·v partial SUM against the prepared selection
+    Hvp { v: Vec<f32>, reply: Sender<Result<Vec<f32>>> },
+    /// cumulative device-traffic counters of this shard's runtime
+    Counters { reply: Sender<TransferStats> },
+    Shutdown,
+}
+
+/// The shard's resident CG selection, staged once per influence query.
+enum HvpSel {
+    Empty,
+    Idx(StagedIdx),
+    Rows(StagedRows),
+}
+
+struct ShardWorker {
+    rt: std::rc::Rc<Runtime>,
+    exes: std::rc::Rc<ModelExes>,
+    slice: Dataset,
+    staged: Staged,
+    removed: IndexSet,
+    added: Dataset,
+    added_removed: IndexSet,
+    added_staged: Vec<StagedRows>,
+    tail_compact: Option<Staged>,
+    compact_watermark: usize,
+    hvp: Option<(PassCtx, HvpSel)>,
+}
+
+impl ShardWorker {
+    fn full_grad_acc(&self, w: &[f32]) -> Result<Vec<f32>> {
+        let ctx = self.exes.pass_ctx(&self.rt, w)?;
+        self.exes.grad_staged_with_tail_acc(
+            &self.rt,
+            &self.staged,
+            self.tail_compact.as_ref(),
+            &self.added_staged,
+            &ctx,
+        )
+    }
+
+    /// Mirror of the dataset-commit half of `Session::commit`: stage
+    /// this sub-edit's addition rows as the next tail segment, flip the
+    /// removal masks, and run the same tail-compaction policy against
+    /// shard-local segment counts.
+    fn apply(&mut self, sub: SubEdit) -> Result<()> {
+        let sr_add = if sub.add.n == 0 {
+            None
+        } else {
+            let all: Vec<usize> = (0..sub.add.n).collect();
+            Some(self.exes.stage_rows(&self.rt, &sub.add, &all)?)
+        };
+        let seg_groups: usize = self.added_staged.iter().map(|s| s.n_chunks()).sum::<usize>()
+            + sr_add.as_ref().map_or(0, |s| s.n_chunks());
+        let total_added = self.added.n + sub.add.n;
+        let pending_rows = total_added - self.tail_compact.as_ref().map_or(0, |s| s.n);
+        let mut added_removed_new = self.added_removed.clone();
+        for &j in &sub.added_dels {
+            added_removed_new.insert(j);
+        }
+        let compacted = if pending_rows > 0
+            && seg_groups >= self.compact_watermark
+            && 4 * pending_rows >= total_added
+        {
+            let mut all = self.added.clone();
+            all.append(&sub.add);
+            Some(self.exes.stage(&self.rt, &all, &added_removed_new)?)
+        } else {
+            None
+        };
+        if !sub.base_dels.is_empty() {
+            for &i in &sub.base_dels {
+                self.removed.insert(i);
+            }
+            self.exes.update_removed(&self.rt, &mut self.staged, &self.removed)?;
+        }
+        if !sub.added_dels.is_empty() {
+            if compacted.is_none() {
+                if let Some(tc) = self.tail_compact.as_mut() {
+                    self.exes.update_removed(&self.rt, tc, &added_removed_new)?;
+                }
+                let mut seg_start = self.tail_compact.as_ref().map_or(0, |s| s.n);
+                for sr in self.added_staged.iter_mut() {
+                    let seg_end = seg_start + sr.n_rows;
+                    let pos: Vec<usize> = sub
+                        .added_dels
+                        .iter()
+                        .copied()
+                        .filter(|&j| j >= seg_start && j < seg_end)
+                        .map(|j| j - seg_start)
+                        .collect();
+                    if !pos.is_empty() {
+                        self.exes.zero_row_positions(&self.rt, sr, &pos)?;
+                    }
+                    seg_start = seg_end;
+                }
+            }
+            self.added_removed = added_removed_new;
+        }
+        if let Some(sr) = sr_add {
+            self.added.append(&sub.add);
+            self.added_staged.push(sr);
+        }
+        if let Some(tc) = compacted {
+            self.tail_compact = Some(tc);
+            self.added_staged.clear();
+        }
+        // any prepared CG selection indexes pre-edit state
+        self.hvp = None;
+        Ok(())
+    }
+
+    fn grad_subset(&self, w: &[f32], rows: &[usize]) -> Result<Vec<f32>> {
+        let p = self.exes.spec.p;
+        if rows.is_empty() {
+            return Ok(vec![0.0f32; p]);
+        }
+        let ctx = self.exes.pass_ctx(&self.rt, w)?;
+        let (g, _) = self.exes.grad_staged_subset(&self.rt, &self.staged, &ctx, rows)?;
+        Ok(g)
+    }
+
+    fn hvp_prepare(&mut self, w: &[f32], sample: &[usize]) -> Result<()> {
+        let ctx = self.exes.pass_ctx(&self.rt, w)?;
+        let sel = if sample.is_empty() {
+            HvpSel::Empty
+        } else if self.exes.spec.idx_cap > 0 {
+            HvpSel::Idx(self.exes.stage_subset_indices(&self.rt, &self.staged, sample)?)
+        } else {
+            HvpSel::Rows(self.exes.stage_rows(&self.rt, &self.slice, sample)?)
+        };
+        self.hvp = Some((ctx, sel));
+        Ok(())
+    }
+
+    fn hvp(&self, v: &[f32]) -> Result<Vec<f32>> {
+        let p = self.exes.spec.p;
+        let (ctx, sel) =
+            self.hvp.as_ref().ok_or_else(|| anyhow!("Hvp before HvpPrepare on shard"))?;
+        let acc = match sel {
+            HvpSel::Empty => None,
+            HvpSel::Idx(sidx) => {
+                let vbuf = self.rt.upload(v, &[p])?;
+                self.exes.hvp_chain_idx(&self.rt, &self.staged, sidx, ctx, &vbuf)?
+            }
+            HvpSel::Rows(sr) => {
+                let vbuf = self.rt.upload(v, &[p])?;
+                self.exes.hvp_chain_rows(&self.rt, sr, ctx, &vbuf)?
+            }
+        };
+        match acc {
+            None => Ok(vec![0.0f32; p]),
+            Some(buf) => {
+                let out = self.rt.download(&buf)?;
+                if out.len() != p {
+                    bail!("HVP accumulator length {} != p = {p}", out.len());
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// Thread body: open this shard's own engine (its own PJRT client —
+/// device handles never cross threads), stage the slice, then serve
+/// commands until `Shutdown` or the pool drops its sender.
+fn shard_main(
+    model: String,
+    init: ShardInit,
+    rx: Receiver<ShardCmd>,
+    ready: Sender<Result<TransferStats>>,
+) {
+    let built = (|| -> Result<ShardWorker> {
+        let mut eng = Engine::open_default().context("shard engine open")?;
+        let exes = eng.model(&model)?;
+        let rt = eng.runtime();
+        let staged = exes.stage(&rt, &init.slice, &init.removed)?;
+        // the tail re-stages exactly like `Session::fork`: compacted
+        // when already past the watermark, one contiguous segment
+        // otherwise — with deleted-added masks pre-flipped
+        let mut tail_compact = None;
+        let added_staged = if init.added.n == 0 {
+            Vec::new()
+        } else if init.added.n.div_ceil(exes.spec.chunk_small) >= init.compact_watermark {
+            tail_compact = Some(exes.stage(&rt, &init.added, &init.added_removed)?);
+            Vec::new()
+        } else {
+            let all: Vec<usize> = (0..init.added.n).collect();
+            let mut sr = exes.stage_rows(&rt, &init.added, &all)?;
+            if !init.added_removed.is_empty() {
+                exes.zero_row_positions(&rt, &mut sr, init.added_removed.as_slice())?;
+            }
+            vec![sr]
+        };
+        Ok(ShardWorker {
+            rt,
+            exes,
+            slice: init.slice,
+            staged,
+            removed: init.removed,
+            added: init.added,
+            added_removed: init.added_removed,
+            added_staged,
+            tail_compact,
+            compact_watermark: init.compact_watermark,
+            hvp: None,
+        })
+    })();
+    let mut worker = match built {
+        Ok(w) => {
+            let _ = ready.send(Ok(w.rt.counters.snapshot()));
+            w
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            ShardCmd::FullGrad { w, reply } => {
+                let _ = reply.send(worker.full_grad_acc(&w));
+            }
+            ShardCmd::Apply { sub, reply } => {
+                let _ = reply.send(worker.apply(sub));
+            }
+            ShardCmd::GradSubset { w, rows, reply } => {
+                let _ = reply.send(worker.grad_subset(&w, &rows));
+            }
+            ShardCmd::HvpPrepare { w, sample, reply } => {
+                let _ = reply.send(worker.hvp_prepare(&w, &sample));
+            }
+            ShardCmd::Hvp { v, reply } => {
+                let _ = reply.send(worker.hvp(&v));
+            }
+            ShardCmd::Counters { reply } => {
+                let _ = reply.send(worker.rt.counters.snapshot());
+            }
+            ShardCmd::Shutdown => break,
+        }
+    }
+}
+
+// --- the pool ----------------------------------------------------------
+
+/// Cumulative shard-plane accounting surfaced to the coordinator's
+/// metrics overlay.
+#[derive(Clone, Debug, Default)]
+pub struct ShardedStats {
+    pub shards: usize,
+    /// host tree-reductions performed (one per exact iteration plus one
+    /// per influence CG step)
+    pub reduces: u64,
+    /// wall-clock seconds inside the f64 reduction tree
+    pub reduce_seconds: f64,
+    /// cumulative per-shard device traffic, shard order
+    pub per_shard: Vec<TransferStats>,
+}
+
+/// S shard worker threads plus the fixed reduction tree. Owned by a
+/// [`ShardedSession`]; all communication is per-command reply channels,
+/// so shards execute one broadcast concurrently and results collect in
+/// shard order (the reduction order never depends on finish order).
+pub struct ShardPool {
+    layout: ShardLayout,
+    txs: Vec<Sender<ShardCmd>>,
+    joins: Vec<Option<JoinHandle<()>>>,
+    /// one-time staging traffic per shard at spawn (slice + tail)
+    spawn_transfers: Vec<TransferStats>,
+    reduces: Cell<u64>,
+    reduce_seconds: Cell<f64>,
+    /// a failed sub-edit apply leaves that shard behind the inner
+    /// session; every later broadcast must refuse rather than silently
+    /// reduce stale accumulators
+    poisoned: Cell<bool>,
+}
+
+impl ShardPool {
+    /// Spawn S workers mirroring `session`'s current committed state.
+    fn spawn(session: &Session, shards: usize) -> Result<ShardPool> {
+        let layout = ShardLayout::new(session.base.n, shards)?;
+        let model = session.exes.spec.name.clone();
+        let mut txs = Vec::with_capacity(shards);
+        let mut joins = Vec::with_capacity(shards);
+        let mut readys = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let (lo, hi) = layout.range(s);
+            let idxs: Vec<usize> = (lo..hi).collect();
+            let slice = session.base.subset(&idxs);
+            let removed = IndexSet::from_vec(
+                session.removed.iter().filter(|&i| i >= lo && i < hi).map(|i| i - lo).collect(),
+            );
+            let added_idx: Vec<usize> =
+                (0..session.added.n).filter(|j| j % shards == s).collect();
+            let added = session.added.subset(&added_idx);
+            let added_removed = IndexSet::from_vec(
+                session.added_removed.iter().filter(|j| j % shards == s).map(|j| j / shards).collect(),
+            );
+            let init = ShardInit {
+                slice,
+                removed,
+                added,
+                added_removed,
+                compact_watermark: session.compact_watermark,
+            };
+            let (tx, rx) = channel();
+            let (ready_tx, ready_rx) = channel();
+            let name = model.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("dg-shard-{s}"))
+                .spawn(move || shard_main(name, init, rx, ready_tx))
+                .context("spawning shard worker thread")?;
+            txs.push(tx);
+            joins.push(Some(join));
+            readys.push(ready_rx);
+        }
+        let mut spawn_transfers = Vec::with_capacity(shards);
+        for (s, ready) in readys.into_iter().enumerate() {
+            let tr = ready
+                .recv()
+                .map_err(|_| anyhow!("shard {s} worker died during spawn"))?
+                .with_context(|| format!("shard {s} failed to stage"))?;
+            spawn_transfers.push(tr);
+        }
+        Ok(ShardPool {
+            layout,
+            txs,
+            joins,
+            spawn_transfers,
+            reduces: Cell::new(0),
+            reduce_seconds: Cell::new(0.0),
+            poisoned: Cell::new(false),
+        })
+    }
+
+    pub fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    pub fn spawn_transfers(&self) -> &[TransferStats] {
+        &self.spawn_transfers
+    }
+
+    fn check_live(&self) -> Result<()> {
+        if self.poisoned.get() {
+            bail!(
+                "shard pool poisoned: an earlier sub-edit apply failed mid-flight, \
+                 shard state may lag the session — rebuild or restore the session"
+            );
+        }
+        Ok(())
+    }
+
+    /// Broadcast one command to every shard and collect the replies in
+    /// shard order. `make` builds the per-shard command from its reply
+    /// channel (and may capture per-shard payloads by index).
+    fn collect<T>(&self, make: impl Fn(usize, Sender<Result<T>>) -> ShardCmd) -> Result<Vec<T>> {
+        self.check_live()?;
+        let mut rxs = Vec::with_capacity(self.txs.len());
+        for (s, tx) in self.txs.iter().enumerate() {
+            let (rtx, rrx) = channel();
+            tx.send(make(s, rtx)).map_err(|_| anyhow!("shard {s} worker is gone"))?;
+            rxs.push(rrx);
+        }
+        let mut out = Vec::with_capacity(rxs.len());
+        for (s, rx) in rxs.into_iter().enumerate() {
+            let r = rx
+                .recv()
+                .map_err(|_| anyhow!("shard {s} worker died mid-command"))?
+                .with_context(|| format!("shard {s}"))?;
+            out.push(r);
+        }
+        Ok(out)
+    }
+
+    /// Apply the scattered sub-edits of one committed edit (one per
+    /// shard, empty ones included — the worker no-ops). Called only
+    /// AFTER the inner commit succeeded; a failure here poisons the
+    /// pool because shard state can no longer be trusted to match.
+    fn apply(&self, subs: Vec<SubEdit>) -> Result<()> {
+        debug_assert_eq!(subs.len(), self.txs.len());
+        let result = self.collect(|s, reply| ShardCmd::Apply { sub: subs[s].clone(), reply });
+        match result {
+            Ok(_) => Ok(()),
+            Err(e) => {
+                self.poisoned.set(true);
+                Err(e.context("applying scattered sub-edits (pool poisoned)"))
+            }
+        }
+    }
+
+    /// Cumulative per-shard transfer counters, shard order.
+    pub fn counters(&self) -> Result<Vec<TransferStats>> {
+        self.check_live()?;
+        let mut rxs = Vec::with_capacity(self.txs.len());
+        for (s, tx) in self.txs.iter().enumerate() {
+            let (rtx, rrx) = channel();
+            tx.send(ShardCmd::Counters { reply: rtx })
+                .map_err(|_| anyhow!("shard {s} worker is gone"))?;
+            rxs.push(rrx);
+        }
+        let mut out = Vec::with_capacity(rxs.len());
+        for (s, rx) in rxs.into_iter().enumerate() {
+            out.push(rx.recv().map_err(|_| anyhow!("shard {s} worker died mid-command"))?);
+        }
+        Ok(out)
+    }
+
+    /// Time + count one pass through the fixed reduction tree.
+    fn reduce(&self, parts: &[Vec<f32>]) -> Result<Vec<f64>> {
+        let t0 = std::time::Instant::now();
+        let out = tree_reduce_f64(parts)?;
+        self.reduces.set(self.reduces.get() + 1);
+        self.reduce_seconds.set(self.reduce_seconds.get() + t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> Result<ShardedStats> {
+        Ok(ShardedStats {
+            shards: self.layout.shards(),
+            reduces: self.reduces.get(),
+            reduce_seconds: self.reduce_seconds.get(),
+            per_shard: self.counters()?,
+        })
+    }
+}
+
+impl FullGradPlane for ShardPool {
+    fn full_grad(&self, w: &[f32]) -> Result<(Vec<f32>, Stats)> {
+        let accs =
+            self.collect(|_, reply| ShardCmd::FullGrad { w: w.to_vec(), reply })?;
+        let reduced = self.reduce(&accs)?;
+        if reduced.len() < ACC_EXTRA {
+            bail!("reduced accumulator too short: {}", reduced.len());
+        }
+        let p = reduced.len() - ACC_EXTRA;
+        let g: Vec<f32> = reduced[..p].iter().map(|&x| x as f32).collect();
+        let stats = stats_from_reduced_tail(&reduced[p..]);
+        Ok((g, stats))
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(ShardCmd::Shutdown);
+        }
+        for j in self.joins.iter_mut() {
+            if let Some(j) = j.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+// --- the sharded session -----------------------------------------------
+
+/// A [`Session`] plus an optional shard pool. The inner session stays
+/// the complete source of truth (previews, stats, artifacts, and every
+/// non-Influence query serve from it unchanged — the app cores take
+/// `&Session` and never see the pool); the pool parallelizes the two
+/// full-pass reductions: commit-time exact-iteration gradients and the
+/// influence query's CG HVPs. With S=1 there is no pool and every call
+/// is byte-identical to the plain session.
+pub struct ShardedSession {
+    inner: Session,
+    pool: Option<ShardPool>,
+}
+
+impl ShardedSession {
+    /// Wrap an existing session, spawning `shards` workers (S<=1: none).
+    pub fn attach(inner: Session, shards: usize) -> Result<ShardedSession> {
+        let pool = if shards > 1 { Some(ShardPool::spawn(&inner, shards)?) } else { None };
+        Ok(ShardedSession { inner, pool })
+    }
+
+    /// Warm-restart from an artifact. An artifact saved by a sharded
+    /// session records its layout; restoring adopts it (when `shards`
+    /// is 1, i.e. unspecified) or insists it matches — the layout is a
+    /// pure function of `(n_base, S)`, so matching S re-shards bitwise
+    /// identically.
+    pub fn restore_from(path: &std::path::Path, shards: usize) -> Result<ShardedSession> {
+        let (inner, rec) = artifact::restore_with_layout(path)?;
+        Self::attach_restored(inner, rec, shards)
+    }
+
+    /// [`Self::attach`] honoring an artifact's recorded shard layout.
+    pub fn attach_restored(
+        inner: Session,
+        rec: Option<ShardLayoutRec>,
+        shards: usize,
+    ) -> Result<ShardedSession> {
+        let effective = match (&rec, shards) {
+            (Some(r), 1) => r.shards as usize,
+            (Some(r), s) if s as u64 != r.shards => bail!(
+                "artifact was saved by a {}-shard session but --shards {s} was requested; \
+                 pass --shards {} (or 1 to let the artifact decide)",
+                r.shards,
+                r.shards
+            ),
+            (_, s) => s,
+        };
+        let me = Self::attach(inner, effective)?;
+        if let (Some(r), Some(p)) = (&rec, &me.pool) {
+            if p.layout.to_rec() != *r {
+                bail!(
+                    "restored shard layout diverges from the artifact's record \
+                     (base rows changed?)"
+                );
+            }
+        }
+        Ok(me)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.layout.shards())
+    }
+
+    pub fn layout(&self) -> Option<&ShardLayout> {
+        self.pool.as_ref().map(|p| p.layout())
+    }
+
+    fn layout_rec(&self) -> Option<ShardLayoutRec> {
+        self.pool.as_ref().map(|p| p.layout.to_rec())
+    }
+
+    /// The inner single-session view (apps and read-only callers).
+    pub fn inner(&self) -> &Session {
+        &self.inner
+    }
+
+    /// Unwrap, shutting the pool down.
+    pub fn into_inner(self) -> Session {
+        self.inner
+    }
+
+    /// Cumulative shard-plane accounting; `None` when S=1.
+    pub fn shard_stats(&self) -> Result<Option<ShardedStats>> {
+        self.pool.as_ref().map(|p| p.stats()).transpose()
+    }
+
+    /// Per-shard one-time staging traffic at pool spawn; empty for S=1.
+    pub fn spawn_transfers(&self) -> &[TransferStats] {
+        self.pool.as_ref().map_or(&[], |p| p.spawn_transfers())
+    }
+
+    // --- the Session surface (coordinator worker contract) ------------
+
+    pub fn version(&self) -> u64 {
+        self.inner.version()
+    }
+
+    pub fn w(&self) -> &[f32] {
+        self.inner.w()
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        self.inner.stats()
+    }
+
+    pub fn snapshot(&self) -> Result<Snapshot> {
+        self.inner.snapshot()
+    }
+
+    pub fn preview(&self, edit: &Edit) -> Result<Preview> {
+        self.inner.preview(edit)
+    }
+
+    /// Commit through the shard plane: exact-iteration full gradients
+    /// come from the S-way parallel broadcast + fixed f64 tree-reduce;
+    /// after the inner commit succeeds the edit's scattered sub-edits
+    /// bring every shard's masks/tail up to date. S=1 delegates
+    /// directly (bitwise the plain `Session::commit`).
+    pub fn commit(&mut self, edit: Edit) -> Result<Committed> {
+        let Some(pool) = &self.pool else {
+            return self.inner.commit(edit);
+        };
+        // scatter against PRE-edit state (ownership of added rows is by
+        // global added index, so `added_before` is the current tail)
+        let (del_rows, add_ds) = edit.normalize(self.inner.base.da, self.inner.base.k)?;
+        let (base_dels, added_dels) = self.inner.check_deletes(&del_rows)?;
+        let subs =
+            scatter_edit(&pool.layout, &base_dels, &added_dels, &add_ds, self.inner.added.n);
+        let committed = self.inner.commit_with_plane(edit, Some(pool))?;
+        pool.apply(subs)?;
+        Ok(committed)
+    }
+
+    /// Serve a query. `Influence` runs sharded (scattered RHS partials,
+    /// host CG over per-shard HVP partials, fixed f64 reductions);
+    /// every other kind serves from the inner session's resident state
+    /// exactly as before.
+    pub fn query(&self, q: &Query) -> Result<QueryReply> {
+        match (&self.pool, q) {
+            (Some(pool), Query::Influence { targets, opts }) => {
+                self.influence_sharded(pool, targets, opts)
+            }
+            _ => self.inner.query(q),
+        }
+    }
+
+    pub fn save_artifact(&self, path: &std::path::Path) -> Result<SaveReport> {
+        artifact::save_with_layout(&self.inner, self.layout_rec().as_ref(), path)
+    }
+
+    pub fn save_artifact_to_store(&self, dir: &std::path::Path) -> Result<SaveReport> {
+        artifact::save_to_store_with_layout(&self.inner, self.layout_rec().as_ref(), dir)
+    }
+
+    /// Sharded influence solve: same validation, Hessian sample, and CG
+    /// recurrence as the single-session path (1e-30 alpha floor,
+    /// `sqrt(rs)/|b| < tol` stop, f32 solver state), but the RHS and
+    /// every H·v are S-way parallel partial SUMs tree-reduced in f64.
+    /// Per CG iteration each shard uploads one p-float direction and
+    /// downloads one p-float partial.
+    fn influence_sharded(
+        &self,
+        pool: &ShardPool,
+        targets: &IndexSet,
+        opts: &InfluenceOpts,
+    ) -> Result<QueryReply> {
+        let t0 = std::time::Instant::now();
+        let tr0 = self.inner.rt.counters.snapshot();
+        let shard_tr0 = pool.counters()?;
+        let version = self.inner.version();
+        // validation mirrors session::query's dispatcher arm
+        if targets.is_empty() {
+            bail!("influence query needs a non-empty target set");
+        }
+        let n = self.inner.base.n;
+        for i in targets.iter() {
+            if i >= n {
+                bail!("influence target {i} out of range (base n = {n})");
+            }
+            if self.inner.removed.contains(i) {
+                bail!("influence target {i} is already deleted");
+            }
+        }
+        if targets.len() + self.inner.removed.len() >= n {
+            bail!("influence targets would delete every remaining base row");
+        }
+        let r = targets.len();
+        let p = self.inner.exes.spec.p;
+        let w_star = self.inner.w().to_vec();
+        let shards = pool.layout.shards();
+        // b = mean over targets of ∇F_i(w*): scatter to owners, reduce
+        let mut tgt_local: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        for i in targets.iter() {
+            let (s, li) = pool.layout.owner_of_base(i);
+            tgt_local[s].push(li);
+        }
+        let partials = pool.collect(|s, reply| ShardCmd::GradSubset {
+            w: w_star.clone(),
+            rows: tgt_local[s].clone(),
+            reply,
+        })?;
+        let b: Vec<f32> =
+            pool.reduce(&partials)?.iter().map(|&x| (x / r.max(1) as f64) as f32).collect();
+        // the SAME deterministic Hessian draw as the resident path
+        let sample = hessian_sample(n, targets, opts);
+        let navg = (sample.len() as f64).max(1.0);
+        let mut sample_local: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        for &i in &sample {
+            let (s, li) = pool.layout.owner_of_base(i);
+            sample_local[s].push(li);
+        }
+        pool.collect(|s, reply| ShardCmd::HvpPrepare {
+            w: w_star.clone(),
+            sample: sample_local[s].clone(),
+            reply,
+        })?;
+        // host CG on (H/navg + damp·I) z = b over reduced HVP partials
+        let solve_t0 = std::time::Instant::now();
+        let mut z = vec![0.0f32; p];
+        let mut rvec = b.clone();
+        let mut d = b.clone();
+        let mut rs = dot(&rvec, &rvec);
+        let b_norm = rs.sqrt().max(1e-30);
+        for _ in 0..opts.cg_iters {
+            if rs.sqrt() / b_norm < opts.cg_tol {
+                break;
+            }
+            let hv_parts = pool.collect(|_, reply| ShardCmd::Hvp { v: d.clone(), reply })?;
+            let hv = pool.reduce(&hv_parts)?;
+            let ad: Vec<f32> = hv
+                .iter()
+                .zip(&d)
+                .map(|(&h, &di)| (h / navg) as f32 + opts.damp * di)
+                .collect();
+            let alpha = (rs / dot(&d, &ad).max(1e-30)) as f32;
+            axpy(alpha, &d, &mut z);
+            axpy(-alpha, &ad, &mut rvec);
+            let rs_new = dot(&rvec, &rvec);
+            let beta = (rs_new / rs) as f32;
+            for j in 0..p {
+                d[j] = rvec[j] + beta * d[j];
+            }
+            rs = rs_new;
+        }
+        let solve_seconds = solve_t0.elapsed().as_secs_f64();
+        let mut w = w_star;
+        axpy(r as f32 / (n - r) as f32, &z, &mut w);
+        // the reply's traffic covers the whole distributed answer:
+        // coordinator-side plus every shard's delta
+        let mut transfers = self.inner.rt.counters.snapshot().since(tr0);
+        for (now, before) in pool.counters()?.iter().zip(&shard_tr0) {
+            transfers.accumulate(&now.since(*before));
+        }
+        Ok(QueryReply {
+            version,
+            seconds: t0.elapsed().as_secs_f64(),
+            transfers,
+            result: QueryResult::Influence { w, solve_seconds },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_ranges_cover_contiguously() {
+        for (n, s_n) in [(10usize, 3usize), (1000, 4), (7, 7), (5, 1), (1024, 2)] {
+            let l = ShardLayout::new(n, s_n).unwrap();
+            let ranges = l.ranges();
+            assert_eq!(ranges.len(), s_n);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges[s_n - 1].1, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must tile contiguously");
+            }
+            // range sizes differ by at most one row (even split)
+            let sizes: Vec<usize> = ranges.iter().map(|&(a, b)| b - a).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "uneven split: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn layout_owner_of_base_boundaries() {
+        let l = ShardLayout::new(10, 3).unwrap();
+        // ranges: [0,3) [3,6) [6,10)
+        assert_eq!(l.ranges(), vec![(0, 3), (3, 6), (6, 10)]);
+        for i in 0..10 {
+            let (s, li) = l.owner_of_base(i);
+            let (lo, hi) = l.range(s);
+            assert!(i >= lo && i < hi, "row {i} mapped outside its range");
+            assert_eq!(li, i - lo);
+        }
+        // the exact boundary rows
+        assert_eq!(l.owner_of_base(0), (0, 0));
+        assert_eq!(l.owner_of_base(2), (0, 2));
+        assert_eq!(l.owner_of_base(3), (1, 0));
+        assert_eq!(l.owner_of_base(5), (1, 2));
+        assert_eq!(l.owner_of_base(6), (2, 0));
+        assert_eq!(l.owner_of_base(9), (2, 3));
+    }
+
+    #[test]
+    fn layout_owner_of_added_round_robin() {
+        let l = ShardLayout::new(100, 4).unwrap();
+        assert_eq!(l.owner_of_added(0), (0, 0));
+        assert_eq!(l.owner_of_added(1), (1, 0));
+        assert_eq!(l.owner_of_added(4), (0, 1));
+        assert_eq!(l.owner_of_added(7), (3, 1));
+        assert_eq!(l.owner_of_added(9), (1, 2));
+    }
+
+    #[test]
+    fn layout_rejects_degenerate() {
+        assert!(ShardLayout::new(100, 0).is_err());
+        assert!(ShardLayout::new(1, 2).is_err());
+        assert!(ShardLayout::new(2, 2).is_ok());
+    }
+
+    fn tiny_ds(rows: &[(f32, u32)]) -> Dataset {
+        let x: Vec<f32> = rows.iter().flat_map(|&(v, _)| [v, 1.0]).collect();
+        let y: Vec<u32> = rows.iter().map(|&(_, c)| c).collect();
+        Dataset::new(x, y, 2, 2)
+    }
+
+    #[test]
+    fn scatter_splits_deletes_to_owners() {
+        let l = ShardLayout::new(10, 3).unwrap(); // [0,3) [3,6) [6,10)
+        let empty = Dataset::new(Vec::new(), Vec::new(), 2, 2);
+        let subs = scatter_edit(&l, &[0, 3, 9, 5], &[], &empty, 0);
+        assert_eq!(subs.len(), 3);
+        assert_eq!(subs[0].base_dels, vec![0]);
+        assert_eq!(subs[1].base_dels, vec![0, 2]); // globals 3, 5
+        assert_eq!(subs[2].base_dels, vec![3]); // global 9
+        // untouched components stay empty
+        assert!(subs.iter().all(|s| s.added_dels.is_empty() && s.add.n == 0));
+    }
+
+    #[test]
+    fn scatter_empty_shard_subedits() {
+        let l = ShardLayout::new(9, 3).unwrap();
+        let empty = Dataset::new(Vec::new(), Vec::new(), 2, 2);
+        let subs = scatter_edit(&l, &[1], &[], &empty, 0);
+        assert!(!subs[0].is_empty());
+        assert!(subs[1].is_empty());
+        assert!(subs[2].is_empty());
+    }
+
+    #[test]
+    fn scatter_added_deletes_land_on_round_robin_owner() {
+        let l = ShardLayout::new(8, 2).unwrap();
+        let empty = Dataset::new(Vec::new(), Vec::new(), 2, 2);
+        // added-local deletes 0,1,2,3 -> owners 0,1,0,1 at locals 0,0,1,1
+        let subs = scatter_edit(&l, &[], &[0, 1, 2, 3], &empty, 4);
+        assert_eq!(subs[0].added_dels, vec![0, 1]);
+        assert_eq!(subs[1].added_dels, vec![0, 1]);
+    }
+
+    #[test]
+    fn scatter_additions_follow_global_added_index() {
+        let l = ShardLayout::new(8, 2).unwrap();
+        let add = tiny_ds(&[(10.0, 0), (11.0, 1), (12.0, 0)]);
+        // 2 rows already committed: new rows get global added indices
+        // 2,3,4 -> owners 0,1,0
+        let subs = scatter_edit(&l, &[], &[], &add, 2);
+        assert_eq!(subs[0].add.n, 2);
+        assert_eq!(subs[1].add.n, 1);
+        assert_eq!(subs[0].add.row(0)[0], 10.0);
+        assert_eq!(subs[0].add.row(1)[0], 12.0);
+        assert_eq!(subs[1].add.row(0)[0], 11.0);
+        // and grouping the same stream differently scatters identically
+        let first = scatter_edit(&l, &[], &[], &tiny_ds(&[(10.0, 0)]), 2);
+        let rest = scatter_edit(&l, &[], &[], &tiny_ds(&[(11.0, 1), (12.0, 0)]), 3);
+        assert_eq!(first[0].add.n + rest[0].add.n, subs[0].add.n);
+        assert_eq!(first[1].add.n + rest[1].add.n, subs[1].add.n);
+    }
+
+    #[test]
+    fn tree_reduce_matches_naive_sum_and_is_deterministic() {
+        let parts: Vec<Vec<f32>> = (0..5)
+            .map(|s| (0..6).map(|i| (s * 7 + i) as f32 * 0.37 - 3.0).collect())
+            .collect();
+        let reduced = tree_reduce_f64(&parts).unwrap();
+        for i in 0..6 {
+            let naive: f64 = parts.iter().map(|v| v[i] as f64).sum();
+            assert!((reduced[i] - naive).abs() < 1e-9);
+        }
+        // bitwise repeatable
+        let again = tree_reduce_f64(&parts).unwrap();
+        assert_eq!(
+            reduced.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            again.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn tree_reduce_rejects_ragged() {
+        assert!(tree_reduce_f64(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+        assert!(tree_reduce_f64(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn stats_recombine_from_reduced_tail() {
+        // two shards' [sums4 ; comps4] tails, reduced in f64
+        let a = vec![1.5f32, 3.0, 10.0, 0.5, 1e-8, 0.0, 0.0, 0.0];
+        let b = vec![2.5f32, 1.0, 6.0, 0.25, 0.0, 0.0, 0.0, 1e-9];
+        let reduced = tree_reduce_f64(&[a, b]).unwrap();
+        let st = stats_from_reduced_tail(&reduced);
+        assert!((st.loss_sum - (4.0 + 1e-8)).abs() < 1e-12);
+        assert_eq!(st.correct, 4.0);
+        assert_eq!(st.cnt, 16.0); // integer-valued lanes stay exact
+        assert!((st.gnorm2 - (0.75 + 1e-9)).abs() < 1e-12);
+    }
+}

@@ -60,11 +60,14 @@ fn base_cfg() -> ServiceConfig {
         },
         readers: 0,
         query_cache: 0,
+        query_cache_bytes: 0,
+        shards: 1,
         checkpoint_every: 0,
         checkpoint_dir: None,
         checkpoint_keep: 4,
         wal: false,
         restore_latest: false,
+        store_fresh: false,
         supervision: Supervision::default(),
         faults: None,
     }

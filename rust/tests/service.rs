@@ -23,11 +23,14 @@ fn small_cfg(policy: BatchPolicy) -> ServiceConfig {
         policy,
         readers: 0,
         query_cache: 0,
+        query_cache_bytes: 0,
+        shards: 1,
         checkpoint_every: 0,
         checkpoint_dir: None,
         checkpoint_keep: 0,
         wal: false,
         restore_latest: false,
+        store_fresh: false,
         supervision: deltagrad::coordinator::Supervision::default(),
         faults: None,
     }
@@ -642,4 +645,123 @@ fn queue_full_rejections_are_typed() {
     assert_eq!(snap.version, 0);
     assert_eq!(snap.n_train, 512);
     svc.shutdown().unwrap();
+}
+
+#[test]
+fn stale_lineage_guard_refuses_fresh_durable_serve() {
+    // a prior lineage already checkpointed into the store: serving
+    // FRESH (version counter back to 0) with durability on would
+    // interleave a second history into the one those checkpoints anchor
+    let store = std::env::temp_dir()
+        .join(format!("deltagrad-test-guard-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store);
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 40;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    let mut prior = SessionBuilder::new("small")
+        .seed(77)
+        .n_train(Some(512))
+        .n_test(Some(256))
+        .hyper_params(hp)
+        .build()
+        .unwrap();
+    prior.commit(Edit::delete_row(0)).unwrap();
+    deltagrad::session::artifact::save_to_store(&prior, &store).unwrap();
+    let policy = || BatchPolicy {
+        max_group: 1,
+        max_wait: Duration::from_millis(1),
+        ..BatchPolicy::default()
+    };
+
+    // the guard kills the worker before it trains anything; the handle
+    // sees a dead service and shutdown surfaces the actionable error
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        wal: true,
+        checkpoint_dir: Some(store.clone()),
+        ..small_cfg(policy())
+    })
+    .unwrap();
+    match svc.update(Edit::delete_row(1)) {
+        Err(Rejected::Stopped) => {}
+        other => panic!("expected the lineage guard to stop the worker, got {other:?}"),
+    }
+    let err = format!("{:#}", svc.shutdown().unwrap_err());
+    assert!(err.contains("already holds"), "guard must explain the refusal: {err}");
+    assert!(err.contains("--store-fresh"), "guard must name the override: {err}");
+    assert!(err.contains("--restore-latest"), "guard must name the continuation: {err}");
+
+    // --restore-latest continues the stored lineage instead
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        wal: true,
+        restore_latest: true,
+        checkpoint_dir: Some(store.clone()),
+        ..small_cfg(policy())
+    })
+    .unwrap();
+    let snap = svc.snapshot().unwrap();
+    assert_eq!(snap.version, 1, "restore-latest must resume at the checkpoint's version");
+    assert_eq!(svc.update(Edit::delete_row(1)).unwrap().version, 2);
+    svc.shutdown().unwrap();
+
+    // --store-fresh overrides the guard deliberately
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        wal: true,
+        store_fresh: true,
+        checkpoint_dir: Some(store.clone()),
+        ..small_cfg(policy())
+    })
+    .unwrap();
+    assert_eq!(svc.update(Edit::delete_row(1)).unwrap().version, 1);
+    svc.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn wal_group_commit_shares_fsyncs_across_a_burst() {
+    // a burst of updates queued while the worker is still training must
+    // drain as one group-commit sweep: every commit journals its record
+    // with append_nosync, ONE fsync lands before any ack — so the sync
+    // count stays strictly below the record count
+    let store = std::env::temp_dir()
+        .join(format!("deltagrad-test-groupfsync-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store);
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        wal: true,
+        checkpoint_dir: Some(store.clone()),
+        query_cache: 8,
+        query_cache_bytes: 1 << 20,
+        ..small_cfg(BatchPolicy {
+            max_group: 1,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        })
+    })
+    .unwrap();
+    // enqueue the whole burst before the initial training finishes
+    let rxs: Vec<_> =
+        (0..5).map(|i| svc.update_async(Edit::delete_row(i)).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.wal_records, 5, "every commit journals exactly one record");
+    assert!(m.wal_syncs >= 1, "an acked burst implies at least one fsync");
+    assert!(
+        m.wal_syncs < m.wal_records,
+        "a burst must amortize fsyncs across its commits (got {} syncs / {} records)",
+        m.wal_syncs,
+        m.wal_records
+    );
+
+    // the byte-budgeted memo cache reports its footprint through the
+    // same metrics surface
+    svc.query(Query::Loss).unwrap();
+    svc.query(Query::Loss).unwrap();
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.cache_byte_budget, 1 << 20);
+    assert!(m.cache_bytes > 0, "a memoized entry must account its bytes");
+    assert_eq!(m.cache_hits, 1);
+    svc.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&store);
 }

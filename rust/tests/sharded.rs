@@ -1,0 +1,292 @@
+//! Sharded session execution (requires `make artifacts`).
+//!
+//! The shard plane claims are quantitative, so the tests pin them
+//! quantitatively:
+//!  * S=1 is BYTE-identical to the plain session — same parameter bits,
+//!    same artifact bytes (no pool, no layout record, no new code on
+//!    the hot path);
+//!  * S∈{2,4} reproduces the single-session commit within 1e-5 on the
+//!    parameters while the masked-count statistic stays EXACT (the
+//!    Kahan tails recombine in f64, so cnt is integer-valued no matter
+//!    how the sum splits across shards);
+//!  * a fixed S is bitwise deterministic run-to-run (the fixed binary
+//!    reduction tree never depends on shard finish order);
+//!  * edits scatter to their owning shards only — contiguous ranges for
+//!    base rows, round-robin by global added index for committed adds;
+//!  * per-shard device traffic per commit is EXACTLY E uploads of p
+//!    floats, E fused executions per resident chunk, and E downloads
+//!    of p+ACC_EXTRA floats (E = exact iterations), plus one mask
+//!    re-upload on the shard owning a deleted row;
+//!  * artifacts record the shard layout and a restore re-shards
+//!    bitwise-identically (adopting the recorded S, refusing a
+//!    mismatched override).
+
+use std::path::PathBuf;
+
+use deltagrad::config::HyperParams;
+use deltagrad::data::{synth, IndexSet};
+use deltagrad::runtime::engine::ACC_EXTRA;
+use deltagrad::runtime::Engine;
+use deltagrad::session::{Edit, Query, QueryResult, SessionBuilder, ShardedSession};
+
+fn engine() -> Engine {
+    Engine::open_default().expect("run `make artifacts` first")
+}
+
+fn small_hp() -> HyperParams {
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 40;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    hp
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("deltagrad-test-sharded-{tag}-{}", std::process::id()))
+}
+
+/// Build an S-shard session over one fixed (train, test) pair so every
+/// variant sees bitwise the same data.
+fn build_sharded(eng: &mut Engine, shards: usize) -> ShardedSession {
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 3, Some(640), Some(64));
+    SessionBuilder::new("small")
+        .hyper_params(small_hp())
+        .datasets(ds, test)
+        .shards(shards)
+        .build_sharded_in(eng)
+        .unwrap()
+}
+
+/// The edit script every parity variant replays: a cross-shard delete
+/// group, an addition, and a committed-added delete (round-robin owner).
+fn apply_script(s: &mut ShardedSession, eng: &Engine) -> (f64, Vec<usize>) {
+    let spec = eng.spec("small").unwrap().clone();
+    let n = 640;
+    s.commit(Edit::Delete(IndexSet::from_vec(vec![5, 300, 611]))).unwrap();
+    s.commit(Edit::Add(synth::addition_rows(&spec, 900, 3))).unwrap();
+    let c = s.commit(Edit::delete_row(n + 1)).unwrap();
+    (c.out.last_stats.cnt, vec![c.out.n_exact, c.out.n_approx])
+}
+
+#[test]
+fn shard_parity_within_1e5_and_cnt_exact() {
+    let mut eng = engine();
+    let mut base = build_sharded(&mut eng, 1);
+    let (cnt1, iters1) = apply_script(&mut base, &eng);
+    assert_eq!(cnt1.fract(), 0.0, "masked count must be integer-valued");
+    for shards in [2usize, 4] {
+        let mut sharded = build_sharded(&mut eng, shards);
+        assert_eq!(sharded.shards(), shards);
+        let (cnt_s, iters_s) = apply_script(&mut sharded, &eng);
+        assert_eq!(cnt_s, cnt1, "cnt must stay EXACT under S={shards}");
+        assert_eq!(iters_s, iters1, "the exact/approx schedule must not depend on S");
+        let max_diff = base
+            .w()
+            .iter()
+            .zip(sharded.w())
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_diff <= 1e-5,
+            "S={shards} parameters drifted {max_diff:.2e} from S=1 (tolerance 1e-5)"
+        );
+        // the shard plane actually ran: one tree-reduce per exact iter
+        let st = sharded.shard_stats().unwrap().expect("S>1 must expose shard stats");
+        assert_eq!(st.shards, shards);
+        assert!(st.reduces > 0, "no reductions recorded — commits bypassed the pool?");
+        assert_eq!(st.per_shard.len(), shards);
+    }
+}
+
+#[test]
+fn fixed_shard_count_is_bitwise_deterministic() {
+    let mut eng = engine();
+    let mut a = build_sharded(&mut eng, 2);
+    let mut b = build_sharded(&mut eng, 2);
+    apply_script(&mut a, &eng);
+    apply_script(&mut b, &eng);
+    assert_eq!(
+        bits(a.w()),
+        bits(b.w()),
+        "same S, same edits, different bits — the reduction tree leaked finish order"
+    );
+    let (la, lb) = (a.query(&Query::Loss).unwrap(), b.query(&Query::Loss).unwrap());
+    match (&la.result, &lb.result) {
+        (
+            QueryResult::Loss { test_loss: ta, .. },
+            QueryResult::Loss { test_loss: tb, .. },
+        ) => assert_eq!(ta.to_bits(), tb.to_bits()),
+        other => panic!("wrong reply kinds: {other:?}"),
+    }
+}
+
+#[test]
+fn single_shard_is_byte_identical_to_plain_session() {
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (ds, test) = synth::train_test_for_spec(&spec, 3, Some(640), Some(64));
+    let mut plain = SessionBuilder::new("small")
+        .hyper_params(small_hp())
+        .datasets(ds.clone(), test.clone())
+        .build_in(&mut eng)
+        .unwrap();
+    let mut one = build_sharded(&mut eng, 1);
+    assert!(one.shard_stats().unwrap().is_none(), "S=1 must not spawn a pool");
+    assert!(one.spawn_transfers().is_empty());
+    plain.commit(Edit::delete_row(7)).unwrap();
+    one.commit(Edit::delete_row(7)).unwrap();
+    assert_eq!(bits(plain.w()), bits(one.w()), "S=1 must be byte-identical");
+
+    // ...down to the artifact bytes: no layout record is written, so
+    // the S=1 file is indistinguishable from a plain session's
+    let pp = tmp_path("plain.dgar");
+    let ps = tmp_path("s1.dgar");
+    let _ = std::fs::remove_file(&pp);
+    let _ = std::fs::remove_file(&ps);
+    plain.save_artifact(&pp).unwrap();
+    one.save_artifact(&ps).unwrap();
+    let (ba, bb) = (std::fs::read(&pp).unwrap(), std::fs::read(&ps).unwrap());
+    let _ = std::fs::remove_file(&pp);
+    let _ = std::fs::remove_file(&ps);
+    assert_eq!(ba, bb, "S=1 artifact bytes must match the plain session's");
+}
+
+#[test]
+fn per_shard_transfer_budgets_are_exact() {
+    let mut eng = engine();
+    let spec = eng.spec("small").unwrap().clone();
+    let (p, chunk) = (spec.p, spec.chunk);
+    let mut s = build_sharded(&mut eng, 2);
+    let layout = s.layout().expect("S=2 has a layout").clone();
+
+    // spawn staging: x + y + mask per resident chunk (plus the model's
+    // two zero-accumulator seed buffers), nothing executed
+    for (sh, tr) in s.spawn_transfers().iter().enumerate() {
+        let (lo, hi) = layout.range(sh);
+        let chunks = (hi - lo).div_ceil(chunk) as u64;
+        assert_eq!(tr.uploads, 2 + 3 * chunks, "shard {sh} spawn staging uploads");
+        assert_eq!(
+            tr.upload_floats,
+            (2 * p + ACC_EXTRA) as u64 + chunks * (chunk * spec.da + chunk * spec.k + chunk) as u64,
+            "shard {sh} spawn staging floats"
+        );
+        assert_eq!(tr.execs, 0, "spawn must not execute");
+        assert_eq!(tr.downloads, 0, "spawn must not download");
+    }
+
+    // one delete owned by shard 0: per shard, per exact iteration, the
+    // broadcast costs ONE p-float iterate upload, one fused execution
+    // per resident chunk, and ONE (p+ACC_EXTRA)-float accumulator
+    // download; the mask flip re-uploads one chunk mask on the owner
+    let before = s.shard_stats().unwrap().unwrap();
+    let committed = s.commit(Edit::delete_row(0)).unwrap();
+    let e = committed.out.n_exact as u64;
+    assert!(e > 0);
+    let after = s.shard_stats().unwrap().unwrap();
+    assert_eq!(after.reduces - before.reduces, e, "one tree-reduce per exact iteration");
+    for sh in 0..2 {
+        let tr = after.per_shard[sh].since(before.per_shard[sh]);
+        let (lo, hi) = layout.range(sh);
+        let chunks = (hi - lo).div_ceil(chunk) as u64;
+        let owner_extra = u64::from(sh == layout.owner_of_base(0).0);
+        assert_eq!(tr.uploads, e + owner_extra, "shard {sh} uploads");
+        assert_eq!(
+            tr.upload_floats,
+            e * p as u64 + owner_extra * chunk as u64,
+            "shard {sh} upload floats"
+        );
+        assert_eq!(tr.execs, e * chunks, "shard {sh} executions");
+        assert_eq!(tr.downloads, e, "shard {sh} downloads");
+        assert_eq!(
+            tr.download_floats,
+            e * (p + ACC_EXTRA) as u64,
+            "shard {sh} download floats"
+        );
+        assert_eq!(tr.idx_uploads, 0, "no index payloads on the broadcast path");
+    }
+}
+
+#[test]
+fn edits_scatter_to_owning_shards_only() {
+    let mut eng = engine();
+    let mut s = build_sharded(&mut eng, 2);
+    let layout = s.layout().unwrap().clone();
+
+    // base delete in shard 1's range: only shard 1 pays the mask flip
+    let victim = layout.range(1).0 + 3;
+    let before = s.shard_stats().unwrap().unwrap();
+    let c = s.commit(Edit::delete_row(victim)).unwrap();
+    let e = c.out.n_exact as u64;
+    let after = s.shard_stats().unwrap().unwrap();
+    let d0 = after.per_shard[0].since(before.per_shard[0]);
+    let d1 = after.per_shard[1].since(before.per_shard[1]);
+    assert_eq!(d0.uploads, e, "shard 0 must see only the broadcast");
+    assert_eq!(d1.uploads, e + 1, "shard 1 owns the deleted row's mask");
+
+    // one added row lands round-robin on shard 0 (global added index 0)
+    let spec = eng.spec("small").unwrap().clone();
+    let before = s.shard_stats().unwrap().unwrap();
+    let c = s.commit(Edit::Add(synth::addition_rows(&spec, 901, 1))).unwrap();
+    let e = c.out.n_exact as u64;
+    let after = s.shard_stats().unwrap().unwrap();
+    let d0 = after.per_shard[0].since(before.per_shard[0]);
+    let d1 = after.per_shard[1].since(before.per_shard[1]);
+    assert!(d0.uploads > e, "shard 0 must stage the added row");
+    assert_eq!(d1.uploads, e, "shard 1 owns no added rows yet");
+
+    // deleting that committed-added row hits the same owner; shard 1's
+    // execs also pin that it never grew a tail segment
+    let before = s.shard_stats().unwrap().unwrap();
+    let c = s.commit(Edit::delete_row(640)).unwrap();
+    let e = c.out.n_exact as u64;
+    let after = s.shard_stats().unwrap().unwrap();
+    let d0 = after.per_shard[0].since(before.per_shard[0]);
+    let d1 = after.per_shard[1].since(before.per_shard[1]);
+    assert_eq!(d0.uploads, e + 1, "the added row's mask flips on its round-robin owner");
+    assert_eq!(d1.uploads, e, "shard 1 must not be touched by shard 0's added delete");
+    let chunks1 = {
+        let (lo, hi) = layout.range(1);
+        (hi - lo).div_ceil(spec.chunk) as u64
+    };
+    assert_eq!(d1.execs, e * chunks1, "shard 1 has no tail segments to execute");
+}
+
+#[test]
+fn artifact_round_trip_preserves_shard_layout_bitwise() {
+    let mut eng = engine();
+    let mut live = build_sharded(&mut eng, 2);
+    apply_script(&mut live, &eng);
+    let rec_live = live.layout().unwrap().to_rec();
+
+    let path = tmp_path("layout.dgar");
+    let _ = std::fs::remove_file(&path);
+    live.save_artifact(&path).unwrap();
+
+    // shards=1 adopts the recorded layout; the re-derived partition
+    // must equal the record and the restored model must be bitwise
+    let restored = ShardedSession::restore_from(&path, 1).unwrap();
+    assert_eq!(restored.shards(), 2, "restore must adopt the artifact's S");
+    assert_eq!(restored.layout().unwrap().to_rec(), rec_live);
+    assert_eq!(bits(restored.w()), bits(live.w()), "restore must be bitwise");
+    assert_eq!(restored.version(), live.version());
+
+    // a matching explicit S is fine; a mismatched one must refuse
+    assert!(ShardedSession::restore_from(&path, 2).is_ok());
+    let err = ShardedSession::restore_from(&path, 4).unwrap_err().to_string();
+    assert!(err.contains("--shards"), "mismatch error must name the flag: {err}");
+
+    // re-saving the restored session reproduces the artifact bytes —
+    // layout record included
+    let path2 = tmp_path("layout2.dgar");
+    let _ = std::fs::remove_file(&path2);
+    restored.save_artifact(&path2).unwrap();
+    let (a, b) = (std::fs::read(&path).unwrap(), std::fs::read(&path2).unwrap());
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&path2);
+    assert_eq!(a, b, "save → restore → save must be byte-stable");
+}

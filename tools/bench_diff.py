@@ -34,16 +34,19 @@ import sys
 # "readers-N" variants — the version-keyed memo-cache hit series, and
 # the durable-artifact series: warm restore and checkpoint save — and
 # the robustness series: supervised serving overhead and the fsync'd
-# WAL append.
+# WAL append — and the sharded-execution series: the shard-count
+# commit sweep ("shards-N") and the group-commit WAL burst (covered by
+# "wal-").
 # NOTE markers are case-sensitive substrings: "session" deliberately
 # does NOT match the ungated "retrain-from-recipe (full SessionBuilder
 # train)" baseline, and "restore"/"checkpoint" do not collide with the
 # "(AOT artifact)" L-BFGS series; "wal-" requires the hyphen so it can
-# never match a word like "walk")
+# never match a word like "walk"; "shards-" requires its hyphen so a
+# prose word like "shards" alone never gates)
 STAGED_MARKERS = (
     "staged", "resident", "session", "index-list", "compacted",
     "query-throughput", "readers-", "cache-hit", "restore", "checkpoint",
-    "supervised", "wal-",
+    "supervised", "wal-", "shards-",
 )
 
 DEFAULT_MAX_REGRESS = 0.10
