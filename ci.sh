@@ -20,14 +20,20 @@
 #      stream — every shard count must exit clean, and the sharded runs
 #      must report their shard pool in the metrics line (shards=N,
 #      reduces>0), so a silent fall-back to the resident path fails here
-#   7. cargo bench --bench micro -- --json BENCH_micro.json
-#   8. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
+#   7. certified-deletion smoke: `serve` with --epsilon/--capacity — the
+#      metrics line must carry the privacy overlay (budget(...)), and a
+#      second run with a deliberately tiny deletion capacity must hit the
+#      ledger boundary, reject the overflow typed, and still exit 0
+#      (degrade to read-only, not die)
+#   8. cargo bench --bench micro -- --json BENCH_micro.json
+#   9. bench-diff: BENCH_micro.json vs the committed rust/BENCH_baseline.json
 #      snapshot (tools/bench_diff.py) — fails on >10% mean regression of
 #      the staged paths (incl. the index-list SGD, resident-CG,
 #      compacted long-tail, query-throughput, reader-scaling,
 #      memo-cache-hit, artifact-restore, checkpoint-save,
-#      supervised-overhead, wal-append, sharded-commit, and
-#      wal-group-commit series; presence of those series is asserted)
+#      supervised-overhead, wal-append, sharded-commit,
+#      wal-group-commit, and certified-commit-overhead series;
+#      presence of those series is asserted)
 # then asserts the bench JSON was produced, so upload/download-count
 # regressions (the staging discipline of rust/docs/PERFORMANCE.md) fail
 # loudly in review instead of silently drifting.
@@ -141,6 +147,37 @@ for s in 1 2 4; do
 done
 echo "ci.sh: shard sweep ok (1/2/4)"
 
+echo "== ci: certified-deletion smoke (serve with an (eps,delta) ledger) =="
+# ample budget: every edit commits and the metrics line must render the
+# privacy overlay — budget( only appears when certification is on, so a
+# plumbing break (flags ignored, ledger never charged) fails here
+cert_store="$(mktemp -d /tmp/deltagrad-ci-cert.XXXXXX)"
+cert_log="$cert_store/serve.log"
+./target/release/deltagrad serve --model small --t 40 --requests 4 \
+    --epsilon 8 --capacity 64 --store "$cert_store" | tee "$cert_log"
+if ! grep -q 'budget(eps_spent=' "$cert_log"; then
+    echo "ci.sh FAIL: certified serve never rendered the privacy overlay (budget( missing from metrics)" >&2
+    exit 1
+fi
+rm -rf "$cert_store"
+# exhaustion: more deletions than the ledger admits — the overflow must
+# be rejected with the typed budget error while the service keeps
+# serving (run exits 0 and still prints its final metrics overlay)
+cert_store="$(mktemp -d /tmp/deltagrad-ci-cert.XXXXXX)"
+cert_log="$cert_store/serve.log"
+./target/release/deltagrad serve --model small --t 40 --requests 5 \
+    --epsilon 8 --capacity 2 --store "$cert_store" | tee "$cert_log"
+if ! grep -q 'rejected: privacy budget exhausted' "$cert_log"; then
+    echo "ci.sh FAIL: certified serve past capacity never rejected a deletion typed" >&2
+    exit 1
+fi
+if ! grep -q 'budget(eps_spent=' "$cert_log"; then
+    echo "ci.sh FAIL: exhausted certified run lost its privacy overlay" >&2
+    exit 1
+fi
+rm -rf "$cert_store"
+echo "ci.sh: certified smoke ok (overlay rendered, exhaustion degraded cleanly)"
+
 echo "== ci: cargo bench --bench micro -- --json BENCH_micro.json =="
 rm -f BENCH_micro.json # a stale file must not satisfy the check below
 cargo bench --bench micro -- --json BENCH_micro.json
@@ -157,7 +194,8 @@ for series in "index-list" "resident state" "compacted tail" "segmented tail" \
               "query-throughput" "query-throughput-readers" "cache-hit" \
               "session restore" "checkpoint-overhead" "retrain-from-recipe" \
               "supervised-overhead" "wal-append" \
-              "commit-shards-2" "commit-shards-4" "wal-group-commit"; do
+              "commit-shards-2" "commit-shards-4" "wal-group-commit" \
+              "certified-commit-overhead" "certified-release"; do
     if ! grep -q "$series" BENCH_micro.json; then
         echo "ci.sh FAIL: bench series \"$series\" missing from BENCH_micro.json" >&2
         exit 1

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     println!("‖w^I − w^U‖ = {delta0:.3e}  (the deletion error the noise must mask)");
 
     let epsilon = 1.0;
-    let mech = LaplaceMechanism::from_deletion_error(session.spec().p, delta0, epsilon);
+    let mech = LaplaceMechanism::from_deletion_error(session.spec().p, delta0, epsilon)?;
     println!("Laplace mechanism: ε = {epsilon}, per-coordinate scale b = {:.3e}", mech.scale);
 
     let mut rng = Rng::new(77);

@@ -9,6 +9,7 @@ structural cross-checks).  Any Rust-side change that breaks these
 properties is a wire-format break and must bump FORMAT_VERSION.
 """
 
+import math
 import random
 import struct
 
@@ -119,6 +120,32 @@ def put_transfers(b, t):
         put_u64(b, t[key])
 
 
+def put_certified(b, cs):
+    c = cs["config"]
+    put_f64(b, c["epsilon"])
+    put_f64(b, c["delta"])
+    if c["sigma"] is None:
+        b.append(0)
+    else:
+        b.append(1)
+        put_f64(b, c["sigma"])
+    b.append(c["mechanism"])
+    put_u64(b, c["noise_seed"])
+    put_u64(b, c["capacity"])
+    b.append(c["policy"])
+    acct = cs["acct"]
+    for key in ("sum_eps", "sum_eps_sq", "sum_eps_adv", "delta_spent"):
+        put_f64(b, acct[key])
+    for key in ("deletions", "releases", "retrains"):
+        put_u64(b, acct[key])
+    put_u64(b, len(cs["certs"]))
+    for rec in cs["certs"]:
+        put_u64(b, rec["version"])
+        put_f64(b, rec["delta0"])
+        put_f64(b, rec["scale"])
+        put_f64(b, rec["eps_hat"])
+
+
 def put_edit(b, e):
     tag = e[0]
     if tag == "delete":
@@ -184,6 +211,13 @@ def canonical_bytes(a) -> bytes:
         for lo, hi in rec["ranges"]:
             put_u64(b, lo)
             put_u64(b, hi)
+    # optional privacy-accounting section, after the shard layout when
+    # both are present.  Leading u64 tag = 1 — disjoint from the shard
+    # section's leading shard count (≥ 2) — so decoders tell the
+    # trailing sections apart without a format bump
+    if a.get("certified") is not None:
+        put_u64(b, 1)
+        put_certified(b, a["certified"])
     return bytes(b)
 
 
@@ -297,6 +331,46 @@ class Rd:
             "uploads", "upload_floats", "idx_uploads", "idx_scalars",
             "execs", "downloads", "download_floats")}
 
+    def get_certified(self):
+        epsilon = self.get_f64()
+        delta = self.get_f64()
+        tag = self.get_u8()
+        if tag == 0:
+            sigma = None
+        elif tag == 1:
+            sigma = self.get_f64()
+        else:
+            raise WireError("Malformed", "bad sigma tag")
+        mechanism = self.get_u8()
+        if mechanism > 1:
+            raise WireError("Malformed", "bad mechanism tag")
+        noise_seed = self.get_u64()
+        capacity = self.get_u64()
+        policy = self.get_u8()
+        if policy > 1:
+            raise WireError("Malformed", "bad policy tag")
+        # CertifyConfig::validate, transliterated: the decoder rejects
+        # structurally valid bytes that encode an unusable ledger
+        ok = (math.isfinite(epsilon) and epsilon > 0.0
+              and math.isfinite(delta) and 0.0 < delta < 1.0
+              and capacity >= 1)
+        if sigma is not None:
+            ok = ok and math.isfinite(sigma) and sigma > 0.0
+        if not ok:
+            raise WireError("Malformed", "invalid certify config")
+        acct = {key: self.get_f64() for key in (
+            "sum_eps", "sum_eps_sq", "sum_eps_adv", "delta_spent")}
+        for key in ("deletions", "releases", "retrains"):
+            acct[key] = self.get_u64()
+        n_certs = self.get_count(32)
+        certs = [{"version": self.get_u64(), "delta0": self.get_f64(),
+                  "scale": self.get_f64(), "eps_hat": self.get_f64()}
+                 for _ in range(n_certs)]
+        return {"config": {"epsilon": epsilon, "delta": delta, "sigma": sigma,
+                           "mechanism": mechanism, "noise_seed": noise_seed,
+                           "capacity": capacity, "policy": policy},
+                "acct": acct, "certs": certs}
+
     def get_edit(self, depth):
         if depth > MAX_EDIT_DEPTH:
             raise WireError("Malformed", "edit nesting too deep")
@@ -362,24 +436,36 @@ def decode(bytes_):
     stats["commit_transfers"] = r.get_transfers()
     stats["seconds"] = r.get_f64()
     a["stats"] = stats
-    # bytes past the stats are the optional shard-layout section
-    # (absent in S=1 and pre-sharding artifacts)
+    # bytes past the stats are the optional trailing sections, told
+    # apart by their leading u64: a shard-layout section leads with its
+    # shard count (≥ 2), a privacy-accounting section with the tag 1
+    # (after the shard section when both are present)
+    a["shard_layout"] = None
+    a["certified"] = None
     if r.remaining() > 0:
-        shards = r.get_u64()
-        n_ranges = r.get_count(16)
-        ranges = [(r.get_u64(), r.get_u64()) for _ in range(n_ranges)]
-        if shards < 2 or len(ranges) != shards:
-            raise WireError("Malformed", "shard layout count mismatch")
-        expect = 0
-        for lo, hi in ranges:
-            if lo != expect or hi < lo:
-                raise WireError("Malformed", "shard ranges must tile contiguously")
-            expect = hi
-        if expect != a["base"]["n"]:
-            raise WireError("Malformed", "shard ranges do not cover the base")
-        a["shard_layout"] = {"shards": shards, "ranges": ranges}
-    else:
-        a["shard_layout"] = None
+        lead = r.get_u64()
+        if lead >= 2:
+            shards = lead
+            n_ranges = r.get_count(16)
+            ranges = [(r.get_u64(), r.get_u64()) for _ in range(n_ranges)]
+            if len(ranges) != shards:
+                raise WireError("Malformed", "shard layout count mismatch")
+            expect = 0
+            for lo, hi in ranges:
+                if lo != expect or hi < lo:
+                    raise WireError("Malformed", "shard ranges must tile contiguously")
+                expect = hi
+            if expect != a["base"]["n"]:
+                raise WireError("Malformed", "shard ranges do not cover the base")
+            a["shard_layout"] = {"shards": shards, "ranges": ranges}
+            if r.remaining() > 0:
+                if r.get_u64() != 1:
+                    raise WireError("Malformed", "bad optional section tag")
+                a["certified"] = r.get_certified()
+        elif lead == 1:
+            a["certified"] = r.get_certified()
+        else:
+            raise WireError("Malformed", "bad optional section tag")
     if r.remaining() != 0:
         raise WireError("Malformed", "trailing bytes in canonical section")
     # structural cross-checks, same order as the Rust decoder
@@ -443,6 +529,32 @@ def make_artifact(seed):
                                    for i in range(s)]}
     else:
         shard_layout = None
+    # ~40% of artifacts carry the optional privacy-accounting section
+    # (a valid random ledger — the decoder's config validation must pass)
+    if r.random() < 0.4:
+        certified = {
+            "config": {"epsilon": r.uniform(0.1, 4.0),
+                       "delta": r.uniform(1e-8, 0.5),
+                       "sigma": r.choice([None, r.uniform(0.01, 2.0)]),
+                       "mechanism": r.randint(0, 1),
+                       "noise_seed": r.randrange(1 << 64),
+                       "capacity": r.randint(1, 64),
+                       "policy": r.randint(0, 1)},
+            "acct": {"sum_eps": r.uniform(0.0, 2.0),
+                     "sum_eps_sq": r.uniform(0.0, 1.0),
+                     "sum_eps_adv": r.uniform(0.0, 1.0),
+                     "delta_spent": r.uniform(0.0, 1e-4),
+                     "deletions": r.randrange(64),
+                     "releases": r.randrange(64),
+                     "retrains": r.randrange(4)},
+            "certs": [{"version": r.randrange(1 << 32),
+                       "delta0": r.uniform(0.0, 1e-2),
+                       "scale": r.uniform(0.0, 1.0),
+                       "eps_hat": r.uniform(0.0, 0.5)}
+                      for _ in range(r.randint(0, 3))],
+        }
+    else:
+        certified = None
     added = dataset(r.randint(0, 5))
     # partition the added rows into a compacted prefix + segments
     tail_compact_n = r.randint(0, added["n"])
@@ -491,6 +603,7 @@ def make_artifact(seed):
                   "commit_transfers": transfers(),
                   "seconds": r.uniform(0.0, 1e4)},
         "shard_layout": shard_layout,
+        "certified": certified,
     }
 
 
@@ -623,11 +736,16 @@ class TestShardLayoutSection:
         assert e.value.kind == "Malformed"
         assert msg in str(e.value)
 
-    def test_shard_count_below_two_is_malformed(self):
-        # S=1 must be expressed by OMITTING the section, never shards=1
+    def test_shard_count_below_two_reads_as_the_privacy_tag(self):
+        # S=1 must be expressed by OMITTING the section: under the tag
+        # scheme a leading u64 of 1 IS the privacy-section tag, so these
+        # bytes parse as a garbage privacy section and must fail typed
+        # (never panic, never decode as a 1-shard layout)
         a = make_artifact(9)
+        a["certified"] = None
         a["shard_layout"] = {"shards": 1, "ranges": [(0, a["base"]["n"])]}
-        self._expect_malformed(a, "shard layout count mismatch")
+        with pytest.raises(WireError):
+            decode(encode(a))
 
     def test_range_count_mismatch_is_malformed(self):
         a = make_artifact(9)
@@ -645,3 +763,98 @@ class TestShardLayoutSection:
         n = a["base"]["n"]
         a["shard_layout"] = {"shards": 2, "ranges": [(0, 1), (1, n + 1)]}
         self._expect_malformed(a, "shard ranges do not cover the base")
+
+
+class TestPrivacySection:
+    """The OPTIONAL trailing privacy-accounting section (tag 1): absent
+    when certification is off (so uncertified artifact bytes are
+    unchanged), present + config-validated for a certified save, riding
+    after the shard-layout section when both are present."""
+
+    def _with_cert(self, seed=13):
+        a = make_artifact(seed)
+        a["certified"] = {
+            "config": {"epsilon": 1.0, "delta": 1e-5, "sigma": None,
+                       "mechanism": 1, "noise_seed": 0x5EED,
+                       "capacity": 8, "policy": 0},
+            "acct": {"sum_eps": 0.375, "sum_eps_sq": 0.046875,
+                     "sum_eps_adv": 0.0125, "delta_spent": 1.875e-6,
+                     "deletions": 3, "releases": 3, "retrains": 0},
+            "certs": [{"version": v, "delta0": 1e-4 * v,
+                       "scale": 0.25, "eps_hat": 0.125}
+                      for v in (1, 2, 3)],
+        }
+        return a
+
+    def test_absent_section_decodes_to_none_and_matches_missing_key(self):
+        a = make_artifact(17)
+        a["certified"] = None
+        wire = encode(a)
+        assert decode(wire)["certified"] is None
+        # an artifact dict that predates the field encodes identically:
+        # uncertified saves write NO section, old bytes stay valid
+        legacy = dict(a)
+        del legacy["certified"]
+        assert encode(legacy) == wire
+
+    def test_present_section_round_trips(self):
+        a = self._with_cert()
+        assert decode(encode(a))["certified"] == a["certified"]
+
+    def test_rides_after_the_shard_section(self):
+        a = self._with_cert()
+        n = a["base"]["n"]
+        lo = n // 2
+        a["shard_layout"] = {"shards": 2, "ranges": [(0, lo), (lo, n)]}
+        got = decode(encode(a))
+        assert got["shard_layout"] == a["shard_layout"]
+        assert got["certified"] == a["certified"]
+
+    def test_section_is_covered_by_the_content_hash(self):
+        a = self._with_cert()
+        plain = dict(a)
+        plain["certified"] = None
+        assert fnv1a(canonical_bytes(a)) != fnv1a(canonical_bytes(plain))
+
+    def _expect_malformed(self, a, msg):
+        with pytest.raises(WireError) as e:
+            decode(encode(a))
+        assert e.value.kind == "Malformed"
+        assert msg in str(e.value)
+
+    def test_bad_mechanism_tag_is_malformed(self):
+        a = self._with_cert()
+        a["certified"]["config"]["mechanism"] = 2
+        self._expect_malformed(a, "bad mechanism tag")
+
+    def test_bad_policy_tag_is_malformed(self):
+        a = self._with_cert()
+        a["certified"]["config"]["policy"] = 7
+        self._expect_malformed(a, "bad policy tag")
+
+    def test_invalid_config_is_malformed(self):
+        # structurally sound bytes encoding an unusable ledger: the
+        # decoder applies CertifyConfig::validate, not just framing
+        for field, value in (("delta", 0.0), ("epsilon", -1.0),
+                             ("capacity", 0), ("sigma", 0.0)):
+            a = self._with_cert()
+            a["certified"]["config"][field] = value
+            self._expect_malformed(a, "invalid certify config")
+
+    def test_lead_zero_tag_is_malformed(self):
+        # the tag space {0} is reserved: a trailing section leading with
+        # u64 0 must reject typed, not decode as either section
+        a = make_artifact(3)
+        a["shard_layout"] = None
+        a["certified"] = None
+        canon = bytearray(canonical_bytes(a))
+        put_u64(canon, 0)
+        wire = bytearray(MAGIC)
+        put_u32(wire, FORMAT_VERSION)
+        put_u64(wire, fnv1a(bytes(canon)))
+        put_u64(wire, len(canon))
+        wire += canon
+        with pytest.raises(WireError) as e:
+            decode(bytes(wire))
+        assert e.value.kind == "Malformed"
+        assert "bad optional section tag" in str(e.value)

@@ -106,6 +106,14 @@ class TestCompare:
         assert bench_diff.is_staged("commit-shards-4 session.commit (1 delete)")
         assert bench_diff.is_staged("wal-group-commit 16 records one fsync")
         assert not bench_diff.is_staged("scatter across shards warmup")
+        # the certified-deletion series gate via "certified-" (both the
+        # ledger-on commit and its certification-off contrast carry the
+        # series prefix; the noised release is host-side O(p))
+        assert bench_diff.is_staged(
+            "certified-commit-overhead on (1 delete + charge)")
+        assert bench_diff.is_staged("certified-commit-overhead off (1 delete)")
+        assert bench_diff.is_staged("certified-release noised w (host O(p))")
+        assert not bench_diff.is_staged("certified deletion warmup")
 
     def test_sharded_commit_series_gates(self):
         name = "commit-shards-4 session.commit (1 delete)"
@@ -127,6 +135,18 @@ class TestCompare:
 
     def test_cache_hit_series_gates(self):
         name = "query-throughput loss (memo cache-hit)"
+        base = {name: entry(1.0)}
+        _, regressions, _ = bench_diff.compare(base, {name: entry(1.5)}, 0.10)
+        assert len(regressions) == 1 and regressions[0][0] == name
+
+    def test_certified_commit_series_gates(self):
+        name = "certified-commit-overhead on (1 delete + charge)"
+        base = {name: entry(10.0)}
+        _, regressions, _ = bench_diff.compare(base, {name: entry(12.0)}, 0.10)
+        assert len(regressions) == 1 and regressions[0][0] == name
+
+    def test_certified_release_series_gates(self):
+        name = "certified-release noised w (host O(p))"
         base = {name: entry(1.0)}
         _, regressions, _ = bench_diff.compare(base, {name: entry(1.5)}, 0.10)
         assert len(regressions) == 1 and regressions[0][0] == name

@@ -331,6 +331,51 @@ fn main() -> anyhow::Result<()> {
         })?;
     }
 
+    if want("certified") {
+        println!("== certified commit overhead (small, T=40, (eps,delta) ledger on) ==");
+        // the before/after pair of the certification tax: the same
+        // single-delete commit stream with the ledger off vs on. The
+        // certificate is measured from the resident gradient norm the
+        // commit already downloads, so the device counters of both
+        // series must match — any gap is host-side accountant work.
+        let spec = eng.spec("small")?.clone();
+        let (ds, test) = synth::train_test_for_spec(&spec, 7, None, None);
+        let mut hp = HyperParams::for_dataset("small");
+        hp.t = 40;
+        hp.j0 = 8;
+        let mut plain = SessionBuilder::new("small")
+            .hyper_params(hp.clone())
+            .datasets(ds.clone(), test.clone())
+            .build_in(&mut eng)?;
+        let mut cert = SessionBuilder::new("small")
+            .hyper_params(hp)
+            .datasets(ds, test)
+            .certify(
+                deltagrad::session::CertifyConfig::new(8.0, 1e-5)
+                    .capacity(64)
+                    .noise_seed(0x5EED),
+            )
+            .build_in(&mut eng)?;
+        let rt = eng.runtime();
+        let mut victim = 0usize;
+        bench(&mut results, &rt, "certified-commit-overhead off (1 delete)", 1, 10, || {
+            plain.commit(Edit::delete_row(victim)).map(|_| ())?;
+            victim += 1;
+            Ok(())
+        })?;
+        let mut cvictim = 0usize;
+        bench(&mut results, &rt, "certified-commit-overhead on (1 delete + charge)", 1, 10, || {
+            cert.commit(Edit::delete_row(cvictim)).map(|_| ())?;
+            cvictim += 1;
+            Ok(())
+        })?;
+        // the per-release host cost: O(p) deterministic noise draws on
+        // the resident iterate — zero device traffic by construction
+        bench(&mut results, &rt, "certified-release noised w (host O(p))", 2, 50, || {
+            cert.release_current().map(|_| ())
+        })?;
+    }
+
     if want("long-tail") {
         println!("== long-tail serving session (small, T=40, 12 one-row adds) ==");
         let spec = eng.spec("small")?.clone();
@@ -446,6 +491,7 @@ fn main() -> anyhow::Result<()> {
                 store_fresh: false,
                 supervision: Supervision::default(),
                 faults: None,
+                certify: None,
             })?;
             let name = format!("query-throughput-readers-{r} loss (replica pool)");
             // each rep streams one commit through the writer while the
@@ -505,6 +551,7 @@ fn main() -> anyhow::Result<()> {
             store_fresh: false,
             supervision: Supervision::default(),
             faults: None,
+            certify: None,
         })?;
         // warm the entry: the first Loss at this version executes and
         // fills the cache; every benched rep is then a pure O(1) hit
@@ -694,6 +741,7 @@ fn main() -> anyhow::Result<()> {
             store_fresh: false,
             supervision: Supervision::default(),
             faults: None,
+            certify: None,
         })?;
         let mut victim = 0usize;
         bench(

@@ -112,6 +112,7 @@ fn main() -> anyhow::Result<()> {
                 store_fresh: false,
                 supervision: deltagrad::coordinator::Supervision::default(),
                 faults: None,
+                certify: None,
             })?;
             let t0 = std::time::Instant::now();
             for rep in 0..3usize {

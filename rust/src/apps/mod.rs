@@ -12,8 +12,10 @@
 //! every read below is also a service request with a version, admission
 //! control, and metrics (docs/API.md has the migration table).
 //!
-//! * [`privacy`]   — ε-approximate deletion via the Laplace mechanism
-//!   (§5.1, appendix B.1; host-side, model-agnostic).
+//! * [`privacy`]   — mechanism primitives (Laplace/Gaussian) for
+//!   ε-approximate deletion (§5.1, appendix B.1; host-side,
+//!   model-agnostic). Deprecated shim: the accounted subsystem is
+//!   [`crate::session::certified`].
 //! * [`valuation`] — leave-one-out data valuation (§5.4).
 //! * [`robust`]    — robust learning by outlier prune-and-refit
 //!   (§5.3, appendix D.5).

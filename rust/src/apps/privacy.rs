@@ -1,14 +1,56 @@
-//! §5.1 / appendix B.1: privacy-related data deletion.
+//! Mechanism primitives for privacy-related data deletion (§5.1 /
+//! appendix B.1).
+//!
+//! **Deprecated shim**: the certified-deletion subsystem lives in
+//! [`crate::session::certified`] now — an (ε,δ) ledger on the session
+//! commit path with deterministic seeded releases, deletion capacity,
+//! and artifact-persisted accountant state. This module keeps the
+//! free-standing mechanism primitives ([`LaplaceMechanism`],
+//! [`GaussianMechanism`], [`epsilon_bound`]) for host-side analysis of
+//! a single release; new code should go through
+//! `SessionBuilder::certify` + `Session::release_current` instead.
 //!
 //! DeltaGrad's output w^I differs from the true retrained w^U by at most
 //! δ₀ = O((r/n)²); adding i.i.d. Laplace(δ/ε) noise to every coordinate
 //! (δ ≥ √p·δ₀) makes the released model an ε-approximate deletion in the
 //! sense of Definition 3: the output distribution is within e^ε of what
-//! releasing the noised TRUE retrain would give.
+//! releasing the noised TRUE retrain would give. The Gaussian variant
+//! trades the pure-ε guarantee for (ε,δ) with σ calibrated against the
+//! ℓ₂ sensitivity δ₀ directly (no √p inflation).
 
 use crate::util::Rng;
 
-/// Parameters of the release mechanism.
+/// Typed calibration failure: the deletion-error / budget pair cannot
+/// produce a well-defined mechanism (scale 0 makes `privacy_loss` NaN).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MechanismError {
+    /// δ₀ must be a finite positive deletion-error bound.
+    BadDeletionError { delta0: f64 },
+    /// ε must be a finite positive budget.
+    BadEpsilon { epsilon: f64 },
+    /// δ must lie in (0, 1) for the Gaussian calibration.
+    BadDelta { delta: f64 },
+}
+
+impl std::fmt::Display for MechanismError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MechanismError::BadDeletionError { delta0 } => {
+                write!(f, "deletion error bound delta0 = {delta0} must be finite and > 0")
+            }
+            MechanismError::BadEpsilon { epsilon } => {
+                write!(f, "privacy budget epsilon = {epsilon} must be finite and > 0")
+            }
+            MechanismError::BadDelta { delta } => {
+                write!(f, "failure probability delta = {delta} must lie in (0, 1)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MechanismError {}
+
+/// Parameters of the Laplace release mechanism.
 #[derive(Clone, Copy, Debug)]
 pub struct LaplaceMechanism {
     /// per-coordinate Laplace scale b = δ/ε
@@ -18,9 +60,21 @@ pub struct LaplaceMechanism {
 impl LaplaceMechanism {
     /// Build from the paper's bound: δ = √p · δ₀ with δ₀ an upper bound
     /// on ‖w^U − w^I‖ (measured or theoretical), and privacy budget ε.
-    pub fn from_deletion_error(p: usize, delta0: f64, epsilon: f64) -> Self {
-        assert!(epsilon > 0.0);
-        LaplaceMechanism { scale: (p as f64).sqrt() * delta0 / epsilon }
+    ///
+    /// Rejects δ₀ ≤ 0 (or NaN) and ε ≤ 0 with a typed error: scale 0
+    /// would make [`Self::privacy_loss`] return NaN instead of a bound.
+    pub fn from_deletion_error(
+        p: usize,
+        delta0: f64,
+        epsilon: f64,
+    ) -> Result<Self, MechanismError> {
+        if !(delta0 > 0.0 && delta0.is_finite()) {
+            return Err(MechanismError::BadDeletionError { delta0 });
+        }
+        if !(epsilon > 0.0 && epsilon.is_finite()) {
+            return Err(MechanismError::BadEpsilon { epsilon });
+        }
+        Ok(LaplaceMechanism { scale: (p as f64).sqrt() * delta0 / epsilon })
     }
 
     /// Release a noised copy of `w`.
@@ -42,6 +96,62 @@ impl LaplaceMechanism {
 
     /// Empirical ε̂: the log-density ratio of releasing from w^I vs w^U at
     /// a point z — bounded by ε when ‖w^I − w^U‖₁ ≤ δ = scale·ε.
+    pub fn privacy_loss(&self, w_i: &[f32], w_u: &[f32], z: &[f32]) -> f64 {
+        (self.log_density(w_i, z) - self.log_density(w_u, z)).abs()
+    }
+}
+
+/// Parameters of the Gaussian release mechanism: (ε,δ) instead of pure
+/// ε, calibrated against the ℓ₂ deletion error directly.
+#[derive(Clone, Copy, Debug)]
+pub struct GaussianMechanism {
+    /// per-coordinate noise standard deviation σ
+    pub sigma: f64,
+}
+
+impl GaussianMechanism {
+    /// Classic (ε,δ) calibration: σ = δ₀ · √(2 ln(1.25/δ)) / ε with δ₀
+    /// an upper bound on ‖w^U − w^I‖₂ (the ℓ₂ sensitivity of the
+    /// release — no √p inflation, unlike the Laplace ℓ₁ route).
+    pub fn from_deletion_error(
+        delta0: f64,
+        epsilon: f64,
+        delta: f64,
+    ) -> Result<Self, MechanismError> {
+        if !(delta0 > 0.0 && delta0.is_finite()) {
+            return Err(MechanismError::BadDeletionError { delta0 });
+        }
+        if !(epsilon > 0.0 && epsilon.is_finite()) {
+            return Err(MechanismError::BadEpsilon { epsilon });
+        }
+        if !(delta > 0.0 && delta < 1.0) {
+            return Err(MechanismError::BadDelta { delta });
+        }
+        Ok(GaussianMechanism { sigma: delta0 * (2.0 * (1.25 / delta).ln()).sqrt() / epsilon })
+    }
+
+    /// Release a noised copy of `w`.
+    pub fn release(&self, w: &[f32], rng: &mut Rng) -> Vec<f32> {
+        w.iter()
+            .map(|&x| (x as f64 + self.sigma * rng.gaussian()) as f32)
+            .collect()
+    }
+
+    /// Log density of the mechanism output `z` given center `w`
+    /// (isotropic Gaussian, up to the shared normalizing constant the
+    /// privacy-loss ratio cancels).
+    pub fn log_density(&self, center: &[f32], z: &[f32]) -> f64 {
+        let s2 = self.sigma * self.sigma;
+        let mut acc = 0.0f64;
+        for (c, v) in center.iter().zip(z) {
+            let d = *v as f64 - *c as f64;
+            acc += -d * d / (2.0 * s2);
+        }
+        acc
+    }
+
+    /// Empirical privacy loss at `z` for the pair (w^I, w^U); exceeds ε
+    /// only with probability ≤ δ under the calibration above.
     pub fn privacy_loss(&self, w_i: &[f32], w_u: &[f32], z: &[f32]) -> f64 {
         (self.log_density(w_i, z) - self.log_density(w_u, z)).abs()
     }
@@ -80,8 +190,60 @@ mod tests {
 
     #[test]
     fn scale_from_error() {
-        let m = LaplaceMechanism::from_deletion_error(100, 1e-4, 0.5);
+        let m = LaplaceMechanism::from_deletion_error(100, 1e-4, 0.5).unwrap();
         assert!((m.scale - 10.0 * 1e-4 / 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_calibrations_reject_typed() {
+        assert_eq!(
+            LaplaceMechanism::from_deletion_error(100, 0.0, 1.0),
+            Err(MechanismError::BadDeletionError { delta0: 0.0 })
+        );
+        assert!(matches!(
+            LaplaceMechanism::from_deletion_error(100, f64::NAN, 1.0),
+            Err(MechanismError::BadDeletionError { .. })
+        ));
+        assert_eq!(
+            LaplaceMechanism::from_deletion_error(100, 1e-4, 0.0),
+            Err(MechanismError::BadEpsilon { epsilon: 0.0 })
+        );
+        assert_eq!(
+            GaussianMechanism::from_deletion_error(1e-4, 1.0, 0.0),
+            Err(MechanismError::BadDelta { delta: 0.0 })
+        );
+        assert_eq!(
+            GaussianMechanism::from_deletion_error(-1.0, 1.0, 1e-5),
+            Err(MechanismError::BadDeletionError { delta0: -1.0 })
+        );
+        // the NaN-poisoning path the typed error exists to close: a
+        // scale-0 mechanism would answer privacy_loss with NaN
+        let m = LaplaceMechanism { scale: 0.0 };
+        assert!(m.privacy_loss(&[0.0], &[0.0], &[0.0]).is_nan());
+    }
+
+    #[test]
+    fn gaussian_sigma_calibration() {
+        let m = GaussianMechanism::from_deletion_error(1e-3, 0.5, 1e-5).unwrap();
+        let want = 1e-3 * (2.0f64 * (1.25 / 1e-5f64).ln()).sqrt() / 0.5;
+        assert!((m.sigma - want).abs() < 1e-15, "sigma {} want {want}", m.sigma);
+    }
+
+    #[test]
+    fn gaussian_loss_small_for_close_centers() {
+        let mut rng = Rng::new(7);
+        let w_u: Vec<f32> = (0..50).map(|_| rng.gaussian_f32()).collect();
+        let w_i: Vec<f32> = w_u.iter().map(|x| x + 1e-4 * rng.gaussian_f32()).collect();
+        let mech = GaussianMechanism::from_deletion_error(2e-3, 1.0, 1e-5).unwrap();
+        let mut exceed = 0;
+        for _ in 0..50 {
+            let z = mech.release(&w_i, &mut rng);
+            if mech.privacy_loss(&w_i, &w_u, &z) > 1.0 {
+                exceed += 1;
+            }
+        }
+        // the (ε,δ) guarantee: ε-exceedance is a δ-probability event
+        assert_eq!(exceed, 0, "{exceed}/50 releases exceeded eps");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use std::time::Duration;
 
 use crate::runtime::TransferStats;
-use crate::session::QueryKind;
+use crate::session::{BudgetSnapshot, QueryKind};
 
 /// Fixed log-scale latency buckets (seconds).
 const BUCKETS: [f64; 12] = [
@@ -114,6 +114,24 @@ pub struct Metrics {
     /// burst of frames under ONE data sync, so `wal_syncs <=
     /// wal_records` (equality only when every burst held one commit)
     pub wal_syncs: u64,
+    // --- privacy overlay (filled at Metrics time from the worker's
+    // certified ledger; all-zero — and unrendered — when certification
+    // is off, keeping the default output byte-identical) ---------------
+    /// advanced-composition ε spent so far
+    pub eps_spent: f64,
+    /// configured ε budget (0 = certification off)
+    pub eps_budget: f64,
+    /// deleted rows charged against the deletion capacity
+    pub privacy_deletions: u64,
+    /// Descent-to-Delete deletion capacity (0 = certification off; the
+    /// render gate)
+    pub deletion_capacity: u64,
+    /// certified (noised) releases produced
+    pub releases: u64,
+    /// ledger-resetting full retrains triggered by the Retrain policy
+    pub privacy_retrains: u64,
+    /// commits rejected typed with `Rejected::BudgetExhausted`
+    pub budget_rejects: u64,
 }
 
 impl Metrics {
@@ -202,6 +220,23 @@ impl Metrics {
             self.shard_downloads += t.downloads;
             self.shard_download_floats += t.download_floats;
         }
+    }
+
+    /// Fold the certified ledger's snapshot into the privacy overlay
+    /// (`budget_rejects` is the worker's own counter, not the ledger's,
+    /// so it is left alone here).
+    pub fn record_privacy(&mut self, snap: &BudgetSnapshot) {
+        self.eps_spent = snap.eps_spent;
+        self.eps_budget = snap.eps_budget;
+        self.privacy_deletions = snap.deletions;
+        self.deletion_capacity = snap.capacity;
+        self.releases = snap.releases;
+        self.privacy_retrains = snap.retrains;
+    }
+
+    /// Record one commit rejected with `Rejected::BudgetExhausted`.
+    pub fn record_budget_reject(&mut self) {
+        self.budget_rejects += 1;
     }
 
     /// Record one served read query: its kind, end-to-end latency
@@ -402,6 +437,24 @@ impl Metrics {
                 self.checkpoints, self.checkpoint_seconds,
             ));
         }
+        if self.deletion_capacity > 0 {
+            // certification on: the ledger line is the greppable serving
+            // signal (ci.sh asserts on `budget(`); rejects intrude only
+            // when nonzero so a healthy certified run stays stable
+            s.push_str(&format!(
+                " budget(eps_spent={:.6}/{:.6} deletions={}/{} releases={} retrains={}",
+                self.eps_spent,
+                self.eps_budget,
+                self.privacy_deletions,
+                self.deletion_capacity,
+                self.releases,
+                self.privacy_retrains,
+            ));
+            if self.budget_rejects > 0 {
+                s.push_str(&format!(" rejects={}", self.budget_rejects));
+            }
+            s.push(')');
+        }
         if self.wal_records > 0 {
             // syncs intrude only when group commit actually ran — a
             // pre-group-commit consumer's exact-match parse still works
@@ -596,6 +649,30 @@ mod tests {
         assert!(r.contains("shards=2 reduces=5 (0.250s)"), "{r}");
         assert!(r.contains("shard_device(uploads=5 floats=0 execs=8 downloads=6 dl_floats=0)"), "{r}");
         assert!(r.contains("cache_bytes(used=100 budget=4096 evictions=2)"), "{r}");
+    }
+
+    #[test]
+    fn privacy_overlay_renders_only_when_certified() {
+        let mut m = Metrics::new();
+        // certification off: the default output is byte-identical
+        assert!(!m.render().contains("budget("));
+        m.record_privacy(&BudgetSnapshot {
+            eps_spent: 0.25,
+            eps_budget: 1.0,
+            delta_spent: 1e-6,
+            delta_budget: 1e-5,
+            deletions: 3,
+            capacity: 16,
+            releases: 4,
+            retrains: 1,
+        });
+        let r = m.render();
+        assert!(r.contains("budget(eps_spent=0.250000/1.000000 deletions=3/16 releases=4 retrains=1)"), "{r}");
+        assert!(!r.contains("rejects="), "{r}");
+        m.record_budget_reject();
+        m.record_budget_reject();
+        let r = m.render();
+        assert!(r.contains("retrains=1 rejects=2)"), "{r}");
     }
 
     #[test]

@@ -61,7 +61,9 @@ use super::faults::{FaultPlane, FaultSite};
 use super::service::{lock_cache, Rejected};
 use crate::config::HyperParams;
 use crate::session::artifact;
-use crate::session::{Edit, Query, QueryCache, QueryReply, Session, SessionBuilder};
+use crate::session::{
+    CertifyConfig, Edit, Query, QueryCache, QueryReply, Session, SessionBuilder,
+};
 use crate::util::Rng;
 
 /// One committed edit, as published by the writer to every reader: the
@@ -93,6 +95,10 @@ pub struct ReaderSpawn {
     pub n_train: Option<usize>,
     pub n_test: Option<usize>,
     pub hp: HyperParams,
+    /// the writer's certified-deletion config: replicas must run the
+    /// same ledger so replayed commits recharge it bitwise and budget /
+    /// certificate queries answer identically on any reader
+    pub certify: Option<CertifyConfig>,
 }
 
 /// Reader-supervision knobs, carried on `ServiceConfig.supervision`.
@@ -341,12 +347,27 @@ impl Drop for ReaderPool {
 /// Retrain-from-recipe fallback (and the path for writers that could
 /// not produce a spawn artifact).
 fn build_recipe(spec: &ReaderSpawn) -> Result<Session> {
-    SessionBuilder::new(&spec.model)
+    let mut b = SessionBuilder::new(&spec.model)
         .seed(spec.seed)
         .n_train(spec.n_train)
         .n_test(spec.n_test)
-        .hyper_params(spec.hp.clone())
-        .build()
+        .hyper_params(spec.hp.clone());
+    if let Some(cfg) = &spec.certify {
+        b = b.certify(cfg.clone());
+    }
+    b.build()
+}
+
+/// Adopt the writer's certified config on a restored replica. A no-op
+/// when the artifact already carried a ledger (the restored state wins,
+/// exactly like the writer's own restore path); seeds a fresh ledger
+/// when the artifact predates certification, so subsequent delta
+/// replays recharge it the same way the writer did.
+fn ensure_cert(spec: &ReaderSpawn, s: &mut Session) -> Result<()> {
+    match &spec.certify {
+        Some(cfg) => s.ensure_certified(cfg.clone()),
+        None => Ok(()),
+    }
 }
 
 /// What one command did to the reader's serve loop.
@@ -393,7 +414,10 @@ fn reader_main(
     // the writer), falling back to the deterministic recipe retrain if
     // the artifact is unavailable
     let built = match &init {
-        Some(path) => match SessionBuilder::restore_from(path) {
+        Some(path) => match SessionBuilder::restore_from(path).and_then(|mut s| {
+            ensure_cert(&spec, &mut s)?;
+            Ok(s)
+        }) {
             Ok(s) => {
                 stats.restored.store(1, Ordering::SeqCst);
                 stats.version.store(s.version(), Ordering::SeqCst);
@@ -560,6 +584,7 @@ fn rebuild(spec: &ReaderSpawn, init: &Option<PathBuf>, ctx: &ReaderCtx) -> Resul
         Some(s) => s,
         None => build_recipe(spec)?,
     };
+    ensure_cert(spec, &mut session)?;
     if let Some(wal) = &ctx.wal {
         artifact::wal_replay_onto(&mut session, wal)?;
     }

@@ -87,7 +87,8 @@ use super::metrics::Metrics;
 use super::readers::{CommitDelta, ReaderCmd, ReaderCtx, ReaderPool, ReaderSpawn, Supervision};
 use crate::config::HyperParams;
 use crate::session::{
-    artifact, Edit, Query, QueryCache, QueryReply, Session, SessionBuilder, ShardedSession,
+    artifact, CertifiedError, CertifyConfig, Edit, Query, QueryCache, QueryReply, Session,
+    SessionBuilder, ShardedSession,
 };
 
 /// What the service sends back for one served edit.
@@ -104,12 +105,18 @@ pub struct UpdateReply {
 }
 
 /// Why a request (edit or query) was not served.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Rejected {
     /// the bounded queue for this request's lane is full
     /// (`BatchPolicy::max_queue` / `max_query_queue`, or the command
     /// channel itself); back off and retry
     QueueFull { max_queue: usize },
+    /// the certified-deletion ledger cannot admit this edit: the (ε,δ)
+    /// budget or the deletion capacity is spent and the exhaustion
+    /// policy is `Reject`. Terminal for this serving run — retrying
+    /// cannot succeed; a fresh full retrain (or the `Retrain` policy)
+    /// resets the ledger.
+    BudgetExhausted { eps_spent: f64, epsilon: f64, deletions: u64, capacity: u64 },
     /// the pass (or validation) failed for this request
     Failed(String),
     /// the service stopped before (or while) serving the request
@@ -122,6 +129,11 @@ impl std::fmt::Display for Rejected {
             Rejected::QueueFull { max_queue } => {
                 write!(f, "queue full (max_queue={max_queue}); back off and retry")
             }
+            Rejected::BudgetExhausted { eps_spent, epsilon, deletions, capacity } => write!(
+                f,
+                "privacy budget exhausted (eps spent {eps_spent:.6}/{epsilon:.6}, \
+                 deletions {deletions}/{capacity}); retrain to reset the ledger"
+            ),
             Rejected::Failed(e) => write!(f, "request rejected: {e}"),
             Rejected::Stopped => write!(f, "service stopped"),
         }
@@ -226,6 +238,11 @@ pub struct ServiceConfig {
     /// deterministic fault injection (`--fault-seed`/`--fault-rate`);
     /// None (default) = disabled, every hazard site is a no-op branch.
     pub faults: Option<FaultConfig>,
+    /// certified-deletion config (`--epsilon`/`--delta`/…): every commit
+    /// becomes a certified deletion step charged against an (ε,δ) ledger,
+    /// and `Query::PrivacyBudget` / `Query::Certificate` open up. None
+    /// (default) = off, the serving plane is byte-identical to before.
+    pub certify: Option<CertifyConfig>,
 }
 
 /// Client handle to a running service.
@@ -278,6 +295,7 @@ impl ServiceHandle {
                     n_train: cfg.n_train,
                     n_test: cfg.n_test,
                     hp: cfg.hp.clone(),
+                    certify: cfg.certify.clone(),
                 },
                 ReaderCtx {
                     cache: cache.clone(),
@@ -498,12 +516,15 @@ impl Drop for SpawnArtifact {
 static SPAWN_SEQ: AtomicU64 = AtomicU64::new(0);
 
 fn build_fresh(cfg: &ServiceConfig) -> Result<Session> {
-    SessionBuilder::new(&cfg.model)
+    let mut b = SessionBuilder::new(&cfg.model)
         .seed(cfg.seed)
         .n_train(cfg.n_train)
         .n_test(cfg.n_test)
-        .hyper_params(cfg.hp.clone())
-        .build()
+        .hyper_params(cfg.hp.clone());
+    if let Some(c) = &cfg.certify {
+        b = b.certify(c.clone());
+    }
+    b.build()
 }
 
 fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Result<()> {
@@ -581,6 +602,20 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
             return Err(e);
         }
     };
+    // certification: a fresh build already carries the ledger (the
+    // builder applied it); a restored session adopts the config only if
+    // the artifact did not carry its own ledger — the RESTORED spent
+    // budget always wins over a fresh one, so recovery cannot launder
+    // budget. Runs before the spawn-artifact save so replicas inherit
+    // the same ledger.
+    if let Some(c) = &cfg.certify {
+        if let Err(e) = session.ensure_certified(c.clone()) {
+            for tx in &shared.delta_txs {
+                let _ = tx.send(ReaderCmd::Init(None));
+            }
+            return Err(e);
+        }
+    }
     // a recovered session resumes at its restored version — publish it
     // so cache keys and lag accounting start correct
     shared.latest.store(session.version(), Ordering::SeqCst);
@@ -708,6 +743,9 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                             st.reduce_seconds,
                             &st.per_shard,
                         );
+                    }
+                    if let Some(cs) = session.certified() {
+                        metrics.record_privacy(&cs.snapshot());
                     }
                     let _ = reply.send(metrics.clone());
                 }
@@ -872,9 +910,28 @@ fn worker(cfg: ServiceConfig, rx: Receiver<Command>, shared: WorkerShared) -> Re
                 Err(e) => {
                     // typed rejection, session untouched: clients may
                     // retry, subsequent commits are unaffected (nothing
-                    // was journaled, so rejections need no fsync)
+                    // was journaled, so rejections need no fsync). A
+                    // spent privacy ledger gets its own variant — it is
+                    // terminal for this run, retrying cannot succeed.
+                    let rej = match e.downcast_ref::<CertifiedError>() {
+                        Some(CertifiedError::BudgetExhausted {
+                            eps_spent,
+                            epsilon,
+                            deletions,
+                            capacity,
+                        }) => {
+                            metrics.record_budget_reject();
+                            Rejected::BudgetExhausted {
+                                eps_spent: *eps_spent,
+                                epsilon: *epsilon,
+                                deletions: *deletions,
+                                capacity: *capacity,
+                            }
+                        }
+                        _ => Rejected::Failed(e.to_string()),
+                    };
                     for p in &group {
-                        let _ = p.payload.reply.send(Err(Rejected::Failed(e.to_string())));
+                        let _ = p.payload.reply.send(Err(rej.clone()));
                     }
                 }
             }

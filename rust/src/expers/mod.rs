@@ -6,6 +6,7 @@
 //! budget; `--scale paper` restores the full sweep shapes.
 
 pub mod accuracy;
+pub mod certified;
 pub mod common;
 pub mod comparison;
 pub mod convergence;
@@ -30,13 +31,15 @@ pub fn run(ctx: &mut Ctx, id: &str) -> Result<String> {
         "d2" => hyper::d2(ctx),
         "d3" => comparison::d3(ctx),
         "thm1" => convergence::thm1(ctx),
+        "certified" => certified::certified(ctx),
         other => anyhow::bail!(
-            "unknown experiment {other:?}; have fig1 fig2 fig3 fig4 tab1 tab2 d1 d2 d3 thm1 all"
+            "unknown experiment {other:?}; have fig1 fig2 fig3 fig4 tab1 tab2 d1 d2 d3 thm1 \
+             certified all"
         ),
     }
 }
 
 /// All experiments in a sensible order.
 pub const ALL: &[&str] = &[
-    "fig1", "fig2", "fig3", "tab1", "fig4", "tab2", "d1", "d2", "d3", "thm1",
+    "fig1", "fig2", "fig3", "tab1", "fig4", "tab2", "d1", "d2", "d3", "thm1", "certified",
 ];

@@ -7,7 +7,8 @@
 //!   serve --model M --requests N run the unlearning service demo
 //!   query --model M --kind K     serve typed read queries next to edits
 //!                                (K: loss predict influence valuation
-//!                                 jackknife conformal robust)
+//!                                 jackknife conformal robust budget
+//!                                 certificate)
 //!   serve/query also take --readers R (replica reader pool) and
 //!   --cache C (version-keyed query memo cache capacity); both default 0;
 //!   serve additionally takes --checkpoint-every K (save an artifact to
@@ -17,6 +18,9 @@
 //!   (recover checkpoint + WAL before serving), and --fault-seed S /
 //!   --fault-rate R (deterministic fault injection for chaos runs;
 //!   injected pass faults are retried, so the demo still completes)
+//!   serve/query take --epsilon E [--delta D --sigma S --noise-seed N
+//!   --capacity C --exhausted reject|retrain] to certify every commit as
+//!   an (ε,δ)-accounted deletion step (off unless --epsilon is given)
 //!   save --model M [--commits K]  train, commit K edits, save an artifact
 //!   restore --path P             warm-restore a session from an artifact
 //!   replay --path P              re-derive from recipe + edit log, audit
@@ -126,7 +130,8 @@ fn main() -> Result<()> {
                 &[
                     "model", "requests", "t", "readers", "cache", "cache-bytes", "shards",
                     "checkpoint-every", "store", "checkpoint-keep", "wal", "restore-latest",
-                    "store-fresh", "fault-seed", "fault-rate",
+                    "store-fresh", "fault-seed", "fault-rate", "epsilon", "delta", "sigma",
+                    "noise-seed", "capacity", "exhausted",
                 ],
             );
             cmd_serve(&args)
@@ -148,7 +153,8 @@ fn main() -> Result<()> {
                 "query",
                 &[
                     "model", "kind", "t", "count", "alpha", "targets", "frac", "loo", "readers",
-                    "cache", "cache-bytes", "shards",
+                    "cache", "cache-bytes", "shards", "epsilon", "delta", "sigma", "noise-seed",
+                    "capacity", "exhausted", "version",
                 ],
             );
             cmd_query(&args)
@@ -322,6 +328,31 @@ fn cmd_delete(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the certified-deletion flags into a [`CertifyConfig`];
+/// certification is off unless `--epsilon` is given.
+fn certify_from_flags(args: &Args) -> Result<Option<deltagrad::session::CertifyConfig>> {
+    use deltagrad::session::{CertifyConfig, ExhaustionPolicy};
+    let Some(eps) = args.flag("epsilon") else { return Ok(None) };
+    let epsilon: f64 = eps.parse().context("--epsilon")?;
+    let delta: f64 = args.flag("delta").unwrap_or("1e-5").parse().context("--delta")?;
+    let mut cfg = CertifyConfig::new(epsilon, delta);
+    if let Some(s) = args.flag("sigma") {
+        cfg = cfg.sigma(s.parse().context("--sigma")?);
+    }
+    if let Some(s) = args.flag("noise-seed") {
+        cfg = cfg.noise_seed(s.parse().context("--noise-seed")?);
+    }
+    if let Some(c) = args.flag("capacity") {
+        cfg = cfg.capacity(c.parse().context("--capacity")?);
+    }
+    match args.flag("exhausted") {
+        None | Some("reject") => {}
+        Some("retrain") => cfg = cfg.policy(ExhaustionPolicy::Retrain),
+        Some(other) => anyhow::bail!("--exhausted {other:?}: use reject or retrain"),
+    }
+    Ok(Some(cfg))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.flag("model").unwrap_or("small").to_string();
     let n_req = args.usize_flag("requests", 10)?;
@@ -330,6 +361,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let fault_rate: f64 = args.flag("fault-rate").unwrap_or("0").parse().context("--fault-rate")?;
     let fault_seed = args.usize_flag("fault-seed", 0)? as u64;
     let faults_on = fault_rate > 0.0;
+    let certify = certify_from_flags(args)?;
     println!("spawning unlearning service for {model} ...");
     let svc = ServiceHandle::spawn(ServiceConfig {
         model: model.clone(),
@@ -350,6 +382,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         store_fresh: args.flag("store-fresh").map(|v| v != "false").unwrap_or(false),
         supervision: Supervision::default(),
         faults: faults_on.then(|| FaultConfig::new(fault_seed, fault_rate)),
+        certify,
     })?;
     let snap = svc.snapshot()?;
     println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
@@ -377,6 +410,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         println!("  edit {i} rejected (attempt {attempts}): {e}; retrying");
                         continue;
                     }
+                    Err(e @ Rejected::BudgetExhausted { .. }) => {
+                        // terminal for the run: retries cannot succeed,
+                        // so the demo degrades to read-only and reports
+                        println!("  edit {i} rejected: {e}");
+                        break;
+                    }
                     Err(e) => return Err(e.into()),
                 }
             }
@@ -387,11 +426,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map(|i| svc.update_async(Edit::delete_row(i)))
             .collect::<Result<_, _>>()?;
         for rx in rxs {
-            let rep = rx.recv()??;
-            println!(
-                "  committed v{} (group of {}, pass {:.2}s, {} exact / {} approx)",
-                rep.version, rep.group_size, rep.pass_seconds, rep.n_exact, rep.n_approx
-            );
+            match rx.recv().map_err(|_| Rejected::Stopped)? {
+                Ok(rep) => println!(
+                    "  committed v{} (group of {}, pass {:.2}s, {} exact / {} approx)",
+                    rep.version, rep.group_size, rep.pass_seconds, rep.n_exact, rep.n_approx
+                ),
+                Err(e @ Rejected::BudgetExhausted { .. }) => {
+                    // spent ledger: remaining edits are rejected typed,
+                    // the service itself keeps serving reads
+                    println!("  edit rejected: {e}");
+                }
+                Err(e) => return Err(e.into()),
+            }
         }
     }
     let snap = svc.snapshot()?;
@@ -439,6 +485,7 @@ fn cmd_query(args: &Args) -> Result<()> {
         store_fresh: false,
         supervision: Supervision::default(),
         faults: None,
+        certify: certify_from_flags(args)?,
     })?;
     let snap = svc.snapshot()?;
     println!("v{}: n={} test acc {:.4}", snap.version, snap.n_train, snap.test_accuracy);
@@ -474,9 +521,19 @@ fn cmd_query(args: &Args) -> Result<()> {
             },
             "conformal" => Query::Conformal { alpha, folds: 4, x: None },
             "robust" => Query::RobustSweep { frac },
+            "budget" => Query::PrivacyBudget,
+            "certificate" => Query::Certificate {
+                // default to the freshest certified commit: i edits have
+                // been committed before query i in the interleaved loop
+                version: match args.flag("version") {
+                    Some(v) => v.parse::<u64>().context("--version")?,
+                    None => i.max(1) as u64,
+                },
+            },
             other => anyhow::bail!(
                 "unknown query kind {other:?}; have \
-                 loss predict influence valuation jackknife conformal robust"
+                 loss predict influence valuation jackknife conformal robust \
+                 budget certificate"
             ),
         })
     };
@@ -484,7 +541,19 @@ fn cmd_query(args: &Args) -> Result<()> {
     // interleave reads with writes so the versioned replies show the
     // snapshot consistency the service guarantees
     for i in 0..count {
-        let rep = svc.query(mk_query(i)?)?;
+        let rep = match svc.query(mk_query(i)?) {
+            Ok(rep) => rep,
+            Err(e) => {
+                // a rejected query (unknown certificate version,
+                // certification off, …) is typed and non-fatal: the
+                // service keeps serving, so the demo keeps driving it
+                println!("  {kind} rejected: {e}");
+                if let Ok(up) = svc.update(Edit::delete_row(i)) {
+                    println!("  (edit committed v{})", up.version);
+                }
+                continue;
+            }
+        };
         let summary = match &rep.result {
             QueryResult::Loss { test_loss, test_accuracy, .. } => {
                 format!("test loss {test_loss:.4} acc {test_accuracy:.4}")
@@ -501,6 +570,20 @@ fn cmd_query(args: &Args) -> Result<()> {
                 format!("residual threshold {threshold:.4} at alpha={alpha}")
             }
             QueryResult::Robust(fit) => format!("pruned {} rows", fit.pruned.len()),
+            QueryResult::PrivacyBudget {
+                eps_spent,
+                eps_budget,
+                deletions,
+                capacity,
+                releases,
+                ..
+            } => format!(
+                "eps {eps_spent:.4}/{eps_budget:.4}, deletions {deletions}/{capacity}, \
+                 {releases} releases"
+            ),
+            QueryResult::Certificate { version, delta0, eps_hat, mechanism, .. } => {
+                format!("v{version}: delta0 {delta0:.3e} eps_hat {eps_hat:.4} ({mechanism})")
+            }
         };
         println!(
             "  {kind} @ v{} in {:.3}s (uploads {}, downloads {}): {summary}",

@@ -66,6 +66,9 @@ use crate::data::{Dataset, IndexSet};
 use crate::runtime::{Engine, TransferStats};
 use crate::train::{self, TrainOpts, Trajectory};
 
+use super::certified::{
+    CertificateRec, CertifiedState, CertifyConfig, ExhaustionPolicy, Mechanism, PrivacyAccountant,
+};
 use super::{Edit, RowCache, Session, SessionStats};
 
 pub const MAGIC: [u8; 4] = *b"DGAR";
@@ -183,6 +186,14 @@ pub struct Artifact {
     /// the section is simply absent, so single-session artifact bytes
     /// are unchanged and old artifacts decode as None)
     pub shard_layout: Option<ShardLayoutRec>,
+    /// certified-deletion plane of the saving session (config + spent
+    /// (ε,δ) ledger + certificate history). Like the shard layout this
+    /// is an OPTIONAL trailing canonical section — absent when
+    /// certification is off, so uncertified artifact bytes are
+    /// unchanged and old artifacts decode as None. Tagged with a
+    /// leading u64 = 1 (the shard section's leading u64 is its shard
+    /// count, always ≥ 2, so the tag spaces are disjoint).
+    pub certified: Option<CertifiedState>,
     /// FNV-1a over the canonical bytes (the content address)
     pub content_hash: u64,
 }
@@ -301,6 +312,44 @@ fn put_transfers(b: &mut Vec<u8>, t: &TransferStats) {
     put_u64(b, t.execs);
     put_u64(b, t.downloads);
     put_u64(b, t.download_floats);
+}
+
+fn put_certified(b: &mut Vec<u8>, cs: &CertifiedState) {
+    let c = &cs.config;
+    put_f64(b, c.epsilon);
+    put_f64(b, c.delta);
+    match c.sigma {
+        None => b.push(0),
+        Some(s) => {
+            b.push(1);
+            put_f64(b, s);
+        }
+    }
+    b.push(match c.mechanism {
+        Mechanism::Laplace => 0,
+        Mechanism::Gaussian => 1,
+    });
+    put_u64(b, c.noise_seed);
+    put_u64(b, c.capacity);
+    b.push(match c.policy {
+        ExhaustionPolicy::Reject => 0,
+        ExhaustionPolicy::Retrain => 1,
+    });
+    let a = &cs.acct;
+    put_f64(b, a.sum_eps);
+    put_f64(b, a.sum_eps_sq);
+    put_f64(b, a.sum_eps_adv);
+    put_f64(b, a.delta_spent);
+    put_u64(b, a.deletions);
+    put_u64(b, a.releases);
+    put_u64(b, a.retrains);
+    put_usize(b, cs.certs.len());
+    for rec in &cs.certs {
+        put_u64(b, rec.version);
+        put_f64(b, rec.delta0);
+        put_f64(b, rec.scale);
+        put_f64(b, rec.eps_hat);
+    }
 }
 
 fn put_edit(b: &mut Vec<u8>, e: &Edit) {
@@ -470,6 +519,53 @@ impl<'a> Rd<'a> {
         })
     }
 
+    fn get_certified(&mut self) -> Result<CertifiedState, ArtifactError> {
+        let epsilon = self.get_f64()?;
+        let delta = self.get_f64()?;
+        let sigma = match self.get_u8()? {
+            0 => None,
+            1 => Some(self.get_f64()?),
+            _ => return Err(ArtifactError::Malformed("bad sigma tag")),
+        };
+        let mechanism = match self.get_u8()? {
+            0 => Mechanism::Laplace,
+            1 => Mechanism::Gaussian,
+            _ => return Err(ArtifactError::Malformed("bad mechanism tag")),
+        };
+        let noise_seed = self.get_u64()?;
+        let capacity = self.get_u64()?;
+        let policy = match self.get_u8()? {
+            0 => ExhaustionPolicy::Reject,
+            1 => ExhaustionPolicy::Retrain,
+            _ => return Err(ArtifactError::Malformed("bad policy tag")),
+        };
+        let config =
+            CertifyConfig { epsilon, delta, sigma, mechanism, noise_seed, capacity, policy };
+        if config.validate().is_err() {
+            return Err(ArtifactError::Malformed("invalid certify config"));
+        }
+        let acct = PrivacyAccountant {
+            sum_eps: self.get_f64()?,
+            sum_eps_sq: self.get_f64()?,
+            sum_eps_adv: self.get_f64()?,
+            delta_spent: self.get_f64()?,
+            deletions: self.get_u64()?,
+            releases: self.get_u64()?,
+            retrains: self.get_u64()?,
+        };
+        let n_certs = self.get_count(32)?;
+        let mut certs = Vec::with_capacity(n_certs);
+        for _ in 0..n_certs {
+            certs.push(CertificateRec {
+                version: self.get_u64()?,
+                delta0: self.get_f64()?,
+                scale: self.get_f64()?,
+                eps_hat: self.get_f64()?,
+            });
+        }
+        Ok(CertifiedState { config, acct, certs })
+    }
+
     fn get_edit(&mut self, depth: usize) -> Result<Edit, ArtifactError> {
         if depth > MAX_EDIT_DEPTH {
             return Err(ArtifactError::Malformed("edit nesting too deep"));
@@ -518,6 +614,7 @@ impl Artifact {
             edits: s.edit_log.clone(),
             stats: s.stats(),
             shard_layout: None,
+            certified: s.certified.clone(),
             content_hash: 0,
         };
         a.content_hash = fnv1a(&a.canonical_bytes());
@@ -584,6 +681,14 @@ impl Artifact {
                 put_u64(&mut b, lo);
                 put_u64(&mut b, hi);
             }
+        }
+        // optional privacy-accounting section, after the shard layout
+        // (when both are present). Leading u64 tag = 1 — disjoint from
+        // the shard section's leading shard count (≥ 2) — so decoders
+        // can tell the trailing sections apart without a format bump.
+        if let Some(cs) = &self.certified {
+            put_u64(&mut b, 1);
+            put_certified(&mut b, cs);
         }
         b
     }
@@ -666,34 +771,52 @@ impl Artifact {
             commit_transfers: r.get_transfers()?,
             seconds: r.get_f64()?,
         };
-        // bytes past the stats are the optional shard-layout section
-        // (absent in S=1 and pre-sharding artifacts)
-        let shard_layout = if r.remaining() > 0 {
-            let shards = r.get_u64()?;
-            let n_ranges = r.get_count(16)?;
-            let mut ranges = Vec::with_capacity(n_ranges);
-            for _ in 0..n_ranges {
-                let lo = r.get_u64()?;
-                let hi = r.get_u64()?;
-                ranges.push((lo, hi));
-            }
-            if shards < 2 || ranges.len() as u64 != shards {
-                return Err(ArtifactError::Malformed("shard layout count mismatch"));
-            }
-            let mut expect = 0u64;
-            for &(lo, hi) in &ranges {
-                if lo != expect || hi < lo {
-                    return Err(ArtifactError::Malformed("shard ranges must tile contiguously"));
+        // bytes past the stats are the optional trailing sections,
+        // told apart by their leading u64: a shard-layout section leads
+        // with its shard count (≥ 2), a privacy-accounting section
+        // with the tag 1 (after the shard section when both present).
+        // Both absent in pre-extension artifacts.
+        let mut shard_layout = None;
+        let mut certified = None;
+        if r.remaining() > 0 {
+            let lead = r.get_u64()?;
+            if lead >= 2 {
+                let shards = lead;
+                let n_ranges = r.get_count(16)?;
+                let mut ranges = Vec::with_capacity(n_ranges);
+                for _ in 0..n_ranges {
+                    let lo = r.get_u64()?;
+                    let hi = r.get_u64()?;
+                    ranges.push((lo, hi));
                 }
-                expect = hi;
+                if ranges.len() as u64 != shards {
+                    return Err(ArtifactError::Malformed("shard layout count mismatch"));
+                }
+                let mut expect = 0u64;
+                for &(lo, hi) in &ranges {
+                    if lo != expect || hi < lo {
+                        return Err(ArtifactError::Malformed(
+                            "shard ranges must tile contiguously",
+                        ));
+                    }
+                    expect = hi;
+                }
+                if expect != base.n as u64 {
+                    return Err(ArtifactError::Malformed("shard ranges do not cover the base"));
+                }
+                shard_layout = Some(ShardLayoutRec { shards, ranges });
+                if r.remaining() > 0 {
+                    if r.get_u64()? != 1 {
+                        return Err(ArtifactError::Malformed("bad optional section tag"));
+                    }
+                    certified = Some(r.get_certified()?);
+                }
+            } else if lead == 1 {
+                certified = Some(r.get_certified()?);
+            } else {
+                return Err(ArtifactError::Malformed("bad optional section tag"));
             }
-            if expect != base.n as u64 {
-                return Err(ArtifactError::Malformed("shard ranges do not cover the base"));
-            }
-            Some(ShardLayoutRec { shards, ranges })
-        } else {
-            None
-        };
+        }
         if r.remaining() != 0 {
             return Err(ArtifactError::Malformed("trailing bytes in canonical section"));
         }
@@ -730,6 +853,7 @@ impl Artifact {
             edits,
             stats,
             shard_layout,
+            certified,
             content_hash: expected,
         })
     }
@@ -1398,6 +1522,9 @@ pub(crate) fn restore_artifact_in(a: Artifact, eng: &mut Engine) -> Result<Sessi
         recipe_n_train: a.recipe.n_train,
         recipe_n_test: a.recipe.n_test,
         edit_log: a.edits,
+        // the artifact's spent (ε,δ) ledger continues exactly where the
+        // saving session left it — restore never re-opens spent budget
+        certified: a.certified,
     })
 }
 
@@ -1438,6 +1565,14 @@ pub(crate) fn replay_artifact_in(a: &Artifact, eng: &mut Engine) -> Result<Sessi
     s.seed = a.recipe.seed;
     s.recipe_n_train = a.recipe.n_train;
     s.recipe_n_test = a.recipe.n_test;
+    // a certified artifact replays with a FRESH ledger under the same
+    // config: re-committing the edit log recharges it in commit order,
+    // so the replayed accountant must land on the artifact's bits
+    // (audited by `divergence`)
+    s.certified = a
+        .certified
+        .as_ref()
+        .map(|cs| CertifiedState::new(cs.config.clone()));
     for e in &a.edits {
         s.commit(e.clone())?;
     }
@@ -1483,6 +1618,12 @@ pub fn divergence(a: &Artifact, s: &Session) -> Vec<String> {
     }
     if s.added.n != a.added.n || !f32s_eq(&s.added.x, &a.added.x) || s.added.y != a.added.y {
         bad.push("added".to_string());
+    }
+    // the certified ledger is canonical state too: a replayed session
+    // must recharge to the artifact's exact accountant bits (f64
+    // PartialEq — every charge is deterministic host arithmetic)
+    if s.certified != a.certified {
+        bad.push("certified".to_string());
     }
     bad
 }
@@ -1568,10 +1709,106 @@ mod tests {
                 seconds: 0.75,
             },
             shard_layout: None,
+            certified: None,
             content_hash: 0,
         };
         a.content_hash = fnv1a(&a.canonical_bytes());
         a
+    }
+
+    fn sample_certified() -> CertifiedState {
+        let mut cs = CertifiedState::new(
+            CertifyConfig::new(1.0, 1e-4)
+                .capacity(8)
+                .noise_seed(0x5EED)
+                .policy(ExhaustionPolicy::Retrain),
+        );
+        cs.charge(1, 1e-3, 4, 1);
+        cs.charge(2, 2e-3, 4, 1);
+        cs
+    }
+
+    #[test]
+    fn certified_section_round_trips_bitwise() {
+        let mut a = sample_artifact();
+        a.certified = Some(sample_certified());
+        a.content_hash = fnv1a(&a.canonical_bytes());
+        let bytes = a.encode();
+        let b = Artifact::decode(&bytes).unwrap();
+        assert_eq!(b.encode(), bytes);
+        let cs = b.certified.expect("certified section decoded");
+        assert_eq!(cs, sample_certified());
+        assert_eq!(cs.certs.len(), 2);
+        assert_eq!(cs.acct.deletions, 2);
+        assert_eq!(cs.config.policy, ExhaustionPolicy::Retrain);
+    }
+
+    #[test]
+    fn absent_certified_section_leaves_bytes_unchanged() {
+        // an uncertified artifact must encode EXACTLY as before the
+        // privacy section existed (and decode back to None)
+        let a = sample_artifact();
+        let mut b = sample_artifact();
+        b.certified = None;
+        assert_eq!(a.encode(), b.encode());
+        assert!(Artifact::decode(&a.encode()).unwrap().certified.is_none());
+    }
+
+    #[test]
+    fn certified_section_is_hash_covered() {
+        let mut a = sample_artifact();
+        a.certified = Some(sample_certified());
+        let h1 = fnv1a(&a.canonical_bytes());
+        a.certified.as_mut().unwrap().acct.deletions += 1;
+        let h2 = fnv1a(&a.canonical_bytes());
+        assert_ne!(h1, h2, "ledger bits must change the content address");
+        assert_ne!(h1, sample_artifact().content_hash);
+    }
+
+    #[test]
+    fn certified_bad_tags_are_malformed() {
+        let mut a = sample_artifact();
+        a.certified = Some(sample_certified());
+        let good = a.canonical_bytes();
+        let reencode = |canon: &[u8]| {
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(&MAGIC);
+            put_u32(&mut bytes, FORMAT_VERSION);
+            put_u64(&mut bytes, fnv1a(canon));
+            put_u64(&mut bytes, canon.len() as u64);
+            bytes.extend_from_slice(canon);
+            bytes
+        };
+        // the section's leading u64 tag must be 1 (0 is reserved)
+        let mut zero_tag = good.clone();
+        let tag_at = good.len() - certified_section_len(a.certified.as_ref().unwrap());
+        zero_tag[tag_at..tag_at + 8].copy_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(
+            Artifact::decode(&reencode(&zero_tag)).unwrap_err(),
+            ArtifactError::Malformed("bad optional section tag")
+        ));
+        // mechanism byte lives after tag(8) + eps(8) + delta(8) + sigma tag(1)
+        let mut bad_mech = good.clone();
+        bad_mech[tag_at + 25] = 9;
+        assert!(matches!(
+            Artifact::decode(&reencode(&bad_mech)).unwrap_err(),
+            ArtifactError::Malformed("bad mechanism tag")
+        ));
+        // policy byte: tag(8) + eps(8) + delta(8) + sigma tag(1) +
+        // mech(1) + noise_seed(8) + capacity(8)
+        let mut bad_policy = good.clone();
+        bad_policy[tag_at + 42] = 7;
+        assert!(matches!(
+            Artifact::decode(&reencode(&bad_policy)).unwrap_err(),
+            ArtifactError::Malformed("bad policy tag")
+        ));
+    }
+
+    fn certified_section_len(cs: &CertifiedState) -> usize {
+        let mut b = Vec::new();
+        put_u64(&mut b, 1);
+        put_certified(&mut b, cs);
+        b.len()
     }
 
     #[test]

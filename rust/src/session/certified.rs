@@ -1,0 +1,621 @@
+//! Certified deletion: (ε,δ)-accounted unlearning on the commit path.
+//!
+//! DeltaGrad §5.1 / appendix B.1 bounds the gap between the incremental
+//! result w^I and the true retrain w^U by δ₀ = O((r/n)²); releasing
+//! w^I + calibrated noise is then an (ε,δ)-approximate deletion.
+//! Descent-to-Delete (Neel et al., 2020) extends this to a *stream* of
+//! deletions: each noisy release spends privacy budget under
+//! composition, and after a bounded number of deletions the server must
+//! fall back to a full retrain (which re-zeroes the deletion error).
+//!
+//! This module is the accounting half of that protocol, wired into
+//! [`super::Session::commit`] when the session was built with
+//! [`super::SessionBuilder::certify`]:
+//!
+//! * [`CertifyConfig`] — the (ε, δ) budget, the release mechanism
+//!   (Laplace or Gaussian) and its noise scale (fixed σ, or
+//!   auto-calibrated per release so each release spends exactly
+//!   ε/capacity), the deterministic `noise_seed`, the deletion
+//!   `capacity`, and the exhaustion [`ExhaustionPolicy`].
+//! * [`PrivacyAccountant`] — an advanced-composition (ε,δ) ledger plus
+//!   the Descent-to-Delete deletion counter. Spent ε is the min of
+//!   linear and advanced composition.
+//! * [`CertificateRec`] — one per certified commit: the measured δ₀,
+//!   the noise scale actually used, and the per-release ε̂.
+//! * [`release`] — the released (noised) model, drawn DETERMINISTICALLY
+//!   per `(noise_seed, version, coordinate)` via splitmix64 (the same
+//!   discipline as `coordinator::faults`). Internal session state is
+//!   never noised, so WAL replay, artifact replay, and reader replicas
+//!   stay bitwise — and every replica reproduces the identical release.
+//!
+//! The admission check ([`CertifiedState::admit`]) runs BEFORE any
+//! commit-side mutation: an exhausted ledger either rejects the commit
+//! with the typed [`CertifiedError::BudgetExhausted`] (surfaced by the
+//! service as `Rejected::BudgetExhausted`) or — under
+//! [`ExhaustionPolicy::Retrain`] — routes the commit through a fresh
+//! full retrain that resets the ledger (δ₀ = 0 for that release).
+//! Charging happens inside `commit` itself, so replaying the same edit
+//! history (WAL recovery, reader deltas, `artifact::replay`) recharges
+//! the ledger deterministically and lands on identical accountant bits.
+
+use std::fmt;
+
+/// Release mechanism for the noised model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mechanism {
+    /// i.i.d. Laplace(b) per coordinate; pure-ε via the ℓ₁ sensitivity
+    /// bound √p·δ₀ (appendix B.1).
+    Laplace,
+    /// i.i.d. N(0, σ²) per coordinate; (ε, δ_step) via the analytic
+    /// Gaussian-mechanism bound with ℓ₂ sensitivity δ₀.
+    Gaussian,
+}
+
+impl Mechanism {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mechanism::Laplace => "laplace",
+            Mechanism::Gaussian => "gaussian",
+        }
+    }
+}
+
+/// What an exhausted ledger does to the NEXT commit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExhaustionPolicy {
+    /// reject the commit typed ([`CertifiedError::BudgetExhausted`])
+    Reject,
+    /// run the commit as a fresh full retrain and reset the ledger
+    /// (Descent-to-Delete's forced re-train)
+    Retrain,
+}
+
+impl ExhaustionPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExhaustionPolicy::Reject => "reject",
+            ExhaustionPolicy::Retrain => "retrain",
+        }
+    }
+}
+
+/// Knobs of the certified-deletion subsystem (builder:
+/// [`super::SessionBuilder::certify`]; CLI: `--epsilon`/`--delta`/
+/// `--sigma`/`--noise-seed`/`--capacity`/`--exhausted`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CertifyConfig {
+    /// total privacy budget ε (> 0)
+    pub epsilon: f64,
+    /// total privacy budget δ ∈ (0, 1); also the advanced-composition
+    /// slack (δ/2) and, for Gaussian releases, the per-release
+    /// δ_step = δ / (2·capacity) pool
+    pub delta: f64,
+    /// fixed per-coordinate noise scale (Laplace b / Gaussian σ).
+    /// `None` auto-calibrates each release so it spends exactly
+    /// ε/capacity at the measured δ₀.
+    pub sigma: Option<f64>,
+    pub mechanism: Mechanism,
+    /// seed of the deterministic release-noise stream
+    pub noise_seed: u64,
+    /// deletions admitted before the ledger is exhausted (≥ 1)
+    pub capacity: u64,
+    pub policy: ExhaustionPolicy,
+}
+
+impl CertifyConfig {
+    /// Defaults: auto-calibrated Gaussian releases, capacity 32,
+    /// reject-on-exhaustion, noise seed 0x5EED.
+    pub fn new(epsilon: f64, delta: f64) -> Self {
+        CertifyConfig {
+            epsilon,
+            delta,
+            sigma: None,
+            mechanism: Mechanism::Gaussian,
+            noise_seed: 0x5EED,
+            capacity: 32,
+            policy: ExhaustionPolicy::Reject,
+        }
+    }
+
+    pub fn sigma(mut self, sigma: f64) -> Self {
+        self.sigma = Some(sigma);
+        self
+    }
+
+    pub fn mechanism(mut self, m: Mechanism) -> Self {
+        self.mechanism = m;
+        self
+    }
+
+    pub fn noise_seed(mut self, seed: u64) -> Self {
+        self.noise_seed = seed;
+        self
+    }
+
+    pub fn capacity(mut self, capacity: u64) -> Self {
+        self.capacity = capacity;
+        self
+    }
+
+    pub fn policy(mut self, p: ExhaustionPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// Typed validation (the builder and the artifact decoder both call
+    /// this; bad client knobs must reject, never panic).
+    pub fn validate(&self) -> Result<(), CertifiedError> {
+        if !(self.epsilon.is_finite() && self.epsilon > 0.0) {
+            return Err(CertifiedError::BadConfig("epsilon must be finite and > 0"));
+        }
+        if !(self.delta.is_finite() && self.delta > 0.0 && self.delta < 1.0) {
+            return Err(CertifiedError::BadConfig("delta must be in (0, 1)"));
+        }
+        if let Some(s) = self.sigma {
+            if !(s.is_finite() && s > 0.0) {
+                return Err(CertifiedError::BadConfig("sigma must be finite and > 0"));
+            }
+        }
+        if self.capacity == 0 {
+            return Err(CertifiedError::BadConfig("capacity must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+/// Typed failures of the certified plane. The service worker downcasts
+/// commit errors to this type to surface `Rejected::BudgetExhausted`
+/// instead of an opaque string.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CertifiedError {
+    /// the ledger cannot admit another certified deletion
+    BudgetExhausted {
+        eps_spent: f64,
+        epsilon: f64,
+        deletions: u64,
+        capacity: u64,
+    },
+    /// structurally invalid [`CertifyConfig`]
+    BadConfig(&'static str),
+}
+
+impl fmt::Display for CertifiedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CertifiedError::BudgetExhausted { eps_spent, epsilon, deletions, capacity } => write!(
+                f,
+                "privacy budget exhausted (eps spent {eps_spent:.6}/{epsilon:.6}, \
+                 deletions {deletions}/{capacity})"
+            ),
+            CertifiedError::BadConfig(why) => write!(f, "bad certify config: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for CertifiedError {}
+
+/// The (ε,δ) ledger plus the Descent-to-Delete deletion counter.
+/// Running sums keep advanced composition O(1) per release.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PrivacyAccountant {
+    /// Σ ε̂ᵢ (linear composition)
+    pub sum_eps: f64,
+    /// Σ ε̂ᵢ² (advanced-composition quadratic term)
+    pub sum_eps_sq: f64,
+    /// Σ ε̂ᵢ·(e^{ε̂ᵢ} − 1) (advanced-composition drift term)
+    pub sum_eps_adv: f64,
+    /// δ charged by Gaussian releases (δ_step per noised release)
+    pub delta_spent: f64,
+    /// deletions certified since the last full retrain
+    pub deletions: u64,
+    /// certified releases (one per committed edit)
+    pub releases: u64,
+    /// ledger resets via [`ExhaustionPolicy::Retrain`]
+    pub retrains: u64,
+}
+
+impl PrivacyAccountant {
+    /// Spent ε under the better of linear and advanced composition with
+    /// slack δ′ (Dwork–Rothblum–Vadhan; δ′ comes out of the δ budget).
+    pub fn eps_spent(&self, delta_slack: f64) -> f64 {
+        if self.sum_eps <= 0.0 {
+            return 0.0;
+        }
+        let adv =
+            (2.0 * (1.0 / delta_slack).ln() * self.sum_eps_sq).sqrt() + self.sum_eps_adv;
+        self.sum_eps.min(adv)
+    }
+}
+
+/// One certified commit's release record (served by
+/// `Query::Certificate{version}`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CertificateRec {
+    /// committed version this release certifies
+    pub version: u64,
+    /// measured deletion-error bound ‖w^I − w^U‖ ≤ δ₀
+    pub delta0: f64,
+    /// per-coordinate noise scale actually drawn (0 = exact release)
+    pub scale: f64,
+    /// per-release privacy loss charged to the ledger
+    pub eps_hat: f64,
+}
+
+/// Point-in-time ledger view (the `Query::PrivacyBudget` payload and
+/// the metrics overlay's source).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BudgetSnapshot {
+    pub eps_spent: f64,
+    pub eps_budget: f64,
+    pub delta_spent: f64,
+    pub delta_budget: f64,
+    pub deletions: u64,
+    pub capacity: u64,
+    pub releases: u64,
+    pub retrains: u64,
+}
+
+/// What the pre-commit admission check decided.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// budget available: run the normal DeltaGrad pass
+    Proceed,
+    /// ledger exhausted under [`ExhaustionPolicy::Retrain`]: run the
+    /// commit as a full retrain and reset the ledger
+    Retrain,
+}
+
+/// The session-resident certified plane: config + ledger + certificate
+/// history. Rides the artifact's optional privacy section, so spent
+/// budget survives checkpoints, restore, and WAL recovery.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CertifiedState {
+    pub config: CertifyConfig,
+    pub acct: PrivacyAccountant,
+    /// one record per certified commit, in version order (full history —
+    /// the ledger's audit trail; O(commits) host memory, never device)
+    pub certs: Vec<CertificateRec>,
+}
+
+impl CertifiedState {
+    pub fn new(config: CertifyConfig) -> Self {
+        CertifiedState { config, acct: PrivacyAccountant::default(), certs: Vec::new() }
+    }
+
+    /// Advanced-composition slack δ′ = δ/2 (the other half feeds the
+    /// Gaussian per-release δ_step pool).
+    fn delta_slack(&self) -> f64 {
+        self.config.delta / 2.0
+    }
+
+    /// Per-release δ_step for Gaussian releases.
+    fn delta_step(&self) -> f64 {
+        self.config.delta / (2.0 * self.config.capacity as f64)
+    }
+
+    /// MUST run before any commit-side mutation: decides whether the
+    /// ledger can admit an edit deleting `r_del` rows. Deterministic in
+    /// the ledger state, so WAL replay and reader replicas reach the
+    /// same decision at the same version.
+    pub fn admit(&self, r_del: u64) -> Result<Admission, CertifiedError> {
+        let eps = self.acct.eps_spent(self.delta_slack());
+        let exhausted = self.acct.deletions + r_del > self.config.capacity
+            || eps >= self.config.epsilon
+            || self.acct.delta_spent >= self.config.delta / 2.0;
+        if !exhausted {
+            return Ok(Admission::Proceed);
+        }
+        match self.config.policy {
+            ExhaustionPolicy::Retrain => Ok(Admission::Retrain),
+            ExhaustionPolicy::Reject => Err(CertifiedError::BudgetExhausted {
+                eps_spent: eps,
+                epsilon: self.config.epsilon,
+                deletions: self.acct.deletions,
+                capacity: self.config.capacity,
+            }),
+        }
+    }
+
+    /// Reset the ledger after a policy-driven full retrain (the fresh
+    /// model has zero residual deletion error).
+    pub fn note_retrain(&mut self) {
+        self.acct.sum_eps = 0.0;
+        self.acct.sum_eps_sq = 0.0;
+        self.acct.sum_eps_adv = 0.0;
+        self.acct.delta_spent = 0.0;
+        self.acct.deletions = 0;
+        self.acct.retrains += 1;
+    }
+
+    /// Charge one certified release: derive (scale, ε̂) from the
+    /// measured δ₀, update the ledger, and record the certificate.
+    /// δ₀ = 0 (a full retrain, or a degenerate zero gradient) releases
+    /// exactly — zero noise, zero ε̂, zero δ charge.
+    pub fn charge(&mut self, version: u64, delta0: f64, p: usize, r_del: u64) -> CertificateRec {
+        let eps_r = self.config.epsilon / self.config.capacity as f64;
+        let (scale, eps_hat) = if !(delta0 > 0.0) {
+            (0.0, 0.0)
+        } else {
+            match self.config.mechanism {
+                Mechanism::Laplace => {
+                    // ℓ₁ sensitivity √p·δ₀ (appendix B.1)
+                    let sens1 = (p as f64).sqrt() * delta0;
+                    match self.config.sigma {
+                        Some(b) => (b, sens1 / b),
+                        None => (sens1 / eps_r, eps_r),
+                    }
+                }
+                Mechanism::Gaussian => {
+                    // classic Gaussian mechanism at (ε̂, δ_step)
+                    let c = (2.0 * (1.25 / self.delta_step()).ln()).sqrt();
+                    match self.config.sigma {
+                        Some(s) => (s, delta0 * c / s),
+                        None => (delta0 * c / eps_r, eps_r),
+                    }
+                }
+            }
+        };
+        self.acct.sum_eps += eps_hat;
+        self.acct.sum_eps_sq += eps_hat * eps_hat;
+        self.acct.sum_eps_adv += eps_hat * (eps_hat.exp() - 1.0);
+        if self.config.mechanism == Mechanism::Gaussian && scale > 0.0 {
+            self.acct.delta_spent += self.delta_step();
+        }
+        self.acct.deletions += r_del;
+        self.acct.releases += 1;
+        let rec = CertificateRec { version, delta0, scale, eps_hat };
+        self.certs.push(rec.clone());
+        rec
+    }
+
+    /// The certificate for `version`, if that version was a certified
+    /// commit.
+    pub fn certificate(&self, version: u64) -> Option<&CertificateRec> {
+        self.certs.iter().find(|c| c.version == version)
+    }
+
+    pub fn snapshot(&self) -> BudgetSnapshot {
+        BudgetSnapshot {
+            eps_spent: self.acct.eps_spent(self.delta_slack()),
+            eps_budget: self.config.epsilon,
+            delta_spent: self.acct.delta_spent,
+            delta_budget: self.config.delta,
+            deletions: self.acct.deletions,
+            capacity: self.config.capacity,
+            releases: self.acct.releases,
+            retrains: self.acct.retrains,
+        }
+    }
+}
+
+/// The paper's deletion-error bound, measured against the resident
+/// gradient norm: δ₀ = (r/n)² · ‖ḡ‖ · lr · T, with ‖ḡ‖ the average
+/// gradient norm of the pass's LAST exact full evaluation — read from
+/// the `[g; sums4; comps4]` accumulator tail the commit already
+/// downloads, so the certificate costs ZERO extra device transfers.
+pub fn deletion_error_bound(
+    r: f64,
+    n_new: f64,
+    gnorm2: f64,
+    cnt: f64,
+    lr: f32,
+    t: usize,
+) -> f64 {
+    if n_new <= 0.0 {
+        return 0.0;
+    }
+    let gnorm = gnorm2.max(0.0).sqrt() / cnt.max(1.0);
+    let ratio = r / n_new;
+    ratio * ratio * gnorm * lr as f64 * t as f64
+}
+
+// --- deterministic release noise ---------------------------------------
+//
+// Same splitmix64 discipline as `coordinator::faults`: every coordinate
+// of every release is a pure hash of (noise_seed, version, index) — no
+// sequential RNG state, so the identical release is reproducible from
+// any replica, any restore, any replay, in any order.
+
+const NOISE_SALT: u64 = 0x7bc5_a1e6_ce01_9d3b;
+
+#[inline]
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[inline]
+fn draw(noise_seed: u64, version: u64, i: u64) -> u64 {
+    splitmix64(
+        noise_seed
+            ^ NOISE_SALT
+            ^ version.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ i.wrapping_mul(0xc2b2_ae3d_27d4_eb4f),
+    )
+}
+
+/// 53 uniform bits mapped into the OPEN interval (0, 1) — never 0, so
+/// the log transforms below stay finite.
+#[inline]
+fn unit_open(h: u64) -> f64 {
+    ((h >> 11) as f64 + 0.5) * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The released model for `(w, version)`: `w` plus per-coordinate noise
+/// at `scale` (Laplace b or Gaussian σ), keyed by
+/// `(noise_seed, version, coordinate)`. `scale <= 0` releases exactly.
+pub fn release(w: &[f32], mech: Mechanism, scale: f64, noise_seed: u64, version: u64) -> Vec<f32> {
+    if scale <= 0.0 {
+        return w.to_vec();
+    }
+    match mech {
+        Mechanism::Laplace => w
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| {
+                let u = unit_open(draw(noise_seed, version, i as u64)) - 0.5;
+                let lap = -scale * u.signum() * (1.0 - 2.0 * u.abs()).ln();
+                (x as f64 + lap) as f32
+            })
+            .collect(),
+        Mechanism::Gaussian => w
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| {
+                let u1 = unit_open(draw(noise_seed, version, 2 * i as u64));
+                let u2 = unit_open(draw(noise_seed, version, 2 * i as u64 + 1));
+                let z = (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+                (x as f64 + scale * z) as f32
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CertifyConfig {
+        CertifyConfig::new(1.0, 1e-4).capacity(4)
+    }
+
+    #[test]
+    fn config_validation_is_typed() {
+        assert!(cfg().validate().is_ok());
+        let bad = |c: CertifyConfig| matches!(c.validate(), Err(CertifiedError::BadConfig(_)));
+        assert!(bad(CertifyConfig::new(0.0, 1e-4)));
+        assert!(bad(CertifyConfig::new(f64::NAN, 1e-4)));
+        assert!(bad(CertifyConfig::new(1.0, 0.0)));
+        assert!(bad(CertifyConfig::new(1.0, 1.0)));
+        assert!(bad(cfg().capacity(0)));
+        assert!(bad(cfg().sigma(0.0)));
+        assert!(bad(cfg().sigma(f64::INFINITY)));
+    }
+
+    #[test]
+    fn capacity_boundary_admits_n_and_rejects_n_plus_one() {
+        let mut cs = CertifiedState::new(cfg()); // capacity 4
+        for v in 1..=4u64 {
+            assert_eq!(cs.admit(1).unwrap(), Admission::Proceed, "commit {v}");
+            cs.charge(v, 1e-4, 16, 1);
+        }
+        match cs.admit(1) {
+            Err(CertifiedError::BudgetExhausted { deletions, capacity, .. }) => {
+                assert_eq!((deletions, capacity), (4, 4));
+            }
+            other => panic!("expected BudgetExhausted, got {other:?}"),
+        }
+        // a zero-deletion edit (pure add) still needs eps headroom but
+        // does not consume capacity
+        assert!(cs.admit(0).is_err(), "eps is also exhausted at capacity");
+    }
+
+    #[test]
+    fn retrain_policy_resets_the_ledger() {
+        let mut cs = CertifiedState::new(cfg().policy(ExhaustionPolicy::Retrain));
+        for v in 1..=4u64 {
+            cs.charge(v, 1e-4, 16, 1);
+        }
+        assert_eq!(cs.admit(1).unwrap(), Admission::Retrain);
+        cs.note_retrain();
+        // full retrain: δ₀ = 0, free release, deletion counted fresh
+        let rec = cs.charge(5, 0.0, 16, 1);
+        assert_eq!(rec.scale, 0.0);
+        assert_eq!(rec.eps_hat, 0.0);
+        assert_eq!(cs.acct.deletions, 1);
+        assert_eq!(cs.acct.retrains, 1);
+        assert_eq!(cs.admit(1).unwrap(), Admission::Proceed);
+    }
+
+    #[test]
+    fn ledger_is_monotone_and_auto_calibrates_to_eps_per_release() {
+        let mut cs = CertifiedState::new(cfg());
+        let mut last = 0.0;
+        for v in 1..=4u64 {
+            let rec = cs.charge(v, 1e-3, 64, 1);
+            assert!((rec.eps_hat - 0.25).abs() < 1e-12, "eps/capacity per release");
+            assert!(rec.scale > 0.0);
+            let eps = cs.acct.eps_spent(cs.delta_slack());
+            assert!(eps > last, "ledger must be strictly monotone");
+            last = eps;
+        }
+        assert!(last <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn fixed_sigma_measures_eps_hat_from_delta0() {
+        let mut cs = CertifiedState::new(cfg().mechanism(Mechanism::Laplace).sigma(0.5));
+        let rec = cs.charge(1, 1e-2, 100, 1);
+        // ℓ₁ sensitivity √100·δ₀ = 0.1; ε̂ = 0.1 / 0.5
+        assert!((rec.eps_hat - 0.2).abs() < 1e-12);
+        assert_eq!(rec.scale, 0.5);
+    }
+
+    #[test]
+    fn advanced_composition_beats_linear_for_many_small_releases() {
+        let mut acct = PrivacyAccountant::default();
+        let e = 0.01;
+        for _ in 0..400 {
+            acct.sum_eps += e;
+            acct.sum_eps_sq += e * e;
+            acct.sum_eps_adv += e * (e.exp() - 1.0);
+        }
+        let spent = acct.eps_spent(1e-5);
+        assert!(spent < acct.sum_eps, "advanced bound must win: {spent} vs {}", acct.sum_eps);
+    }
+
+    #[test]
+    fn release_is_deterministic_per_seed_and_version() {
+        let w: Vec<f32> = (0..64).map(|i| i as f32 * 0.125 - 4.0).collect();
+        let a = release(&w, Mechanism::Gaussian, 0.1, 7, 3);
+        let b = release(&w, Mechanism::Gaussian, 0.1, 7, 3);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // a different version (or seed) draws a different stream
+        let c = release(&w, Mechanism::Gaussian, 0.1, 7, 4);
+        let d = release(&w, Mechanism::Gaussian, 0.1, 8, 3);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        // zero scale releases exactly
+        let e = release(&w, Mechanism::Laplace, 0.0, 7, 3);
+        assert_eq!(e, w);
+    }
+
+    #[test]
+    fn release_noise_tracks_the_requested_scale() {
+        let w = vec![0.0f32; 20_000];
+        let z = release(&w, Mechanism::Laplace, 2.0, 11, 1);
+        let mean_abs: f64 = z.iter().map(|x| x.abs() as f64).sum::<f64>() / z.len() as f64;
+        assert!((mean_abs - 2.0).abs() < 0.1, "E|Laplace(2)| = 2, got {mean_abs}");
+        let g = release(&w, Mechanism::Gaussian, 0.5, 11, 1);
+        let var: f64 = g.iter().map(|x| (x as f64) * (x as f64)).sum::<f64>() / g.len() as f64;
+        assert!((var - 0.25).abs() < 0.02, "Var N(0, 0.5²) = 0.25, got {var}");
+    }
+
+    #[test]
+    fn deletion_error_bound_scales_quadratically_in_r_over_n() {
+        let b1 = deletion_error_bound(1.0, 1000.0, 4.0, 1000.0, 0.1, 50);
+        let b2 = deletion_error_bound(2.0, 1000.0, 4.0, 1000.0, 0.1, 50);
+        assert!((b2 / b1 - 4.0).abs() < 1e-9, "doubling r quadruples the bound");
+        assert_eq!(deletion_error_bound(1.0, 0.0, 4.0, 10.0, 0.1, 50), 0.0);
+        assert!(b1 > 0.0);
+    }
+
+    #[test]
+    fn snapshot_reports_the_ledger() {
+        let mut cs = CertifiedState::new(cfg());
+        cs.charge(1, 1e-3, 16, 1);
+        let s = cs.snapshot();
+        assert_eq!(s.capacity, 4);
+        assert_eq!(s.deletions, 1);
+        assert_eq!(s.releases, 1);
+        assert_eq!(s.eps_budget, 1.0);
+        assert!(s.eps_spent > 0.0);
+        assert_eq!(cs.certificate(1).unwrap().version, 1);
+        assert!(cs.certificate(9).is_none());
+    }
+}

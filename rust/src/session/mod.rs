@@ -50,11 +50,16 @@
 //! counts) is tracked in [`SessionStats`].
 
 pub mod artifact;
+pub mod certified;
 pub mod query;
 pub mod query_cache;
 pub mod sharded;
 
 pub use artifact::{Artifact, ArtifactError, SaveReport, WalRecord, WalWriter};
+pub use certified::{
+    BudgetSnapshot, CertificateRec, CertifiedError, CertifiedState, CertifyConfig,
+    ExhaustionPolicy, Mechanism, PrivacyAccountant,
+};
 pub use query::{query, JackknifeFunctional, Query, QueryKind, QueryReply, QueryResult};
 pub use query_cache::{QueryCache, QueryCacheStats};
 pub use sharded::{ShardLayout, ShardedSession, ShardedStats, SubEdit};
@@ -356,6 +361,7 @@ pub struct SessionBuilder {
     data: Option<(Dataset, Dataset)>,
     compact_watermark: usize,
     shards: usize,
+    certify: Option<certified::CertifyConfig>,
 }
 
 impl SessionBuilder {
@@ -369,7 +375,17 @@ impl SessionBuilder {
             data: None,
             compact_watermark: TAIL_COMPACT_WATERMARK,
             shards: 1,
+            certify: None,
         }
+    }
+
+    /// Turn every commit into a certified deletion step (see
+    /// [`certified`]): δ₀ certificate, deterministic release noise, and
+    /// (ε,δ) accounting with a bounded deletion capacity. `None` (the
+    /// default) leaves the commit path byte-identical to today.
+    pub fn certify(mut self, cfg: certified::CertifyConfig) -> Self {
+        self.certify = Some(cfg);
+        self
     }
 
     /// Partition the base dataset across S worker shards (parallel
@@ -451,6 +467,10 @@ impl SessionBuilder {
         s.seed = self.seed;
         s.recipe_n_train = self.n_train;
         s.recipe_n_test = self.n_test;
+        if let Some(cfg) = self.certify {
+            cfg.validate().map_err(anyhow::Error::new)?;
+            s.certified = Some(certified::CertifiedState::new(cfg));
+        }
         Ok(s)
     }
 
@@ -561,6 +581,10 @@ pub struct Session {
     /// every committed edit in commit order — the artifact's replay log
     /// (previews are speculative and never recorded)
     edit_log: Vec<Edit>,
+    /// the certified-deletion plane ([`certified`]): config + (ε,δ)
+    /// ledger + certificate history. `None` (certification off) keeps
+    /// the commit path byte-identical to an uncertified session.
+    certified: Option<certified::CertifiedState>,
 }
 
 impl Session {
@@ -609,6 +633,7 @@ impl Session {
             recipe_n_train: None,
             recipe_n_test: None,
             edit_log: Vec::new(),
+            certified: None,
         })
     }
 
@@ -690,6 +715,54 @@ impl Session {
     /// Every committed edit in commit order (the artifact replay log).
     pub fn edit_log(&self) -> &[Edit] {
         &self.edit_log
+    }
+
+    /// The certified-deletion plane, when this session was built with
+    /// [`SessionBuilder::certify`] (None = certification off).
+    pub fn certified(&self) -> Option<&certified::CertifiedState> {
+        self.certified.as_ref()
+    }
+
+    /// Install a certified plane on a session that does not have one.
+    /// No-op when one is already present — a restored artifact's spent
+    /// ledger always wins over a freshly-supplied config (the service
+    /// restore path relies on this).
+    pub fn ensure_certified(&mut self, cfg: certified::CertifyConfig) -> Result<()> {
+        if self.certified.is_some() {
+            return Ok(());
+        }
+        cfg.validate().map_err(anyhow::Error::new)?;
+        self.certified = Some(certified::CertifiedState::new(cfg));
+        Ok(())
+    }
+
+    pub(crate) fn set_certified_state(&mut self, cs: Option<certified::CertifiedState>) {
+        self.certified = cs;
+    }
+
+    /// The RELEASED model for the current version: `w` plus calibrated
+    /// noise drawn deterministically per `(noise_seed, version)` — the
+    /// only vector a certified deployment may publish. Internal state
+    /// is never noised (replay/WAL/readers stay bitwise), and every
+    /// replica reproduces this identical release. Requires
+    /// certification on and a certified commit at the current version.
+    pub fn release_current(&self) -> Result<Vec<f32>> {
+        let Some(cs) = self.certified.as_ref() else {
+            bail!("release: certification is off for this session");
+        };
+        let Some(rec) = cs.certificate(self.version) else {
+            bail!(
+                "release: no certificate for version {} (commit a certified edit first)",
+                self.version
+            );
+        };
+        Ok(certified::release(
+            &self.w,
+            cs.config.mechanism,
+            rec.scale,
+            cs.config.noise_seed,
+            self.version,
+        ))
     }
 
     /// The tail's exact resident layout: (rows in the compacted prefix,
@@ -886,6 +959,7 @@ impl Session {
             recipe_n_train: self.recipe_n_train,
             recipe_n_test: self.recipe_n_test,
             edit_log: self.edit_log.clone(),
+            certified: self.certified.clone(),
         })
     }
 
@@ -1115,6 +1189,21 @@ impl Session {
         if n_new <= 0.0 {
             bail!("deleting the last sample");
         }
+        // certified plane: the ledger must admit the edit BEFORE any
+        // mutation. An exhausted ledger either rejects typed
+        // (`CertifiedError::BudgetExhausted`, downcast by the service
+        // into `Rejected::BudgetExhausted`) or — under the Retrain
+        // policy — reroutes this commit through a fresh full retrain
+        // below. Deterministic in the ledger, so WAL replay and reader
+        // replicas reach the identical decision at the same version.
+        let admission = match &self.certified {
+            Some(cs) => Some(
+                cs.admit(del_rows.len() as u64)
+                    .map_err(anyhow::Error::new)?,
+            ),
+            None => None,
+        };
+        let retrain_pass = matches!(admission, Some(certified::Admission::Retrain));
         let exes = &self.exes;
         let rt = &self.rt;
         // the group's delta rows: staged once per pass — or served from
@@ -1135,7 +1224,10 @@ impl Session {
         // commit does re-stage them, trading 3·⌈r/cs⌉ one-time uploads
         // for T−n_exact saved downloads every mixed pass.
         let mixed = !del_rows.is_empty() && add_ds.n > 0;
-        let sr_del = if base_dels.is_empty() {
+        // a policy-driven full retrain evaluates no delta gradients, so
+        // it skips the delete-row stagings entirely (sr_add still
+        // stages: the added rows must join the resident tail)
+        let sr_del = if retrain_pass || base_dels.is_empty() {
             None
         } else if mixed {
             let sorted = IndexSet::from_vec(base_dels.clone());
@@ -1148,7 +1240,7 @@ impl Session {
         // row-cached: the cache is keyed by BASE indices) and join the
         // same signed chain
         let added_sorted = IndexSet::from_vec(added_dels.clone());
-        let sr_del_tail = if added_dels.is_empty() {
+        let sr_del_tail = if retrain_pass || added_dels.is_empty() {
             None
         } else if mixed {
             Some(exes.stage_rows_masked(rt, &self.added, added_sorted.as_slice(), -1.0)?)
@@ -1193,116 +1285,152 @@ impl Session {
             *filled += 1;
         };
 
-        for t in 0..hp.t {
-            let eta = hp.lr_at(t) as f64;
-            let mut exact = hp.is_exact_iter(t);
-            let mut bv: Option<Vec<f32>> = None;
-            if !exact {
-                sub(&w, &self.traj.ws[t], &mut dw);
-                if hist.is_empty() {
-                    exact = true;
-                    n_fallback += 1;
-                } else if spec.model == ModelKind::Mlp
-                    && hist.min_curvature().unwrap_or(0.0) < hp.curvature_min as f64
-                {
-                    exact = true;
-                    n_fallback += 1;
-                } else {
-                    bv = hist.bv(&dw);
-                    if bv.is_none() {
+        if retrain_pass {
+            // Descent-to-Delete forced retrain: the ledger is exhausted
+            // and the policy says re-zero the deletion error instead of
+            // rejecting. Materialize the POST-edit dataset and train a
+            // fresh trajectory (deterministic: fixed init + seed, so
+            // WAL replay and reader replicas reproduce it bitwise).
+            // δ₀ = 0 for this release; the charge below resets the
+            // ledger. Masks/tail flip through the normal path below —
+            // the base staging is NOT replaced, so earlier edit-log
+            // indices keep their meaning for `artifact::replay`.
+            let mut removed_post = self.removed.clone();
+            for &i in &base_dels {
+                removed_post.insert(i);
+            }
+            let keep = removed_post.complement(self.base.n);
+            let mut ds = self.base.subset(&keep);
+            let mut added_removed_post = self.added_removed.clone();
+            for &j in &added_dels {
+                added_removed_post.insert(j);
+            }
+            if self.added.n > added_removed_post.len() {
+                let live = added_removed_post.complement(self.added.n);
+                ds.append(&self.added.subset(&live));
+            }
+            ds.append(&add_ds);
+            let tout = train::train(exes, rt, &ds, &TrainOpts::full(&hp, &IndexSet::empty()))?;
+            let traj = tout.traj.expect("trajectory recorded");
+            for wt in &traj.ws {
+                write_w(&mut ws_new, &mut ws_filled, wt);
+            }
+            gs_new = traj.gs;
+            w = tout.w;
+            n_exact = hp.t;
+            last_stats = tout.final_stats;
+        } else {
+            for t in 0..hp.t {
+                let eta = hp.lr_at(t) as f64;
+                let mut exact = hp.is_exact_iter(t);
+                let mut bv: Option<Vec<f32>> = None;
+                if !exact {
+                    sub(&w, &self.traj.ws[t], &mut dw);
+                    if hist.is_empty() {
                         exact = true;
                         n_fallback += 1;
+                    } else if spec.model == ModelKind::Mlp
+                        && hist.min_curvature().unwrap_or(0.0) < hp.curvature_min as f64
+                    {
+                        exact = true;
+                        n_fallback += 1;
+                    } else {
+                        bv = hist.bv(&dw);
+                        if bv.is_none() {
+                            exact = true;
+                            n_fallback += 1;
+                        }
                     }
                 }
-            }
 
-            // one parameter upload shared by every call this iteration
-            let ctx = exes.pass_ctx(rt, &w)?;
-            // signed gradient sum of the changed samples at the current
-            // iterate (always exact; |group| ≪ n resident rows); mixed
-            // groups run ONE fused chain over the ±1-masked stagings,
-            // and pure-delete groups fuse their base + added-tail delta
-            // stagings the same way (host negation afterwards)
-            let g_chg = if mixed {
-                let mut chain: Vec<&StagedRows> = Vec::new();
-                if let Some(sr) = &sr_del {
-                    chain.push(sr);
-                }
-                if let Some(sr) = &sr_del_tail {
-                    chain.push(sr);
-                }
-                chain.push(sr_add.as_ref().unwrap());
-                let (g, _) = exes.grad_rows_multi(rt, &chain, &ctx)?;
-                g
-            } else if add_ds.n > 0 {
-                let (g, _) = exes.grad_rows_staged(rt, sr_add.as_ref().unwrap(), &ctx)?;
-                g
-            } else {
-                let mut chain: Vec<&StagedRows> = Vec::new();
-                if let Some(sr) = &sr_del {
-                    chain.push(sr);
-                }
-                if let Some(sr) = &sr_del_tail {
-                    chain.push(sr);
-                }
-                let (mut g, _) = exes.grad_rows_multi(rt, &chain, &ctx)?;
-                scale(&mut g, -1.0);
-                g
-            };
-            // average gradient over the NEW dataset at the new iterate:
-            // g_new_avg = (n_cur * g_cur_avg + g_chg) / n_new        (S62)
-            let mut g_new_avg;
-            if exact {
-                n_exact += 1;
-                // base chunks + resident tail (compacted chunks, then
-                // leftover segments) fused into one on-device reduction
-                // (a single result download) — or, when a shard plane
-                // is attached, the S-way parallel broadcast reduced on
-                // the host (masks over there mirror this session's)
-                let (g_sum_cur, stats) = match plane {
-                    Some(pl) => pl.full_grad(&w)?,
-                    None => exes.grad_staged_with_tail(
-                        rt,
-                        &self.staged,
-                        self.tail_compact.as_ref(),
-                        sr_tail,
-                        &ctx,
-                    )?,
+                // one parameter upload shared by every call this iteration
+                let ctx = exes.pass_ctx(rt, &w)?;
+                // signed gradient sum of the changed samples at the current
+                // iterate (always exact; |group| ≪ n resident rows); mixed
+                // groups run ONE fused chain over the ±1-masked stagings,
+                // and pure-delete groups fuse their base + added-tail delta
+                // stagings the same way (host negation afterwards)
+                let g_chg = if mixed {
+                    let mut chain: Vec<&StagedRows> = Vec::new();
+                    if let Some(sr) = &sr_del {
+                        chain.push(sr);
+                    }
+                    if let Some(sr) = &sr_del_tail {
+                        chain.push(sr);
+                    }
+                    chain.push(sr_add.as_ref().unwrap());
+                    let (g, _) = exes.grad_rows_multi(rt, &chain, &ctx)?;
+                    g
+                } else if add_ds.n > 0 {
+                    let (g, _) = exes.grad_rows_staged(rt, sr_add.as_ref().unwrap(), &ctx)?;
+                    g
+                } else {
+                    let mut chain: Vec<&StagedRows> = Vec::new();
+                    if let Some(sr) = &sr_del {
+                        chain.push(sr);
+                    }
+                    if let Some(sr) = &sr_del_tail {
+                        chain.push(sr);
+                    }
+                    let (mut g, _) = exes.grad_rows_multi(rt, &chain, &ctx)?;
+                    scale(&mut g, -1.0);
+                    g
                 };
-                last_stats = stats;
-                // harvest (Δw, Δg) against the cached trajectory
-                let dw_pair: Vec<f32> =
-                    w.iter().zip(&self.traj.ws[t]).map(|(a, b)| a - b).collect();
-                let mut dg = g_sum_cur.clone();
-                scale(&mut dg, (1.0 / n_cur) as f32);
-                axpy(-1.0, &self.traj.gs[t], &mut dg);
-                let curv_ok = {
-                    let sw = dot(&dw_pair, &dw_pair);
-                    sw > 1e-20 && dot(&dg, &dw_pair) / sw > 0.0
-                };
-                if curv_ok {
-                    hist.push(dw_pair, dg);
+                // average gradient over the NEW dataset at the new iterate:
+                // g_new_avg = (n_cur * g_cur_avg + g_chg) / n_new        (S62)
+                let mut g_new_avg;
+                if exact {
+                    n_exact += 1;
+                    // base chunks + resident tail (compacted chunks, then
+                    // leftover segments) fused into one on-device reduction
+                    // (a single result download) — or, when a shard plane
+                    // is attached, the S-way parallel broadcast reduced on
+                    // the host (masks over there mirror this session's)
+                    let (g_sum_cur, stats) = match plane {
+                        Some(pl) => pl.full_grad(&w)?,
+                        None => exes.grad_staged_with_tail(
+                            rt,
+                            &self.staged,
+                            self.tail_compact.as_ref(),
+                            sr_tail,
+                            &ctx,
+                        )?,
+                    };
+                    last_stats = stats;
+                    // harvest (Δw, Δg) against the cached trajectory
+                    let dw_pair: Vec<f32> =
+                        w.iter().zip(&self.traj.ws[t]).map(|(a, b)| a - b).collect();
+                    let mut dg = g_sum_cur.clone();
+                    scale(&mut dg, (1.0 / n_cur) as f32);
+                    axpy(-1.0, &self.traj.gs[t], &mut dg);
+                    let curv_ok = {
+                        let sw = dot(&dw_pair, &dw_pair);
+                        sw > 1e-20 && dot(&dg, &dw_pair) / sw > 0.0
+                    };
+                    if curv_ok {
+                        hist.push(dw_pair, dg);
+                    }
+                    g_new_avg = g_sum_cur;
+                    axpy(1.0, &g_chg, &mut g_new_avg);
+                    scale(&mut g_new_avg, (1.0 / n_new) as f32);
+                } else {
+                    n_approx += 1;
+                    let mut g_cur_avg = bv.unwrap();
+                    axpy(1.0, &self.traj.gs[t], &mut g_cur_avg);
+                    g_new_avg = g_cur_avg;
+                    scale(&mut g_new_avg, (n_cur / n_new) as f32);
+                    axpy(1.0 / n_new as f32, &g_chg, &mut g_new_avg);
                 }
-                g_new_avg = g_sum_cur;
-                axpy(1.0, &g_chg, &mut g_new_avg);
-                scale(&mut g_new_avg, (1.0 / n_new) as f32);
-            } else {
-                n_approx += 1;
-                let mut g_cur_avg = bv.unwrap();
-                axpy(1.0, &self.traj.gs[t], &mut g_cur_avg);
-                g_new_avg = g_cur_avg;
-                scale(&mut g_new_avg, (n_cur / n_new) as f32);
-                axpy(1.0 / n_new as f32, &g_chg, &mut g_new_avg);
+                // rewrite the cache for the next edit (Alg. 3 l.36/43); w
+                // copies into the recycled generation, the gradient moves
+                // in, and the step reads it from there — no scratch copy
+                write_w(&mut ws_new, &mut ws_filled, &w);
+                gs_new.push(g_new_avg);
+                // take the step
+                axpy(-(eta as f32), &gs_new[t], &mut w);
             }
-            // rewrite the cache for the next edit (Alg. 3 l.36/43); w
-            // copies into the recycled generation, the gradient moves
-            // in, and the step reads it from there — no scratch copy
             write_w(&mut ws_new, &mut ws_filled, &w);
-            gs_new.push(g_new_avg);
-            // take the step
-            axpy(-(eta as f32), &gs_new[t], &mut w);
         }
-        write_w(&mut ws_new, &mut ws_filled, &w);
         ws_new.truncate(ws_filled);
 
         // tail compaction, staged BEFORE any state mutation: once the
@@ -1400,6 +1528,30 @@ impl Session {
         // every fallible step succeeded — a failed commit leaves the log
         // exactly as replayable as the session)
         self.edit_log.push(edit);
+        // certified plane: measure δ₀ against the pass's resident
+        // gradient norm — read from `last_stats`, which the commit
+        // already downloaded in its p+8 accumulator tail, so the
+        // certificate costs ZERO extra device transfers — and charge
+        // the ledger. A policy retrain re-zeroed the deletion error:
+        // it resets the ledger and releases exactly (δ₀ = 0).
+        if let Some(cs) = self.certified.as_mut() {
+            if retrain_pass {
+                cs.note_retrain();
+            }
+            let delta0 = if retrain_pass {
+                0.0
+            } else {
+                certified::deletion_error_bound(
+                    (del_rows.len() + add_ds.n) as f64,
+                    n_new,
+                    last_stats.gnorm2,
+                    last_stats.cnt,
+                    hp.lr_at(0),
+                    hp.t,
+                )
+            };
+            cs.charge(self.version, delta0, spec.p, del_rows.len() as u64);
+        }
 
         let out = RetrainOutput {
             w,

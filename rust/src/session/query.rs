@@ -77,6 +77,11 @@ pub enum Query {
     Conformal { alpha: f64, folds: usize, x: Option<Vec<f32>> },
     /// robust prune-and-refit of the `frac` highest-loss rows (§5.3)
     RobustSweep { frac: f64 },
+    /// the certified plane's (ε,δ) ledger: spent/remaining budget,
+    /// deletions-so-far, capacity (certification must be on)
+    PrivacyBudget,
+    /// one certified commit's release record: δ₀, noise scale, ε̂
+    Certificate { version: u64 },
 }
 
 /// The kind tag of a [`Query`] — the coordinator's per-kind metrics key.
@@ -89,10 +94,12 @@ pub enum QueryKind {
     Jackknife,
     Conformal,
     RobustSweep,
+    PrivacyBudget,
+    Certificate,
 }
 
 impl QueryKind {
-    pub const COUNT: usize = 7;
+    pub const COUNT: usize = 9;
     pub const ALL: [QueryKind; QueryKind::COUNT] = [
         QueryKind::Predict,
         QueryKind::Loss,
@@ -101,6 +108,8 @@ impl QueryKind {
         QueryKind::Jackknife,
         QueryKind::Conformal,
         QueryKind::RobustSweep,
+        QueryKind::PrivacyBudget,
+        QueryKind::Certificate,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -112,6 +121,8 @@ impl QueryKind {
             QueryKind::Jackknife => "jackknife",
             QueryKind::Conformal => "conformal",
             QueryKind::RobustSweep => "robust",
+            QueryKind::PrivacyBudget => "budget",
+            QueryKind::Certificate => "certificate",
         }
     }
 
@@ -131,6 +142,8 @@ impl Query {
             Query::Jackknife { .. } => QueryKind::Jackknife,
             Query::Conformal { .. } => QueryKind::Conformal,
             Query::RobustSweep { .. } => QueryKind::RobustSweep,
+            Query::PrivacyBudget => QueryKind::PrivacyBudget,
+            Query::Certificate { .. } => QueryKind::Certificate,
         }
     }
 }
@@ -168,6 +181,28 @@ pub enum QueryResult {
         set: Option<Vec<u32>>,
     },
     Robust(RobustFit),
+    PrivacyBudget {
+        eps_spent: f64,
+        eps_budget: f64,
+        delta_spent: f64,
+        delta_budget: f64,
+        deletions: u64,
+        capacity: u64,
+        releases: u64,
+        retrains: u64,
+    },
+    Certificate {
+        /// the certified commit's version
+        version: u64,
+        /// measured deletion-error bound ‖w^I − w^U‖ ≤ δ₀
+        delta0: f64,
+        /// per-coordinate release-noise scale (0 = exact release)
+        scale: f64,
+        /// per-release privacy loss charged to the ledger
+        eps_hat: f64,
+        /// mechanism name ("laplace" / "gaussian")
+        mechanism: String,
+    },
 }
 
 /// A served read: the result plus the model `version` it was answered
@@ -308,6 +343,44 @@ pub fn query(session: &Session, q: &Query) -> Result<QueryReply> {
             }
             QueryResult::Robust(robust::prune_core(session, *frac)?)
         }
+        // the certified kinds are pure host reads of the resident
+        // ledger — zero device traffic; writer and reader replicas
+        // carry identical ledgers (deterministic recharging), so any
+        // replica answers identically
+        Query::PrivacyBudget => {
+            let Some(cs) = session.certified() else {
+                bail!("privacy budget query: certification is off for this session");
+            };
+            let s = cs.snapshot();
+            QueryResult::PrivacyBudget {
+                eps_spent: s.eps_spent,
+                eps_budget: s.eps_budget,
+                delta_spent: s.delta_spent,
+                delta_budget: s.delta_budget,
+                deletions: s.deletions,
+                capacity: s.capacity,
+                releases: s.releases,
+                retrains: s.retrains,
+            }
+        }
+        Query::Certificate { version } => {
+            let Some(cs) = session.certified() else {
+                bail!("certificate query: certification is off for this session");
+            };
+            let Some(rec) = cs.certificate(*version) else {
+                bail!(
+                    "no certificate for version {version} ({} certified commits)",
+                    cs.certs.len()
+                );
+            };
+            QueryResult::Certificate {
+                version: rec.version,
+                delta0: rec.delta0,
+                scale: rec.scale,
+                eps_hat: rec.eps_hat,
+                mechanism: cs.config.mechanism.name().to_string(),
+            }
+        }
     };
     Ok(QueryReply {
         version,
@@ -359,5 +432,9 @@ mod tests {
             "conformal"
         );
         assert_eq!(Query::RobustSweep { frac: 0.05 }.kind().name(), "robust");
+        assert_eq!(Query::PrivacyBudget.kind().name(), "budget");
+        assert_eq!(Query::Certificate { version: 1 }.kind().name(), "certificate");
+        assert_eq!(QueryKind::PrivacyBudget.index(), 7);
+        assert_eq!(QueryKind::Certificate.index(), 8);
     }
 }

@@ -74,6 +74,8 @@ fn reply_payload_bytes(reply: &QueryReply) -> usize {
             residuals.len() * 8 + set.as_ref().map_or(0, |s| s.len() * 4)
         }
         QueryResult::Robust(fit) => fit.pruned.len() * 8 + fit.w.len() * 4,
+        QueryResult::PrivacyBudget { .. } => 0,
+        QueryResult::Certificate { mechanism, .. } => mechanism.len(),
     }
 }
 
@@ -164,6 +166,8 @@ pub fn canonical_key(version: u64, q: &Query) -> Vec<u8> {
             }
         }
         Query::RobustSweep { frac } => put_f64(&mut b, *frac),
+        Query::PrivacyBudget => {}
+        Query::Certificate { version: v } => put_u64(&mut b, *v),
     }
     b
 }

@@ -805,6 +805,25 @@ impl ShardedSession {
         self.inner.stats()
     }
 
+    /// Certified-deletion ledger of the inner session, when enabled.
+    pub fn certified(&self) -> Option<&crate::session::certified::CertifiedState> {
+        self.inner.certified()
+    }
+
+    /// Enable certification on the inner session (no-op if a restored
+    /// artifact already carried a ledger — the restored state wins).
+    pub fn ensure_certified(
+        &mut self,
+        cfg: crate::session::certified::CertifyConfig,
+    ) -> Result<()> {
+        self.inner.ensure_certified(cfg)
+    }
+
+    /// Noised released iterate for the current version (certified only).
+    pub fn release_current(&self) -> Result<Vec<f32>> {
+        self.inner.release_current()
+    }
+
     pub fn snapshot(&self) -> Result<Snapshot> {
         self.inner.snapshot()
     }

@@ -121,7 +121,8 @@ fn privacy_release_hides_the_deletion_error() {
     let basel = session.baseline(&edit).unwrap();
     let dg = session.preview(&edit).unwrap();
     let delta0 = dist2(&dg.out.w, &basel.w);
-    let mech = privacy::LaplaceMechanism::from_deletion_error(session.spec().p, delta0, 1.0);
+    let mech =
+        privacy::LaplaceMechanism::from_deletion_error(session.spec().p, delta0, 1.0).unwrap();
     let bound = privacy::epsilon_bound(&dg.out.w, &basel.w, mech.scale);
     // the √p factor makes the ℓ1-based worst case ≤ ε=1
     assert!(bound <= 1.0 + 1e-6, "ε bound {bound} exceeds the budget");

@@ -1,0 +1,332 @@
+//! Certified-deletion subsystem end to end: deterministic releases
+//! across restore/replay/WAL recovery, the exact exhaustion boundary of
+//! the (ε,δ) ledger, accountant survival through checkpoints, query
+//! validation on the read plane, and the certification-off byte/traffic
+//! identity. Requires `make artifacts`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use deltagrad::config::HyperParams;
+use deltagrad::coordinator::{BatchPolicy, Rejected, ServiceConfig, ServiceHandle, Supervision};
+use deltagrad::session::{
+    artifact, CertifyConfig, Edit, ExhaustionPolicy, Query, QueryResult, Session, SessionBuilder,
+};
+
+fn small_hp() -> HyperParams {
+    let mut hp = HyperParams::for_dataset("small");
+    hp.t = 40;
+    hp.j0 = 6;
+    hp.t0 = 5;
+    hp
+}
+
+fn certified_session(cfg: CertifyConfig) -> Session {
+    SessionBuilder::new("small")
+        .seed(77)
+        .n_train(Some(512))
+        .n_test(Some(256))
+        .hyper_params(small_hp())
+        .certify(cfg)
+        .build()
+        .unwrap()
+}
+
+fn cfg() -> CertifyConfig {
+    CertifyConfig::new(1.0, 1e-4).capacity(8).noise_seed(0xC0FFEE)
+}
+
+fn svc_cfg(certify: Option<CertifyConfig>) -> ServiceConfig {
+    ServiceConfig {
+        model: "small".into(),
+        seed: 77,
+        n_train: Some(512),
+        n_test: Some(256),
+        hp: small_hp(),
+        policy: BatchPolicy {
+            max_group: 1,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        },
+        readers: 0,
+        query_cache: 0,
+        query_cache_bytes: 0,
+        shards: 1,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
+        checkpoint_keep: 4,
+        wal: false,
+        restore_latest: false,
+        store_fresh: false,
+        supervision: Supervision::default(),
+        faults: None,
+        certify,
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("deltagrad-test-certified-{tag}-{}.dgar", std::process::id()))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+struct Store(PathBuf);
+
+impl Store {
+    fn new(tag: &str) -> Store {
+        let p = std::env::temp_dir()
+            .join(format!("deltagrad-test-certified-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        Store(p)
+    }
+    fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for Store {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn budget_bits(r: &QueryResult) -> (u64, u64, u64, u64, u64, u64, u64, u64) {
+    match r {
+        QueryResult::PrivacyBudget {
+            eps_spent,
+            eps_budget,
+            delta_spent,
+            delta_budget,
+            deletions,
+            capacity,
+            releases,
+            retrains,
+        } => (
+            eps_spent.to_bits(),
+            eps_budget.to_bits(),
+            delta_spent.to_bits(),
+            delta_budget.to_bits(),
+            *deletions,
+            *capacity,
+            *releases,
+            *retrains,
+        ),
+        other => panic!("wrong reply kind: {other:?}"),
+    }
+}
+
+#[test]
+fn release_is_deterministic_across_restore_and_replay() {
+    // the released model is a pure function of (noise_seed, version,
+    // internal state): a warm restore and a from-scratch edit-log replay
+    // must publish the IDENTICAL noised vector, bitwise
+    let mut live = certified_session(cfg());
+    for i in 0..3 {
+        live.commit(Edit::delete_row(i)).unwrap();
+    }
+    let released = live.release_current().unwrap();
+    assert_ne!(bits(&released), bits(live.w()), "the release must actually be noised");
+
+    let path = tmp_path("release");
+    let _ = std::fs::remove_file(&path);
+    live.save_artifact(&path).unwrap();
+
+    let restored = SessionBuilder::restore_from(&path).unwrap();
+    assert_eq!(restored.certified(), live.certified(), "restored ledger must match bitwise");
+    assert_eq!(
+        bits(&restored.release_current().unwrap()),
+        bits(&released),
+        "restored replica published a different release"
+    );
+
+    let replayed = artifact::replay(&path).unwrap();
+    assert_eq!(replayed.certified(), live.certified(), "replayed ledger must match bitwise");
+    assert_eq!(
+        bits(&replayed.release_current().unwrap()),
+        bits(&released),
+        "edit-log replay published a different release"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn exhaustion_boundary_rejects_typed_and_the_worker_survives() {
+    // capacity 3: commits 1..=3 admit, commit 4 rejects with the typed
+    // Rejected::BudgetExhausted — and the worker keeps serving
+    let svc = ServiceHandle::spawn(svc_cfg(Some(cfg().capacity(3)))).unwrap();
+    for i in 0..3 {
+        assert_eq!(svc.update(Edit::delete_row(i)).unwrap().version, (i + 1) as u64);
+    }
+    match svc.update(Edit::delete_row(3)) {
+        Err(Rejected::BudgetExhausted { deletions, capacity, eps_spent, epsilon }) => {
+            assert_eq!((deletions, capacity), (3, 3));
+            assert!(eps_spent <= epsilon);
+        }
+        other => panic!("expected BudgetExhausted at capacity, got {other:?}"),
+    }
+    // the rejection left no trace: same version, the ledger still
+    // answers, and the read plane still serves
+    let rep = svc.query(Query::PrivacyBudget).unwrap();
+    assert_eq!(rep.version, 3);
+    let (_, _, _, _, deletions, capacity, releases, _) = budget_bits(&rep.result);
+    assert_eq!((deletions, capacity, releases), (3, 3, 3));
+    let m = svc.metrics().unwrap();
+    assert_eq!(m.privacy_deletions, 3);
+    assert_eq!(m.budget_rejects, 1);
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn accountant_survives_checkpoint_and_wal_recovery_bitwise() {
+    // checkpoint v2 + WAL suffix to v3: restore_latest must recharge the
+    // ledger through the replayed commit and land on the live session's
+    // exact accountant bits — and a service spawned with restore_latest
+    // must answer Query::PrivacyBudget with those same bits
+    let store = Store::new("wal");
+    let mut live = certified_session(cfg());
+    let wal_p = artifact::wal_path(store.path(), "small");
+    std::fs::create_dir_all(store.path()).unwrap();
+    let mut wal = artifact::WalWriter::create(&wal_p).unwrap();
+    for i in 0..3 {
+        let c = live.commit(Edit::delete_row(i)).unwrap();
+        wal.append(c.version, &Edit::delete_row(i)).unwrap();
+        if c.version == 2 {
+            artifact::save_to_store(&live, store.path()).unwrap();
+        }
+    }
+    drop(wal);
+
+    let recovered = artifact::restore_latest(store.path(), "small").unwrap();
+    assert_eq!(recovered.version(), 3);
+    assert_eq!(
+        recovered.certified(),
+        live.certified(),
+        "WAL recovery must recharge the ledger to identical bits"
+    );
+    assert_eq!(bits(&recovered.release_current().unwrap()), bits(&live.release_current().unwrap()));
+
+    let svc = ServiceHandle::spawn(ServiceConfig {
+        restore_latest: true,
+        wal: true,
+        checkpoint_dir: Some(store.path().to_path_buf()),
+        ..svc_cfg(Some(cfg()))
+    })
+    .unwrap();
+    let rep = svc.query(Query::PrivacyBudget).unwrap();
+    assert_eq!(rep.version, 3);
+    let live_snap = live.certified().unwrap().snapshot();
+    let (eps_spent, eps_budget, delta_spent, _, deletions, capacity, releases, retrains) =
+        budget_bits(&rep.result);
+    assert_eq!(eps_spent, live_snap.eps_spent.to_bits(), "eps ledger must match bitwise");
+    assert_eq!(eps_budget, live_snap.eps_budget.to_bits());
+    assert_eq!(delta_spent, live_snap.delta_spent.to_bits());
+    assert_eq!(
+        (deletions, capacity, releases, retrains),
+        (live_snap.deletions, live_snap.capacity, live_snap.releases, live_snap.retrains)
+    );
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn budget_and_certificate_queries_validate_without_killing_the_worker() {
+    // certification off: both new kinds reject typed, the worker lives
+    let svc = ServiceHandle::spawn(svc_cfg(None)).unwrap();
+    match svc.query(Query::PrivacyBudget) {
+        Err(Rejected::Failed(e)) => assert!(e.contains("certification is off"), "{e}"),
+        other => panic!("expected a typed rejection, got {other:?}"),
+    }
+    match svc.query(Query::Certificate { version: 1 }) {
+        Err(Rejected::Failed(e)) => assert!(e.contains("certification is off"), "{e}"),
+        other => panic!("expected a typed rejection, got {other:?}"),
+    }
+    assert_eq!(svc.update(Edit::delete_row(0)).unwrap().version, 1);
+    svc.shutdown().unwrap();
+
+    // certification on: an unknown version rejects typed, a known one
+    // serves the certificate
+    let svc = ServiceHandle::spawn(svc_cfg(Some(cfg()))).unwrap();
+    svc.update(Edit::delete_row(0)).unwrap();
+    match svc.query(Query::Certificate { version: 99 }) {
+        Err(Rejected::Failed(e)) => assert!(e.contains("no certificate"), "{e}"),
+        other => panic!("expected a typed rejection, got {other:?}"),
+    }
+    let rep = svc.query(Query::Certificate { version: 1 }).unwrap();
+    match &rep.result {
+        QueryResult::Certificate { version, delta0, scale, eps_hat, mechanism } => {
+            assert_eq!(*version, 1);
+            assert!(*delta0 > 0.0 && *scale > 0.0 && *eps_hat > 0.0);
+            assert_eq!(mechanism, "gaussian");
+        }
+        other => panic!("wrong reply kind: {other:?}"),
+    }
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn certification_off_stays_bitwise_identical_with_zero_extra_traffic() {
+    // the certified plane must be invisible when on (internal state) and
+    // absent when off: same commits → same internal w bits AND the same
+    // device-transfer counters, certified or not — the certificate is
+    // measured from the accumulator tail the commit already downloads
+    let mut plain = SessionBuilder::new("small")
+        .seed(77)
+        .n_train(Some(512))
+        .n_test(Some(256))
+        .hyper_params(small_hp())
+        .build()
+        .unwrap();
+    let mut cert = certified_session(cfg());
+    for i in 0..2 {
+        plain.commit(Edit::delete_row(i)).unwrap();
+        cert.commit(Edit::delete_row(i)).unwrap();
+    }
+    assert_eq!(
+        bits(plain.w()),
+        bits(cert.w()),
+        "certification must never touch internal state"
+    );
+    let (pt, ct) = (plain.stats().commit_transfers, cert.stats().commit_transfers);
+    assert_eq!(pt.uploads, ct.uploads, "certified commits must upload nothing extra");
+    assert_eq!(pt.upload_floats, ct.upload_floats);
+    assert_eq!(pt.downloads, ct.downloads, "certified commits must download nothing extra");
+    assert_eq!(pt.download_floats, ct.download_floats);
+    assert_eq!(pt.execs, ct.execs);
+
+    // the uncertified artifact carries no privacy section: its bytes
+    // round-trip through the pre-subsystem decoder shape
+    let path = tmp_path("off");
+    let _ = std::fs::remove_file(&path);
+    plain.save_artifact(&path).unwrap();
+    let restored = SessionBuilder::restore_from(&path).unwrap();
+    assert!(restored.certified().is_none(), "no privacy section may appear uninvited");
+    assert_eq!(bits(restored.w()), bits(plain.w()));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn retrain_policy_resets_the_ledger_and_releases_exactly() {
+    // capacity 2 + Retrain: the third deletion routes through a full
+    // retrain, resets the ledger, and releases with zero noise
+    let mut s = certified_session(cfg().capacity(2).policy(ExhaustionPolicy::Retrain));
+    for i in 0..2 {
+        s.commit(Edit::delete_row(i)).unwrap();
+    }
+    let before = s.certified().unwrap().snapshot();
+    assert_eq!((before.deletions, before.retrains), (2, 0));
+
+    s.commit(Edit::delete_row(2)).unwrap();
+    let after = s.certified().unwrap().snapshot();
+    assert_eq!(after.retrains, 1, "exhaustion under Retrain must trigger the reset");
+    assert_eq!(after.deletions, 1, "the ledger restarts counting after the retrain");
+    assert!(after.eps_spent < before.eps_spent, "the reset must drop spent eps");
+
+    let rec = s.certified().unwrap().certificate(s.version()).unwrap();
+    assert_eq!((rec.delta0, rec.scale, rec.eps_hat), (0.0, 0.0, 0.0));
+    assert_eq!(
+        bits(&s.release_current().unwrap()),
+        bits(s.w()),
+        "a retrained model has zero deletion error and releases exactly"
+    );
+}

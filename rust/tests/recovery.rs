@@ -70,6 +70,7 @@ fn base_cfg() -> ServiceConfig {
         store_fresh: false,
         supervision: Supervision::default(),
         faults: None,
+        certify: None,
     }
 }
 

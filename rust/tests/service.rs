@@ -33,6 +33,7 @@ fn small_cfg(policy: BatchPolicy) -> ServiceConfig {
         store_fresh: false,
         supervision: deltagrad::coordinator::Supervision::default(),
         faults: None,
+        certify: None,
     }
 }
 

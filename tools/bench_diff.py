@@ -42,11 +42,14 @@ import sys
 # train)" baseline, and "restore"/"checkpoint" do not collide with the
 # "(AOT artifact)" L-BFGS series; "wal-" requires the hyphen so it can
 # never match a word like "walk"; "shards-" requires its hyphen so a
-# prose word like "shards" alone never gates)
+# prose word like "shards" alone never gates; "certified-" covers the
+# certified-deletion series — commit-with-ledger overhead and the
+# host-side noised release — and its hyphen keeps a prose word like
+# "certified" alone from gating)
 STAGED_MARKERS = (
     "staged", "resident", "session", "index-list", "compacted",
     "query-throughput", "readers-", "cache-hit", "restore", "checkpoint",
-    "supervised", "wal-", "shards-",
+    "supervised", "wal-", "shards-", "certified-",
 )
 
 DEFAULT_MAX_REGRESS = 0.10
